@@ -1,0 +1,55 @@
+//! Continuous length prediction demo (paper §4): generate several
+//! requests with different tags, re-predict remaining length every 20
+//! tokens through the AOT MLP predictor, and show the estimate converging
+//! toward the realized remaining length (the Fig. 7 effect, live).
+//!
+//!     make artifacts && cargo run --release --example prediction_demo
+
+use star::prng::Pcg64;
+use star::runtime::{artifacts_dir, StarRuntime};
+use star::serve::sample_token;
+
+fn main() -> Result<(), star::Error> {
+    let dir = artifacts_dir(None)?;
+    let rt = StarRuntime::load(&dir)?;
+    let mut rng = Pcg64::new(123, 0);
+
+    for (tag, name) in [(b'b', "short tag 'b'"), (b'h', "medium tag 'h'"), (b'o', "long tag 'o'")] {
+        let prompt = vec![1u8, b'Q', tag, b'd', b'e', b'm', b'o', b'?'];
+        let pre = rt.prefill(&prompt)?;
+        let mut kv = rt.new_kv_buffer(1);
+        rt.copy_kv_slot(&pre.kv, 1, 0, &mut kv, 1, 0)?;
+        let mut tok = sample_token(&pre.logits, 0.9, &mut rng) as i32;
+        let mut pos = prompt.len() as i32;
+
+        // roll the full generation, recording hidden states every 20 steps
+        let mut snapshots = vec![(0u32, pre.hidden.clone())];
+        let mut n = 0u32;
+        while tok != rt.meta.eos as i32 && n < rt.meta.max_output as u32 {
+            let out = rt.decode_step(1, &[tok], &[pos], &kv)?;
+            kv = out.kv;
+            n += 1;
+            pos += 1;
+            if n % 20 == 0 {
+                snapshots.push((n, out.hidden.clone()));
+            }
+            tok = sample_token(&out.logits, 0.9, &mut rng) as i32;
+        }
+
+        println!("\n{name}: realized output {n} tokens");
+        println!("  generated | predicted remaining | true remaining | abs err");
+        for (at, hidden) in snapshots {
+            let p = rt.predict_remaining(&hidden)?[0] as f64;
+            let true_rem = (n - at) as f64;
+            println!(
+                "  {at:>9} | {p:>19.1} | {true_rem:>14.0} | {:>7.1}",
+                (p - true_rem).abs()
+            );
+        }
+    }
+    println!(
+        "\nthe estimate tightens as tokens accumulate — the continuous-prediction \
+         effect the scheduler exploits (paper Fig. 7)"
+    );
+    Ok(())
+}

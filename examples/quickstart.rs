@@ -1,0 +1,71 @@
+//! Quickstart: load the AOT artifacts, run one request end-to-end by hand
+//! (prefill -> decode loop -> length prediction), and print what the
+//! serving stack does automatically at scale.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use star::prng::Pcg64;
+use star::runtime::{artifacts_dir, StarRuntime};
+use star::serve::sample_token;
+
+fn main() -> Result<(), star::Error> {
+    // 1. load artifacts (HLO text -> PJRT executables + weights)
+    let dir = artifacts_dir(None)?;
+    let rt = StarRuntime::load(&dir)?;
+    println!(
+        "loaded star-pico on {}: d={} layers={} ctx={}",
+        rt.platform(),
+        rt.meta.d_model,
+        rt.meta.n_layers,
+        rt.meta.max_seq
+    );
+
+    // 2. prefill a prompt in the reasoning-trace language
+    //    (tag 'd' = short-ish expected output)
+    let prompt = b"\x01Qdhello world?";
+    let pre = rt.prefill(prompt)?;
+    println!("prefill done: prompt {} tokens", prompt.len());
+
+    // 3. initial remaining-length prediction from the prefill hidden state
+    //    (paper Eq. 2: 4-layer MLP on the last token's last hidden state)
+    let pred0 = rt.predict_remaining(&pre.hidden)?[0];
+    println!("predicted remaining at t=0: {pred0:.0} tokens");
+
+    // 4. autoregressive decode with temperature sampling
+    let mut rng = Pcg64::new(42, 0);
+    let mut kv = rt.new_kv_buffer(1);
+    rt.copy_kv_slot(&pre.kv, 1, 0, &mut kv, 1, 0)?;
+    let mut tok = sample_token(&pre.logits, 0.9, &mut rng) as i32;
+    let mut pos = prompt.len() as i32;
+    let mut text = Vec::new();
+    let mut repredictions = Vec::new();
+    for step in 0..rt.meta.max_output {
+        if tok == rt.meta.eos as i32 {
+            break;
+        }
+        text.push(tok as u8);
+        let out = rt.decode_step(1, &[tok], &[pos], &kv)?;
+        kv = out.kv;
+        // continuous re-prediction every 20 iterations (paper §5.3)
+        if step % 20 == 19 {
+            let p = rt.predict_remaining(&out.hidden)?[0];
+            repredictions.push((step + 1, p));
+        }
+        tok = sample_token(&out.logits, 0.9, &mut rng) as i32;
+        pos += 1;
+    }
+    println!(
+        "generated {} tokens:\n---\n{}\n---",
+        text.len(),
+        String::from_utf8_lossy(&text)
+    );
+    println!("continuous predictions along the way (generated -> remaining est):");
+    for (at, p) in repredictions {
+        println!("  after {at:>4} tokens: {p:>7.1}");
+    }
+    println!(
+        "\nnext: cargo run --release -- serve        (live PD-disaggregated cluster)\n\
+         \u{20}      cargo run --release -- simulate     (event-driven cluster sim)"
+    );
+    Ok(())
+}

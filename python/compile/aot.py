@@ -1,0 +1,200 @@
+"""AOT pipeline: train (cached) + lower every entrypoint to HLO text.
+
+This is the single build-time python entrypoint (`make artifacts`). It:
+
+  1. pre-trains star-pico on the reasoning-trace corpus (cached:
+     artifacts/lm_params.npz),
+  2. builds the predictor dataset, trains the LLM-native MLP + baselines,
+     and writes the Table-1/Fig-7 evaluation (cached:
+     artifacts/predictor_{params.npz,eval.json,eval.tsv}),
+  3. lowers prefill / decode_step (per batch bucket) / predictor (per
+     bucket) to **HLO text** in artifacts/*.hlo.txt,
+  4. dumps all parameters as raw f32 .bin files + manifest for the rust
+     runtime, and model_meta.txt with every dimension rust needs.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids cleanly.
+Python never runs again after this — the rust binary is self-contained.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import MODEL, PREDICTOR, TRAIN
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# entrypoint lowering
+
+def lower_prefill(cfg=MODEL):
+    def fn(*args):
+        params = M.params_from_list(list(args[:-2]))
+        tokens, plen = args[-2], args[-1]
+        return M.prefill(params, tokens, plen)
+
+    pspecs = [spec(p.shape) for p in M.params_to_list(M.init_params())]
+    args = (*pspecs, spec((1, cfg.max_prompt), jnp.int32),
+            spec((1,), jnp.int32))
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_decode(bucket: int, cfg=MODEL):
+    def fn(*args):
+        params = M.params_from_list(list(args[:-3]))
+        tokens, pos, kv = args[-3], args[-2], args[-1]
+        return M.decode_step(params, tokens, pos, kv, use_kernels=True,
+                             interpret=True)
+
+    pspecs = [spec(p.shape) for p in M.params_to_list(M.init_params())]
+    kv_shape = (cfg.n_layers, 2, bucket, cfg.n_heads, cfg.max_seq,
+                cfg.head_dim)
+    args = (*pspecs, spec((bucket,), jnp.int32), spec((bucket,), jnp.int32),
+            spec(kv_shape))
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_predictor(bucket: int, pcfg=PREDICTOR):
+    def fn(*args):
+        pparams = M.predictor_params_from_list(list(args[:-1]))
+        hidden = args[-1]
+        return (M.predictor_forward(pparams, hidden, interpret=True),)
+
+    init = M.init_predictor_params()
+    pspecs = [spec(p.shape) for p in M.predictor_params_to_list(init)]
+    args = (*pspecs, spec((bucket, pcfg.d_in)))
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+# ---------------------------------------------------------------------------
+# parameter + metadata dump
+
+def dump_params(lm_params, pred_params, out_dir):
+    pdir = os.path.join(out_dir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    manifest = []
+    for name, arr in zip(M.param_order(), M.params_to_list(lm_params)):
+        a = np.ascontiguousarray(np.asarray(arr, np.float32))
+        a.tofile(os.path.join(pdir, f"lm.{name}.bin"))
+        manifest.append(("lm." + name, "f32",
+                         "x".join(str(d) for d in a.shape)))
+    for name, arr in zip(M.PREDICTOR_PARAM_NAMES,
+                         M.predictor_params_to_list(pred_params)):
+        a = np.ascontiguousarray(np.asarray(arr, np.float32))
+        a.tofile(os.path.join(pdir, f"pred.{name}.bin"))
+        manifest.append(("pred." + name, "f32",
+                         "x".join(str(d) for d in a.shape)))
+    with open(os.path.join(pdir, "manifest.txt"), "w") as f:
+        for name, dt, shape in manifest:
+            f.write(f"{name}\t{dt}\t{shape}\n")
+
+
+def write_meta(out_dir, cfg=MODEL):
+    lines = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim, "ffn_dim": cfg.ffn_dim,
+        "max_prompt": cfg.max_prompt, "max_seq": cfg.max_seq,
+        "max_output": cfg.max_output,
+        "decode_buckets": ",".join(str(b) for b in cfg.decode_buckets),
+        "predictor_buckets": ",".join(str(b) for b in cfg.predictor_buckets),
+        "kv_bytes_per_token": cfg.kv_bytes_per_token(),
+        "eos": 0, "bos": 1,
+        "predictor_d_in": PREDICTOR.d_in,
+    }
+    with open(os.path.join(out_dir, "model_meta.txt"), "w") as f:
+        for k, v in lines.items():
+            f.write(f"{k}={v}\n")
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+
+def ensure_lm(out_dir, verbose=True):
+    from .train_lm import load_params, save_params, train
+    path = os.path.join(out_dir, "lm_params.npz")
+    if os.path.exists(path):
+        if verbose:
+            print(f"[aot] cached LM params: {path}", flush=True)
+        return load_params(path)
+    params, losses = train(verbose=verbose)
+    save_params(params, path)
+    with open(os.path.join(out_dir, "lm_train_loss.txt"), "w") as f:
+        for i, l in enumerate(losses):
+            f.write(f"{i}\t{l:.5f}\n")
+    return params
+
+
+def ensure_predictor(lm_params, out_dir, verbose=True):
+    from .train_predictor import run
+    path = os.path.join(out_dir, "predictor_params.npz")
+    if os.path.exists(path):
+        if verbose:
+            print(f"[aot] cached predictor params: {path}", flush=True)
+        data = np.load(path)
+        return {"ws": [jnp.asarray(data[f"w{i}"]) for i in range(1, 5)],
+                "bs": [jnp.asarray(data[f"b{i}"]) for i in range(1, 5)]}
+    pparams, _res = run(lm_params, out_dir, verbose=verbose)
+    return pparams
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="use freshly-initialized (untrained) weights; "
+                         "for CI smoke runs only")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    if args.skip_train:
+        lm_params = M.init_params(0)
+        pred_params = M.init_predictor_params(0)
+    else:
+        lm_params = ensure_lm(out)
+        pred_params = ensure_predictor(lm_params, out)
+
+    jobs = [("prefill.hlo.txt", lambda: lower_prefill())]
+    for b in MODEL.decode_buckets:
+        jobs.append((f"decode_b{b}.hlo.txt",
+                     lambda b=b: lower_decode(b)))
+    for b in MODEL.predictor_buckets:
+        jobs.append((f"predictor_b{b}.hlo.txt",
+                     lambda b=b: lower_predictor(b)))
+    for fname, job in jobs:
+        path = os.path.join(out, fname)
+        t = time.time()
+        text = job()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {fname}: {len(text)/1e6:.2f} MB in "
+              f"{time.time()-t:.1f}s", flush=True)
+
+    dump_params(lm_params, pred_params, out)
+    write_meta(out)
+    print(f"[aot] artifacts complete in {time.time()-t0:.0f}s -> {out}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

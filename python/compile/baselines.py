@@ -1,0 +1,172 @@
+"""Baseline generation-length predictors (paper Table 1 analogs).
+
+* `AuxiliaryPredictor` — the TetriInfer / mu-Serve analog: a small
+  transformer regressor over a **truncated** window of recent raw tokens.
+  The truncation is the defining limitation the paper exploits (opt: 1024,
+  bert: 512 tokens); here the window is TRAIN.aux_window tokens against
+  sequences that grow to 512+, reproducing the same information loss.
+* `PromptMeanPredictor` — the PiA analog: training-free, prompt-only.
+  Predicts the corpus-wide mean total length (it never sees generation
+  progress), minus tokens generated so far, floored at 0.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import PREDICTOR, TRAIN
+
+
+def _aux_init(seed=0, vocab=256, d=None, layers=None, heads=None, window=None):
+    d = d or TRAIN.aux_d
+    layers = layers or TRAIN.aux_layers
+    rng = np.random.default_rng(seed)
+
+    def w(*shape, scale=None):
+        scale = scale if scale is not None else (shape[-2] ** -0.5)
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    window = window or TRAIN.aux_window
+    return {
+        "emb": w(vocab, d, scale=0.02),
+        "pos": w(window, d, scale=0.02),
+        "wq": w(layers, d, d), "wk": w(layers, d, d),
+        "wv": w(layers, d, d), "wo": w(layers, d, d),
+        "w1": w(layers, d, 4 * d), "w2": w(layers, 4 * d, d),
+        "head_w": w(d, 1), "head_b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _aux_forward(params, windows):
+    """windows: [B, W] int32 (0-padded on the left) -> log1p(remaining) [B]."""
+    B, W = windows.shape
+    layers = params["wq"].shape[0]
+    d = params["emb"].shape[1]
+    heads = TRAIN.aux_heads
+    dh = d // heads
+    x = params["emb"][windows] + params["pos"][None]
+    idx = jnp.arange(W)
+    causal = idx[None, :] <= idx[:, None]
+    for l in range(layers):
+        q = (x @ params["wq"][l]).reshape(B, W, heads, dh)
+        k = (x @ params["wk"][l]).reshape(B, W, heads, dh)
+        v = (x @ params["wv"][l]).reshape(B, W, heads, dh)
+        s = jnp.einsum("bthd,bshd->bhts", q, k) / (dh ** 0.5)
+        s = jnp.where(causal[None, None], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        x = x + jnp.einsum("bhts,bshd->bthd", a, v).reshape(B, W, d) \
+            @ params["wo"][l]
+        h = x @ params["w1"][l]
+        x = x + jnp.maximum(h, 0.0) @ params["w2"][l]
+    pooled = x.mean(axis=1)
+    return (pooled @ params["head_w"] + params["head_b"])[:, 0]
+
+
+def aux_param_count(params):
+    return int(sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params)))
+
+
+class AuxiliaryPredictor:
+    """Truncated-context transformer regressor (trained with L1 loss)."""
+
+    name = "auxiliary"
+
+    def __init__(self, seed=0):
+        self.params = _aux_init(seed)
+        self.train_time_s = 0.0
+
+    def fit(self, train_arrays, val_arrays, epochs=None, verbose=False):
+        epochs = epochs or TRAIN.pred_epochs
+        lr = TRAIN.pred_lr
+        bsz = TRAIN.pred_batch
+        def tfm(r):
+            if PREDICTOR.log_target:
+                return jnp.log1p(r)
+            return r / PREDICTOR.scale
+        Xtr = jnp.asarray(train_arrays["window"])
+        ytr = tfm(jnp.asarray(train_arrays["remaining"]))
+        Xva = jnp.asarray(val_arrays["window"])
+        yva = tfm(jnp.asarray(val_arrays["remaining"]))
+
+        def loss_fn(p, X, y):
+            return jnp.abs(_aux_forward(p, X) - y).mean()
+
+        @jax.jit
+        def step(p, m, v, t, X, y):
+            loss, g = jax.value_and_grad(loss_fn)(p, X, y)
+            t = t + 1
+            m = jax.tree_util.tree_map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
+            v = jax.tree_util.tree_map(lambda v, g: 0.95 * v + 0.05 * g * g, v, g)
+            p = jax.tree_util.tree_map(
+                lambda p, m, v: p - lr * (m / (1 - 0.9 ** t)) /
+                (jnp.sqrt(v / (1 - 0.95 ** t)) + 1e-8), p, m, v)
+            return p, m, v, t, loss
+
+        val_loss = jax.jit(loss_fn)
+        m = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        v = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        t = jnp.zeros((), jnp.float32)
+        best, best_p, patience = np.inf, self.params, 0
+        rng = np.random.default_rng(0)
+        n = Xtr.shape[0]
+        t0 = time.time()
+        p = self.params
+        for ep in range(epochs):
+            order = rng.permutation(n)
+            for s in range(0, n - bsz + 1, bsz):
+                idx = order[s : s + bsz]
+                p, m, v, t, _ = step(p, m, v, t, Xtr[idx], ytr[idx])
+            vl = float(val_loss(p, Xva, yva))
+            if verbose:
+                print(f"[aux] epoch {ep} val L1(log) {vl:.4f}", flush=True)
+            if vl < best - 1e-4:
+                best, best_p, patience = vl, p, 0
+            else:
+                patience += 1
+                if patience >= TRAIN.pred_patience:
+                    break
+        self.params = best_p
+        self.train_time_s = time.time() - t0
+        return self
+
+    def predict(self, arrays):
+        out = []
+        X = jnp.asarray(arrays["window"])
+        fwd = jax.jit(_aux_forward)
+        for s in range(0, X.shape[0], 512):
+            y = fwd(self.params, X[s : s + 512])
+            if PREDICTOR.log_target:
+                y = jnp.expm1(jnp.maximum(y, 0.0))
+            else:
+                y = jnp.maximum(y, 0.0) * PREDICTOR.scale
+            out.append(np.asarray(y))
+        return np.clip(np.concatenate(out), 0, None)
+
+    def param_count(self):
+        return aux_param_count(self.params)
+
+
+class PromptMeanPredictor:
+    """PiA analog: training-free, prompt-only constant estimate."""
+
+    name = "prompt_only"
+
+    def __init__(self):
+        self.mean_total = 0.0
+        self.train_time_s = 0.0
+
+    def fit(self, train_arrays, val_arrays=None, **_):
+        # "training-free": uses only the corpus-wide average as the LLM's
+        # zero-shot guess; no gradient steps (paper: PiA training time 0).
+        totals = train_arrays["remaining"] + train_arrays["gen_sofar"]
+        self.mean_total = float(np.mean(totals))
+        return self
+
+    def predict(self, arrays):
+        rem = self.mean_total - arrays["gen_sofar"]
+        return np.clip(rem, 0, None)
+
+    def param_count(self):
+        return 0

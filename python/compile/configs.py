@@ -1,0 +1,126 @@
+"""Model / corpus / training configuration for the star-pico stack.
+
+Single source of truth for every dimension that the AOT artifacts bake in.
+`rust/src/runtime/meta.rs` parses the emitted `artifacts/model_meta.txt`,
+so anything added here that rust needs must also be written by
+`aot.write_meta`.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """star-pico: the small real transformer served end-to-end.
+
+    A deliberate scale-down of DeepSeek-R1-Distill-Qwen-7B (paper §6.1):
+    byte-level vocab, RoPE, RMSNorm, tied LM head. Per-token decode cost is
+    a real attention-over-KV + FFN step, which is all the scheduler sees.
+    """
+
+    vocab: int = 256          # byte-level tokenizer; 0 = EOS, 1 = BOS
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32        # d_model / n_heads
+    ffn_dim: int = 512
+    max_prompt: int = 128     # prefill padded length
+    max_seq: int = 640        # KV cache capacity per request (prompt+output)
+    max_output: int = 512     # generation cap at real-execution scale
+    rope_theta: float = 10_000.0
+
+    # decode-batch buckets the AOT path emits executables for
+    decode_buckets: tuple = (1, 2, 4, 8)
+    predictor_buckets: tuple = (1, 2, 4, 8, 16)
+
+    @property
+    def kv_shape_per_req(self):
+        # [layers, k/v, heads, max_seq, head_dim]
+        return (self.n_layers, 2, self.n_heads, self.max_seq, self.head_dim)
+
+    def kv_bytes_per_token(self) -> int:
+        return self.n_layers * 2 * self.n_heads * self.head_dim * 4
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    """LLM-native remaining-length predictor (paper §4.2, Eq. 2).
+
+    Paper: d=3584 -> 2048 -> 512 -> 64 -> 1 (8.4M params).
+    Scaled to star-pico's d=128: 128 -> 256 -> 64 -> 16 -> 1 (~50K params),
+    preserving the 4-layer-MLP-on-last-hidden-state architecture.
+    """
+
+    d_in: int = 128
+    hidden: tuple = (256, 64, 16)
+    # target parameterization: raw remaining scaled by `scale` (log1p was
+    # tried first but biases token-unit MAE down via Jensen's inequality)
+    log_target: bool = False
+    scale: float = 64.0
+
+
+@dataclass(frozen=True)
+class CorpusConfig:
+    """Synthetic 'reasoning-trace' language (DESIGN.md §1).
+
+    Prompts carry a task tag that determines the *distribution* of the
+    number of reasoning paragraphs; realized length is stochastic, so
+    prompt-only prediction has an irreducible error while hidden-state /
+    continuous prediction can do better — the structure Fig. 7 needs.
+    """
+
+    n_tags: int = 16
+    tag_bytes: bytes = b"abcdefghijklmnop"
+    lam_min: float = 1.0       # Poisson rate of paragraph count, shortest tag
+    lam_max: float = 14.0      # ... longest tag
+    payload_min: int = 4
+    payload_max: int = 16
+    par_min: int = 8           # filler bytes per paragraph
+    par_max: int = 24
+    bos: int = 1
+    eos: int = 0
+    q_byte: int = ord("Q")
+    sep_byte: int = ord("?")
+    step_byte: int = ord("s")
+    colon_byte: int = ord(":")
+    nl_byte: int = ord("\n")
+    filler_bytes: bytes = b"etaoinshrdlucmfwyp"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    # LM pre-training (build time, cached in artifacts/)
+    lm_steps: int = 600
+    lm_batch: int = 8
+    lm_seq: int = 256
+    lm_lr: float = 3e-3
+    lm_warmup: int = 50
+    lm_seed: int = 0
+
+    # predictor dataset generation
+    gen_requests: int = 320
+    gen_batch: int = 16
+    sample_temp: float = 0.9
+    record_every: int = 8      # record (hidden, remaining) every N tokens
+    gen_seed: int = 7
+
+    # predictor training (paper §4.4: L1 loss, AdamW, early stop)
+    pred_epochs: int = 100
+    pred_patience: int = 10
+    pred_batch: int = 128
+    pred_lr: float = 1e-3
+    pred_seed: int = 3
+    split_train: float = 0.70
+    split_val: float = 0.15    # remainder is test
+
+    # auxiliary baseline (TetriInfer/mu-Serve analog): truncated context
+    aux_window: int = 48       # tokens of visible context (the limitation)
+    aux_d: int = 32
+    aux_layers: int = 2
+    aux_heads: int = 2
+
+
+MODEL = ModelConfig()
+PREDICTOR = PredictorConfig()
+CORPUS = CorpusConfig()
+TRAIN = TrainConfig()

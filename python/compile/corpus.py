@@ -1,0 +1,109 @@
+"""Synthetic 'reasoning-trace' corpus (DESIGN.md §1 substitution for ShareGPT).
+
+The language is designed so that generation length has the structure the
+paper's prediction experiments rely on:
+
+  * a prompt tag determines the *distribution* of paragraph count
+    (expected output length spans ~15x across tags — paper Fig. 1's
+    ">16x output variation"),
+  * realized length is stochastic (Poisson paragraphs x uniform paragraph
+    bodies), so prompt-only prediction has irreducible error,
+  * progress is observable mid-generation (paragraph headers "s<i>:"),
+    so hidden-state / continuous predictors improve as tokens accumulate
+    (paper Fig. 7's falling-MAE curve).
+
+Byte-level tokens; 0 = EOS, 1 = BOS.
+"""
+
+import numpy as np
+
+from .configs import CORPUS, MODEL
+
+
+def make_prompt(rng: np.random.Generator, tag: int, cfg=CORPUS):
+    """[BOS 'Q' <tag-byte> <payload> '?'] as a list of ints."""
+    payload_len = int(rng.integers(cfg.payload_min, cfg.payload_max + 1))
+    payload = rng.integers(ord("a"), ord("z") + 1, payload_len).tolist()
+    return [cfg.bos, cfg.q_byte, cfg.tag_bytes[tag], *payload, cfg.sep_byte]
+
+
+def make_response(rng: np.random.Generator, tag: int, cfg=CORPUS,
+                  max_len: int | None = None):
+    """Reasoning trace: n~Poisson(lam(tag))+1 paragraphs, then EOS.
+
+    Paragraph headers deliberately carry NO explicit step index: progress
+    through the trace is only observable by *counting* paragraphs, which a
+    truncated-window auxiliary model cannot do but the generating model's
+    own hidden state tracks — the paper's core information asymmetry
+    (§4.2). An earlier corpus revision printed "s<i>:" headers and the
+    auxiliary baseline could read progress straight off the window,
+    erasing the LLM-native advantage.
+    """
+    lam = cfg.lam_min + (cfg.lam_max - cfg.lam_min) * tag / (cfg.n_tags - 1)
+    n_par = int(rng.poisson(lam)) + 1
+    out = []
+    # CoT-style plan: "p:" + one '*' per planned paragraph. The model
+    # learns to (a) sample a plan whose size depends on the prompt tag and
+    # (b) follow it — so remaining length is *knowable* from the full
+    # context (count stars vs paragraphs emitted), which the hidden state
+    # retains but a truncated token window loses once generation moves past
+    # the plan. This mirrors real reasoning traces, where the model's early
+    # commitment to an approach determines the trace length.
+    out.append(ord("p"))
+    out.append(cfg.colon_byte)
+    out.extend([ord("*")] * n_par)
+    out.append(cfg.nl_byte)
+    for _i in range(n_par):
+        out.append(cfg.step_byte)
+        out.append(cfg.colon_byte)
+        body_len = int(rng.integers(cfg.par_min, cfg.par_max + 1))
+        body = rng.choice(list(cfg.filler_bytes), body_len).tolist()
+        out.extend(int(b) for b in body)
+        out.append(cfg.nl_byte)
+        if max_len is not None and len(out) >= max_len - 1:
+            out = out[: max_len - 1]
+            break
+    out.append(cfg.eos)
+    return out
+
+
+def make_example(rng: np.random.Generator, cfg=CORPUS, model_cfg=MODEL):
+    """(prompt, response) pair bounded by the model's sequence budget."""
+    tag = int(rng.integers(cfg.n_tags))
+    prompt = make_prompt(rng, tag)
+    max_resp = model_cfg.max_seq - len(prompt)
+    response = make_response(rng, tag, max_len=min(max_resp,
+                                                   model_cfg.max_output))
+    return tag, prompt, response
+
+
+def make_training_batch(rng: np.random.Generator, batch: int, seq: int,
+                        cfg=CORPUS):
+    """Packed next-token-prediction batch.
+
+    Returns tokens [batch, seq] int32 and loss mask [batch, seq-1] f32
+    (mask excludes prompt positions? No — LM learns the full distribution
+    including prompts; mask only excludes padding).
+    """
+    toks = np.zeros((batch, seq), np.int32)
+    mask = np.zeros((batch, seq - 1), np.float32)
+    for b in range(batch):
+        tag, prompt, response = make_example(rng)
+        seq_toks = (prompt + response)[:seq]
+        toks[b, : len(seq_toks)] = seq_toks
+        mask[b, : max(len(seq_toks) - 1, 1)] = 1.0
+    return toks, mask
+
+
+def expected_length_by_tag(cfg=CORPUS):
+    """Analytic E[response length] per tag — prompt-only oracle baseline."""
+    out = []
+    avg_par = ((cfg.par_min + cfg.par_max) / 2  # body
+               + 1 + 1                          # 's', ':'
+               + 1)                             # newline
+    for tag in range(cfg.n_tags):
+        lam = cfg.lam_min + (cfg.lam_max - cfg.lam_min) * tag / (cfg.n_tags - 1)
+        n_par = lam + 1
+        plan = 2 + n_par + 1                    # "p:" + stars + newline
+        out.append(plan + n_par * avg_par + 1)
+    return out

@@ -1,0 +1,164 @@
+"""Predictor supervised-dataset construction (paper §4.4).
+
+Runs the pre-trained star-pico LM over synthetic prompts with temperature
+sampling (so realized lengths are stochastic, as in real serving), and
+records at fixed decode intervals:
+
+  * the last-layer last-token hidden state  h_t   (LLM-native input)
+  * the last `aux_window` raw tokens                (auxiliary-model input)
+  * the prompt tag and generated-so-far count
+  * the ground-truth remaining length      y_t
+
+Split is at *request* level (70/15/15) so samples from one request never
+straddle splits (paper's leakage guard).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import CORPUS, MODEL, TRAIN
+from .corpus import make_prompt
+
+
+@jax.jit
+def _gen_step(params, tokens, pos, kv, key, temp):
+    logits, kv, hidden = M.decode_step(params, tokens, pos, kv,
+                                       use_kernels=False)
+    nxt = jax.random.categorical(key, logits / temp, axis=-1)
+    return nxt.astype(jnp.int32), kv, hidden
+
+
+@jax.jit
+def _prefill1(params, toks, plen):
+    return M.prefill(params, toks, plen)
+
+
+def generate_requests(params, n_requests=None, seed=None, record_every=None,
+                      verbose=True):
+    """Returns (records, request_lengths).
+
+    records: list of dicts with keys
+      req, tag, gen_sofar, remaining, hidden [D] f32, window [W] int32
+    request_lengths: realized output length per request (for workload stats).
+    """
+    cfg, tcfg = MODEL, TRAIN
+    n_requests = n_requests or tcfg.gen_requests
+    seed = tcfg.gen_seed if seed is None else seed
+    record_every = record_every or tcfg.record_every
+    B = tcfg.gen_batch
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+
+    records, req_lengths, req_tags = [], [], []
+    t0 = time.time()
+    for start in range(0, n_requests, B):
+        nb = min(B, n_requests - start)
+        tags = [int(rng.integers(CORPUS.n_tags)) for _ in range(nb)]
+        prompts = [make_prompt(rng, t) for t in tags]
+
+        # prefill each request (B=1 entrypoint, as in the serving path)
+        kv = jnp.zeros((cfg.n_layers, 2, B, cfg.n_heads, cfg.max_seq,
+                        cfg.head_dim), jnp.float32)
+        cur_tok = np.ones(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        token_hist = [[] for _ in range(B)]
+        for i, p in enumerate(prompts):
+            toks = np.zeros((1, cfg.max_prompt), np.int32)
+            toks[0, : len(p)] = p
+            logits, kv1, hidden = _prefill1(params, jnp.asarray(toks),
+                                            jnp.asarray([len(p)], jnp.int32))
+            kv = kv.at[:, :, i : i + 1].set(kv1)
+            key, sk = jax.random.split(key)
+            cur_tok[i] = int(jax.random.categorical(
+                sk, logits[0] / tcfg.sample_temp))
+            pos[i] = len(p)
+            token_hist[i] = list(p)
+
+        plens = np.array([len(p) for p in prompts] + [1] * (B - nb))
+        done = np.zeros(B, bool)
+        done[nb:] = True
+        n_gen = np.zeros(B, np.int32)
+        # traj[i] = list of (gen_sofar, hidden, window) snapshots
+        traj = [[] for _ in range(B)]
+
+        # snapshot at gen_sofar=0 comes from prefill hidden state: record it
+        # on the first decode step below (hidden of prefill last token).
+        step = 0
+        max_steps = cfg.max_output
+        while not done.all() and step < max_steps:
+            key, sk = jax.random.split(key)
+            nxt, kv, hidden = _gen_step(params, jnp.asarray(cur_tok),
+                                        jnp.asarray(pos), kv, sk,
+                                        jnp.float32(tcfg.sample_temp))
+            hidden_np = np.asarray(hidden)
+            if step % record_every == 0:
+                for i in range(nb):
+                    if not done[i]:
+                        w = token_hist[i][-tcfg.aux_window:]
+                        w = [0] * (tcfg.aux_window - len(w)) + w
+                        traj[i].append((int(n_gen[i]), hidden_np[i].copy(),
+                                        np.array(w, np.int32)))
+            nxt_np = np.asarray(nxt)
+            for i in range(nb):
+                if done[i]:
+                    continue
+                token_hist[i].append(int(cur_tok[i]))
+                n_gen[i] += 1
+                pos[i] += 1
+                if int(nxt_np[i]) == CORPUS.eos or \
+                        pos[i] >= cfg.max_seq - 1 or \
+                        n_gen[i] >= cfg.max_output:
+                    done[i] = True
+                else:
+                    cur_tok[i] = int(nxt_np[i])
+            step += 1
+
+        for i in range(nb):
+            total = int(n_gen[i])
+            req_lengths.append(total)
+            req_tags.append(tags[i])
+            for gen_sofar, hid, win in traj[i]:
+                records.append({
+                    "req": start + i, "tag": tags[i],
+                    "gen_sofar": gen_sofar,
+                    "remaining": total - gen_sofar,
+                    "hidden": hid, "window": win,
+                })
+        if verbose:
+            print(f"[gen_dataset] {start+nb}/{n_requests} requests, "
+                  f"{len(records)} samples, {time.time()-t0:.0f}s", flush=True)
+    return records, np.array(req_lengths), np.array(req_tags)
+
+
+def split_records(records, n_requests, seed=0):
+    """Request-level 70/15/15 split (paper §4.4)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_requests)
+    n_tr = int(TRAIN.split_train * n_requests)
+    n_va = int(TRAIN.split_val * n_requests)
+    tr = set(perm[:n_tr].tolist())
+    va = set(perm[n_tr : n_tr + n_va].tolist())
+    out = {"train": [], "val": [], "test": []}
+    for r in records:
+        if r["req"] in tr:
+            out["train"].append(r)
+        elif r["req"] in va:
+            out["val"].append(r)
+        else:
+            out["test"].append(r)
+    return out
+
+
+def to_arrays(recs):
+    return {
+        "hidden": np.stack([r["hidden"] for r in recs]).astype(np.float32),
+        "window": np.stack([r["window"] for r in recs]).astype(np.int32),
+        "remaining": np.array([r["remaining"] for r in recs], np.float32),
+        "gen_sofar": np.array([r["gen_sofar"] for r in recs], np.int32),
+        "tag": np.array([r["tag"] for r in recs], np.int32),
+        "req": np.array([r["req"] for r in recs], np.int32),
+    }

@@ -1,0 +1,107 @@
+"""Pallas decode-attention kernel (L1 hot spot).
+
+TPU adaptation of vLLM's paged decode attention (DESIGN.md §2): instead of
+one CUDA warp group per sequence reading HBM pages, the grid is
+(batch, kv-blocks) and each step streams one [H, BLK, Dh] KV tile through
+VMEM, folding it into an online-softmax accumulator held in VMEM scratch.
+The sequence axis is the innermost ("arbitrary") grid dimension so the
+accumulator for a given batch element is built up across consecutive steps.
+
+VMEM footprint per grid step (B=8 bucket, S=640, H=4, Dh=32, BLK=128):
+  k/v tiles 2 * H*BLK*Dh*4 = 128 KiB, q 0.5 KiB, acc/m/l scratch ~17 KiB
+  => well under the ~4 MiB budget in DESIGN.md §8.
+
+Run with interpret=True everywhere (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is what carries to real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, *, block_s: int, scale: float):
+    """One (batch b, kv-block s) grid step of online-softmax decode attention.
+
+    Refs (as blocked by the BlockSpecs below):
+      lens_ref: [B] int32 in SMEM-like memory (full array, index_map -> 0)
+      q_ref:    [H, Dh]      this batch element's query
+      k_ref/v_ref: [H, block_s, Dh]  the current KV tile
+      o_ref:    [H, Dh]      output (written on the last sequence step)
+      acc_ref:  [H, Dh] f32 scratch — running numerator
+      m_ref,l_ref: [H] f32 scratch — running max / denominator
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    n_s = pl.num_programs(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]                                   # [H, Dh]
+    k = k_ref[...]                                   # [H, BLK, Dh]
+    v = v_ref[...]
+
+    scores = jnp.einsum("hd,hsd->hs", q, k) * scale  # [H, BLK]
+    valid = (s * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1)) < lens_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]                              # [H]
+    m_cur = jnp.maximum(m_prev, scores.max(axis=1))  # [H]
+    alpha = jnp.exp(m_prev - m_cur)                  # rescale old accum
+    p = jnp.exp(scores - m_cur[:, None])             # [H, BLK]
+    # fully-masked tiles contribute ~exp(NEG_INF - m) == 0 — no special case
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.einsum("hs,hsd->hd", p, v)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    m_ref[...] = m_cur
+
+    @pl.when(s == n_s - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lens, *, block_s: int = DEFAULT_BLOCK,
+                     interpret: bool = True):
+    """Pallas decode attention. Shapes as in `ref.decode_attention_ref`.
+
+    q: [B, H, Dh]; k, v: [B, H, S, Dh]; lens: [B] int32 -> out [B, H, Dh].
+    S must be a multiple of block_s (the AOT path pads the KV cache).
+    """
+    B, H, S, Dh = k.shape
+    if S % block_s != 0:
+        raise ValueError(f"S={S} not a multiple of block_s={block_s}")
+    n_s = S // block_s
+    scale = 1.0 / (Dh ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, block_s=block_s, scale=scale)
+    grid = (B, n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(lens.shape, lambda b, s: (0,)),            # lens: full
+            pl.BlockSpec((None, H, Dh), lambda b, s: (b, 0, 0)),    # q
+            pl.BlockSpec((None, H, block_s, Dh), lambda b, s: (b, 0, s, 0)),
+            pl.BlockSpec((None, H, block_s, Dh), lambda b, s: (b, 0, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, H, Dh), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, Dh), jnp.float32),   # acc
+            pltpu.VMEM((H,), jnp.float32),      # m
+            pltpu.VMEM((H,), jnp.float32),      # l
+        ],
+        interpret=interpret,
+    )(lens, q, k, v)

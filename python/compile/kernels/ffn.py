@@ -1,0 +1,55 @@
+"""Pallas fused transformer-FFN kernel (L1).
+
+Fuses `gelu(x @ w1 + b1) @ w2 + b2` into one kernel so the intermediate
+[rows, F] activation never round-trips HBM. Grid tiles the batch rows; the
+weight panels are MXU-aligned full blocks (D=128, F=512 are already
+multiples of the 128-lane systolic width — DESIGN.md §2).
+
+VMEM per grid step at (ROWS=8, D=128, F=512): w1+w2 512 KiB, x/h/out
+~18 KiB — comfortably within budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 8
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]                       # [rows, D]
+    h = x @ w1_ref[...] + b1_ref[...]    # [rows, F]
+    h = 0.5 * h * (1.0 + jnp.tanh(_GELU_C * (h + 0.044715 * h * h * h)))
+    o_ref[...] = (h @ w2_ref[...] + b2_ref[...]).astype(o_ref.dtype)
+
+
+def ffn(x, w1, b1, w2, b2, *, rows: int = DEFAULT_ROWS, interpret: bool = True):
+    """Fused FFN. x: [B, D] -> [B, D]; shapes as in `ref.ffn_ref`.
+
+    B is padded up to a multiple of `rows` internally.
+    """
+    B, D = x.shape
+    F = w1.shape[1]
+    pad = (-B) % rows
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, D), x.dtype)], axis=0)
+    nb = x.shape[0] // rows
+
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, F), lambda i: (0, 0)),
+            pl.BlockSpec((F,), lambda i: (0,)),
+            pl.BlockSpec((F, D), lambda i: (0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], D), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+    return out[:B]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness references).
+
+Each `*_ref` function computes exactly what the corresponding kernel in
+`attention.py` / `ffn.py` / `predictor_mlp.py` must produce; pytest +
+hypothesis sweep shapes and compare with `assert_allclose`.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lens, scale=None):
+    """Batched single-token decode attention over a padded KV cache.
+
+    q:    [B, H, Dh]      query for the current token of each sequence
+    k,v:  [B, H, S, Dh]   padded KV cache (garbage beyond lens)
+    lens: [B] int32       valid KV length per sequence (>= 1)
+    out:  [B, H, Dh]
+    """
+    B, H, S, Dh = k.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, q.dtype))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    mask = jnp.arange(S)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jnp.nan_to_num(jnp.exp(scores - scores.max(-1, keepdims=True)))
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhs,bhsd->bhd", w, v)
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Fused transformer FFN: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: [B, D], w1: [D, F], w2: [F, D]
+    """
+    h = x @ w1 + b1
+    # tanh-approximation GeLU (matches the kernel exactly)
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    return h @ w2 + b2
+
+
+def predictor_mlp_ref(h, weights, biases):
+    """4-layer MLP head (paper Eq. 2): relu chain, scalar output.
+
+    h: [B, D]; weights/biases: lists for each of the 4 layers.
+    Returns [B] (squeezed last dim).
+    """
+    x = h
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        x = x @ w + b
+        if i < len(weights) - 1:
+            x = jnp.maximum(x, 0.0)
+    return x[:, 0]

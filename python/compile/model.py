@@ -1,0 +1,273 @@
+"""L2: star-pico — the small real transformer served by the rust runtime.
+
+Architecture (scaled-down DeepSeek-R1-Distill-Qwen-7B, see DESIGN.md §1):
+byte vocab 256, d=128, 4 layers, 4 heads, RoPE, RMSNorm, tied LM head.
+The decode hot spots (attention-over-KV, FFN, predictor MLP) are the L1
+Pallas kernels in `kernels/`; everything else (projections, norms, rope,
+embedding) is plain jnp that XLA fuses.
+
+Two AOT entrypoints (lowered by aot.py, executed from rust):
+
+  prefill(params, tokens[1, Pmax], plen[1])
+      -> (logits[1, V], kv[L, 2, 1, H, Smax, Dh], hidden[1, D])
+
+  decode_step(params, tokens[B], pos[B], kv[L, 2, B, H, Smax, Dh])
+      -> (logits[B, V], kv', hidden[B, D])
+
+`pos[b]` is the index the new token is written at (== current valid length
+of sequence b); sampling happens rust-side on the returned logits.
+
+Params are runtime inputs (not baked constants) so rust uploads them once
+as device buffers; order is defined by `param_order()` and mirrored in
+artifacts/params/manifest.txt.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import MODEL, PREDICTOR
+from .kernels.attention import decode_attention
+from .kernels.ffn import ffn
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# parameters
+
+PARAM_NAMES = [
+    "emb",        # [V, D]
+    "wq", "wk", "wv", "wo",   # [L, D, D]
+    "w1", "b1",   # [L, D, F], [L, F]
+    "w2", "b2",   # [L, F, D], [L, D]
+    "rms1", "rms2",           # [L, D]
+    "rms_final",  # [D]
+]
+
+
+def param_order():
+    """Stable flattening order for the AOT interface (rust mirrors this)."""
+    return list(PARAM_NAMES)
+
+
+def init_params(seed: int = 0, cfg=MODEL):
+    """Deterministic init; pre-training (train_lm.py) refines these."""
+    rng = np.random.default_rng(seed)
+    D, F, L, V = cfg.d_model, cfg.ffn_dim, cfg.n_layers, cfg.vocab
+
+    def w(*shape, scale=None):
+        scale = scale if scale is not None else (shape[-2] ** -0.5)
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    return {
+        "emb": w(V, D, scale=0.02),
+        "wq": w(L, D, D), "wk": w(L, D, D), "wv": w(L, D, D),
+        "wo": w(L, D, D, scale=(D ** -0.5) / (2 * L) ** 0.5),
+        "w1": w(L, D, F), "b1": jnp.zeros((L, F), jnp.float32),
+        "w2": w(L, F, D, scale=(F ** -0.5) / (2 * L) ** 0.5),
+        "b2": jnp.zeros((L, D), jnp.float32),
+        "rms1": jnp.ones((L, D), jnp.float32),
+        "rms2": jnp.ones((L, D), jnp.float32),
+        "rms_final": jnp.ones((D,), jnp.float32),
+    }
+
+
+def params_to_list(params):
+    return [params[n] for n in param_order()]
+
+
+def params_from_list(lst):
+    return dict(zip(param_order(), lst))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions, theta=MODEL.rope_theta):
+    """Rotary embedding. x: [..., T, H, Dh]; positions: [..., T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# prefill (single request, full prompt in one pass — compute-bound phase)
+
+def prefill(params, tokens, plen, cfg=MODEL, interpret=True):
+    """tokens: [1, Pmax] int32; plen: [1] int32 (valid prompt length >= 1).
+
+    Returns (logits[1, V] of the *last valid* token, padded KV cache
+    [L, 2, 1, H, Smax, Dh], hidden[1, D] of the last valid token).
+    Prefill uses the jnp reference attention (one big causal pass — XLA
+    fuses this fine); the Pallas kernels own the *decode* hot path.
+    """
+    del interpret
+    L, H, Dh, D = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.d_model
+    P, S = cfg.max_prompt, cfg.max_seq
+    x = params["emb"][tokens[0]]                       # [P, D]
+    positions = jnp.arange(P)
+    valid = positions < plen[0]
+
+    kv = jnp.zeros((L, 2, 1, H, S, Dh), jnp.float32)
+    causal = positions[None, :] <= positions[:, None]  # [P, P]
+    mask = causal & valid[None, :]
+
+    for layer in range(L):
+        h = rmsnorm(x, params["rms1"][layer])
+        q = (h @ params["wq"][layer]).reshape(P, H, Dh)
+        k = (h @ params["wk"][layer]).reshape(P, H, Dh)
+        v = (h @ params["wv"][layer]).reshape(P, H, Dh)
+        q, k = rope(q, positions), rope(k, positions)
+        scores = jnp.einsum("thd,shd->hts", q, k) / (Dh ** 0.5)
+        scores = jnp.where(mask[None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("hts,shd->thd", w, v).reshape(P, D)
+        x = x + attn @ params["wo"][layer]
+        h2 = rmsnorm(x, params["rms2"][layer])
+        x = x + kref.ffn_ref(h2, params["w1"][layer], params["b1"][layer],
+                             params["w2"][layer], params["b2"][layer])
+        kv = kv.at[layer, 0, 0, :, :P, :].set(k.transpose(1, 0, 2))
+        kv = kv.at[layer, 1, 0, :, :P, :].set(v.transpose(1, 0, 2))
+
+    x = rmsnorm(x, params["rms_final"])                # [P, D]
+    last = plen[0] - 1
+    hidden = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=0)   # [1, D]
+    logits = hidden @ params["emb"].T                  # tied head, [1, V]
+    return logits, kv, hidden
+
+
+# ---------------------------------------------------------------------------
+# decode step (batched, memory-bound phase — the Pallas hot path)
+
+def decode_step(params, tokens, pos, kv, cfg=MODEL, interpret=True,
+                use_kernels=True):
+    """One autoregressive step for a padded batch.
+
+    tokens: [B] int32 (token to process), pos: [B] int32 (its index, i.e.
+    current valid length), kv: [L, 2, B, H, Smax, Dh].
+    Returns (logits[B, V], updated kv, hidden[B, D]).
+    Inactive slots just compute garbage at pos and are ignored rust-side.
+
+    use_kernels=False swaps the L1 Pallas kernels for their jnp oracles —
+    numerically identical (tested), used by the build-time dataset
+    generator where the Pallas *interpreter* overhead matters.
+    """
+    L, H, Dh, D = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.d_model
+    B = tokens.shape[0]
+    x = params["emb"][tokens]                          # [B, D]
+    lens = pos + 1                                     # KV valid length after write
+
+    bidx = jnp.arange(B)
+    for layer in range(L):
+        h = rmsnorm(x, params["rms1"][layer])
+        q = (h @ params["wq"][layer]).reshape(B, H, Dh)
+        k = (h @ params["wk"][layer]).reshape(B, H, Dh)
+        v = (h @ params["wv"][layer]).reshape(B, H, Dh)
+        q = rope(q[:, None], pos[:, None])[:, 0]       # [B, H, Dh]
+        k = rope(k[:, None], pos[:, None])[:, 0]
+        # write the new k/v at each sequence's position
+        kv = kv.at[layer, 0, bidx, :, pos, :].set(k)
+        kv = kv.at[layer, 1, bidx, :, pos, :].set(v)
+        if use_kernels:
+            attn = decode_attention(q, kv[layer, 0], kv[layer, 1], lens,
+                                    interpret=interpret)  # [B,H,Dh] (L1 kernel)
+        else:
+            attn = kref.decode_attention_ref(q, kv[layer, 0], kv[layer, 1], lens)
+        x = x + attn.reshape(B, D) @ params["wo"][layer]
+        h2 = rmsnorm(x, params["rms2"][layer])
+        if use_kernels:
+            x = x + ffn(h2, params["w1"][layer], params["b1"][layer],
+                        params["w2"][layer], params["b2"][layer],
+                        interpret=interpret)              # (L1 kernel)
+        else:
+            x = x + kref.ffn_ref(h2, params["w1"][layer], params["b1"][layer],
+                                 params["w2"][layer], params["b2"][layer])
+
+    hidden = rmsnorm(x, params["rms_final"])           # [B, D]
+    logits = hidden @ params["emb"].T
+    return logits, kv, hidden
+
+
+# ---------------------------------------------------------------------------
+# predictor head (paper Eq. 2) — separate entrypoint, run every k iters
+
+def init_predictor_params(seed: int = 0, pcfg=PREDICTOR):
+    rng = np.random.default_rng(seed)
+    dims = [pcfg.d_in, *pcfg.hidden, 1]
+    ws, bs = [], []
+    for i in range(4):
+        ws.append(jnp.asarray(
+            rng.standard_normal((dims[i], dims[i + 1])) * (dims[i] ** -0.5),
+            jnp.float32))
+        bs.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return {"ws": ws, "bs": bs}
+
+
+def predictor_forward(pparams, hidden, interpret=True):
+    """hidden: [B, D] -> predicted remaining length [B] (token units).
+
+    The MLP regresses log1p(remaining); expm1 restores token units so the
+    rust scheduler consumes plain token counts.
+    """
+    from .kernels.predictor_mlp import predictor_mlp
+    y = predictor_mlp(hidden, pparams["ws"], pparams["bs"], interpret=interpret)
+    if PREDICTOR.log_target:
+        y = jnp.expm1(jnp.maximum(y, 0.0))
+    else:
+        y = jnp.maximum(y, 0.0) * PREDICTOR.scale
+    return y
+
+
+def predictor_params_to_list(pparams):
+    out = []
+    for w, b in zip(pparams["ws"], pparams["bs"]):
+        out.extend([w, b])
+    return out
+
+
+def predictor_params_from_list(lst):
+    return {"ws": [lst[0], lst[2], lst[4], lst[6]],
+            "bs": [lst[1], lst[3], lst[5], lst[7]]}
+
+
+PREDICTOR_PARAM_NAMES = ["pw1", "pb1", "pw2", "pb2", "pw3", "pb3", "pw4", "pb4"]
+
+
+# ---------------------------------------------------------------------------
+# training-mode forward (full-sequence logits; used by train_lm.py)
+
+def lm_forward_train(params, tokens, cfg=MODEL):
+    """tokens: [B, T] -> logits [B, T, V]. Dense causal pass, jnp-only
+    (training happens once at build time; no pallas needed)."""
+    B, T = tokens.shape
+    L, H, Dh, D = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.d_model
+    x = params["emb"][tokens]                          # [B, T, D]
+    positions = jnp.arange(T)
+    causal = positions[None, :] <= positions[:, None]
+
+    for layer in range(L):
+        h = rmsnorm(x, params["rms1"][layer])
+        q = (h @ params["wq"][layer]).reshape(B, T, H, Dh)
+        k = (h @ params["wk"][layer]).reshape(B, T, H, Dh)
+        v = (h @ params["wv"][layer]).reshape(B, T, H, Dh)
+        q, k = rope(q, positions[None]), rope(k, positions[None])
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / (Dh ** 0.5)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", w, v).reshape(B, T, D)
+        x = x + attn @ params["wo"][layer]
+        h2 = rmsnorm(x, params["rms2"][layer])
+        x = x + kref.ffn_ref(h2, params["w1"][layer], params["b1"][layer],
+                             params["w2"][layer], params["b2"][layer])
+
+    x = rmsnorm(x, params["rms_final"])
+    return x @ params["emb"].T

@@ -1,0 +1,95 @@
+"""Build-time pre-training of star-pico on the reasoning-trace corpus.
+
+The LM must learn the corpus' length structure (tag -> paragraph count,
+paragraph shape, EOS placement) so that (a) sampled generations have the
+heavy-tailed length distribution the scheduler experiments need, and
+(b) its hidden states genuinely encode remaining-length information for
+the LLM-native predictor (paper §4).
+
+Runs once via `make artifacts`; cached as artifacts/lm_params.npz.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import MODEL, TRAIN
+from .corpus import make_training_batch
+
+
+def loss_fn(params, tokens, mask):
+    logits = M.lm_forward_train(params, tokens)            # [B, T, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+@jax.jit
+def train_step(params, opt, tokens, mask, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, mask)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def train(steps=None, verbose=True):
+    cfg = TRAIN
+    steps = steps or cfg.lm_steps
+    rng = np.random.default_rng(cfg.lm_seed)
+    params = M.init_params(cfg.lm_seed)
+    opt = adamw_init(params)
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        toks, mask = make_training_batch(rng, cfg.lm_batch, cfg.lm_seq)
+        warm = min(1.0, (step + 1) / cfg.lm_warmup)
+        decay = 0.5 * (1 + np.cos(np.pi * step / steps))
+        lr = cfg.lm_lr * warm * (0.1 + 0.9 * decay)
+        params, opt, loss = train_step(params, opt,
+                                       jnp.asarray(toks), jnp.asarray(mask),
+                                       jnp.float32(lr))
+        losses.append(float(loss))
+        if verbose and (step % 50 == 0 or step == steps - 1):
+            print(f"[train_lm] step {step:4d} loss {float(loss):.4f} "
+                  f"lr {lr:.2e} elapsed {time.time()-t0:.0f}s", flush=True)
+    return params, losses
+
+
+def save_params(params, path):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path):
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+if __name__ == "__main__":
+    import sys
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/lm_params.npz"
+    params, losses = train()
+    save_params(params, out)
+    print(f"final loss {losses[-1]:.4f} -> {out}")

@@ -1,0 +1,292 @@
+"""Train + evaluate the LLM-native length predictor and baselines (paper §4.4).
+
+Produces:
+  artifacts/predictor_params.npz   — trained MLP weights (AOT-baked + rust)
+  artifacts/predictor_eval.json    — Table 1 / Fig 7 numbers (human)
+  artifacts/predictor_eval.tsv     — same numbers, line-oriented (rust)
+  artifacts/dataset_stats.txt      — realized length distribution
+
+Table 1 analog: params / training time / MAE / latency(b=1,10) for
+  prompt_only (PiA), auxiliary (TetriInfer/mu-Serve), llm_native (ours).
+Fig 7 analog: MAE vs generated-tokens for long-output requests, per method.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .baselines import AuxiliaryPredictor, PromptMeanPredictor
+from .configs import MODEL, PREDICTOR, TRAIN
+from .gen_dataset import generate_requests, split_records, to_arrays
+
+
+# ---------------------------------------------------------------------------
+# LLM-native MLP training (L1 loss on log1p(remaining), AdamW, early stop)
+
+def _mlp_forward_raw(pparams, hidden):
+    x = hidden
+    for i, (w, b) in enumerate(zip(pparams["ws"], pparams["bs"])):
+        x = x @ w + b
+        if i < 3:
+            x = jnp.maximum(x, 0.0)
+    return x[:, 0]
+
+
+def target_transform(remaining):
+    """Remaining tokens -> regression target (see PredictorConfig)."""
+    if PREDICTOR.log_target:
+        return jnp.log1p(remaining)
+    return remaining / PREDICTOR.scale
+
+
+def target_invert(y):
+    if PREDICTOR.log_target:
+        return jnp.expm1(jnp.maximum(y, 0.0))
+    return jnp.maximum(y, 0.0) * PREDICTOR.scale
+
+
+def train_llm_native(train_arrays, val_arrays, verbose=False):
+    pparams = M.init_predictor_params(TRAIN.pred_seed)
+    lr, bsz = TRAIN.pred_lr, TRAIN.pred_batch
+    Xtr = jnp.asarray(train_arrays["hidden"])
+    ytr = target_transform(jnp.asarray(train_arrays["remaining"]))
+    Xva = jnp.asarray(val_arrays["hidden"])
+    yva = target_transform(jnp.asarray(val_arrays["remaining"]))
+
+    def loss_fn(p, X, y):
+        return jnp.abs(_mlp_forward_raw(p, X) - y).mean()
+
+    @jax.jit
+    def step(p, m, v, t, X, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, X, y)
+        t = t + 1
+        m = jax.tree_util.tree_map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
+        v = jax.tree_util.tree_map(lambda v, g: 0.95 * v + 0.05 * g * g, v, g)
+        p = jax.tree_util.tree_map(
+            lambda p, m, v: p - lr * (m / (1 - 0.9 ** t)) /
+            (jnp.sqrt(v / (1 - 0.95 ** t)) + 1e-8) - lr * 1e-4 * p, p, m, v)
+        return p, m, v, t, loss
+
+    val_loss = jax.jit(loss_fn)
+    m = jax.tree_util.tree_map(jnp.zeros_like, pparams)
+    v = jax.tree_util.tree_map(jnp.zeros_like, pparams)
+    t = jnp.zeros((), jnp.float32)
+    best, best_p, patience = np.inf, pparams, 0
+    rng = np.random.default_rng(1)
+    n = Xtr.shape[0]
+    t0 = time.time()
+    p = pparams
+    for ep in range(TRAIN.pred_epochs):
+        order = rng.permutation(n)
+        for s in range(0, n - bsz + 1, bsz):
+            idx = order[s : s + bsz]
+            p, m, v, t, _ = step(p, m, v, t, Xtr[idx], ytr[idx])
+        vl = float(val_loss(p, Xva, yva))
+        if verbose:
+            print(f"[llm_native] epoch {ep} val L1(log) {vl:.4f}", flush=True)
+        if vl < best - 1e-4:
+            best, best_p, patience = vl, p, 0
+        else:
+            patience += 1
+            if patience >= TRAIN.pred_patience:
+                break
+    train_time = time.time() - t0
+    return best_p, train_time
+
+
+class LlmNativePredictor:
+    name = "llm_native"
+
+    def __init__(self, pparams, train_time_s):
+        self.pparams = pparams
+        self.train_time_s = train_time_s
+
+    def predict(self, arrays):
+        fwd = jax.jit(_mlp_forward_raw)
+        out = []
+        X = jnp.asarray(arrays["hidden"])
+        for s in range(0, X.shape[0], 2048):
+            out.append(np.asarray(target_invert(fwd(self.pparams, X[s : s + 2048]))))
+        return np.clip(np.concatenate(out), 0, None)
+
+    def param_count(self):
+        return int(sum(np.prod(p.shape)
+                       for p in jax.tree_util.tree_leaves(self.pparams)))
+
+
+class OraclePredictor:
+    name = "oracle"
+    train_time_s = 0.0
+
+    def predict(self, arrays):
+        return arrays["remaining"].astype(np.float64)
+
+    def param_count(self):
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# latency measurement (Table 1 right columns)
+
+def measure_latency(fn, reps=50, warmup=5):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def latency_table(llm_native, auxiliary, lm_params):
+    """Per-method prediction latency at batch 1 and 10 (python/jax side;
+    the rust bench re-measures llm_native through the PJRT runtime)."""
+    out = {}
+    rng = np.random.default_rng(0)
+    for bsz in (1, 10):
+        h = jnp.asarray(rng.standard_normal((bsz, MODEL.d_model)), jnp.float32)
+        w = jnp.asarray(rng.integers(0, 256, (bsz, TRAIN.aux_window)), jnp.int32)
+        fwd_n = jax.jit(_mlp_forward_raw)
+        fwd_n(llm_native.pparams, h).block_until_ready()
+        out[f"llm_native_b{bsz}"] = measure_latency(
+            lambda: fwd_n(llm_native.pparams, h).block_until_ready())
+        from .baselines import _aux_forward
+        fwd_a = jax.jit(_aux_forward)
+        fwd_a(auxiliary.params, w).block_until_ready()
+        out[f"auxiliary_b{bsz}"] = measure_latency(
+            lambda: fwd_a(auxiliary.params, w).block_until_ready())
+        # PiA analog: one full-LM forward over the context (prompt method
+        # re-runs the target model) — cost of one prefill pass.
+        toks = jnp.asarray(rng.integers(0, 256, (1, MODEL.max_prompt)), jnp.int32)
+        plen = jnp.asarray([MODEL.max_prompt], jnp.int32)
+        pre = jax.jit(lambda p, t, l: M.prefill(p, t, l)[0])
+        pre(lm_params, toks, plen).block_until_ready()
+        per = measure_latency(
+            lambda: pre(lm_params, toks, plen).block_until_ready(), reps=20)
+        out[f"prompt_only_b{bsz}"] = per * bsz  # sequential per request
+    return out
+
+
+# ---------------------------------------------------------------------------
+# evaluation: MAE + Fig 7 buckets
+
+def evaluate(methods, test_arrays, long_threshold=None):
+    y = test_arrays["remaining"].astype(np.float64)
+    total = test_arrays["remaining"] + test_arrays["gen_sofar"]
+    res = {"table1": {}, "fig7": {}}
+    for meth in methods:
+        pred = meth.predict(test_arrays)
+        mae = float(np.mean(np.abs(pred - y)))
+        res["table1"][meth.name] = {
+            "parameters": meth.param_count(),
+            "train_time_s": round(meth.train_time_s, 2),
+            "mae": round(mae, 2),
+        }
+    # Fig 7: long-output requests only (paper: 30-32K of 32K; here the top
+    # band of our 512-token scale), MAE bucketed by generated-so-far.
+    if long_threshold is None:
+        long_threshold = 0.6 * float(total.max())
+    sel = total >= long_threshold
+    buckets = np.unique(test_arrays["gen_sofar"][sel] // 64)
+    for meth in methods:
+        pred = meth.predict(test_arrays)
+        series = []
+        for b in buckets:
+            m = sel & (test_arrays["gen_sofar"] // 64 == b)
+            if m.sum() >= 5:
+                series.append([int(b * 64),
+                               round(float(np.mean(np.abs(pred[m] - y[m]))), 2),
+                               int(m.sum())])
+        res["fig7"][meth.name] = series
+    res["fig7_long_threshold"] = float(long_threshold)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# main pipeline
+
+def run(lm_params, out_dir="../artifacts", verbose=True):
+    t_all = time.time()
+    import os
+    cache = f"{out_dir}/predictor_dataset.npz"
+    if os.path.exists(cache):
+        if verbose:
+            print(f"[train_predictor] cached dataset: {cache}", flush=True)
+        data = np.load(cache)
+        req_lengths = data["req_lengths"]
+        records = []
+        for i in range(len(data["remaining"])):
+            records.append({
+                "req": int(data["req"][i]), "tag": int(data["tag"][i]),
+                "gen_sofar": int(data["gen_sofar"][i]),
+                "remaining": int(data["remaining"][i]),
+                "hidden": data["hidden"][i], "window": data["window"][i],
+            })
+    else:
+        records, req_lengths, req_tags = generate_requests(lm_params,
+                                                           verbose=verbose)
+        arrs = to_arrays(records)
+        np.savez_compressed(cache, req_lengths=req_lengths, **arrs)
+    splits = split_records(records, len(req_lengths))
+    arrays = {k: to_arrays(v) for k, v in splits.items()}
+    if verbose:
+        print(f"[train_predictor] dataset: "
+              f"{ {k: len(v) for k, v in splits.items()} }", flush=True)
+
+    pparams, tt = train_llm_native(arrays["train"], arrays["val"],
+                                   verbose=verbose)
+    llm_native = LlmNativePredictor(pparams, tt)
+    auxiliary = AuxiliaryPredictor().fit(arrays["train"], arrays["val"],
+                                         verbose=verbose)
+    prompt_only = PromptMeanPredictor().fit(arrays["train"])
+    oracle = OraclePredictor()
+
+    methods = [prompt_only, auxiliary, llm_native, oracle]
+    res = evaluate(methods, arrays["test"])
+    res["latency_ms"] = latency_table(llm_native, auxiliary, lm_params)
+    res["dataset"] = {
+        "n_requests": int(len(req_lengths)),
+        "n_samples": int(len(records)),
+        "output_len_mean": float(np.mean(req_lengths)),
+        "output_len_p50": float(np.percentile(req_lengths, 50)),
+        "output_len_p90": float(np.percentile(req_lengths, 90)),
+        "output_len_p95": float(np.percentile(req_lengths, 95)),
+        "output_len_max": int(req_lengths.max()),
+    }
+    base = res["table1"]["auxiliary"]["mae"]
+    ours = res["table1"]["llm_native"]["mae"]
+    res["mae_reduction_vs_auxiliary_pct"] = round(100 * (1 - ours / base), 2)
+
+    # persist
+    np.savez(f"{out_dir}/predictor_params.npz",
+             **{f"w{i+1}": np.asarray(w) for i, w in enumerate(pparams["ws"])},
+             **{f"b{i+1}": np.asarray(b) for i, b in enumerate(pparams["bs"])})
+    with open(f"{out_dir}/predictor_eval.json", "w") as f:
+        json.dump(res, f, indent=2)
+    with open(f"{out_dir}/predictor_eval.tsv", "w") as f:
+        for name, row in res["table1"].items():
+            f.write(f"table1\t{name}\t{row['parameters']}\t"
+                    f"{row['train_time_s']}\t{row['mae']}\n")
+        for name, series in res["fig7"].items():
+            if not isinstance(series, list):
+                continue
+            for gen, mae, n in series:
+                f.write(f"fig7\t{name}\t{gen}\t{mae}\t{n}\n")
+        for k, v in res["latency_ms"].items():
+            f.write(f"latency\t{k}\t{round(v, 4)}\n")
+        for k, v in res["dataset"].items():
+            f.write(f"dataset\t{k}\t{v}\n")
+    if verbose:
+        print(f"[train_predictor] done in {time.time()-t_all:.0f}s; "
+              f"MAE reduction vs auxiliary: "
+              f"{res['mae_reduction_vs_auxiliary_pct']}%", flush=True)
+    return pparams, res
+
+
+if __name__ == "__main__":
+    from .train_lm import load_params
+    lm = load_params("../artifacts/lm_params.npz")
+    run(lm)

@@ -1,0 +1,67 @@
+"""Corpus invariants: the synthetic reasoning-trace language must have the
+length structure the prediction experiments rely on (tag-dependent
+expected length; plan prefix consistent with paragraph count)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import CORPUS, MODEL
+from compile.corpus import (expected_length_by_tag, make_prompt,
+                            make_response, make_training_batch)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tag=st.integers(0, 15), seed=st.integers(0, 2**31 - 1))
+def test_prompt_shape(tag, seed):
+    rng = np.random.default_rng(seed)
+    p = make_prompt(rng, tag)
+    assert p[0] == CORPUS.bos
+    assert p[1] == CORPUS.q_byte
+    assert p[2] == CORPUS.tag_bytes[tag]
+    assert p[-1] == CORPUS.sep_byte
+    assert len(p) <= MODEL.max_prompt
+
+
+@settings(max_examples=30, deadline=None)
+@given(tag=st.integers(0, 15), seed=st.integers(0, 2**31 - 1))
+def test_response_plan_matches_paragraphs(tag, seed):
+    rng = np.random.default_rng(seed)
+    r = make_response(rng, tag)
+    assert r[-1] == CORPUS.eos
+    body = bytes(b for b in r[:-1])
+    # plan prefix: "p:" + stars + newline
+    assert body.startswith(b"p:")
+    stars = body[2:].split(b"\n")[0]
+    assert set(stars) <= {ord("*")}
+    n_planned = len(stars)
+    n_paragraphs = body.count(bytes([CORPUS.step_byte, CORPUS.colon_byte]))
+    # truncation can cut paragraphs; otherwise plan == execution
+    if len(r) < MODEL.max_seq - 40:
+        assert n_paragraphs == n_planned, body
+
+
+def test_tag_controls_expected_length():
+    rng = np.random.default_rng(0)
+    mean_len = []
+    for tag in [0, 15]:
+        lens = [len(make_response(rng, tag, max_len=10_000)) for _ in range(300)]
+        mean_len.append(np.mean(lens))
+    assert mean_len[1] > 4 * mean_len[0], mean_len
+    # matches the analytic expectation within 15%
+    analytic = expected_length_by_tag()
+    assert abs(mean_len[0] - analytic[0]) / analytic[0] < 0.2
+    assert abs(mean_len[1] - analytic[15]) / analytic[15] < 0.2
+
+
+def test_training_batch_shapes_and_mask():
+    rng = np.random.default_rng(1)
+    toks, mask = make_training_batch(rng, 4, 256)
+    assert toks.shape == (4, 256)
+    assert mask.shape == (4, 255)
+    assert toks.dtype == np.int32
+    # mask covers exactly the populated positions
+    for b in range(4):
+        n = (toks[b] != 0).sum()
+        # allow EOS=0 inside the sequence end
+        assert mask[b].sum() >= min(n - 1, 1)
+        assert ((toks[b] >= 0) & (toks[b] < 256)).all()

@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; assert_allclose against ref.py is THE
+correctness signal for everything the AOT path bakes into the artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.ffn import ffn
+from compile.kernels.predictor_mlp import predictor_mlp
+
+RTOL = ATOL = 3e-5
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([1, 2, 4]),
+    s_blocks=st.integers(1, 5),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, s_blocks, dh, seed):
+    rng = np.random.default_rng(seed)
+    s = s_blocks * 128
+    q = _arr(rng, b, h, dh)
+    k = _arr(rng, b, h, s, dh)
+    v = _arr(rng, b, h, s, dh)
+    lens = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_ignores_padding():
+    # garbage beyond lens must not affect the output
+    rng = np.random.default_rng(0)
+    b, h, s, dh = 2, 4, 256, 32
+    q = _arr(rng, b, h, dh)
+    k = _arr(rng, b, h, s, dh)
+    v = _arr(rng, b, h, s, dh)
+    lens = jnp.asarray([10, 100], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    k2 = k.at[:, :, 150:, :].set(1e6)  # poison the padding region
+    v2 = v.at[:, :, 150:, :].set(-1e6)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_len_one():
+    rng = np.random.default_rng(1)
+    q = _arr(rng, 1, 4, 32)
+    k = _arr(rng, 1, 4, 128, 32)
+    v = _arr(rng, 1, 4, 128, 32)
+    lens = jnp.asarray([1], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    # attention over a single position == that position's value
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0, :, 0, :]),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_rejects_unaligned_s():
+    rng = np.random.default_rng(2)
+    with pytest.raises(ValueError):
+        decode_attention(_arr(rng, 1, 2, 8), _arr(rng, 1, 2, 100, 8),
+                         _arr(rng, 1, 2, 100, 8), jnp.asarray([5], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# fused FFN
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 17),
+    d=st.sampled_from([32, 128]),
+    f=st.sampled_from([64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(b, d, f, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, b, d)
+    w1, b1 = _arr(rng, d, f, scale=0.1), _arr(rng, f, scale=0.01)
+    w2, b2 = _arr(rng, f, d, scale=0.1), _arr(rng, d, scale=0.01)
+    out = ffn(x, w1, b1, w2, b2)
+    want = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_ffn_batch_padding_roundtrip():
+    # B not a multiple of the row tile: padding must not leak
+    rng = np.random.default_rng(3)
+    d, f = 128, 512
+    w1, b1 = _arr(rng, d, f, scale=0.1), _arr(rng, f, scale=0.01)
+    w2, b2 = _arr(rng, f, d, scale=0.1), _arr(rng, d, scale=0.01)
+    x5 = _arr(rng, 5, d)
+    out5 = ffn(x5, w1, b1, w2, b2)
+    out1 = ffn(x5[2:3], w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out5[2:3]), np.asarray(out1),
+                               rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# predictor MLP
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 20), seed=st.integers(0, 2**31 - 1))
+def test_predictor_mlp_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    dims = [128, 256, 64, 16, 1]
+    ws = [_arr(rng, dims[i], dims[i + 1], scale=0.2) for i in range(4)]
+    bs = [_arr(rng, dims[i + 1], scale=0.01) for i in range(4)]
+    h = _arr(rng, b, 128)
+    out = predictor_mlp(h, ws, bs)
+    want = ref.predictor_mlp_ref(h, ws, bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_predictor_mlp_requires_four_layers():
+    rng = np.random.default_rng(4)
+    ws = [_arr(rng, 8, 8)] * 3
+    bs = [_arr(rng, 8)] * 3
+    with pytest.raises(ValueError):
+        predictor_mlp(_arr(rng, 2, 8), ws, bs)

@@ -1,0 +1,131 @@
+"""L2 correctness: star-pico model invariants.
+
+The load-bearing test is prefill/decode/train-forward consistency: the
+AOT serving path (prefill once + decode steps with KV cache) must produce
+exactly the same logits as the dense training forward.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.configs import MODEL
+
+
+def _params():
+    # module-level cache: init is cheap but jit re-tracing is not
+    global _P
+    try:
+        return _P
+    except NameError:
+        _P = M.init_params(0)
+        return _P
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_decode=st.integers(1, 4))
+def test_prefill_then_decode_matches_train_forward(seed, n_decode):
+    rng = np.random.default_rng(seed)
+    params = _params()
+    plen = int(rng.integers(3, 20))
+    prompt = [1] + rng.integers(2, 256, plen - 1).tolist()
+    nxt = rng.integers(2, 256, n_decode).tolist()
+
+    toks = np.zeros((1, MODEL.max_prompt), np.int32)
+    toks[0, :plen] = prompt
+    logits_p, kv, _hid = M.prefill(params, jnp.asarray(toks),
+                                   jnp.asarray([plen], jnp.int32))
+
+    full = np.array([prompt + nxt], np.int32)
+    want = M.lm_forward_train(params, jnp.asarray(full))
+    np.testing.assert_allclose(np.asarray(logits_p[0]),
+                               np.asarray(want[0, plen - 1]),
+                               rtol=2e-4, atol=2e-4)
+
+    # decode in a batch of 2 with a dummy in slot 1
+    B = 2
+    kvb = jnp.zeros((MODEL.n_layers, 2, B, MODEL.n_heads, MODEL.max_seq,
+                     MODEL.head_dim), jnp.float32)
+    kvb = kvb.at[:, :, 0:1].set(kv)
+    pos = plen
+    for i, t in enumerate(nxt):
+        logits_d, kvb, _h = M.decode_step(
+            params, jnp.asarray([t, 1], jnp.int32),
+            jnp.asarray([pos, 0], jnp.int32), kvb, use_kernels=False)
+        np.testing.assert_allclose(np.asarray(logits_d[0]),
+                                   np.asarray(want[0, plen + i]),
+                                   rtol=2e-3, atol=2e-3)
+        pos += 1
+
+
+def test_decode_kernel_and_ref_paths_agree():
+    # use_kernels=True (Pallas, the AOT path) vs False (jnp oracle path)
+    rng = np.random.default_rng(7)
+    params = _params()
+    B = 4
+    kv = jnp.asarray(rng.standard_normal(
+        (MODEL.n_layers, 2, B, MODEL.n_heads, MODEL.max_seq, MODEL.head_dim)
+    ) * 0.1, jnp.float32)
+    tokens = jnp.asarray(rng.integers(2, 256, B), jnp.int32)
+    pos = jnp.asarray([5, 17, 80, 300], jnp.int32)
+    l1, kv1, h1 = M.decode_step(params, tokens, pos, kv, use_kernels=True)
+    l2, kv2, h2 = M.decode_step(params, tokens, pos, kv, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(kv1), np.asarray(kv2), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_step_writes_kv_at_position_only():
+    rng = np.random.default_rng(8)
+    params = _params()
+    B = 2
+    kv = jnp.zeros((MODEL.n_layers, 2, B, MODEL.n_heads, MODEL.max_seq,
+                    MODEL.head_dim), jnp.float32)
+    tokens = jnp.asarray([65, 66], jnp.int32)
+    pos = jnp.asarray([3, 10], jnp.int32)
+    _, kv2, _ = M.decode_step(params, tokens, pos, kv, use_kernels=False)
+    delta = np.abs(np.asarray(kv2 - kv)).sum(axis=(0, 1, 3, 5))  # [B, S]
+    for b, p in enumerate([3, 10]):
+        nz = np.nonzero(delta[b])[0]
+        assert nz.tolist() == [p], f"slot {b} wrote positions {nz}"
+    _ = rng
+
+
+def test_rope_is_position_sensitive_and_norm_preserving():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((1, 1, 4, 32)), jnp.float32)
+    a = M.rope(x, jnp.asarray([[0]]))
+    b = M.rope(x, jnp.asarray([[5]]))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(a)), np.linalg.norm(np.asarray(b)),
+        rtol=1e-5)
+
+
+def test_param_order_is_stable_and_complete():
+    params = _params()
+    order = M.param_order()
+    assert order[0] == "emb"
+    assert len(order) == len(params)
+    lst = M.params_to_list(params)
+    back = M.params_from_list(lst)
+    for k in params:
+        assert np.array_equal(np.asarray(params[k]), np.asarray(back[k]))
+
+
+def test_predictor_param_roundtrip():
+    pp = M.init_predictor_params(0)
+    lst = M.predictor_params_to_list(pp)
+    assert len(lst) == 8 == len(M.PREDICTOR_PARAM_NAMES)
+    back = M.predictor_params_from_list(lst)
+    for a, b in zip(pp["ws"], back["ws"]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_predictor_forward_nonnegative():
+    pp = M.init_predictor_params(3)
+    rng = np.random.default_rng(11)
+    h = jnp.asarray(rng.standard_normal((16, 128)) * 3, jnp.float32)
+    y = M.predictor_forward(pp, h)
+    assert (np.asarray(y) >= 0).all()

@@ -1,0 +1,86 @@
+//! Fig. 10: end-to-end throughput / goodput / P99 TPOT vs request rate on
+//! ShareGPT and Alpaca, for the paper's four systems. Paper headline:
+//! up to 2.63x goodput and -75.1% P99 TPOT vs the vLLM (dispatch-only)
+//! baseline, largest gains at high load.
+
+use star::bench::scenarios::{large_cluster, paper_scenarios, run_scenario, scaled, trace_for};
+use star::bench::Table;
+use star::metrics::Slo;
+use star::workload::Dataset;
+
+fn main() {
+    let n = scaled(400);
+    let slo = Slo {
+        ttft_s: 1.0,
+        tpot_s: 0.025, // paper: 25 ms for the 7B model
+    };
+    for dataset in [Dataset::ShareGpt, Dataset::Alpaca] {
+        // brackets our substrate's KV-bound equilibrium (~0.375 rps for
+        // 6 decode instances) the way the paper's grid brackets theirs
+        let rps_grid = [0.15, 0.25, 0.35, 0.45];
+        let mut thr = Table::new(
+            &format!("Fig 10 ({}, large cluster): throughput (req/s)", dataset.name()),
+            &["rps", "vLLM", "STAR w/o pred", "STAR w/ pred", "STAR Oracle"],
+        );
+        let mut good = Table::new(
+            &format!("Fig 10 ({}): goodput (req/s, SLO 1s TTFT / 25ms TPOT)", dataset.name()),
+            &["rps", "vLLM", "STAR w/o pred", "STAR w/ pred", "STAR Oracle"],
+        );
+        let mut tpot = Table::new(
+            &format!("Fig 10 ({}): P99 TPOT (ms)", dataset.name()),
+            &["rps", "vLLM", "STAR w/o pred", "STAR w/ pred", "STAR Oracle"],
+        );
+        let mut ooms = Table::new(
+            &format!("Fig 10 ({}): OOM events", dataset.name()),
+            &["rps", "vLLM", "STAR w/o pred", "STAR w/ pred", "STAR Oracle"],
+        );
+        let mut headline: Vec<(f64, f64, f64, f64)> = Vec::new(); // rps, good_vllm, good_star, tpot ratio
+        for &rps in &rps_grid {
+            let exp = large_cluster(dataset, rps, 23);
+            let trace = trace_for(&exp, n);
+            let mut r_thr = vec![format!("{rps:.2}")];
+            let mut r_good = vec![format!("{rps:.2}")];
+            let mut r_tpot = vec![format!("{rps:.2}")];
+            let mut r_oom = vec![format!("{rps:.2}")];
+            let mut gp = Vec::new();
+            let mut tp = Vec::new();
+            for sc in paper_scenarios() {
+                let report = run_scenario(sc, exp.clone(), true, &trace);
+                let m = report.metrics();
+                r_thr.push(format!("{:.4}", m.throughput()));
+                r_good.push(format!("{:.4}", m.goodput(slo)));
+                r_tpot.push(format!("{:.2}", m.p99_tpot_ms()));
+                r_oom.push(report.oom_events.to_string());
+                gp.push(m.goodput(slo));
+                tp.push(m.p99_tpot_ms());
+            }
+            thr.row(&r_thr);
+            good.row(&r_good);
+            tpot.row(&r_tpot);
+            ooms.row(&r_oom);
+            headline.push((rps, gp[0], gp[2], tp[2] / tp[0]));
+        }
+        thr.print();
+        good.print();
+        tpot.print();
+        ooms.print();
+        for (rps, g_v, g_s, t_ratio) in headline {
+            if g_v > 0.0 {
+                println!(
+                    "{} rps {rps:.2}: goodput STARw/pred / vLLM = {:.2}x (paper: up to 2.63x); \
+                     P99 TPOT ratio = {:.2} (paper: -75.1%)",
+                    dataset.name(),
+                    g_s / g_v,
+                    t_ratio
+                );
+            } else {
+                println!(
+                    "{} rps {rps:.2}: vLLM goodput 0 — STAR w/ pred {:.4} req/s",
+                    dataset.name(),
+                    g_s
+                );
+            }
+        }
+        println!();
+    }
+}

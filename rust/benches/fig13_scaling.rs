@@ -1,0 +1,70 @@
+//! Fig. 13: execution-time variance vs cluster size (8..256 decode
+//! instances) at 25 Gbps migration bandwidth, request rate scaled
+//! linearly (0.3 RPS per 8 instances, paper §6.3). Also validates the
+//! §5.2 complexity claim: scheduler decision time < 300 ms at 256
+//! instances.
+
+use star::bench::scenarios::{paper_scenarios, run_scenario, scaled};
+use star::bench::Table;
+use star::config::ExperimentConfig;
+use star::workload::{Dataset, TraceGen};
+
+fn main() {
+    let fast = std::env::var("STAR_BENCH_FAST").is_ok();
+    let sizes: &[usize] = if fast {
+        &[8, 16, 32]
+    } else {
+        &[8, 16, 32, 64, 128, 256]
+    };
+    let duration = if fast { 150.0 } else { 300.0 };
+    let _ = scaled(0);
+
+    let mut t = Table::new(
+        "Fig 13: mean exec-time variance (ms^2) vs cluster size, 25 Gbps",
+        &[
+            "instances",
+            "vLLM",
+            "STAR w/o pred",
+            "STAR w/ pred",
+            "STAR Oracle",
+            "sched max (us)",
+        ],
+    );
+    for &size in sizes {
+        // paper scales 0.3 rps per 8 instances for *their* H800 throughput;
+        // on our calibrated profile the *KV memory* (not compute) is the
+        // binding resource; ~0.5 rps per 8 instances reaches the same
+        // near-capacity dynamic equilibrium
+        let rps = 0.5 * size as f64 / 8.0;
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_prefill = (size / 4).max(1);
+        exp.cluster.n_decode = size;
+        exp.cluster.dataset = Dataset::ShareGpt;
+        exp.cluster.rps = rps;
+        exp.cluster.seed = 53;
+        exp.cluster.kv_capacity_tokens = 160_000;
+        exp.cluster.max_batch = 64;
+        exp.predictor_rel_err = star::bench::scenarios::llm_native_rel_err();
+        let trace = TraceGen::new(Dataset::ShareGpt, rps).generate_for(duration, 53);
+
+        let mut row = vec![size.to_string()];
+        let mut sched_us = 0u64;
+        for sc in paper_scenarios() {
+            let report = run_scenario(sc, exp.clone(), true, &trace);
+            row.push(format!("{:.2}", report.exec_var.sample_mean()));
+            sched_us = sched_us.max(report.scheduler_stats.max_decision_us);
+        }
+        row.push(sched_us.to_string());
+        t.row(&row);
+        println!(
+            "size {size}: {} requests over {duration}s at {rps:.2} rps",
+            trace.len()
+        );
+    }
+    t.print();
+    println!(
+        "paper claims: (1) rescheduling improves load balance at every size; (2) \
+         prediction stays close to oracle as the cluster scales; (3) scheduler \
+         decision time stays below 300 ms even at 256 instances"
+    );
+}

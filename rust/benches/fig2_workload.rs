@@ -1,0 +1,75 @@
+//! Fig. 2 + Table 2: output-length distribution of the synthetic traces,
+//! checked against the paper's published ShareGPT/Alpaca statistics.
+
+use star::bench::Table;
+use star::workload::{Dataset, TraceGen, TraceStats};
+
+fn main() {
+    let n = if std::env::var("STAR_BENCH_FAST").is_ok() {
+        5_000
+    } else {
+        50_000
+    };
+
+    // Table 2 reproduction
+    let mut t = Table::new(
+        "Table 2: workload statistics (paper values in parentheses)",
+        &["Workload", "Metric", "Mean", "Std", "P50", "P90", "P95"],
+    );
+    let paper: &[(&str, [f64; 5], [f64; 5])] = &[
+        (
+            "sharegpt",
+            [305.0, 1053.0, 36.0, 920.0, 1609.0],
+            [7542.0, 12008.0, 1536.0, 32670.0, 32679.0],
+        ),
+        (
+            "alpaca",
+            [11.0, 4.0, 10.0, 15.0, 18.0],
+            [8596.0, 13354.0, 987.0, 32690.0, 32691.0],
+        ),
+    ];
+    for (name, p_in, p_out) in paper {
+        let ds = Dataset::parse(name).unwrap();
+        let trace = TraceGen::new(ds, 1.0).generate(n, 7);
+        let st = TraceStats::from_requests(&trace);
+        for (metric, s, p) in [("Input", &st.input, p_in), ("Output", &st.output, p_out)] {
+            t.row(&[
+                name.to_string(),
+                metric.to_string(),
+                format!("{:.0} ({:.0})", s.mean, p[0]),
+                format!("{:.0} ({:.0})", s.std, p[1]),
+                format!("{:.0} ({:.0})", s.p50, p[2]),
+                format!("{:.0} ({:.0})", s.p90, p[3]),
+                format!("{:.0} ({:.0})", s.p95, p[4]),
+            ]);
+        }
+    }
+    t.print();
+
+    // Fig. 2: output length histogram (fraction per band)
+    let trace = TraceGen::new(Dataset::ShareGpt, 1.0).generate(n, 7);
+    let mut h = Table::new(
+        "Fig 2: ShareGPT output-length distribution",
+        &["band", "fraction", "paper-note"],
+    );
+    let bands: &[(&str, u32, u32, &str)] = &[
+        ("<1K", 0, 1_024, "29.2% < 1K in the paper"),
+        ("1-8K", 1_024, 8_192, ""),
+        ("8-16K", 8_192, 16_384, ""),
+        ("16-30K", 16_384, 30_720, ""),
+        (">30K", 30_720, u32::MAX, "17.3% > 30K in the paper"),
+    ];
+    for (name, lo, hi, note) in bands {
+        let frac = trace
+            .iter()
+            .filter(|r| r.output_len >= *lo && r.output_len < *hi)
+            .count() as f64
+            / trace.len() as f64;
+        h.row(&[
+            name.to_string(),
+            format!("{:.1}%", frac * 100.0),
+            note.to_string(),
+        ]);
+    }
+    h.print();
+}

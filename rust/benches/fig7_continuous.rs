@@ -1,0 +1,89 @@
+//! Fig. 7: prediction MAE for long-output requests as a function of how
+//! many tokens have been generated — the continuous-prediction payoff.
+//! Reads the build-time evaluation (artifacts/predictor_eval.tsv); the
+//! series shape (LLM-native MAE falls as context accumulates; truncated
+//! auxiliary models flatten or regress) is the paper's Fig. 7 claim.
+
+use std::collections::BTreeMap;
+
+use star::bench::Table;
+use star::runtime::artifacts_dir;
+
+fn main() {
+    let dir = match artifacts_dir(None) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("SKIP fig7: {e}");
+            return;
+        }
+    };
+    let eval = std::fs::read_to_string(dir.join("predictor_eval.tsv"))
+        .expect("predictor_eval.tsv (run `make artifacts`)");
+
+    // method -> (gen_tokens -> mae)
+    let mut series: BTreeMap<String, BTreeMap<u64, f64>> = BTreeMap::new();
+    for line in eval.lines() {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.first() == Some(&"fig7") && f.len() >= 4 {
+            series
+                .entry(f[1].to_string())
+                .or_default()
+                .insert(f[2].parse().unwrap_or(0), f[3].parse().unwrap_or(f64::NAN));
+        }
+    }
+    if series.is_empty() {
+        eprintln!("no fig7 rows in predictor_eval.tsv");
+        return;
+    }
+    let buckets: Vec<u64> = series
+        .values()
+        .next()
+        .unwrap()
+        .keys()
+        .copied()
+        .collect();
+    let mut header: Vec<String> = vec!["generated".into()];
+    let methods: Vec<String> = series.keys().cloned().collect();
+    header.extend(methods.iter().cloned());
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Fig 7: MAE vs generated tokens, long-output requests (tokens)",
+        &hdr_refs,
+    );
+    for b in &buckets {
+        let mut row = vec![b.to_string()];
+        for m in &methods {
+            row.push(
+                series[m]
+                    .get(b)
+                    .map(|v| format!("{v:.1}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // shape checks mirroring the paper's reading of the figure
+    for m in &methods {
+        if m == "oracle" {
+            continue;
+        }
+        let s = &series[m];
+        let first = s.values().next().copied().unwrap_or(f64::NAN);
+        let mid = s
+            .iter()
+            .nth(s.len() / 2)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{m:<14} early MAE {first:>8.1} -> mid-generation MAE {mid:>8.1}  \
+             ({})",
+            if mid < first {
+                "improves with context, as in Fig 7"
+            } else {
+                "no improvement"
+            }
+        );
+    }
+}

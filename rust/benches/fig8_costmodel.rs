@@ -1,0 +1,81 @@
+//! Fig. 8: decode iteration time and KV memory vs number of batched
+//! tokens — measured on the REAL stack (star-pico through PJRT), not the
+//! simulator. The linear fit calibrates the simulator's `cpu_measured`
+//! cost profile (written to artifacts/costmodel_cpu.txt).
+
+use std::time::Instant;
+
+use star::bench::Table;
+use star::costmodel::fit_linear;
+use star::runtime::{artifacts_dir, StarRuntime};
+
+fn main() {
+    let dir = match artifacts_dir(None) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("SKIP fig8: {e}");
+            return;
+        }
+    };
+    let rt = StarRuntime::load(&dir).expect("load artifacts");
+    let bucket = *rt.meta.decode_buckets.last().unwrap();
+    let reps = if std::env::var("STAR_BENCH_FAST").is_ok() { 5 } else { 20 };
+
+    // Build a full batch where every sequence has `len` tokens of KV, then
+    // time one decode step. Total batched tokens = bucket * len.
+    let pre = rt.prefill(b"\x01Qcalibration?").expect("prefill");
+    let mut table = Table::new(
+        "Fig 8: decode-iteration cost vs batched tokens (star-pico, PJRT CPU)",
+        &["batched_tokens", "iter_ms", "kv_mbytes"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let lens = [16, 64, 128, 256, 384, 512, 638];
+    for &len in &lens {
+        let mut kv = rt.new_kv_buffer(bucket);
+        for slot in 0..bucket {
+            rt.copy_kv_slot(&pre.kv, 1, 0, &mut kv, bucket, slot).unwrap();
+        }
+        let tokens: Vec<i32> = (0..bucket).map(|i| (i % 200 + 32) as i32).collect();
+        let pos = vec![len as i32; bucket];
+        // warmup
+        let out = rt.decode_step(bucket, &tokens, &pos, &kv).unwrap();
+        kv = out.kv;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let out = rt.decode_step(bucket, &tokens, &pos, &kv).unwrap();
+            kv = out.kv;
+        }
+        let ms = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+        let batched = bucket * len;
+        let kv_mb = batched as f64 * rt.meta.kv_bytes_per_token as f64 / 1e6;
+        table.row(&[
+            batched.to_string(),
+            format!("{ms:.3}"),
+            format!("{kv_mb:.2}"),
+        ]);
+        xs.push(batched as f64);
+        ys.push(ms / 1e3);
+    }
+    table.print();
+
+    let (a, b, r2) = fit_linear(&xs, &ys);
+    println!(
+        "linear fit: iter_s = {a:.6} + {b:.3e} * tokens   (r^2 = {r2:.4})"
+    );
+    println!(
+        "paper claim: iteration time is linear in batched tokens; r^2 >= 0.95 \
+         reproduces the Fig 8 left panel shape => {}",
+        if r2 >= 0.95 { "PASS" } else { "MARGINAL" }
+    );
+    println!(
+        "memory: exactly linear by construction ({} bytes/token), Fig 8 right panel",
+        rt.meta.kv_bytes_per_token
+    );
+
+    // calibration output for the simulator's measured profile
+    let path = dir.join("costmodel_cpu.txt");
+    let body = format!("base_s={a:.9}\nper_token_s={b:.3e}\nr2={r2:.6}\n");
+    std::fs::write(&path, body).expect("write calibration");
+    println!("calibration written to {}", path.display());
+}

@@ -1,0 +1,73 @@
+//! Table 3: prediction-accuracy sensitivity — full predictor vs the
+//! paper's non-uniform 6/4/2-bin quantizations vs no prediction, on the
+//! large cluster. Paper reading: 6-bin retains most of the benefit;
+//! 2-bin is nearly indistinguishable from no prediction.
+
+use star::bench::scenarios::{large_cluster, scaled, sim_params, trace_for};
+use star::bench::Table;
+use star::config::PredictorKind;
+use star::metrics::Slo;
+use star::sim::Simulator;
+use star::workload::Dataset;
+
+fn main() {
+    let n = scaled(400);
+    let rps = 0.35; // near the knee (paper used 0.20 on its hardware)
+    let slo = Slo {
+        ttft_s: 1.0,
+        tpot_s: 0.025,
+    };
+    let settings: Vec<(&str, PredictorKind)> = vec![
+        ("Full", PredictorKind::Oracle),
+        ("6-bin", PredictorKind::Binned(6)),
+        ("4-bin", PredictorKind::Binned(4)),
+        ("2-bin", PredictorKind::Binned(2)),
+        ("No pred.", PredictorKind::None),
+    ];
+
+    let mut t = Table::new(
+        "Table 3: prediction-granularity sensitivity (large cluster, near-knee rps)",
+        &["Setting", "Exec. Var.", "P99 TPOT (ms)", "Goodput", "Goodput Gain"],
+    );
+    let mut base_goodput = None;
+    let mut rows = Vec::new();
+    for (name, kind) in settings {
+        let mut exp = large_cluster(Dataset::ShareGpt, rps, 61);
+        exp.rescheduler.enabled = true;
+        exp.predictor = kind;
+        let trace = trace_for(&exp, n);
+        let report = Simulator::new(sim_params(exp, true), &trace).run();
+        let m = report.metrics();
+        let g = m.goodput(slo);
+        if name == "No pred." {
+            base_goodput = Some(g);
+        }
+        rows.push((
+            name.to_string(),
+            report.exec_var.sample_mean(),
+            m.p99_tpot_ms(),
+            g,
+        ));
+    }
+    let base = base_goodput.unwrap_or(0.0);
+    for (name, ev, tpot, g) in rows {
+        let gain = if base > 0.0 {
+            format!("{:+.2}%", 100.0 * (g / base - 1.0))
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            name,
+            format!("{ev:.3}"),
+            format!("{tpot:.2}"),
+            format!("{g:.4}"),
+            gain,
+        ]);
+    }
+    t.print();
+    println!(
+        "paper: Full 0.163/26.49/0.157; 6-bin keeps most of the benefit; \
+         2-bin ~= No pred. (0.302 vs 0.322 exec var). The *ordering* and the \
+         6-bin~=Full / 2-bin~=None equivalences are the claims under test."
+    );
+}

@@ -1,0 +1,78 @@
+//! Table 4: reprediction-interval tradeoff (paper §5.3 + §6.5) — every
+//! iteration vs every 20 vs every 100 vs none, on the large cluster.
+//! Paper reading: k=20 wins; k=1 pays prediction overhead and triggers
+//! jittery migrations; k=100 goes stale.
+
+use star::bench::scenarios::{large_cluster, scaled, sim_params, trace_for};
+use star::bench::Table;
+use star::config::PredictorKind;
+use star::metrics::Slo;
+use star::sim::Simulator;
+use star::workload::Dataset;
+
+fn main() {
+    let n = scaled(400);
+    let rps = 0.35; // near the knee (paper used 0.20 on its hardware)
+    let slo = Slo {
+        ttft_s: 1.0,
+        tpot_s: 0.025,
+    };
+    let settings: Vec<(&str, Option<u32>)> = vec![
+        ("1 iter", Some(1)),
+        ("20 iter", Some(20)),
+        ("100 iter", Some(100)),
+        ("No pred.", None),
+    ];
+    let mut t = Table::new(
+        "Table 4: prediction-interval tradeoff (large cluster, near-knee rps)",
+        &["Interval", "Exec. Var.", "P99 TPOT (ms)", "Goodput", "Goodput Gain", "migrations"],
+    );
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for (name, k) in settings {
+        let mut exp = large_cluster(Dataset::ShareGpt, rps, 71);
+        exp.rescheduler.enabled = true;
+        match k {
+            Some(k) => {
+                // the simulated LLM-native predictor pays per-call latency
+                exp.predictor = PredictorKind::LlmNative;
+                exp.rescheduler.predict_every_iters = k;
+            }
+            None => exp.predictor = PredictorKind::None,
+        }
+        let trace = trace_for(&exp, n);
+        let report = Simulator::new(sim_params(exp, true), &trace).run();
+        let m = report.metrics();
+        let g = m.goodput(slo);
+        if name == "No pred." {
+            base = g;
+        }
+        rows.push((
+            name.to_string(),
+            report.exec_var.sample_mean(),
+            m.p99_tpot_ms(),
+            g,
+            report.migrations,
+        ));
+    }
+    for (name, ev, tpot, g, migs) in rows {
+        let gain = if base > 0.0 {
+            format!("{:+.2}%", 100.0 * (g / base - 1.0))
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            name,
+            format!("{ev:.3}"),
+            format!("{tpot:.2}"),
+            format!("{g:.4}"),
+            gain,
+            migs.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper: 20-iter interval is best (goodput 0.157 vs 0.148 @1 / 0.145 @100 / \
+         0.142 none); the inverted-U over k is the claim under test"
+    );
+}

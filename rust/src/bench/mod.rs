@@ -1,0 +1,247 @@
+//! Micro/macro benchmark harness (offline substitute for criterion).
+//!
+//! `benches/*.rs` are built with `harness = false` and use [`Bencher`] for
+//! timed sections plus [`Table`] to print the paper's rows. Every bench
+//! binary regenerates one paper table/figure (DESIGN.md §4).
+
+pub mod scenarios;
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} {:>8} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+            self.name,
+            self.iters,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p95_s),
+        )
+    }
+}
+
+/// Human duration formatting (ns/us/ms/s).
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Timed-section benchmark runner with warmup and adaptive iteration count.
+pub struct Bencher {
+    /// Target time to spend measuring each benchmark.
+    pub budget: Duration,
+    pub warmup: Duration,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(2),
+            warmup: Duration::from_millis(200),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration) -> Self {
+        Bencher {
+            budget,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` repeatedly; returns and records the stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // estimate per-iter cost from warmup to size the sample count
+        let per_iter = (w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
+        let iters = ((self.budget.as_secs_f64() / per_iter) as usize).clamp(5, 100_000);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            mean_s: samples.iter().sum::<f64>() / iters as f64,
+            p50_s: samples[iters / 2],
+            p95_s: samples[(iters as f64 * 0.95) as usize % iters],
+            min_s: samples[0],
+            max_s: *samples.last().unwrap(),
+        };
+        println!("{}", stats.render());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Time a single invocation of a long-running section (macro bench).
+    pub fn bench_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<40} 1 run        {}", name, fmt_duration(dt));
+        self.results.push(BenchStats {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: dt,
+            p50_s: dt,
+            p95_s: dt,
+            min_s: dt,
+            max_s: dt,
+        });
+        (out, dt)
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Aligned-column table printer for paper-style result tables.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// TSV export (bench outputs are archived in EXPERIMENTS.md).
+    pub fn to_tsv(&self) -> String {
+        let mut s = self.header.join("\t");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join("\t"));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            budget: Duration::from_millis(50),
+            warmup: Duration::from_millis(5),
+            results: vec![],
+        };
+        let s = b.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.max_s);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "metric_name"]);
+        t.row(&["1".into(), "x".into()]);
+        t.row(&["22".into(), "yyyy".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.lines().count() >= 5);
+        let tsv = t.to_tsv();
+        assert_eq!(tsv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(5e-10).contains("ns"));
+        assert!(fmt_duration(5e-6).contains("us"));
+        assert!(fmt_duration(5e-3).contains("ms"));
+        assert!(fmt_duration(5.0).contains("s"));
+    }
+}

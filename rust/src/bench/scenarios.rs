@@ -1,0 +1,138 @@
+//! Shared experiment scenarios for the paper-reproduction benches: the
+//! four evaluated systems (paper §6.1 baselines) and the two cluster
+//! shapes, so every bench runs the same definitions.
+
+use crate::config::{ExperimentConfig, PredictorKind};
+use crate::coordinator::DispatchPolicy;
+use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
+use crate::sim::{SimParams, SimReport, Simulator};
+use crate::workload::{Dataset, Request, TraceGen};
+
+/// One evaluated system from the paper's §6.1 baseline list.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub rescheduling: bool,
+    pub predictor: PredictorKind,
+}
+
+/// The paper's four systems, in presentation order.
+pub fn paper_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "vLLM",
+            rescheduling: false,
+            predictor: PredictorKind::None,
+        },
+        Scenario {
+            name: "STAR w/o pred",
+            rescheduling: true,
+            predictor: PredictorKind::None,
+        },
+        Scenario {
+            name: "STAR w/ pred",
+            rescheduling: true,
+            predictor: PredictorKind::LlmNative,
+        },
+        Scenario {
+            name: "STAR Oracle",
+            rescheduling: true,
+            predictor: PredictorKind::Oracle,
+        },
+    ]
+}
+
+/// Paper small cluster: 1 prefill + 3 decode RTX 4090D.
+pub fn small_cluster(dataset: Dataset, rps: f64, seed: u64) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_prefill = 1;
+    exp.cluster.n_decode = 3;
+    exp.cluster.dataset = dataset;
+    exp.cluster.rps = rps;
+    exp.cluster.seed = seed;
+    exp.cluster.kv_capacity_tokens = 96_000;
+    exp.cluster.max_batch = 48;
+    exp.predictor_rel_err = llm_native_rel_err();
+    exp
+}
+
+/// Paper large cluster: 2 prefill + 6 decode H800.
+pub fn large_cluster(dataset: Dataset, rps: f64, seed: u64) -> ExperimentConfig {
+    let mut exp = small_cluster(dataset, rps, seed);
+    exp.cluster.n_prefill = 2;
+    exp.cluster.n_decode = 6;
+    exp.cluster.kv_capacity_tokens = 160_000;
+    exp.cluster.max_batch = 64;
+    exp
+}
+
+/// Simulator substrate for a cluster profile.
+pub fn sim_params(exp: ExperimentConfig, h800: bool) -> SimParams {
+    SimParams {
+        exp,
+        dispatch: DispatchPolicy::CurrentLoad,
+        decode_cost: if h800 {
+            DecodeCostModel::paper_h800()
+        } else {
+            DecodeCostModel::paper_4090d()
+        },
+        prefill_cost: PrefillCostModel::paper_4090d(),
+        migration: MigrationCostModel::new_25gbps(128 * 1024),
+        max_sim_time: 100_000.0,
+    }
+}
+
+/// Run one scenario over a trace.
+pub fn run_scenario(
+    scenario: Scenario,
+    mut exp: ExperimentConfig,
+    h800: bool,
+    trace: &[Request],
+) -> SimReport {
+    exp.rescheduler.enabled = scenario.rescheduling;
+    exp.predictor = scenario.predictor;
+    Simulator::new(sim_params(exp, h800), trace).run()
+}
+
+/// Generate the standard trace for a cluster config.
+pub fn trace_for(exp: &ExperimentConfig, n: usize) -> Vec<Request> {
+    TraceGen::new(exp.cluster.dataset, exp.cluster.rps).generate(n, exp.cluster.seed)
+}
+
+/// Relative error of the simulated LLM-native predictor, calibrated from
+/// the build-time evaluation when available (MAE / mean remaining length);
+/// falls back to the paper-informed default 0.5.
+pub fn llm_native_rel_err() -> f64 {
+    let Ok(dir) = crate::runtime::artifacts_dir(None) else {
+        return 0.5;
+    };
+    let Ok(text) = std::fs::read_to_string(dir.join("predictor_eval.tsv")) else {
+        return 0.5;
+    };
+    let mut mae = None;
+    let mut mean_len = None;
+    for line in text.lines() {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() >= 5 && f[0] == "table1" && f[1] == "llm_native" {
+            mae = f[4].parse::<f64>().ok();
+        }
+        if f.len() >= 3 && f[0] == "dataset" && f[1] == "output_len_mean" {
+            mean_len = f[2].parse::<f64>().ok();
+        }
+    }
+    match (mae, mean_len) {
+        // mean *remaining* over a uniform sample of the trajectory is
+        // roughly half the mean total length
+        (Some(m), Some(l)) if l > 0.0 => (m / (l / 2.0)).clamp(0.05, 1.5),
+        _ => 0.5,
+    }
+}
+
+/// Bench-size knob: `STAR_BENCH_FAST=1` shrinks run lengths ~5x.
+pub fn scaled(n: usize) -> usize {
+    if std::env::var("STAR_BENCH_FAST").is_ok() {
+        (n / 5).max(20)
+    } else {
+        n
+    }
+}

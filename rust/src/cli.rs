@@ -1,0 +1,178 @@
+//! Hand-rolled CLI argument parser (offline substitute for clap).
+//!
+//! Grammar: `star <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags are declared by the caller; unknown flags are errors with a hint.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+/// Declarative spec used for validation + help text.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (name, value placeholder, help)
+    pub options: Vec<(&'static str, &'static str, &'static str)>,
+    /// (name, help)
+    pub flags: Vec<(&'static str, &'static str)>,
+}
+
+impl Spec {
+    pub fn render_help(&self) -> String {
+        let mut s = format!("{}\n  {}\n\noptions:\n", self.name, self.about);
+        for (n, ph, h) in &self.options {
+            s.push_str(&format!("  --{n} <{ph}>  {h}\n"));
+        }
+        for (n, h) in &self.flags {
+            s.push_str(&format!("  --{n}  {h}\n"));
+        }
+        s
+    }
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name) against a spec.
+    pub fn parse(argv: &[String], spec: &Spec) -> Result<Args> {
+        let mut out = Args::default();
+        let known_opts: Vec<&str> = spec.options.iter().map(|o| o.0).collect();
+        let known_flags: Vec<&str> = spec.flags.iter().map(|f| f.0).collect();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    if known_opts.contains(&k) {
+                        out.opts.insert(k.to_string(), v.to_string());
+                        continue;
+                    }
+                    return Err(Error::Cli(format!("unknown option --{k}")));
+                }
+                if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                    continue;
+                }
+                if known_opts.contains(&name) {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Cli(format!("option --{name} expects a value"))
+                    })?;
+                    out.opts.insert(name.to_string(), v.clone());
+                    continue;
+                }
+                return Err(Error::Cli(format!(
+                    "unknown flag --{name}\n\n{}",
+                    spec.render_help()
+                )));
+            }
+            out.positionals.push(arg.clone());
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} expects a number, got `{v}`"))),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            name: "star",
+            about: "test",
+            options: vec![("rps", "f64", ""), ("out", "path", "")],
+            flags: vec![("verbose", "")],
+        }
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            &argv(&["serve", "--rps", "0.2", "--verbose", "extra"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.opt("rps"), Some("0.2"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv(&["x", "--rps=0.5"]), &spec()).unwrap();
+        assert!((a.opt_f64("rps", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse(&argv(&["x", "--nope"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["x", "--rps"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&argv(&["x", "--rps", "abc"]), &spec()).unwrap();
+        assert!(a.opt_f64("rps", 0.0).is_err());
+        assert_eq!(a.opt_f64("out", 7.0).unwrap(), 7.0);
+    }
+}

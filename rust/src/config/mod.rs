@@ -1,0 +1,152 @@
+//! Configuration system: a TOML-subset parser (offline substitute for
+//! serde+toml, DESIGN.md §1) plus the typed experiment configs.
+//!
+//! Supported syntax: `[section.sub]` headers, `key = value` with string
+//! ("…"), integer, float, bool, and flat arrays of those; `#` comments.
+
+mod parser;
+mod types;
+
+pub use parser::{parse_toml, Value};
+pub use types::{ClusterConfig, ExperimentConfig, PredictorKind, ReschedulerConfig};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Flat view of a parsed config: dotted-path -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn from_str(text: &str) -> Result<Config> {
+        Ok(Config {
+            map: parse_toml(text)?,
+        })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::config(format!("{}: {e}", path.display())))?;
+        Self::from_str(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn overlay(&mut self, other: Config) {
+        for (k, v) in other.map {
+            self.map.insert(k, v);
+        }
+    }
+
+    /// Set a dotted key from a CLI `--set key=value` string.
+    pub fn set_kv(&mut self, spec: &str) -> Result<()> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("--set expects key=value, got `{spec}`")))?;
+        self.map
+            .insert(k.trim().to_string(), Value::parse_scalar(v.trim()));
+        Ok(())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        match self.map.get(key) {
+            Some(Value::Int(v)) => *v,
+            Some(Value::Float(v)) => *v as i64,
+            _ => default,
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(Value::Float(v)) => *v,
+            Some(Value::Int(v)) => *v as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+
+    pub fn f64_list(&self, key: &str) -> Vec<f64> {
+        match self.map.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Int(i) => Some(*i as f64),
+                    Value::Float(f) => Some(*f),
+                    _ => None,
+                })
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let cfg = Config::from_str(
+            r#"
+# experiment
+[cluster]
+decode_instances = 3
+rps = 0.17
+dataset = "sharegpt"
+[rescheduler]
+enabled = true
+theta = 0.15
+betas = [1.0, 0.5, 0.25]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.i64_or("cluster.decode_instances", 0), 3);
+        assert!((cfg.f64_or("cluster.rps", 0.0) - 0.17).abs() < 1e-12);
+        assert_eq!(cfg.str_or("cluster.dataset", ""), "sharegpt");
+        assert!(cfg.bool_or("rescheduler.enabled", false));
+        assert_eq!(cfg.f64_list("rescheduler.betas"), vec![1.0, 0.5, 0.25]);
+    }
+
+    #[test]
+    fn overlay_and_set() {
+        let mut a = Config::from_str("[x]\nv = 1\nw = 2\n").unwrap();
+        let b = Config::from_str("[x]\nv = 9\n").unwrap();
+        a.overlay(b);
+        assert_eq!(a.i64_or("x.v", 0), 9);
+        assert_eq!(a.i64_or("x.w", 0), 2);
+        a.set_kv("x.v=42").unwrap();
+        assert_eq!(a.i64_or("x.v", 0), 42);
+        assert!(a.set_kv("nonsense").is_err());
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let cfg = Config::from_str("").unwrap();
+        assert_eq!(cfg.i64_or("a.b", 7), 7);
+        assert_eq!(cfg.str_or("a.c", "x"), "x");
+    }
+}

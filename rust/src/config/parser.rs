@@ -1,0 +1,219 @@
+//! Minimal TOML-subset parser. Line-oriented: sections, scalar keys,
+//! flat arrays, `#` comments. Intentionally NOT full TOML (no nested
+//! tables inline, no multiline strings, no dates) — the configs this
+//! project needs are flat.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed scalar or flat array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// Best-effort scalar parse (used for CLI `--set` overrides).
+    pub fn parse_scalar(s: &str) -> Value {
+        let t = s.trim();
+        if let Some(stripped) = t.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            return Value::Str(stripped.to_string());
+        }
+        match t {
+            "true" => return Value::Bool(true),
+            "false" => return Value::Bool(false),
+            _ => {}
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Value::Int(i);
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Value::Float(f);
+        }
+        Value::Str(t.to_string())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
+    let t = raw.trim();
+    if t.is_empty() {
+        return Err(Error::config(format!("line {line_no}: empty value")));
+    }
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(Error::config(format!("line {line_no}: unterminated array")));
+        }
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(&part, line_no)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(stripped) = t.strip_prefix('"') {
+        let Some(body) = stripped.strip_suffix('"') else {
+            return Err(Error::config(format!(
+                "line {line_no}: unterminated string"
+            )));
+        };
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\n", "\n")));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::config(format!(
+        "line {line_no}: cannot parse value `{t}` (bare strings must be quoted)"
+    )))
+}
+
+/// Split an array body on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Parse TOML-subset text into a dotted-path map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[') {
+            let Some(name) = h.strip_suffix(']') else {
+                return Err(Error::config(format!(
+                    "line {line_no}: malformed section header"
+                )));
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(Error::config(format!("line {line_no}: empty section")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(Error::config(format!(
+                "line {line_no}: expected `key = value`, got `{line}`"
+            )));
+        };
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(Error::config(format!("line {line_no}: empty key")));
+        }
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        map.insert(path, parse_value(v, line_no)?);
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let m = parse_toml("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Float(2.5));
+        assert_eq!(m["c"], Value::Str("hi".into()));
+        assert_eq!(m["d"], Value::Bool(true));
+    }
+
+    #[test]
+    fn comments_and_sections() {
+        let m = parse_toml("# top\n[s.t]\nx = 3 # trailing\ny = \"a # b\"\n").unwrap();
+        assert_eq!(m["s.t.x"], Value::Int(3));
+        assert_eq!(m["s.t.y"], Value::Str("a # b".into()));
+    }
+
+    #[test]
+    fn arrays_mixed() {
+        let m = parse_toml("xs = [1, 2.5, \"s\", true]\nempty = []\n").unwrap();
+        match &m["xs"] {
+            Value::Array(v) => {
+                assert_eq!(v.len(), 4);
+                assert_eq!(v[0], Value::Int(1));
+                assert_eq!(v[3], Value::Bool(true));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(m["empty"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        for bad in ["= 1", "[unterminated", "x = [1,2", "x = bare", "x ="] {
+            let err = parse_toml(bad).unwrap_err();
+            assert!(err.to_string().contains("line 1"), "{bad} -> {err}");
+        }
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let m = parse_toml("a = -3\nb = 1e-4\nc = -2.5e2\n").unwrap();
+        assert_eq!(m["a"], Value::Int(-3));
+        assert_eq!(m["b"], Value::Float(1e-4));
+        assert_eq!(m["c"], Value::Float(-250.0));
+    }
+}

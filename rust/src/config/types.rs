@@ -1,0 +1,257 @@
+//! Typed experiment configuration assembled from a [`super::Config`].
+
+use super::Config;
+use crate::workload::Dataset;
+use crate::{Error, Result};
+
+/// Which remaining-length predictor drives the rescheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// No prediction: classification uses current load only
+    /// (the paper's "STAR w/o prediction").
+    None,
+    /// Exact remaining lengths (the paper's "STAR Oracle").
+    Oracle,
+    /// Oracle quantized to n non-uniform bins (paper Table 3: 2/4/6).
+    Binned(u8),
+    /// The trained LLM-native MLP (live runtime: through the HLO
+    /// predictor artifact; simulator: oracle + calibrated relative noise).
+    LlmNative,
+}
+
+impl PredictorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(PredictorKind::None),
+            "oracle" => Ok(PredictorKind::Oracle),
+            "llm_native" | "llm-native" | "native" => Ok(PredictorKind::LlmNative),
+            other => {
+                if let Some(n) = other.strip_suffix("bin").or(other.strip_suffix("-bin")) {
+                    let n: u8 = n
+                        .trim_matches('-')
+                        .parse()
+                        .map_err(|_| Error::config(format!("bad predictor `{other}`")))?;
+                    Ok(PredictorKind::Binned(n))
+                } else {
+                    Err(Error::config(format!(
+                        "unknown predictor `{other}` (none|oracle|llm_native|2bin|4bin|6bin)"
+                    )))
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PredictorKind::None => "none".into(),
+            PredictorKind::Oracle => "oracle".into(),
+            PredictorKind::Binned(n) => format!("{n}bin"),
+            PredictorKind::LlmNative => "llm_native".into(),
+        }
+    }
+
+    pub fn uses_prediction(&self) -> bool {
+        !matches!(self, PredictorKind::None)
+    }
+}
+
+/// STAR rescheduler parameters (paper Alg. 1 + §5.3).
+#[derive(Clone, Debug)]
+pub struct ReschedulerConfig {
+    /// Master switch ("vLLM" baseline = false).
+    pub enabled: bool,
+    /// Scheduling interval in seconds (scheduler loop, Alg. 1 line 3).
+    pub interval_s: f64,
+    /// Overload threshold theta (Alg. 1 lines 14-15).
+    pub theta: f64,
+    /// Prediction horizon H in scheduler intervals.
+    pub horizon: usize,
+    /// Geometric decay of the time weights beta_t = beta_decay^t (Eq. 4).
+    pub beta_decay: f64,
+    /// Reprediction interval in decode iterations (paper §5.3, k=20).
+    pub predict_every_iters: u32,
+    /// Max migrations per scheduling interval (paper: best single move).
+    pub max_migrations_per_interval: usize,
+    /// Safety margin on the target's memory check (fraction of capacity
+    /// kept free over the horizon, Alg. 1 line 21).
+    pub mem_safety_frac: f64,
+}
+
+impl Default for ReschedulerConfig {
+    fn default() -> Self {
+        ReschedulerConfig {
+            enabled: true,
+            interval_s: 1.0,
+            theta: 0.15,
+            horizon: 8,
+            beta_decay: 0.7,
+            predict_every_iters: 20,
+            max_migrations_per_interval: 1,
+            mem_safety_frac: 0.01,
+        }
+    }
+}
+
+/// Cluster + workload shape for one experiment run.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    /// KV capacity per decode instance, tokens.
+    pub kv_capacity_tokens: u64,
+    pub block_tokens: u32,
+    /// Max concurrent sequences per decode batch.
+    pub max_batch: usize,
+    pub dataset: Dataset,
+    pub rps: f64,
+    /// Requests to generate (run ends when all complete).
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        // paper small cluster: 1 prefill + 3 decode
+        ClusterConfig {
+            n_prefill: 1,
+            n_decode: 3,
+            kv_capacity_tokens: 96_000,
+            block_tokens: 16,
+            max_batch: 64,
+            dataset: Dataset::ShareGpt,
+            rps: 0.1,
+            n_requests: 200,
+            seed: 0,
+        }
+    }
+}
+
+/// Fully-resolved experiment config.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub rescheduler: ReschedulerConfig,
+    pub predictor: PredictorKind,
+    /// Relative noise of the simulated LLM-native predictor (calibrated
+    /// from artifacts/predictor_eval.tsv MAE / mean-remaining).
+    pub predictor_rel_err: f64,
+    pub record_traces: bool,
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Result<ExperimentConfig> {
+        let dataset = Dataset::parse(cfg.str_or("cluster.dataset", "sharegpt"))
+            .ok_or_else(|| Error::config("cluster.dataset must be sharegpt|alpaca"))?;
+        let d = ClusterConfig::default();
+        let cluster = ClusterConfig {
+            n_prefill: cfg.i64_or("cluster.n_prefill", d.n_prefill as i64) as usize,
+            n_decode: cfg.i64_or("cluster.n_decode", d.n_decode as i64) as usize,
+            kv_capacity_tokens: cfg.i64_or("cluster.kv_capacity_tokens", d.kv_capacity_tokens as i64)
+                as u64,
+            block_tokens: cfg.i64_or("cluster.block_tokens", d.block_tokens as i64) as u32,
+            max_batch: cfg.i64_or("cluster.max_batch", d.max_batch as i64) as usize,
+            dataset,
+            rps: cfg.f64_or("cluster.rps", d.rps),
+            n_requests: cfg.i64_or("cluster.n_requests", d.n_requests as i64) as usize,
+            seed: cfg.i64_or("cluster.seed", d.seed as i64) as u64,
+        };
+        let rd = ReschedulerConfig::default();
+        let rescheduler = ReschedulerConfig {
+            enabled: cfg.bool_or("rescheduler.enabled", rd.enabled),
+            interval_s: cfg.f64_or("rescheduler.interval_s", rd.interval_s),
+            theta: cfg.f64_or("rescheduler.theta", rd.theta),
+            horizon: cfg.i64_or("rescheduler.horizon", rd.horizon as i64) as usize,
+            beta_decay: cfg.f64_or("rescheduler.beta_decay", rd.beta_decay),
+            predict_every_iters: cfg.i64_or(
+                "rescheduler.predict_every_iters",
+                rd.predict_every_iters as i64,
+            ) as u32,
+            max_migrations_per_interval: cfg.i64_or(
+                "rescheduler.max_migrations_per_interval",
+                rd.max_migrations_per_interval as i64,
+            ) as usize,
+            mem_safety_frac: cfg.f64_or("rescheduler.mem_safety_frac", rd.mem_safety_frac),
+        };
+        let predictor = PredictorKind::parse(cfg.str_or("predictor.kind", "oracle"))?;
+        Ok(ExperimentConfig {
+            cluster,
+            rescheduler,
+            predictor,
+            predictor_rel_err: cfg.f64_or("predictor.rel_err", 0.25),
+            record_traces: cfg.bool_or("experiment.record_traces", false),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.n_decode == 0 {
+            return Err(Error::config("need at least one decode instance"));
+        }
+        if self.cluster.n_prefill == 0 {
+            return Err(Error::config("need at least one prefill instance"));
+        }
+        if !(0.0..=1.0).contains(&self.rescheduler.beta_decay) {
+            return Err(Error::config("beta_decay must be in [0,1]"));
+        }
+        if self.rescheduler.theta < 0.0 {
+            return Err(Error::config("theta must be >= 0"));
+        }
+        if self.cluster.block_tokens == 0 {
+            return Err(Error::config("block_tokens must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+impl Default for PredictorKind {
+    fn default() -> Self {
+        PredictorKind::Oracle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictor_parse_all() {
+        assert_eq!(PredictorKind::parse("none").unwrap(), PredictorKind::None);
+        assert_eq!(PredictorKind::parse("Oracle").unwrap(), PredictorKind::Oracle);
+        assert_eq!(
+            PredictorKind::parse("llm_native").unwrap(),
+            PredictorKind::LlmNative
+        );
+        assert_eq!(PredictorKind::parse("6bin").unwrap(), PredictorKind::Binned(6));
+        assert!(PredictorKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn experiment_from_config_defaults() {
+        let cfg = Config::from_str("").unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.cluster.n_decode, 3);
+        assert!(exp.rescheduler.enabled);
+        exp.validate().unwrap();
+    }
+
+    #[test]
+    fn experiment_from_config_overrides() {
+        let cfg = Config::from_str(
+            "[cluster]\nn_decode = 8\ndataset = \"alpaca\"\n[predictor]\nkind = \"4bin\"\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.cluster.n_decode, 8);
+        assert_eq!(exp.cluster.dataset, Dataset::Alpaca);
+        assert_eq!(exp.predictor, PredictorKind::Binned(4));
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_decode = 0;
+        assert!(exp.validate().is_err());
+        let mut exp = ExperimentConfig::default();
+        exp.rescheduler.beta_decay = 1.5;
+        assert!(exp.validate().is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Prefill→decode dispatch policies (paper §2.2's baselines plus STAR's
+//! prediction-aware variant used at hand-off time).
+
+use super::ClusterSnapshot;
+use crate::InstanceId;
+
+/// Which prefill→decode assignment policy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// vLLM-style round-robin [paper ref 34]: even request *counts*,
+    /// oblivious to per-request workload.
+    RoundRobin,
+    /// Current-load balancing [FlowKV, ref 20]: pick the instance with the
+    /// smallest current KV token load.
+    CurrentLoad,
+    /// STAR hand-off: pick the instance with the smallest *projected*
+    /// load = current + predicted remaining work of its active requests,
+    /// considering the incoming request's own predicted length.
+    PredictedLoad,
+}
+
+impl DispatchPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "round_robin" | "rr" => Some(DispatchPolicy::RoundRobin),
+            "current_load" | "load" => Some(DispatchPolicy::CurrentLoad),
+            "predicted_load" | "predicted" => Some(DispatchPolicy::PredictedLoad),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round_robin",
+            DispatchPolicy::CurrentLoad => "current_load",
+            DispatchPolicy::PredictedLoad => "predicted_load",
+        }
+    }
+}
+
+/// Stateful dispatcher (round-robin needs a cursor).
+#[derive(Clone, Debug)]
+pub struct Dispatcher {
+    pub policy: DispatchPolicy,
+    rr_cursor: usize,
+}
+
+impl Dispatcher {
+    pub fn new(policy: DispatchPolicy) -> Self {
+        Dispatcher {
+            policy,
+            rr_cursor: 0,
+        }
+    }
+
+    /// Choose a decode instance for a request arriving from prefill.
+    ///
+    /// `incoming_tokens` = the request's prompt KV size; `incoming_pred` =
+    /// predicted output length from the prefill-time prediction (None when
+    /// prediction is off). Instances that cannot fit the prompt KV are
+    /// skipped; if none fit, the least-loaded instance is returned anyway
+    /// (admission will queue or OOM there, mirroring vLLM behaviour).
+    pub fn choose(
+        &mut self,
+        snapshot: &ClusterSnapshot,
+        incoming_tokens: u64,
+        incoming_pred: Option<f64>,
+    ) -> InstanceId {
+        let n = snapshot.instances.len();
+        assert!(n > 0, "dispatch with no decode instances");
+        let fits = |idx: usize| snapshot.instances[idx].free_tokens() >= incoming_tokens;
+
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                for off in 0..n {
+                    let idx = (self.rr_cursor + off) % n;
+                    if fits(idx) {
+                        self.rr_cursor = (idx + 1) % n;
+                        return snapshot.instances[idx].id;
+                    }
+                }
+                let idx = self.rr_cursor % n;
+                self.rr_cursor = (idx + 1) % n;
+                snapshot.instances[idx].id
+            }
+            DispatchPolicy::CurrentLoad => {
+                Self::argmin(snapshot, fits, |iv| iv.effective_used() as f64)
+            }
+            DispatchPolicy::PredictedLoad => {
+                let pred = incoming_pred.unwrap_or(0.0);
+                Self::argmin(snapshot, fits, |iv| {
+                    let future: f64 = iv
+                        .requests
+                        .iter()
+                        .map(|r| r.tokens as f64 + r.remaining_or(0.0))
+                        .sum();
+                    future + iv.inbound_reserved_tokens as f64 + pred
+                })
+            }
+        }
+    }
+
+    fn argmin<F, G>(snapshot: &ClusterSnapshot, fits: F, score: G) -> InstanceId
+    where
+        F: Fn(usize) -> bool,
+        G: Fn(&super::InstanceView) -> f64,
+    {
+        let mut best: Option<(f64, InstanceId)> = None;
+        let mut best_any: Option<(f64, InstanceId)> = None;
+        for (idx, iv) in snapshot.instances.iter().enumerate() {
+            let s = score(iv);
+            if best_any.map(|(b, _)| s < b).unwrap_or(true) {
+                best_any = Some((s, iv.id));
+            }
+            if fits(idx) && best.map(|(b, _)| s < b).unwrap_or(true) {
+                best = Some((s, iv.id));
+            }
+        }
+        best.or(best_any).expect("non-empty instance list").1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
+
+    fn snap3(loads: [u64; 3]) -> ClusterSnapshot {
+        ClusterSnapshot {
+            instances: loads
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| inst(i, vec![req(i as u64 + 1, l, None)], 10_000))
+                .collect(),
+            tokens_per_interval: 10.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let snap = snap3([0, 0, 0]);
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let picks: Vec<_> = (0..6).map(|_| d.choose(&snap, 10, None)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_full_instances() {
+        let mut snap = snap3([0, 0, 0]);
+        snap.instances[0].inbound_reserved_tokens = 10_000; // full
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        assert_eq!(d.choose(&snap, 10, None), 1);
+        assert_eq!(d.choose(&snap, 10, None), 2);
+        assert_eq!(d.choose(&snap, 10, None), 1);
+    }
+
+    #[test]
+    fn current_load_picks_least_loaded() {
+        let snap = snap3([500, 100, 300]);
+        let mut d = Dispatcher::new(DispatchPolicy::CurrentLoad);
+        assert_eq!(d.choose(&snap, 10, None), 1);
+    }
+
+    #[test]
+    fn predicted_load_sees_future_work() {
+        // instance 0: small now but huge remaining; instance 1: bigger now
+        // but nearly done.
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 100, Some(5_000.0))], 100_000),
+                inst(1, vec![req(2, 400, Some(10.0))], 100_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut cur = Dispatcher::new(DispatchPolicy::CurrentLoad);
+        let mut pred = Dispatcher::new(DispatchPolicy::PredictedLoad);
+        assert_eq!(cur.choose(&snap, 10, None), 0, "current-load is fooled");
+        assert_eq!(pred.choose(&snap, 10, None), 1, "predicted-load is not");
+    }
+
+    #[test]
+    fn overflow_falls_back_to_least_loaded() {
+        let snap = snap3([9_995, 9_999, 9_997]);
+        let mut d = Dispatcher::new(DispatchPolicy::CurrentLoad);
+        // nothing fits 100 tokens; least-loaded wins anyway
+        assert_eq!(d.choose(&snap, 100, None), 0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            DispatchPolicy::parse("round-robin"),
+            Some(DispatchPolicy::RoundRobin)
+        );
+        assert_eq!(
+            DispatchPolicy::parse("current_load"),
+            Some(DispatchPolicy::CurrentLoad)
+        );
+        assert_eq!(DispatchPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,162 @@
+//! Worker-side future-load pre-simulation (paper §5.2 "Algorithm Design").
+//!
+//! Each worker projects its own token load over the prediction horizon H
+//! once per scheduling interval — O(R·H) — so the scheduler's per-candidate
+//! evaluation is O(H) via incremental source/target updates. This is the
+//! paper's optimized complexity `O(n + |O|·|U|·R_max·H)`.
+//!
+//! Projection model (the same one the paper's simulator uses): during one
+//! scheduling interval every active request generates `g ≈ interval /
+//! avg_iter_time` tokens; a request with predicted remaining N̂(r) ≤ g·t
+//! has completed by step t and frees its KV, contributing 0.
+
+use super::{InstanceView, RequestView};
+
+/// Per-request projected contribution to instance load at steps 0..=H.
+/// `trace[t]` = tokens this request holds at future step t.
+#[derive(Clone, Debug)]
+pub struct FutureLoad {
+    pub trace: Vec<f64>,
+}
+
+impl FutureLoad {
+    /// Project one request. `g` = tokens per interval, `default_remaining`
+    /// = assumed remaining when prediction is off (paper "w/o prediction":
+    /// the scheduler only trusts current state, so the projection holds
+    /// the request's load flat).
+    pub fn of_request(r: &RequestView, g: f64, horizon: usize, default_remaining: Option<f64>) -> FutureLoad {
+        let mut trace = Vec::with_capacity(horizon + 1);
+        trace.push(r.tokens as f64);
+        match r.predicted_remaining.or(default_remaining) {
+            Some(rem) => {
+                for t in 1..=horizon {
+                    let gen = g * t as f64;
+                    if gen >= rem {
+                        trace.push(0.0); // completed and freed
+                    } else {
+                        trace.push(r.tokens as f64 + gen);
+                    }
+                }
+            }
+            None => {
+                // prediction off: assume the request persists at current
+                // load + growth (no completion knowledge)
+                for t in 1..=horizon {
+                    trace.push(r.tokens as f64 + g * t as f64);
+                }
+            }
+        }
+        FutureLoad { trace }
+    }
+}
+
+/// What a worker reports to the scheduler each interval: its identity,
+/// the H-step aggregate load trace, and per-request projections (needed
+/// only for requests that become migration candidates).
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub instance: usize,
+    /// Aggregate projected load: `load[t]` = Σ_r trace_r[t], t in 0..=H.
+    pub load: Vec<f64>,
+    /// Weighted workload w_i = Σ_{t=1..H} β_t · load[t] (Alg. 1 line 13).
+    pub weighted: f64,
+    pub current_tokens: u64,
+    pub kv_capacity_tokens: u64,
+    pub inbound_reserved_tokens: u64,
+}
+
+impl WorkerReport {
+    /// Compute a report from an instance view — the "worker-side
+    /// pre-simulation" step. `betas[t-1]` weights future step t.
+    pub fn compute(
+        view: &InstanceView,
+        g: f64,
+        betas: &[f64],
+        default_remaining: Option<f64>,
+    ) -> WorkerReport {
+        let horizon = betas.len();
+        let mut load = vec![0.0; horizon + 1];
+        for r in &view.requests {
+            let fl = FutureLoad::of_request(r, g, horizon, default_remaining);
+            for (t, v) in fl.trace.iter().enumerate() {
+                load[t] += v;
+            }
+        }
+        let weighted = betas
+            .iter()
+            .enumerate()
+            .map(|(i, b)| b * load[i + 1])
+            .sum();
+        WorkerReport {
+            instance: view.id,
+            load,
+            weighted,
+            current_tokens: view.token_load(),
+            kv_capacity_tokens: view.kv_capacity_tokens,
+            inbound_reserved_tokens: view.inbound_reserved_tokens,
+        }
+    }
+
+    /// Projected free KV headroom at the *worst* point of the horizon
+    /// (used for the target-side memory-safety check, Alg. 1 line 21).
+    pub fn min_free_over_horizon(&self) -> f64 {
+        let peak = self.load.iter().cloned().fold(0.0, f64::max)
+            + self.inbound_reserved_tokens as f64;
+        self.kv_capacity_tokens as f64 - peak
+    }
+}
+
+/// Geometric β schedule β_t = decay^t, t = 1..=H (Eq. 4's weights).
+pub fn beta_schedule(horizon: usize, decay: f64) -> Vec<f64> {
+    (1..=horizon).map(|t| decay.powi(t as i32)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+
+    #[test]
+    fn future_load_completes_and_frees() {
+        let r = req(1, 100, Some(25.0));
+        let fl = FutureLoad::of_request(&r, 10.0, 4, None);
+        // t=0: 100; t=1: 110; t=2: 120; t=3 (gen=30 >= 25): 0
+        assert_eq!(fl.trace, vec![100.0, 110.0, 120.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn future_load_without_prediction_grows_flat() {
+        let r = req(1, 100, None);
+        let fl = FutureLoad::of_request(&r, 10.0, 2, None);
+        assert_eq!(fl.trace, vec![100.0, 110.0, 120.0]);
+    }
+
+    #[test]
+    fn report_aggregates_requests() {
+        let v = inst(0, vec![req(1, 100, Some(1000.0)), req(2, 50, Some(5.0))], 10_000);
+        let betas = beta_schedule(2, 0.5);
+        let rep = WorkerReport::compute(&v, 10.0, &betas, None);
+        // t=0: 150; t=1: 110+0(done: 10>=5)=110; t=2: 120
+        assert_eq!(rep.load, vec![150.0, 110.0, 120.0]);
+        let expect_w = 0.5 * 110.0 + 0.25 * 120.0;
+        assert!((rep.weighted - expect_w).abs() < 1e-9);
+        assert_eq!(rep.current_tokens, 150);
+    }
+
+    #[test]
+    fn min_free_accounts_for_peak_and_reservations() {
+        let mut v = inst(0, vec![req(1, 100, Some(1000.0))], 200);
+        v.inbound_reserved_tokens = 50;
+        let rep = WorkerReport::compute(&v, 30.0, &beta_schedule(2, 1.0), None);
+        // peak load = 160 at t=2, +50 reserved => free = 200-210 = -10
+        assert!((rep.min_free_over_horizon() - (-10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn beta_schedule_geometric() {
+        let b = beta_schedule(3, 0.7);
+        assert!((b[0] - 0.7).abs() < 1e-12);
+        assert!((b[1] - 0.49).abs() < 1e-12);
+        assert!((b[2] - 0.343).abs() < 1e-12);
+    }
+}

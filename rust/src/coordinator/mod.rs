@@ -1,0 +1,149 @@
+//! The STAR coordinator: prefill→decode dispatch policies and the
+//! decode-phase rescheduler (paper §5, Algorithm 1).
+//!
+//! Policy code is pure — it consumes [`ClusterSnapshot`] views and returns
+//! decisions — so the live serving runtime (`crate::serve`) and the
+//! event-driven simulator (`crate::sim`) share exactly the same scheduler,
+//! which is what makes the large-scale simulation results (Fig. 13)
+//! meaningful for the real system.
+
+pub mod dispatch;
+pub mod future_load;
+pub mod rescheduler;
+
+pub use dispatch::{DispatchPolicy, Dispatcher};
+pub use future_load::{FutureLoad, WorkerReport};
+pub use rescheduler::{MigrationDecision, Rescheduler, ReschedulerStats};
+
+use crate::{InstanceId, RequestId};
+
+/// Scheduler-visible state of one active decode request.
+#[derive(Clone, Debug)]
+pub struct RequestView {
+    pub id: RequestId,
+    /// Current token count N(r): prompt + generated so far (KV footprint).
+    pub tokens: u64,
+    /// Predicted remaining generation length N̂(r), if prediction is on.
+    pub predicted_remaining: Option<f64>,
+    /// Set while the request is being migrated (excluded from candidates).
+    pub migrating: bool,
+}
+
+impl RequestView {
+    /// Remaining estimate used by the policies; without prediction the
+    /// scheduler must assume "unknown", modeled as a configurable default.
+    pub fn remaining_or(&self, default: f64) -> f64 {
+        self.predicted_remaining.unwrap_or(default)
+    }
+}
+
+/// Scheduler-visible state of one decode instance.
+#[derive(Clone, Debug)]
+pub struct InstanceView {
+    pub id: InstanceId,
+    pub requests: Vec<RequestView>,
+    pub kv_capacity_tokens: u64,
+    /// Tokens reserved by migrations already in flight toward this
+    /// instance (prevents racing two migrations into the same headroom).
+    pub inbound_reserved_tokens: u64,
+}
+
+impl InstanceView {
+    /// Current token load N_i(B_i) (paper: Σ_r N(r)).
+    pub fn token_load(&self) -> u64 {
+        self.requests.iter().map(|r| r.tokens).sum()
+    }
+
+    pub fn effective_used(&self) -> u64 {
+        self.token_load() + self.inbound_reserved_tokens
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        self.kv_capacity_tokens.saturating_sub(self.effective_used())
+    }
+}
+
+/// A point-in-time view of every decode instance.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterSnapshot {
+    pub instances: Vec<InstanceView>,
+    /// Expected tokens generated per request per scheduling interval
+    /// (interval_s / avg_iter_time): the time base for future-load sim.
+    pub tokens_per_interval: f64,
+}
+
+impl ClusterSnapshot {
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.instances.iter().map(|i| i.token_load()).sum()
+    }
+
+    /// Current cross-instance token-load variance σ₀² (paper Eq. 3).
+    pub fn current_variance(&self) -> f64 {
+        let loads: Vec<f64> = self
+            .instances
+            .iter()
+            .map(|i| i.token_load() as f64)
+            .collect();
+        crate::metrics::snapshot_variance(&loads)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    pub fn req(id: RequestId, tokens: u64, rem: Option<f64>) -> RequestView {
+        RequestView {
+            id,
+            tokens,
+            predicted_remaining: rem,
+            migrating: false,
+        }
+    }
+
+    pub fn inst(id: InstanceId, reqs: Vec<RequestView>, cap: u64) -> InstanceView {
+        InstanceView {
+            id,
+            requests: reqs,
+            kv_capacity_tokens: cap,
+            inbound_reserved_tokens: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn token_load_sums_requests() {
+        let i = inst(0, vec![req(1, 100, None), req(2, 50, None)], 1000);
+        assert_eq!(i.token_load(), 150);
+        assert_eq!(i.free_tokens(), 850);
+    }
+
+    #[test]
+    fn inbound_reservation_reduces_headroom() {
+        let mut i = inst(0, vec![req(1, 100, None)], 1000);
+        i.inbound_reserved_tokens = 800;
+        assert_eq!(i.free_tokens(), 100);
+    }
+
+    #[test]
+    fn snapshot_variance_zero_when_balanced() {
+        let s = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 100, None)], 1000),
+                inst(1, vec![req(2, 100, None)], 1000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        assert_eq!(s.current_variance(), 0.0);
+        assert_eq!(s.total_tokens(), 200);
+    }
+}

@@ -1,0 +1,512 @@
+//! The STAR decode rescheduler — paper Algorithm 1.
+//!
+//! Three phases per scheduling interval:
+//!   1. **Instance classification** (lines 11–16): overloaded = weighted
+//!      future workload above `(1+θ)·w̄`; underloaded = *current* load
+//!      below the same threshold (asymmetric by design: sources are picked
+//!      on where load is going, targets on where memory is now).
+//!   2. **Candidate enumeration** (lines 17–23): per (src,dst) pair keep
+//!      requests whose predicted remaining work amortizes the migration
+//!      (`N̂(r) > C_mig/T̄_exec`) and whose arrival keeps the target
+//!      memory-safe over the horizon.
+//!   3. **Best-feasible selection** (lines 24–34): evaluate each candidate
+//!      by the reduction of time-weighted token-load variance (Eq. 4),
+//!      computed incrementally in O(H) per candidate from the worker-side
+//!      pre-simulations (the paper's optimized complexity).
+//!
+//! One normalization departure from the paper's notation: we divide the
+//! weighted workload by Σβ so `w_i` stays in token units and is directly
+//! comparable with the current-load threshold of line 15 (the paper mixes
+//! the two scales implicitly).
+
+use std::time::Instant;
+
+use super::future_load::{beta_schedule, FutureLoad, WorkerReport};
+use super::ClusterSnapshot;
+use crate::config::ReschedulerConfig;
+use crate::costmodel::MigrationCostModel;
+use crate::{InstanceId, RequestId};
+
+/// One migration chosen by the rescheduler.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MigrationDecision {
+    pub request: RequestId,
+    pub src: InstanceId,
+    pub dst: InstanceId,
+    /// KV tokens to transfer (current N(r)).
+    pub kv_tokens: u64,
+    /// Expected reduction of the Eq. 4 objective.
+    pub var_reduction: f64,
+}
+
+/// Operational counters (exposed by benches; §5.2's <300 ms claim is
+/// checked against `last_decision_us`).
+#[derive(Clone, Debug, Default)]
+pub struct ReschedulerStats {
+    pub intervals: u64,
+    pub migrations: u64,
+    pub candidates_evaluated: u64,
+    pub last_decision_us: u64,
+    pub max_decision_us: u64,
+}
+
+/// The scheduler-side of Algorithm 1. Pure w.r.t. the snapshot: the caller
+/// (live runtime or simulator) executes the returned decisions.
+#[derive(Clone, Debug)]
+pub struct Rescheduler {
+    pub cfg: ReschedulerConfig,
+    betas: Vec<f64>,
+    beta_sum: f64,
+    pub migration: MigrationCostModel,
+    /// Average decode iteration time T̄_exec (updated by the caller from
+    /// measurements; seeds from the cost model).
+    pub avg_iter_s: f64,
+    /// Whether predictions are available (Alg. 1 `usePrediction`).
+    pub use_prediction: bool,
+    /// Assumed remaining length when prediction is off but a number is
+    /// still needed for the amortization check (set to the workload's
+    /// running mean output length by the caller).
+    pub default_remaining: f64,
+    pub stats: ReschedulerStats,
+}
+
+impl Rescheduler {
+    pub fn new(cfg: ReschedulerConfig, migration: MigrationCostModel, use_prediction: bool) -> Self {
+        let betas = beta_schedule(cfg.horizon, cfg.beta_decay);
+        let beta_sum: f64 = betas.iter().sum();
+        Rescheduler {
+            cfg,
+            betas,
+            beta_sum: beta_sum.max(1e-12),
+            migration,
+            avg_iter_s: 0.02,
+            use_prediction,
+            default_remaining: 1000.0,
+            stats: ReschedulerStats::default(),
+        }
+    }
+
+    /// Run one scheduling interval over a snapshot; returns up to
+    /// `max_migrations_per_interval` migrations, best-first.
+    pub fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+        let t0 = Instant::now();
+        self.stats.intervals += 1;
+        let mut decisions = Vec::new();
+
+        let g = snapshot.tokens_per_interval;
+        let default_rem = if self.use_prediction {
+            None
+        } else {
+            Some(self.default_remaining)
+        };
+        let mut reports: Vec<WorkerReport> = snapshot
+            .instances
+            .iter()
+            .map(|v| WorkerReport::compute(v, g, &self.betas, default_rem))
+            .collect();
+
+        for _round in 0..self.cfg.max_migrations_per_interval {
+            match self.decide_one(snapshot, &reports) {
+                None => break,
+                Some(d) => {
+                    // apply the move to the reports so a second migration in
+                    // the same interval sees the updated projection
+                    self.apply_to_reports(snapshot, &mut reports, &d);
+                    decisions.push(d);
+                    self.stats.migrations += 1;
+                }
+            }
+        }
+
+        let us = t0.elapsed().as_micros() as u64;
+        self.stats.last_decision_us = us;
+        self.stats.max_decision_us = self.stats.max_decision_us.max(us);
+        decisions
+    }
+
+    /// Phases 1–3 for a single best migration.
+    fn decide_one(
+        &mut self,
+        snapshot: &ClusterSnapshot,
+        reports: &[WorkerReport],
+    ) -> Option<MigrationDecision> {
+        let n = reports.len();
+        if n < 2 {
+            return None;
+        }
+
+        // ---- Phase 1: instance classification (normalized to tokens) ----
+        // without prediction the scheduler can only trust the current
+        // state (paper: "based on current state only"); with prediction
+        // w_i folds in the β-weighted projected loads.
+        let w: Vec<f64> = if self.use_prediction {
+            reports.iter().map(|r| r.weighted / self.beta_sum).collect()
+        } else {
+            reports.iter().map(|r| r.current_tokens as f64).collect()
+        };
+        let w_bar = w.iter().sum::<f64>() / n as f64;
+        if w_bar <= 0.0 {
+            return None;
+        }
+        let threshold = (1.0 + self.cfg.theta) * w_bar;
+        // memory-pressure trigger (the OOM-prevention half of the paper's
+        // Issue 1): an instance whose (predicted) peak load approaches its
+        // KV capacity is overloaded regardless of the cluster average —
+        // prediction sees the growth *before* it materializes.
+        let mem_hot = |i: usize| -> bool {
+            let rep = &reports[i];
+            let level = if self.use_prediction {
+                rep.load.iter().cloned().fold(0.0, f64::max)
+            } else {
+                rep.load[0]
+            };
+            level > 0.85 * rep.kv_capacity_tokens as f64
+        };
+        let overloaded: Vec<usize> = (0..n)
+            .filter(|&i| w[i] > threshold || mem_hot(i))
+            .collect();
+        let underloaded: Vec<usize> = (0..n)
+            .filter(|&i| (reports[i].current_tokens as f64) < threshold && !mem_hot(i))
+            .collect();
+        if overloaded.is_empty() || underloaded.is_empty() {
+            return None;
+        }
+
+        // ---- precompute per-step sums for O(H) candidate evaluation ----
+        let horizon = self.cfg.horizon;
+        let mut sum = vec![0.0; horizon + 1];
+        let mut sumsq = vec![0.0; horizon + 1];
+        for rep in reports {
+            for t in 0..=horizon {
+                sum[t] += rep.load[t];
+                sumsq[t] += rep.load[t] * rep.load[t];
+            }
+        }
+        // objective weights: t=0 gets weight 1 (σ₀² term of Eq. 4)
+        let weight = |t: usize| if t == 0 { 1.0 } else { self.betas[t - 1] };
+        let var_at = |t: usize, sumsq_t: f64| {
+            let mean = sum[t] / n as f64;
+            (sumsq_t / n as f64 - mean * mean).max(0.0)
+        };
+        let base_obj: f64 = (0..=horizon)
+            .map(|t| weight(t) * var_at(t, sumsq[t]))
+            .sum();
+
+        // migration amortization bound (Alg. 1 line 20)
+        let g = snapshot.tokens_per_interval;
+        let min_remaining = |kv_tokens: u64| {
+            self.migration
+                .overhead_iterations(kv_tokens, self.avg_iter_s)
+        };
+
+        // ---- Phases 2+3 fused: enumerate, filter, evaluate ----
+        let mut best: Option<MigrationDecision> = None;
+        for &s in &overloaded {
+            for &t_i in &underloaded {
+                if s == t_i {
+                    continue;
+                }
+                let dst_rep = &reports[t_i];
+                let dst_cap = dst_rep.kv_capacity_tokens as f64 * (1.0 - self.cfg.mem_safety_frac);
+                for r in &snapshot.instances[s].requests {
+                    if r.migrating {
+                        continue;
+                    }
+                    let rem = if self.use_prediction {
+                        match r.predicted_remaining {
+                            Some(p) => p,
+                            None => continue, // not yet predicted
+                        }
+                    } else {
+                        self.default_remaining
+                    };
+                    // line 20: remaining work must amortize the transfer
+                    if rem <= min_remaining(r.tokens) {
+                        continue;
+                    }
+                    // line 21: target memory safety over the horizon — the
+                    // request arrives with N(r) KV and grows by up to g·H
+                    // (capped by its predicted remaining)
+                    let growth = rem.min(g * horizon as f64);
+                    let peak_dst = dst_rep
+                        .load
+                        .iter()
+                        .cloned()
+                        .fold(0.0, f64::max)
+                        + dst_rep.inbound_reserved_tokens as f64
+                        + r.tokens as f64
+                        + growth;
+                    if peak_dst > dst_cap {
+                        continue;
+                    }
+
+                    self.stats.candidates_evaluated += 1;
+
+                    // O(H) incremental objective with r moved s -> t_i
+                    let fl = FutureLoad::of_request(
+                        r,
+                        g,
+                        horizon,
+                        if self.use_prediction {
+                            None
+                        } else {
+                            Some(self.default_remaining)
+                        },
+                    );
+                    let eval_horizon = if self.use_prediction { horizon } else { 0 };
+                    let mut obj = 0.0;
+                    for t in 0..=horizon {
+                        let c = fl.trace[t];
+                        let ls = reports[s].load[t];
+                        let lt = reports[t_i].load[t];
+                        let new_sumsq = sumsq[t] - ls * ls - lt * lt
+                            + (ls - c) * (ls - c)
+                            + (lt + c) * (lt + c);
+                        if t <= eval_horizon {
+                            obj += weight(t) * var_at(t, new_sumsq);
+                        }
+                    }
+                    // when prediction is off the objective is σ₀² only
+                    // (Alg. 1 line 32: CurrentVariance)
+                    let base = if self.use_prediction {
+                        base_obj
+                    } else {
+                        var_at(0, sumsq[0])
+                    };
+                    let reduction = base - obj;
+                    if reduction > 1e-9
+                        && best
+                            .as_ref()
+                            .map(|b| reduction > b.var_reduction)
+                            .unwrap_or(true)
+                    {
+                        best = Some(MigrationDecision {
+                            request: r.id,
+                            src: snapshot.instances[s].id,
+                            dst: snapshot.instances[t_i].id,
+                            kv_tokens: r.tokens,
+                            var_reduction: reduction,
+                        });
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Mutate the worker reports to reflect an accepted migration, so a
+    /// second decision in the same interval uses updated projections.
+    fn apply_to_reports(
+        &self,
+        snapshot: &ClusterSnapshot,
+        reports: &mut [WorkerReport],
+        d: &MigrationDecision,
+    ) {
+        let (mut s_idx, mut d_idx) = (None, None);
+        for (i, iv) in snapshot.instances.iter().enumerate() {
+            if iv.id == d.src {
+                s_idx = Some(i);
+            }
+            if iv.id == d.dst {
+                d_idx = Some(i);
+            }
+        }
+        let (s_idx, d_idx) = (s_idx.unwrap(), d_idx.unwrap());
+        let r = snapshot.instances[s_idx]
+            .requests
+            .iter()
+            .find(|r| r.id == d.request)
+            .expect("decision request present");
+        let fl = FutureLoad::of_request(
+            r,
+            snapshot.tokens_per_interval,
+            self.cfg.horizon,
+            if self.use_prediction {
+                None
+            } else {
+                Some(self.default_remaining)
+            },
+        );
+        for t in 0..fl.trace.len() {
+            reports[s_idx].load[t] -= fl.trace[t];
+            reports[d_idx].load[t] += fl.trace[t];
+        }
+        reports[s_idx].current_tokens = reports[s_idx].current_tokens.saturating_sub(d.kv_tokens);
+        reports[d_idx].current_tokens += d.kv_tokens;
+        let recompute = |rep: &mut WorkerReport, betas: &[f64]| {
+            rep.weighted = betas
+                .iter()
+                .enumerate()
+                .map(|(i, b)| b * rep.load[i + 1])
+                .sum();
+        };
+        recompute(&mut reports[s_idx], &self.betas);
+        recompute(&mut reports[d_idx], &self.betas);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+
+    fn cfg() -> ReschedulerConfig {
+        ReschedulerConfig {
+            horizon: 4,
+            beta_decay: 0.7,
+            theta: 0.1,
+            ..Default::default()
+        }
+    }
+
+    fn mig() -> MigrationCostModel {
+        // fast link: 1 token of KV = 1 byte so overhead is negligible
+        MigrationCostModel {
+            bandwidth_bps: 1e12,
+            latency_s: 1e-4,
+            bytes_per_token: 1,
+        }
+    }
+
+    fn snapshot(loads: &[Vec<(u64, u64, f64)>]) -> ClusterSnapshot {
+        // per instance: list of (req id, tokens, remaining)
+        ClusterSnapshot {
+            instances: loads
+                .iter()
+                .enumerate()
+                .map(|(i, reqs)| {
+                    inst(
+                        i,
+                        reqs.iter()
+                            .map(|&(id, tok, rem)| req(id, tok, Some(rem)))
+                            .collect(),
+                        1_000_000,
+                    )
+                })
+                .collect(),
+            tokens_per_interval: 50.0,
+        }
+    }
+
+    #[test]
+    fn balanced_cluster_no_migration() {
+        let snap = snapshot(&[
+            vec![(1, 1000, 500.0)],
+            vec![(2, 1000, 500.0)],
+            vec![(3, 1000, 500.0)],
+        ]);
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        assert!(rs.decide(&snap).is_empty());
+    }
+
+    #[test]
+    fn overloaded_instance_sheds_to_underloaded() {
+        let snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0)],
+            vec![(3, 500, 100.0)],
+            vec![(4, 600, 100.0)],
+        ]);
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        let d = &ds[0];
+        assert_eq!(d.src, 0);
+        assert!(d.dst == 1 || d.dst == 2);
+        assert!(d.var_reduction > 0.0);
+    }
+
+    #[test]
+    fn near_complete_requests_not_migrated() {
+        // the only movable request is nearly done: migration cannot amortize
+        let mut m = mig();
+        m.bandwidth_bps = 1e3; // very slow link
+        m.bytes_per_token = 1000;
+        let snap = snapshot(&[
+            vec![(1, 5000, 3.0)], // 3 tokens left
+            vec![(2, 100, 50.0)],
+        ]);
+        let mut rs = Rescheduler::new(cfg(), m, true);
+        assert!(rs.decide(&snap).is_empty());
+    }
+
+    #[test]
+    fn memory_unsafe_target_rejected() {
+        let mut snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0)],
+            vec![(3, 500, 100.0)],
+        ]);
+        snap.instances[1].kv_capacity_tokens = 3400; // cannot take 3000+growth
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        assert!(rs.decide(&snap).is_empty());
+    }
+
+    #[test]
+    fn migrating_requests_excluded() {
+        let mut snap = snapshot(&[
+            vec![(1, 6000, 4000.0)],
+            vec![(2, 100, 50.0)],
+        ]);
+        snap.instances[0].requests[0].migrating = true;
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        assert!(rs.decide(&snap).is_empty());
+    }
+
+    #[test]
+    fn without_prediction_uses_current_variance() {
+        let snap = snapshot(&[
+            vec![(1, 4000, 10_000.0), (2, 2000, 10.0)],
+            vec![(3, 500, 10.0)],
+        ]);
+        let mut rs = Rescheduler::new(cfg(), mig(), false);
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        // current-variance objective moves the request that best balances
+        // *current* tokens: moving 2000 gives loads (4000, 2500) vs moving
+        // 4000 giving (2000, 4500); the former is better.
+        assert_eq!(ds[0].request, 2);
+    }
+
+    #[test]
+    fn with_prediction_prefers_long_remaining() {
+        // two equal-size requests; one nearly done, one with huge remaining.
+        // Future-aware selection should move the long one (the short one's
+        // load disappears on its own).
+        let snap = snapshot(&[
+            vec![(1, 3000, 10_000.0), (2, 3000, 60.0)],
+            vec![(3, 500, 10.0)],
+        ]);
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].request, 1, "should migrate the long-remaining request");
+    }
+
+    #[test]
+    fn multi_migration_interval_updates_reports() {
+        let mut c = cfg();
+        c.max_migrations_per_interval = 2;
+        let snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0), (3, 3000, 4000.0)],
+            vec![(4, 100, 50.0)],
+            vec![(5, 100, 50.0)],
+        ]);
+        let mut rs = Rescheduler::new(c, mig(), true);
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 2);
+        // the two moves must go to different targets (reports updated)
+        assert_ne!(ds[0].dst, ds[1].dst);
+    }
+
+    #[test]
+    fn stats_track_decisions() {
+        let snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0)],
+            vec![(3, 100, 50.0)],
+        ]);
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        let _ = rs.decide(&snap);
+        assert_eq!(rs.stats.intervals, 1);
+        assert!(rs.stats.candidates_evaluated > 0);
+        assert!(rs.stats.migrations <= 1);
+    }
+}

@@ -1,0 +1,219 @@
+//! Decode cost model (paper §5.2, Fig. 8): iteration time and memory are
+//! both linear in the number of batched tokens, which is what lets the
+//! scheduler unify "workload" as a token count.
+//!
+//! The simulator consumes a [`DecodeCostModel`]; the live stack *measures*
+//! one via [`fit_linear`] on (batched_tokens, seconds) pairs collected by
+//! the `fig8_costmodel` bench, and the paper-scale profile anchors to the
+//! published 18.23 ms @ 50% KV occupancy on an RTX 4090D.
+
+/// Linear decode-iteration time model: `t(x) = base + per_token * x`
+/// where x = total tokens across the running batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeCostModel {
+    /// Fixed per-iteration cost (kernel launch, dequeue, sampling), seconds.
+    pub base_s: f64,
+    /// Marginal cost per batched token (KV read bandwidth), seconds.
+    pub per_token_s: f64,
+    /// Per-request fixed overhead within a batch (projections), seconds.
+    pub per_seq_s: f64,
+}
+
+impl DecodeCostModel {
+    /// Iteration latency for a batch with `tokens` total tokens across
+    /// `seqs` sequences.
+    #[inline]
+    pub fn iter_time(&self, tokens: u64, seqs: usize) -> f64 {
+        self.base_s + self.per_token_s * tokens as f64 + self.per_seq_s * seqs as f64
+    }
+
+    /// Paper-scale profile: DeepSeek-R1-Distill-Qwen-7B on RTX 4090D.
+    /// Anchor (paper §5.3): 18.23 ms per iteration at 50% KV occupancy.
+    /// With the small-cluster config (~48K tokens of KV at 50%), that
+    /// yields ~0.35 us/token; base covers launch+sampling overhead.
+    pub fn paper_4090d() -> Self {
+        let occupancy_tokens = 48_000.0 * 0.5;
+        let base_s = 2.0e-3;
+        let per_token_s = (18.23e-3 - base_s) / occupancy_tokens;
+        DecodeCostModel {
+            base_s,
+            per_token_s,
+            per_seq_s: 2.0e-5,
+        }
+    }
+
+    /// Large-cluster profile (H800): ~3x the 4090D token bandwidth.
+    pub fn paper_h800() -> Self {
+        let m = Self::paper_4090d();
+        DecodeCostModel {
+            base_s: 1.5e-3,
+            per_token_s: m.per_token_s / 3.0,
+            per_seq_s: 1.0e-5,
+        }
+    }
+}
+
+/// Prefill cost model: one compute-bound pass, superlinear in prompt
+/// length (attention is O(p^2) but FFN O(p) dominates at short p).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefillCostModel {
+    pub base_s: f64,
+    pub per_token_s: f64,
+    pub per_token_sq_s: f64,
+}
+
+impl PrefillCostModel {
+    #[inline]
+    pub fn time(&self, prompt_tokens: u64) -> f64 {
+        let p = prompt_tokens as f64;
+        self.base_s + self.per_token_s * p + self.per_token_sq_s * p * p
+    }
+
+    /// Anchored to DistServe-style numbers: ~1s TTFT budget for 4K prompts.
+    pub fn paper_4090d() -> Self {
+        PrefillCostModel {
+            base_s: 5.0e-3,
+            per_token_s: 1.2e-4,
+            per_token_sq_s: 6.0e-9,
+        }
+    }
+}
+
+/// KV memory model: bytes per cached token (fixed for a model config).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvMemoryModel {
+    pub bytes_per_token: u64,
+    pub capacity_bytes: u64,
+}
+
+impl KvMemoryModel {
+    pub fn capacity_tokens(&self) -> u64 {
+        self.capacity_bytes / self.bytes_per_token
+    }
+
+    /// Paper small cluster: 4090D 24 GB, 7B model W8A8; the paper reports
+    /// 32K-token requests fitting with batch; KV ~ 0.18 MB/token for
+    /// 7B-class models => ~2 KB/token/layer... we use the derived value
+    /// that yields ~96K tokens of KV per instance.
+    pub fn paper_4090d() -> Self {
+        KvMemoryModel {
+            bytes_per_token: 128 * 1024, // fp8 KV, 28 layers, d~3.5K
+            capacity_bytes: 12u64 << 30, // KV share of 24 GB
+        }
+    }
+}
+
+/// Migration cost model (paper §5.4): asynchronous KV transfer over the
+/// inter-instance fabric, overlapped with decode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationCostModel {
+    /// Link bandwidth in bytes/second (paper Fig. 13: 25 Gbps).
+    pub bandwidth_bps: f64,
+    /// Fixed handoff latency (connection + pause/resume), seconds.
+    pub latency_s: f64,
+    pub bytes_per_token: u64,
+}
+
+impl MigrationCostModel {
+    pub fn new_25gbps(bytes_per_token: u64) -> Self {
+        MigrationCostModel {
+            bandwidth_bps: 25.0e9 / 8.0,
+            latency_s: 5.0e-3,
+            bytes_per_token,
+        }
+    }
+
+    /// Wall time to transfer `tokens` of KV cache.
+    #[inline]
+    pub fn transfer_time(&self, tokens: u64) -> f64 {
+        self.latency_s + (tokens * self.bytes_per_token) as f64 / self.bandwidth_bps
+    }
+
+    /// Migration overhead expressed in decode iterations (Alg. 1 line 20:
+    /// a candidate must have `N̂(r) > C_mig / T̄_exec` remaining tokens for
+    /// the move to amortize).
+    #[inline]
+    pub fn overhead_iterations(&self, tokens: u64, avg_iter_s: f64) -> f64 {
+        if avg_iter_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.transfer_time(tokens) / avg_iter_s
+    }
+}
+
+/// Ordinary least squares fit of y = a + b x; returns (a, b, r2).
+/// Used to calibrate [`DecodeCostModel`] from measured iteration times.
+pub fn fit_linear(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let a = my - b * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (a + b * x)).powi(2))
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iter_time_linear_in_tokens() {
+        let m = DecodeCostModel {
+            base_s: 1e-3,
+            per_token_s: 1e-6,
+            per_seq_s: 0.0,
+        };
+        let t1 = m.iter_time(1000, 4);
+        let t2 = m.iter_time(2000, 4);
+        let t3 = m.iter_time(3000, 4);
+        assert!(((t2 - t1) - (t3 - t2)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn paper_anchor_matches() {
+        let m = DecodeCostModel::paper_4090d();
+        let t = m.iter_time(24_000, 0);
+        assert!((t - 18.23e-3).abs() < 1e-4, "t {t}");
+    }
+
+    #[test]
+    fn fit_recovers_known_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.002 + 3e-6 * x).collect();
+        let (a, b, r2) = fit_linear(&xs, &ys);
+        assert!((a - 0.002).abs() < 1e-9);
+        assert!((b - 3e-6).abs() < 1e-12);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn migration_time_scales_with_tokens() {
+        let m = MigrationCostModel::new_25gbps(128 * 1024);
+        let t_short = m.transfer_time(1_000);
+        let t_long = m.transfer_time(30_000);
+        assert!(t_long > t_short * 10.0);
+        // 30K tokens * 128KB = 3.84 GB over 25 Gbps ~ 1.23 s + latency
+        assert!((t_long - (5e-3 + 3.932e9 / 3.125e9)).abs() < 0.01, "{t_long}");
+    }
+
+    #[test]
+    fn overhead_iterations_guard() {
+        let m = MigrationCostModel::new_25gbps(1024);
+        assert!(m.overhead_iterations(100, 0.0).is_infinite());
+        let it = m.overhead_iterations(10_000, 0.018);
+        assert!(it > 0.0 && it.is_finite());
+    }
+}

@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for runtime, config, and coordination failures.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA failures surfaced from the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Artifact files missing or malformed (run `make artifacts`).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Configuration parse or validation failure.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// KV-cache capacity exhausted on an instance (paper Issue 1).
+    #[error("kv cache OOM on instance {instance}: need {need} blocks, free {free}")]
+    KvOom {
+        instance: usize,
+        need: usize,
+        free: usize,
+    },
+
+    /// Request routing / lifecycle violation (bug or shutdown race).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// I/O with context.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// CLI usage error.
+    #[error("cli: {0}")]
+    Cli(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+}

@@ -1,0 +1,46 @@
+//! # STAR — decode-phase rescheduling for LLM inference
+//!
+//! A from-scratch reproduction of *"STAR: Decode-Phase Rescheduling for LLM
+//! Inference"* (HPDC '26) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile/` authors the star-pico
+//!   transformer and its Pallas decode kernels, trains the LLM-native
+//!   remaining-length predictor, and AOT-lowers everything to HLO text in
+//!   `artifacts/`.
+//! * **L3 (this crate, the request path)** — a prefill/decode-disaggregated
+//!   serving coordinator: instance pools with continuous batching, a paged
+//!   KV-cache manager with OOM semantics, prefill→decode dispatch policies,
+//!   and the STAR decode rescheduler (paper Algorithm 1) with live KV
+//!   migration; plus an event-driven cluster simulator that reuses the same
+//!   policy code for 8–256-instance experiments.
+//!
+//! Python never runs at serving time: [`runtime`] loads the HLO artifacts
+//! through the PJRT C API (`xla` crate) and the binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod error;
+pub mod kvcache;
+pub mod metrics;
+pub mod predictor;
+pub mod prng;
+pub mod prop;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Identifier of a request, unique per run.
+pub type RequestId = u64;
+/// Index of a decode (or prefill) instance within its pool.
+pub type InstanceId = usize;
+/// Simulation / wall-clock time in seconds.
+pub type Time = f64;

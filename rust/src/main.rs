@@ -1,0 +1,273 @@
+//! `star` — CLI launcher for the STAR serving stack.
+//!
+//! Subcommands:
+//!   check      load + smoke-test the AOT artifacts
+//!   workload   print Table-2-style statistics for a synthetic trace
+//!   simulate   run the event-driven cluster simulator (paper §6.3)
+//!   serve      run the live PD-disaggregated server on star-pico
+//!
+//! Most options can also be set from a TOML config (`--config path`) with
+//! CLI flags winning.
+
+use std::sync::Arc;
+
+use star::cli::{Args, Spec};
+use star::config::{Config, ExperimentConfig, PredictorKind};
+use star::coordinator::DispatchPolicy;
+use star::metrics::Slo;
+use star::runtime::{artifacts_dir, StarRuntime};
+use star::serve::{LiveRequest, ServeParams, Server};
+use star::sim::{SimParams, Simulator};
+use star::workload::{Dataset, TraceGen, TraceStats};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = spec();
+    let args = match Args::parse(&argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_str() {
+        "check" => run_check(&args),
+        "workload" => run_workload(&args),
+        "simulate" => run_simulate(&args),
+        "serve" => run_serve(&args),
+        "" | "help" => {
+            println!("{}", spec.render_help());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n\n{}", spec.render_help());
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn spec() -> Spec {
+    Spec {
+        name: "star",
+        about: "STAR: decode-phase rescheduling for LLM inference (HPDC'26 reproduction)",
+        options: vec![
+            ("config", "path", "TOML config file"),
+            ("set", "k=v", "override one config key (comma-separated list)"),
+            ("artifacts", "dir", "artifacts directory (default: ./artifacts)"),
+            ("dataset", "name", "sharegpt|alpaca (default sharegpt)"),
+            ("rps", "f", "request rate per second"),
+            ("requests", "n", "number of requests"),
+            ("decode", "n", "decode instances"),
+            ("prefill", "n", "prefill instances"),
+            ("kv-capacity", "tokens", "KV capacity per decode instance"),
+            ("policy", "name", "baseline: vllm | star | star-nopred | oracle"),
+            ("dispatch", "name", "round_robin | current_load | predicted_load"),
+            ("predictor", "name", "none|oracle|llm_native|2bin|4bin|6bin"),
+            ("interval", "s", "rescheduler interval seconds"),
+            ("seed", "n", "PRNG seed"),
+            ("duration", "s", "trace duration (simulate)"),
+            ("trace-out", "path", "write event trace TSV"),
+        ],
+        flags: vec![
+            ("verbose", "chatty progress"),
+            ("traces", "record runtime traces"),
+        ],
+    }
+}
+
+/// Map a `--policy` name onto (rescheduler enabled, predictor kind).
+fn policy_of(args: &Args) -> Result<(bool, Option<PredictorKind>), star::Error> {
+    match args.opt("policy") {
+        None => Ok((true, None)),
+        Some("vllm") => Ok((false, Some(PredictorKind::None))),
+        Some("star-nopred") => Ok((true, Some(PredictorKind::None))),
+        Some("star") => Ok((true, None)),
+        Some("oracle") => Ok((true, Some(PredictorKind::Oracle))),
+        Some(other) => Err(star::Error::Cli(format!(
+            "unknown policy `{other}` (vllm|star|star-nopred|oracle)"
+        ))),
+    }
+}
+
+fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => Config::from_file(std::path::Path::new(p))?,
+        None => Config::from_str("")?,
+    };
+    if let Some(sets) = args.opt("set") {
+        for kv in sets.split(',') {
+            cfg.set_kv(kv)?;
+        }
+    }
+    let mut exp = ExperimentConfig::from_config(&cfg)?;
+    if let Some(d) = args.opt("dataset") {
+        exp.cluster.dataset = Dataset::parse(d)
+            .ok_or_else(|| star::Error::Cli(format!("bad dataset `{d}`")))?;
+    }
+    exp.cluster.rps = args.opt_f64("rps", exp.cluster.rps)?;
+    exp.cluster.n_requests = args.opt_usize("requests", exp.cluster.n_requests)?;
+    exp.cluster.n_decode = args.opt_usize("decode", exp.cluster.n_decode)?;
+    exp.cluster.n_prefill = args.opt_usize("prefill", exp.cluster.n_prefill)?;
+    exp.cluster.kv_capacity_tokens =
+        args.opt_u64("kv-capacity", exp.cluster.kv_capacity_tokens)?;
+    exp.cluster.seed = args.opt_u64("seed", exp.cluster.seed)?;
+    exp.rescheduler.interval_s = args.opt_f64("interval", exp.rescheduler.interval_s)?;
+    let (resched, pred) = policy_of(args)?;
+    exp.rescheduler.enabled = resched;
+    if let Some(p) = pred {
+        exp.predictor = p;
+    }
+    if let Some(p) = args.opt("predictor") {
+        exp.predictor = PredictorKind::parse(p)?;
+    }
+    exp.record_traces = args.flag("traces") || args.opt("trace-out").is_some();
+    exp.validate()?;
+    Ok(exp)
+}
+
+fn run_check(args: &Args) -> Result<(), star::Error> {
+    let dir = artifacts_dir(args.opt("artifacts"))?;
+    println!("artifacts: {}", dir.display());
+    let rt = StarRuntime::load(&dir)?;
+    println!("platform:  {}", rt.platform());
+    println!(
+        "model:     star-pico d={} L={} H={} ctx={} vocab={}",
+        rt.meta.d_model, rt.meta.n_layers, rt.meta.n_heads, rt.meta.max_seq, rt.meta.vocab
+    );
+    println!(
+        "params:    {} tensors, {} elems",
+        rt.params.entries.len(),
+        rt.params.total_elems()
+    );
+    let out = rt.prefill(b"\x01Qhello?")?;
+    println!(
+        "prefill OK: {} logits, hidden[0..4] = {:?}",
+        out.logits.len(),
+        &out.hidden[..4]
+    );
+    let mut kv = rt.new_kv_buffer(1);
+    rt.copy_kv_slot(&out.kv, 1, 0, &mut kv, 1, 0)?;
+    let d = rt.decode_step(1, &[65], &[8], &kv)?;
+    println!("decode  OK: logits[0..4] = {:?}", &d.logits[..4]);
+    let p = rt.predict_remaining(&out.hidden)?;
+    println!("predict OK: remaining ~ {:.1} tokens", p[0]);
+    Ok(())
+}
+
+fn run_workload(args: &Args) -> Result<(), star::Error> {
+    let ds = Dataset::parse(args.opt_or("dataset", "sharegpt"))
+        .ok_or_else(|| star::Error::Cli("bad dataset".into()))?;
+    let n = args.opt_usize("requests", 20_000)?;
+    let rps = args.opt_f64("rps", 1.0)?;
+    let seed = args.opt_u64("seed", 0)?;
+    let trace = TraceGen::new(ds, rps).generate(n, seed);
+    let st = TraceStats::from_requests(&trace);
+    println!("| Workload | Metric | Mean | Std | P50 | P90 | P95 |");
+    println!("|----------|--------|------|-----|-----|-----|-----|");
+    println!("{}", st.render(ds.name()));
+    let long = trace.iter().filter(|r| r.output_len > 30_000).count();
+    println!(
+        "\n{} requests; {:.1}% generate >30K tokens (paper: 17.3% for ShareGPT)",
+        n,
+        100.0 * long as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn run_simulate(args: &Args) -> Result<(), star::Error> {
+    let exp = experiment_of(args)?;
+    let verbose = args.flag("verbose");
+    let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps);
+    let trace = match args.opt("duration") {
+        Some(_) => gen.generate_for(args.opt_f64("duration", 2000.0)?, exp.cluster.seed),
+        None => gen.generate(exp.cluster.n_requests, exp.cluster.seed),
+    };
+    if verbose {
+        println!(
+            "simulating {} requests on {} decode instances (resched={} predictor={})",
+            trace.len(),
+            exp.cluster.n_decode,
+            exp.rescheduler.enabled,
+            exp.predictor.name()
+        );
+    }
+    let dispatch = DispatchPolicy::parse(args.opt_or("dispatch", "current_load"))
+        .ok_or_else(|| star::Error::Cli("bad dispatch".into()))?;
+    let params = SimParams {
+        exp,
+        dispatch,
+        ..Default::default()
+    };
+    let report = Simulator::new(params, &trace).run();
+    println!("{}", report.summary(Slo::default()));
+    println!(
+        "scheduler: {} intervals, {} candidates, max decision {} us",
+        report.scheduler_stats.intervals,
+        report.scheduler_stats.candidates_evaluated,
+        report.scheduler_stats.max_decision_us
+    );
+    if let Some(path) = args.opt("trace-out") {
+        report.recorder.write_tsv(std::path::Path::new(path))?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn run_serve(args: &Args) -> Result<(), star::Error> {
+    let mut exp = experiment_of(args)?;
+    // live defaults sized for star-pico instead of the paper cluster
+    if args.opt("kv-capacity").is_none() {
+        exp.cluster.kv_capacity_tokens = 1600;
+    }
+    if args.opt("requests").is_none() {
+        exp.cluster.n_requests = 24;
+    }
+    if args.opt("rps").is_none() {
+        exp.cluster.rps = 1.0;
+    }
+    exp.cluster.max_batch = exp.cluster.max_batch.min(8);
+    let dir = artifacts_dir(args.opt("artifacts"))?;
+    let rt = Arc::new(StarRuntime::load(&dir)?);
+    let dispatch = DispatchPolicy::parse(args.opt_or("dispatch", "current_load"))
+        .ok_or_else(|| star::Error::Cli("bad dispatch".into()))?;
+    let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps)
+        .pico(rt.meta.max_prompt as u32 - 8, rt.meta.max_output as u32);
+    let trace = gen.generate(exp.cluster.n_requests, exp.cluster.seed);
+    let live: Vec<LiveRequest> = trace
+        .iter()
+        .map(|r| LiveRequest::from_trace(r, rt.meta.max_prompt))
+        .collect();
+    let params = ServeParams {
+        exp,
+        dispatch,
+        ..Default::default()
+    };
+    let server = Server::new(rt, params);
+    let out = server.run(live)?;
+    let slo = Slo {
+        ttft_s: 2.0,
+        tpot_s: 0.060,
+    };
+    println!(
+        "completed {} | wall {:.1}s | throughput {:.3} req/s | goodput {:.3} req/s | \
+         P99 TPOT {:.2} ms | OOMs {} | migrations {}",
+        out.metrics.completed.len(),
+        out.wall_s,
+        out.metrics.throughput(),
+        out.metrics.goodput(slo),
+        out.metrics.p99_tpot_ms(),
+        out.oom_events,
+        out.migrations
+    );
+    if let Some(path) = args.opt("trace-out") {
+        out.recorder.write_tsv(std::path::Path::new(path))?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,246 @@
+//! Serving metrics: latency percentiles, goodput, load-variance tracking,
+//! and the runtime trace recorder behind the paper's Figs. 3/11/12/13.
+
+mod recorder;
+mod variance;
+
+pub use recorder::{TraceEvent, TraceRecorder, TraceRow};
+pub use variance::{snapshot_variance, RunningVariance, VarianceOverTime};
+
+use crate::Time;
+
+/// Exact percentile store. At our experiment sizes (<= a few million
+/// samples) keeping raw samples is cheaper than a sketch and exact.
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact quantile (nearest-rank with linear interpolation).
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let pos = q.clamp(0.0, 1.0) * (self.samples.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+}
+
+/// Per-request latency record, filled in as the request flows through the
+/// system; consumed by [`RunMetrics`].
+#[derive(Clone, Debug, Default)]
+pub struct RequestLatency {
+    pub arrival: Time,
+    pub prefill_done: Option<Time>,
+    pub first_token: Option<Time>,
+    pub finished: Option<Time>,
+    pub output_tokens: u32,
+    /// Mean time-per-output-token over the whole request (seconds).
+    pub mean_tpot: Option<f64>,
+    /// Max single-gap TPOT (captures migration stalls / overload spikes).
+    pub max_tpot: Option<f64>,
+    /// Number of times this request was migrated between decode instances.
+    pub migrations: u32,
+    /// Whether the request experienced an OOM-triggered recompute.
+    pub hit_oom: bool,
+}
+
+impl RequestLatency {
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+}
+
+/// SLO definition (paper §6.2: 1 s TTFT; TPOT 25 ms for the 7B model).
+#[derive(Clone, Copy, Debug)]
+pub struct Slo {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        // Paper large-cluster setting: TTFT 1 s, TPOT 25 ms.
+        Slo {
+            ttft_s: 1.0,
+            tpot_s: 0.025,
+        }
+    }
+}
+
+/// Aggregated end-to-end run metrics (one Fig. 10 data point).
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub completed: Vec<RequestLatency>,
+    pub duration: Time,
+    pub oom_events: u64,
+    pub migrations: u64,
+}
+
+impl RunMetrics {
+    /// Requests finished per second.
+    pub fn throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        self.completed.len() as f64 / self.duration
+    }
+
+    /// Fraction + rate of requests meeting the SLO (paper's goodput).
+    pub fn goodput(&self, slo: Slo) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        let good = self
+            .completed
+            .iter()
+            .filter(|r| {
+                r.ttft().map(|t| t <= slo.ttft_s).unwrap_or(false)
+                    && r.mean_tpot.map(|t| t <= slo.tpot_s).unwrap_or(false)
+            })
+            .count();
+        good as f64 / self.duration
+    }
+
+    /// P99 of per-request mean TPOT, in milliseconds (Fig. 10 bottom row).
+    pub fn p99_tpot_ms(&self) -> f64 {
+        let mut p = Percentiles::new();
+        for r in &self.completed {
+            if let Some(t) = r.mean_tpot {
+                p.record(t * 1e3);
+            }
+        }
+        p.p99()
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        let mut p = Percentiles::new();
+        for r in &self.completed {
+            if let Some(t) = r.ttft() {
+                p.record(t * 1e3);
+            }
+        }
+        p.p99()
+    }
+
+    pub fn mean_tpot_ms(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .completed
+            .iter()
+            .filter_map(|r| r.mean_tpot)
+            .collect();
+        if vals.is_empty() {
+            return f64::NAN;
+        }
+        vals.iter().sum::<f64>() / vals.len() as f64 * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact_on_known_data() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.record(i as f64);
+        }
+        assert!((p.p50() - 50.5).abs() < 1e-9);
+        assert!((p.quantile(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.quantile(1.0) - 100.0).abs() < 1e-9);
+        assert!((p.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn empty_percentiles_nan() {
+        let mut p = Percentiles::new();
+        assert!(p.p50().is_nan());
+        assert!(p.mean().is_nan());
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_compliant() {
+        let mk = |ttft: f64, tpot: f64| RequestLatency {
+            arrival: 0.0,
+            first_token: Some(ttft),
+            mean_tpot: Some(tpot),
+            finished: Some(10.0),
+            output_tokens: 10,
+            ..Default::default()
+        };
+        let m = RunMetrics {
+            completed: vec![mk(0.5, 0.010), mk(2.0, 0.010), mk(0.5, 0.100)],
+            duration: 10.0,
+            ..Default::default()
+        };
+        let slo = Slo::default();
+        assert!((m.throughput() - 0.3).abs() < 1e-12);
+        assert!((m.goodput(slo) - 0.1).abs() < 1e-12); // only the first
+    }
+
+    #[test]
+    fn ttft_from_first_token() {
+        let r = RequestLatency {
+            arrival: 5.0,
+            first_token: Some(5.8),
+            ..Default::default()
+        };
+        assert!((r.ttft().unwrap() - 0.8).abs() < 1e-12);
+    }
+}

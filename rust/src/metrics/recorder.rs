@@ -1,0 +1,182 @@
+//! Runtime trace recorder — produces the Fig. 12-style traces: per-instance
+//! KV-cache usage over time, OOM windows, and rescheduling-event ticks.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::{InstanceId, RequestId, Time};
+
+/// Discrete events worth marking on a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Periodic sample of an instance's KV usage (fraction of capacity)
+    /// and current batched-token load.
+    KvSample {
+        instance: InstanceId,
+        kv_frac: f64,
+        tokens: u64,
+        batch: usize,
+    },
+    /// A migration decided by the rescheduler.
+    Migration {
+        request: RequestId,
+        src: InstanceId,
+        dst: InstanceId,
+        kv_tokens: u64,
+    },
+    /// An OOM on an instance: victims forced to recompute.
+    Oom {
+        instance: InstanceId,
+        victims: usize,
+    },
+    /// Request lifecycle markers.
+    Arrived { request: RequestId },
+    PrefillDone { request: RequestId, instance: InstanceId },
+    Finished { request: RequestId, instance: InstanceId },
+}
+
+/// One timestamped row.
+#[derive(Clone, Debug)]
+pub struct TraceRow {
+    pub t: Time,
+    pub event: TraceEvent,
+}
+
+/// In-memory event log with TSV export; cheap enough to keep always-on at
+/// our scales (the live runtime samples KV usage at the scheduler interval).
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecorder {
+    rows: Vec<TraceRow>,
+    enabled: bool,
+}
+
+impl TraceRecorder {
+    pub fn new(enabled: bool) -> Self {
+        TraceRecorder {
+            rows: Vec::new(),
+            enabled,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, t: Time, event: TraceEvent) {
+        if self.enabled {
+            self.rows.push(TraceRow { t, event });
+        }
+    }
+
+    pub fn rows(&self) -> &[TraceRow] {
+        &self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Max KV usage fraction across instances over time (Fig. 12's curve).
+    /// Returns (time, max_kv_frac) downsampled per instance-sweep.
+    pub fn max_kv_series(&self, n_instances: usize) -> Vec<(Time, f64)> {
+        let mut cur = vec![0.0f64; n_instances];
+        let mut out = Vec::new();
+        for row in &self.rows {
+            if let TraceEvent::KvSample { instance, kv_frac, .. } = row.event {
+                if instance < n_instances {
+                    cur[instance] = kv_frac;
+                    let mx = cur.iter().cloned().fold(0.0, f64::max);
+                    out.push((row.t, mx));
+                }
+            }
+        }
+        out
+    }
+
+    /// Times of rescheduling (migration) events — Fig. 12's vertical ticks.
+    pub fn migration_times(&self) -> Vec<Time> {
+        self.rows
+            .iter()
+            .filter(|r| matches!(r.event, TraceEvent::Migration { .. }))
+            .map(|r| r.t)
+            .collect()
+    }
+
+    /// (start,instance) of each OOM event — Fig. 12's shaded regions.
+    pub fn oom_times(&self) -> Vec<(Time, InstanceId)> {
+        self.rows
+            .iter()
+            .filter_map(|r| match r.event {
+                TraceEvent::Oom { instance, .. } => Some((r.t, instance)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// TSV export for offline plotting.
+    pub fn write_tsv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "time\tevent\tinstance\trequest\tkv_frac\ttokens\textra")?;
+        for row in &self.rows {
+            let mut line = String::new();
+            write!(line, "{:.6}\t", row.t).unwrap();
+            match &row.event {
+                TraceEvent::KvSample { instance, kv_frac, tokens, batch } => {
+                    write!(line, "kv\t{instance}\t\t{kv_frac:.4}\t{tokens}\t{batch}").unwrap()
+                }
+                TraceEvent::Migration { request, src, dst, kv_tokens } => {
+                    write!(line, "migration\t{src}\t{request}\t\t{kv_tokens}\tdst={dst}").unwrap()
+                }
+                TraceEvent::Oom { instance, victims } => {
+                    write!(line, "oom\t{instance}\t\t\t\tvictims={victims}").unwrap()
+                }
+                TraceEvent::Arrived { request } => {
+                    write!(line, "arrived\t\t{request}\t\t\t").unwrap()
+                }
+                TraceEvent::PrefillDone { request, instance } => {
+                    write!(line, "prefill_done\t{instance}\t{request}\t\t\t").unwrap()
+                }
+                TraceEvent::Finished { request, instance } => {
+                    write!(line, "finished\t{instance}\t{request}\t\t\t").unwrap()
+                }
+            }
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = TraceRecorder::new(false);
+        r.record(1.0, TraceEvent::Arrived { request: 1 });
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn max_kv_series_tracks_max_across_instances() {
+        let mut r = TraceRecorder::new(true);
+        r.record(0.0, TraceEvent::KvSample { instance: 0, kv_frac: 0.2, tokens: 10, batch: 1 });
+        r.record(1.0, TraceEvent::KvSample { instance: 1, kv_frac: 0.9, tokens: 90, batch: 2 });
+        r.record(2.0, TraceEvent::KvSample { instance: 0, kv_frac: 0.5, tokens: 50, batch: 1 });
+        let s = r.max_kv_series(2);
+        assert_eq!(s.len(), 3);
+        assert!((s[1].1 - 0.9).abs() < 1e-12);
+        assert!((s[2].1 - 0.9).abs() < 1e-12); // instance 1 still at 0.9
+    }
+
+    #[test]
+    fn migration_and_oom_extraction() {
+        let mut r = TraceRecorder::new(true);
+        r.record(3.0, TraceEvent::Migration { request: 7, src: 0, dst: 1, kv_tokens: 100 });
+        r.record(5.0, TraceEvent::Oom { instance: 2, victims: 4 });
+        assert_eq!(r.migration_times(), vec![3.0]);
+        assert_eq!(r.oom_times(), vec![(5.0, 2)]);
+    }
+}

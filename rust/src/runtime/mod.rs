@@ -1,0 +1,61 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `artifacts/params/*.bin`) and executes star-pico from the rust request
+//! path. Python never runs here — this is the L3 side of the AOT bridge
+//! (see `python/compile/aot.py` and /opt/xla-example/load_hlo for the
+//! interchange-format rationale: HLO *text*, not serialized protos).
+
+mod meta;
+mod models;
+mod params;
+mod tensor;
+
+pub use meta::ModelMeta;
+pub use models::{DecodeOutput, PrefillOutput, StarRuntime};
+pub use params::{load_params, ParamSet};
+pub use tensor::HostTensor;
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Locate the artifacts directory: explicit arg > $STAR_ARTIFACTS >
+/// ./artifacts relative to the workspace root.
+pub fn artifacts_dir(explicit: Option<&str>) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        let pb = PathBuf::from(p);
+        if pb.join("model_meta.txt").exists() {
+            return Ok(pb);
+        }
+        return Err(Error::artifact(format!(
+            "{p} does not contain model_meta.txt (run `make artifacts`)"
+        )));
+    }
+    if let Ok(env) = std::env::var("STAR_ARTIFACTS") {
+        return artifacts_dir(Some(&env));
+    }
+    for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+        let pb = PathBuf::from(candidate);
+        if pb.join("model_meta.txt").exists() {
+            return Ok(pb);
+        }
+    }
+    Err(Error::artifact(
+        "artifacts/ not found; run `make artifacts` or set STAR_ARTIFACTS",
+    ))
+}
+
+/// Compile one HLO-text artifact on a PJRT client.
+pub fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    if !path.exists() {
+        return Err(Error::artifact(format!(
+            "{} missing (run `make artifacts`)",
+            path.display()
+        )));
+    }
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::artifact("non-utf8 artifact path"))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}

@@ -1,0 +1,280 @@
+//! StarRuntime: the compiled star-pico executables + typed entrypoints.
+
+use std::path::Path;
+
+use super::meta::ModelMeta;
+use super::params::{load_params, ParamSet};
+use super::tensor::HostTensor;
+use crate::{Error, Result};
+
+/// Output of one prefill pass (one request).
+#[derive(Clone, Debug)]
+pub struct PrefillOutput {
+    /// Next-token logits of the last prompt token, [vocab].
+    pub logits: Vec<f32>,
+    /// The request's padded KV slice [L, 2, 1, H, Smax, Dh].
+    pub kv: HostTensor,
+    /// Last-token last-layer hidden state [d_model] (predictor input).
+    pub hidden: Vec<f32>,
+}
+
+/// Output of one batched decode step.
+#[derive(Clone, Debug)]
+pub struct DecodeOutput {
+    /// [bucket * vocab] row-major logits.
+    pub logits: Vec<f32>,
+    /// Updated KV buffer [L, 2, B, H, Smax, Dh].
+    pub kv: HostTensor,
+    /// [bucket * d_model] hidden states (predictor inputs).
+    pub hidden: Vec<f32>,
+}
+
+/// Compiled model bundle: PJRT client + executables for every entrypoint
+/// the artifacts provide, plus the parameter literals (uploaded per call;
+/// the perf-optimized path keeps them device-resident — see bench notes).
+pub struct StarRuntime {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    /// (bucket, executable), ascending bucket.
+    decode_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    predictor_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    lm_params: Vec<xla::Literal>,
+    pred_params: Vec<xla::Literal>,
+    pub params: ParamSet,
+}
+
+// SAFETY: the PJRT C API is documented thread-safe for compilation and
+// execution (the CPU client internally synchronizes); the Literal inputs
+// are only read. The `xla` crate just doesn't annotate its wrappers.
+unsafe impl Send for StarRuntime {}
+unsafe impl Sync for StarRuntime {}
+
+impl StarRuntime {
+    /// Load every artifact and compile all entrypoints (one-time cost).
+    pub fn load(dir: &Path) -> Result<StarRuntime> {
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let prefill_exe = super::compile_hlo(&client, &dir.join("prefill.hlo.txt"))?;
+        let mut decode_exes = Vec::new();
+        for &b in &meta.decode_buckets {
+            decode_exes.push((
+                b,
+                super::compile_hlo(&client, &dir.join(format!("decode_b{b}.hlo.txt")))?,
+            ));
+        }
+        let mut predictor_exes = Vec::new();
+        for &b in &meta.predictor_buckets {
+            predictor_exes.push((
+                b,
+                super::compile_hlo(&client, &dir.join(format!("predictor_b{b}.hlo.txt")))?,
+            ));
+        }
+        let params = load_params(dir)?;
+        let lm_params = params.literals_with_prefix("lm.")?;
+        let pred_params = params.literals_with_prefix("pred.")?;
+        Ok(StarRuntime {
+            meta,
+            client,
+            prefill_exe,
+            decode_exes,
+            predictor_exes,
+            lm_params,
+            pred_params,
+            params,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run prefill over a prompt (token bytes). Pads to `max_prompt`.
+    pub fn prefill(&self, prompt: &[u8]) -> Result<PrefillOutput> {
+        let p = self.meta.max_prompt;
+        if prompt.is_empty() || prompt.len() > p {
+            return Err(Error::coordinator(format!(
+                "prompt length {} out of range 1..={p}",
+                prompt.len()
+            )));
+        }
+        let mut toks = vec![0i32; p];
+        for (i, &b) in prompt.iter().enumerate() {
+            toks[i] = b as i32;
+        }
+        let tokens = HostTensor::i32(&[1, p as i64], toks)?.to_literal()?;
+        let plen = HostTensor::i32(&[1], vec![prompt.len() as i32])?.to_literal()?;
+
+        // params passed by reference: no 3.4 MB Literal clone per call
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.lm_params.len() + 2);
+        args.extend(self.lm_params.iter());
+        args.push(&tokens);
+        args.push(&plen);
+        let result = self.prefill_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, kv, hidden) = result.to_tuple3()?;
+        Ok(PrefillOutput {
+            logits: logits.to_vec::<f32>()?,
+            kv: HostTensor::from_f32_literal(&kv)?,
+            hidden: hidden.to_vec::<f32>()?,
+        })
+    }
+
+    /// One decode step at the given bucket size.
+    ///
+    /// `tokens[b]` = token to process for slot b (garbage for idle slots),
+    /// `pos[b]` = its position (current length), `kv` = the batched cache.
+    pub fn decode_step(
+        &self,
+        bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &HostTensor,
+    ) -> Result<DecodeOutput> {
+        let exe = self
+            .decode_exes
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, e)| e)
+            .ok_or_else(|| Error::coordinator(format!("no decode bucket {bucket}")))?;
+        if tokens.len() != bucket || pos.len() != bucket {
+            return Err(Error::coordinator(format!(
+                "decode bucket {bucket}: got {} tokens / {} pos",
+                tokens.len(),
+                pos.len()
+            )));
+        }
+        let m = &self.meta;
+        let expect = m.kv_elems(bucket);
+        if kv.len() != expect {
+            return Err(Error::coordinator(format!(
+                "kv buffer has {} elems, bucket {bucket} needs {expect}",
+                kv.len()
+            )));
+        }
+        let t_lit = HostTensor::i32(&[bucket as i64], tokens.to_vec())?.to_literal()?;
+        let p_lit = HostTensor::i32(&[bucket as i64], pos.to_vec())?.to_literal()?;
+        let kv_lit = kv.to_literal()?;
+
+        // STAR_PERF_CLONE_PARAMS=1 reinstates the pre-optimization
+        // clone-per-call path so the §Perf before/after in EXPERIMENTS.md
+        // stays reproducible.
+        let result = if std::env::var_os("STAR_PERF_CLONE_PARAMS").is_some() {
+            let mut owned: Vec<xla::Literal> = self.lm_params.to_vec();
+            owned.push(t_lit);
+            owned.push(p_lit);
+            owned.push(kv_lit);
+            exe.execute::<xla::Literal>(&owned)?[0][0].to_literal_sync()?
+        } else {
+            let mut args: Vec<&xla::Literal> =
+                Vec::with_capacity(self.lm_params.len() + 3);
+            args.extend(self.lm_params.iter());
+            args.push(&t_lit);
+            args.push(&p_lit);
+            args.push(&kv_lit);
+            exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?
+        };
+        let (logits, kv_out, hidden) = result.to_tuple3()?;
+        Ok(DecodeOutput {
+            logits: logits.to_vec::<f32>()?,
+            kv: HostTensor::from_f32_literal(&kv_out)?,
+            hidden: hidden.to_vec::<f32>()?,
+        })
+    }
+
+    /// Remaining-length prediction for a batch of hidden states.
+    /// `hidden` is [n * d_model] row-major; n is padded to a bucket.
+    pub fn predict_remaining(&self, hidden: &[f32]) -> Result<Vec<f32>> {
+        let d = self.meta.predictor_d_in;
+        if hidden.is_empty() || hidden.len() % d != 0 {
+            return Err(Error::coordinator(format!(
+                "hidden length {} not a multiple of d={d}",
+                hidden.len()
+            )));
+        }
+        let n = hidden.len() / d;
+        let bucket = self
+            .predictor_exes
+            .iter()
+            .map(|(b, _)| *b)
+            .find(|&b| b >= n)
+            .ok_or_else(|| Error::coordinator(format!("no predictor bucket >= {n}")))?;
+        let exe = &self
+            .predictor_exes
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .unwrap()
+            .1;
+        let mut padded = hidden.to_vec();
+        padded.resize(bucket * d, 0.0);
+        let h_lit = HostTensor::f32(&[bucket as i64, d as i64], padded)?.to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.pred_params.len() + 1);
+        args.extend(self.pred_params.iter());
+        args.push(&h_lit);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let mut v = out.to_vec::<f32>()?;
+        v.truncate(n);
+        Ok(v)
+    }
+
+    /// Fresh zeroed KV buffer for a decode bucket.
+    pub fn new_kv_buffer(&self, bucket: usize) -> HostTensor {
+        let m = &self.meta;
+        HostTensor::zeros_f32(&[
+            m.n_layers as i64,
+            2,
+            bucket as i64,
+            m.n_heads as i64,
+            m.max_seq as i64,
+            m.head_dim as i64,
+        ])
+    }
+
+    /// Copy one request's KV slice (slot `src_slot` of `src`) into slot
+    /// `dst_slot` of `dst`. Used for batch compaction, bucket growth, and
+    /// migration-in. Layout: [L, 2, B, H, S, Dh], so a slot is strided.
+    pub fn copy_kv_slot(
+        &self,
+        src: &HostTensor,
+        src_bucket: usize,
+        src_slot: usize,
+        dst: &mut HostTensor,
+        dst_bucket: usize,
+        dst_slot: usize,
+    ) -> Result<()> {
+        let m = &self.meta;
+        let inner = m.n_heads * m.max_seq * m.head_dim; // per (l, kv, slot)
+        let (HostTensor::F32 { data: s, .. }, HostTensor::F32 { data: d, .. }) =
+            (src, &mut *dst)
+        else {
+            return Err(Error::artifact("kv buffers must be f32"));
+        };
+        if src_slot >= src_bucket || dst_slot >= dst_bucket {
+            return Err(Error::coordinator("kv slot out of range".to_string()));
+        }
+        for l in 0..m.n_layers {
+            for kvh in 0..2 {
+                let s_base = ((l * 2 + kvh) * src_bucket + src_slot) * inner;
+                let d_base = ((l * 2 + kvh) * dst_bucket + dst_slot) * inner;
+                d[d_base..d_base + inner].copy_from_slice(&s[s_base..s_base + inner]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract one slot into a standalone [L,2,1,H,S,Dh] tensor (the
+    /// migration payload).
+    pub fn extract_kv_slot(
+        &self,
+        src: &HostTensor,
+        src_bucket: usize,
+        src_slot: usize,
+    ) -> Result<HostTensor> {
+        let m = &self.meta;
+        let mut out = self.new_kv_buffer(1);
+        self.copy_kv_slot(src, src_bucket, src_slot, &mut out, 1, 0)?;
+        let _ = m;
+        Ok(out)
+    }
+}

@@ -1,0 +1,114 @@
+//! Loader for the AOT parameter dump (`artifacts/params/manifest.txt` +
+//! raw little-endian f32 `.bin` files written by `aot.dump_params`).
+
+use std::path::Path;
+
+use super::tensor::HostTensor;
+use crate::{Error, Result};
+
+/// All model + predictor parameters in manifest order, as literals ready
+/// to prepend to executable arguments.
+pub struct ParamSet {
+    /// (name, tensor) in manifest order.
+    pub entries: Vec<(String, HostTensor)>,
+}
+
+impl ParamSet {
+    /// Names with the given prefix ("lm." or "pred."), manifest order.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&HostTensor> {
+        self.entries
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, t)| t)
+            .collect()
+    }
+
+    pub fn literals_with_prefix(&self, prefix: &str) -> Result<Vec<xla::Literal>> {
+        self.with_prefix(prefix)
+            .into_iter()
+            .map(|t| t.to_literal())
+            .collect()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.entries.iter().map(|(_, t)| t.len()).sum()
+    }
+}
+
+/// Read manifest + bins from `dir/params/`.
+pub fn load_params(dir: &Path) -> Result<ParamSet> {
+    let pdir = dir.join("params");
+    let manifest = pdir.join("manifest.txt");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| Error::artifact(format!("{}: {e}", manifest.display())))?;
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let (name, dtype, shape_s) = (
+            parts
+                .next()
+                .ok_or_else(|| Error::artifact("manifest: missing name"))?,
+            parts
+                .next()
+                .ok_or_else(|| Error::artifact("manifest: missing dtype"))?,
+            parts
+                .next()
+                .ok_or_else(|| Error::artifact("manifest: missing shape"))?,
+        );
+        if dtype != "f32" {
+            return Err(Error::artifact(format!(
+                "param {name}: unsupported dtype {dtype}"
+            )));
+        }
+        let shape: Vec<i64> = shape_s
+            .split('x')
+            .map(|d| {
+                d.parse()
+                    .map_err(|_| Error::artifact(format!("param {name}: bad shape {shape_s}")))
+            })
+            .collect::<Result<_>>()?;
+        let bytes = std::fs::read(pdir.join(format!("{name}.bin")))
+            .map_err(|e| Error::artifact(format!("param {name}: {e}")))?;
+        if bytes.len() % 4 != 0 {
+            return Err(Error::artifact(format!(
+                "param {name}: byte length {} not f32-aligned",
+                bytes.len()
+            )));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        entries.push((name.to_string(), HostTensor::f32(&shape, data)?));
+    }
+    if entries.is_empty() {
+        return Err(Error::artifact("manifest.txt is empty"));
+    }
+    Ok(ParamSet { entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // integration-ish: only runs when `make artifacts` has been run
+        let Ok(dir) = crate::runtime::artifacts_dir(None) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ps = load_params(&dir).unwrap();
+        assert!(ps.total_elems() > 100_000, "suspiciously few params");
+        let lm = ps.with_prefix("lm.");
+        let pred = ps.with_prefix("pred.");
+        assert_eq!(lm.len(), 12, "lm param count (see model.PARAM_NAMES)");
+        assert_eq!(pred.len(), 8, "predictor param count");
+        // embedding is [256, 128]
+        assert_eq!(ps.entries[0].1.shape(), &[256, 128]);
+    }
+}

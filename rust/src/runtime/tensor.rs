@@ -1,0 +1,115 @@
+//! Minimal host tensor: shape + flat f32/i32 storage with Literal
+//! round-trips. Keeps the engine code free of raw `xla::Literal` plumbing.
+
+use crate::{Error, Result};
+
+/// A host-side tensor of f32 or i32.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<i64>, data: Vec<f32> },
+    I32 { shape: Vec<i64>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[i64], data: Vec<f32>) -> Result<HostTensor> {
+        check_len(shape, data.len())?;
+        Ok(HostTensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn i32(shape: &[i64], data: Vec<i32>) -> Result<HostTensor> {
+        check_len(shape, data.len())?;
+        Ok(HostTensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros_f32(shape: &[i64]) -> HostTensor {
+        let n: i64 = shape.iter().product();
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; n as usize],
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::artifact("expected f32 tensor")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(Error::artifact("expected i32 tensor")),
+        }
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32 { shape, data } => Ok(xla::Literal::vec1(data).reshape(shape)?),
+            HostTensor::I32 { shape, data } => Ok(xla::Literal::vec1(data).reshape(shape)?),
+        }
+    }
+
+    /// Read back an f32 literal.
+    pub fn from_f32_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        Ok(HostTensor::F32 {
+            shape: shape.dims().to_vec(),
+            data: lit.to_vec::<f32>()?,
+        })
+    }
+}
+
+fn check_len(shape: &[i64], len: usize) -> Result<()> {
+    let n: i64 = shape.iter().product();
+    if n as usize != len {
+        return Err(Error::artifact(format!(
+            "shape {shape:?} wants {n} elements, got {len}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        let t = HostTensor::zeros_f32(&[4, 4]);
+        assert_eq!(t.len(), 16);
+    }
+
+    #[test]
+    fn type_accessors() {
+        let f = HostTensor::f32(&[2], vec![1.0, 2.0]).unwrap();
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+    }
+}

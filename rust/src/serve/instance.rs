@@ -1,0 +1,442 @@
+//! Decode instance thread: continuous batching over the PJRT runtime.
+//!
+//! Each instance owns a fixed-bucket KV device buffer (host-mirrored),
+//! a paged [`KvCacheManager`] enforcing its token capacity, and a slot
+//! table. It consumes [`DecodeCommand`]s from the coordinator and emits
+//! [`DecodeEvent`]s (tokens, completions, OOMs, migration payloads, and
+//! per-step state reports used by Algorithm 1).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::PredictorKind;
+use crate::kvcache::KvCacheManager;
+use crate::prng::Pcg64;
+use crate::runtime::{HostTensor, StarRuntime};
+use crate::{InstanceId, RequestId};
+
+/// Commands from the coordinator to one decode instance.
+pub enum DecodeCommand {
+    /// Admit a request whose KV arrives from prefill or migration.
+    Admit(Box<AdmitPayload>),
+    /// Begin migrating a request out: pause it, extract its KV slot, and
+    /// reply with [`DecodeEvent::MigratedOut`].
+    MigrateOut { id: RequestId },
+    Shutdown,
+}
+
+/// Everything needed to (re)start decoding a request on an instance.
+pub struct AdmitPayload {
+    pub id: RequestId,
+    /// KV slice [L,2,1,H,S,Dh]; zeroed for OOM-recompute replays.
+    pub kv: HostTensor,
+    /// Current sequence length (position where the next token is written).
+    pub pos: i32,
+    /// Next token to feed.
+    pub next_token: i32,
+    pub generated: u32,
+    /// Remaining output budget for trace-forced runs (None = run to EOS).
+    pub forced_remaining: Option<u32>,
+    /// Tokens to replay through decode before resuming emission
+    /// (OOM recompute path: rebuilds the KV cache).
+    pub replay: VecDeque<u8>,
+    pub predicted_remaining: Option<f64>,
+}
+
+/// Events from a decode instance to the coordinator.
+pub enum DecodeEvent {
+    /// One output token emitted for a request (proxy stream content).
+    Token {
+        instance: InstanceId,
+        id: RequestId,
+        at: Instant,
+        byte: u8,
+    },
+    Finished {
+        instance: InstanceId,
+        id: RequestId,
+        generated: u32,
+        at: Instant,
+    },
+    /// Admission failed (capacity race): payload returned to coordinator.
+    AdmitRejected {
+        instance: InstanceId,
+        payload: Box<AdmitPayload>,
+    },
+    /// Migration payload extracted; the slot is freed.
+    MigratedOut {
+        instance: InstanceId,
+        payload: Box<AdmitPayload>,
+    },
+    /// OOM: victims evicted; each must recompute via replay elsewhere.
+    Oom {
+        instance: InstanceId,
+        victims: Vec<Box<AdmitPayload>>,
+        at: Instant,
+    },
+    /// Post-step state report (Algorithm 1's worker report input).
+    Report {
+        instance: InstanceId,
+        slots: Vec<SlotSnapshot>,
+        ewma_iter_ms: f64,
+        kv_used: u64,
+        kv_capacity: u64,
+        at: Instant,
+    },
+}
+
+/// Scheduler-visible slot state.
+#[derive(Clone, Debug)]
+pub struct SlotSnapshot {
+    pub id: RequestId,
+    pub tokens: u64,
+    pub predicted_remaining: Option<f64>,
+}
+
+struct Slot {
+    id: RequestId,
+    pos: i32,
+    next_token: i32,
+    generated: u32,
+    forced_remaining: Option<u32>,
+    replay: VecDeque<u8>,
+    token_history: Vec<u8>,
+    predicted_remaining: Option<f64>,
+    iters_since_predict: u32,
+}
+
+/// Configuration for one decode instance thread.
+pub struct DecodeInstance {
+    pub id: InstanceId,
+    pub runtime: Arc<StarRuntime>,
+    pub kv_capacity_tokens: u64,
+    pub block_tokens: u32,
+    pub max_batch: usize,
+    pub predictor: PredictorKind,
+    pub predict_every_iters: u32,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl DecodeInstance {
+    /// Run the instance loop until `Shutdown`. Blocking; call on its own
+    /// thread.
+    pub fn run(self, commands: Receiver<DecodeCommand>, events: Sender<DecodeEvent>) {
+        let bucket = *self
+            .runtime
+            .meta
+            .decode_buckets
+            .last()
+            .expect("decode buckets");
+        let max_batch = self.max_batch.min(bucket);
+        let mut kv_buf = self.runtime.new_kv_buffer(bucket);
+        let mut kv_mgr = KvCacheManager::new(self.kv_capacity_tokens, self.block_tokens);
+        let mut slots: Vec<Option<Slot>> = (0..bucket).map(|_| None).collect();
+        let mut rng = Pcg64::new(self.seed, (self.id as u64) ^ 0xDEC0DE);
+        let mut ewma_iter_ms = 0.0f64;
+        let mut any_steps = false;
+
+        'outer: loop {
+            // 1. drain control traffic
+            loop {
+                let cmd = if slots.iter().all(Option::is_none) {
+                    // idle: block (with timeout so shutdown is prompt)
+                    match commands.recv_timeout(Duration::from_millis(20)) {
+                        Ok(c) => c,
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(_) => break 'outer,
+                    }
+                } else {
+                    match commands.try_recv() {
+                        Ok(c) => c,
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => break 'outer,
+                    }
+                };
+                match cmd {
+                    DecodeCommand::Shutdown => break 'outer,
+                    DecodeCommand::Admit(p) => {
+                        self.admit(
+                            *p, &mut slots, &mut kv_buf, &mut kv_mgr, bucket, max_batch, &events,
+                        );
+                    }
+                    DecodeCommand::MigrateOut { id } => {
+                        self.migrate_out(id, &mut slots, &mut kv_buf, &mut kv_mgr, bucket, &events);
+                    }
+                }
+            }
+
+            if slots.iter().all(Option::is_none) {
+                continue;
+            }
+
+            // 2. one batched decode iteration
+            let t0 = Instant::now();
+            let mut tokens = vec![1i32; bucket];
+            let mut pos = vec![0i32; bucket];
+            for (i, s) in slots.iter().enumerate() {
+                if let Some(s) = s {
+                    tokens[i] = s.next_token;
+                    pos[i] = s.pos;
+                }
+            }
+            let out = match self.runtime.decode_step(bucket, &tokens, &pos, &kv_buf) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("[instance {}] decode error: {e}", self.id);
+                    break;
+                }
+            };
+            kv_buf = out.kv;
+            let now = Instant::now();
+
+            // 3. per-slot bookkeeping
+            let vocab = self.runtime.meta.vocab;
+            let d = self.runtime.meta.d_model;
+            let max_seq = self.runtime.meta.max_seq as i32;
+            let mut finished: Vec<usize> = Vec::new();
+            let mut oom_victims: Vec<Box<AdmitPayload>> = Vec::new();
+            let mut predict_slots: Vec<usize> = Vec::new();
+
+            for i in 0..bucket {
+                let Some(slot) = slots[i].as_mut() else {
+                    continue;
+                };
+                // KV grew by one token
+                if kv_mgr.append_token(slot.id, self.id).is_err() {
+                    // OOM: evict the largest slots until the append fits
+                    let victim_ids = kv_mgr.eviction_victims(1);
+                    for vid in victim_ids {
+                        if let Some(vi) =
+                            (0..bucket).find(|&j| slots[j].as_ref().map(|s| s.id) == Some(vid))
+                        {
+                            kv_mgr.release(vid);
+                            let v = slots[vi].take().unwrap();
+                            oom_victims.push(Box::new(AdmitPayload {
+                                id: v.id,
+                                kv: self.runtime.new_kv_buffer(1),
+                                pos: 0,
+                                next_token: 0,
+                                generated: v.generated,
+                                forced_remaining: v.forced_remaining,
+                                replay: v.token_history.clone().into(),
+                                predicted_remaining: v.predicted_remaining,
+                            }));
+                        }
+                    }
+                    if slots[i].is_none() {
+                        continue; // this very slot was the victim
+                    }
+                    let slot = slots[i].as_mut().unwrap();
+                    kv_mgr
+                        .append_token(slot.id, self.id)
+                        .expect("append after eviction");
+                }
+                let slot = slots[i].as_mut().unwrap();
+                slot.pos += 1;
+                slot.token_history.push(slot.next_token as u8);
+
+                if let Some(rb) = slot.replay.pop_front() {
+                    // recompute mode: feed history, no emission
+                    slot.next_token = rb as i32;
+                    continue;
+                }
+
+                // sample next token
+                let logits = &out.logits[i * vocab..(i + 1) * vocab];
+                let sampled = super::sample_token(logits, self.temperature, &mut rng) as i32;
+                slot.generated += 1;
+                slot.iters_since_predict += 1;
+                let byte = slot.next_token as u8; // the token just processed
+                let _ = events.send(DecodeEvent::Token {
+                    instance: self.id,
+                    id: slot.id,
+                    at: now,
+                    byte,
+                });
+
+                let done_forced = slot
+                    .forced_remaining
+                    .map(|r| slot.generated >= r)
+                    .unwrap_or(false);
+                let done_eos = slot.forced_remaining.is_none()
+                    && sampled == self.runtime.meta.eos as i32;
+                let done_cap = slot.pos >= max_seq - 1
+                    || slot.generated >= self.runtime.meta.max_output as u32;
+                if done_forced || done_eos || done_cap {
+                    finished.push(i);
+                } else {
+                    slot.next_token = sampled;
+                    if self.predictor.uses_prediction()
+                        && slot.iters_since_predict >= self.predict_every_iters
+                    {
+                        predict_slots.push(i);
+                    }
+                }
+            }
+
+            // 4. reprediction (batched over due slots; paper §5.3)
+            if !predict_slots.is_empty() {
+                match self.predictor {
+                    PredictorKind::LlmNative => {
+                        let mut h = Vec::with_capacity(predict_slots.len() * d);
+                        for &i in &predict_slots {
+                            h.extend_from_slice(&out.hidden[i * d..(i + 1) * d]);
+                        }
+                        if let Ok(preds) = self.runtime.predict_remaining(&h) {
+                            for (k, &i) in predict_slots.iter().enumerate() {
+                                if let Some(s) = slots[i].as_mut() {
+                                    s.predicted_remaining = Some(preds[k] as f64);
+                                    s.iters_since_predict = 0;
+                                }
+                            }
+                        }
+                    }
+                    PredictorKind::Oracle | PredictorKind::Binned(_) => {
+                        for &i in &predict_slots {
+                            if let Some(s) = slots[i].as_mut() {
+                                s.predicted_remaining = s
+                                    .forced_remaining
+                                    .map(|r| (r - s.generated) as f64);
+                                s.iters_since_predict = 0;
+                            }
+                        }
+                    }
+                    PredictorKind::None => {}
+                }
+            }
+
+            // 5. completions
+            for i in finished {
+                let slot = slots[i].take().unwrap();
+                kv_mgr.release(slot.id);
+                let _ = events.send(DecodeEvent::Finished {
+                    instance: self.id,
+                    id: slot.id,
+                    generated: slot.generated,
+                    at: now,
+                });
+            }
+            if !oom_victims.is_empty() {
+                let _ = events.send(DecodeEvent::Oom {
+                    instance: self.id,
+                    victims: oom_victims,
+                    at: now,
+                });
+            }
+
+            // 6. state report
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            ewma_iter_ms = if any_steps { 0.9 * ewma_iter_ms + 0.1 * ms } else { ms };
+            any_steps = true;
+            let snapshot: Vec<SlotSnapshot> = slots
+                .iter()
+                .flatten()
+                .map(|s| SlotSnapshot {
+                    id: s.id,
+                    tokens: kv_mgr.tokens_of(s.id).unwrap_or(0),
+                    predicted_remaining: s.predicted_remaining,
+                })
+                .collect();
+            let _ = events.send(DecodeEvent::Report {
+                instance: self.id,
+                slots: snapshot,
+                ewma_iter_ms,
+                kv_used: kv_mgr.used_tokens(),
+                kv_capacity: kv_mgr.capacity_tokens(),
+                at: Instant::now(),
+            });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn admit(
+        &self,
+        p: AdmitPayload,
+        slots: &mut [Option<Slot>],
+        kv_buf: &mut HostTensor,
+        kv_mgr: &mut KvCacheManager,
+        bucket: usize,
+        max_batch: usize,
+        events: &Sender<DecodeEvent>,
+    ) {
+        let active = slots.iter().flatten().count();
+        let free_slot = (0..bucket).find(|&i| slots[i].is_none());
+        let tokens_now = p.pos as u64 + p.replay.len() as u64;
+        // admission watermark (vLLM-style): keep growth headroom so the
+        // running batch does not immediately OOM-thrash
+        let watermark_ok =
+            kv_mgr.used_tokens() + tokens_now.max(1) <= kv_mgr.capacity_tokens() * 9 / 10;
+        let admissible = active < max_batch
+            && free_slot.is_some()
+            && watermark_ok
+            && kv_mgr.would_fit(tokens_now.max(1));
+        let Some(slot_idx) = free_slot.filter(|_| admissible) else {
+            let _ = events.send(DecodeEvent::AdmitRejected {
+                instance: self.id,
+                payload: Box::new(p),
+            });
+            return;
+        };
+        kv_mgr
+            .admit(p.id, tokens_now.max(1), self.id)
+            .expect("would_fit checked");
+        self.runtime
+            .copy_kv_slot(&p.kv, 1, 0, kv_buf, bucket, slot_idx)
+            .expect("kv slot copy");
+        let (pos, next_token, replay) = if p.replay.is_empty() {
+            (p.pos, p.next_token, VecDeque::new())
+        } else {
+            // recompute: start from scratch, feeding history
+            let mut replay = p.replay;
+            let first = replay.pop_front().unwrap_or(1);
+            (0, first as i32, replay)
+        };
+        slots[slot_idx] = Some(Slot {
+            id: p.id,
+            pos,
+            next_token,
+            generated: p.generated,
+            forced_remaining: p.forced_remaining,
+            replay,
+            token_history: Vec::new(),
+            predicted_remaining: p.predicted_remaining,
+            iters_since_predict: 0,
+        });
+    }
+
+    fn migrate_out(
+        &self,
+        id: RequestId,
+        slots: &mut [Option<Slot>],
+        kv_buf: &mut HostTensor,
+        kv_mgr: &mut KvCacheManager,
+        bucket: usize,
+        events: &Sender<DecodeEvent>,
+    ) {
+        let Some(idx) = (0..bucket).find(|&i| slots[i].as_ref().map(|s| s.id) == Some(id)) else {
+            return; // finished in the meantime: stale decision, ignore
+        };
+        let slot = slots[idx].take().unwrap();
+        kv_mgr.release(id);
+        let kv = self
+            .runtime
+            .extract_kv_slot(kv_buf, bucket, idx)
+            .expect("kv extract");
+        let _ = events.send(DecodeEvent::MigratedOut {
+            instance: self.id,
+            payload: Box::new(AdmitPayload {
+                id,
+                kv,
+                pos: slot.pos,
+                next_token: slot.next_token,
+                generated: slot.generated,
+                forced_remaining: slot.forced_remaining,
+                replay: VecDeque::new(),
+                predicted_remaining: slot.predicted_remaining,
+            }),
+        });
+    }
+}

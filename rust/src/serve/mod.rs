@@ -1,0 +1,139 @@
+//! Live PD-disaggregated serving runtime (the paper's system, for real).
+//!
+//! Thread topology (DESIGN.md §7):
+//!
+//! ```text
+//!  clients ──► proxy/coordinator thread ──► prefill worker threads
+//!                 ▲      │ dispatch                │ PrefillDone
+//!                 │      ▼                         ▼
+//!              events  decode instance threads (one per instance)
+//!                        each: continuous batcher over StarRuntime
+//! ```
+//!
+//! * Every decode instance owns a fixed-bucket KV buffer plus a paged
+//!   [`KvCacheManager`] enforcing the configured token capacity (OOM
+//!   semantics identical to the simulator).
+//! * The coordinator runs the same [`Rescheduler`] (Algorithm 1) as the
+//!   simulator on worker state reports, and executes migrations by
+//!   extracting the KV slot on the source, delaying by the modeled
+//!   transfer time, and admitting on the target — the moving request is
+//!   paused while the rest of the batch keeps decoding (paper §5.4).
+//! * Clients hold a stream handle served by the proxy; migrations are
+//!   invisible to them.
+//!
+//! [`KvCacheManager`]: crate::kvcache::KvCacheManager
+//! [`Rescheduler`]: crate::coordinator::Rescheduler
+
+mod instance;
+mod server;
+
+pub use instance::{DecodeCommand, DecodeEvent, DecodeInstance, SlotSnapshot};
+pub use server::{ServeOutcome, ServeParams, Server};
+
+use crate::workload::Request;
+use crate::{RequestId, Time};
+
+/// A request as submitted to the live server: trace metadata plus the
+/// synthesized prompt bytes.
+#[derive(Clone, Debug)]
+pub struct LiveRequest {
+    pub id: RequestId,
+    pub arrival: Time,
+    pub prompt: Vec<u8>,
+    /// Forced output length (trace-driven runs); None = sample to EOS.
+    pub forced_output: Option<u32>,
+    pub tag: u8,
+}
+
+impl LiveRequest {
+    /// Synthesize the prompt for a trace request in the reasoning-trace
+    /// language (tag byte selects the expected-length band).
+    pub fn from_trace(req: &Request, max_prompt: usize) -> LiveRequest {
+        let tag_byte = b"abcdefghijklmnop"[(req.tag & 15) as usize];
+        let mut prompt = vec![1u8, b'Q', tag_byte];
+        let payload_len = (req.prompt_len as usize).clamp(1, max_prompt - 4);
+        for i in 0..payload_len {
+            prompt.push(b'a' + ((req.id as usize + i * 7) % 26) as u8);
+        }
+        prompt.push(b'?');
+        LiveRequest {
+            id: req.id,
+            arrival: req.arrival,
+            prompt,
+            forced_output: Some(req.output_len),
+            tag: req.tag,
+        }
+    }
+}
+
+/// Temperature sampling over logits (the serving-side sampler; greedy at
+/// temp == 0).
+pub fn sample_token(logits: &[f32], temp: f32, rng: &mut crate::prng::Pcg64) -> usize {
+    if temp <= 0.0 {
+        let mut best = 0;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let ws: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - mx) / temp) as f64).exp())
+        .collect();
+    let total: f64 = ws.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (i, w) in ws.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    ws.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    #[test]
+    fn sample_greedy_at_zero_temp() {
+        let mut rng = Pcg64::new(0, 0);
+        let logits = vec![0.0, 5.0, 1.0];
+        for _ in 0..10 {
+            assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        let mut rng = Pcg64::new(1, 0);
+        let logits = vec![2.0, 2.0, -30.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            counts[sample_token(&logits, 1.0, &mut rng)] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        assert!(counts[0] > 700 && counts[1] > 700);
+    }
+
+    #[test]
+    fn live_request_prompt_shape() {
+        let req = Request {
+            id: 3,
+            arrival: 0.0,
+            prompt_len: 10,
+            output_len: 100,
+            tag: 15,
+        };
+        let lr = LiveRequest::from_trace(&req, 128);
+        assert_eq!(lr.prompt[0], 1); // BOS
+        assert_eq!(lr.prompt[1], b'Q');
+        assert_eq!(lr.prompt[2], b'p'); // tag 15
+        assert_eq!(*lr.prompt.last().unwrap(), b'?');
+        assert!(lr.prompt.len() <= 128);
+    }
+}

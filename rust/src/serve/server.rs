@@ -1,0 +1,568 @@
+//! The serving coordinator: proxy + dispatch + STAR rescheduling over the
+//! live instance threads.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::instance::{AdmitPayload, DecodeCommand, DecodeEvent, DecodeInstance, SlotSnapshot};
+use super::LiveRequest;
+use crate::config::{ExperimentConfig, PredictorKind};
+use crate::coordinator::{
+    ClusterSnapshot, Dispatcher, DispatchPolicy, InstanceView, RequestView, Rescheduler,
+    ReschedulerStats,
+};
+use crate::costmodel::MigrationCostModel;
+use crate::metrics::{
+    RequestLatency, RunMetrics, TraceEvent, TraceRecorder, VarianceOverTime,
+};
+use crate::runtime::StarRuntime;
+use crate::{InstanceId, RequestId, Result, Time};
+
+/// Live-serving parameters (mirrors the simulator's [`SimParams`]).
+///
+/// [`SimParams`]: crate::sim::SimParams
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    pub exp: ExperimentConfig,
+    pub dispatch: DispatchPolicy,
+    pub temperature: f32,
+    pub migration: MigrationCostModel,
+    /// Hard wall-clock cap for the run.
+    pub max_wall_s: f64,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            exp: ExperimentConfig::default(),
+            dispatch: DispatchPolicy::CurrentLoad,
+            temperature: 0.9,
+            migration: MigrationCostModel::new_25gbps(4096),
+            max_wall_s: 600.0,
+        }
+    }
+}
+
+/// Results of a live run.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub metrics: RunMetrics,
+    pub exec_var: VarianceOverTime,
+    pub load_var: VarianceOverTime,
+    pub recorder: TraceRecorder,
+    pub scheduler_stats: ReschedulerStats,
+    pub wall_s: f64,
+    pub oom_events: u64,
+    pub migrations: u64,
+}
+
+struct ReqTracker {
+    latency: RequestLatency,
+    last_token: Option<Instant>,
+    tpot_sum: f64,
+    tpot_max: f64,
+    generated: u32,
+    done: bool,
+}
+
+struct InstanceState {
+    cmd: Sender<DecodeCommand>,
+    slots: Vec<SlotSnapshot>,
+    ewma_iter_ms: f64,
+    kv_used: u64,
+    kv_capacity: u64,
+    inbound_reserved: u64,
+}
+
+/// The live server. Owns the runtime and the experiment wiring.
+pub struct Server {
+    pub runtime: Arc<StarRuntime>,
+    pub params: ServeParams,
+}
+
+impl Server {
+    pub fn new(runtime: Arc<StarRuntime>, params: ServeParams) -> Server {
+        Server { runtime, params }
+    }
+
+    /// Serve a workload to completion; returns aggregated metrics.
+    pub fn run(&self, mut requests: Vec<LiveRequest>) -> Result<ServeOutcome> {
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let exp = &self.params.exp;
+        let n_requests = requests.len();
+        let start = Instant::now();
+        let since = |at: Instant| -> Time { at.duration_since(start).as_secs_f64() };
+
+        // --- spawn decode instances ---
+        let (ev_tx, ev_rx): (Sender<DecodeEvent>, Receiver<DecodeEvent>) = channel();
+        let mut instances: Vec<InstanceState> = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..exp.cluster.n_decode {
+            let (cmd_tx, cmd_rx) = channel();
+            let inst = DecodeInstance {
+                id: i,
+                runtime: Arc::clone(&self.runtime),
+                kv_capacity_tokens: exp.cluster.kv_capacity_tokens,
+                block_tokens: exp.cluster.block_tokens,
+                max_batch: exp.cluster.max_batch,
+                predictor: exp.predictor,
+                predict_every_iters: exp.rescheduler.predict_every_iters,
+                temperature: self.params.temperature,
+                seed: exp.cluster.seed,
+            };
+            let ev = ev_tx.clone();
+            handles.push(std::thread::spawn(move || inst.run(cmd_rx, ev)));
+            instances.push(InstanceState {
+                cmd: cmd_tx,
+                slots: Vec::new(),
+                ewma_iter_ms: 0.0,
+                kv_used: 0,
+                kv_capacity: exp.cluster.kv_capacity_tokens,
+                inbound_reserved: 0,
+            });
+        }
+
+        // --- spawn prefill workers ---
+        enum PrefillMsg {
+            Done {
+                req: LiveRequest,
+                kv: crate::runtime::HostTensor,
+                hidden: Vec<f32>,
+                first_token: i32,
+                at: Instant,
+            },
+            Err(RequestId, String),
+        }
+        let (pf_in_tx, pf_in_rx) = channel::<LiveRequest>();
+        let pf_in_rx = Arc::new(Mutex::new(pf_in_rx));
+        let (pf_out_tx, pf_out_rx) = channel::<PrefillMsg>();
+        for w in 0..exp.cluster.n_prefill {
+            let rx = Arc::clone(&pf_in_rx);
+            let tx = pf_out_tx.clone();
+            let rt = Arc::clone(&self.runtime);
+            let temp = self.params.temperature;
+            let seed = exp.cluster.seed ^ (w as u64) << 32;
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::prng::Pcg64::new(seed, 0x50524546);
+                loop {
+                    let req = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(req) = req else { break };
+                    match rt.prefill(&req.prompt) {
+                        Ok(out) => {
+                            let tok = super::sample_token(&out.logits, temp, &mut rng) as i32;
+                            let _ = tx.send(PrefillMsg::Done {
+                                req,
+                                kv: out.kv,
+                                hidden: out.hidden,
+                                first_token: tok,
+                                at: Instant::now(),
+                            });
+                        }
+                        Err(e) => {
+                            let _ = tx.send(PrefillMsg::Err(req.id, e.to_string()));
+                        }
+                    }
+                }
+            }));
+        }
+        drop(pf_out_tx);
+
+        // --- coordinator state ---
+        let mut trackers: HashMap<RequestId, ReqTracker> = HashMap::new();
+        for r in &requests {
+            trackers.insert(
+                r.id,
+                ReqTracker {
+                    latency: RequestLatency {
+                        arrival: r.arrival,
+                        ..Default::default()
+                    },
+                    last_token: None,
+                    tpot_sum: 0.0,
+                    tpot_max: 0.0,
+                    generated: 0,
+                    done: false,
+                },
+            );
+        }
+        let mut dispatcher = Dispatcher::new(self.params.dispatch);
+        let mut rescheduler = Rescheduler::new(
+            exp.rescheduler.clone(),
+            self.params.migration,
+            exp.predictor.uses_prediction(),
+        );
+        let mut recorder = TraceRecorder::new(exp.record_traces);
+        let mut exec_var = VarianceOverTime::new();
+        let mut load_var = VarianceOverTime::new();
+        let mut completed = 0usize;
+        let mut failed = 0usize;
+        let mut oom_events = 0u64;
+        let mut migrations = 0u64;
+        let mut migrating: Vec<RequestId> = Vec::new();
+        // exact capacity reservations made by migration decisions:
+        // request -> (dst instance, reserved tokens)
+        let mut reservations: HashMap<RequestId, (InstanceId, u64)> = HashMap::new();
+        // admission retry queue: (not_before, payload)
+        let mut retries: VecDeque<(Instant, Box<AdmitPayload>)> = VecDeque::new();
+        let mut next_arrival = 0usize;
+        let mut last_tick = Instant::now();
+        let interval = Duration::from_secs_f64(exp.rescheduler.interval_s);
+
+        let snapshot_of = |instances: &[InstanceState], migrating: &[RequestId], avg_iter: f64| {
+            ClusterSnapshot {
+                instances: instances
+                    .iter()
+                    .enumerate()
+                    .map(|(i, st)| InstanceView {
+                        id: i,
+                        requests: st
+                            .slots
+                            .iter()
+                            .map(|s| RequestView {
+                                id: s.id,
+                                tokens: s.tokens,
+                                predicted_remaining: s.predicted_remaining,
+                                migrating: migrating.contains(&s.id),
+                            })
+                            .collect(),
+                        kv_capacity_tokens: st.kv_capacity,
+                        inbound_reserved_tokens: st.inbound_reserved,
+                    })
+                    .collect(),
+                tokens_per_interval: interval.as_secs_f64() / avg_iter.max(1e-4),
+            }
+        };
+        let avg_iter_of = |instances: &[InstanceState]| {
+            let xs: Vec<f64> = instances
+                .iter()
+                .filter(|s| s.ewma_iter_ms > 0.0)
+                .map(|s| s.ewma_iter_ms / 1e3)
+                .collect();
+            if xs.is_empty() {
+                0.02
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+
+        // --- main loop ---
+        while completed + failed < n_requests {
+            if start.elapsed().as_secs_f64() > self.params.max_wall_s {
+                eprintln!("[serve] wall cap hit: {}s", self.params.max_wall_s);
+                break;
+            }
+
+            // inject arrivals whose time has come (trace times are wall s)
+            let now_s = start.elapsed().as_secs_f64();
+            while next_arrival < requests.len() && requests[next_arrival].arrival <= now_s {
+                let r = requests[next_arrival].clone();
+                recorder.record(now_s, TraceEvent::Arrived { request: r.id });
+                pf_in_tx
+                    .send(r)
+                    .map_err(|_| crate::Error::coordinator("prefill pool died"))?;
+                next_arrival += 1;
+            }
+
+            // re-dispatch parked payloads whose time has come: rejected
+            // admissions, OOM recompute victims, and migrated-out requests
+            // after their modeled KV-transfer delay (paper §5.4)
+            let now_i = Instant::now();
+            while let Some((not_before, _)) = retries.front() {
+                if *not_before > now_i {
+                    break;
+                }
+                let (_, payload) = retries.pop_front().unwrap();
+                migrating.retain(|&id| id != payload.id);
+                let di = if let Some((dst, amt)) = reservations.remove(&payload.id) {
+                    // migration delivery: go to the decided target and
+                    // release the exact reservation
+                    instances[dst].inbound_reserved =
+                        instances[dst].inbound_reserved.saturating_sub(amt);
+                    dst
+                } else {
+                    // rejected admission / OOM recompute: re-dispatch
+                    let avg = avg_iter_of(&instances);
+                    let snap = snapshot_of(&instances, &migrating, avg);
+                    let tokens = payload.pos as u64 + payload.replay.len() as u64;
+                    dispatcher.choose(&snap, tokens, payload.predicted_remaining)
+                };
+                let _ = instances[di].cmd.send(DecodeCommand::Admit(payload));
+            }
+
+            // prefill completions (non-blocking)
+            while let Ok(msg) = pf_out_rx.try_recv() {
+                match msg {
+                    PrefillMsg::Err(id, e) => {
+                        eprintln!("[serve] prefill failed for {id}: {e}");
+                        failed += 1;
+                        trackers.get_mut(&id).unwrap().done = true;
+                    }
+                    PrefillMsg::Done {
+                        req,
+                        kv,
+                        hidden,
+                        first_token,
+                        at,
+                    } => {
+                        let t = trackers.get_mut(&req.id).unwrap();
+                        t.latency.prefill_done = Some(since(at));
+                        t.latency.first_token = Some(since(at));
+                        t.last_token = Some(at);
+                        recorder.record(
+                            since(at),
+                            TraceEvent::PrefillDone {
+                                request: req.id,
+                                instance: 0,
+                            },
+                        );
+                        // initial prediction (drives PredictedLoad dispatch
+                        // and seeds the rescheduler's view)
+                        let pred = match self.params.exp.predictor {
+                            PredictorKind::None => None,
+                            PredictorKind::LlmNative => self
+                                .runtime
+                                .predict_remaining(&hidden)
+                                .ok()
+                                .map(|v| v[0] as f64),
+                            PredictorKind::Oracle | PredictorKind::Binned(_) => {
+                                req.forced_output.map(|o| o as f64)
+                            }
+                        };
+                        let avg = avg_iter_of(&instances);
+                        let snap = snapshot_of(&instances, &migrating, avg);
+                        let di =
+                            dispatcher.choose(&snap, req.prompt.len() as u64, pred);
+                        let payload = Box::new(AdmitPayload {
+                            id: req.id,
+                            kv,
+                            pos: req.prompt.len() as i32,
+                            next_token: first_token,
+                            generated: 0,
+                            forced_remaining: req.forced_output,
+                            replay: Default::default(),
+                            predicted_remaining: pred,
+                        });
+                        let _ = instances[di].cmd.send(DecodeCommand::Admit(payload));
+                    }
+                }
+            }
+
+            // decode events (block briefly so the loop doesn't spin)
+            match ev_rx.recv_timeout(Duration::from_millis(2)) {
+                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => {}
+                Ok(first) => {
+                    let mut pending = Some(first);
+                    while let Some(ev) = pending.take() {
+                        self.handle_event(
+                            ev,
+                            &since,
+                            &mut trackers,
+                            &mut instances,
+                            &mut recorder,
+                            &mut retries,
+                            &mut completed,
+                            &mut oom_events,
+                        );
+                        pending = ev_rx.try_recv().ok();
+                    }
+                }
+            }
+
+            // scheduler tick (Algorithm 1)
+            if last_tick.elapsed() >= interval {
+                last_tick = Instant::now();
+                let now_s = start.elapsed().as_secs_f64();
+                let iters: Vec<f64> = instances
+                    .iter()
+                    .map(|s| if s.slots.is_empty() { 0.0 } else { s.ewma_iter_ms })
+                    .collect();
+                exec_var.snapshot(now_s, &iters);
+                let loads: Vec<f64> = instances.iter().map(|s| s.kv_used as f64).collect();
+                load_var.snapshot(now_s, &loads);
+                for (i, st) in instances.iter().enumerate() {
+                    recorder.record(
+                        now_s,
+                        TraceEvent::KvSample {
+                            instance: i,
+                            kv_frac: st.kv_used as f64 / st.kv_capacity.max(1) as f64,
+                            tokens: st.kv_used,
+                            batch: st.slots.len(),
+                        },
+                    );
+                }
+                if exp.rescheduler.enabled {
+                    let avg = avg_iter_of(&instances);
+                    rescheduler.avg_iter_s = avg;
+                    let snap = snapshot_of(&instances, &migrating, avg);
+                    for d in rescheduler.decide(&snap) {
+                        migrations += 1;
+                        migrating.push(d.request);
+                        instances[d.dst].inbound_reserved += d.kv_tokens;
+                        reservations.insert(d.request, (d.dst, d.kv_tokens));
+                        recorder.record(
+                            now_s,
+                            TraceEvent::Migration {
+                                request: d.request,
+                                src: d.src,
+                                dst: d.dst,
+                                kv_tokens: d.kv_tokens,
+                            },
+                        );
+                        let _ = instances[d.src]
+                            .cmd
+                            .send(DecodeCommand::MigrateOut { id: d.request });
+                    }
+                }
+            }
+
+        }
+
+        // shutdown
+        for st in &instances {
+            let _ = st.cmd.send(DecodeCommand::Shutdown);
+        }
+        drop(pf_in_tx);
+        for h in handles {
+            let _ = h.join();
+        }
+
+        let wall = start.elapsed().as_secs_f64();
+        let mut metrics = RunMetrics {
+            completed: Vec::new(),
+            duration: wall,
+            oom_events,
+            migrations,
+        };
+        for t in trackers.into_values() {
+            if t.latency.finished.is_some() {
+                metrics.completed.push(t.latency);
+            }
+        }
+        Ok(ServeOutcome {
+            metrics,
+            exec_var,
+            load_var,
+            recorder,
+            scheduler_stats: rescheduler.stats.clone(),
+            wall_s: wall,
+            oom_events,
+            migrations,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_event(
+        &self,
+        ev: DecodeEvent,
+        since: &dyn Fn(Instant) -> Time,
+        trackers: &mut HashMap<RequestId, ReqTracker>,
+        instances: &mut [InstanceState],
+        recorder: &mut TraceRecorder,
+        retries: &mut VecDeque<(Instant, Box<AdmitPayload>)>,
+        completed: &mut usize,
+        oom_events: &mut u64,
+    ) {
+        match ev {
+            DecodeEvent::Token { id, at, .. } => {
+                if let Some(t) = trackers.get_mut(&id) {
+                    if let Some(prev) = t.last_token {
+                        let gap = at.duration_since(prev).as_secs_f64();
+                        t.tpot_sum += gap;
+                        t.tpot_max = t.tpot_max.max(gap);
+                    }
+                    t.last_token = Some(at);
+                    t.generated += 1;
+                    if t.latency.first_token.is_none() {
+                        t.latency.first_token = Some(since(at));
+                    }
+                }
+            }
+            DecodeEvent::Finished {
+                instance,
+                id,
+                generated,
+                at,
+            } => {
+                if let Some(t) = trackers.get_mut(&id) {
+                    if !t.done {
+                        t.done = true;
+                        *completed += 1;
+                        t.latency.finished = Some(since(at));
+                        t.latency.output_tokens = generated;
+                        if t.generated > 1 {
+                            t.latency.mean_tpot = Some(t.tpot_sum / (t.generated - 1) as f64);
+                            t.latency.max_tpot = Some(t.tpot_max);
+                        } else {
+                            t.latency.mean_tpot = Some(0.0);
+                            t.latency.max_tpot = Some(0.0);
+                        }
+                        recorder.record(
+                            since(at),
+                            TraceEvent::Finished {
+                                request: id,
+                                instance,
+                            },
+                        );
+                    }
+                }
+            }
+            DecodeEvent::AdmitRejected { payload, .. } => {
+                retries.push_back((Instant::now() + std::time::Duration::from_millis(25), payload));
+            }
+            DecodeEvent::MigratedOut { payload, .. } => {
+                // transfer delay: park in the retry queue; the retry path
+                // re-dispatches onto the (stale-aware) freshest snapshot,
+                // which for a migration is the chosen dst — the reschedule
+                // decision already reserved capacity there.
+                let delay = self
+                    .params
+                    .migration
+                    .transfer_time(payload.pos as u64);
+                if let Some(t) = trackers.get_mut(&payload.id) {
+                    t.latency.migrations += 1;
+                }
+                retries.push_back((
+                    Instant::now() + std::time::Duration::from_secs_f64(delay),
+                    payload,
+                ));
+            }
+            DecodeEvent::Oom { instance, victims, at } => {
+                *oom_events += 1;
+                recorder.record(
+                    since(at),
+                    TraceEvent::Oom {
+                        instance,
+                        victims: victims.len(),
+                    },
+                );
+                for v in victims {
+                    if let Some(t) = trackers.get_mut(&v.id) {
+                        t.latency.hit_oom = true;
+                    }
+                    retries.push_back((Instant::now(), v));
+                }
+            }
+            DecodeEvent::Report {
+                instance,
+                slots,
+                ewma_iter_ms,
+                kv_used,
+                kv_capacity,
+                ..
+            } => {
+                let st = &mut instances[instance];
+                st.slots = slots;
+                st.ewma_iter_ms = ewma_iter_ms;
+                st.kv_used = kv_used;
+                st.kv_capacity = kv_capacity;
+            }
+        }
+    }
+}

@@ -1,0 +1,757 @@
+//! The simulator engine: state + event handlers.
+
+use std::collections::VecDeque;
+
+use super::events::{Event, EventQueue};
+use super::report::SimReport;
+use super::{ReqState, SimRequest};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{
+    ClusterSnapshot, Dispatcher, DispatchPolicy, InstanceView, RequestView, Rescheduler,
+};
+use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
+use crate::kvcache::KvCacheManager;
+use crate::metrics::{
+    RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime,
+};
+use crate::predictor::{build_sim_predictor, LengthPredictor, PredictInput};
+use crate::workload::Request;
+use crate::{InstanceId, RequestId, Time};
+
+/// Substrate parameters for a simulation run.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    pub exp: ExperimentConfig,
+    pub dispatch: DispatchPolicy,
+    pub decode_cost: DecodeCostModel,
+    pub prefill_cost: PrefillCostModel,
+    pub migration: MigrationCostModel,
+    /// Hard wall on simulated time (safety against livelock).
+    pub max_sim_time: Time,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            exp: ExperimentConfig::default(),
+            dispatch: DispatchPolicy::CurrentLoad,
+            decode_cost: DecodeCostModel::paper_4090d(),
+            prefill_cost: PrefillCostModel::paper_4090d(),
+            migration: MigrationCostModel::new_25gbps(128 * 1024),
+            max_sim_time: 50_000.0,
+        }
+    }
+}
+
+struct PrefillSim {
+    queue: VecDeque<RequestId>,
+    busy: Option<RequestId>,
+}
+
+struct DecodeSim {
+    id: InstanceId,
+    kv: KvCacheManager,
+    active: Vec<RequestId>,
+    pending: VecDeque<RequestId>,
+    /// A DecodeStep event is in flight.
+    stepping: bool,
+    epoch: u64,
+    /// EWMA of iteration latency in ms (Fig. 3/11/13's metric).
+    ewma_iter_ms: f64,
+    iters: u64,
+    tokens_decoded: u64,
+}
+
+/// Event-driven cluster simulator. Drive with [`Simulator::run`].
+pub struct Simulator {
+    pub params: SimParams,
+    now: Time,
+    queue: EventQueue,
+    requests: Vec<SimRequest>,
+    prefill: Vec<PrefillSim>,
+    decode: Vec<DecodeSim>,
+    dispatcher: Dispatcher,
+    rescheduler: Rescheduler,
+    predictor: Box<dyn LengthPredictor>,
+    pub recorder: TraceRecorder,
+    exec_var: VarianceOverTime,
+    load_var: VarianceOverTime,
+    completed: usize,
+    failed: usize,
+    oom_events: u64,
+    migrations_started: u64,
+    output_mean: RunningVariance,
+}
+
+impl Simulator {
+    pub fn new(params: SimParams, trace: &[Request]) -> Simulator {
+        let exp = &params.exp;
+        let n_dec = exp.cluster.n_decode;
+        let use_pred = exp.predictor.uses_prediction();
+        let mut rescheduler = Rescheduler::new(
+            exp.rescheduler.clone(),
+            params.migration,
+            use_pred,
+        );
+        rescheduler.avg_iter_s = params.decode_cost.iter_time(
+            exp.cluster.kv_capacity_tokens / 2,
+            exp.cluster.max_batch / 2,
+        );
+        let cap = trace.iter().map(|r| r.output_len).max().unwrap_or(512) as f64;
+        let predictor = build_sim_predictor(
+            exp.predictor,
+            cap,
+            exp.predictor_rel_err,
+            exp.cluster.seed ^ 0x9e37,
+        );
+
+        let mut queue = EventQueue::new();
+        let mut requests = Vec::with_capacity(trace.len());
+        for r in trace {
+            queue.push(r.arrival, Event::Arrival { request: r.id });
+            requests.push(SimRequest {
+                id: r.id,
+                arrival: r.arrival,
+                prompt_len: r.prompt_len,
+                output_len: r.output_len,
+                generated: 0,
+                state: ReqState::Prefill,
+                predicted_remaining: None,
+                iters_since_predict: 0,
+                latency: crate::metrics::RequestLatency {
+                    arrival: r.arrival,
+                    ..Default::default()
+                },
+                last_token_at: None,
+                tpot_sum: 0.0,
+                tpot_max: 0.0,
+            });
+        }
+        queue.push(exp.rescheduler.interval_s, Event::SchedulerTick);
+
+        Simulator {
+            dispatcher: Dispatcher::new(params.dispatch),
+            rescheduler,
+            predictor,
+            recorder: TraceRecorder::new(exp.record_traces),
+            exec_var: VarianceOverTime::new(),
+            load_var: VarianceOverTime::new(),
+            now: 0.0,
+            requests,
+            prefill: (0..exp.cluster.n_prefill)
+                .map(|_| PrefillSim {
+                    queue: VecDeque::new(),
+                    busy: None,
+                })
+                .collect(),
+            decode: (0..n_dec)
+                .map(|id| DecodeSim {
+                    id,
+                    kv: KvCacheManager::new(
+                        exp.cluster.kv_capacity_tokens,
+                        exp.cluster.block_tokens,
+                    ),
+                    active: Vec::new(),
+                    pending: VecDeque::new(),
+                    stepping: false,
+                    epoch: 0,
+                    ewma_iter_ms: 0.0,
+                    iters: 0,
+                    tokens_decoded: 0,
+                })
+                .collect(),
+            queue,
+            completed: 0,
+            failed: 0,
+            oom_events: 0,
+            migrations_started: 0,
+            output_mean: RunningVariance::new(),
+            params,
+        }
+    }
+
+    /// Run to completion (all requests done/failed) or the time cap.
+    pub fn run(mut self) -> SimReport {
+        while let Some((at, ev)) = self.queue.pop() {
+            debug_assert!(at + 1e-9 >= self.now, "time went backwards");
+            self.now = at.max(self.now);
+            if self.now > self.params.max_sim_time {
+                break;
+            }
+            match ev {
+                Event::Arrival { request } => self.on_arrival(request),
+                Event::PrefillDone { prefill, request } => self.on_prefill_done(prefill, request),
+                Event::DecodeStep { instance, epoch } => self.on_decode_step(instance, epoch),
+                Event::MigrationDone { request, from, to } => {
+                    self.on_migration_done(request, from, to)
+                }
+                Event::SchedulerTick => self.on_scheduler_tick(),
+            }
+            if self.completed + self.failed == self.requests.len() {
+                break;
+            }
+        }
+        self.into_report()
+    }
+
+    // ------------------------------------------------------------------
+    // arrival + prefill
+
+    fn on_arrival(&mut self, id: RequestId) {
+        self.recorder.record(self.now, TraceEvent::Arrived { request: id });
+        // prefill instance selection: shortest queue (paper §2.1: by load)
+        let pi = (0..self.prefill.len())
+            .min_by_key(|&i| self.prefill[i].queue.len() + self.prefill[i].busy.is_some() as usize)
+            .expect("at least one prefill instance");
+        self.prefill[pi].queue.push_back(id);
+        self.maybe_start_prefill(pi);
+    }
+
+    fn maybe_start_prefill(&mut self, pi: usize) {
+        if self.prefill[pi].busy.is_some() {
+            return;
+        }
+        let Some(id) = self.prefill[pi].queue.pop_front() else {
+            return;
+        };
+        self.prefill[pi].busy = Some(id);
+        // recompute passes re-process prompt + generated tokens
+        let tokens = self.requests[id as usize].kv_tokens();
+        let dt = self.params.prefill_cost.time(tokens);
+        self.queue.push(
+            self.now + dt,
+            Event::PrefillDone {
+                prefill: pi,
+                request: id,
+            },
+        );
+    }
+
+    fn on_prefill_done(&mut self, pi: usize, id: RequestId) {
+        debug_assert_eq!(self.prefill[pi].busy, Some(id));
+        self.prefill[pi].busy = None;
+
+        // initial (or refreshed, after recompute) length prediction
+        let pred = {
+            let r = &self.requests[id as usize];
+            self.predictor.predict(&PredictInput {
+                id,
+                generated: r.generated,
+                true_remaining: Some(r.remaining()),
+            })
+        };
+        let r = &mut self.requests[id as usize];
+        r.predicted_remaining = pred;
+        r.latency.prefill_done = Some(self.now);
+        self.recorder.record(
+            self.now,
+            TraceEvent::PrefillDone {
+                request: id,
+                instance: pi,
+            },
+        );
+
+        // dispatch to a decode instance (the common P2D baseline layer)
+        let kv_tokens = self.requests[id as usize].kv_tokens();
+        let snapshot = self.snapshot();
+        let di = self.dispatcher.choose(&snapshot, kv_tokens, pred);
+
+        if kv_tokens > self.decode[di].kv.capacity_tokens() {
+            // cannot ever fit: fail the request (counted, not silently lost)
+            self.requests[id as usize].state = ReqState::Done;
+            self.failed += 1;
+        } else {
+            self.requests[id as usize].state = ReqState::Pending(di);
+            self.decode[di].pending.push_back(id);
+            self.kick(di);
+        }
+        self.maybe_start_prefill(pi);
+    }
+
+    // ------------------------------------------------------------------
+    // decode
+
+    /// Admit pending requests into the running batch and (re)schedule the
+    /// next iteration if the instance has work but no step in flight.
+    /// Admission is first-fit over the whole queue (vLLM-style): a huge
+    /// request at the head must not starve small ones behind it.
+    fn kick(&mut self, di: usize) {
+        let mut idx = 0;
+        while idx < self.decode[di].pending.len() {
+            if self.decode[di].active.len() >= self.params.exp.cluster.max_batch {
+                break;
+            }
+            let id = self.decode[di].pending[idx];
+            let need = self.requests[id as usize].kv_tokens();
+            // admission watermark (vLLM-style): keep growth headroom so
+            // running requests do not immediately OOM-thrash
+            let cap = self.decode[di].kv.capacity_tokens();
+            let ok = self.decode[di].kv.used_tokens() + need <= cap * 9 / 10
+                && self.decode[di].kv.would_fit(need);
+            if ok {
+                self.decode[di].pending.remove(idx);
+                self.decode[di]
+                    .kv
+                    .admit(id, need, di)
+                    .expect("would_fit checked");
+                self.requests[id as usize].state = ReqState::Decoding(di);
+                self.decode[di].active.push(id);
+            } else {
+                idx += 1;
+            }
+        }
+        if !self.decode[di].active.is_empty() && !self.decode[di].stepping {
+            self.schedule_step(di);
+        }
+    }
+
+    fn schedule_step(&mut self, di: usize) {
+        let d = &mut self.decode[di];
+        d.stepping = true;
+        d.epoch += 1;
+        // prediction overhead lands on iterations where repredictions fire
+        let k = self.params.exp.rescheduler.predict_every_iters.max(1);
+        let mut n_pred = 0usize;
+        for &id in &d.active {
+            if self.requests[id as usize].iters_since_predict + 1 >= k {
+                n_pred += 1;
+            }
+        }
+        let tokens: u64 = d
+            .active
+            .iter()
+            .map(|&id| self.requests[id as usize].kv_tokens())
+            .sum();
+        let mut dt = self
+            .params
+            .decode_cost
+            .iter_time(tokens, d.active.len());
+        if n_pred > 0 {
+            dt += self.predictor.cost_s(n_pred);
+        }
+        let at = self.now + dt;
+        // EWMA of iteration latency for the exec-variance metric
+        let ms = dt * 1e3;
+        d.ewma_iter_ms = if d.iters == 0 {
+            ms
+        } else {
+            0.9 * d.ewma_iter_ms + 0.1 * ms
+        };
+        let epoch = d.epoch;
+        self.queue.push(at, Event::DecodeStep { instance: di, epoch });
+    }
+
+    fn on_decode_step(&mut self, di: usize, epoch: u64) {
+        if self.decode[di].epoch != epoch {
+            return; // stale event (batch was rebuilt)
+        }
+        self.decode[di].stepping = false;
+        self.decode[di].iters += 1;
+
+        let batch: Vec<RequestId> = self.decode[di].active.clone();
+        let k = self.params.exp.rescheduler.predict_every_iters.max(1);
+        let mut finished: Vec<RequestId> = Vec::new();
+        let mut evicted: Vec<RequestId> = Vec::new();
+
+        for &id in &batch {
+            // a request migrated out mid-iteration is paused: no token
+            if !matches!(self.requests[id as usize].state, ReqState::Decoding(d) if d == di) {
+                continue;
+            }
+            if evicted.contains(&id) {
+                continue; // evicted by an earlier OOM in this same step
+            }
+            // KV append (may OOM -> evict victims -> retry once)
+            if let Err(_) = self.decode[di].kv.append_token(id, di) {
+                let victims = self.handle_oom(di, id);
+                evicted.extend(victims);
+                if evicted.contains(&id) {
+                    continue;
+                }
+                if self.decode[di].kv.append_token(id, di).is_err() {
+                    // nothing evictable freed room (everything else is
+                    // mid-migration): this request itself recomputes
+                    let vs = self.evict_requests(di, vec![id]);
+                    evicted.extend(vs);
+                    continue;
+                }
+            }
+            let r = &mut self.requests[id as usize];
+            r.generated += 1;
+            r.iters_since_predict += 1;
+            self.decode[di].tokens_decoded += 1;
+            if r.latency.first_token.is_none() {
+                r.latency.first_token = Some(self.now);
+            }
+            if let Some(prev) = r.last_token_at {
+                let gap = self.now - prev;
+                r.tpot_sum += gap;
+                r.tpot_max = r.tpot_max.max(gap);
+            }
+            r.last_token_at = Some(self.now);
+
+            if r.generated >= r.output_len {
+                finished.push(id);
+            } else if r.iters_since_predict >= k {
+                r.iters_since_predict = 0;
+                let input = PredictInput {
+                    id,
+                    generated: r.generated,
+                    true_remaining: Some(r.output_len - r.generated),
+                };
+                let p = self.predictor.predict(&input);
+                self.requests[id as usize].predicted_remaining = p;
+            }
+        }
+
+        for id in finished {
+            self.finish_request(di, id);
+        }
+        self.kick(di);
+    }
+
+    /// OOM on `di` while appending for `for_id`: evict the largest
+    /// requests (vLLM recompute semantics) and send them back to prefill.
+    /// Returns the victim list.
+    fn handle_oom(&mut self, di: usize, _for_id: RequestId) -> Vec<RequestId> {
+        self.oom_events += 1;
+        // free a breathing-room chunk (~4% of capacity), not just one
+        // block: per-block eviction re-OOMs on the very next append
+        let chunk = (self.decode[di].kv.capacity_tokens()
+            / (self.params.exp.cluster.block_tokens as u64 * 25)) as usize;
+        // take the full cheapest-first ordering, then keep only requests
+        // actively decoding HERE: a migrating request's KV is still
+        // registered on the source but its lifecycle is owned by the
+        // migration (evicting it would admit it twice)
+        let victims: Vec<RequestId> = self
+            .decode[di]
+            .kv
+            .eviction_victims(usize::MAX)
+            .into_iter()
+            .filter(|&v| matches!(self.requests[v as usize].state,
+                                  ReqState::Decoding(d) if d == di))
+            .scan(0usize, |freed, v| {
+                if *freed >= chunk.max(1) {
+                    return None;
+                }
+                *freed += (self.requests[v as usize].kv_tokens() as usize)
+                    .div_ceil(self.params.exp.cluster.block_tokens as usize);
+                Some(v)
+            })
+            .collect();
+        self.recorder.record(
+            self.now,
+            TraceEvent::Oom {
+                instance: di,
+                victims: victims.len(),
+            },
+        );
+        self.evict_requests(di, victims)
+    }
+
+    /// Evict `victims` from instance `di` for KV recompute: release their
+    /// blocks and send them back through prefill (vLLM recompute
+    /// semantics). Requests that can never fit are failed terminally.
+    fn evict_requests(&mut self, di: usize, victims: Vec<RequestId>) -> Vec<RequestId> {
+        let cap = self.decode[di].kv.capacity_tokens();
+        let block = self.params.exp.cluster.block_tokens as u64;
+        for &v in &victims {
+            self.decode[di].kv.release(v);
+            self.decode[di].active.retain(|&x| x != v);
+            let r = &mut self.requests[v as usize];
+            r.latency.hit_oom = true;
+            r.last_token_at = None; // recompute stall shows up as TTFT-like gap
+            if r.kv_tokens() + block >= cap {
+                // cannot ever make progress on any instance of this size:
+                // terminal failure (vLLM would abort the request too)
+                r.state = ReqState::Done;
+                self.failed += 1;
+            } else {
+                r.state = ReqState::Recomputing;
+                // recompute = re-run prefill over prompt+generated
+                self.queue.push(self.now, Event::Arrival { request: v });
+            }
+        }
+        victims
+    }
+
+    fn finish_request(&mut self, di: usize, id: RequestId) {
+        self.decode[di].kv.release(id);
+        self.decode[di].active.retain(|&x| x != id);
+        let r = &mut self.requests[id as usize];
+        r.state = ReqState::Done;
+        r.latency.finished = Some(self.now);
+        r.latency.output_tokens = r.generated;
+        if r.generated > 1 {
+            // mean gap between consecutive tokens, including migration stalls
+            r.latency.mean_tpot = Some(r.tpot_sum / (r.generated - 1) as f64);
+            r.latency.max_tpot = Some(r.tpot_max);
+        } else {
+            r.latency.mean_tpot = Some(0.0);
+            r.latency.max_tpot = Some(0.0);
+        }
+        self.output_mean.push(r.generated as f64);
+        self.completed += 1;
+        self.recorder.record(
+            self.now,
+            TraceEvent::Finished {
+                request: id,
+                instance: di,
+            },
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // rescheduling + migration
+
+    fn snapshot(&self) -> ClusterSnapshot {
+        let instances = self
+            .decode
+            .iter()
+            .map(|d| InstanceView {
+                id: d.id,
+                requests: d
+                    .active
+                    .iter()
+                    .map(|&id| {
+                        let r = &self.requests[id as usize];
+                        RequestView {
+                            id,
+                            tokens: r.kv_tokens(),
+                            predicted_remaining: r.predicted_remaining,
+                            migrating: matches!(r.state, ReqState::Migrating { .. }),
+                        }
+                    })
+                    .collect(),
+                kv_capacity_tokens: d.kv.capacity_tokens(),
+                inbound_reserved_tokens: self.inbound_reserved(d.id),
+            })
+            .collect();
+        let avg_iter = self.avg_iter_s();
+        ClusterSnapshot {
+            instances,
+            tokens_per_interval: self.params.exp.rescheduler.interval_s / avg_iter.max(1e-6),
+        }
+    }
+
+    fn inbound_reserved(&self, di: InstanceId) -> u64 {
+        self.requests
+            .iter()
+            .filter_map(|r| match r.state {
+                ReqState::Migrating { to, .. } if to == di => Some(r.kv_tokens()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    fn avg_iter_s(&self) -> f64 {
+        let busy: Vec<f64> = self
+            .decode
+            .iter()
+            .filter(|d| d.iters > 0)
+            .map(|d| d.ewma_iter_ms / 1e3)
+            .collect();
+        if busy.is_empty() {
+            self.rescheduler.avg_iter_s
+        } else {
+            busy.iter().sum::<f64>() / busy.len() as f64
+        }
+    }
+
+    fn on_scheduler_tick(&mut self) {
+        // metrics snapshots (taken whether or not rescheduling is on)
+        let iters: Vec<f64> = self
+            .decode
+            .iter()
+            .map(|d| if d.active.is_empty() { 0.0 } else { d.ewma_iter_ms })
+            .collect();
+        self.exec_var.snapshot(self.now, &iters);
+        let loads: Vec<f64> = self
+            .decode
+            .iter()
+            .map(|d| d.kv.used_tokens() as f64)
+            .collect();
+        self.load_var.snapshot(self.now, &loads);
+        for d in &self.decode {
+            self.recorder.record(
+                self.now,
+                TraceEvent::KvSample {
+                    instance: d.id,
+                    kv_frac: d.kv.usage_frac(),
+                    tokens: d.kv.used_tokens(),
+                    batch: d.active.len(),
+                },
+            );
+        }
+
+        if self.params.exp.rescheduler.enabled {
+            self.rescheduler.avg_iter_s = self.avg_iter_s();
+            if self.output_mean.count() > 10 {
+                self.rescheduler.default_remaining = self.output_mean.mean() / 2.0;
+            }
+            let snapshot = self.snapshot();
+            let decisions = self.rescheduler.decide(&snapshot);
+            for d in decisions {
+                self.start_migration(d.request, d.src, d.dst, d.kv_tokens);
+            }
+        }
+
+        self.queue.push(
+            self.now + self.params.exp.rescheduler.interval_s,
+            Event::SchedulerTick,
+        );
+    }
+
+    fn start_migration(&mut self, id: RequestId, from: InstanceId, to: InstanceId, kv: u64) {
+        let r = &mut self.requests[id as usize];
+        debug_assert!(matches!(r.state, ReqState::Decoding(d) if d == from));
+        r.state = ReqState::Migrating { from, to };
+        r.latency.migrations += 1;
+        self.migrations_started += 1;
+        // pause: out of the running batch immediately (overlap: the rest
+        // of the batch keeps decoding, §5.4)
+        self.decode[from].active.retain(|&x| x != id);
+        self.recorder.record(
+            self.now,
+            TraceEvent::Migration {
+                request: id,
+                src: from,
+                dst: to,
+                kv_tokens: kv,
+            },
+        );
+        let dt = self.params.migration.transfer_time(kv);
+        self.queue.push(self.now + dt, Event::MigrationDone { request: id, from, to });
+    }
+
+    fn on_migration_done(&mut self, id: RequestId, from: InstanceId, to: InstanceId) {
+        // source frees its copy only after the transfer (both sides hold
+        // KV during the copy, as with NIXL)
+        self.decode[from].kv.release(id);
+        let r = &mut self.requests[id as usize];
+        debug_assert!(matches!(r.state, ReqState::Migrating { .. }));
+        r.state = ReqState::Pending(to);
+        self.decode[to].pending.push_back(id);
+        self.kick(to);
+        self.kick(from);
+    }
+
+    // ------------------------------------------------------------------
+
+    fn into_report(self) -> SimReport {
+        let mut report = SimReport {
+            duration: self.now,
+            completed: Vec::new(),
+            n_failed: self.failed,
+            n_requests: self.requests.len(),
+            oom_events: self.oom_events,
+            migrations: self.migrations_started,
+            exec_var: self.exec_var,
+            load_var: self.load_var,
+            recorder: self.recorder,
+            scheduler_stats: self.rescheduler.stats.clone(),
+            per_instance_tokens: self.decode.iter().map(|d| d.tokens_decoded).collect(),
+        };
+        for r in self.requests {
+            if matches!(r.state, ReqState::Done) && r.latency.finished.is_some() {
+                report.completed.push(r.latency);
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PredictorKind;
+    use crate::workload::{Dataset, TraceGen};
+
+    fn small_params(n_req: usize, rps: f64) -> (SimParams, Vec<Request>) {
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_decode = 3;
+        exp.cluster.n_requests = n_req;
+        exp.cluster.rps = rps;
+        exp.cluster.kv_capacity_tokens = 200_000;
+        exp.predictor = PredictorKind::Oracle;
+        let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n_req, 42);
+        (
+            SimParams {
+                exp,
+                ..Default::default()
+            },
+            trace,
+        )
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let (p, trace) = small_params(40, 0.5);
+        let report = Simulator::new(p, &trace).run();
+        assert_eq!(report.completed.len() + report.n_failed, 40);
+        assert!(report.metrics().throughput() > 0.0);
+    }
+
+    #[test]
+    fn tokens_generated_match_trace() {
+        let (p, trace) = small_params(20, 0.5);
+        let report = Simulator::new(p, &trace).run();
+        let total_out: u32 = report.completed.iter().map(|l| l.output_tokens).sum();
+        let expect: u32 = trace.iter().map(|r| r.output_len).sum();
+        assert_eq!(total_out, expect);
+    }
+
+    #[test]
+    fn latencies_are_ordered() {
+        let (p, trace) = small_params(25, 1.0);
+        let report = Simulator::new(p, &trace).run();
+        for l in &report.completed {
+            let ft = l.first_token.unwrap();
+            let fin = l.finished.unwrap();
+            assert!(l.arrival <= l.prefill_done.unwrap());
+            assert!(l.prefill_done.unwrap() <= ft + 1e-9);
+            assert!(ft <= fin + 1e-9);
+        }
+    }
+
+    #[test]
+    fn rescheduling_triggers_migrations_under_skew() {
+        let (mut p, trace) = small_params(60, 1.2);
+        p.exp.rescheduler.enabled = true;
+        p.exp.rescheduler.interval_s = 0.5;
+        let report = Simulator::new(p, &trace).run();
+        assert!(
+            report.migrations > 0,
+            "heavy-tail ShareGPT load should trigger at least one migration"
+        );
+    }
+
+    #[test]
+    fn disabled_rescheduler_never_migrates() {
+        let (mut p, trace) = small_params(60, 1.2);
+        p.exp.rescheduler.enabled = false;
+        let report = Simulator::new(p, &trace).run();
+        assert_eq!(report.migrations, 0);
+    }
+
+    #[test]
+    fn tight_memory_produces_ooms_without_rescheduling() {
+        let (mut p, trace) = small_params(60, 2.0);
+        p.exp.rescheduler.enabled = false;
+        p.exp.cluster.kv_capacity_tokens = 30_000; // tight
+        let report = Simulator::new(p, &trace).run();
+        assert!(report.oom_events > 0, "expected OOMs under tight memory");
+        // OOM victims recompute and still finish
+        assert_eq!(report.completed.len() + report.n_failed, 60);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let (p, trace) = small_params(30, 1.0);
+        let r1 = Simulator::new(p.clone(), &trace).run();
+        let r2 = Simulator::new(p, &trace).run();
+        assert_eq!(r1.completed.len(), r2.completed.len());
+        assert!((r1.duration - r2.duration).abs() < 1e-9);
+        assert_eq!(r1.migrations, r2.migrations);
+    }
+}

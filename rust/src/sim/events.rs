@@ -1,0 +1,128 @@
+//! Event queue for the simulator: a min-heap on simulation time.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::{InstanceId, RequestId, Time};
+
+/// Discrete simulation events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A request enters the system (goes to a prefill queue).
+    Arrival { request: RequestId },
+    /// A prefill instance finishes its current request.
+    PrefillDone {
+        prefill: InstanceId,
+        request: RequestId,
+    },
+    /// A decode instance completes one batched iteration.
+    DecodeStep { instance: InstanceId, epoch: u64 },
+    /// KV transfer for a migration completes.
+    MigrationDone {
+        request: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+    },
+    /// Periodic scheduler tick (Algorithm 1 interval).
+    SchedulerTick,
+}
+
+#[derive(Clone, Debug)]
+struct Scheduled {
+    at: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first; ties broken
+        // by insertion order for determinism.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: Time, event: Event) {
+        debug_assert!(at.is_finite(), "event at non-finite time");
+        self.seq += 1;
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        self.heap.pop().map(|s| (s.at, s.event))
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::SchedulerTick);
+        q.push(1.0, Event::Arrival { request: 1 });
+        q.push(2.0, Event::Arrival { request: 2 });
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_pop_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival { request: 10 });
+        q.push(1.0, Event::Arrival { request: 20 });
+        match q.pop().unwrap().1 {
+            Event::Arrival { request } => assert_eq!(request, 10),
+            _ => panic!(),
+        }
+        match q.pop().unwrap().1 {
+            Event::Arrival { request } => assert_eq!(request, 20),
+            _ => panic!(),
+        }
+    }
+}

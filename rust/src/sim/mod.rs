@@ -1,0 +1,77 @@
+//! Event-driven cluster simulator (paper §6.3: "we use event-driven
+//! simulation to model request arrivals, decode execution, and migration
+//! events; the execution time of each decode iteration is derived from
+//! real system measurements").
+//!
+//! The simulator shares the *exact* policy code with the live runtime:
+//! [`crate::coordinator::Dispatcher`] for prefill→decode hand-off and
+//! [`crate::coordinator::Rescheduler`] (Algorithm 1) for decode-phase
+//! migration. Only the execution substrate differs — decode iteration
+//! times come from a [`DecodeCostModel`] calibrated by the `fig8_costmodel`
+//! bench instead of PJRT execution.
+//!
+//! Fidelity points:
+//! * decode instances run continuous batching; iteration time is linear in
+//!   batched tokens (Fig. 8);
+//! * per-request reprediction every `predict_every_iters` iterations, with
+//!   the predictor's latency added to that iteration (paper §5.3);
+//! * migrations pause only the moving request, transfer KV at link
+//!   bandwidth, and resume on the target (paper §5.4 overlap);
+//! * KV OOM evicts victims that must recompute their KV via a prefill
+//!   pass, reproducing the paper's Issue-1 cascade.
+
+mod engine;
+mod events;
+mod report;
+
+pub use engine::{SimParams, Simulator};
+pub use report::SimReport;
+
+use crate::metrics::RequestLatency;
+use crate::{InstanceId, RequestId, Time};
+
+/// Lifecycle of one simulated request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    /// Waiting for / running prefill.
+    Prefill,
+    /// In a decode instance's pending queue (not yet in the batch).
+    Pending(InstanceId),
+    /// Actively decoding on an instance.
+    Decoding(InstanceId),
+    /// KV in flight between instances.
+    Migrating { from: InstanceId, to: InstanceId },
+    /// Evicted by OOM, waiting to re-run prefill (KV recompute).
+    Recomputing,
+    Done,
+}
+
+/// Full simulator-side request record.
+#[derive(Clone, Debug)]
+pub struct SimRequest {
+    pub id: RequestId,
+    pub arrival: Time,
+    pub prompt_len: u32,
+    /// Ground-truth output length (the trace's realized length).
+    pub output_len: u32,
+    pub generated: u32,
+    pub state: ReqState,
+    pub predicted_remaining: Option<f64>,
+    pub iters_since_predict: u32,
+    pub latency: RequestLatency,
+    /// Last time a token was emitted (TPOT gap tracking).
+    pub last_token_at: Option<Time>,
+    pub tpot_sum: f64,
+    pub tpot_max: f64,
+}
+
+impl SimRequest {
+    pub fn remaining(&self) -> u32 {
+        self.output_len.saturating_sub(self.generated)
+    }
+
+    /// Current KV token footprint: prompt + generated.
+    pub fn kv_tokens(&self) -> u64 {
+        self.prompt_len as u64 + self.generated as u64
+    }
+}

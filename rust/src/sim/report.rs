@@ -1,0 +1,55 @@
+//! Simulation outputs: everything the benches need to print the paper's
+//! tables and figures.
+
+use crate::coordinator::ReschedulerStats;
+use crate::metrics::{RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
+use crate::Time;
+
+/// Result of one simulation run.
+#[derive(Debug)]
+pub struct SimReport {
+    pub duration: Time,
+    pub completed: Vec<RequestLatency>,
+    pub n_failed: usize,
+    pub n_requests: usize,
+    pub oom_events: u64,
+    pub migrations: u64,
+    /// Cross-instance variance of per-iteration latency (ms^2) over time
+    /// (Figs. 3, 11, 13).
+    pub exec_var: VarianceOverTime,
+    /// Cross-instance variance of KV token load over time.
+    pub load_var: VarianceOverTime,
+    pub recorder: TraceRecorder,
+    pub scheduler_stats: ReschedulerStats,
+    pub per_instance_tokens: Vec<u64>,
+}
+
+impl SimReport {
+    /// Convert to the shared end-to-end metrics container.
+    pub fn metrics(&self) -> RunMetrics {
+        RunMetrics {
+            completed: self.completed.clone(),
+            duration: self.duration,
+            oom_events: self.oom_events,
+            migrations: self.migrations,
+        }
+    }
+
+    /// One-line summary used by examples and benches.
+    pub fn summary(&self, slo: Slo) -> String {
+        let m = self.metrics();
+        format!(
+            "completed {}/{} in {:.1}s | throughput {:.4} req/s | goodput {:.4} req/s | \
+             P99 TPOT {:.2} ms | mean exec-var {:.3} ms^2 | OOMs {} | migrations {}",
+            self.completed.len(),
+            self.n_requests,
+            self.duration,
+            m.throughput(),
+            m.goodput(slo),
+            m.p99_tpot_ms(),
+            self.exec_var.sample_mean(),
+            self.oom_events,
+            self.migrations,
+        )
+    }
+}

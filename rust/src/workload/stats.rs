@@ -1,0 +1,101 @@
+//! Trace statistics — the Table 2 analog printer (bench `fig2_workload`).
+
+use super::Request;
+
+/// Summary statistics of one length column (input or output).
+#[derive(Clone, Debug, Default)]
+pub struct LenStats {
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl LenStats {
+    pub fn from_values(vals: &[f64]) -> LenStats {
+        if vals.is_empty() {
+            return LenStats::default();
+        }
+        let mut v = vals.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len() as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        let q = |p: f64| v[((p * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)];
+        LenStats {
+            mean,
+            std: var.sqrt(),
+            p50: q(0.50),
+            p90: q(0.90),
+            p95: q(0.95),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Input + output stats for a trace (rows of the paper's Table 2).
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    pub input: LenStats,
+    pub output: LenStats,
+    pub n: usize,
+}
+
+impl TraceStats {
+    pub fn from_requests(reqs: &[Request]) -> TraceStats {
+        let ins: Vec<f64> = reqs.iter().map(|r| r.prompt_len as f64).collect();
+        let outs: Vec<f64> = reqs.iter().map(|r| r.output_len as f64).collect();
+        TraceStats {
+            input: LenStats::from_values(&ins),
+            output: LenStats::from_values(&outs),
+            n: reqs.len(),
+        }
+    }
+
+    /// Render rows in the paper's Table 2 layout.
+    pub fn render(&self, name: &str) -> String {
+        let row = |metric: &str, s: &LenStats| {
+            format!(
+                "| {name} | {metric} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} |",
+                s.mean, s.std, s.p50, s.p90, s.p95
+            )
+        };
+        format!(
+            "{}\n{}",
+            row("Input", &self.input),
+            row("Output", &self.output)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Dataset, TraceGen};
+
+    #[test]
+    fn percentiles_ordered() {
+        let reqs = TraceGen::new(Dataset::ShareGpt, 1.0).generate(5000, 0);
+        let st = TraceStats::from_requests(&reqs);
+        assert!(st.output.p50 <= st.output.p90);
+        assert!(st.output.p90 <= st.output.p95);
+        assert!(st.output.p95 <= st.output.max);
+        assert!(st.input.p50 <= st.input.p90);
+    }
+
+    #[test]
+    fn empty_trace_is_zeroed() {
+        let st = LenStats::from_values(&[]);
+        assert_eq!(st.mean, 0.0);
+        assert_eq!(st.max, 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let st = LenStats::from_values(&[42.0]);
+        assert_eq!(st.p50, 42.0);
+        assert_eq!(st.std, 0.0);
+    }
+}
