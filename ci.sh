@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate (DESIGN.md §9): build + tests + formatting for the rust
+# crate. Run from anywhere; exits non-zero on the first failure.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+cargo build --release
+cargo test -q
+cargo fmt --check

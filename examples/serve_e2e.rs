@@ -11,7 +11,6 @@
 use std::sync::Arc;
 
 use star::config::PredictorKind;
-use star::coordinator::DispatchPolicy;
 use star::metrics::Slo;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
@@ -66,7 +65,7 @@ fn main() -> Result<(), star::Error> {
         params.exp.rescheduler.enabled = resched;
         params.exp.rescheduler.interval_s = 0.25;
         params.exp.predictor = pred;
-        params.dispatch = DispatchPolicy::CurrentLoad;
+        params.exp.dispatch_policy = "current_load".to_string();
         params.max_wall_s = 240.0;
 
         let server = Server::new(Arc::clone(&rt), params);

@@ -6,21 +6,20 @@
 use star::bench::scenarios::{scaled, sim_params, small_cluster};
 use star::bench::Table;
 use star::config::PredictorKind;
-use star::coordinator::DispatchPolicy;
 use star::sim::Simulator;
 use star::workload::{Dataset, TraceGen};
 
 fn main() {
     let n = scaled(300);
     let rps = 0.1; // paper Fig 3 setting
-    for dispatch in [DispatchPolicy::RoundRobin, DispatchPolicy::CurrentLoad] {
+    for dispatch in ["round_robin", "current_load"] {
         let mut exp = small_cluster(Dataset::ShareGpt, rps, 11);
         exp.rescheduler.enabled = false;
         exp.predictor = PredictorKind::None;
         exp.record_traces = true;
+        exp.dispatch_policy = dispatch.to_string();
         let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n, 11);
-        let mut params = sim_params(exp, false);
-        params.dispatch = dispatch;
+        let params = sim_params(exp, false);
         // reconstruct per-instance decode latency over time from the
         // KV samples (tokens -> iteration time through the cost model)
         let cost = params.decode_cost;
@@ -28,8 +27,8 @@ fn main() {
         let mut t = Table::new(
             &format!(
                 "Fig 3{}: per-instance decode-step latency (ms) over time — {}",
-                if dispatch == DispatchPolicy::RoundRobin { "a" } else { "b" },
-                dispatch.name()
+                if dispatch == "round_robin" { "a" } else { "b" },
+                dispatch
             ),
             &["t(s)", "inst0", "inst1", "inst2", "spread(max-min)"],
         );
@@ -65,7 +64,7 @@ fn main() {
         t.print();
         println!(
             "{}: exec-time variance (mean) {:.2} ms^2 | max latency spread {:.2} ms | OOMs {}",
-            dispatch.name(),
+            dispatch,
             report.exec_var.sample_mean(),
             max_spread,
             report.oom_events

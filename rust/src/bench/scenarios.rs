@@ -3,7 +3,6 @@
 //! shapes, so every bench runs the same definitions.
 
 use crate::config::{ExperimentConfig, PredictorKind};
-use crate::coordinator::DispatchPolicy;
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::sim::{SimParams, SimReport, Simulator};
 use crate::workload::{Dataset, Request, TraceGen};
@@ -66,11 +65,11 @@ pub fn large_cluster(dataset: Dataset, rps: f64, seed: u64) -> ExperimentConfig 
     exp
 }
 
-/// Simulator substrate for a cluster profile.
+/// Simulator substrate for a cluster profile. Policies ride along in
+/// `exp.dispatch_policy` / `exp.reschedule_policy` (registry names).
 pub fn sim_params(exp: ExperimentConfig, h800: bool) -> SimParams {
     SimParams {
         exp,
-        dispatch: DispatchPolicy::CurrentLoad,
         decode_cost: if h800 {
             DecodeCostModel::paper_h800()
         } else {

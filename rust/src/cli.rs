@@ -60,10 +60,21 @@ impl Args {
                         out.opts.insert(k.to_string(), v.to_string());
                         continue;
                     }
-                    return Err(Error::Cli(format!("unknown option --{k}")));
+                    if known_flags.contains(&k) {
+                        return Err(Error::Cli(format!(
+                            "flag --{k} takes no value (got `{v}`)"
+                        )));
+                    }
+                    return Err(Error::Cli(format!(
+                        "unknown option --{k}\n\n{}",
+                        spec.render_help()
+                    )));
                 }
                 if known_flags.contains(&name) {
-                    out.flags.push(name.to_string());
+                    // repeated flags are idempotent, not an error
+                    if !out.flags.iter().any(|f| f == name) {
+                        out.flags.push(name.to_string());
+                    }
                     continue;
                 }
                 if known_opts.contains(&name) {
@@ -167,6 +178,30 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(&argv(&["x", "--rps"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_a_clear_error() {
+        let e = Args::parse(&argv(&["x", "--verbose=1"]), &spec()).unwrap_err();
+        let msg = e.to_string();
+        assert!(
+            msg.contains("flag --verbose takes no value"),
+            "misleading error: {msg}"
+        );
+        // genuinely unknown --key=value still reports unknown option
+        let e = Args::parse(&argv(&["x", "--nope=1"]), &spec()).unwrap_err();
+        assert!(e.to_string().contains("unknown option --nope"));
+    }
+
+    #[test]
+    fn repeated_flags_dedupe() {
+        let a = Args::parse(
+            &argv(&["x", "--verbose", "--verbose", "--verbose"]),
+            &spec(),
+        )
+        .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.flags.len(), 1, "flags must be stored once: {:?}", a.flags);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Typed experiment configuration assembled from a [`super::Config`].
 
-use super::Config;
+use std::collections::BTreeMap;
+
+use super::{Config, Value};
 use crate::workload::Dataset;
 use crate::{Error, Result};
 
@@ -75,6 +77,17 @@ pub struct ReschedulerConfig {
     /// Safety margin on the target's memory check (fraction of capacity
     /// kept free over the horizon, Alg. 1 line 21).
     pub mem_safety_frac: f64,
+    /// Seed for the average decode iteration time T̄_exec before any
+    /// measurement exists (drivers overwrite it with EWMA measurements
+    /// every interval). Default 0.02 s ≈ the paper's 18.23 ms RTX 4090D
+    /// iteration at 50% KV occupancy (§5.3).
+    pub initial_avg_iter_s: f64,
+    /// Remaining output length assumed for a request with no prediction
+    /// (Alg. 1 without `usePrediction` still needs a number for the
+    /// migration-amortization check). Default 1000 tokens ≈ half the
+    /// ShareGPT mean realized output; drivers refine it online from the
+    /// workload's running mean.
+    pub default_remaining: f64,
 }
 
 impl Default for ReschedulerConfig {
@@ -88,6 +101,8 @@ impl Default for ReschedulerConfig {
             predict_every_iters: 20,
             max_migrations_per_interval: 1,
             mem_safety_frac: 0.01,
+            initial_avg_iter_s: 0.02,
+            default_remaining: 1000.0,
         }
     }
 }
@@ -127,7 +142,7 @@ impl Default for ClusterConfig {
 }
 
 /// Fully-resolved experiment config.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub rescheduler: ReschedulerConfig,
@@ -136,6 +151,29 @@ pub struct ExperimentConfig {
     /// from artifacts/predictor_eval.tsv MAE / mean-remaining).
     pub predictor_rel_err: f64,
     pub record_traces: bool,
+    /// Dispatch policy, by registry name (config key `policy.dispatch`).
+    pub dispatch_policy: String,
+    /// Reschedule policy, by registry name (config key `policy.reschedule`).
+    pub reschedule_policy: String,
+    /// Policy-specific numeric knobs: every numeric `policy.*` config key
+    /// except the two names above, with the `policy.` prefix stripped
+    /// (e.g. `policy.slo_aware.mem_weight = 2.0`).
+    pub policy_params: BTreeMap<String, f64>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            cluster: ClusterConfig::default(),
+            rescheduler: ReschedulerConfig::default(),
+            predictor: PredictorKind::default(),
+            predictor_rel_err: 0.0,
+            record_traces: false,
+            dispatch_policy: "current_load".to_string(),
+            reschedule_policy: "star".to_string(),
+            policy_params: BTreeMap::new(),
+        }
+    }
 }
 
 impl ExperimentConfig {
@@ -171,14 +209,44 @@ impl ExperimentConfig {
                 rd.max_migrations_per_interval as i64,
             ) as usize,
             mem_safety_frac: cfg.f64_or("rescheduler.mem_safety_frac", rd.mem_safety_frac),
+            initial_avg_iter_s: cfg.f64_or("rescheduler.initial_avg_iter_s", rd.initial_avg_iter_s),
+            default_remaining: cfg.f64_or("rescheduler.default_remaining", rd.default_remaining),
         };
         let predictor = PredictorKind::parse(cfg.str_or("predictor.kind", "oracle"))?;
+        let ed = ExperimentConfig::default();
+        let mut policy_params = BTreeMap::new();
+        for key in cfg.keys() {
+            let Some(knob) = key.strip_prefix("policy.") else {
+                continue;
+            };
+            if knob == "dispatch" || knob == "reschedule" {
+                continue;
+            }
+            match cfg.get(key) {
+                Some(Value::Int(v)) => {
+                    policy_params.insert(knob.to_string(), *v as f64);
+                }
+                Some(Value::Float(v)) => {
+                    policy_params.insert(knob.to_string(), *v);
+                }
+                _ => {
+                    return Err(Error::config(format!(
+                        "policy knob `{key}` must be numeric"
+                    )));
+                }
+            }
+        }
         Ok(ExperimentConfig {
             cluster,
             rescheduler,
             predictor,
             predictor_rel_err: cfg.f64_or("predictor.rel_err", 0.25),
             record_traces: cfg.bool_or("experiment.record_traces", false),
+            dispatch_policy: cfg.str_or("policy.dispatch", &ed.dispatch_policy).to_string(),
+            reschedule_policy: cfg
+                .str_or("policy.reschedule", &ed.reschedule_policy)
+                .to_string(),
+            policy_params,
         })
     }
 
@@ -197,6 +265,49 @@ impl ExperimentConfig {
         }
         if self.cluster.block_tokens == 0 {
             return Err(Error::config("block_tokens must be > 0"));
+        }
+        if self.rescheduler.initial_avg_iter_s <= 0.0 {
+            return Err(Error::config("initial_avg_iter_s must be > 0"));
+        }
+        if self.rescheduler.default_remaining <= 0.0 {
+            return Err(Error::config("default_remaining must be > 0"));
+        }
+        // policy names are resolved against the *builtin* registry here;
+        // custom registries bypass validate() and surface unknown names
+        // when the ControlLoop is built.
+        let reg = crate::coordinator::PolicyRegistry::with_builtins();
+        if !reg.has_dispatch(&self.dispatch_policy) {
+            return Err(Error::config(format!(
+                "unknown dispatch policy `{}` (known: {})",
+                self.dispatch_policy,
+                reg.dispatch_names().join("|")
+            )));
+        }
+        if !reg.has_reschedule(&self.reschedule_policy) {
+            return Err(Error::config(format!(
+                "unknown reschedule policy `{}` (known: {})",
+                self.reschedule_policy,
+                reg.reschedule_names().join("|")
+            )));
+        }
+        // knob keys are `<policy>.<knob>`; a typoed or aliased policy
+        // prefix would otherwise be silently ignored and the default knob
+        // value used — in a reproduction codebase the knob values ARE the
+        // experiment. Policies read knobs by exact canonical key, so the
+        // prefix must be the canonical name (aliases are fine for the
+        // `dispatch`/`reschedule` selectors, not here).
+        for key in self.policy_params.keys() {
+            let prefix = key.split('.').next().unwrap_or(key);
+            let canonical = reg.dispatch_names().iter().any(|n| n == prefix)
+                || reg.reschedule_names().iter().any(|n| n == prefix);
+            if !canonical {
+                return Err(Error::config(format!(
+                    "policy knob `{key}` must be prefixed with a canonical \
+                     policy name (dispatch: {}; reschedule: {})",
+                    reg.dispatch_names().join("|"),
+                    reg.reschedule_names().join("|")
+                )));
+            }
         }
         Ok(())
     }
@@ -253,5 +364,60 @@ mod tests {
         let mut exp = ExperimentConfig::default();
         exp.rescheduler.beta_decay = 1.5;
         assert!(exp.validate().is_err());
+        let mut exp = ExperimentConfig::default();
+        exp.dispatch_policy = "bogus".to_string();
+        assert!(exp.validate().is_err());
+        let mut exp = ExperimentConfig::default();
+        exp.reschedule_policy = "bogus".to_string();
+        assert!(exp.validate().is_err());
+        // typoed knob prefixes are rejected, valid ones accepted
+        let mut exp = ExperimentConfig::default();
+        exp.policy_params
+            .insert("slo_awre.mem_weight".to_string(), 2.0);
+        assert!(exp.validate().is_err());
+        // aliased knob prefixes are rejected too: policies read knobs by
+        // exact canonical key, so an alias would be silently ignored
+        let mut exp = ExperimentConfig::default();
+        exp.policy_params
+            .insert("mem_pressure.trigger_frac".to_string(), 0.9);
+        assert!(exp.validate().is_err());
+        let mut exp = ExperimentConfig::default();
+        exp.policy_params
+            .insert("memory_pressure.trigger_frac".to_string(), 0.9);
+        exp.validate().unwrap();
+    }
+
+    #[test]
+    fn policy_section_parses_names_and_knobs() {
+        let cfg = Config::from_str(
+            "[policy]\ndispatch = \"slo_aware\"\nreschedule = \"memory_pressure\"\n\
+             [policy.slo_aware]\nmem_weight = 2.0\n\
+             [policy.memory_pressure]\ntrigger_frac = 0.9\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.dispatch_policy, "slo_aware");
+        assert_eq!(exp.reschedule_policy, "memory_pressure");
+        assert_eq!(exp.policy_params.get("slo_aware.mem_weight"), Some(&2.0));
+        assert_eq!(
+            exp.policy_params.get("memory_pressure.trigger_frac"),
+            Some(&0.9)
+        );
+        exp.validate().unwrap();
+    }
+
+    #[test]
+    fn rescheduler_seed_constants_are_configurable() {
+        let cfg = Config::from_str(
+            "[rescheduler]\ninitial_avg_iter_s = 0.05\ndefault_remaining = 400\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!((exp.rescheduler.initial_avg_iter_s - 0.05).abs() < 1e-12);
+        assert!((exp.rescheduler.default_remaining - 400.0).abs() < 1e-12);
+        // defaults documented in ReschedulerConfig
+        let d = ReschedulerConfig::default();
+        assert!((d.initial_avg_iter_s - 0.02).abs() < 1e-12);
+        assert!((d.default_remaining - 1000.0).abs() < 1e-12);
     }
 }

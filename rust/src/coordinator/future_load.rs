@@ -97,12 +97,18 @@ impl WorkerReport {
         }
     }
 
+    /// Projected peak KV occupancy over the horizon, tokens: the load
+    /// trace maximum plus capacity already promised to in-flight
+    /// migrations. The single definition both the STAR memory-safety
+    /// check and the memory-pressure trigger rest on.
+    pub fn projected_peak(&self) -> f64 {
+        self.load.iter().cloned().fold(0.0, f64::max) + self.inbound_reserved_tokens as f64
+    }
+
     /// Projected free KV headroom at the *worst* point of the horizon
     /// (used for the target-side memory-safety check, Alg. 1 line 21).
     pub fn min_free_over_horizon(&self) -> f64 {
-        let peak = self.load.iter().cloned().fold(0.0, f64::max)
-            + self.inbound_reserved_tokens as f64;
-        self.kv_capacity_tokens as f64 - peak
+        self.kv_capacity_tokens as f64 - self.projected_peak()
     }
 }
 

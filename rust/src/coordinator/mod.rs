@@ -1,18 +1,27 @@
 //! The STAR coordinator: prefill→decode dispatch policies and the
-//! decode-phase rescheduler (paper §5, Algorithm 1).
+//! decode-phase rescheduler (paper §5, Algorithm 1), behind a pluggable
+//! policy API.
 //!
 //! Policy code is pure — it consumes [`ClusterSnapshot`] views and returns
-//! decisions — so the live serving runtime (`crate::serve`) and the
-//! event-driven simulator (`crate::sim`) share exactly the same scheduler,
-//! which is what makes the large-scale simulation results (Fig. 13)
-//! meaningful for the real system.
+//! decisions — and both drivers (the live serving runtime `crate::serve`
+//! and the event-driven simulator `crate::sim`) execute it through the
+//! same [`ControlLoop`], which is what makes the large-scale simulation
+//! results (Fig. 13) meaningful for the real system.
+//!
+//! Strategies are constructed by name via [`PolicyRegistry`]; see
+//! [`policy`] for the trait surface and `DESIGN.md` §5 for the
+//! how-to-add-a-policy recipe.
 
-pub mod dispatch;
+pub mod control_loop;
 pub mod future_load;
+pub mod policy;
 pub mod rescheduler;
 
-pub use dispatch::{DispatchPolicy, Dispatcher};
+pub use control_loop::ControlLoop;
 pub use future_load::{FutureLoad, WorkerReport};
+pub use policy::{
+    DispatchPolicy, IncomingRequest, PolicyConfig, PolicyRegistry, ReschedulePolicy,
+};
 pub use rescheduler::{MigrationDecision, Rescheduler, ReschedulerStats};
 
 use crate::{InstanceId, RequestId};

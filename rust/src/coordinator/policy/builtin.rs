@@ -1,0 +1,272 @@
+//! The paper's three dispatch strategies (§2.2 baselines + STAR's
+//! prediction-aware hand-off), ported onto the [`DispatchPolicy`] trait,
+//! plus the no-op rescheduler used as the "vLLM" baseline.
+
+use super::{DispatchPolicy, IncomingRequest, ReschedulePolicy};
+use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
+use crate::coordinator::{ClusterSnapshot, InstanceView};
+use crate::InstanceId;
+
+/// Shared fit-or-fallback argmin: prefer the best-scoring instance that can
+/// hold `incoming_tokens`; if nothing fits, return the best-scoring
+/// instance anyway (admission will queue or OOM there, mirroring vLLM).
+pub(super) fn argmin_with_fallback<G>(
+    snapshot: &ClusterSnapshot,
+    incoming_tokens: u64,
+    score: G,
+) -> InstanceId
+where
+    G: Fn(&InstanceView) -> f64,
+{
+    assert!(
+        !snapshot.instances.is_empty(),
+        "dispatch with no decode instances"
+    );
+    let mut best: Option<(f64, InstanceId)> = None;
+    let mut best_any: Option<(f64, InstanceId)> = None;
+    for iv in &snapshot.instances {
+        let s = score(iv);
+        if best_any.map(|(b, _)| s < b).unwrap_or(true) {
+            best_any = Some((s, iv.id));
+        }
+        if iv.free_tokens() >= incoming_tokens && best.map(|(b, _)| s < b).unwrap_or(true) {
+            best = Some((s, iv.id));
+        }
+    }
+    best.or(best_any).expect("non-empty instance list").1
+}
+
+/// vLLM-style round-robin [paper ref 34]: even request *counts*, oblivious
+/// to per-request workload. Skips instances that cannot fit the incoming
+/// KV; when nothing fits, places at the cursor anyway.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRobinDispatch {
+    cursor: usize,
+}
+
+impl RoundRobinDispatch {
+    pub fn new() -> Self {
+        RoundRobinDispatch { cursor: 0 }
+    }
+}
+
+impl DispatchPolicy for RoundRobinDispatch {
+    fn name(&self) -> &str {
+        "round_robin"
+    }
+
+    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
+        let n = snapshot.instances.len();
+        assert!(n > 0, "dispatch with no decode instances");
+        for off in 0..n {
+            let idx = (self.cursor + off) % n;
+            if snapshot.instances[idx].free_tokens() >= incoming.tokens {
+                self.cursor = (idx + 1) % n;
+                return snapshot.instances[idx].id;
+            }
+        }
+        let idx = self.cursor % n;
+        self.cursor = (idx + 1) % n;
+        snapshot.instances[idx].id
+    }
+}
+
+/// Current-load balancing [FlowKV, ref 20]: pick the instance with the
+/// smallest current KV token load (including in-flight reservations).
+#[derive(Clone, Debug, Default)]
+pub struct CurrentLoadDispatch;
+
+impl DispatchPolicy for CurrentLoadDispatch {
+    fn name(&self) -> &str {
+        "current_load"
+    }
+
+    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
+        argmin_with_fallback(snapshot, incoming.tokens, |iv| iv.effective_used() as f64)
+    }
+}
+
+/// STAR hand-off: pick the instance with the smallest *projected* load =
+/// current + predicted remaining work of its active requests, considering
+/// the incoming request's own predicted length.
+#[derive(Clone, Debug, Default)]
+pub struct PredictedLoadDispatch;
+
+impl DispatchPolicy for PredictedLoadDispatch {
+    fn name(&self) -> &str {
+        "predicted_load"
+    }
+
+    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
+        let pred = incoming.predicted_remaining.unwrap_or(0.0);
+        argmin_with_fallback(snapshot, incoming.tokens, |iv| {
+            let future: f64 = iv
+                .requests
+                .iter()
+                .map(|r| r.tokens as f64 + r.remaining_or(0.0))
+                .sum();
+            future + iv.inbound_reserved_tokens as f64 + pred
+        })
+    }
+}
+
+/// Never migrates: the dispatch-only "vLLM" baseline, and the policy the
+/// control loop runs when rescheduling is disabled by config.
+#[derive(Clone, Debug, Default)]
+pub struct NoopReschedule {
+    stats: ReschedulerStats,
+}
+
+impl NoopReschedule {
+    pub fn new() -> Self {
+        NoopReschedule::default()
+    }
+}
+
+impl ReschedulePolicy for NoopReschedule {
+    fn name(&self) -> &str {
+        "none"
+    }
+
+    fn decide(&mut self, _snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+        self.stats.intervals += 1;
+        Vec::new()
+    }
+
+    fn stats(&self) -> ReschedulerStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+
+    fn incoming(tokens: u64, pred: Option<f64>) -> IncomingRequest {
+        IncomingRequest {
+            id: 0,
+            tokens,
+            predicted_remaining: pred,
+        }
+    }
+
+    fn snap3(loads: [u64; 3]) -> ClusterSnapshot {
+        ClusterSnapshot {
+            instances: loads
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| inst(i, vec![req(i as u64 + 1, l, None)], 10_000))
+                .collect(),
+            tokens_per_interval: 10.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let snap = snap3([0, 0, 0]);
+        let mut d = RoundRobinDispatch::new();
+        let picks: Vec<_> = (0..6).map(|_| d.choose(&snap, &incoming(10, None))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_cursor_wraps_around() {
+        // the cursor must wrap modulo n and stay fair across many cycles,
+        // not drift or overflow
+        let snap = snap3([0, 0, 0]);
+        let mut d = RoundRobinDispatch::new();
+        let mut counts = [0usize; 3];
+        for _ in 0..3 * 100 {
+            counts[d.choose(&snap, &incoming(10, None))] += 1;
+        }
+        assert_eq!(counts, [100, 100, 100]);
+        // after an exact number of cycles the cursor is back at 0
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 0);
+    }
+
+    #[test]
+    fn round_robin_skips_full_instances() {
+        let mut snap = snap3([0, 0, 0]);
+        snap.instances[0].inbound_reserved_tokens = 10_000; // full
+        let mut d = RoundRobinDispatch::new();
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 2);
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+    }
+
+    #[test]
+    fn round_robin_no_fit_places_at_cursor() {
+        // everything over capacity: the cursor position is still returned
+        // and the cursor advances, keeping the overflow spread fair
+        let snap = snap3([10_000, 10_000, 10_000]);
+        let mut d = RoundRobinDispatch::new();
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 1);
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 2);
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+    }
+
+    #[test]
+    fn current_load_picks_least_loaded() {
+        let snap = snap3([500, 100, 300]);
+        let mut d = CurrentLoadDispatch;
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+    }
+
+    #[test]
+    fn current_load_no_fit_falls_back_to_least_loaded() {
+        // nothing fits 100 tokens; least-loaded wins anyway
+        let snap = snap3([9_995, 9_999, 9_997]);
+        let mut d = CurrentLoadDispatch;
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+    }
+
+    #[test]
+    fn predicted_load_no_fit_falls_back_to_least_projected() {
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 9_995, Some(5_000.0))], 10_000),
+                inst(1, vec![req(2, 9_999, Some(10.0))], 10_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut d = PredictedLoadDispatch;
+        // neither fits; instance 1 has the smaller projected load
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 1);
+    }
+
+    #[test]
+    fn predicted_load_sees_future_work() {
+        // instance 0: small now but huge remaining; instance 1: bigger now
+        // but nearly done.
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 100, Some(5_000.0))], 100_000),
+                inst(1, vec![req(2, 400, Some(10.0))], 100_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut cur = CurrentLoadDispatch;
+        let mut pred = PredictedLoadDispatch;
+        assert_eq!(
+            cur.choose(&snap, &incoming(10, None)),
+            0,
+            "current-load is fooled"
+        );
+        assert_eq!(
+            pred.choose(&snap, &incoming(10, None)),
+            1,
+            "predicted-load is not"
+        );
+    }
+
+    #[test]
+    fn noop_reschedule_never_migrates() {
+        let snap = snap3([9_000, 0, 0]);
+        let mut rs = NoopReschedule::new();
+        assert!(rs.decide(&snap).is_empty());
+        assert_eq!(rs.stats().intervals, 1);
+        assert_eq!(rs.stats().migrations, 0);
+    }
+}

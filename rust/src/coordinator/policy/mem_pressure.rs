@@ -1,0 +1,487 @@
+//! Memory-pressure rescheduler: migrates on *projected KV-OOM* rather than
+//! on load variance.
+//!
+//! The STAR rescheduler (Algorithm 1) optimizes the time-weighted variance
+//! objective; OOM avoidance falls out of its memory-safety constraint.
+//! This policy inverts the priorities: it only acts when an instance's
+//! projected KV occupancy over the horizon crosses a trigger fraction of
+//! capacity, then sheds the requests whose projected footprint contributes
+//! most to the peak. A cluster can be perfectly variance-balanced and
+//! still OOM when capacities are heterogeneous or growth is concentrated —
+//! this policy covers exactly that gap (the paper's Issue 1, without the
+//! Eq. 4 objective).
+
+use std::time::Instant;
+
+use super::{PolicyConfig, ReschedulePolicy};
+use crate::coordinator::future_load::{beta_schedule, FutureLoad, WorkerReport};
+use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
+use crate::coordinator::ClusterSnapshot;
+use crate::config::ReschedulerConfig;
+use crate::costmodel::MigrationCostModel;
+
+/// KV-OOM-avoidance rescheduler. Knobs (via `PolicyConfig::params`):
+///
+/// * `memory_pressure.trigger_frac` — projected-peak fraction of capacity
+///   that marks an instance as at risk (default 0.85). Targets must stay
+///   below it after receiving a migration.
+#[derive(Clone, Debug)]
+pub struct MemoryPressureRescheduler {
+    cfg: ReschedulerConfig,
+    migration: MigrationCostModel,
+    use_prediction: bool,
+    trigger_frac: f64,
+    avg_iter_s: f64,
+    default_remaining: f64,
+    betas: Vec<f64>,
+    stats: ReschedulerStats,
+}
+
+impl MemoryPressureRescheduler {
+    pub fn from_config(cfg: &PolicyConfig) -> Self {
+        let betas = beta_schedule(cfg.rescheduler.horizon, cfg.rescheduler.beta_decay);
+        MemoryPressureRescheduler {
+            trigger_frac: cfg
+                .param_or("memory_pressure.trigger_frac", 0.85)
+                .clamp(0.05, 1.0),
+            avg_iter_s: cfg.rescheduler.initial_avg_iter_s,
+            default_remaining: cfg.rescheduler.default_remaining,
+            use_prediction: cfg.use_prediction,
+            migration: cfg.migration,
+            cfg: cfg.rescheduler.clone(),
+            betas,
+            stats: ReschedulerStats::default(),
+        }
+    }
+
+    /// Projected peak occupancy of a report (shared definition with the
+    /// STAR memory-safety check).
+    fn peak(rep: &WorkerReport) -> f64 {
+        rep.projected_peak()
+    }
+
+    /// One migration. Every instance projected past the trigger is a
+    /// potential source, hottest first — a stuck hottest instance (nothing
+    /// movable, no feasible target) must not starve relief for the next
+    /// one over the line.
+    fn decide_one(
+        &mut self,
+        snapshot: &ClusterSnapshot,
+        reports: &[WorkerReport],
+    ) -> Option<MigrationDecision> {
+        let n = reports.len();
+        if n < 2 {
+            return None;
+        }
+        let frac = |i: usize| Self::peak(&reports[i]) / reports[i].kv_capacity_tokens.max(1) as f64;
+        let mut sources: Vec<usize> = (0..n).filter(|&i| frac(i) > self.trigger_frac).collect();
+        sources.sort_by(|&a, &b| frac(b).total_cmp(&frac(a)));
+        sources
+            .into_iter()
+            .find_map(|src| self.decide_for_source(snapshot, reports, src))
+    }
+
+    /// Best migration off one over-trigger source, or None if nothing
+    /// movable has a feasible target.
+    ///
+    /// Candidate ranking is by *exact* peak relief (source projected peak
+    /// with vs. without the request's load trace) and is order-independent:
+    /// prefer the cheapest request (fewest KV tokens to transfer) whose
+    /// relief alone brings the source back under the trigger; if none
+    /// suffices, take the largest relief.
+    fn decide_for_source(
+        &mut self,
+        snapshot: &ClusterSnapshot,
+        reports: &[WorkerReport],
+        src: usize,
+    ) -> Option<MigrationDecision> {
+        let n = reports.len();
+        let g = snapshot.tokens_per_interval;
+        let horizon = self.cfg.horizon;
+        let default_rem = if self.use_prediction {
+            None
+        } else {
+            Some(self.default_remaining)
+        };
+        let src_rep = &reports[src];
+        let safe_level = self.trigger_frac * src_rep.kv_capacity_tokens as f64;
+
+        // (kv_tokens, decision) of the cheapest sufficient candidate
+        let mut best_sufficient: Option<(u64, MigrationDecision)> = None;
+        // (relief, decision) of the best insufficient fallback
+        let mut best_any: Option<(f64, MigrationDecision)> = None;
+        for r in &snapshot.instances[src].requests {
+            if r.migrating {
+                continue;
+            }
+            let rem = match (self.use_prediction, r.predicted_remaining) {
+                (true, Some(p)) => p,
+                (true, None) => continue, // not yet predicted
+                (false, _) => self.default_remaining,
+            };
+            // migration must amortize (same bound as Alg. 1 line 20)
+            if rem <= self.migration.overhead_iterations(r.tokens, self.avg_iter_s) {
+                continue;
+            }
+            let fl = FutureLoad::of_request(r, g, horizon, default_rem);
+            // exact peak relief: source peak with vs. without this request
+            let peak_without = src_rep
+                .load
+                .iter()
+                .zip(&fl.trace)
+                .map(|(l, c)| l - c)
+                .fold(0.0, f64::max)
+                + src_rep.inbound_reserved_tokens as f64;
+            let relief = Self::peak(src_rep) - peak_without;
+            if relief <= 0.0 {
+                continue;
+            }
+            let sufficient = peak_without <= safe_level;
+            // skip the target search when this candidate cannot improve on
+            // the current best in its class
+            let beats_sufficient = best_sufficient
+                .as_ref()
+                .map(|(kv, _)| r.tokens < *kv)
+                .unwrap_or(true);
+            let beats_any = best_any
+                .as_ref()
+                .map(|(rel, _)| relief > *rel)
+                .unwrap_or(true);
+            let worth_trying = if sufficient {
+                beats_sufficient
+            } else {
+                best_sufficient.is_none() && beats_any
+            };
+            if !worth_trying {
+                continue;
+            }
+            // safest feasible target: lowest post-move projected fraction,
+            // and it must stay below the trigger itself
+            let fl_peak = fl.trace.iter().cloned().fold(0.0, f64::max);
+            let mut target: Option<(f64, usize)> = None;
+            for t in 0..n {
+                if t == src {
+                    continue;
+                }
+                self.stats.candidates_evaluated += 1;
+                let cap = reports[t].kv_capacity_tokens as f64;
+                let after_peak = Self::peak(&reports[t]) + fl_peak;
+                let safe_cap = cap * (1.0 - self.cfg.mem_safety_frac);
+                let after_frac = after_peak / cap.max(1.0);
+                if after_peak > safe_cap || after_frac >= self.trigger_frac {
+                    continue;
+                }
+                if target.map(|(f, _)| after_frac < f).unwrap_or(true) {
+                    target = Some((after_frac, t));
+                }
+            }
+            if let Some((_, dst)) = target {
+                let decision = MigrationDecision {
+                    request: r.id,
+                    src: snapshot.instances[src].id,
+                    dst: snapshot.instances[dst].id,
+                    kv_tokens: r.tokens,
+                    // objective here is "projected peak tokens averted",
+                    // not a variance delta; still monotone in usefulness
+                    var_reduction: relief,
+                };
+                if sufficient {
+                    best_sufficient = Some((r.tokens, decision));
+                } else {
+                    best_any = Some((relief, decision));
+                }
+            }
+        }
+        best_sufficient
+            .map(|(_, d)| d)
+            .or(best_any.map(|(_, d)| d))
+    }
+
+    /// Replay an accepted move onto the reports so a second decision in
+    /// the same interval sees the updated projections.
+    fn apply_to_reports(
+        &self,
+        snapshot: &ClusterSnapshot,
+        reports: &mut [WorkerReport],
+        d: &MigrationDecision,
+    ) {
+        let find = |id| {
+            snapshot
+                .instances
+                .iter()
+                .position(|iv| iv.id == id)
+                .expect("decision instance present")
+        };
+        let (s_idx, d_idx) = (find(d.src), find(d.dst));
+        let r = snapshot.instances[s_idx]
+            .requests
+            .iter()
+            .find(|r| r.id == d.request)
+            .expect("decision request present");
+        let default_rem = if self.use_prediction {
+            None
+        } else {
+            Some(self.default_remaining)
+        };
+        let fl = FutureLoad::of_request(
+            r,
+            snapshot.tokens_per_interval,
+            self.cfg.horizon,
+            default_rem,
+        );
+        for t in 0..fl.trace.len() {
+            reports[s_idx].load[t] -= fl.trace[t];
+            reports[d_idx].load[t] += fl.trace[t];
+        }
+        reports[s_idx].current_tokens = reports[s_idx].current_tokens.saturating_sub(d.kv_tokens);
+        reports[d_idx].current_tokens += d.kv_tokens;
+    }
+}
+
+impl ReschedulePolicy for MemoryPressureRescheduler {
+    fn name(&self) -> &str {
+        "memory_pressure"
+    }
+
+    fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+        let t0 = Instant::now();
+        self.stats.intervals += 1;
+        let g = snapshot.tokens_per_interval;
+        let default_rem = if self.use_prediction {
+            None
+        } else {
+            Some(self.default_remaining)
+        };
+        let mut reports: Vec<WorkerReport> = snapshot
+            .instances
+            .iter()
+            .map(|v| WorkerReport::compute(v, g, &self.betas, default_rem))
+            .collect();
+
+        let mut decisions = Vec::new();
+        for _ in 0..self.cfg.max_migrations_per_interval {
+            match self.decide_one(snapshot, &reports) {
+                None => break,
+                Some(d) => {
+                    self.apply_to_reports(snapshot, &mut reports, &d);
+                    decisions.push(d);
+                    self.stats.migrations += 1;
+                }
+            }
+        }
+
+        let us = t0.elapsed().as_micros() as u64;
+        self.stats.last_decision_us = us;
+        self.stats.max_decision_us = self.stats.max_decision_us.max(us);
+        decisions
+    }
+
+    fn stats(&self) -> ReschedulerStats {
+        self.stats.clone()
+    }
+
+    fn observe_avg_iter_s(&mut self, avg_iter_s: f64) {
+        self.avg_iter_s = avg_iter_s;
+    }
+
+    fn observe_default_remaining(&mut self, tokens: f64) {
+        self.default_remaining = tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+
+    fn policy() -> MemoryPressureRescheduler {
+        let mut cfg = PolicyConfig::default();
+        cfg.rescheduler.horizon = 4;
+        cfg.migration = MigrationCostModel {
+            bandwidth_bps: 1e12,
+            latency_s: 1e-4,
+            bytes_per_token: 1,
+        };
+        MemoryPressureRescheduler::from_config(&cfg)
+    }
+
+    #[test]
+    fn below_trigger_never_migrates() {
+        // plenty of headroom everywhere, even with skewed loads (a
+        // variance policy WOULD act here)
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 30_000, Some(4_000.0))], 100_000),
+                inst(1, vec![req(2, 1_000, Some(100.0))], 100_000),
+            ],
+            tokens_per_interval: 50.0,
+        };
+        let mut rs = policy();
+        assert!(rs.decide(&snap).is_empty());
+        assert_eq!(rs.stats().intervals, 1);
+    }
+
+    #[test]
+    fn projected_oom_triggers_migration_despite_balanced_loads() {
+        // equal current loads (zero variance) but instance 0 has half the
+        // capacity: its projected occupancy crosses the trigger
+        let mut snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 40_000, Some(20_000.0))], 50_000),
+                inst(1, vec![req(2, 40_000, Some(200.0))], 200_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        snap.instances[0].requests.push(req(3, 2_000, Some(20_000.0)));
+        let mut rs = policy();
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].src, 0);
+        assert_eq!(ds[0].dst, 1);
+        assert!(ds[0].var_reduction > 0.0);
+    }
+
+    #[test]
+    fn prefers_cheapest_sufficient_relief() {
+        // either request's removal brings the source back under the
+        // trigger; the policy must pick the cheaper transfer (request 2,
+        // 18K tokens) rather than whichever happens to be listed first
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(
+                    0,
+                    vec![req(1, 30_000, Some(30_000.0)), req(2, 18_000, Some(50.0))],
+                    50_000,
+                ),
+                inst(1, vec![req(3, 1_000, Some(100.0))], 200_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        let mut rs = policy();
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].request, 2, "cheapest sufficient move wins");
+        assert!(ds[0].var_reduction > 0.0);
+        // same snapshot with the requests listed in the other order must
+        // pick the same request (order independence)
+        let mut swapped = snap.clone();
+        swapped.instances[0].requests.reverse();
+        let ds2 = policy().decide(&swapped);
+        assert_eq!(ds2.len(), 1);
+        assert_eq!(ds2[0].request, 2);
+    }
+
+    #[test]
+    fn falls_back_to_largest_relief_when_nothing_suffices() {
+        // projected peak 80K on a 50K instance (trigger level 42.5K): no
+        // single move clears the trigger, so the largest peak relief wins
+        // (30K request over the 8K one)
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(
+                    0,
+                    vec![
+                        req(1, 30_000, Some(30_000.0)),
+                        req(2, 30_000, Some(30_000.0)),
+                        req(3, 8_000, Some(30_000.0)),
+                    ],
+                    50_000,
+                ),
+                inst(1, vec![req(4, 1_000, Some(100.0))], 500_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        let mut rs = policy();
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].request, 1, "largest relief, first on ties");
+    }
+
+    #[test]
+    fn stuck_hottest_source_does_not_starve_the_next_one() {
+        // instance 0 is hottest but its only request is mid-migration;
+        // instance 1 is also over the trigger and CAN shed — it must not
+        // be starved by the stuck argmax
+        let mut snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 49_000, Some(10_000.0))], 50_000),
+                inst(1, vec![req(2, 44_000, Some(10_000.0))], 50_000),
+                inst(2, vec![req(3, 1_000, Some(100.0))], 500_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        snap.instances[0].requests[0].migrating = true;
+        let mut rs = policy();
+        let ds = rs.decide(&snap);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].src, 1);
+        assert_eq!(ds[0].dst, 2);
+        assert_eq!(ds[0].request, 2);
+    }
+
+    #[test]
+    fn unsafe_targets_rejected() {
+        // the only other instance is itself near the trigger: no move
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 48_000, Some(10_000.0))], 50_000),
+                inst(1, vec![req(2, 45_000, Some(10_000.0))], 56_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        let mut rs = policy();
+        assert!(rs.decide(&snap).is_empty());
+    }
+
+    #[test]
+    fn near_complete_requests_not_migrated() {
+        let mut cfg = PolicyConfig::default();
+        cfg.rescheduler.horizon = 4;
+        cfg.migration = MigrationCostModel {
+            bandwidth_bps: 1e3, // very slow link
+            latency_s: 1e-4,
+            bytes_per_token: 1_000,
+        };
+        let mut rs = MemoryPressureRescheduler::from_config(&cfg);
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 48_000, Some(3.0))], 50_000),
+                inst(1, vec![req(2, 1_000, Some(100.0))], 200_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        assert!(rs.decide(&snap).is_empty());
+    }
+
+    #[test]
+    fn respects_max_migrations_per_interval() {
+        let mut cfg = PolicyConfig::default();
+        cfg.rescheduler.horizon = 4;
+        cfg.rescheduler.max_migrations_per_interval = 2;
+        cfg.migration = MigrationCostModel {
+            bandwidth_bps: 1e12,
+            latency_s: 1e-4,
+            bytes_per_token: 1,
+        };
+        let mut rs = MemoryPressureRescheduler::from_config(&cfg);
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(
+                    0,
+                    vec![
+                        req(1, 20_000, Some(30_000.0)),
+                        req(2, 20_000, Some(30_000.0)),
+                        req(3, 8_000, Some(30_000.0)),
+                    ],
+                    50_000,
+                ),
+                inst(1, vec![req(4, 1_000, Some(100.0))], 500_000),
+            ],
+            tokens_per_interval: 1_000.0,
+        };
+        let ds = rs.decide(&snap);
+        assert!(ds.len() <= 2);
+        assert!(!ds.is_empty());
+        assert_eq!(rs.stats().migrations as usize, ds.len());
+    }
+}

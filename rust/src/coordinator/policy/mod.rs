@@ -1,0 +1,154 @@
+//! The pluggable scheduling-policy API.
+//!
+//! Everything the coordinator decides — which decode instance receives a
+//! request at prefill→decode hand-off, and which requests migrate between
+//! decode instances mid-generation — goes through two object-safe traits:
+//!
+//! * [`DispatchPolicy`] — hand-off placement (paper §2.2's baselines and
+//!   anything smarter);
+//! * [`ReschedulePolicy`] — the per-interval migration decision (paper
+//!   Algorithm 1 and alternatives).
+//!
+//! Policies are constructed **by name** through a [`PolicyRegistry`], so
+//! config files, CLI flags, and bench scenarios never enumerate concrete
+//! types, and third parties can register new strategies without touching
+//! coordinator internals. The live server and the simulator both drive
+//! policies through the shared [`ControlLoop`], which is what makes
+//! simulated results (paper Fig. 13) transfer to the real system.
+//!
+//! See `DESIGN.md` §5 for the "add a policy in three steps" recipe.
+//!
+//! [`ControlLoop`]: crate::coordinator::ControlLoop
+
+mod builtin;
+mod mem_pressure;
+mod registry;
+mod slo;
+
+pub use builtin::{CurrentLoadDispatch, NoopReschedule, PredictedLoadDispatch, RoundRobinDispatch};
+pub use mem_pressure::MemoryPressureRescheduler;
+pub use registry::PolicyRegistry;
+pub use slo::SloAwareDispatch;
+
+use std::collections::BTreeMap;
+
+use super::rescheduler::{MigrationDecision, ReschedulerStats};
+use super::ClusterSnapshot;
+use crate::config::{ExperimentConfig, ReschedulerConfig};
+use crate::costmodel::MigrationCostModel;
+use crate::{InstanceId, RequestId};
+
+/// A request at prefill→decode hand-off time, as a dispatch policy sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct IncomingRequest {
+    pub id: RequestId,
+    /// KV tokens the request brings with it (prompt, plus any generated
+    /// tokens when re-dispatching after OOM recompute or migration).
+    pub tokens: u64,
+    /// Predicted output length from the prefill-time prediction
+    /// (None when prediction is off or not yet available).
+    pub predicted_remaining: Option<f64>,
+}
+
+/// Prefill→decode placement strategy. Implementations may keep internal
+/// state (round-robin keeps a cursor) but must be pure with respect to the
+/// snapshot: the caller executes the returned placement.
+///
+/// Contract: always return an instance id present in the snapshot, even
+/// when nothing fits — admission control on the instance queues or OOMs,
+/// mirroring vLLM behaviour. Helpers in this module implement the standard
+/// "skip instances that cannot fit, fall back to least-loaded" shape.
+pub trait DispatchPolicy {
+    /// Registry name this policy answers to (diagnostics + reports).
+    fn name(&self) -> &str;
+
+    /// Choose a decode instance for `incoming`.
+    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId;
+}
+
+/// Decode-phase rescheduling strategy, invoked once per scheduling
+/// interval. Pure with respect to the snapshot: the caller (live runtime
+/// or simulator) executes the returned migrations.
+pub trait ReschedulePolicy {
+    /// Registry name this policy answers to (diagnostics + reports).
+    fn name(&self) -> &str;
+
+    /// Run one scheduling interval; returns migrations best-first, at most
+    /// `max_migrations_per_interval` of them.
+    fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision>;
+
+    /// Operational counters for reports and the §5.2 decision-time claim.
+    fn stats(&self) -> ReschedulerStats;
+
+    /// Measured average decode iteration time T̄_exec (the drivers feed
+    /// EWMA measurements in before every interval). Default: ignore.
+    fn observe_avg_iter_s(&mut self, _avg_iter_s: f64) {}
+
+    /// Running estimate of remaining output length to assume for requests
+    /// without a prediction (drivers feed the workload mean in). Default:
+    /// ignore.
+    fn observe_default_remaining(&mut self, _tokens: f64) {}
+}
+
+/// Everything a policy builder may draw on. One config type keeps the
+/// registry signature stable as policies grow knobs: well-known structured
+/// fields plus a free-form numeric `params` map for policy-specific tuning
+/// (populated from `[policy]` config keys, e.g. `slo_aware.mem_weight`).
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    pub rescheduler: ReschedulerConfig,
+    pub migration: MigrationCostModel,
+    /// Whether length predictions are available (Alg. 1 `usePrediction`).
+    pub use_prediction: bool,
+    /// Policy-specific numeric knobs, keyed `<policy>.<knob>`.
+    pub params: BTreeMap<String, f64>,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            rescheduler: ReschedulerConfig::default(),
+            migration: MigrationCostModel::new_25gbps(128 * 1024),
+            use_prediction: true,
+            params: BTreeMap::new(),
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// Assemble the policy inputs an experiment implies.
+    pub fn from_experiment(exp: &ExperimentConfig, migration: MigrationCostModel) -> PolicyConfig {
+        PolicyConfig {
+            rescheduler: exp.rescheduler.clone(),
+            migration,
+            use_prediction: exp.predictor.uses_prediction(),
+            params: exp.policy_params.clone(),
+        }
+    }
+
+    /// Numeric knob lookup with a documented default.
+    pub fn param_or(&self, key: &str, default: f64) -> f64 {
+        self.params.get(key).copied().unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_lookup_falls_back() {
+        let mut cfg = PolicyConfig::default();
+        assert_eq!(cfg.param_or("slo_aware.mem_weight", 1.5), 1.5);
+        cfg.params.insert("slo_aware.mem_weight".to_string(), 0.25);
+        assert_eq!(cfg.param_or("slo_aware.mem_weight", 1.5), 0.25);
+    }
+
+    #[test]
+    fn from_experiment_inherits_prediction_flag() {
+        let mut exp = ExperimentConfig::default();
+        exp.predictor = crate::config::PredictorKind::None;
+        let cfg = PolicyConfig::from_experiment(&exp, MigrationCostModel::new_25gbps(1));
+        assert!(!cfg.use_prediction);
+    }
+}

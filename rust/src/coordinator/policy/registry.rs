@@ -1,0 +1,278 @@
+//! String-keyed policy construction: the single place where policy names
+//! meet policy types. Config files, CLI flags, bench scenarios, and tests
+//! all go through [`PolicyRegistry::build_dispatch`] /
+//! [`PolicyRegistry::build_reschedule`]; third-party code extends the set
+//! with [`PolicyRegistry::register_dispatch`] /
+//! [`PolicyRegistry::register_reschedule`] without touching coordinator
+//! internals.
+
+use std::collections::BTreeMap;
+
+use super::{
+    CurrentLoadDispatch, DispatchPolicy, MemoryPressureRescheduler, NoopReschedule,
+    PolicyConfig, PredictedLoadDispatch, ReschedulePolicy, RoundRobinDispatch, SloAwareDispatch,
+};
+use crate::coordinator::rescheduler::Rescheduler;
+use crate::{Error, Result};
+
+type DispatchBuilder = Box<dyn Fn(&PolicyConfig) -> Result<Box<dyn DispatchPolicy>> + Send + Sync>;
+type RescheduleBuilder =
+    Box<dyn Fn(&PolicyConfig) -> Result<Box<dyn ReschedulePolicy>> + Send + Sync>;
+
+/// Registry of named policy builders. Names are normalized (lowercase,
+/// `-` → `_`) and may be aliased, so `--dispatch round-robin`, `rr`, and
+/// `round_robin` all resolve to the same builder.
+#[derive(Default)]
+pub struct PolicyRegistry {
+    dispatch: BTreeMap<String, DispatchBuilder>,
+    reschedule: BTreeMap<String, RescheduleBuilder>,
+    aliases: BTreeMap<String, String>,
+}
+
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace('-', "_")
+}
+
+impl PolicyRegistry {
+    /// An empty registry (for fully custom policy sets).
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry::default()
+    }
+
+    /// The built-in policy set:
+    ///
+    /// dispatch — `round_robin` (`rr`), `current_load` (`load`),
+    /// `predicted_load` (`predicted`), `slo_aware` (`slo`);
+    /// reschedule — `star`, `memory_pressure` (`mem_pressure`),
+    /// `none` (`noop`, `off`).
+    pub fn with_builtins() -> PolicyRegistry {
+        let mut r = PolicyRegistry::new();
+        r.register_dispatch("round_robin", |_| Ok(Box::new(RoundRobinDispatch::new())));
+        r.register_dispatch("current_load", |_| Ok(Box::new(CurrentLoadDispatch)));
+        r.register_dispatch("predicted_load", |_| Ok(Box::new(PredictedLoadDispatch)));
+        r.register_dispatch("slo_aware", |cfg| {
+            Ok(Box::new(SloAwareDispatch::from_config(cfg)))
+        });
+        r.register_reschedule("star", |cfg| {
+            Ok(Box::new(Rescheduler::new(
+                cfg.rescheduler.clone(),
+                cfg.migration,
+                cfg.use_prediction,
+            )))
+        });
+        r.register_reschedule("memory_pressure", |cfg| {
+            Ok(Box::new(MemoryPressureRescheduler::from_config(cfg)))
+        });
+        r.register_reschedule("none", |_| Ok(Box::new(NoopReschedule::new())));
+        r.alias("rr", "round_robin");
+        r.alias("load", "current_load");
+        r.alias("predicted", "predicted_load");
+        r.alias("slo", "slo_aware");
+        r.alias("mem_pressure", "memory_pressure");
+        r.alias("noop", "none");
+        r.alias("off", "none");
+        r
+    }
+
+    /// Register (or replace) a dispatch-policy builder under `name`.
+    pub fn register_dispatch<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn(&PolicyConfig) -> Result<Box<dyn DispatchPolicy>> + Send + Sync + 'static,
+    {
+        self.dispatch.insert(normalize(name), Box::new(builder));
+    }
+
+    /// Register (or replace) a reschedule-policy builder under `name`.
+    pub fn register_reschedule<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn(&PolicyConfig) -> Result<Box<dyn ReschedulePolicy>> + Send + Sync + 'static,
+    {
+        self.reschedule.insert(normalize(name), Box::new(builder));
+    }
+
+    /// Make `alias` resolve to `canonical` in both namespaces.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.aliases.insert(normalize(alias), normalize(canonical));
+    }
+
+    /// Look `name` up in one namespace: a direct registration always wins
+    /// over an alias, so `register_*` under an alias-colliding name really
+    /// does replace what the name builds, and an alias pointing into the
+    /// *other* namespace can never hijack a lookup.
+    fn lookup<'a, T>(&self, map: &'a BTreeMap<String, T>, name: &str) -> Option<&'a T> {
+        let n = normalize(name);
+        if let Some(b) = map.get(&n) {
+            return Some(b);
+        }
+        self.aliases.get(&n).and_then(|canon| map.get(canon))
+    }
+
+    pub fn has_dispatch(&self, name: &str) -> bool {
+        self.lookup(&self.dispatch, name).is_some()
+    }
+
+    pub fn has_reschedule(&self, name: &str) -> bool {
+        self.lookup(&self.reschedule, name).is_some()
+    }
+
+    /// Construct the named dispatch policy.
+    pub fn build_dispatch(&self, name: &str, cfg: &PolicyConfig) -> Result<Box<dyn DispatchPolicy>> {
+        match self.lookup(&self.dispatch, name) {
+            Some(b) => b(cfg),
+            None => Err(Error::config(format!(
+                "unknown dispatch policy `{name}` (known: {})",
+                self.dispatch_names().join("|")
+            ))),
+        }
+    }
+
+    /// Construct the named reschedule policy.
+    pub fn build_reschedule(
+        &self,
+        name: &str,
+        cfg: &PolicyConfig,
+    ) -> Result<Box<dyn ReschedulePolicy>> {
+        match self.lookup(&self.reschedule, name) {
+            Some(b) => b(cfg),
+            None => Err(Error::config(format!(
+                "unknown reschedule policy `{name}` (known: {})",
+                self.reschedule_names().join("|")
+            ))),
+        }
+    }
+
+    /// Registered canonical dispatch names, sorted.
+    pub fn dispatch_names(&self) -> Vec<String> {
+        self.dispatch.keys().cloned().collect()
+    }
+
+    /// Registered canonical reschedule names, sorted.
+    pub fn reschedule_names(&self) -> Vec<String> {
+        self.reschedule.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::{ClusterSnapshot, IncomingRequest};
+
+    fn snap() -> ClusterSnapshot {
+        ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 500, None)], 10_000),
+                inst(1, vec![req(2, 100, None)], 10_000),
+            ],
+            tokens_per_interval: 10.0,
+        }
+    }
+
+    #[test]
+    fn builds_every_builtin_by_name_and_alias() {
+        let reg = PolicyRegistry::with_builtins();
+        let cfg = PolicyConfig::default();
+        for name in ["round_robin", "rr", "Round-Robin", "current_load", "load",
+                     "predicted_load", "predicted", "slo_aware", "slo"] {
+            let mut p = reg.build_dispatch(name, &cfg).unwrap();
+            let id = p.choose(&snap(), &IncomingRequest {
+                id: 0,
+                tokens: 10,
+                predicted_remaining: None,
+            });
+            assert!(id < 2, "{name} returned bogus instance");
+        }
+        for name in ["star", "memory_pressure", "mem_pressure", "none", "noop", "off"] {
+            let mut p = reg.build_reschedule(name, &cfg).unwrap();
+            let _ = p.decide(&snap());
+            assert_eq!(p.stats().intervals, 1, "{name} must count intervals");
+        }
+    }
+
+    #[test]
+    fn unknown_names_error_with_known_list() {
+        let reg = PolicyRegistry::with_builtins();
+        let cfg = PolicyConfig::default();
+        let e = reg.build_dispatch("nope", &cfg).unwrap_err().to_string();
+        assert!(e.contains("unknown dispatch policy `nope`"), "{e}");
+        assert!(e.contains("current_load"), "{e}");
+        let e = reg.build_reschedule("nope", &cfg).unwrap_err().to_string();
+        assert!(e.contains("star"), "{e}");
+    }
+
+    #[test]
+    fn third_party_registration_and_override() {
+        let mut reg = PolicyRegistry::with_builtins();
+        struct Pin(usize);
+        impl crate::coordinator::DispatchPolicy for Pin {
+            fn name(&self) -> &str {
+                "pin"
+            }
+            fn choose(&mut self, _s: &ClusterSnapshot, _i: &IncomingRequest) -> usize {
+                self.0
+            }
+        }
+        reg.register_dispatch("pin", |_| Ok(Box::new(Pin(1))));
+        let mut p = reg
+            .build_dispatch("pin", &PolicyConfig::default())
+            .unwrap();
+        let id = p.choose(&snap(), &IncomingRequest {
+            id: 9,
+            tokens: 1,
+            predicted_remaining: None,
+        });
+        assert_eq!(id, 1);
+        assert!(reg.has_dispatch("pin"));
+        assert!(!reg.has_dispatch("unpin"));
+
+        // a direct registration under an alias-colliding name wins over
+        // the alias ("load" aliases current_load in the builtins)
+        reg.register_dispatch("load", |_| Ok(Box::new(Pin(0))));
+        let mut p = reg.build_dispatch("load", &PolicyConfig::default()).unwrap();
+        let id = p.choose(
+            &snap(),
+            &IncomingRequest {
+                id: 1,
+                tokens: 1,
+                predicted_remaining: None,
+            },
+        );
+        assert_eq!(id, 0, "direct registration must shadow the alias");
+
+        // a dispatch alias must not hijack the reschedule namespace
+        reg.register_reschedule("slo", |_| {
+            Ok(Box::new(crate::coordinator::policy::NoopReschedule::new()))
+        });
+        assert!(reg.has_reschedule("slo"));
+        reg.build_reschedule("slo", &PolicyConfig::default())
+            .expect("reschedule registered under a dispatch-alias name");
+    }
+
+    #[test]
+    fn star_reschedules_through_the_trait() {
+        let reg = PolicyRegistry::with_builtins();
+        let mut cfg = PolicyConfig::default();
+        cfg.rescheduler.horizon = 4;
+        cfg.migration = crate::costmodel::MigrationCostModel {
+            bandwidth_bps: 1e12,
+            latency_s: 1e-4,
+            bytes_per_token: 1,
+        };
+        let mut star = reg.build_reschedule("star", &cfg).unwrap();
+        let s = ClusterSnapshot {
+            instances: vec![
+                inst(
+                    0,
+                    vec![req(1, 3000, Some(4000.0)), req(2, 3000, Some(4000.0))],
+                    1_000_000,
+                ),
+                inst(1, vec![req(3, 500, Some(100.0))], 1_000_000),
+            ],
+            tokens_per_interval: 50.0,
+        };
+        let ds = star.decide(&s);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].src, 0);
+        assert_eq!(star.stats().migrations, 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! SLO-aware dispatch: deadline-headroom-weighted placement (à la "Taming
+//! Request Imbalance", see PAPERS.md).
+//!
+//! Rationale: decode iteration time is linear in batched tokens (paper
+//! Fig. 8), so an instance's *normalized projected token load* is a direct
+//! proxy for the TPOT its requests will see; KV occupancy is a proxy for
+//! admission delay (TTFT) and OOM-recompute risk. Each instance gets a
+//! deadline-headroom score combining the two, and the request goes to the
+//! instance with the most headroom left. Unlike [`PredictedLoadDispatch`],
+//! remaining work is truncated at an SLO horizon: work that lands beyond
+//! the horizon cannot break a near-term deadline and must not repel
+//! placements.
+//!
+//! [`PredictedLoadDispatch`]: super::PredictedLoadDispatch
+
+use super::builtin::argmin_with_fallback;
+use super::{DispatchPolicy, IncomingRequest, PolicyConfig};
+use crate::coordinator::{ClusterSnapshot, InstanceView};
+use crate::InstanceId;
+
+/// Deadline-headroom-weighted dispatch. Knobs (via `PolicyConfig::params`):
+///
+/// * `slo_aware.mem_weight`   — weight of immediate KV occupancy (default 1.0)
+/// * `slo_aware.load_weight`  — weight of horizon-truncated projected work
+///   (default 1.0)
+/// * `slo_aware.horizon_tokens` — lookahead in tokens; remaining work past
+///   this does not count against near-term deadlines (default 4096)
+#[derive(Clone, Debug)]
+pub struct SloAwareDispatch {
+    mem_weight: f64,
+    load_weight: f64,
+    horizon_tokens: f64,
+}
+
+impl SloAwareDispatch {
+    pub fn from_config(cfg: &PolicyConfig) -> Self {
+        SloAwareDispatch {
+            mem_weight: cfg.param_or("slo_aware.mem_weight", 1.0),
+            load_weight: cfg.param_or("slo_aware.load_weight", 1.0),
+            horizon_tokens: cfg.param_or("slo_aware.horizon_tokens", 4096.0).max(1.0),
+        }
+    }
+
+    /// Pressure score: higher = less deadline headroom. Both terms are
+    /// normalized by instance capacity so heterogeneous instances compare
+    /// fairly (a half-full big instance beats a half-full small one on
+    /// absolute headroom).
+    fn pressure(&self, iv: &InstanceView, incoming: &IncomingRequest) -> f64 {
+        let cap = iv.kv_capacity_tokens.max(1) as f64;
+        let mem = (iv.effective_used() + incoming.tokens) as f64 / cap;
+        let committed: f64 = iv
+            .requests
+            .iter()
+            .map(|r| r.tokens as f64 + r.remaining_or(0.0).min(self.horizon_tokens))
+            .sum::<f64>()
+            + iv.inbound_reserved_tokens as f64
+            + incoming.tokens as f64
+            + incoming
+                .predicted_remaining
+                .unwrap_or(0.0)
+                .min(self.horizon_tokens);
+        self.mem_weight * mem + self.load_weight * (committed / cap)
+    }
+}
+
+impl DispatchPolicy for SloAwareDispatch {
+    fn name(&self) -> &str {
+        "slo_aware"
+    }
+
+    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
+        argmin_with_fallback(snapshot, incoming.tokens, |iv| self.pressure(iv, incoming))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+
+    fn policy() -> SloAwareDispatch {
+        SloAwareDispatch::from_config(&PolicyConfig::default())
+    }
+
+    fn incoming(tokens: u64, pred: Option<f64>) -> IncomingRequest {
+        IncomingRequest {
+            id: 0,
+            tokens,
+            predicted_remaining: pred,
+        }
+    }
+
+    #[test]
+    fn horizon_truncates_far_future_work() {
+        // instance 0 holds one very long request (most of it beyond the
+        // horizon); instance 1 holds several that all finish inside it.
+        // Within-horizon committed work: inst0 = 1000 + 4096 (truncated);
+        // inst1 = 3 * (1000 + 2000) = 9000 > 5096, so the long-tail
+        // instance has MORE deadline headroom and should win.
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 1000, Some(100_000.0))], 100_000),
+                inst(
+                    1,
+                    vec![
+                        req(2, 1000, Some(2_000.0)),
+                        req(3, 1000, Some(2_000.0)),
+                        req(4, 1000, Some(2_000.0)),
+                    ],
+                    100_000,
+                ),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut d = policy();
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 0);
+        // a pure predicted-load policy is repelled by the long tail
+        let mut pl = super::super::PredictedLoadDispatch;
+        assert_eq!(pl.choose(&snap, &incoming(10, None)), 1);
+    }
+
+    #[test]
+    fn normalizes_by_capacity() {
+        // equal absolute load, but instance 1 has 4x the capacity: its
+        // relative pressure is lower
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 5_000, Some(100.0))], 20_000),
+                inst(1, vec![req(2, 5_000, Some(100.0))], 80_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut d = policy();
+        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+    }
+
+    #[test]
+    fn no_fit_falls_back_to_least_pressure() {
+        let snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 9_990, Some(10.0))], 10_000),
+                inst(1, vec![req(2, 9_999, Some(10.0))], 10_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut d = policy();
+        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+    }
+
+    #[test]
+    fn knobs_come_from_config() {
+        let mut cfg = PolicyConfig::default();
+        cfg.params.insert("slo_aware.horizon_tokens".into(), 50.0);
+        let d = SloAwareDispatch::from_config(&cfg);
+        assert_eq!(d.horizon_tokens, 50.0);
+    }
+}

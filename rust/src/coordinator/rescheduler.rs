@@ -22,6 +22,7 @@
 use std::time::Instant;
 
 use super::future_load::{beta_schedule, FutureLoad, WorkerReport};
+use super::policy::ReschedulePolicy;
 use super::ClusterSnapshot;
 use crate::config::ReschedulerConfig;
 use crate::costmodel::MigrationCostModel;
@@ -59,13 +60,14 @@ pub struct Rescheduler {
     beta_sum: f64,
     pub migration: MigrationCostModel,
     /// Average decode iteration time T̄_exec (updated by the caller from
-    /// measurements; seeds from the cost model).
+    /// measurements; seeds from [`ReschedulerConfig::initial_avg_iter_s`]).
     pub avg_iter_s: f64,
     /// Whether predictions are available (Alg. 1 `usePrediction`).
     pub use_prediction: bool,
     /// Assumed remaining length when prediction is off but a number is
-    /// still needed for the amortization check (set to the workload's
-    /// running mean output length by the caller).
+    /// still needed for the amortization check (seeds from
+    /// [`ReschedulerConfig::default_remaining`]; the caller refines it to
+    /// the workload's running mean output length).
     pub default_remaining: f64,
     pub stats: ReschedulerStats,
 }
@@ -74,14 +76,16 @@ impl Rescheduler {
     pub fn new(cfg: ReschedulerConfig, migration: MigrationCostModel, use_prediction: bool) -> Self {
         let betas = beta_schedule(cfg.horizon, cfg.beta_decay);
         let beta_sum: f64 = betas.iter().sum();
+        let avg_iter_s = cfg.initial_avg_iter_s;
+        let default_remaining = cfg.default_remaining;
         Rescheduler {
             cfg,
             betas,
             beta_sum: beta_sum.max(1e-12),
             migration,
-            avg_iter_s: 0.02,
+            avg_iter_s,
             use_prediction,
-            default_remaining: 1000.0,
+            default_remaining,
             stats: ReschedulerStats::default(),
         }
     }
@@ -342,6 +346,32 @@ impl Rescheduler {
         };
         recompute(&mut reports[s_idx], &self.betas);
         recompute(&mut reports[d_idx], &self.betas);
+    }
+}
+
+/// The STAR algorithm behind the pluggable policy surface: registered as
+/// `"star"` in [`PolicyRegistry::with_builtins`].
+///
+/// [`PolicyRegistry::with_builtins`]: super::policy::PolicyRegistry::with_builtins
+impl ReschedulePolicy for Rescheduler {
+    fn name(&self) -> &str {
+        "star"
+    }
+
+    fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+        Rescheduler::decide(self, snapshot)
+    }
+
+    fn stats(&self) -> ReschedulerStats {
+        self.stats.clone()
+    }
+
+    fn observe_avg_iter_s(&mut self, avg_iter_s: f64) {
+        self.avg_iter_s = avg_iter_s;
+    }
+
+    fn observe_default_remaining(&mut self, tokens: f64) {
+        self.default_remaining = tokens;
     }
 }
 

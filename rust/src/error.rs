@@ -1,24 +1,21 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`From` impls so the crate
+//! has no proc-macro dependency and builds fully offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for runtime, config, and coordination failures.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA failures surfaced from the `xla` crate.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// Artifact files missing or malformed (run `make artifacts`).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Configuration parse or validation failure.
-    #[error("config: {0}")]
     Config(String),
 
     /// KV-cache capacity exhausted on an instance (paper Issue 1).
-    #[error("kv cache OOM on instance {instance}: need {need} blocks, free {free}")]
     KvOom {
         instance: usize,
         need: usize,
@@ -26,16 +23,56 @@ pub enum Error {
     },
 
     /// Request routing / lifecycle violation (bug or shutdown race).
-    #[error("coordinator: {0}")]
     Coordinator(String),
 
     /// I/O with context.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// CLI usage error.
-    #[error("cli: {0}")]
     Cli(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::KvOom {
+                instance,
+                need,
+                free,
+            } => write!(
+                f,
+                "kv cache OOM on instance {instance}: need {need} blocks, free {free}"
+            ),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Cli(m) => write!(f, "cli: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

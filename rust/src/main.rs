@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use star::cli::{Args, Spec};
 use star::config::{Config, ExperimentConfig, PredictorKind};
-use star::coordinator::DispatchPolicy;
+use star::coordinator::PolicyRegistry;
 use star::metrics::Slo;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
@@ -67,7 +67,16 @@ fn spec() -> Spec {
             ("prefill", "n", "prefill instances"),
             ("kv-capacity", "tokens", "KV capacity per decode instance"),
             ("policy", "name", "baseline: vllm | star | star-nopred | oracle"),
-            ("dispatch", "name", "round_robin | current_load | predicted_load"),
+            (
+                "dispatch",
+                "name",
+                "round_robin | current_load | predicted_load | slo_aware",
+            ),
+            (
+                "reschedule",
+                "name",
+                "star | memory_pressure | none (registry name)",
+            ),
             ("predictor", "name", "none|oracle|llm_native|2bin|4bin|6bin"),
             ("interval", "s", "rescheduler interval seconds"),
             ("seed", "n", "PRNG seed"),
@@ -125,6 +134,12 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     }
     if let Some(p) = args.opt("predictor") {
         exp.predictor = PredictorKind::parse(p)?;
+    }
+    if let Some(d) = args.opt("dispatch") {
+        exp.dispatch_policy = d.to_string();
+    }
+    if let Some(r) = args.opt("reschedule") {
+        exp.reschedule_policy = r.to_string();
     }
     exp.record_traces = args.flag("traces") || args.opt("trace-out").is_some();
     exp.validate()?;
@@ -190,21 +205,21 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
     };
     if verbose {
         println!(
-            "simulating {} requests on {} decode instances (resched={} predictor={})",
+            "simulating {} requests on {} decode instances (dispatch={} reschedule={} \
+             resched={} predictor={})",
             trace.len(),
             exp.cluster.n_decode,
+            exp.dispatch_policy,
+            exp.reschedule_policy,
             exp.rescheduler.enabled,
             exp.predictor.name()
         );
     }
-    let dispatch = DispatchPolicy::parse(args.opt_or("dispatch", "current_load"))
-        .ok_or_else(|| star::Error::Cli("bad dispatch".into()))?;
     let params = SimParams {
         exp,
-        dispatch,
         ..Default::default()
     };
-    let report = Simulator::new(params, &trace).run();
+    let report = Simulator::with_registry(params, &trace, &PolicyRegistry::with_builtins())?.run();
     println!("{}", report.summary(Slo::default()));
     println!(
         "scheduler: {} intervals, {} candidates, max decision {} us",
@@ -234,8 +249,6 @@ fn run_serve(args: &Args) -> Result<(), star::Error> {
     exp.cluster.max_batch = exp.cluster.max_batch.min(8);
     let dir = artifacts_dir(args.opt("artifacts"))?;
     let rt = Arc::new(StarRuntime::load(&dir)?);
-    let dispatch = DispatchPolicy::parse(args.opt_or("dispatch", "current_load"))
-        .ok_or_else(|| star::Error::Cli("bad dispatch".into()))?;
     let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps)
         .pico(rt.meta.max_prompt as u32 - 8, rt.meta.max_output as u32);
     let trace = gen.generate(exp.cluster.n_requests, exp.cluster.seed);
@@ -245,7 +258,6 @@ fn run_serve(args: &Args) -> Result<(), star::Error> {
         .collect();
     let params = ServeParams {
         exp,
-        dispatch,
         ..Default::default()
     };
     let server = Server::new(rt, params);

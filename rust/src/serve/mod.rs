@@ -13,7 +13,8 @@
 //! * Every decode instance owns a fixed-bucket KV buffer plus a paged
 //!   [`KvCacheManager`] enforcing the configured token capacity (OOM
 //!   semantics identical to the simulator).
-//! * The coordinator runs the same [`Rescheduler`] (Algorithm 1) as the
+//! * The coordinator drives the same [`ControlLoop`] (registry-built
+//!   dispatch + reschedule policies, e.g. Algorithm 1 as `"star"`) as the
 //!   simulator on worker state reports, and executes migrations by
 //!   extracting the KV slot on the source, delaying by the modeled
 //!   transfer time, and admitting on the target — the moving request is
@@ -22,7 +23,7 @@
 //!   invisible to them.
 //!
 //! [`KvCacheManager`]: crate::kvcache::KvCacheManager
-//! [`Rescheduler`]: crate::coordinator::Rescheduler
+//! [`ControlLoop`]: crate::coordinator::ControlLoop
 
 mod instance;
 mod server;

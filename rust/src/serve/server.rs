@@ -11,23 +11,24 @@ use super::instance::{AdmitPayload, DecodeCommand, DecodeEvent, DecodeInstance, 
 use super::LiveRequest;
 use crate::config::{ExperimentConfig, PredictorKind};
 use crate::coordinator::{
-    ClusterSnapshot, Dispatcher, DispatchPolicy, InstanceView, RequestView, Rescheduler,
+    ClusterSnapshot, ControlLoop, IncomingRequest, InstanceView, PolicyRegistry, RequestView,
     ReschedulerStats,
 };
 use crate::costmodel::MigrationCostModel;
 use crate::metrics::{
-    RequestLatency, RunMetrics, TraceEvent, TraceRecorder, VarianceOverTime,
+    RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime,
 };
 use crate::runtime::StarRuntime;
 use crate::{InstanceId, RequestId, Result, Time};
 
-/// Live-serving parameters (mirrors the simulator's [`SimParams`]).
+/// Live-serving parameters (mirrors the simulator's [`SimParams`]). The
+/// dispatch / reschedule policies are named by `exp.dispatch_policy` /
+/// `exp.reschedule_policy` and built through the server's policy registry.
 ///
 /// [`SimParams`]: crate::sim::SimParams
 #[derive(Clone, Debug)]
 pub struct ServeParams {
     pub exp: ExperimentConfig,
-    pub dispatch: DispatchPolicy,
     pub temperature: f32,
     pub migration: MigrationCostModel,
     /// Hard wall-clock cap for the run.
@@ -38,7 +39,6 @@ impl Default for ServeParams {
     fn default() -> Self {
         ServeParams {
             exp: ExperimentConfig::default(),
-            dispatch: DispatchPolicy::CurrentLoad,
             temperature: 0.9,
             migration: MigrationCostModel::new_25gbps(4096),
             max_wall_s: 600.0,
@@ -77,15 +77,31 @@ struct InstanceState {
     inbound_reserved: u64,
 }
 
-/// The live server. Owns the runtime and the experiment wiring.
+/// The live server. Owns the runtime, the experiment wiring, and the
+/// policy registry its control loop builds from.
 pub struct Server {
     pub runtime: Arc<StarRuntime>,
     pub params: ServeParams,
+    registry: PolicyRegistry,
 }
 
 impl Server {
+    /// Server with the builtin policy set.
     pub fn new(runtime: Arc<StarRuntime>, params: ServeParams) -> Server {
-        Server { runtime, params }
+        Server::with_registry(runtime, params, PolicyRegistry::with_builtins())
+    }
+
+    /// Server with a caller-supplied registry (third-party policies).
+    pub fn with_registry(
+        runtime: Arc<StarRuntime>,
+        params: ServeParams,
+        registry: PolicyRegistry,
+    ) -> Server {
+        Server {
+            runtime,
+            params,
+            registry,
+        }
     }
 
     /// Serve a workload to completion; returns aggregated metrics.
@@ -191,12 +207,8 @@ impl Server {
                 },
             );
         }
-        let mut dispatcher = Dispatcher::new(self.params.dispatch);
-        let mut rescheduler = Rescheduler::new(
-            exp.rescheduler.clone(),
-            self.params.migration,
-            exp.predictor.uses_prediction(),
-        );
+        let mut control =
+            ControlLoop::from_experiment(exp, self.params.migration, &self.registry)?;
         let mut recorder = TraceRecorder::new(exp.record_traces);
         let mut exec_var = VarianceOverTime::new();
         let mut load_var = VarianceOverTime::new();
@@ -204,6 +216,9 @@ impl Server {
         let mut failed = 0usize;
         let mut oom_events = 0u64;
         let mut migrations = 0u64;
+        // realized output lengths: refines the no-prediction remaining
+        // estimate, mirroring the simulator's feed of output_mean / 2
+        let mut output_mean = RunningVariance::new();
         let mut migrating: Vec<RequestId> = Vec::new();
         // exact capacity reservations made by migration decisions:
         // request -> (dst instance, reserved tokens)
@@ -238,14 +253,15 @@ impl Server {
                 tokens_per_interval: interval.as_secs_f64() / avg_iter.max(1e-4),
             }
         };
-        let avg_iter_of = |instances: &[InstanceState]| {
+        let seed_avg_iter_s = exp.rescheduler.initial_avg_iter_s;
+        let avg_iter_of = move |instances: &[InstanceState]| {
             let xs: Vec<f64> = instances
                 .iter()
                 .filter(|s| s.ewma_iter_ms > 0.0)
                 .map(|s| s.ewma_iter_ms / 1e3)
                 .collect();
             if xs.is_empty() {
-                0.02
+                seed_avg_iter_s
             } else {
                 xs.iter().sum::<f64>() / xs.len() as f64
             }
@@ -290,7 +306,14 @@ impl Server {
                     let avg = avg_iter_of(&instances);
                     let snap = snapshot_of(&instances, &migrating, avg);
                     let tokens = payload.pos as u64 + payload.replay.len() as u64;
-                    dispatcher.choose(&snap, tokens, payload.predicted_remaining)
+                    control.dispatch(
+                        &snap,
+                        &IncomingRequest {
+                            id: payload.id,
+                            tokens,
+                            predicted_remaining: payload.predicted_remaining,
+                        },
+                    )
                 };
                 let _ = instances[di].cmd.send(DecodeCommand::Admit(payload));
             }
@@ -336,8 +359,14 @@ impl Server {
                         };
                         let avg = avg_iter_of(&instances);
                         let snap = snapshot_of(&instances, &migrating, avg);
-                        let di =
-                            dispatcher.choose(&snap, req.prompt.len() as u64, pred);
+                        let di = control.dispatch(
+                            &snap,
+                            &IncomingRequest {
+                                id: req.id,
+                                tokens: req.prompt.len() as u64,
+                                predicted_remaining: pred,
+                            },
+                        );
                         let payload = Box::new(AdmitPayload {
                             id: req.id,
                             kv,
@@ -369,6 +398,7 @@ impl Server {
                             &mut retries,
                             &mut completed,
                             &mut oom_events,
+                            &mut output_mean,
                         );
                         pending = ev_rx.try_recv().ok();
                     }
@@ -397,11 +427,14 @@ impl Server {
                         },
                     );
                 }
-                if exp.rescheduler.enabled {
+                if control.rescheduling_enabled() {
                     let avg = avg_iter_of(&instances);
-                    rescheduler.avg_iter_s = avg;
+                    control.observe_avg_iter_s(avg);
+                    if output_mean.count() > 10 {
+                        control.observe_default_remaining(output_mean.mean() / 2.0);
+                    }
                     let snap = snapshot_of(&instances, &migrating, avg);
-                    for d in rescheduler.decide(&snap) {
+                    for d in control.reschedule(&snap) {
                         migrations += 1;
                         migrating.push(d.request);
                         instances[d.dst].inbound_reserved += d.kv_tokens;
@@ -450,7 +483,7 @@ impl Server {
             exec_var,
             load_var,
             recorder,
-            scheduler_stats: rescheduler.stats.clone(),
+            scheduler_stats: control.stats(),
             wall_s: wall,
             oom_events,
             migrations,
@@ -468,6 +501,7 @@ impl Server {
         retries: &mut VecDeque<(Instant, Box<AdmitPayload>)>,
         completed: &mut usize,
         oom_events: &mut u64,
+        output_mean: &mut RunningVariance,
     ) {
         match ev {
             DecodeEvent::Token { id, at, .. } => {
@@ -494,6 +528,7 @@ impl Server {
                     if !t.done {
                         t.done = true;
                         *completed += 1;
+                        output_mean.push(generated as f64);
                         t.latency.finished = Some(since(at));
                         t.latency.output_tokens = generated;
                         if t.generated > 1 {

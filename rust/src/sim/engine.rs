@@ -7,7 +7,7 @@ use super::report::SimReport;
 use super::{ReqState, SimRequest};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
-    ClusterSnapshot, Dispatcher, DispatchPolicy, InstanceView, RequestView, Rescheduler,
+    ClusterSnapshot, ControlLoop, IncomingRequest, InstanceView, PolicyRegistry, RequestView,
 };
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::KvCacheManager;
@@ -16,13 +16,14 @@ use crate::metrics::{
 };
 use crate::predictor::{build_sim_predictor, LengthPredictor, PredictInput};
 use crate::workload::Request;
-use crate::{InstanceId, RequestId, Time};
+use crate::{InstanceId, RequestId, Result, Time};
 
-/// Substrate parameters for a simulation run.
+/// Substrate parameters for a simulation run. The dispatch / reschedule
+/// policies are named by `exp.dispatch_policy` / `exp.reschedule_policy`
+/// and built through a [`PolicyRegistry`].
 #[derive(Clone, Debug)]
 pub struct SimParams {
     pub exp: ExperimentConfig,
-    pub dispatch: DispatchPolicy,
     pub decode_cost: DecodeCostModel,
     pub prefill_cost: PrefillCostModel,
     pub migration: MigrationCostModel,
@@ -34,7 +35,6 @@ impl Default for SimParams {
     fn default() -> Self {
         SimParams {
             exp: ExperimentConfig::default(),
-            dispatch: DispatchPolicy::CurrentLoad,
             decode_cost: DecodeCostModel::paper_4090d(),
             prefill_cost: PrefillCostModel::paper_4090d(),
             migration: MigrationCostModel::new_25gbps(128 * 1024),
@@ -70,8 +70,9 @@ pub struct Simulator {
     requests: Vec<SimRequest>,
     prefill: Vec<PrefillSim>,
     decode: Vec<DecodeSim>,
-    dispatcher: Dispatcher,
-    rescheduler: Rescheduler,
+    control: ControlLoop,
+    /// Cost-model-derived iteration time used until real EWMAs exist.
+    seed_avg_iter_s: f64,
     predictor: Box<dyn LengthPredictor>,
     pub recorder: TraceRecorder,
     exec_var: VarianceOverTime,
@@ -84,19 +85,29 @@ pub struct Simulator {
 }
 
 impl Simulator {
+    /// Build with the builtin policy set. Panics on unknown policy names;
+    /// use [`Simulator::with_registry`] for fallible construction or
+    /// custom policies.
     pub fn new(params: SimParams, trace: &[Request]) -> Simulator {
+        Self::with_registry(params, trace, &PolicyRegistry::with_builtins())
+            .expect("builtin policy construction")
+    }
+
+    /// Build against an explicit [`PolicyRegistry`] — the extension point
+    /// for third-party policies (see `tests/policy_registry.rs`).
+    pub fn with_registry(
+        params: SimParams,
+        trace: &[Request],
+        registry: &PolicyRegistry,
+    ) -> Result<Simulator> {
         let exp = &params.exp;
         let n_dec = exp.cluster.n_decode;
-        let use_pred = exp.predictor.uses_prediction();
-        let mut rescheduler = Rescheduler::new(
-            exp.rescheduler.clone(),
-            params.migration,
-            use_pred,
-        );
-        rescheduler.avg_iter_s = params.decode_cost.iter_time(
+        let mut control = ControlLoop::from_experiment(exp, params.migration, registry)?;
+        let seed_avg_iter_s = params.decode_cost.iter_time(
             exp.cluster.kv_capacity_tokens / 2,
             exp.cluster.max_batch / 2,
         );
+        control.observe_avg_iter_s(seed_avg_iter_s);
         let cap = trace.iter().map(|r| r.output_len).max().unwrap_or(512) as f64;
         let predictor = build_sim_predictor(
             exp.predictor,
@@ -129,9 +140,9 @@ impl Simulator {
         }
         queue.push(exp.rescheduler.interval_s, Event::SchedulerTick);
 
-        Simulator {
-            dispatcher: Dispatcher::new(params.dispatch),
-            rescheduler,
+        Ok(Simulator {
+            control,
+            seed_avg_iter_s,
             predictor,
             recorder: TraceRecorder::new(exp.record_traces),
             exec_var: VarianceOverTime::new(),
@@ -167,7 +178,7 @@ impl Simulator {
             migrations_started: 0,
             output_mean: RunningVariance::new(),
             params,
-        }
+        })
     }
 
     /// Run to completion (all requests done/failed) or the time cap.
@@ -254,7 +265,14 @@ impl Simulator {
         // dispatch to a decode instance (the common P2D baseline layer)
         let kv_tokens = self.requests[id as usize].kv_tokens();
         let snapshot = self.snapshot();
-        let di = self.dispatcher.choose(&snapshot, kv_tokens, pred);
+        let di = self.control.dispatch(
+            &snapshot,
+            &IncomingRequest {
+                id,
+                tokens: kv_tokens,
+                predicted_remaining: pred,
+            },
+        );
 
         if kv_tokens > self.decode[di].kv.capacity_tokens() {
             // cannot ever fit: fail the request (counted, not silently lost)
@@ -552,7 +570,7 @@ impl Simulator {
             .map(|d| d.ewma_iter_ms / 1e3)
             .collect();
         if busy.is_empty() {
-            self.rescheduler.avg_iter_s
+            self.seed_avg_iter_s
         } else {
             busy.iter().sum::<f64>() / busy.len() as f64
         }
@@ -584,13 +602,14 @@ impl Simulator {
             );
         }
 
-        if self.params.exp.rescheduler.enabled {
-            self.rescheduler.avg_iter_s = self.avg_iter_s();
+        if self.control.rescheduling_enabled() {
+            self.control.observe_avg_iter_s(self.avg_iter_s());
             if self.output_mean.count() > 10 {
-                self.rescheduler.default_remaining = self.output_mean.mean() / 2.0;
+                self.control
+                    .observe_default_remaining(self.output_mean.mean() / 2.0);
             }
             let snapshot = self.snapshot();
-            let decisions = self.rescheduler.decide(&snapshot);
+            let decisions = self.control.reschedule(&snapshot);
             for d in decisions {
                 self.start_migration(d.request, d.src, d.dst, d.kv_tokens);
             }
@@ -649,7 +668,7 @@ impl Simulator {
             exec_var: self.exec_var,
             load_var: self.load_var,
             recorder: self.recorder,
-            scheduler_stats: self.rescheduler.stats.clone(),
+            scheduler_stats: self.control.stats(),
             per_instance_tokens: self.decode.iter().map(|d| d.tokens_decoded).collect(),
         };
         for r in self.requests {

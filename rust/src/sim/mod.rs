@@ -3,10 +3,10 @@
 //! events; the execution time of each decode iteration is derived from
 //! real system measurements").
 //!
-//! The simulator shares the *exact* policy code with the live runtime:
-//! [`crate::coordinator::Dispatcher`] for prefill→decode hand-off and
-//! [`crate::coordinator::Rescheduler`] (Algorithm 1) for decode-phase
-//! migration. Only the execution substrate differs — decode iteration
+//! The simulator shares the *exact* policy code with the live runtime: a
+//! [`crate::coordinator::ControlLoop`] holding the registry-built dispatch
+//! and reschedule policies (`exp.dispatch_policy` / `exp.reschedule_policy`).
+//! Only the execution substrate differs — decode iteration
 //! times come from a [`DecodeCostModel`] calibrated by the `fig8_costmodel`
 //! bench instead of PJRT execution.
 //!

@@ -3,7 +3,8 @@
 
 use star::config::ReschedulerConfig;
 use star::coordinator::{
-    ClusterSnapshot, Dispatcher, DispatchPolicy, InstanceView, RequestView, Rescheduler,
+    ClusterSnapshot, IncomingRequest, InstanceView, PolicyConfig, PolicyRegistry, RequestView,
+    Rescheduler,
 };
 use star::costmodel::MigrationCostModel;
 use star::kvcache::KvCacheManager;
@@ -169,19 +170,22 @@ fn balanced_clusters_are_left_alone() {
 
 #[test]
 fn dispatcher_always_returns_valid_instance() {
+    let registry = PolicyRegistry::with_builtins();
     property("dispatch validity", 300, |g| {
         let snap = random_snapshot(g);
-        let policy = *g
+        let name = *g
             .rng()
-            .choose(&[
-                DispatchPolicy::RoundRobin,
-                DispatchPolicy::CurrentLoad,
-                DispatchPolicy::PredictedLoad,
-            ]);
-        let mut d = Dispatcher::new(policy);
-        for _ in 0..5 {
-            let tokens = g.u64(1, 2_000);
-            let id = d.choose(&snap, tokens, Some(g.f64(0.0, 1_000.0)));
+            .choose(&["round_robin", "current_load", "predicted_load", "slo_aware"]);
+        let mut d = registry
+            .build_dispatch(name, &PolicyConfig::default())
+            .map_err(|e| e.to_string())?;
+        for req_id in 0..5u64 {
+            let incoming = IncomingRequest {
+                id: req_id,
+                tokens: g.u64(1, 2_000),
+                predicted_remaining: Some(g.f64(0.0, 1_000.0)),
+            };
+            let id = d.choose(&snap, &incoming);
             prop_assert(
                 snap.instances.iter().any(|i| i.id == id),
                 "returned unknown instance",
@@ -206,11 +210,18 @@ fn round_robin_is_fair_on_uniform_clusters() {
                 .collect(),
             tokens_per_interval: 10.0,
         };
-        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let mut d = PolicyRegistry::with_builtins()
+            .build_dispatch("round_robin", &PolicyConfig::default())
+            .map_err(|e| e.to_string())?;
         let rounds = g.usize(1, 6);
         let mut counts = vec![0usize; n];
         for _ in 0..rounds * n {
-            counts[d.choose(&snap, 10, None)] += 1;
+            let incoming = IncomingRequest {
+                id: 0,
+                tokens: 10,
+                predicted_remaining: None,
+            };
+            counts[d.choose(&snap, &incoming)] += 1;
         }
         prop_assert(
             counts.iter().all(|&c| c == rounds),

@@ -6,7 +6,6 @@
 use std::sync::Arc;
 
 use star::config::PredictorKind;
-use star::coordinator::DispatchPolicy;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
 

@@ -1,0 +1,251 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings), vendored so the
+//! STAR crate builds and tests without network access or an XLA toolchain.
+//!
+//! Host-side `Literal` operations (construction, reshape, readback) are
+//! implemented for real — they are plain data shuffling. Everything that
+//! needs the PJRT C API (`PjRtClient::cpu`, compilation, execution) returns
+//! a descriptive [`Error`], so `StarRuntime::load` fails cleanly and every
+//! artifact-dependent test/bench skips, exactly as when `make artifacts`
+//! has not run. Swap this path dependency for the real `xla` crate to run
+//! the live serving stack.
+
+use std::fmt;
+
+/// Stub error: either a host-side shape/dtype misuse or "no backend".
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_backend<T>() -> Result<T> {
+    Err(Error(
+        "PJRT backend unavailable: built against the offline xla stub \
+         (vendor/xla); link the real xla crate to execute artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element types the stub can store and read back.
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor literal: shape + flat storage (or a tuple of literals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Conversion trait tying Rust element types to [`Data`] variants.
+pub trait NativeType: Sized + Clone {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".to_string())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// Reshape without moving data; element counts must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: {have} elements vs {want}",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            Data::Tuple(_) => Err(Error("tuple literal has no array shape".to_string())),
+            _ => Ok(ArrayShape {
+                dims: self.dims.clone(),
+            }),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(xs) => Ok(xs),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut xs = self.to_tuple()?;
+        if xs.len() != 1 {
+            return Err(Error(format!("expected 1-tuple, got {}", xs.len())));
+        }
+        Ok(xs.remove(0))
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        let mut xs = self.to_tuple()?;
+        if xs.len() != 3 {
+            return Err(Error(format!("expected 3-tuple, got {}", xs.len())));
+        }
+        let c = xs.remove(2);
+        let b = xs.remove(1);
+        let a = xs.remove(0);
+        Ok((a, b, c))
+    }
+}
+
+/// Array shape (dims only; the stub carries no layout/dtype metadata).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub; parsing needs the XLA runtime).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        no_backend()
+    }
+}
+
+/// Computation handle (never constructible without a real proto).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. `cpu()` always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        no_backend()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        no_backend()
+    }
+}
+
+/// Compiled executable handle (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_backend()
+    }
+}
+
+/// Device buffer handle (never constructible in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_backend()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn backend_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
