@@ -1,0 +1,162 @@
+//! `BENCH_sim_core`: simulator state-layer throughput harness — the perf
+//! baseline future PRs are held to.
+//!
+//! Runs Fig. 13-shaped workloads (8/64/256 decode instances, request rate
+//! scaled 0.5 rps per 8 instances, ≥50k requests) through both state
+//! paths:
+//!
+//! * **incremental** — policies borrow views from the O(1)-delta
+//!   [`ClusterState`] (the production path);
+//! * **from_scratch** — a full [`ClusterSnapshot`] is materialized before
+//!   every dispatch and scheduler tick
+//!   ([`StateMode::RebuildPerDecision`]), reproducing the
+//!   pre-incremental cost: O(instances × requests) per decision.
+//!
+//! Emits `BENCH_sim_core.json` (path override: `STAR_BENCH_OUT`) with
+//! wall-clock per simulated request and the speedup per cluster size.
+//! `STAR_BENCH_FAST=1` shrinks the run for smoke testing;
+//! `STAR_BENCH_BASELINE_REQUESTS=<n>` caps the from-scratch baseline's
+//! request count when full scale is impractical (the cap *underestimates*
+//! the baseline's per-request cost — the table-scan term grows with the
+//! request count — so the reported speedup is a lower bound).
+//!
+//! [`ClusterState`]: star::coordinator::ClusterState
+//! [`ClusterSnapshot`]: star::coordinator::ClusterSnapshot
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use star::config::{ExperimentConfig, PredictorKind};
+use star::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
+use star::sim::{SimParams, Simulator, StateMode};
+use star::workload::{Dataset, TraceGen};
+
+struct Measure {
+    requests: usize,
+    wall_s: f64,
+    us_per_request: f64,
+    completed: usize,
+    failed: usize,
+    migrations: u64,
+    oom_events: u64,
+}
+
+impl Measure {
+    fn json(&self) -> String {
+        format!(
+            "{{\"requests\": {}, \"wall_s\": {:.4}, \"us_per_request\": {:.3}, \
+             \"completed\": {}, \"failed\": {}, \"migrations\": {}, \"oom_events\": {}}}",
+            self.requests,
+            self.wall_s,
+            self.us_per_request,
+            self.completed,
+            self.failed,
+            self.migrations,
+            self.oom_events,
+        )
+    }
+}
+
+fn run_one(size: usize, n_requests: usize, mode: StateMode) -> Measure {
+    // fig13 shape: KV memory is the binding resource on the calibrated
+    // profile; 0.5 rps per 8 instances reaches the near-capacity dynamic
+    // equilibrium (see benches/fig13_scaling.rs)
+    let rps = 0.5 * size as f64 / 8.0;
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_prefill = (size / 4).max(1);
+    exp.cluster.n_decode = size;
+    exp.cluster.dataset = Dataset::ShareGpt;
+    exp.cluster.rps = rps;
+    exp.cluster.seed = 53;
+    exp.cluster.kv_capacity_tokens = 160_000;
+    exp.cluster.max_batch = 64;
+    exp.predictor = PredictorKind::Oracle;
+    exp.rescheduler.enabled = true;
+    let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n_requests, 53);
+    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+    let params = SimParams {
+        exp,
+        decode_cost: DecodeCostModel::paper_h800(),
+        prefill_cost: PrefillCostModel::paper_4090d(),
+        migration: MigrationCostModel::new_25gbps(128 * 1024),
+        // generous: runs end on completion, not on this cap
+        max_sim_time: horizon * 10.0 + 100_000.0,
+        state_mode: mode,
+        ..Default::default()
+    };
+    let sim = Simulator::new(params, &trace);
+    let t0 = Instant::now();
+    let report = sim.run();
+    let wall_s = t0.elapsed().as_secs_f64();
+    Measure {
+        requests: n_requests,
+        wall_s,
+        us_per_request: wall_s * 1e6 / n_requests as f64,
+        completed: report.completed.len(),
+        failed: report.n_failed,
+        migrations: report.migrations,
+        oom_events: report.oom_events,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("STAR_BENCH_FAST").is_ok();
+    let sizes: &[usize] = if fast { &[8, 16] } else { &[8, 64, 256] };
+    let n_requests = if fast { 2_000 } else { 50_000 };
+    let baseline_cap: usize = std::env::var("STAR_BENCH_BASELINE_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(n_requests);
+
+    let mut rows = Vec::new();
+    for &size in sizes {
+        println!("[bench_sim_core] size {size}: incremental ({n_requests} requests)...");
+        let inc = run_one(size, n_requests, StateMode::Incremental);
+        println!(
+            "[bench_sim_core] size {size}: incremental {:.3} us/req \
+             ({:.2}s wall, {} completed, {} migrations)",
+            inc.us_per_request, inc.wall_s, inc.completed, inc.migrations
+        );
+        let base_n = baseline_cap.min(n_requests);
+        println!("[bench_sim_core] size {size}: from-scratch baseline ({base_n} requests)...");
+        let base = run_one(size, base_n, StateMode::RebuildPerDecision);
+        println!(
+            "[bench_sim_core] size {size}: from-scratch {:.3} us/req ({:.2}s wall)",
+            base.us_per_request, base.wall_s
+        );
+        let speedup = base.us_per_request / inc.us_per_request.max(1e-9);
+        println!("[bench_sim_core] size {size}: speedup {speedup:.1}x");
+        rows.push((size, inc, base, speedup));
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"sim_core\",\n");
+    let _ = writeln!(
+        json,
+        "  \"description\": \"wall-clock per simulated request: incremental \
+         ClusterState views vs from-scratch snapshot rebuild per decision\","
+    );
+    let _ = writeln!(
+        json,
+        "  \"config\": {{\"dataset\": \"sharegpt\", \"rps_per_8_instances\": 0.5, \
+         \"kv_capacity_tokens\": 160000, \"max_batch\": 64, \"predictor\": \"oracle\", \
+         \"dispatch\": \"current_load\", \"reschedule\": \"star\", \"seed\": 53}},"
+    );
+    json.push_str("  \"results\": [\n");
+    for (i, (size, inc, base, speedup)) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"instances\": {size}, \"incremental\": {}, \"from_scratch\": {}, \
+             \"speedup_us_per_request\": {speedup:.2}}}",
+            inc.json(),
+            base.json()
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+
+    let out = std::env::var("STAR_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim_core.json".into());
+    std::fs::write(&out, &json).expect("write bench output");
+    println!("[bench_sim_core] wrote {out}");
+    println!("{json}");
+}

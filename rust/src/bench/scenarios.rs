@@ -78,6 +78,7 @@ pub fn sim_params(exp: ExperimentConfig, h800: bool) -> SimParams {
         prefill_cost: PrefillCostModel::paper_4090d(),
         migration: MigrationCostModel::new_25gbps(128 * 1024),
         max_sim_time: 100_000.0,
+        ..Default::default()
     }
 }
 

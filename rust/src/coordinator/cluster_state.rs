@@ -1,0 +1,787 @@
+//! Incremental cluster state: the scheduler's source of truth, maintained
+//! by O(1) deltas instead of rebuilt per decision.
+//!
+//! Before this module existed, every dispatch and every scheduler tick
+//! materialized a full [`ClusterSnapshot`] from driver internals —
+//! O(instances × requests) per decision, which is exactly the cost the
+//! Fig. 13 large-scale runs (up to 256 decode instances, ≥50k requests)
+//! cannot afford. [`ClusterState`] owns the per-instance aggregates the
+//! policies consume (active KV tokens, batch size, summed predicted
+//! remaining work, inbound-migration reservations, EWMA iteration time)
+//! and is updated at the existing mutation points: admission, token
+//! append, release, migration start/finish, and prediction refresh.
+//!
+//! Policies never see the state type directly; they receive a borrowed
+//! [`ClusterView`], which is also constructible from a [`ClusterSnapshot`]
+//! — the compatibility path for tests and third-party policies that
+//! assemble snapshots by hand (`snapshot.view()`). `bench_sim_core`
+//! quantifies the gap between the two paths.
+
+use std::collections::HashMap;
+
+use super::{ClusterSnapshot, InstanceView, RequestView};
+use crate::{InstanceId, RequestId};
+
+/// KV-token admission watermark (vLLM-style 10% growth headroom): an
+/// instance admits a request only while `used + need` stays below this
+/// fraction of capacity. Shared by the drivers' admission control and by
+/// the reschedulers' destination-feasibility checks — a migration whose
+/// KV footprint cannot pass the watermark on the destination could never
+/// be re-admitted there and must not be decided in the first place.
+pub fn admission_watermark(cap_tokens: u64) -> u64 {
+    cap_tokens * 9 / 10
+}
+
+/// Per-instance aggregates plus the active-request membership list.
+/// Membership is indexed (id → slot via [`ClusterState::index`]) so
+/// release is O(1) swap-remove, not an O(batch) scan.
+#[derive(Clone, Debug)]
+pub struct InstanceStats {
+    pub id: InstanceId,
+    kv_capacity_tokens: u64,
+    requests: Vec<RequestView>,
+    /// Σ tokens over active requests (== [`InstanceView::token_load`]).
+    active_tokens: u64,
+    /// Σ `predicted_remaining.unwrap_or(0.0)` over active requests.
+    predicted_sum: f64,
+    /// Tokens promised to migrations in flight toward this instance.
+    inbound_reserved_tokens: u64,
+    ewma_iter_ms: f64,
+    iters: u64,
+}
+
+impl InstanceStats {
+    fn new(id: InstanceId, kv_capacity_tokens: u64) -> Self {
+        InstanceStats {
+            id,
+            kv_capacity_tokens,
+            requests: Vec::new(),
+            active_tokens: 0,
+            predicted_sum: 0.0,
+            inbound_reserved_tokens: 0,
+            ewma_iter_ms: 0.0,
+            iters: 0,
+        }
+    }
+
+    /// Current token load N_i(B_i), maintained incrementally.
+    #[inline]
+    pub fn token_load(&self) -> u64 {
+        self.active_tokens
+    }
+
+    #[inline]
+    pub fn batch_size(&self) -> usize {
+        self.requests.len()
+    }
+
+    #[inline]
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        self.kv_capacity_tokens
+    }
+
+    #[inline]
+    pub fn inbound_reserved_tokens(&self) -> u64 {
+        self.inbound_reserved_tokens
+    }
+
+    #[inline]
+    pub fn effective_used(&self) -> u64 {
+        self.active_tokens + self.inbound_reserved_tokens
+    }
+
+    #[inline]
+    pub fn free_tokens(&self) -> u64 {
+        self.kv_capacity_tokens.saturating_sub(self.effective_used())
+    }
+
+    /// Projected work Σ (tokens + predicted remaining), the
+    /// `predicted_load` dispatch score, in O(1).
+    #[inline]
+    pub fn predicted_work(&self) -> f64 {
+        self.active_tokens as f64 + self.predicted_sum.max(0.0)
+    }
+
+    #[inline]
+    pub fn ewma_iter_ms(&self) -> f64 {
+        self.ewma_iter_ms
+    }
+
+    #[inline]
+    pub fn iters(&self) -> u64 {
+        self.iters
+    }
+
+    #[inline]
+    pub fn requests(&self) -> &[RequestView] {
+        &self.requests
+    }
+}
+
+/// Incremental cluster-state store shared by both drivers. All mutators
+/// are O(1) (amortized, for the membership vectors); all aggregate reads
+/// are O(1).
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    instances: Vec<InstanceStats>,
+    /// request id → (instance index, slot in its membership vector).
+    index: HashMap<RequestId, (usize, usize)>,
+    /// Scheduling interval (time base of `tokens_per_interval`).
+    interval_s: f64,
+    /// Assumed iteration time until any instance has measured one.
+    seed_avg_iter_s: f64,
+    /// Lower clamp on the average iteration time (driver-specific).
+    iter_floor_s: f64,
+    /// Σ ewma_iter_ms over instances with ewma > 0, and their count —
+    /// makes `avg_iter_s` O(1).
+    busy_ewma_sum_ms: f64,
+    busy_count: usize,
+}
+
+impl ClusterState {
+    pub fn new(
+        n_instances: usize,
+        kv_capacity_tokens: u64,
+        interval_s: f64,
+        seed_avg_iter_s: f64,
+        iter_floor_s: f64,
+    ) -> ClusterState {
+        ClusterState {
+            instances: (0..n_instances)
+                .map(|id| InstanceStats::new(id, kv_capacity_tokens))
+                .collect(),
+            index: HashMap::new(),
+            interval_s,
+            seed_avg_iter_s,
+            iter_floor_s,
+            busy_ewma_sum_ms: 0.0,
+            busy_count: 0,
+        }
+    }
+
+    #[inline]
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    #[inline]
+    pub fn stats(&self, di: usize) -> &InstanceStats {
+        &self.instances[di]
+    }
+
+    /// Active requests of one instance (the simulator's decode batch).
+    #[inline]
+    pub fn active(&self, di: usize) -> &[RequestView] {
+        &self.instances[di].requests
+    }
+
+    #[inline]
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    // -- mutation points ------------------------------------------------
+
+    /// A request enters an instance's running batch.
+    pub fn admit(
+        &mut self,
+        di: usize,
+        id: RequestId,
+        tokens: u64,
+        predicted_remaining: Option<f64>,
+    ) {
+        debug_assert!(
+            !self.index.contains_key(&id),
+            "request {id} admitted twice into cluster state"
+        );
+        let inst = &mut self.instances[di];
+        self.index.insert(id, (di, inst.requests.len()));
+        inst.requests.push(RequestView {
+            id,
+            tokens,
+            predicted_remaining,
+            migrating: false,
+        });
+        inst.active_tokens += tokens;
+        inst.predicted_sum += predicted_remaining.unwrap_or(0.0);
+    }
+
+    /// One generated token appended to `id`'s KV.
+    pub fn append_token(&mut self, id: RequestId) {
+        let &(di, slot) = self.index.get(&id).expect("append for untracked request");
+        let inst = &mut self.instances[di];
+        inst.requests[slot].tokens += 1;
+        inst.active_tokens += 1;
+    }
+
+    /// Refresh `id`'s predicted remaining length (reprediction).
+    pub fn set_prediction(&mut self, id: RequestId, predicted_remaining: Option<f64>) {
+        let &(di, slot) = self.index.get(&id).expect("prediction for untracked request");
+        let inst = &mut self.instances[di];
+        let old = inst.requests[slot].predicted_remaining.unwrap_or(0.0);
+        inst.requests[slot].predicted_remaining = predicted_remaining;
+        inst.predicted_sum += predicted_remaining.unwrap_or(0.0) - old;
+    }
+
+    /// Mark/unmark a tracked request as mid-migration (it stays in the
+    /// batch view — live-serving semantics, where the slot holds the
+    /// request until the KV is extracted). Untracked ids are ignored.
+    pub fn set_migrating(&mut self, id: RequestId, migrating: bool) {
+        if let Some(&(di, slot)) = self.index.get(&id) {
+            self.instances[di].requests[slot].migrating = migrating;
+        }
+    }
+
+    /// Remove a request from its batch (completion, eviction, or
+    /// simulator-style migration start). O(1) swap-remove.
+    pub fn release(&mut self, id: RequestId) -> Option<RequestView> {
+        let (di, slot) = self.index.remove(&id)?;
+        let inst = &mut self.instances[di];
+        let view = inst.requests.swap_remove(slot);
+        if let Some(moved) = inst.requests.get(slot) {
+            self.index.insert(moved.id, (di, slot));
+        }
+        inst.active_tokens -= view.tokens;
+        inst.predicted_sum -= view.predicted_remaining.unwrap_or(0.0);
+        Some(view)
+    }
+
+    /// Reserve headroom at `di` for a migration in flight toward it.
+    pub fn reserve_inbound(&mut self, di: usize, tokens: u64) {
+        self.instances[di].inbound_reserved_tokens += tokens;
+    }
+
+    /// Release a reservation made by [`Self::reserve_inbound`].
+    pub fn release_inbound(&mut self, di: usize, tokens: u64) {
+        let inst = &mut self.instances[di];
+        debug_assert!(
+            inst.inbound_reserved_tokens >= tokens,
+            "releasing more inbound reservation than held on instance {}",
+            inst.id
+        );
+        inst.inbound_reserved_tokens = inst.inbound_reserved_tokens.saturating_sub(tokens);
+    }
+
+    /// Simulator-style migration start: the request leaves the source
+    /// batch immediately and its current KV footprint is reserved on the
+    /// destination. Returns the reserved token count.
+    pub fn begin_migration(&mut self, id: RequestId, dst: usize) -> Option<u64> {
+        let view = self.release(id)?;
+        self.reserve_inbound(dst, view.tokens);
+        Some(view.tokens)
+    }
+
+    /// Migration KV transfer finished: drop the destination reservation
+    /// (the request re-enters through admission).
+    pub fn finish_migration(&mut self, dst: usize, tokens: u64) {
+        self.release_inbound(dst, tokens);
+    }
+
+    /// Record one scheduled decode iteration of length `iter_s` (EWMA
+    /// 0.9/0.1, seeded by the first sample).
+    pub fn record_iteration(&mut self, di: usize, iter_s: f64) {
+        let ms = iter_s * 1e3;
+        let new = if self.instances[di].iters == 0 {
+            ms
+        } else {
+            0.9 * self.instances[di].ewma_iter_ms + 0.1 * ms
+        };
+        self.set_iter_ewma(di, new);
+    }
+
+    /// An iteration completed (advances the EWMA seeding state).
+    pub fn complete_iteration(&mut self, di: usize) {
+        self.instances[di].iters += 1;
+    }
+
+    /// Overwrite an instance's EWMA iteration time (live driver: the
+    /// instance thread measures and reports it).
+    pub fn set_iter_ewma(&mut self, di: usize, ewma_ms: f64) {
+        let old = self.instances[di].ewma_iter_ms;
+        if old > 0.0 {
+            self.busy_ewma_sum_ms -= old;
+        } else if ewma_ms > 0.0 {
+            self.busy_count += 1;
+        }
+        if ewma_ms > 0.0 {
+            self.busy_ewma_sum_ms += ewma_ms;
+        } else if old > 0.0 {
+            self.busy_count -= 1;
+        }
+        self.instances[di].ewma_iter_ms = ewma_ms;
+    }
+
+    pub fn set_capacity(&mut self, di: usize, kv_capacity_tokens: u64) {
+        self.instances[di].kv_capacity_tokens = kv_capacity_tokens;
+    }
+
+    /// Replace one instance's membership wholesale from an authoritative
+    /// report (live driver reconciliation). O(reported slots).
+    pub fn sync_instance(&mut self, di: usize, requests: Vec<RequestView>) {
+        // drop index entries that still point at this instance
+        for r in &self.instances[di].requests {
+            if self.index.get(&r.id).map(|&(i, _)| i) == Some(di) {
+                self.index.remove(&r.id);
+            }
+        }
+        let inst = &mut self.instances[di];
+        inst.active_tokens = requests.iter().map(|r| r.tokens).sum();
+        inst.predicted_sum = requests
+            .iter()
+            .map(|r| r.predicted_remaining.unwrap_or(0.0))
+            .sum();
+        inst.requests = requests;
+        for (slot, r) in self.instances[di].requests.iter().enumerate() {
+            self.index.insert(r.id, (di, slot));
+        }
+    }
+
+    // -- derived aggregates ---------------------------------------------
+
+    /// Mean EWMA iteration time over instances that have measured one;
+    /// the construction-time seed until then. O(1).
+    pub fn avg_iter_s(&self) -> f64 {
+        if self.busy_count == 0 {
+            self.seed_avg_iter_s
+        } else {
+            (self.busy_ewma_sum_ms / self.busy_count as f64) / 1e3
+        }
+    }
+
+    /// Expected tokens generated per request per scheduling interval —
+    /// the time base the future-load projections run on.
+    pub fn tokens_per_interval(&self) -> f64 {
+        self.interval_s / self.avg_iter_s().max(self.iter_floor_s)
+    }
+
+    /// Borrowed, allocation-free view for policy decisions.
+    #[inline]
+    pub fn view(&self) -> ClusterView<'_> {
+        ClusterView {
+            src: ViewSrc::State(self),
+        }
+    }
+
+    /// Compatibility materialization: the full [`ClusterSnapshot`] this
+    /// state denotes. O(instances × requests) — for tests, third-party
+    /// consumers, and the `bench_sim_core` baseline; the hot paths use
+    /// [`Self::view`].
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        ClusterSnapshot {
+            instances: self
+                .instances
+                .iter()
+                .map(|s| InstanceView {
+                    id: s.id,
+                    requests: s.requests.clone(),
+                    kv_capacity_tokens: s.kv_capacity_tokens,
+                    inbound_reserved_tokens: s.inbound_reserved_tokens,
+                })
+                .collect(),
+            tokens_per_interval: self.tokens_per_interval(),
+        }
+    }
+
+    /// Differential check: first discrepancy between this incremental
+    /// state and a from-scratch `reference` snapshot, or `None` when they
+    /// agree. Membership is compared as id-sets (orders legitimately
+    /// differ); float aggregates use a relative epsilon (delta updates
+    /// accumulate rounding the from-scratch sum does not).
+    pub fn consistency_diff(&self, reference: &ClusterSnapshot) -> Option<String> {
+        if reference.instances.len() != self.instances.len() {
+            return Some(format!(
+                "instance count: state {} vs reference {}",
+                self.instances.len(),
+                reference.instances.len()
+            ));
+        }
+        for (s, r) in self.instances.iter().zip(&reference.instances) {
+            if s.id != r.id {
+                return Some(format!("instance id {} vs {}", s.id, r.id));
+            }
+            if s.kv_capacity_tokens != r.kv_capacity_tokens {
+                return Some(format!(
+                    "instance {}: capacity {} vs {}",
+                    s.id, s.kv_capacity_tokens, r.kv_capacity_tokens
+                ));
+            }
+            if s.inbound_reserved_tokens != r.inbound_reserved_tokens {
+                return Some(format!(
+                    "instance {}: inbound reserved {} vs {}",
+                    s.id, s.inbound_reserved_tokens, r.inbound_reserved_tokens
+                ));
+            }
+            if s.requests.len() != r.requests.len() {
+                return Some(format!(
+                    "instance {}: batch size {} vs {}",
+                    s.id,
+                    s.requests.len(),
+                    r.requests.len()
+                ));
+            }
+            let mut mine: Vec<&RequestView> = s.requests.iter().collect();
+            let mut theirs: Vec<&RequestView> = r.requests.iter().collect();
+            mine.sort_by_key(|v| v.id);
+            theirs.sort_by_key(|v| v.id);
+            for (a, b) in mine.iter().zip(&theirs) {
+                if a.id != b.id || a.tokens != b.tokens || a.migrating != b.migrating {
+                    return Some(format!("instance {}: request {:?} vs {:?}", s.id, a, b));
+                }
+                let (pa, pb) = (
+                    a.predicted_remaining.unwrap_or(f64::NAN),
+                    b.predicted_remaining.unwrap_or(f64::NAN),
+                );
+                if pa.is_nan() != pb.is_nan() || (!pa.is_nan() && (pa - pb).abs() > 1e-9) {
+                    return Some(format!(
+                        "instance {}: request {} prediction {pa} vs {pb}",
+                        s.id, a.id
+                    ));
+                }
+            }
+            // aggregates vs from-scratch sums over the reference
+            let load: u64 = r.requests.iter().map(|v| v.tokens).sum();
+            if s.active_tokens != load {
+                return Some(format!(
+                    "instance {}: active_tokens {} vs recomputed {}",
+                    s.id, s.active_tokens, load
+                ));
+            }
+            let pred: f64 = r
+                .requests
+                .iter()
+                .map(|v| v.predicted_remaining.unwrap_or(0.0))
+                .sum();
+            if (s.predicted_sum - pred).abs() > 1e-6 * pred.abs().max(1.0) {
+                return Some(format!(
+                    "instance {}: predicted_sum {} vs recomputed {}",
+                    s.id, s.predicted_sum, pred
+                ));
+            }
+        }
+        // EWMA aggregate vs recomputation
+        let busy: Vec<f64> = self
+            .instances
+            .iter()
+            .filter(|s| s.ewma_iter_ms > 0.0)
+            .map(|s| s.ewma_iter_ms)
+            .collect();
+        let want = if busy.is_empty() {
+            self.seed_avg_iter_s
+        } else {
+            busy.iter().sum::<f64>() / busy.len() as f64 / 1e3
+        };
+        let got = self.avg_iter_s();
+        if (got - want).abs() > 1e-6 * want.abs().max(1e-12) {
+            return Some(format!("avg_iter_s {got} vs recomputed {want}"));
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// borrowed views
+
+/// What a policy sees: either the incremental state (hot path) or a
+/// materialized snapshot (compatibility path). Cheap to copy.
+#[derive(Clone, Copy)]
+pub struct ClusterView<'a> {
+    src: ViewSrc<'a>,
+}
+
+#[derive(Clone, Copy)]
+enum ViewSrc<'a> {
+    State(&'a ClusterState),
+    Snap(&'a ClusterSnapshot),
+}
+
+impl ClusterSnapshot {
+    /// View a hand-assembled snapshot — the compatibility entry point for
+    /// tests and third-party policy harnesses.
+    #[inline]
+    pub fn view(&self) -> ClusterView<'_> {
+        ClusterView {
+            src: ViewSrc::Snap(self),
+        }
+    }
+}
+
+impl InstanceView {
+    /// View one hand-assembled instance (compatibility path).
+    #[inline]
+    pub fn view(&self) -> InstanceRef<'_> {
+        InstanceRef(RefSrc::Snap(self))
+    }
+}
+
+impl<'a> ClusterView<'a> {
+    pub fn n_instances(&self) -> usize {
+        match self.src {
+            ViewSrc::State(s) => s.instances.len(),
+            ViewSrc::Snap(s) => s.instances.len(),
+        }
+    }
+
+    pub fn tokens_per_interval(&self) -> f64 {
+        match self.src {
+            ViewSrc::State(s) => s.tokens_per_interval(),
+            ViewSrc::Snap(s) => s.tokens_per_interval,
+        }
+    }
+
+    pub fn instance(&self, idx: usize) -> InstanceRef<'a> {
+        match self.src {
+            ViewSrc::State(s) => InstanceRef(RefSrc::State(&s.instances[idx])),
+            ViewSrc::Snap(s) => InstanceRef(RefSrc::Snap(&s.instances[idx])),
+        }
+    }
+
+    pub fn instances(&self) -> impl Iterator<Item = InstanceRef<'a>> + '_ {
+        (0..self.n_instances()).map(|i| self.instance(i))
+    }
+
+    /// Materialize the full snapshot (compatibility; allocates).
+    pub fn materialize(&self) -> ClusterSnapshot {
+        match self.src {
+            ViewSrc::State(s) => s.snapshot(),
+            ViewSrc::Snap(s) => s.clone(),
+        }
+    }
+}
+
+/// One instance as a policy sees it. Aggregate accessors are O(1) when
+/// backed by [`ClusterState`] and recomputed when backed by a snapshot.
+#[derive(Clone, Copy)]
+pub struct InstanceRef<'a>(RefSrc<'a>);
+
+#[derive(Clone, Copy)]
+enum RefSrc<'a> {
+    State(&'a InstanceStats),
+    Snap(&'a InstanceView),
+}
+
+impl<'a> InstanceRef<'a> {
+    pub fn id(&self) -> InstanceId {
+        match self.0 {
+            RefSrc::State(s) => s.id,
+            RefSrc::Snap(s) => s.id,
+        }
+    }
+
+    pub fn requests(&self) -> &'a [RequestView] {
+        match self.0 {
+            RefSrc::State(s) => &s.requests,
+            RefSrc::Snap(s) => &s.requests,
+        }
+    }
+
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        match self.0 {
+            RefSrc::State(s) => s.kv_capacity_tokens,
+            RefSrc::Snap(s) => s.kv_capacity_tokens,
+        }
+    }
+
+    pub fn inbound_reserved_tokens(&self) -> u64 {
+        match self.0 {
+            RefSrc::State(s) => s.inbound_reserved_tokens,
+            RefSrc::Snap(s) => s.inbound_reserved_tokens,
+        }
+    }
+
+    pub fn token_load(&self) -> u64 {
+        match self.0 {
+            RefSrc::State(s) => s.token_load(),
+            RefSrc::Snap(s) => s.token_load(),
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        match self.0 {
+            RefSrc::State(s) => s.batch_size(),
+            RefSrc::Snap(s) => s.requests.len(),
+        }
+    }
+
+    pub fn effective_used(&self) -> u64 {
+        match self.0 {
+            RefSrc::State(s) => s.effective_used(),
+            RefSrc::Snap(s) => s.effective_used(),
+        }
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        match self.0 {
+            RefSrc::State(s) => s.free_tokens(),
+            RefSrc::Snap(s) => s.free_tokens(),
+        }
+    }
+
+    /// Σ (tokens + predicted remaining) — the `predicted_load` score.
+    pub fn predicted_work(&self) -> f64 {
+        match self.0 {
+            RefSrc::State(s) => s.predicted_work(),
+            RefSrc::Snap(s) => s
+                .requests
+                .iter()
+                .map(|r| r.tokens as f64 + r.remaining_or(0.0))
+                .sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ClusterState {
+        ClusterState::new(3, 10_000, 1.0, 0.02, 1e-6)
+    }
+
+    #[test]
+    fn admit_append_release_roundtrip() {
+        let mut st = state();
+        st.admit(0, 1, 100, Some(50.0));
+        st.admit(0, 2, 200, None);
+        assert_eq!(st.stats(0).token_load(), 300);
+        assert_eq!(st.stats(0).batch_size(), 2);
+        assert!((st.stats(0).predicted_work() - 350.0).abs() < 1e-9);
+        st.append_token(1);
+        assert_eq!(st.stats(0).token_load(), 301);
+        let v = st.release(1).unwrap();
+        assert_eq!(v.tokens, 101);
+        assert_eq!(st.stats(0).token_load(), 200);
+        assert_eq!(st.stats(0).batch_size(), 1);
+        assert!(!st.contains(1));
+        assert!(st.contains(2));
+    }
+
+    #[test]
+    fn swap_remove_keeps_index_coherent() {
+        let mut st = state();
+        for id in 0..5u64 {
+            st.admit(1, id, 10 + id, None);
+        }
+        st.release(0); // request 4 swaps into slot 0
+        st.append_token(4);
+        let r4 = st.active(1).iter().find(|r| r.id == 4).unwrap();
+        assert_eq!(r4.tokens, 15);
+        assert_eq!(st.stats(1).token_load(), 11 + 12 + 13 + 15);
+    }
+
+    #[test]
+    fn migration_moves_reservation_not_load() {
+        let mut st = state();
+        st.admit(0, 7, 500, Some(100.0));
+        let moved = st.begin_migration(7, 2).unwrap();
+        assert_eq!(moved, 500);
+        assert_eq!(st.stats(0).token_load(), 0);
+        assert_eq!(st.stats(2).token_load(), 0);
+        assert_eq!(st.stats(2).inbound_reserved_tokens(), 500);
+        assert_eq!(st.stats(2).free_tokens(), 9_500);
+        st.finish_migration(2, moved);
+        assert_eq!(st.stats(2).inbound_reserved_tokens(), 0);
+        // re-admission on the destination completes the move
+        st.admit(2, 7, 500, Some(100.0));
+        assert_eq!(st.stats(2).token_load(), 500);
+    }
+
+    #[test]
+    fn prediction_refresh_is_a_delta() {
+        let mut st = state();
+        st.admit(0, 1, 100, Some(40.0));
+        st.set_prediction(1, Some(90.0));
+        assert!((st.stats(0).predicted_work() - 190.0).abs() < 1e-9);
+        st.set_prediction(1, None);
+        assert!((st.stats(0).predicted_work() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_iter_tracks_busy_instances_only() {
+        let mut st = state();
+        assert!((st.avg_iter_s() - 0.02).abs() < 1e-12, "seed before data");
+        st.record_iteration(0, 0.010);
+        assert!((st.avg_iter_s() - 0.010).abs() < 1e-12);
+        st.record_iteration(1, 0.030);
+        assert!((st.avg_iter_s() - 0.020).abs() < 1e-12);
+        st.complete_iteration(0);
+        st.record_iteration(0, 0.020); // EWMA: 0.9*10 + 0.1*20 = 11 ms
+        assert!((st.stats(0).ewma_iter_ms() - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn view_and_snapshot_agree() {
+        let mut st = state();
+        st.admit(0, 1, 100, Some(50.0));
+        st.admit(1, 2, 300, None);
+        st.reserve_inbound(2, 64);
+        let snap = st.snapshot();
+        assert!(st.consistency_diff(&snap).is_none());
+        let v = st.view();
+        let sv = snap.view();
+        for i in 0..3 {
+            assert_eq!(v.instance(i).token_load(), sv.instance(i).token_load());
+            assert_eq!(v.instance(i).free_tokens(), sv.instance(i).free_tokens());
+            assert_eq!(
+                v.instance(i).inbound_reserved_tokens(),
+                sv.instance(i).inbound_reserved_tokens()
+            );
+            assert!(
+                (v.instance(i).predicted_work() - sv.instance(i).predicted_work()).abs() < 1e-9
+            );
+        }
+        assert_eq!(v.n_instances(), sv.n_instances());
+        assert!((v.tokens_per_interval() - sv.tokens_per_interval()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consistency_diff_catches_drift() {
+        let mut st = state();
+        st.admit(0, 1, 100, None);
+        let mut snap = st.snapshot();
+        snap.instances[0].requests[0].tokens = 101;
+        assert!(st.consistency_diff(&snap).is_some());
+    }
+
+    #[test]
+    fn sync_instance_reconciles_membership() {
+        let mut st = state();
+        st.admit(0, 1, 100, None);
+        st.admit(0, 2, 200, Some(10.0));
+        st.sync_instance(
+            0,
+            vec![
+                RequestView {
+                    id: 2,
+                    tokens: 250,
+                    predicted_remaining: Some(5.0),
+                    migrating: true,
+                },
+                RequestView {
+                    id: 3,
+                    tokens: 40,
+                    predicted_remaining: None,
+                    migrating: false,
+                },
+            ],
+        );
+        assert!(!st.contains(1));
+        assert_eq!(st.stats(0).token_load(), 290);
+        assert!((st.stats(0).predicted_work() - 295.0).abs() < 1e-9);
+        let snap = st.snapshot();
+        assert!(st.consistency_diff(&snap).is_none());
+        // a request that moved instances: the new owner's sync wins, the
+        // old owner's later sync must not evict the fresh index entry
+        st.admit(1, 9, 10, None);
+        let moved = RequestView {
+            id: 9,
+            tokens: 12,
+            predicted_remaining: None,
+            migrating: false,
+        };
+        st.sync_instance(2, vec![moved]);
+        st.sync_instance(1, vec![]);
+        assert!(st.contains(9));
+        st.append_token(9);
+        assert_eq!(st.stats(2).token_load(), 13);
+    }
+}

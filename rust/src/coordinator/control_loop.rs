@@ -10,9 +10,9 @@
 //! type, a policy evaluated in simulation (paper Fig. 13) is the policy
 //! the live system runs.
 
+use super::cluster_state::ClusterView;
 use super::policy::{DispatchPolicy, IncomingRequest, PolicyConfig, PolicyRegistry, ReschedulePolicy};
 use super::rescheduler::{MigrationDecision, ReschedulerStats};
-use super::ClusterSnapshot;
 use crate::config::ExperimentConfig;
 use crate::costmodel::MigrationCostModel;
 use crate::{InstanceId, Result};
@@ -58,23 +58,27 @@ impl ControlLoop {
     }
 
     /// Place a request arriving from prefill (or re-dispatched after OOM
-    /// recompute) onto a decode instance.
+    /// recompute) onto a decode instance. The view is normally borrowed
+    /// from the driver's incremental [`ClusterState`] — no materialization
+    /// on the per-request hot path.
+    ///
+    /// [`ClusterState`]: crate::coordinator::ClusterState
     pub fn dispatch(
         &mut self,
-        snapshot: &ClusterSnapshot,
+        view: &ClusterView<'_>,
         incoming: &IncomingRequest,
     ) -> InstanceId {
-        self.dispatch.choose(snapshot, incoming)
+        self.dispatch.choose(view, incoming)
     }
 
     /// Run one scheduling interval; empty when rescheduling is disabled.
     /// The caller executes the returned migrations (and is responsible for
     /// capacity reservations on the targets).
-    pub fn reschedule(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+    pub fn reschedule(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
         if !self.rescheduling_enabled {
             return Vec::new();
         }
-        self.reschedule.decide(snapshot)
+        self.reschedule.decide(view)
     }
 
     /// Feed the measured average decode iteration time to the reschedule
@@ -111,6 +115,7 @@ impl ControlLoop {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
 
     fn exp() -> ExperimentConfig {
         ExperimentConfig::default()
@@ -138,8 +143,9 @@ mod tests {
         assert_eq!(c.dispatch_name(), "current_load");
         assert_eq!(c.reschedule_name(), "star");
         assert!(c.rescheduling_enabled());
+        let skew = skewed();
         let id = c.dispatch(
-            &skewed(),
+            &skew.view(),
             &IncomingRequest {
                 id: 9,
                 tokens: 10,
@@ -156,7 +162,7 @@ mod tests {
         e.rescheduler.enabled = false;
         let mut c =
             ControlLoop::from_experiment(&e, MigrationCostModel::new_25gbps(1), &reg).unwrap();
-        assert!(c.reschedule(&skewed()).is_empty());
+        assert!(c.reschedule(&skewed().view()).is_empty());
         assert_eq!(c.stats().intervals, 0, "policy must not even be invoked");
     }
 
@@ -188,7 +194,7 @@ mod tests {
         c.observe_avg_iter_s(0.05);
         c.observe_default_remaining(250.0);
         // still functions end-to-end after observations
-        let ds = c.reschedule(&skewed());
+        let ds = c.reschedule(&skewed().view());
         assert!(ds.len() <= 1);
         assert_eq!(c.stats().intervals, 1);
     }

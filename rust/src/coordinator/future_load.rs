@@ -10,7 +10,8 @@
 //! avg_iter_time` tokens; a request with predicted remaining N̂(r) ≤ g·t
 //! has completed by step t and frees its KV, contributing 0.
 
-use super::{InstanceView, RequestView};
+use super::cluster_state::InstanceRef;
+use super::RequestView;
 
 /// Per-request projected contribution to instance load at steps 0..=H.
 /// `trace[t]` = tokens this request holds at future step t.
@@ -69,14 +70,14 @@ impl WorkerReport {
     /// Compute a report from an instance view — the "worker-side
     /// pre-simulation" step. `betas[t-1]` weights future step t.
     pub fn compute(
-        view: &InstanceView,
+        view: &InstanceRef<'_>,
         g: f64,
         betas: &[f64],
         default_remaining: Option<f64>,
     ) -> WorkerReport {
         let horizon = betas.len();
         let mut load = vec![0.0; horizon + 1];
-        for r in &view.requests {
+        for r in view.requests() {
             let fl = FutureLoad::of_request(r, g, horizon, default_remaining);
             for (t, v) in fl.trace.iter().enumerate() {
                 load[t] += v;
@@ -88,12 +89,12 @@ impl WorkerReport {
             .map(|(i, b)| b * load[i + 1])
             .sum();
         WorkerReport {
-            instance: view.id,
+            instance: view.id(),
             load,
             weighted,
             current_tokens: view.token_load(),
-            kv_capacity_tokens: view.kv_capacity_tokens,
-            inbound_reserved_tokens: view.inbound_reserved_tokens,
+            kv_capacity_tokens: view.kv_capacity_tokens(),
+            inbound_reserved_tokens: view.inbound_reserved_tokens(),
         }
     }
 
@@ -141,7 +142,7 @@ mod tests {
     fn report_aggregates_requests() {
         let v = inst(0, vec![req(1, 100, Some(1000.0)), req(2, 50, Some(5.0))], 10_000);
         let betas = beta_schedule(2, 0.5);
-        let rep = WorkerReport::compute(&v, 10.0, &betas, None);
+        let rep = WorkerReport::compute(&v.view(), 10.0, &betas, None);
         // t=0: 150; t=1: 110+0(done: 10>=5)=110; t=2: 120
         assert_eq!(rep.load, vec![150.0, 110.0, 120.0]);
         let expect_w = 0.5 * 110.0 + 0.25 * 120.0;
@@ -153,7 +154,7 @@ mod tests {
     fn min_free_accounts_for_peak_and_reservations() {
         let mut v = inst(0, vec![req(1, 100, Some(1000.0))], 200);
         v.inbound_reserved_tokens = 50;
-        let rep = WorkerReport::compute(&v, 30.0, &beta_schedule(2, 1.0), None);
+        let rep = WorkerReport::compute(&v.view(), 30.0, &beta_schedule(2, 1.0), None);
         // peak load = 160 at t=2, +50 reserved => free = 200-210 = -10
         assert!((rep.min_free_over_horizon() - (-10.0)).abs() < 1e-9);
     }

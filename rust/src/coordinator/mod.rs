@@ -2,21 +2,29 @@
 //! decode-phase rescheduler (paper §5, Algorithm 1), behind a pluggable
 //! policy API.
 //!
-//! Policy code is pure — it consumes [`ClusterSnapshot`] views and returns
+//! Policy code is pure — it consumes borrowed [`ClusterView`]s and returns
 //! decisions — and both drivers (the live serving runtime `crate::serve`
 //! and the event-driven simulator `crate::sim`) execute it through the
 //! same [`ControlLoop`], which is what makes the large-scale simulation
-//! results (Fig. 13) meaningful for the real system.
+//! results (Fig. 13) meaningful for the real system. Views are normally
+//! backed by the incremental [`ClusterState`] (O(1) aggregates maintained
+//! at each mutation point); a hand-assembled [`ClusterSnapshot`] remains
+//! the compatibility materialization (`snapshot.view()`) for tests and
+//! third-party policy harnesses.
 //!
 //! Strategies are constructed by name via [`PolicyRegistry`]; see
 //! [`policy`] for the trait surface and `DESIGN.md` §5 for the
 //! how-to-add-a-policy recipe.
 
+pub mod cluster_state;
 pub mod control_loop;
 pub mod future_load;
 pub mod policy;
 pub mod rescheduler;
 
+pub use cluster_state::{
+    admission_watermark, ClusterState, ClusterView, InstanceRef, InstanceStats,
+};
 pub use control_loop::ControlLoop;
 pub use future_load::{FutureLoad, WorkerReport};
 pub use policy::{
@@ -72,7 +80,10 @@ impl InstanceView {
     }
 }
 
-/// A point-in-time view of every decode instance.
+/// A fully materialized point-in-time view of every decode instance.
+/// Policies consume [`ClusterView`]s; this owned form is kept as the
+/// compatibility path — assemble one by hand (tests, third-party
+/// harnesses) and pass `snapshot.view()` to any policy.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterSnapshot {
     pub instances: Vec<InstanceView>,

@@ -3,34 +3,31 @@
 //! plus the no-op rescheduler used as the "vLLM" baseline.
 
 use super::{DispatchPolicy, IncomingRequest, ReschedulePolicy};
+use crate::coordinator::cluster_state::{ClusterView, InstanceRef};
 use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
-use crate::coordinator::{ClusterSnapshot, InstanceView};
 use crate::InstanceId;
 
 /// Shared fit-or-fallback argmin: prefer the best-scoring instance that can
 /// hold `incoming_tokens`; if nothing fits, return the best-scoring
 /// instance anyway (admission will queue or OOM there, mirroring vLLM).
 pub(super) fn argmin_with_fallback<G>(
-    snapshot: &ClusterSnapshot,
+    view: &ClusterView<'_>,
     incoming_tokens: u64,
     score: G,
 ) -> InstanceId
 where
-    G: Fn(&InstanceView) -> f64,
+    G: Fn(&InstanceRef<'_>) -> f64,
 {
-    assert!(
-        !snapshot.instances.is_empty(),
-        "dispatch with no decode instances"
-    );
+    assert!(view.n_instances() > 0, "dispatch with no decode instances");
     let mut best: Option<(f64, InstanceId)> = None;
     let mut best_any: Option<(f64, InstanceId)> = None;
-    for iv in &snapshot.instances {
-        let s = score(iv);
+    for iv in view.instances() {
+        let s = score(&iv);
         if best_any.map(|(b, _)| s < b).unwrap_or(true) {
-            best_any = Some((s, iv.id));
+            best_any = Some((s, iv.id()));
         }
         if iv.free_tokens() >= incoming_tokens && best.map(|(b, _)| s < b).unwrap_or(true) {
-            best = Some((s, iv.id));
+            best = Some((s, iv.id()));
         }
     }
     best.or(best_any).expect("non-empty instance list").1
@@ -55,19 +52,19 @@ impl DispatchPolicy for RoundRobinDispatch {
         "round_robin"
     }
 
-    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
-        let n = snapshot.instances.len();
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
+        let n = view.n_instances();
         assert!(n > 0, "dispatch with no decode instances");
         for off in 0..n {
             let idx = (self.cursor + off) % n;
-            if snapshot.instances[idx].free_tokens() >= incoming.tokens {
+            if view.instance(idx).free_tokens() >= incoming.tokens {
                 self.cursor = (idx + 1) % n;
-                return snapshot.instances[idx].id;
+                return view.instance(idx).id();
             }
         }
         let idx = self.cursor % n;
         self.cursor = (idx + 1) % n;
-        snapshot.instances[idx].id
+        view.instance(idx).id()
     }
 }
 
@@ -81,8 +78,8 @@ impl DispatchPolicy for CurrentLoadDispatch {
         "current_load"
     }
 
-    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
-        argmin_with_fallback(snapshot, incoming.tokens, |iv| iv.effective_used() as f64)
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
+        argmin_with_fallback(view, incoming.tokens, |iv| iv.effective_used() as f64)
     }
 }
 
@@ -97,15 +94,12 @@ impl DispatchPolicy for PredictedLoadDispatch {
         "predicted_load"
     }
 
-    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
         let pred = incoming.predicted_remaining.unwrap_or(0.0);
-        argmin_with_fallback(snapshot, incoming.tokens, |iv| {
-            let future: f64 = iv
-                .requests
-                .iter()
-                .map(|r| r.tokens as f64 + r.remaining_or(0.0))
-                .sum();
-            future + iv.inbound_reserved_tokens as f64 + pred
+        // predicted_work is an O(1) aggregate on state-backed views — the
+        // hand-off decision no longer walks the instance's batch
+        argmin_with_fallback(view, incoming.tokens, |iv| {
+            iv.predicted_work() + iv.inbound_reserved_tokens() as f64 + pred
         })
     }
 }
@@ -128,7 +122,7 @@ impl ReschedulePolicy for NoopReschedule {
         "none"
     }
 
-    fn decide(&mut self, _snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+    fn decide(&mut self, _view: &ClusterView<'_>) -> Vec<MigrationDecision> {
         self.stats.intervals += 1;
         Vec::new()
     }
@@ -142,6 +136,7 @@ impl ReschedulePolicy for NoopReschedule {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
 
     fn incoming(tokens: u64, pred: Option<f64>) -> IncomingRequest {
         IncomingRequest {
@@ -166,7 +161,7 @@ mod tests {
     fn round_robin_cycles() {
         let snap = snap3([0, 0, 0]);
         let mut d = RoundRobinDispatch::new();
-        let picks: Vec<_> = (0..6).map(|_| d.choose(&snap, &incoming(10, None))).collect();
+        let picks: Vec<_> = (0..6).map(|_| d.choose(&snap.view(), &incoming(10, None))).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -178,11 +173,11 @@ mod tests {
         let mut d = RoundRobinDispatch::new();
         let mut counts = [0usize; 3];
         for _ in 0..3 * 100 {
-            counts[d.choose(&snap, &incoming(10, None))] += 1;
+            counts[d.choose(&snap.view(), &incoming(10, None))] += 1;
         }
         assert_eq!(counts, [100, 100, 100]);
         // after an exact number of cycles the cursor is back at 0
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 0);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 0);
     }
 
     #[test]
@@ -190,9 +185,9 @@ mod tests {
         let mut snap = snap3([0, 0, 0]);
         snap.instances[0].inbound_reserved_tokens = 10_000; // full
         let mut d = RoundRobinDispatch::new();
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 2);
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 1);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 2);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 1);
     }
 
     #[test]
@@ -201,17 +196,17 @@ mod tests {
         // and the cursor advances, keeping the overflow spread fair
         let snap = snap3([10_000, 10_000, 10_000]);
         let mut d = RoundRobinDispatch::new();
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 1);
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 2);
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 0);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 1);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 2);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 0);
     }
 
     #[test]
     fn current_load_picks_least_loaded() {
         let snap = snap3([500, 100, 300]);
         let mut d = CurrentLoadDispatch;
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 1);
     }
 
     #[test]
@@ -219,7 +214,7 @@ mod tests {
         // nothing fits 100 tokens; least-loaded wins anyway
         let snap = snap3([9_995, 9_999, 9_997]);
         let mut d = CurrentLoadDispatch;
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 0);
     }
 
     #[test]
@@ -233,7 +228,7 @@ mod tests {
         };
         let mut d = PredictedLoadDispatch;
         // neither fits; instance 1 has the smaller projected load
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 1);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 1);
     }
 
     #[test]
@@ -250,12 +245,12 @@ mod tests {
         let mut cur = CurrentLoadDispatch;
         let mut pred = PredictedLoadDispatch;
         assert_eq!(
-            cur.choose(&snap, &incoming(10, None)),
+            cur.choose(&snap.view(), &incoming(10, None)),
             0,
             "current-load is fooled"
         );
         assert_eq!(
-            pred.choose(&snap, &incoming(10, None)),
+            pred.choose(&snap.view(), &incoming(10, None)),
             1,
             "predicted-load is not"
         );
@@ -265,7 +260,7 @@ mod tests {
     fn noop_reschedule_never_migrates() {
         let snap = snap3([9_000, 0, 0]);
         let mut rs = NoopReschedule::new();
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
         assert_eq!(rs.stats().intervals, 1);
         assert_eq!(rs.stats().migrations, 0);
     }

@@ -14,10 +14,10 @@
 use std::time::Instant;
 
 use super::{PolicyConfig, ReschedulePolicy};
+use crate::config::ReschedulerConfig;
+use crate::coordinator::cluster_state::{admission_watermark, ClusterView, InstanceRef};
 use crate::coordinator::future_load::{beta_schedule, FutureLoad, WorkerReport};
 use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
-use crate::coordinator::ClusterSnapshot;
-use crate::config::ReschedulerConfig;
 use crate::costmodel::MigrationCostModel;
 
 /// KV-OOM-avoidance rescheduler. Knobs (via `PolicyConfig::params`):
@@ -66,8 +66,10 @@ impl MemoryPressureRescheduler {
     /// one over the line.
     fn decide_one(
         &mut self,
-        snapshot: &ClusterSnapshot,
+        insts: &[InstanceRef<'_>],
+        g: f64,
         reports: &[WorkerReport],
+        decided: &[crate::RequestId],
     ) -> Option<MigrationDecision> {
         let n = reports.len();
         if n < 2 {
@@ -78,7 +80,7 @@ impl MemoryPressureRescheduler {
         sources.sort_by(|&a, &b| frac(b).total_cmp(&frac(a)));
         sources
             .into_iter()
-            .find_map(|src| self.decide_for_source(snapshot, reports, src))
+            .find_map(|src| self.decide_for_source(insts, g, reports, src, decided))
     }
 
     /// Best migration off one over-trigger source, or None if nothing
@@ -91,12 +93,13 @@ impl MemoryPressureRescheduler {
     /// suffices, take the largest relief.
     fn decide_for_source(
         &mut self,
-        snapshot: &ClusterSnapshot,
+        insts: &[InstanceRef<'_>],
+        g: f64,
         reports: &[WorkerReport],
         src: usize,
+        decided: &[crate::RequestId],
     ) -> Option<MigrationDecision> {
         let n = reports.len();
-        let g = snapshot.tokens_per_interval;
         let horizon = self.cfg.horizon;
         let default_rem = if self.use_prediction {
             None
@@ -110,8 +113,10 @@ impl MemoryPressureRescheduler {
         let mut best_sufficient: Option<(u64, MigrationDecision)> = None;
         // (relief, decision) of the best insufficient fallback
         let mut best_any: Option<(f64, MigrationDecision)> = None;
-        for r in &snapshot.instances[src].requests {
-            if r.migrating {
+        for r in insts[src].requests() {
+            // the views cannot change between same-interval rounds, so a
+            // request already chosen this interval must be skipped here
+            if r.migrating || decided.contains(&r.id) {
                 continue;
             }
             let rem = match (self.use_prediction, r.predicted_remaining) {
@@ -164,6 +169,11 @@ impl MemoryPressureRescheduler {
                     continue;
                 }
                 self.stats.candidates_evaluated += 1;
+                // the target must be able to re-admit the arriving KV
+                // (driver admission watermark), whatever trigger_frac is
+                if r.tokens > admission_watermark(reports[t].kv_capacity_tokens) {
+                    continue;
+                }
                 let cap = reports[t].kv_capacity_tokens as f64;
                 let after_peak = Self::peak(&reports[t]) + fl_peak;
                 let safe_cap = cap * (1.0 - self.cfg.mem_safety_frac);
@@ -178,8 +188,8 @@ impl MemoryPressureRescheduler {
             if let Some((_, dst)) = target {
                 let decision = MigrationDecision {
                     request: r.id,
-                    src: snapshot.instances[src].id,
-                    dst: snapshot.instances[dst].id,
+                    src: insts[src].id(),
+                    dst: insts[dst].id(),
                     kv_tokens: r.tokens,
                     // objective here is "projected peak tokens averted",
                     // not a variance delta; still monotone in usefulness
@@ -201,20 +211,20 @@ impl MemoryPressureRescheduler {
     /// the same interval sees the updated projections.
     fn apply_to_reports(
         &self,
-        snapshot: &ClusterSnapshot,
+        insts: &[InstanceRef<'_>],
+        g: f64,
         reports: &mut [WorkerReport],
         d: &MigrationDecision,
     ) {
         let find = |id| {
-            snapshot
-                .instances
+            insts
                 .iter()
-                .position(|iv| iv.id == id)
+                .position(|iv| iv.id() == id)
                 .expect("decision instance present")
         };
         let (s_idx, d_idx) = (find(d.src), find(d.dst));
-        let r = snapshot.instances[s_idx]
-            .requests
+        let r = insts[s_idx]
+            .requests()
             .iter()
             .find(|r| r.id == d.request)
             .expect("decision request present");
@@ -223,12 +233,7 @@ impl MemoryPressureRescheduler {
         } else {
             Some(self.default_remaining)
         };
-        let fl = FutureLoad::of_request(
-            r,
-            snapshot.tokens_per_interval,
-            self.cfg.horizon,
-            default_rem,
-        );
+        let fl = FutureLoad::of_request(r, g, self.cfg.horizon, default_rem);
         for t in 0..fl.trace.len() {
             reports[s_idx].load[t] -= fl.trace[t];
             reports[d_idx].load[t] += fl.trace[t];
@@ -243,27 +248,29 @@ impl ReschedulePolicy for MemoryPressureRescheduler {
         "memory_pressure"
     }
 
-    fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+    fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
         let t0 = Instant::now();
         self.stats.intervals += 1;
-        let g = snapshot.tokens_per_interval;
+        let insts: Vec<InstanceRef<'_>> = view.instances().collect();
+        let g = view.tokens_per_interval();
         let default_rem = if self.use_prediction {
             None
         } else {
             Some(self.default_remaining)
         };
-        let mut reports: Vec<WorkerReport> = snapshot
-            .instances
+        let mut reports: Vec<WorkerReport> = insts
             .iter()
             .map(|v| WorkerReport::compute(v, g, &self.betas, default_rem))
             .collect();
 
         let mut decisions = Vec::new();
+        let mut decided: Vec<crate::RequestId> = Vec::new();
         for _ in 0..self.cfg.max_migrations_per_interval {
-            match self.decide_one(snapshot, &reports) {
+            match self.decide_one(&insts, g, &reports, &decided) {
                 None => break,
                 Some(d) => {
-                    self.apply_to_reports(snapshot, &mut reports, &d);
+                    self.apply_to_reports(&insts, g, &mut reports, &d);
+                    decided.push(d.request);
                     decisions.push(d);
                     self.stats.migrations += 1;
                 }
@@ -293,6 +300,7 @@ impl ReschedulePolicy for MemoryPressureRescheduler {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
 
     fn policy() -> MemoryPressureRescheduler {
         let mut cfg = PolicyConfig::default();
@@ -317,7 +325,7 @@ mod tests {
             tokens_per_interval: 50.0,
         };
         let mut rs = policy();
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
         assert_eq!(rs.stats().intervals, 1);
     }
 
@@ -334,7 +342,7 @@ mod tests {
         };
         snap.instances[0].requests.push(req(3, 2_000, Some(20_000.0)));
         let mut rs = policy();
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].src, 0);
         assert_eq!(ds[0].dst, 1);
@@ -358,7 +366,7 @@ mod tests {
             tokens_per_interval: 1_000.0,
         };
         let mut rs = policy();
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].request, 2, "cheapest sufficient move wins");
         assert!(ds[0].var_reduction > 0.0);
@@ -366,7 +374,7 @@ mod tests {
         // pick the same request (order independence)
         let mut swapped = snap.clone();
         swapped.instances[0].requests.reverse();
-        let ds2 = policy().decide(&swapped);
+        let ds2 = policy().decide(&swapped.view());
         assert_eq!(ds2.len(), 1);
         assert_eq!(ds2[0].request, 2);
     }
@@ -392,7 +400,7 @@ mod tests {
             tokens_per_interval: 1_000.0,
         };
         let mut rs = policy();
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].request, 1, "largest relief, first on ties");
     }
@@ -412,7 +420,7 @@ mod tests {
         };
         snap.instances[0].requests[0].migrating = true;
         let mut rs = policy();
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].src, 1);
         assert_eq!(ds[0].dst, 2);
@@ -430,7 +438,7 @@ mod tests {
             tokens_per_interval: 1_000.0,
         };
         let mut rs = policy();
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
     }
 
     #[test]
@@ -450,7 +458,7 @@ mod tests {
             ],
             tokens_per_interval: 1_000.0,
         };
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
     }
 
     #[test]
@@ -479,7 +487,7 @@ mod tests {
             ],
             tokens_per_interval: 1_000.0,
         };
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert!(ds.len() <= 2);
         assert!(!ds.is_empty());
         assert_eq!(rs.stats().migrations as usize, ds.len());

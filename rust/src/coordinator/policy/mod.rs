@@ -32,8 +32,8 @@ pub use slo::SloAwareDispatch;
 
 use std::collections::BTreeMap;
 
+use super::cluster_state::ClusterView;
 use super::rescheduler::{MigrationDecision, ReschedulerStats};
-use super::ClusterSnapshot;
 use crate::config::{ExperimentConfig, ReschedulerConfig};
 use crate::costmodel::MigrationCostModel;
 use crate::{InstanceId, RequestId};
@@ -52,22 +52,29 @@ pub struct IncomingRequest {
 
 /// Prefill→decode placement strategy. Implementations may keep internal
 /// state (round-robin keeps a cursor) but must be pure with respect to the
-/// snapshot: the caller executes the returned placement.
+/// view: the caller executes the returned placement.
 ///
-/// Contract: always return an instance id present in the snapshot, even
+/// Contract: always return an instance id present in the view, even
 /// when nothing fits — admission control on the instance queues or OOMs,
 /// mirroring vLLM behaviour. Helpers in this module implement the standard
 /// "skip instances that cannot fit, fall back to least-loaded" shape.
+///
+/// The [`ClusterView`] is normally borrowed straight from the drivers'
+/// incremental [`ClusterState`]; policies written against a hand-built
+/// [`ClusterSnapshot`] pass `snapshot.view()` instead.
+///
+/// [`ClusterState`]: crate::coordinator::ClusterState
+/// [`ClusterSnapshot`]: crate::coordinator::ClusterSnapshot
 pub trait DispatchPolicy {
     /// Registry name this policy answers to (diagnostics + reports).
     fn name(&self) -> &str;
 
     /// Choose a decode instance for `incoming`.
-    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId;
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId;
 }
 
 /// Decode-phase rescheduling strategy, invoked once per scheduling
-/// interval. Pure with respect to the snapshot: the caller (live runtime
+/// interval. Pure with respect to the view: the caller (live runtime
 /// or simulator) executes the returned migrations.
 pub trait ReschedulePolicy {
     /// Registry name this policy answers to (diagnostics + reports).
@@ -75,7 +82,7 @@ pub trait ReschedulePolicy {
 
     /// Run one scheduling interval; returns migrations best-first, at most
     /// `max_migrations_per_interval` of them.
-    fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision>;
+    fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision>;
 
     /// Operational counters for reports and the §5.2 decision-time claim.
     fn stats(&self) -> ReschedulerStats;

@@ -156,7 +156,7 @@ impl PolicyRegistry {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
-    use crate::coordinator::{ClusterSnapshot, IncomingRequest};
+    use crate::coordinator::{ClusterSnapshot, ClusterView, IncomingRequest};
 
     fn snap() -> ClusterSnapshot {
         ClusterSnapshot {
@@ -175,7 +175,7 @@ mod tests {
         for name in ["round_robin", "rr", "Round-Robin", "current_load", "load",
                      "predicted_load", "predicted", "slo_aware", "slo"] {
             let mut p = reg.build_dispatch(name, &cfg).unwrap();
-            let id = p.choose(&snap(), &IncomingRequest {
+            let id = p.choose(&snap().view(), &IncomingRequest {
                 id: 0,
                 tokens: 10,
                 predicted_remaining: None,
@@ -184,7 +184,7 @@ mod tests {
         }
         for name in ["star", "memory_pressure", "mem_pressure", "none", "noop", "off"] {
             let mut p = reg.build_reschedule(name, &cfg).unwrap();
-            let _ = p.decide(&snap());
+            let _ = p.decide(&snap().view());
             assert_eq!(p.stats().intervals, 1, "{name} must count intervals");
         }
     }
@@ -208,7 +208,7 @@ mod tests {
             fn name(&self) -> &str {
                 "pin"
             }
-            fn choose(&mut self, _s: &ClusterSnapshot, _i: &IncomingRequest) -> usize {
+            fn choose(&mut self, _s: &ClusterView<'_>, _i: &IncomingRequest) -> usize {
                 self.0
             }
         }
@@ -216,7 +216,7 @@ mod tests {
         let mut p = reg
             .build_dispatch("pin", &PolicyConfig::default())
             .unwrap();
-        let id = p.choose(&snap(), &IncomingRequest {
+        let id = p.choose(&snap().view(), &IncomingRequest {
             id: 9,
             tokens: 1,
             predicted_remaining: None,
@@ -230,7 +230,7 @@ mod tests {
         reg.register_dispatch("load", |_| Ok(Box::new(Pin(0))));
         let mut p = reg.build_dispatch("load", &PolicyConfig::default()).unwrap();
         let id = p.choose(
-            &snap(),
+            &snap().view(),
             &IncomingRequest {
                 id: 1,
                 tokens: 1,
@@ -270,7 +270,7 @@ mod tests {
             ],
             tokens_per_interval: 50.0,
         };
-        let ds = star.decide(&s);
+        let ds = star.decide(&s.view());
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].src, 0);
         assert_eq!(star.stats().migrations, 1);

@@ -15,7 +15,7 @@
 
 use super::builtin::argmin_with_fallback;
 use super::{DispatchPolicy, IncomingRequest, PolicyConfig};
-use crate::coordinator::{ClusterSnapshot, InstanceView};
+use crate::coordinator::cluster_state::{ClusterView, InstanceRef};
 use crate::InstanceId;
 
 /// Deadline-headroom-weighted dispatch. Knobs (via `PolicyConfig::params`):
@@ -45,15 +45,15 @@ impl SloAwareDispatch {
     /// normalized by instance capacity so heterogeneous instances compare
     /// fairly (a half-full big instance beats a half-full small one on
     /// absolute headroom).
-    fn pressure(&self, iv: &InstanceView, incoming: &IncomingRequest) -> f64 {
-        let cap = iv.kv_capacity_tokens.max(1) as f64;
+    fn pressure(&self, iv: &InstanceRef<'_>, incoming: &IncomingRequest) -> f64 {
+        let cap = iv.kv_capacity_tokens().max(1) as f64;
         let mem = (iv.effective_used() + incoming.tokens) as f64 / cap;
         let committed: f64 = iv
-            .requests
+            .requests()
             .iter()
             .map(|r| r.tokens as f64 + r.remaining_or(0.0).min(self.horizon_tokens))
             .sum::<f64>()
-            + iv.inbound_reserved_tokens as f64
+            + iv.inbound_reserved_tokens() as f64
             + incoming.tokens as f64
             + incoming
                 .predicted_remaining
@@ -68,8 +68,8 @@ impl DispatchPolicy for SloAwareDispatch {
         "slo_aware"
     }
 
-    fn choose(&mut self, snapshot: &ClusterSnapshot, incoming: &IncomingRequest) -> InstanceId {
-        argmin_with_fallback(snapshot, incoming.tokens, |iv| self.pressure(iv, incoming))
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
+        argmin_with_fallback(view, incoming.tokens, |iv| self.pressure(iv, incoming))
     }
 }
 
@@ -77,6 +77,7 @@ impl DispatchPolicy for SloAwareDispatch {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
 
     fn policy() -> SloAwareDispatch {
         SloAwareDispatch::from_config(&PolicyConfig::default())
@@ -113,10 +114,10 @@ mod tests {
             tokens_per_interval: 10.0,
         };
         let mut d = policy();
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 0);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 0);
         // a pure predicted-load policy is repelled by the long tail
         let mut pl = super::super::PredictedLoadDispatch;
-        assert_eq!(pl.choose(&snap, &incoming(10, None)), 1);
+        assert_eq!(pl.choose(&snap.view(), &incoming(10, None)), 1);
     }
 
     #[test]
@@ -131,7 +132,7 @@ mod tests {
             tokens_per_interval: 10.0,
         };
         let mut d = policy();
-        assert_eq!(d.choose(&snap, &incoming(10, None)), 1);
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 1);
     }
 
     #[test]
@@ -144,7 +145,7 @@ mod tests {
             tokens_per_interval: 10.0,
         };
         let mut d = policy();
-        assert_eq!(d.choose(&snap, &incoming(100, None)), 0);
+        assert_eq!(d.choose(&snap.view(), &incoming(100, None)), 0);
     }
 
     #[test]

@@ -21,9 +21,9 @@
 
 use std::time::Instant;
 
+use super::cluster_state::{admission_watermark, ClusterView, InstanceRef};
 use super::future_load::{beta_schedule, FutureLoad, WorkerReport};
 use super::policy::ReschedulePolicy;
-use super::ClusterSnapshot;
 use crate::config::ReschedulerConfig;
 use crate::costmodel::MigrationCostModel;
 use crate::{InstanceId, RequestId};
@@ -90,32 +90,37 @@ impl Rescheduler {
         }
     }
 
-    /// Run one scheduling interval over a snapshot; returns up to
+    /// Run one scheduling interval over a cluster view; returns up to
     /// `max_migrations_per_interval` migrations, best-first.
-    pub fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+    pub fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
         let t0 = Instant::now();
         self.stats.intervals += 1;
         let mut decisions = Vec::new();
 
-        let g = snapshot.tokens_per_interval;
+        let insts: Vec<InstanceRef<'_>> = view.instances().collect();
+        let g = view.tokens_per_interval();
         let default_rem = if self.use_prediction {
             None
         } else {
             Some(self.default_remaining)
         };
-        let mut reports: Vec<WorkerReport> = snapshot
-            .instances
+        let mut reports: Vec<WorkerReport> = insts
             .iter()
             .map(|v| WorkerReport::compute(v, g, &self.betas, default_rem))
             .collect();
 
+        // requests already chosen this interval: the views cannot be
+        // updated between rounds (only the reports are), so a later round
+        // must not re-select a request that is already on its way out
+        let mut decided: Vec<RequestId> = Vec::new();
         for _round in 0..self.cfg.max_migrations_per_interval {
-            match self.decide_one(snapshot, &reports) {
+            match self.decide_one(&insts, g, &reports, &decided) {
                 None => break,
                 Some(d) => {
                     // apply the move to the reports so a second migration in
                     // the same interval sees the updated projection
-                    self.apply_to_reports(snapshot, &mut reports, &d);
+                    self.apply_to_reports(&insts, g, &mut reports, &d);
+                    decided.push(d.request);
                     decisions.push(d);
                     self.stats.migrations += 1;
                 }
@@ -131,8 +136,10 @@ impl Rescheduler {
     /// Phases 1–3 for a single best migration.
     fn decide_one(
         &mut self,
-        snapshot: &ClusterSnapshot,
+        insts: &[InstanceRef<'_>],
+        g: f64,
         reports: &[WorkerReport],
+        decided: &[RequestId],
     ) -> Option<MigrationDecision> {
         let n = reports.len();
         if n < 2 {
@@ -197,7 +204,6 @@ impl Rescheduler {
             .sum();
 
         // migration amortization bound (Alg. 1 line 20)
-        let g = snapshot.tokens_per_interval;
         let min_remaining = |kv_tokens: u64| {
             self.migration
                 .overhead_iterations(kv_tokens, self.avg_iter_s)
@@ -212,8 +218,8 @@ impl Rescheduler {
                 }
                 let dst_rep = &reports[t_i];
                 let dst_cap = dst_rep.kv_capacity_tokens as f64 * (1.0 - self.cfg.mem_safety_frac);
-                for r in &snapshot.instances[s].requests {
-                    if r.migrating {
+                for r in insts[s].requests() {
+                    if r.migrating || decided.contains(&r.id) {
                         continue;
                     }
                     let rem = if self.use_prediction {
@@ -226,6 +232,13 @@ impl Rescheduler {
                     };
                     // line 20: remaining work must amortize the transfer
                     if rem <= min_remaining(r.tokens) {
+                        continue;
+                    }
+                    // the destination must be able to actually re-admit
+                    // the arriving KV (driver admission watermark); a
+                    // migration that can never be admitted would be
+                    // failed terminally on delivery
+                    if r.tokens > admission_watermark(dst_rep.kv_capacity_tokens) {
                         continue;
                     }
                     // line 21: target memory safety over the horizon — the
@@ -286,8 +299,8 @@ impl Rescheduler {
                     {
                         best = Some(MigrationDecision {
                             request: r.id,
-                            src: snapshot.instances[s].id,
-                            dst: snapshot.instances[t_i].id,
+                            src: insts[s].id(),
+                            dst: insts[t_i].id(),
                             kv_tokens: r.tokens,
                             var_reduction: reduction,
                         });
@@ -302,28 +315,29 @@ impl Rescheduler {
     /// second decision in the same interval uses updated projections.
     fn apply_to_reports(
         &self,
-        snapshot: &ClusterSnapshot,
+        insts: &[InstanceRef<'_>],
+        g: f64,
         reports: &mut [WorkerReport],
         d: &MigrationDecision,
     ) {
         let (mut s_idx, mut d_idx) = (None, None);
-        for (i, iv) in snapshot.instances.iter().enumerate() {
-            if iv.id == d.src {
+        for (i, iv) in insts.iter().enumerate() {
+            if iv.id() == d.src {
                 s_idx = Some(i);
             }
-            if iv.id == d.dst {
+            if iv.id() == d.dst {
                 d_idx = Some(i);
             }
         }
         let (s_idx, d_idx) = (s_idx.unwrap(), d_idx.unwrap());
-        let r = snapshot.instances[s_idx]
-            .requests
+        let r = insts[s_idx]
+            .requests()
             .iter()
             .find(|r| r.id == d.request)
             .expect("decision request present");
         let fl = FutureLoad::of_request(
             r,
-            snapshot.tokens_per_interval,
+            g,
             self.cfg.horizon,
             if self.use_prediction {
                 None
@@ -358,8 +372,8 @@ impl ReschedulePolicy for Rescheduler {
         "star"
     }
 
-    fn decide(&mut self, snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
-        Rescheduler::decide(self, snapshot)
+    fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
+        Rescheduler::decide(self, view)
     }
 
     fn stats(&self) -> ReschedulerStats {
@@ -379,6 +393,7 @@ impl ReschedulePolicy for Rescheduler {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
 
     fn cfg() -> ReschedulerConfig {
         ReschedulerConfig {
@@ -426,7 +441,7 @@ mod tests {
             vec![(3, 1000, 500.0)],
         ]);
         let mut rs = Rescheduler::new(cfg(), mig(), true);
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
     }
 
     #[test]
@@ -437,7 +452,7 @@ mod tests {
             vec![(4, 600, 100.0)],
         ]);
         let mut rs = Rescheduler::new(cfg(), mig(), true);
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         let d = &ds[0];
         assert_eq!(d.src, 0);
@@ -456,7 +471,7 @@ mod tests {
             vec![(2, 100, 50.0)],
         ]);
         let mut rs = Rescheduler::new(cfg(), m, true);
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
     }
 
     #[test]
@@ -467,7 +482,7 @@ mod tests {
         ]);
         snap.instances[1].kv_capacity_tokens = 3400; // cannot take 3000+growth
         let mut rs = Rescheduler::new(cfg(), mig(), true);
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
     }
 
     #[test]
@@ -478,7 +493,7 @@ mod tests {
         ]);
         snap.instances[0].requests[0].migrating = true;
         let mut rs = Rescheduler::new(cfg(), mig(), true);
-        assert!(rs.decide(&snap).is_empty());
+        assert!(rs.decide(&snap.view()).is_empty());
     }
 
     #[test]
@@ -488,7 +503,7 @@ mod tests {
             vec![(3, 500, 10.0)],
         ]);
         let mut rs = Rescheduler::new(cfg(), mig(), false);
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         // current-variance objective moves the request that best balances
         // *current* tokens: moving 2000 gives loads (4000, 2500) vs moving
@@ -506,7 +521,7 @@ mod tests {
             vec![(3, 500, 10.0)],
         ]);
         let mut rs = Rescheduler::new(cfg(), mig(), true);
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].request, 1, "should migrate the long-remaining request");
     }
@@ -521,7 +536,7 @@ mod tests {
             vec![(5, 100, 50.0)],
         ]);
         let mut rs = Rescheduler::new(c, mig(), true);
-        let ds = rs.decide(&snap);
+        let ds = rs.decide(&snap.view());
         assert_eq!(ds.len(), 2);
         // the two moves must go to different targets (reports updated)
         assert_ne!(ds[0].dst, ds[1].dst);
@@ -534,7 +549,7 @@ mod tests {
             vec![(3, 100, 50.0)],
         ]);
         let mut rs = Rescheduler::new(cfg(), mig(), true);
-        let _ = rs.decide(&snap);
+        let _ = rs.decide(&snap.view());
         assert_eq!(rs.stats.intervals, 1);
         assert!(rs.stats.candidates_evaluated > 0);
         assert!(rs.stats.migrations <= 1);

@@ -22,6 +22,9 @@ pub struct KvCacheManager {
     free_blocks: usize,
     /// request -> (blocks held, tokens stored)
     allocs: HashMap<RequestId, KvAlloc>,
+    /// Running Σ tokens over `allocs` so [`Self::used_tokens`] is O(1)
+    /// (it sits on the admission hot path).
+    used_tokens: u64,
     /// high-water mark for reporting
     peak_used_blocks: usize,
 }
@@ -40,6 +43,7 @@ impl KvCacheManager {
             capacity_blocks,
             free_blocks: capacity_blocks,
             allocs: HashMap::new(),
+            used_tokens: 0,
             peak_used_blocks: 0,
         }
     }
@@ -71,6 +75,7 @@ impl KvCacheManager {
                 tokens,
             },
         );
+        self.used_tokens += tokens;
         self.note_peak();
         Ok(())
     }
@@ -97,6 +102,7 @@ impl KvCacheManager {
             alloc.blocks += 1;
             self.note_peak();
         }
+        self.used_tokens += 1;
         Ok(())
     }
 
@@ -104,6 +110,7 @@ impl KvCacheManager {
     pub fn release(&mut self, id: RequestId) -> Option<KvAlloc> {
         let alloc = self.allocs.remove(&id)?;
         self.free_blocks += alloc.blocks;
+        self.used_tokens -= alloc.tokens;
         Some(alloc)
     }
 
@@ -121,9 +128,9 @@ impl KvCacheManager {
         self.capacity_blocks as u64 * self.block_tokens as u64
     }
 
-    /// Total tokens stored across requests.
+    /// Total tokens stored across requests. O(1).
     pub fn used_tokens(&self) -> u64 {
-        self.allocs.values().map(|a| a.tokens).sum()
+        self.used_tokens
     }
 
     /// Fraction of block capacity in use (Fig. 12's y-axis).

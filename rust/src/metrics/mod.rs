@@ -104,6 +104,33 @@ impl RequestLatency {
     pub fn ttft(&self) -> Option<f64> {
         self.first_token.map(|t| t - self.arrival)
     }
+
+    /// Finalize the TPOT fields at completion time from the driver's
+    /// accumulated inter-token gaps. A single token has no gap, so its
+    /// TPOT stays `None` — [`Self::meets_slo`] then judges it on TTFT
+    /// alone (a `Some(0.0)` placeholder would inflate goodput). The one
+    /// definition both drivers (sim + serve) share.
+    pub fn finalize_tpot(&mut self, generated: u32, tpot_sum: f64, tpot_max: f64) {
+        if generated > 1 {
+            self.mean_tpot = Some(tpot_sum / (generated - 1) as f64);
+            self.max_tpot = Some(tpot_max);
+        } else {
+            self.mean_tpot = None;
+            self.max_tpot = None;
+        }
+    }
+
+    /// Does this request meet `slo`? A single-token request has no
+    /// inter-token gap, so its TPOT is `None` and the check is TTFT-only;
+    /// a multi-token request with no recorded TPOT never qualifies.
+    pub fn meets_slo(&self, slo: Slo) -> bool {
+        let ttft_ok = self.ttft().map(|t| t <= slo.ttft_s).unwrap_or(false);
+        let tpot_ok = match self.mean_tpot {
+            Some(t) => t <= slo.tpot_s,
+            None => self.output_tokens <= 1,
+        };
+        ttft_ok && tpot_ok
+    }
 }
 
 /// SLO definition (paper §6.2: 1 s TTFT; TPOT 25 ms for the 7B model).
@@ -141,19 +168,15 @@ impl RunMetrics {
         self.completed.len() as f64 / self.duration
     }
 
-    /// Fraction + rate of requests meeting the SLO (paper's goodput).
+    /// Rate of requests meeting the SLO (paper's goodput). Single-token
+    /// requests carry no TPOT sample and are judged on TTFT alone — they
+    /// must not unconditionally count as TPOT-compliant (a `Some(0.0)`
+    /// placeholder used to inflate goodput).
     pub fn goodput(&self, slo: Slo) -> f64 {
         if self.duration <= 0.0 {
             return 0.0;
         }
-        let good = self
-            .completed
-            .iter()
-            .filter(|r| {
-                r.ttft().map(|t| t <= slo.ttft_s).unwrap_or(false)
-                    && r.mean_tpot.map(|t| t <= slo.tpot_s).unwrap_or(false)
-            })
-            .count();
+        let good = self.completed.iter().filter(|r| r.meets_slo(slo)).count();
         good as f64 / self.duration
     }
 
@@ -232,6 +255,41 @@ mod tests {
         let slo = Slo::default();
         assert!((m.throughput() - 0.3).abs() < 1e-12);
         assert!((m.goodput(slo) - 0.1).abs() < 1e-12); // only the first
+    }
+
+    #[test]
+    fn single_token_requests_are_judged_on_ttft_only() {
+        let slo = Slo::default();
+        // 1-token request, good TTFT, no TPOT sample: counts
+        let one_good = RequestLatency {
+            arrival: 0.0,
+            first_token: Some(0.5),
+            finished: Some(0.5),
+            output_tokens: 1,
+            mean_tpot: None,
+            ..Default::default()
+        };
+        assert!(one_good.meets_slo(slo));
+        // 1-token request with a blown TTFT must NOT count (the old
+        // Some(0.0) placeholder made every such request TPOT-compliant)
+        let one_late = RequestLatency {
+            first_token: Some(5.0),
+            ..one_good.clone()
+        };
+        assert!(!one_late.meets_slo(slo));
+        // multi-token request that somehow lost its TPOT sample: never
+        // SLO-compliant (no evidence of decode pacing)
+        let multi_missing = RequestLatency {
+            output_tokens: 20,
+            ..one_good.clone()
+        };
+        assert!(!multi_missing.meets_slo(slo));
+        let m = RunMetrics {
+            completed: vec![one_good, one_late, multi_missing],
+            duration: 10.0,
+            ..Default::default()
+        };
+        assert!((m.goodput(slo) - 0.1).abs() < 1e-12, "only the first counts");
     }
 
     #[test]

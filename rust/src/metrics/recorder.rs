@@ -30,6 +30,10 @@ pub enum TraceEvent {
         instance: InstanceId,
         victims: usize,
     },
+    /// An OOM victim re-entering the prefill queue for KV recompute.
+    /// Distinct from [`TraceEvent::Arrived`] so trace consumers counting
+    /// arrivals see each request exactly once.
+    RecomputeQueued { request: RequestId },
     /// Request lifecycle markers.
     Arrived { request: RequestId },
     PrefillDone { request: RequestId, instance: InstanceId },
@@ -132,6 +136,9 @@ impl TraceRecorder {
                 TraceEvent::Oom { instance, victims } => {
                     write!(line, "oom\t{instance}\t\t\t\tvictims={victims}").unwrap()
                 }
+                TraceEvent::RecomputeQueued { request } => {
+                    write!(line, "recompute_queued\t\t{request}\t\t\t").unwrap()
+                }
                 TraceEvent::Arrived { request } => {
                     write!(line, "arrived\t\t{request}\t\t\t").unwrap()
                 }
@@ -169,6 +176,23 @@ mod tests {
         assert_eq!(s.len(), 3);
         assert!((s[1].1 - 0.9).abs() < 1e-12);
         assert!((s[2].1 - 0.9).abs() < 1e-12); // instance 1 still at 0.9
+    }
+
+    #[test]
+    fn recompute_queue_events_do_not_count_as_arrivals() {
+        let mut r = TraceRecorder::new(true);
+        r.record(0.0, TraceEvent::Arrived { request: 3 });
+        r.record(4.0, TraceEvent::Oom { instance: 0, victims: 1 });
+        r.record(4.0, TraceEvent::RecomputeQueued { request: 3 });
+        let arrivals: Vec<_> = r
+            .rows()
+            .iter()
+            .filter_map(|row| match row.event {
+                TraceEvent::Arrived { request } => Some(request),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(arrivals, vec![3], "recompute must not double-count arrival");
     }
 
     #[test]

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::PredictorKind;
+use crate::coordinator::admission_watermark;
 use crate::kvcache::KvCacheManager;
 use crate::prng::Pcg64;
 use crate::runtime::{HostTensor, StarRuntime};
@@ -366,9 +367,10 @@ impl DecodeInstance {
         let free_slot = (0..bucket).find(|&i| slots[i].is_none());
         let tokens_now = p.pos as u64 + p.replay.len() as u64;
         // admission watermark (vLLM-style): keep growth headroom so the
-        // running batch does not immediately OOM-thrash
-        let watermark_ok =
-            kv_mgr.used_tokens() + tokens_now.max(1) <= kv_mgr.capacity_tokens() * 9 / 10;
+        // running batch does not immediately OOM-thrash — the SAME
+        // definition the reschedulers' destination-feasibility guard uses
+        let watermark_ok = kv_mgr.used_tokens() + tokens_now.max(1)
+            <= admission_watermark(kv_mgr.capacity_tokens());
         let admissible = active < max_batch
             && free_slot.is_some()
             && watermark_ok

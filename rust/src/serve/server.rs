@@ -7,11 +7,11 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::instance::{AdmitPayload, DecodeCommand, DecodeEvent, DecodeInstance, SlotSnapshot};
+use super::instance::{AdmitPayload, DecodeCommand, DecodeEvent, DecodeInstance};
 use super::LiveRequest;
 use crate::config::{ExperimentConfig, PredictorKind};
 use crate::coordinator::{
-    ClusterSnapshot, ControlLoop, IncomingRequest, InstanceView, PolicyRegistry, RequestView,
+    admission_watermark, ClusterState, ControlLoop, IncomingRequest, PolicyRegistry, RequestView,
     ReschedulerStats,
 };
 use crate::costmodel::MigrationCostModel;
@@ -68,13 +68,14 @@ struct ReqTracker {
     done: bool,
 }
 
+/// Per-instance plumbing the coordinator keeps outside the shared
+/// [`ClusterState`]: the command channel plus raw KV telemetry for the
+/// load-variance metric (scheduler-visible state — slots, EWMAs,
+/// reservations — lives in the `ClusterState`).
 struct InstanceState {
     cmd: Sender<DecodeCommand>,
-    slots: Vec<SlotSnapshot>,
-    ewma_iter_ms: f64,
     kv_used: u64,
     kv_capacity: u64,
-    inbound_reserved: u64,
 }
 
 /// The live server. Owns the runtime, the experiment wiring, and the
@@ -133,11 +134,8 @@ impl Server {
             handles.push(std::thread::spawn(move || inst.run(cmd_rx, ev)));
             instances.push(InstanceState {
                 cmd: cmd_tx,
-                slots: Vec::new(),
-                ewma_iter_ms: 0.0,
                 kv_used: 0,
                 kv_capacity: exp.cluster.kv_capacity_tokens,
-                inbound_reserved: 0,
             });
         }
 
@@ -229,43 +227,27 @@ impl Server {
         let mut last_tick = Instant::now();
         let interval = Duration::from_secs_f64(exp.rescheduler.interval_s);
 
-        let snapshot_of = |instances: &[InstanceState], migrating: &[RequestId], avg_iter: f64| {
-            ClusterSnapshot {
-                instances: instances
-                    .iter()
-                    .enumerate()
-                    .map(|(i, st)| InstanceView {
-                        id: i,
-                        requests: st
-                            .slots
-                            .iter()
-                            .map(|s| RequestView {
-                                id: s.id,
-                                tokens: s.tokens,
-                                predicted_remaining: s.predicted_remaining,
-                                migrating: migrating.contains(&s.id),
-                            })
-                            .collect(),
-                        kv_capacity_tokens: st.kv_capacity,
-                        inbound_reserved_tokens: st.inbound_reserved,
-                    })
-                    .collect(),
-                tokens_per_interval: interval.as_secs_f64() / avg_iter.max(1e-4),
-            }
-        };
-        let seed_avg_iter_s = exp.rescheduler.initial_avg_iter_s;
-        let avg_iter_of = move |instances: &[InstanceState]| {
-            let xs: Vec<f64> = instances
-                .iter()
-                .filter(|s| s.ewma_iter_ms > 0.0)
-                .map(|s| s.ewma_iter_ms / 1e3)
-                .collect();
-            if xs.is_empty() {
-                seed_avg_iter_s
-            } else {
-                xs.iter().sum::<f64>() / xs.len() as f64
-            }
-        };
+        // scheduler-visible cluster state, shared with the simulator's
+        // driver layer: reconciled per instance from authoritative decode
+        // reports, with reservation deltas applied at migration
+        // decision/delivery time. Dispatch borrows views from it instead
+        // of materializing a snapshot per decision.
+        let mut state = ClusterState::new(
+            exp.cluster.n_decode,
+            exp.cluster.kv_capacity_tokens,
+            interval.as_secs_f64(),
+            exp.rescheduler.initial_avg_iter_s,
+            1e-4,
+        );
+        // the paged allocator rounds capacity down to whole blocks; the
+        // scheduler-side watermark guard must see the same number the
+        // instances enforce (an idle instance never sends the Report that
+        // would otherwise reconcile it)
+        let rounded_cap = exp.cluster.kv_capacity_tokens / exp.cluster.block_tokens as u64
+            * exp.cluster.block_tokens as u64;
+        for i in 0..exp.cluster.n_decode {
+            state.set_capacity(i, rounded_cap);
+        }
 
         // --- main loop ---
         while completed + failed < n_requests {
@@ -295,19 +277,39 @@ impl Server {
                 }
                 let (_, payload) = retries.pop_front().unwrap();
                 migrating.retain(|&id| id != payload.id);
+                state.set_migrating(payload.id, false);
                 let di = if let Some((dst, amt)) = reservations.remove(&payload.id) {
                     // migration delivery: go to the decided target and
                     // release the exact reservation
-                    instances[dst].inbound_reserved =
-                        instances[dst].inbound_reserved.saturating_sub(amt);
+                    state.release_inbound(dst, amt);
                     dst
                 } else {
                     // rejected admission / OOM recompute: re-dispatch
-                    let avg = avg_iter_of(&instances);
-                    let snap = snapshot_of(&instances, &migrating, avg);
                     let tokens = payload.pos as u64 + payload.replay.len() as u64;
+                    // never-admissible guard (mirrors the simulator's
+                    // stranded-request fix): a payload whose KV cannot
+                    // pass the admission watermark on ANY instance would
+                    // bounce through this retry queue forever
+                    let admissible = (0..state.n_instances()).any(|i| {
+                        tokens.max(1) <= admission_watermark(state.stats(i).kv_capacity_tokens())
+                    });
+                    if !admissible {
+                        match trackers.get_mut(&payload.id) {
+                            Some(t) if !t.done => {
+                                t.done = true;
+                                failed += 1;
+                            }
+                            _ => {}
+                        }
+                        eprintln!(
+                            "[serve] request {} ({tokens} KV tokens) can never pass the \
+                             admission watermark: failed terminally",
+                            payload.id
+                        );
+                        continue;
+                    }
                     control.dispatch(
-                        &snap,
+                        &state.view(),
                         &IncomingRequest {
                             id: payload.id,
                             tokens,
@@ -357,10 +359,8 @@ impl Server {
                                 req.forced_output.map(|o| o as f64)
                             }
                         };
-                        let avg = avg_iter_of(&instances);
-                        let snap = snapshot_of(&instances, &migrating, avg);
                         let di = control.dispatch(
-                            &snap,
+                            &state.view(),
                             &IncomingRequest {
                                 id: req.id,
                                 tokens: req.prompt.len() as u64,
@@ -394,6 +394,9 @@ impl Server {
                             &since,
                             &mut trackers,
                             &mut instances,
+                            &mut state,
+                            &mut migrating,
+                            &mut reservations,
                             &mut recorder,
                             &mut retries,
                             &mut completed,
@@ -409,9 +412,15 @@ impl Server {
             if last_tick.elapsed() >= interval {
                 last_tick = Instant::now();
                 let now_s = start.elapsed().as_secs_f64();
-                let iters: Vec<f64> = instances
-                    .iter()
-                    .map(|s| if s.slots.is_empty() { 0.0 } else { s.ewma_iter_ms })
+                let iters: Vec<f64> = (0..instances.len())
+                    .map(|i| {
+                        let s = state.stats(i);
+                        if s.batch_size() == 0 {
+                            0.0
+                        } else {
+                            s.ewma_iter_ms()
+                        }
+                    })
                     .collect();
                 exec_var.snapshot(now_s, &iters);
                 let loads: Vec<f64> = instances.iter().map(|s| s.kv_used as f64).collect();
@@ -423,21 +432,21 @@ impl Server {
                             instance: i,
                             kv_frac: st.kv_used as f64 / st.kv_capacity.max(1) as f64,
                             tokens: st.kv_used,
-                            batch: st.slots.len(),
+                            batch: state.stats(i).batch_size(),
                         },
                     );
                 }
                 if control.rescheduling_enabled() {
-                    let avg = avg_iter_of(&instances);
-                    control.observe_avg_iter_s(avg);
+                    control.observe_avg_iter_s(state.avg_iter_s());
                     if output_mean.count() > 10 {
                         control.observe_default_remaining(output_mean.mean() / 2.0);
                     }
-                    let snap = snapshot_of(&instances, &migrating, avg);
-                    for d in control.reschedule(&snap) {
+                    let decisions = control.reschedule(&state.view());
+                    for d in decisions {
                         migrations += 1;
                         migrating.push(d.request);
-                        instances[d.dst].inbound_reserved += d.kv_tokens;
+                        state.set_migrating(d.request, true);
+                        state.reserve_inbound(d.dst, d.kv_tokens);
                         reservations.insert(d.request, (d.dst, d.kv_tokens));
                         recorder.record(
                             now_s,
@@ -497,6 +506,9 @@ impl Server {
         since: &dyn Fn(Instant) -> Time,
         trackers: &mut HashMap<RequestId, ReqTracker>,
         instances: &mut [InstanceState],
+        state: &mut ClusterState,
+        migrating: &mut Vec<RequestId>,
+        reservations: &mut HashMap<RequestId, (InstanceId, u64)>,
         recorder: &mut TraceRecorder,
         retries: &mut VecDeque<(Instant, Box<AdmitPayload>)>,
         completed: &mut usize,
@@ -524,6 +536,14 @@ impl Server {
                 generated,
                 at,
             } => {
+                // a migration decided for a request that finished before
+                // the MigrateOut command reached its slot is silently
+                // dropped by the instance ("stale decision"): release the
+                // reservation here or it leaks for the rest of the run
+                if let Some((dst, amt)) = reservations.remove(&id) {
+                    state.release_inbound(dst, amt);
+                    migrating.retain(|&m| m != id);
+                }
                 if let Some(t) = trackers.get_mut(&id) {
                     if !t.done {
                         t.done = true;
@@ -531,13 +551,7 @@ impl Server {
                         output_mean.push(generated as f64);
                         t.latency.finished = Some(since(at));
                         t.latency.output_tokens = generated;
-                        if t.generated > 1 {
-                            t.latency.mean_tpot = Some(t.tpot_sum / (t.generated - 1) as f64);
-                            t.latency.max_tpot = Some(t.tpot_max);
-                        } else {
-                            t.latency.mean_tpot = Some(0.0);
-                            t.latency.max_tpot = Some(0.0);
-                        }
+                        t.latency.finalize_tpot(t.generated, t.tpot_sum, t.tpot_max);
                         recorder.record(
                             since(at),
                             TraceEvent::Finished {
@@ -592,9 +606,23 @@ impl Server {
                 kv_capacity,
                 ..
             } => {
+                // authoritative per-instance reconciliation: the decode
+                // thread owns the truth; fold its report into the shared
+                // scheduler state (O(slots of this instance), not
+                // O(cluster))
+                let views = slots
+                    .iter()
+                    .map(|s| RequestView {
+                        id: s.id,
+                        tokens: s.tokens,
+                        predicted_remaining: s.predicted_remaining,
+                        migrating: migrating.contains(&s.id),
+                    })
+                    .collect();
+                state.sync_instance(instance, views);
+                state.set_iter_ewma(instance, ewma_iter_ms);
+                state.set_capacity(instance, kv_capacity);
                 let st = &mut instances[instance];
-                st.slots = slots;
-                st.ewma_iter_ms = ewma_iter_ms;
                 st.kv_used = kv_used;
                 st.kv_capacity = kv_capacity;
             }

@@ -1,4 +1,14 @@
 //! The simulator engine: state + event handlers.
+//!
+//! Scheduler-visible cluster state lives in a
+//! [`crate::coordinator::ClusterState`] updated by O(1) deltas at every
+//! mutation point (admission, token append, release, migration
+//! start/finish, reprediction), so dispatch and rescheduling decisions at
+//! Fig. 13 scale (256 decode instances, ≥50k requests) never rebuild a
+//! full snapshot. [`StateMode::RebuildPerDecision`] preserves the old
+//! from-scratch materialization as a differential baseline —
+//! `benches/bench_sim_core.rs` quantifies the gap and
+//! [`SimParams::validate_state`] proves the two agree after every event.
 
 use std::collections::VecDeque;
 
@@ -7,16 +17,29 @@ use super::report::SimReport;
 use super::{ReqState, SimRequest};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
-    ClusterSnapshot, ControlLoop, IncomingRequest, InstanceView, PolicyRegistry, RequestView,
+    admission_watermark, ClusterSnapshot, ClusterState, ControlLoop, IncomingRequest,
+    InstanceView, PolicyRegistry, RequestView,
 };
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::KvCacheManager;
-use crate::metrics::{
-    RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime,
-};
+use crate::metrics::{RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
 use crate::predictor::{build_sim_predictor, LengthPredictor, PredictInput};
 use crate::workload::Request;
 use crate::{InstanceId, RequestId, Result, Time};
+
+/// How scheduling decisions read cluster state.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StateMode {
+    /// Borrow views from the incremental [`ClusterState`] (O(1) per
+    /// decision; the production path).
+    #[default]
+    Incremental,
+    /// Materialize a from-scratch [`ClusterSnapshot`] before every
+    /// dispatch and scheduler tick — the pre-incremental behaviour,
+    /// O(instances × requests) per decision. Kept as the differential /
+    /// benchmark baseline (`bench_sim_core`).
+    RebuildPerDecision,
+}
 
 /// Substrate parameters for a simulation run. The dispatch / reschedule
 /// policies are named by `exp.dispatch_policy` / `exp.reschedule_policy`
@@ -29,6 +52,11 @@ pub struct SimParams {
     pub migration: MigrationCostModel,
     /// Hard wall on simulated time (safety against livelock).
     pub max_sim_time: Time,
+    /// How policies read cluster state (see [`StateMode`]).
+    pub state_mode: StateMode,
+    /// After every event, assert the incremental state equals a
+    /// from-scratch rebuild (slow; test instrumentation).
+    pub validate_state: bool,
 }
 
 impl Default for SimParams {
@@ -39,6 +67,8 @@ impl Default for SimParams {
             prefill_cost: PrefillCostModel::paper_4090d(),
             migration: MigrationCostModel::new_25gbps(128 * 1024),
             max_sim_time: 50_000.0,
+            state_mode: StateMode::Incremental,
+            validate_state: false,
         }
     }
 }
@@ -51,14 +81,12 @@ struct PrefillSim {
 struct DecodeSim {
     id: InstanceId,
     kv: KvCacheManager,
-    active: Vec<RequestId>,
+    /// Dispatched but not yet admitted into the running batch. The batch
+    /// itself (and every aggregate over it) lives in [`ClusterState`].
     pending: VecDeque<RequestId>,
     /// A DecodeStep event is in flight.
     stepping: bool,
     epoch: u64,
-    /// EWMA of iteration latency in ms (Fig. 3/11/13's metric).
-    ewma_iter_ms: f64,
-    iters: u64,
     tokens_decoded: u64,
 }
 
@@ -70,9 +98,11 @@ pub struct Simulator {
     requests: Vec<SimRequest>,
     prefill: Vec<PrefillSim>,
     decode: Vec<DecodeSim>,
+    /// Incremental scheduler-visible state (batches, loads, reservations,
+    /// iteration-time EWMAs) — updated by O(1) deltas alongside the
+    /// authoritative per-request records above.
+    state: ClusterState,
     control: ControlLoop,
-    /// Cost-model-derived iteration time used until real EWMAs exist.
-    seed_avg_iter_s: f64,
     predictor: Box<dyn LengthPredictor>,
     pub recorder: TraceRecorder,
     exec_var: VarianceOverTime,
@@ -140,9 +170,31 @@ impl Simulator {
         }
         queue.push(exp.rescheduler.interval_s, Event::SchedulerTick);
 
+        let decode: Vec<DecodeSim> = (0..n_dec)
+            .map(|id| DecodeSim {
+                id,
+                kv: KvCacheManager::new(exp.cluster.kv_capacity_tokens, exp.cluster.block_tokens),
+                pending: VecDeque::new(),
+                stepping: false,
+                epoch: 0,
+                tokens_decoded: 0,
+            })
+            .collect();
+        let mut state = ClusterState::new(
+            n_dec,
+            exp.cluster.kv_capacity_tokens,
+            exp.rescheduler.interval_s,
+            seed_avg_iter_s,
+            1e-6,
+        );
+        for d in &decode {
+            // the paged allocator rounds capacity down to whole blocks;
+            // the scheduler must see the same number
+            state.set_capacity(d.id, d.kv.capacity_tokens());
+        }
+
         Ok(Simulator {
             control,
-            seed_avg_iter_s,
             predictor,
             recorder: TraceRecorder::new(exp.record_traces),
             exec_var: VarianceOverTime::new(),
@@ -155,22 +207,8 @@ impl Simulator {
                     busy: None,
                 })
                 .collect(),
-            decode: (0..n_dec)
-                .map(|id| DecodeSim {
-                    id,
-                    kv: KvCacheManager::new(
-                        exp.cluster.kv_capacity_tokens,
-                        exp.cluster.block_tokens,
-                    ),
-                    active: Vec::new(),
-                    pending: VecDeque::new(),
-                    stepping: false,
-                    epoch: 0,
-                    ewma_iter_ms: 0.0,
-                    iters: 0,
-                    tokens_decoded: 0,
-                })
-                .collect(),
+            decode,
+            state,
             queue,
             completed: 0,
             failed: 0,
@@ -193,10 +231,16 @@ impl Simulator {
                 Event::Arrival { request } => self.on_arrival(request),
                 Event::PrefillDone { prefill, request } => self.on_prefill_done(prefill, request),
                 Event::DecodeStep { instance, epoch } => self.on_decode_step(instance, epoch),
-                Event::MigrationDone { request, from, to } => {
-                    self.on_migration_done(request, from, to)
-                }
+                Event::MigrationDone {
+                    request,
+                    from,
+                    to,
+                    kv_tokens,
+                } => self.on_migration_done(request, from, to, kv_tokens),
                 Event::SchedulerTick => self.on_scheduler_tick(),
+            }
+            if self.params.validate_state {
+                self.assert_state_consistent();
             }
             if self.completed + self.failed == self.requests.len() {
                 break;
@@ -209,7 +253,14 @@ impl Simulator {
     // arrival + prefill
 
     fn on_arrival(&mut self, id: RequestId) {
-        self.recorder.record(self.now, TraceEvent::Arrived { request: id });
+        // OOM victims loop back through prefill for KV recompute; that
+        // re-entry is not a fresh arrival and traces must not count it
+        // twice (consumers assert arrival uniqueness).
+        if matches!(self.requests[id as usize].state, ReqState::Recomputing) {
+            self.recorder.record(self.now, TraceEvent::RecomputeQueued { request: id });
+        } else {
+            self.recorder.record(self.now, TraceEvent::Arrived { request: id });
+        }
         // prefill instance selection: shortest queue (paper §2.1: by load)
         let pi = (0..self.prefill.len())
             .min_by_key(|&i| self.prefill[i].queue.len() + self.prefill[i].busy.is_some() as usize)
@@ -264,18 +315,22 @@ impl Simulator {
 
         // dispatch to a decode instance (the common P2D baseline layer)
         let kv_tokens = self.requests[id as usize].kv_tokens();
-        let snapshot = self.snapshot();
-        let di = self.control.dispatch(
-            &snapshot,
-            &IncomingRequest {
-                id,
-                tokens: kv_tokens,
-                predicted_remaining: pred,
-            },
-        );
+        let incoming = IncomingRequest {
+            id,
+            tokens: kv_tokens,
+            predicted_remaining: pred,
+        };
+        let di = match self.params.state_mode {
+            StateMode::Incremental => self.control.dispatch(&self.state.view(), &incoming),
+            StateMode::RebuildPerDecision => {
+                let snapshot = self.rebuild_snapshot();
+                self.control.dispatch(&snapshot.view(), &incoming)
+            }
+        };
 
-        if kv_tokens > self.decode[di].kv.capacity_tokens() {
-            // cannot ever fit: fail the request (counted, not silently lost)
+        if kv_tokens > admission_watermark(self.decode[di].kv.capacity_tokens()) {
+            // can never pass admission, even on an idle instance: fail the
+            // request terminally (counted, not silently lost)
             self.requests[id as usize].state = ReqState::Done;
             self.failed += 1;
         } else {
@@ -292,33 +347,42 @@ impl Simulator {
     /// Admit pending requests into the running batch and (re)schedule the
     /// next iteration if the instance has work but no step in flight.
     /// Admission is first-fit over the whole queue (vLLM-style): a huge
-    /// request at the head must not starve small ones behind it.
+    /// request at the head must not starve small ones behind it. Requests
+    /// that can never pass the watermark fail terminally here — leaving
+    /// them queued would strand them (no future event ever drains them).
     fn kick(&mut self, di: usize) {
-        let mut idx = 0;
-        while idx < self.decode[di].pending.len() {
-            if self.decode[di].active.len() >= self.params.exp.cluster.max_batch {
-                break;
+        let cap = self.decode[di].kv.capacity_tokens();
+        let watermark = admission_watermark(cap);
+        let max_batch = self.params.exp.cluster.max_batch;
+        let mut pending = std::mem::take(&mut self.decode[di].pending);
+        let mut still = VecDeque::with_capacity(pending.len());
+        while let Some(id) = pending.pop_front() {
+            if self.state.stats(di).batch_size() >= max_batch {
+                still.push_back(id);
+                continue;
             }
-            let id = self.decode[di].pending[idx];
             let need = self.requests[id as usize].kv_tokens();
-            // admission watermark (vLLM-style): keep growth headroom so
-            // running requests do not immediately OOM-thrash
-            let cap = self.decode[di].kv.capacity_tokens();
-            let ok = self.decode[di].kv.used_tokens() + need <= cap * 9 / 10
+            if need > watermark {
+                self.requests[id as usize].state = ReqState::Done;
+                self.failed += 1;
+                continue;
+            }
+            let ok = self.decode[di].kv.used_tokens() + need <= watermark
                 && self.decode[di].kv.would_fit(need);
             if ok {
-                self.decode[di].pending.remove(idx);
                 self.decode[di]
                     .kv
                     .admit(id, need, di)
                     .expect("would_fit checked");
-                self.requests[id as usize].state = ReqState::Decoding(di);
-                self.decode[di].active.push(id);
+                let r = &mut self.requests[id as usize];
+                r.state = ReqState::Decoding(di);
+                self.state.admit(di, id, need, r.predicted_remaining);
             } else {
-                idx += 1;
+                still.push_back(id);
             }
         }
-        if !self.decode[di].active.is_empty() && !self.decode[di].stepping {
+        self.decode[di].pending = still;
+        if self.state.stats(di).batch_size() > 0 && !self.decode[di].stepping {
             self.schedule_step(di);
         }
     }
@@ -327,35 +391,26 @@ impl Simulator {
         let d = &mut self.decode[di];
         d.stepping = true;
         d.epoch += 1;
+        let epoch = d.epoch;
         // prediction overhead lands on iterations where repredictions fire
         let k = self.params.exp.rescheduler.predict_every_iters.max(1);
         let mut n_pred = 0usize;
-        for &id in &d.active {
-            if self.requests[id as usize].iters_since_predict + 1 >= k {
+        for rv in self.state.active(di) {
+            if self.requests[rv.id as usize].iters_since_predict + 1 >= k {
                 n_pred += 1;
             }
         }
-        let tokens: u64 = d
-            .active
-            .iter()
-            .map(|&id| self.requests[id as usize].kv_tokens())
-            .sum();
+        let stats = self.state.stats(di);
         let mut dt = self
             .params
             .decode_cost
-            .iter_time(tokens, d.active.len());
+            .iter_time(stats.token_load(), stats.batch_size());
         if n_pred > 0 {
             dt += self.predictor.cost_s(n_pred);
         }
         let at = self.now + dt;
         // EWMA of iteration latency for the exec-variance metric
-        let ms = dt * 1e3;
-        d.ewma_iter_ms = if d.iters == 0 {
-            ms
-        } else {
-            0.9 * d.ewma_iter_ms + 0.1 * ms
-        };
-        let epoch = d.epoch;
+        self.state.record_iteration(di, dt);
         self.queue.push(at, Event::DecodeStep { instance: di, epoch });
     }
 
@@ -364,9 +419,9 @@ impl Simulator {
             return; // stale event (batch was rebuilt)
         }
         self.decode[di].stepping = false;
-        self.decode[di].iters += 1;
+        self.state.complete_iteration(di);
 
-        let batch: Vec<RequestId> = self.decode[di].active.clone();
+        let batch: Vec<RequestId> = self.state.active(di).iter().map(|r| r.id).collect();
         let k = self.params.exp.rescheduler.predict_every_iters.max(1);
         let mut finished: Vec<RequestId> = Vec::new();
         let mut evicted: Vec<RequestId> = Vec::new();
@@ -380,7 +435,7 @@ impl Simulator {
                 continue; // evicted by an earlier OOM in this same step
             }
             // KV append (may OOM -> evict victims -> retry once)
-            if let Err(_) = self.decode[di].kv.append_token(id, di) {
+            if self.decode[di].kv.append_token(id, di).is_err() {
                 let victims = self.handle_oom(di, id);
                 evicted.extend(victims);
                 if evicted.contains(&id) {
@@ -394,6 +449,7 @@ impl Simulator {
                     continue;
                 }
             }
+            self.state.append_token(id);
             let r = &mut self.requests[id as usize];
             r.generated += 1;
             r.iters_since_predict += 1;
@@ -419,6 +475,7 @@ impl Simulator {
                 };
                 let p = self.predictor.predict(&input);
                 self.requests[id as usize].predicted_remaining = p;
+                self.state.set_prediction(id, p);
             }
         }
 
@@ -469,19 +526,21 @@ impl Simulator {
 
     /// Evict `victims` from instance `di` for KV recompute: release their
     /// blocks and send them back through prefill (vLLM recompute
-    /// semantics). Requests that can never fit are failed terminally.
+    /// semantics). Requests that can never be re-admitted are failed
+    /// terminally.
     fn evict_requests(&mut self, di: usize, victims: Vec<RequestId>) -> Vec<RequestId> {
-        let cap = self.decode[di].kv.capacity_tokens();
+        let watermark = admission_watermark(self.decode[di].kv.capacity_tokens());
         let block = self.params.exp.cluster.block_tokens as u64;
         for &v in &victims {
             self.decode[di].kv.release(v);
-            self.decode[di].active.retain(|&x| x != v);
+            self.state.release(v);
             let r = &mut self.requests[v as usize];
             r.latency.hit_oom = true;
             r.last_token_at = None; // recompute stall shows up as TTFT-like gap
-            if r.kv_tokens() + block >= cap {
-                // cannot ever make progress on any instance of this size:
-                // terminal failure (vLLM would abort the request too)
+            if r.kv_tokens() + block > watermark {
+                // even after recompute the admission watermark would
+                // reject it on an idle instance of this size: terminal
+                // failure (vLLM would abort the request too)
                 r.state = ReqState::Done;
                 self.failed += 1;
             } else {
@@ -495,19 +554,13 @@ impl Simulator {
 
     fn finish_request(&mut self, di: usize, id: RequestId) {
         self.decode[di].kv.release(id);
-        self.decode[di].active.retain(|&x| x != id);
+        self.state.release(id);
         let r = &mut self.requests[id as usize];
         r.state = ReqState::Done;
         r.latency.finished = Some(self.now);
         r.latency.output_tokens = r.generated;
-        if r.generated > 1 {
-            // mean gap between consecutive tokens, including migration stalls
-            r.latency.mean_tpot = Some(r.tpot_sum / (r.generated - 1) as f64);
-            r.latency.max_tpot = Some(r.tpot_max);
-        } else {
-            r.latency.mean_tpot = Some(0.0);
-            r.latency.max_tpot = Some(0.0);
-        }
+        // mean gap between consecutive tokens, including migration stalls
+        r.latency.finalize_tpot(r.generated, r.tpot_sum, r.tpot_max);
         self.output_mean.push(r.generated as f64);
         self.completed += 1;
         self.recorder.record(
@@ -522,37 +575,28 @@ impl Simulator {
     // ------------------------------------------------------------------
     // rescheduling + migration
 
-    fn snapshot(&self) -> ClusterSnapshot {
-        let instances = self
-            .decode
-            .iter()
-            .map(|d| InstanceView {
-                id: d.id,
-                requests: d
-                    .active
-                    .iter()
-                    .map(|&id| {
-                        let r = &self.requests[id as usize];
-                        RequestView {
-                            id,
-                            tokens: r.kv_tokens(),
-                            predicted_remaining: r.predicted_remaining,
-                            migrating: matches!(r.state, ReqState::Migrating { .. }),
-                        }
-                    })
-                    .collect(),
-                kv_capacity_tokens: d.kv.capacity_tokens(),
-                inbound_reserved_tokens: self.inbound_reserved(d.id),
+    /// Pre-incremental from-scratch materialization: per-instance request
+    /// views from the membership lists plus an O(requests) scan per
+    /// instance for inbound reservations. This is the cost shape every
+    /// decision paid before [`ClusterState`]; kept for
+    /// [`StateMode::RebuildPerDecision`] (differential baseline).
+    fn rebuild_snapshot(&self) -> ClusterSnapshot {
+        let instances = (0..self.decode.len())
+            .map(|di| InstanceView {
+                id: self.decode[di].id,
+                requests: self.state.active(di).to_vec(),
+                kv_capacity_tokens: self.decode[di].kv.capacity_tokens(),
+                inbound_reserved_tokens: self.inbound_reserved_scan(self.decode[di].id),
             })
             .collect();
-        let avg_iter = self.avg_iter_s();
         ClusterSnapshot {
             instances,
-            tokens_per_interval: self.params.exp.rescheduler.interval_s / avg_iter.max(1e-6),
+            tokens_per_interval: self.state.tokens_per_interval(),
         }
     }
 
-    fn inbound_reserved(&self, di: InstanceId) -> u64 {
+    /// O(requests) reservation scan (the pre-incremental definition).
+    fn inbound_reserved_scan(&self, di: InstanceId) -> u64 {
         self.requests
             .iter()
             .filter_map(|r| match r.state {
@@ -562,26 +606,71 @@ impl Simulator {
             .sum()
     }
 
-    fn avg_iter_s(&self) -> f64 {
-        let busy: Vec<f64> = self
+    /// Rebuild scheduler-visible state from the authoritative per-request
+    /// records alone (independent of [`ClusterState`]'s bookkeeping).
+    fn reference_snapshot(&self) -> ClusterSnapshot {
+        let mut instances: Vec<InstanceView> = self
             .decode
             .iter()
-            .filter(|d| d.iters > 0)
-            .map(|d| d.ewma_iter_ms / 1e3)
+            .map(|d| InstanceView {
+                id: d.id,
+                requests: Vec::new(),
+                kv_capacity_tokens: d.kv.capacity_tokens(),
+                inbound_reserved_tokens: 0,
+            })
             .collect();
-        if busy.is_empty() {
-            self.seed_avg_iter_s
-        } else {
-            busy.iter().sum::<f64>() / busy.len() as f64
+        for r in &self.requests {
+            match r.state {
+                ReqState::Decoding(di) => instances[di].requests.push(RequestView {
+                    id: r.id,
+                    tokens: r.kv_tokens(),
+                    predicted_remaining: r.predicted_remaining,
+                    migrating: false,
+                }),
+                ReqState::Migrating { to, .. } => {
+                    instances[to].inbound_reserved_tokens += r.kv_tokens()
+                }
+                _ => {}
+            }
+        }
+        ClusterSnapshot {
+            instances,
+            tokens_per_interval: self.state.tokens_per_interval(),
+        }
+    }
+
+    /// Differential check behind [`SimParams::validate_state`]: the
+    /// incrementally maintained state must equal a from-scratch rebuild.
+    fn assert_state_consistent(&self) {
+        if let Some(diff) = self.state.consistency_diff(&self.reference_snapshot()) {
+            panic!(
+                "incremental ClusterState diverged from from-scratch rebuild \
+                 at t={:.6}: {diff}",
+                self.now
+            );
         }
     }
 
     fn on_scheduler_tick(&mut self) {
+        // stranded-request guard: an instance with an empty batch receives
+        // no DecodeStep/MigrationDone events, so a pending request that
+        // failed its first admission attempt would otherwise wait forever
+        for di in 0..self.decode.len() {
+            if !self.decode[di].pending.is_empty() {
+                self.kick(di);
+            }
+        }
+
         // metrics snapshots (taken whether or not rescheduling is on)
-        let iters: Vec<f64> = self
-            .decode
-            .iter()
-            .map(|d| if d.active.is_empty() { 0.0 } else { d.ewma_iter_ms })
+        let iters: Vec<f64> = (0..self.decode.len())
+            .map(|di| {
+                let s = self.state.stats(di);
+                if s.batch_size() == 0 {
+                    0.0
+                } else {
+                    s.ewma_iter_ms()
+                }
+            })
             .collect();
         self.exec_var.snapshot(self.now, &iters);
         let loads: Vec<f64> = self
@@ -597,19 +686,24 @@ impl Simulator {
                     instance: d.id,
                     kv_frac: d.kv.usage_frac(),
                     tokens: d.kv.used_tokens(),
-                    batch: d.active.len(),
+                    batch: self.state.stats(d.id).batch_size(),
                 },
             );
         }
 
         if self.control.rescheduling_enabled() {
-            self.control.observe_avg_iter_s(self.avg_iter_s());
+            self.control.observe_avg_iter_s(self.state.avg_iter_s());
             if self.output_mean.count() > 10 {
                 self.control
                     .observe_default_remaining(self.output_mean.mean() / 2.0);
             }
-            let snapshot = self.snapshot();
-            let decisions = self.control.reschedule(&snapshot);
+            let decisions = match self.params.state_mode {
+                StateMode::Incremental => self.control.reschedule(&self.state.view()),
+                StateMode::RebuildPerDecision => {
+                    let snapshot = self.rebuild_snapshot();
+                    self.control.reschedule(&snapshot.view())
+                }
+            };
             for d in decisions {
                 self.start_migration(d.request, d.src, d.dst, d.kv_tokens);
             }
@@ -628,8 +722,13 @@ impl Simulator {
         r.latency.migrations += 1;
         self.migrations_started += 1;
         // pause: out of the running batch immediately (overlap: the rest
-        // of the batch keeps decoding, §5.4)
-        self.decode[from].active.retain(|&x| x != id);
+        // of the batch keeps decoding, §5.4); its KV footprint is promised
+        // to the destination until the transfer completes
+        let reserved = self
+            .state
+            .begin_migration(id, to)
+            .expect("migrating request tracked in cluster state");
+        debug_assert_eq!(reserved, kv, "decision kv_tokens drifted from tracked state");
         self.recorder.record(
             self.now,
             TraceEvent::Migration {
@@ -640,16 +739,26 @@ impl Simulator {
             },
         );
         let dt = self.params.migration.transfer_time(kv);
-        self.queue.push(self.now + dt, Event::MigrationDone { request: id, from, to });
+        self.queue.push(
+            self.now + dt,
+            Event::MigrationDone {
+                request: id,
+                from,
+                to,
+                kv_tokens: reserved,
+            },
+        );
     }
 
-    fn on_migration_done(&mut self, id: RequestId, from: InstanceId, to: InstanceId) {
+    fn on_migration_done(&mut self, id: RequestId, from: InstanceId, to: InstanceId, kv: u64) {
         // source frees its copy only after the transfer (both sides hold
         // KV during the copy, as with NIXL)
         self.decode[from].kv.release(id);
         let r = &mut self.requests[id as usize];
         debug_assert!(matches!(r.state, ReqState::Migrating { .. }));
         r.state = ReqState::Pending(to);
+        // release exactly what begin_migration reserved
+        self.state.finish_migration(to, kv);
         self.decode[to].pending.push_back(id);
         self.kick(to);
         self.kick(from);
@@ -772,5 +881,116 @@ mod tests {
         assert_eq!(r1.completed.len(), r2.completed.len());
         assert!((r1.duration - r2.duration).abs() < 1e-9);
         assert_eq!(r1.migrations, r2.migrations);
+    }
+
+    #[test]
+    fn incremental_state_validated_after_every_event() {
+        // migrations + OOM recomputes + repredictions, each asserting
+        // incremental state == from-scratch rebuild after every event
+        let (mut p, trace) = small_params(50, 1.5);
+        p.exp.rescheduler.enabled = true;
+        p.exp.rescheduler.interval_s = 0.5;
+        p.exp.cluster.kv_capacity_tokens = 40_000; // tight: forces OOMs
+        p.validate_state = true;
+        let report = Simulator::new(p, &trace).run();
+        assert_eq!(report.completed.len() + report.n_failed, 50);
+    }
+
+    #[test]
+    fn rebuild_mode_matches_incremental_mode() {
+        // the compatibility (from-scratch) path must take the exact same
+        // trajectory as the incremental path under the default policies
+        let (mut p, trace) = small_params(40, 1.2);
+        p.exp.rescheduler.enabled = true;
+        let mut rebuild = p.clone();
+        rebuild.state_mode = StateMode::RebuildPerDecision;
+        let a = Simulator::new(p, &trace).run();
+        let b = Simulator::new(rebuild, &trace).run();
+        assert_eq!(a.completed.len(), b.completed.len());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.oom_events, b.oom_events);
+        assert!((a.duration - b.duration).abs() < 1e-9);
+    }
+
+    #[test]
+    fn over_watermark_request_terminates_instead_of_stranding() {
+        // one request whose KV exceeds the 90% admission watermark on an
+        // otherwise idle cluster: it can never be admitted, and must fail
+        // terminally instead of spinning the sim to max_sim_time
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_decode = 2;
+        exp.cluster.kv_capacity_tokens = 10_000; // watermark = 9000
+        exp.predictor = PredictorKind::Oracle;
+        let trace = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 9_500,
+            output_len: 50,
+            tag: 0,
+        }];
+        let params = SimParams {
+            exp,
+            max_sim_time: 5_000.0,
+            validate_state: true,
+            ..Default::default()
+        };
+        let report = Simulator::new(params, &trace).run();
+        assert_eq!(report.n_failed, 1, "over-watermark request must fail");
+        assert!(
+            report.duration < 100.0,
+            "sim must terminate promptly, not spin to the cap (ran {:.1}s)",
+            report.duration
+        );
+    }
+
+    #[test]
+    fn near_watermark_request_still_completes_on_idle_cluster() {
+        // just under the watermark: admissible on an idle instance; the
+        // SchedulerTick re-kick guarantees it is not stranded even if its
+        // first admission attempt raced with transient occupancy
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_decode = 2;
+        exp.cluster.kv_capacity_tokens = 10_000;
+        exp.predictor = PredictorKind::Oracle;
+        let trace = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 8_900,
+            output_len: 40,
+            tag: 0,
+        }];
+        let params = SimParams {
+            exp,
+            max_sim_time: 5_000.0,
+            validate_state: true,
+            ..Default::default()
+        };
+        let report = Simulator::new(params, &trace).run();
+        assert_eq!(report.completed.len(), 1);
+        assert_eq!(report.n_failed, 0);
+    }
+
+    #[test]
+    fn recompute_does_not_double_count_arrivals() {
+        let (mut p, trace) = small_params(60, 2.0);
+        p.exp.rescheduler.enabled = false;
+        p.exp.cluster.kv_capacity_tokens = 30_000; // tight: forces OOMs
+        p.exp.record_traces = true;
+        let report = Simulator::new(p, &trace).run();
+        assert!(report.oom_events > 0, "test needs OOM recomputes");
+        let mut arrivals = vec![0usize; 60];
+        let mut recomputes = 0usize;
+        for row in report.recorder.rows() {
+            match row.event {
+                TraceEvent::Arrived { request } => arrivals[request as usize] += 1,
+                TraceEvent::RecomputeQueued { .. } => recomputes += 1,
+                _ => {}
+            }
+        }
+        assert!(recomputes > 0, "OOM victims must surface as RecomputeQueued");
+        assert!(
+            arrivals.iter().all(|&n| n == 1),
+            "each request must arrive exactly once: {arrivals:?}"
+        );
     }
 }

@@ -17,11 +17,15 @@ pub enum Event {
     },
     /// A decode instance completes one batched iteration.
     DecodeStep { instance: InstanceId, epoch: u64 },
-    /// KV transfer for a migration completes.
+    /// KV transfer for a migration completes. `kv_tokens` is the exact
+    /// amount reserved on the destination at migration start (released on
+    /// completion — carrying it avoids recomputing it from request state,
+    /// which could drift from what was actually reserved).
     MigrationDone {
         request: RequestId,
         from: InstanceId,
         to: InstanceId,
+        kv_tokens: u64,
     },
     /// Periodic scheduler tick (Algorithm 1 interval).
     SchedulerTick,

@@ -24,7 +24,7 @@ mod engine;
 mod events;
 mod report;
 
-pub use engine::{SimParams, Simulator};
+pub use engine::{SimParams, Simulator, StateMode};
 pub use report::SimReport;
 
 use crate::metrics::RequestLatency;

@@ -4,7 +4,7 @@
 
 use star::config::ExperimentConfig;
 use star::coordinator::{
-    ClusterSnapshot, DispatchPolicy, IncomingRequest, MigrationDecision, PolicyRegistry,
+    ClusterView, DispatchPolicy, IncomingRequest, MigrationDecision, PolicyRegistry,
     ReschedulePolicy, ReschedulerStats,
 };
 use star::sim::{SimParams, Simulator};
@@ -19,8 +19,8 @@ impl DispatchPolicy for PinToZero {
         "pin_to_zero"
     }
 
-    fn choose(&mut self, snapshot: &ClusterSnapshot, _incoming: &IncomingRequest) -> InstanceId {
-        snapshot.instances[0].id
+    fn choose(&mut self, view: &ClusterView<'_>, _incoming: &IncomingRequest) -> InstanceId {
+        view.instance(0).id()
     }
 }
 
@@ -35,7 +35,7 @@ impl ReschedulePolicy for CountOnly {
         "count_only"
     }
 
-    fn decide(&mut self, _snapshot: &ClusterSnapshot) -> Vec<MigrationDecision> {
+    fn decide(&mut self, _view: &ClusterView<'_>) -> Vec<MigrationDecision> {
         self.stats.intervals += 1;
         Vec::new()
     }

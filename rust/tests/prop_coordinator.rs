@@ -3,8 +3,8 @@
 
 use star::config::ReschedulerConfig;
 use star::coordinator::{
-    ClusterSnapshot, IncomingRequest, InstanceView, PolicyConfig, PolicyRegistry, RequestView,
-    Rescheduler,
+    ClusterSnapshot, ClusterState, IncomingRequest, InstanceView, PolicyConfig, PolicyRegistry,
+    RequestView, Rescheduler,
 };
 use star::costmodel::MigrationCostModel;
 use star::kvcache::KvCacheManager;
@@ -69,7 +69,7 @@ fn decisions_reference_real_requests_and_distinct_instances() {
         let snap = random_snapshot(g);
         let use_pred = g.bool();
         let mut rs = rescheduler(g, use_pred);
-        for d in rs.decide(&snap) {
+        for d in rs.decide(&snap.view()) {
             prop_assert(d.src != d.dst, "src == dst")?;
             let src = snap
                 .instances
@@ -94,7 +94,7 @@ fn migration_respects_target_capacity() {
     property("memory safety", 300, |g| {
         let snap = random_snapshot(g);
         let mut rs = rescheduler(g, true);
-        for d in rs.decide(&snap) {
+        for d in rs.decide(&snap.view()) {
             let dst = snap.instances.iter().find(|i| i.id == d.dst).unwrap();
             // at minimum, the moved request's current KV plus the target's
             // current usage must fit the target's capacity
@@ -118,7 +118,7 @@ fn migration_reduces_current_variance_when_prediction_off() {
         let snap = random_snapshot(g);
         let mut rs = rescheduler(g, false);
         let before = snap.current_variance();
-        for d in rs.decide(&snap) {
+        for d in rs.decide(&snap.view()) {
             // replay the move on plain token loads
             let mut loads: Vec<f64> = snap
                 .instances
@@ -164,7 +164,7 @@ fn balanced_clusters_are_left_alone() {
             tokens_per_interval: g.f64(1.0, 100.0),
         };
         let mut rs = rescheduler(g, true);
-        prop_assert(rs.decide(&snap).is_empty(), "migrated on a balanced cluster")
+        prop_assert(rs.decide(&snap.view()).is_empty(), "migrated on a balanced cluster")
     });
 }
 
@@ -185,7 +185,7 @@ fn dispatcher_always_returns_valid_instance() {
                 tokens: g.u64(1, 2_000),
                 predicted_remaining: Some(g.f64(0.0, 1_000.0)),
             };
-            let id = d.choose(&snap, &incoming);
+            let id = d.choose(&snap.view(), &incoming);
             prop_assert(
                 snap.instances.iter().any(|i| i.id == id),
                 "returned unknown instance",
@@ -221,12 +221,127 @@ fn round_robin_is_fair_on_uniform_clusters() {
                 tokens: 10,
                 predicted_remaining: None,
             };
-            counts[d.choose(&snap, &incoming)] += 1;
+            counts[d.choose(&snap.view(), &incoming)] += 1;
         }
         prop_assert(
             counts.iter().all(|&c| c == rounds),
             format!("unfair counts {counts:?}"),
         )
+    });
+}
+
+#[test]
+fn cluster_state_reservation_accounting_under_concurrent_migrations() {
+    // random interleavings of admission, decode progress, reprediction,
+    // release, and (possibly several concurrent) migrations: the
+    // incremental aggregates must equal a shadow model recomputed from
+    // scratch after every single operation
+    property("reservation accounting", 150, |g| {
+        let n_inst = g.usize(2, 6);
+        let mut st = ClusterState::new(n_inst, 1_000_000, 1.0, 0.02, 1e-6);
+        // shadow model: (id, instance, tokens, predicted)
+        let mut active: Vec<(u64, usize, u64, Option<f64>)> = Vec::new();
+        // in-flight migrations: (id, dst, tokens, predicted)
+        let mut inflight: Vec<(u64, usize, u64, Option<f64>)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..g.usize(1, 100) {
+            match g.usize(0, 5) {
+                0 | 1 => {
+                    next_id += 1;
+                    let di = g.usize(0, n_inst - 1);
+                    let tokens = g.u64(1, 4_000);
+                    let pred = g.bool().then(|| g.f64(0.0, 10_000.0));
+                    st.admit(di, next_id, tokens, pred);
+                    active.push((next_id, di, tokens, pred));
+                }
+                2 => {
+                    if !active.is_empty() {
+                        let i = g.usize(0, active.len() - 1);
+                        st.append_token(active[i].0);
+                        active[i].2 += 1;
+                    }
+                }
+                3 => {
+                    if !active.is_empty() {
+                        let i = g.usize(0, active.len() - 1);
+                        let pred = g.bool().then(|| g.f64(0.0, 10_000.0));
+                        st.set_prediction(active[i].0, pred);
+                        active[i].3 = pred;
+                    }
+                }
+                4 => {
+                    if !active.is_empty() {
+                        let i = g.usize(0, active.len() - 1);
+                        let (id, src, tokens, pred) = active.swap_remove(i);
+                        let dst = (src + g.usize(1, n_inst - 1)) % n_inst;
+                        let reserved = st
+                            .begin_migration(id, dst)
+                            .ok_or_else(|| "migration source untracked".to_string())?;
+                        prop_assert(
+                            reserved == tokens,
+                            "reservation != current KV footprint",
+                        )?;
+                        inflight.push((id, dst, tokens, pred));
+                    }
+                }
+                _ => {
+                    if !inflight.is_empty() && g.bool() {
+                        let i = g.usize(0, inflight.len() - 1);
+                        let (id, dst, tokens, pred) = inflight.swap_remove(i);
+                        st.finish_migration(dst, tokens);
+                        // delivery re-admits on the reserved destination
+                        st.admit(dst, id, tokens, pred);
+                        active.push((id, dst, tokens, pred));
+                    } else if !active.is_empty() {
+                        let i = g.usize(0, active.len() - 1);
+                        let (id, _, _, _) = active.swap_remove(i);
+                        st.release(id);
+                    }
+                }
+            }
+            for di in 0..n_inst {
+                let s = st.stats(di);
+                let want_reserved: u64 =
+                    inflight.iter().filter(|m| m.1 == di).map(|m| m.2).sum();
+                prop_assert(
+                    s.inbound_reserved_tokens() == want_reserved,
+                    format!(
+                        "instance {di}: inbound {} != shadow {want_reserved}",
+                        s.inbound_reserved_tokens()
+                    ),
+                )?;
+                let want_load: u64 = active.iter().filter(|r| r.1 == di).map(|r| r.2).sum();
+                prop_assert(
+                    s.token_load() == want_load,
+                    format!("instance {di}: load {} != shadow {want_load}", s.token_load()),
+                )?;
+                let want_batch = active.iter().filter(|r| r.1 == di).count();
+                prop_assert(
+                    s.batch_size() == want_batch,
+                    format!("instance {di}: batch {} != shadow {want_batch}", s.batch_size()),
+                )?;
+                let want_work: f64 = want_load as f64
+                    + active
+                        .iter()
+                        .filter(|r| r.1 == di)
+                        .map(|r| r.3.unwrap_or(0.0))
+                        .sum::<f64>();
+                prop_assert(
+                    (s.predicted_work() - want_work).abs() <= 1e-6 * want_work.abs().max(1.0),
+                    format!(
+                        "instance {di}: predicted work {} != shadow {want_work}",
+                        s.predicted_work()
+                    ),
+                )?;
+            }
+            // the compatibility materialization must agree with the state
+            let snap = st.snapshot();
+            match st.consistency_diff(&snap) {
+                None => {}
+                Some(d) => return Err(format!("state/materialization mismatch: {d}")),
+            }
+        }
+        Ok(())
     });
 }
 

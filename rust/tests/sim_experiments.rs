@@ -6,7 +6,7 @@ use star::bench::scenarios::{paper_scenarios, run_scenario, small_cluster, trace
 use star::config::PredictorKind;
 use star::metrics::Slo;
 use star::prop::{prop_assert, property};
-use star::sim::{SimParams, Simulator};
+use star::sim::{SimParams, Simulator, StateMode};
 use star::workload::{Dataset, TraceGen};
 
 #[test]
@@ -152,6 +152,112 @@ fn binned_predictors_interpolate_between_none_and_oracle() {
         oracle <= none * 1.25,
         "oracle ({oracle:.2}) should not lose badly to none ({none:.2})"
     );
+}
+
+#[test]
+fn memory_pressure_rescheduler_cuts_ooms_under_tight_memory() {
+    // equal config, tight KV memory: the projected-OOM rescheduler must
+    // produce fewer OOM events than running with no rescheduling at all,
+    // and every request must terminate either way (the stranded-request
+    // guard: rescheduling + OOM recompute combined must not leak requests)
+    let mk = |reschedule: &str, enabled: bool, seed: u64| {
+        let mut exp = small_cluster(Dataset::ShareGpt, 1.2, seed);
+        exp.cluster.kv_capacity_tokens = 30_000; // tight
+        exp.predictor = PredictorKind::Oracle;
+        exp.rescheduler.enabled = enabled;
+        exp.rescheduler.interval_s = 0.5;
+        exp.reschedule_policy = reschedule.to_string();
+        let trace = trace_for(&exp, 60);
+        let params = SimParams {
+            exp,
+            validate_state: true,
+            ..Default::default()
+        };
+        (Simulator::new(params, &trace).run(), trace.len())
+    };
+    let (mut ooms_none, mut ooms_mp) = (0u64, 0u64);
+    for seed in [3u64, 11, 19] {
+        let (none, n_none) = mk("none", false, seed);
+        let (mp, n_mp) = mk("memory_pressure", true, seed);
+        ooms_none += none.oom_events;
+        ooms_mp += mp.oom_events;
+        assert_eq!(
+            none.completed.len() + none.n_failed,
+            n_none,
+            "seed {seed}: baseline leaked requests"
+        );
+        assert_eq!(
+            mp.completed.len() + mp.n_failed,
+            n_mp,
+            "seed {seed}: rescheduling + OOM recompute leaked requests"
+        );
+    }
+    assert!(ooms_none > 0, "baseline must actually hit OOMs");
+    assert!(
+        ooms_mp < ooms_none,
+        "memory_pressure should cut OOMs: {ooms_mp} vs {ooms_none}"
+    );
+}
+
+#[test]
+fn all_requests_terminate_under_rescheduling_and_oom() {
+    // the combined stress: STAR rescheduling, migrations, OOM recompute
+    // cascades, and admission-watermark rejections — completed + failed
+    // must exactly cover the trace before the sim-time cap
+    for seed in [1u64, 7, 23] {
+        let mut exp = small_cluster(Dataset::ShareGpt, 1.5, seed);
+        exp.cluster.kv_capacity_tokens = 35_000;
+        exp.predictor = PredictorKind::Oracle;
+        exp.rescheduler.enabled = true;
+        exp.rescheduler.interval_s = 0.5;
+        let trace = trace_for(&exp, 80);
+        let params = SimParams {
+            exp,
+            ..Default::default()
+        };
+        let report = Simulator::new(params, &trace).run();
+        assert_eq!(
+            report.completed.len() + report.n_failed,
+            80,
+            "seed {seed}: request leaked (completed {} + failed {})",
+            report.completed.len(),
+            report.n_failed
+        );
+        assert!(
+            report.duration < params_cap(),
+            "seed {seed}: sim ran to the time cap instead of terminating"
+        );
+    }
+}
+
+fn params_cap() -> f64 {
+    SimParams::default().max_sim_time
+}
+
+#[test]
+fn incremental_state_matches_rebuild_under_full_stress() {
+    // differential acceptance: incremental ClusterState equals the
+    // from-scratch snapshot after EVERY event (validate_state), and the
+    // RebuildPerDecision compatibility mode takes the identical trajectory
+    let mut exp = small_cluster(Dataset::ShareGpt, 1.2, 5);
+    exp.cluster.kv_capacity_tokens = 40_000;
+    exp.predictor = PredictorKind::Oracle;
+    exp.rescheduler.enabled = true;
+    exp.rescheduler.interval_s = 0.5;
+    let trace = trace_for(&exp, 70);
+    let incremental = SimParams {
+        exp,
+        validate_state: true,
+        ..Default::default()
+    };
+    let mut rebuild = incremental.clone();
+    rebuild.state_mode = StateMode::RebuildPerDecision;
+    let a = Simulator::new(incremental, &trace).run();
+    let b = Simulator::new(rebuild, &trace).run();
+    assert_eq!(a.completed.len(), b.completed.len());
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.oom_events, b.oom_events);
+    assert!((a.duration - b.duration).abs() < 1e-9);
 }
 
 #[test]
