@@ -1,20 +1,120 @@
 #!/usr/bin/env bash
 # Tier-1 gate (DESIGN.md §9): build + tests + formatting + lint for the
-# rust crate. Run from anywhere; exits non-zero on the first failure.
-set -euo pipefail
-cd "$(dirname "$0")/rust"
+# rust crate, plus an optional bench smoke gate. Run from anywhere.
+#
+# Usage:
+#   ./ci.sh             build, test, fmt, clippy
+#   ./ci.sh --smoke     ... plus run every bench at smoke scale
+#                       (STAR_BENCH_SMOKE=1: ≤2k requests, ≤8 instances)
+#                       and validate every emitted BENCH_*.json
+#   ./ci.sh --no-lint   skip fmt/clippy (CI runs them as a separate job
+#                       so lint failures report independently of tests)
+#   STAR_BENCH_SMOKE=1 ./ci.sh   same as --smoke
+#
+# Every step is timed; on failure the script names the failing step
+# (build/test/fmt/clippy/smoke) so CI logs are triageable at a glance.
+set -uo pipefail
+cd "$(dirname "$0")/rust" || exit 1
 
-cargo build --release
-cargo test -q
-cargo fmt --check
-
-# Lint gate: state-layer refactors (ClusterState and friends) must stay
-# clippy-clean. One style allowance: the pervasive config idiom
-# `let mut exp = ExperimentConfig::default(); exp.field = v;` across
-# benches/tests is deliberate. Skipped only when the clippy component is
-# not installed on this toolchain.
-if cargo clippy --version >/dev/null 2>&1; then
-  cargo clippy --all-targets -- -D warnings -A clippy::field_reassign_with_default
-else
-  echo "ci.sh: cargo-clippy unavailable; lint gate skipped" >&2
+SMOKE=0
+LINT=1
+for arg in "$@"; do
+  case "$arg" in
+    --smoke) SMOKE=1 ;;
+    --no-lint) LINT=0 ;;
+    *)
+      echo "ci.sh: unknown argument \`$arg\` (supported: --smoke, --no-lint)" >&2
+      exit 2
+      ;;
+  esac
+done
+# any non-empty value other than "0" enables smoke mode — the same rule
+# the benches' smoke() helper applies, so the two can never disagree
+if [ -n "${STAR_BENCH_SMOKE:-}" ] && [ "${STAR_BENCH_SMOKE}" != "0" ]; then
+  SMOKE=1
 fi
+
+STEP_NAMES=()
+STEP_TIMES=()
+
+print_summary() {
+  echo ""
+  echo "---- ci.sh step timing ----"
+  local i
+  for i in "${!STEP_NAMES[@]}"; do
+    printf '  %-8s %5ss\n' "${STEP_NAMES[$i]}" "${STEP_TIMES[$i]}"
+  done
+}
+
+run_step() {
+  local name="$1"
+  shift
+  echo "==> [$name] $*"
+  local t0=$SECONDS
+  if ! "$@"; then
+    local dt=$(( SECONDS - t0 ))
+    STEP_NAMES+=("$name"); STEP_TIMES+=("$dt")
+    print_summary
+    echo "ci.sh: FAILED at step \`$name\` after ${dt}s" >&2
+    exit 1
+  fi
+  local dt=$(( SECONDS - t0 ))
+  STEP_NAMES+=("$name"); STEP_TIMES+=("$dt")
+}
+
+# Every benches/*.rs at reduced scale; all BENCH_*.json must parse and
+# carry schema_version (enforced through the shared writer in
+# src/bench/output.rs + `star validate-bench`).
+smoke_gate() {
+  rm -f BENCH_*.json
+  # derive the list from benches/*.rs so a newly added bench cannot
+  # silently escape the gate (an unregistered .rs fails `cargo bench`)
+  local benches=()
+  local f
+  for f in benches/*.rs; do
+    benches+=("$(basename "$f" .rs)")
+  done
+  if [ "${#benches[@]}" -eq 0 ]; then
+    echo "smoke: no benches/*.rs found" >&2
+    return 1
+  fi
+  local b
+  for b in "${benches[@]}"; do
+    echo "==> [smoke] cargo bench --bench $b"
+    if ! STAR_BENCH_SMOKE=1 cargo bench --bench "$b" > "/tmp/star_smoke_$b.log" 2>&1; then
+      echo "smoke: bench $b failed; last 40 log lines:" >&2
+      tail -n 40 "/tmp/star_smoke_$b.log" >&2
+      return 1
+    fi
+  done
+  local files=(BENCH_*.json)
+  if [ ! -e "${files[0]}" ]; then
+    echo "smoke: no BENCH_*.json emitted" >&2
+    return 1
+  fi
+  ./target/release/star validate-bench "${files[@]}"
+}
+
+run_step build cargo build --release
+run_step test cargo test -q
+
+if [ "$LINT" = "1" ]; then
+  run_step fmt cargo fmt --check
+  # Lint gate: state-layer refactors (ClusterState and friends) must stay
+  # clippy-clean. One style allowance: the pervasive config idiom
+  # `let mut exp = ExperimentConfig::default(); exp.field = v;` across
+  # benches/tests is deliberate. Skipped only when the clippy component is
+  # not installed on this toolchain.
+  if cargo clippy --version >/dev/null 2>&1; then
+    run_step clippy cargo clippy --all-targets -- -D warnings -A clippy::field_reassign_with_default
+  else
+    echo "ci.sh: cargo-clippy unavailable; lint gate skipped" >&2
+  fi
+fi
+
+if [ "$SMOKE" = "1" ]; then
+  run_step smoke smoke_gate
+fi
+
+print_summary
+echo "ci.sh: all steps passed"

@@ -26,6 +26,8 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+use star::bench::output::BenchJson;
+use star::bench::scenarios::smoke;
 use star::config::{ExperimentConfig, PredictorKind};
 use star::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use star::sim::{SimParams, Simulator, StateMode};
@@ -101,8 +103,14 @@ fn run_one(size: usize, n_requests: usize, mode: StateMode) -> Measure {
 
 fn main() {
     let fast = std::env::var("STAR_BENCH_FAST").is_ok();
-    let sizes: &[usize] = if fast { &[8, 16] } else { &[8, 64, 256] };
-    let n_requests = if fast { 2_000 } else { 50_000 };
+    let sizes: &[usize] = if smoke() {
+        &[8] // smoke gate: ≤8 instances
+    } else if fast {
+        &[8, 16]
+    } else {
+        &[8, 64, 256]
+    };
+    let n_requests = if smoke() || fast { 2_000 } else { 50_000 };
     let baseline_cap: usize = std::env::var("STAR_BENCH_BASELINE_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -129,34 +137,38 @@ fn main() {
         rows.push((size, inc, base, speedup));
     }
 
-    let mut json = String::new();
-    json.push_str("{\n  \"bench\": \"sim_core\",\n");
-    let _ = writeln!(
-        json,
-        "  \"description\": \"wall-clock per simulated request: incremental \
-         ClusterState views vs from-scratch snapshot rebuild per decision\","
-    );
-    let _ = writeln!(
-        json,
-        "  \"config\": {{\"dataset\": \"sharegpt\", \"rps_per_8_instances\": 0.5, \
-         \"kv_capacity_tokens\": 160000, \"max_batch\": 64, \"predictor\": \"oracle\", \
-         \"dispatch\": \"current_load\", \"reschedule\": \"star\", \"seed\": 53}},"
-    );
-    json.push_str("  \"results\": [\n");
+    let mut results = String::from("[\n");
     for (i, (size, inc, base, speedup)) in rows.iter().enumerate() {
         let _ = write!(
-            json,
+            results,
             "    {{\"instances\": {size}, \"incremental\": {}, \"from_scratch\": {}, \
              \"speedup_us_per_request\": {speedup:.2}}}",
             inc.json(),
             base.json()
         );
-        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+        results.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
-    json.push_str("  ]\n}\n");
+    results.push_str("  ]");
 
-    let out = std::env::var("STAR_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim_core.json".into());
-    std::fs::write(&out, &json).expect("write bench output");
-    println!("[bench_sim_core] wrote {out}");
-    println!("{json}");
+    let mut json = BenchJson::new(
+        "sim_core",
+        "wall-clock per simulated request: incremental ClusterState views vs \
+         from-scratch snapshot rebuild per decision",
+    );
+    json.field_raw(
+        "config",
+        "{\"dataset\": \"sharegpt\", \"rps_per_8_instances\": 0.5, \
+         \"kv_capacity_tokens\": 160000, \"max_batch\": 64, \"predictor\": \"oracle\", \
+         \"dispatch\": \"current_load\", \"reschedule\": \"star\", \"seed\": 53}",
+    );
+    json.field_raw("results", &results);
+    // back-compat: STAR_BENCH_OUT overrides the full output path
+    match std::env::var("STAR_BENCH_OUT") {
+        Ok(out) => {
+            std::fs::write(&out, json.render()).expect("write bench output");
+            println!("[bench_sim_core] wrote {out}");
+        }
+        Err(_) => json.write_or_die(),
+    }
+    println!("{}", json.render());
 }

@@ -3,6 +3,7 @@
 //! reading: vLLM shows bursty variance; rescheduling suppresses it;
 //! prediction brings it close to the oracle (paper: 0.78 ms^2 average).
 
+use star::bench::output::BenchJson;
 use star::bench::scenarios::{paper_scenarios, run_scenario, scaled, small_cluster, trace_for};
 use star::bench::Table;
 use star::workload::Dataset;
@@ -66,4 +67,12 @@ fn main() {
         "variance: vLLM {v:.2} -> STAR w/ pred {p:.2} -> oracle {o:.2} ms^2 \
          (paper: prediction lands close to oracle; oracle avg 0.78 ms^2 on 4090D)"
     );
+    let mut json = BenchJson::new(
+        "fig11_variance",
+        "exec-time variance over time on the small cluster, four systems",
+    );
+    json.field_int("requests", n as i64).field_num("rps", rps);
+    json.table("variance_over_time", &t);
+    json.table("summary", &summary);
+    json.write_or_die();
 }

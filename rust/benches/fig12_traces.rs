@@ -5,6 +5,7 @@
 //!
 //! TSV traces are written to artifacts/fig12_<system>.tsv for plotting.
 
+use star::bench::output::BenchJson;
 use star::bench::scenarios::{paper_scenarios, run_scenario, scaled, small_cluster, trace_for};
 use star::bench::Table;
 use star::workload::Dataset;
@@ -13,6 +14,11 @@ fn main() {
     let n = scaled(400);
     let rps = 0.14; // push the small cluster into the OOM regime
     let out_dir = star::runtime::artifacts_dir(None).ok();
+    let mut json = BenchJson::new(
+        "fig12_traces",
+        "KV saturation + OOM behaviour over time, small cluster, tight memory",
+    );
+    json.field_int("requests", n as i64).field_num("rps", rps);
 
     let mut summary = Table::new(
         "Fig 12 summary: KV saturation + OOM behaviour, small cluster",
@@ -71,6 +77,13 @@ fn main() {
             t.row(&[format!("{lo:.0}"), format!("{:.1}", mx * 100.0), ev]);
         }
         t.print();
+        json.table(
+            &format!(
+                "trace_{}",
+                sc.name.to_lowercase().replace([' ', '/'], "_")
+            ),
+            &t,
+        );
 
         if let Some(dir) = &out_dir {
             let path = dir.join(format!(
@@ -83,6 +96,8 @@ fn main() {
         }
     }
     summary.print();
+    json.table("summary", &summary);
+    json.write_or_die();
     println!(
         "paper claim: vLLM sits near saturation with repeated OOMs; STAR w/o pred cuts \
          them; STAR w/ pred + Oracle stay below the 99% threshold throughout"

@@ -4,20 +4,28 @@
 //! §5.2 complexity claim: scheduler decision time < 300 ms at 256
 //! instances.
 
-use star::bench::scenarios::{paper_scenarios, run_scenario, scaled};
+use star::bench::output::BenchJson;
+use star::bench::scenarios::{paper_scenarios, run_scenario, smoke};
 use star::bench::Table;
 use star::config::ExperimentConfig;
 use star::workload::{Dataset, TraceGen};
 
 fn main() {
     let fast = std::env::var("STAR_BENCH_FAST").is_ok();
-    let sizes: &[usize] = if fast {
+    let sizes: &[usize] = if smoke() {
+        &[8] // smoke gate: ≤8 instances
+    } else if fast {
         &[8, 16, 32]
     } else {
         &[8, 16, 32, 64, 128, 256]
     };
-    let duration = if fast { 150.0 } else { 300.0 };
-    let _ = scaled(0);
+    let duration = if smoke() {
+        60.0
+    } else if fast {
+        150.0
+    } else {
+        300.0
+    };
 
     let mut t = Table::new(
         "Fig 13: mean exec-time variance (ms^2) vs cluster size, 25 Gbps",
@@ -62,6 +70,13 @@ fn main() {
         );
     }
     t.print();
+    let mut json = BenchJson::new(
+        "fig13_scaling",
+        "mean exec-time variance vs cluster size (8..256 decode instances)",
+    );
+    json.field_num("duration_s", duration);
+    json.table("variance_vs_size", &t);
+    json.write_or_die();
     println!(
         "paper claims: (1) rescheduling improves load balance at every size; (2) \
          prediction stays close to oracle as the cluster scales; (3) scheduler \

@@ -1,15 +1,13 @@
 //! Fig. 2 + Table 2: output-length distribution of the synthetic traces,
 //! checked against the paper's published ShareGPT/Alpaca statistics.
 
+use star::bench::output::BenchJson;
+use star::bench::scenarios::scaled;
 use star::bench::Table;
 use star::workload::{Dataset, TraceGen, TraceStats};
 
 fn main() {
-    let n = if std::env::var("STAR_BENCH_FAST").is_ok() {
-        5_000
-    } else {
-        50_000
-    };
+    let n = scaled(50_000);
 
     // Table 2 reproduction
     let mut t = Table::new(
@@ -72,4 +70,13 @@ fn main() {
         ]);
     }
     h.print();
+
+    let mut json = BenchJson::new(
+        "fig2_workload",
+        "Table 2 / Fig 2: synthetic trace statistics vs the paper's published values",
+    );
+    json.field_int("requests_per_dataset", n as i64);
+    json.table("table2", &t);
+    json.table("fig2_histogram", &h);
+    json.write_or_die();
 }

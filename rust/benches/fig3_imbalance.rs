@@ -3,6 +3,7 @@
 //! rescheduling — the motivating imbalance. The paper's reading: initial
 //! balance degrades as long-output requests accumulate on one instance.
 
+use star::bench::output::BenchJson;
 use star::bench::scenarios::{scaled, sim_params, small_cluster};
 use star::bench::Table;
 use star::config::PredictorKind;
@@ -12,6 +13,11 @@ use star::workload::{Dataset, TraceGen};
 fn main() {
     let n = scaled(300);
     let rps = 0.1; // paper Fig 3 setting
+    let mut json = BenchJson::new(
+        "fig3_imbalance",
+        "per-instance decode-step latency over time under dispatch-only baselines",
+    );
+    json.field_int("requests", n as i64).field_num("rps", rps);
     for dispatch in ["round_robin", "current_load"] {
         let mut exp = small_cluster(Dataset::ShareGpt, rps, 11);
         exp.rescheduler.enabled = false;
@@ -73,5 +79,13 @@ fn main() {
             "paper claim: both dispatch-only policies diverge over time (TPOT spikes on \
              the instance holding long requests)\n"
         );
+        json.table(&format!("latency_{dispatch}"), &t);
+        json.field_num(
+            &format!("mean_exec_var_ms2_{dispatch}"),
+            report.exec_var.sample_mean(),
+        );
+        json.field_num(&format!("max_spread_ms_{dispatch}"), max_spread);
+        json.field_int(&format!("ooms_{dispatch}"), report.oom_events as i64);
     }
+    json.write_or_die();
 }

@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 
+use star::bench::output::{write_skipped, BenchJson};
 use star::bench::Table;
 use star::runtime::artifacts_dir;
 
@@ -14,11 +15,18 @@ fn main() {
         Ok(d) => d,
         Err(e) => {
             eprintln!("SKIP fig7: {e}");
+            write_skipped("fig7_continuous", &format!("artifacts not built: {e}"));
             return;
         }
     };
-    let eval = std::fs::read_to_string(dir.join("predictor_eval.tsv"))
-        .expect("predictor_eval.tsv (run `make artifacts`)");
+    let eval = match std::fs::read_to_string(dir.join("predictor_eval.tsv")) {
+        Ok(text) => text,
+        Err(e) => {
+            eprintln!("SKIP fig7: predictor_eval.tsv: {e} (run `make artifacts`)");
+            write_skipped("fig7_continuous", &format!("predictor_eval.tsv: {e}"));
+            return;
+        }
+    };
 
     // method -> (gen_tokens -> mae)
     let mut series: BTreeMap<String, BTreeMap<u64, f64>> = BTreeMap::new();
@@ -33,6 +41,7 @@ fn main() {
     }
     if series.is_empty() {
         eprintln!("no fig7 rows in predictor_eval.tsv");
+        write_skipped("fig7_continuous", "no fig7 rows in predictor_eval.tsv");
         return;
     }
     let buckets: Vec<u64> = series
@@ -63,6 +72,12 @@ fn main() {
         t.row(&row);
     }
     t.print();
+    let mut json = BenchJson::new(
+        "fig7_continuous",
+        "prediction MAE vs generated tokens (continuous-prediction payoff)",
+    );
+    json.table("mae_vs_generated", &t);
+    json.write_or_die();
 
     // shape checks mirroring the paper's reading of the figure
     for m in &methods {

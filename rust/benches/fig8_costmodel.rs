@@ -5,6 +5,8 @@
 
 use std::time::Instant;
 
+use star::bench::output::{write_skipped, BenchJson};
+use star::bench::scenarios::smoke;
 use star::bench::Table;
 use star::costmodel::fit_linear;
 use star::runtime::{artifacts_dir, StarRuntime};
@@ -14,12 +16,26 @@ fn main() {
         Ok(d) => d,
         Err(e) => {
             eprintln!("SKIP fig8: {e}");
+            write_skipped("fig8_costmodel", &format!("artifacts not built: {e}"));
             return;
         }
     };
-    let rt = StarRuntime::load(&dir).expect("load artifacts");
+    let rt = match StarRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP fig8: artifacts load failed: {e}");
+            write_skipped("fig8_costmodel", &format!("artifacts load failed: {e}"));
+            return;
+        }
+    };
     let bucket = *rt.meta.decode_buckets.last().unwrap();
-    let reps = if std::env::var("STAR_BENCH_FAST").is_ok() { 5 } else { 20 };
+    let reps = if smoke() {
+        3
+    } else if std::env::var("STAR_BENCH_FAST").is_ok() {
+        5
+    } else {
+        20
+    };
 
     // Build a full batch where every sequence has `len` tokens of KV, then
     // time one decode step. Total batched tokens = bucket * len.
@@ -78,4 +94,15 @@ fn main() {
     let body = format!("base_s={a:.9}\nper_token_s={b:.3e}\nr2={r2:.6}\n");
     std::fs::write(&path, body).expect("write calibration");
     println!("calibration written to {}", path.display());
+
+    let mut json = BenchJson::new(
+        "fig8_costmodel",
+        "decode iteration time vs batched tokens on the real stack (linear-fit calibration)",
+    );
+    json.table("iter_cost", &table);
+    json.field_num("fit_base_s", a)
+        .field_num("fit_per_token_s", b)
+        .field_num("fit_r2", r2)
+        .field_int("reps", reps as i64);
+    json.write_or_die();
 }

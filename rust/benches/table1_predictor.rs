@@ -8,6 +8,8 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use star::bench::output::{write_skipped, BenchJson};
+use star::bench::scenarios::smoke;
 use star::bench::Table;
 use star::runtime::{artifacts_dir, StarRuntime};
 
@@ -16,11 +18,18 @@ fn main() {
         Ok(d) => d,
         Err(e) => {
             eprintln!("SKIP table1: {e}");
+            write_skipped("table1_predictor", &format!("artifacts not built: {e}"));
             return;
         }
     };
-    let eval = std::fs::read_to_string(dir.join("predictor_eval.tsv"))
-        .expect("predictor_eval.tsv (run `make artifacts`)");
+    let eval = match std::fs::read_to_string(dir.join("predictor_eval.tsv")) {
+        Ok(text) => text,
+        Err(e) => {
+            eprintln!("SKIP table1: predictor_eval.tsv: {e} (run `make artifacts`)");
+            write_skipped("table1_predictor", &format!("predictor_eval.tsv: {e}"));
+            return;
+        }
+    };
 
     // parse the python-side eval
     let mut table1: Vec<(String, String, String, String)> = Vec::new(); // name, params, train, mae
@@ -44,9 +53,22 @@ fn main() {
     }
 
     // measure the rust-side LLM-native predictor latency (batch 1 and 10)
-    let rt = StarRuntime::load(&dir).expect("load artifacts");
+    let rt = match StarRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP table1: artifacts load failed: {e}");
+            write_skipped("table1_predictor", &format!("artifacts load failed: {e}"));
+            return;
+        }
+    };
     let d = rt.meta.predictor_d_in;
-    let reps = if std::env::var("STAR_BENCH_FAST").is_ok() { 50 } else { 300 };
+    let reps = if smoke() {
+        20
+    } else if std::env::var("STAR_BENCH_FAST").is_ok() {
+        50
+    } else {
+        300
+    };
     let mut rust_lat = HashMap::new();
     for bsz in [1usize, 10] {
         let hidden = vec![0.1f32; bsz * d];
@@ -105,6 +127,13 @@ fn main() {
         ]);
     }
     t.print();
+    let mut json = BenchJson::new(
+        "table1_predictor",
+        "prediction-method comparison: params/train/MAE from build-time eval, latency re-measured",
+    );
+    json.field_int("latency_reps", reps as i64);
+    json.table("table1", &t);
+    json.write_or_die();
 
     // paper headline ratios
     let get_mae = |n: &str| {

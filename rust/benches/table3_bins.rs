@@ -3,6 +3,7 @@
 //! large cluster. Paper reading: 6-bin retains most of the benefit;
 //! 2-bin is nearly indistinguishable from no prediction.
 
+use star::bench::output::BenchJson;
 use star::bench::scenarios::{large_cluster, scaled, sim_params, trace_for};
 use star::bench::Table;
 use star::config::PredictorKind;
@@ -65,6 +66,13 @@ fn main() {
         ]);
     }
     t.print();
+    let mut json = BenchJson::new(
+        "table3_bins",
+        "prediction-granularity sensitivity: full vs 6/4/2-bin vs none",
+    );
+    json.field_int("requests", n as i64).field_num("rps", rps);
+    json.table("table3", &t);
+    json.write_or_die();
     println!(
         "paper: Full 0.163/26.49/0.157; 6-bin keeps most of the benefit; \
          2-bin ~= No pred. (0.302 vs 0.322 exec var). The *ordering* and the \

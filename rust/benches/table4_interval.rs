@@ -3,6 +3,7 @@
 //! Paper reading: k=20 wins; k=1 pays prediction overhead and triggers
 //! jittery migrations; k=100 goes stale.
 
+use star::bench::output::BenchJson;
 use star::bench::scenarios::{large_cluster, scaled, sim_params, trace_for};
 use star::bench::Table;
 use star::config::PredictorKind;
@@ -71,6 +72,13 @@ fn main() {
         ]);
     }
     t.print();
+    let mut json = BenchJson::new(
+        "table4_interval",
+        "reprediction-interval tradeoff: every 1/20/100 iterations vs none",
+    );
+    json.field_int("requests", n as i64).field_num("rps", rps);
+    json.table("table4", &t);
+    json.write_or_die();
     println!(
         "paper: 20-iter interval is best (goodput 0.157 vs 0.148 @1 / 0.145 @100 / \
          0.142 none); the inverted-U over k is the claim under test"

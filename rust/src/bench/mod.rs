@@ -4,6 +4,8 @@
 //! timed sections plus [`Table`] to print the paper's rows. Every bench
 //! binary regenerates one paper table/figure (DESIGN.md §4).
 
+pub mod json;
+pub mod output;
 pub mod scenarios;
 
 use std::time::{Duration, Instant};
@@ -153,6 +155,14 @@ impl Table {
 
     pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
         self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
     }
 
     pub fn render(&self) -> String {

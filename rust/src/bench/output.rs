@@ -1,0 +1,206 @@
+//! Shared bench JSON writer: ALL `BENCH_*.json` emission goes through
+//! [`BenchJson`], so the CI smoke gate can enforce one invariant — every
+//! emitted file parses and carries `schema_version` (checked by
+//! `star validate-bench`, see `super::json`).
+//!
+//! Output lands in the current directory (benches run from `rust/`), or
+//! `$STAR_BENCH_DIR` when set.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use super::Table;
+
+/// Version of the shared bench-JSON envelope. Bump when the envelope
+/// fields (`schema_version`/`bench`/`description`) change meaning.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Builder for one bench's JSON output. Field order is preserved; the
+/// envelope (`schema_version`, `bench`, `description`) is always first.
+pub struct BenchJson {
+    name: String,
+    /// (key, pre-rendered JSON value)
+    fields: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str, description: &str) -> BenchJson {
+        let mut b = BenchJson {
+            name: name.to_string(),
+            fields: Vec::new(),
+        };
+        b.field_raw("schema_version", &SCHEMA_VERSION.to_string());
+        b.field_str("bench", name);
+        b.field_str("description", description);
+        b
+    }
+
+    pub fn field_str(&mut self, key: &str, val: &str) -> &mut Self {
+        let rendered = format!("\"{}\"", escape_json(val));
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    pub fn field_num(&mut self, key: &str, val: f64) -> &mut Self {
+        let rendered = if val.is_finite() {
+            format!("{val}")
+        } else {
+            "null".to_string()
+        };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    pub fn field_int(&mut self, key: &str, val: i64) -> &mut Self {
+        self.fields.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    pub fn field_bool(&mut self, key: &str, val: bool) -> &mut Self {
+        self.fields.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    /// Attach caller-rendered JSON (arrays / nested objects). The smoke
+    /// gate re-parses the whole file, so malformed raw JSON fails CI.
+    pub fn field_raw(&mut self, key: &str, raw_json: &str) -> &mut Self {
+        self.fields.push((key.to_string(), raw_json.to_string()));
+        self
+    }
+
+    /// Attach a printed [`Table`] as `{"title", "header", "rows"}` (rows
+    /// are arrays of strings — bench tables mix numbers and annotations).
+    pub fn table(&mut self, key: &str, t: &Table) -> &mut Self {
+        let mut s = String::new();
+        let _ = write!(s, "{{\"title\": \"{}\", \"header\": ", escape_json(&t.title));
+        push_str_array(&mut s, t.header());
+        s.push_str(", \"rows\": [");
+        for (i, row) in t.rows().iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            push_str_array(&mut s, row);
+        }
+        s.push_str("]}");
+        self.field_raw(key, &s)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            let _ = write!(out, "  \"{}\": {v}", escape_json(k));
+            out.push_str(if i + 1 < self.fields.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` into `$STAR_BENCH_DIR` (default: cwd).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("STAR_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+
+    /// Write and report, panicking on I/O failure (bench binaries have no
+    /// error channel beyond their exit code).
+    pub fn write_or_die(&self) {
+        match self.write() {
+            Ok(path) => println!("[{}] bench JSON -> {}", self.name, path.display()),
+            Err(e) => panic!("write BENCH_{}.json: {e}", self.name),
+        }
+    }
+}
+
+/// Emit the envelope for a bench that cannot run in this environment
+/// (e.g. artifacts not built): the smoke gate still sees a valid file.
+pub fn write_skipped(name: &str, reason: &str) {
+    let mut b = BenchJson::new(name, reason);
+    b.field_bool("skipped", true);
+    b.write_or_die();
+}
+
+fn push_str_array(out: &mut String, cells: &[String]) {
+    out.push('[');
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{}\"", escape_json(c));
+    }
+    out.push(']');
+}
+
+/// JSON string escaping (quotes, backslashes, control characters).
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::json::{validate_bench_json, Json};
+    use super::*;
+
+    #[test]
+    fn rendered_output_passes_the_smoke_invariant() {
+        let mut b = BenchJson::new("unit_test", "writer \"self\"-test\nline2");
+        b.field_num("value", 1.5)
+            .field_num("nan_becomes_null", f64::NAN)
+            .field_int("count", -3)
+            .field_bool("flag", true)
+            .field_raw("nested", "{\"a\": [1, 2]}");
+        let mut t = Table::new("demo", &["col a", "col\"b"]);
+        t.row(&["1".into(), "x\ty".into()]);
+        b.table("table", &t);
+        let text = b.render();
+        validate_bench_json(&text).expect("smoke invariant");
+        let v = super::super::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench"), Some(&Json::Str("unit_test".to_string())));
+        assert_eq!(v.get("schema_version"), Some(&Json::Num(1.0)));
+        assert_eq!(v.get("nan_becomes_null"), Some(&Json::Null));
+        assert_eq!(v.get("count"), Some(&Json::Num(-3.0)));
+        let table = v.get("table").unwrap();
+        assert_eq!(table.get("title"), Some(&Json::Str("demo".to_string())));
+        match table.get("rows") {
+            Some(Json::Arr(rows)) => assert_eq!(rows.len(), 1),
+            other => panic!("rows missing: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn writes_to_bench_dir_and_skipped_envelope_is_valid() {
+        // one test (not two) because STAR_BENCH_DIR is process-global and
+        // the default harness runs tests concurrently
+        let dir = std::env::temp_dir().join("star_bench_out_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("STAR_BENCH_DIR", &dir);
+        let mut b = BenchJson::new("dir_test", "d");
+        b.field_int("x", 1);
+        let path = b.write().unwrap();
+        write_skipped("skip_test", "artifacts not built");
+        std::env::remove_var("STAR_BENCH_DIR");
+        assert!(path.starts_with(&dir));
+        let text = std::fs::read_to_string(&path).unwrap();
+        validate_bench_json(&text).unwrap();
+        let skip_text = std::fs::read_to_string(dir.join("BENCH_skip_test.json")).unwrap();
+        validate_bench_json(&skip_text).unwrap();
+        assert!(skip_text.contains("\"skipped\": true"));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(dir.join("BENCH_skip_test.json")).ok();
+    }
+}

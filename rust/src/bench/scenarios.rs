@@ -1,11 +1,20 @@
 //! Shared experiment scenarios for the paper-reproduction benches: the
-//! four evaluated systems (paper §6.1 baselines) and the two cluster
-//! shapes, so every bench runs the same definitions.
+//! four evaluated systems (paper §6.1 baselines), the two cluster shapes,
+//! and the **named workload-scenario registry** (`--scenario`,
+//! [`ScenarioRegistry`]) that selects arrival process × class mix ×
+//! session shape by string, mirroring `coordinator::PolicyRegistry`.
+
+use std::collections::BTreeMap;
 
 use crate::config::{ExperimentConfig, PredictorKind};
+use crate::coordinator::PolicyRegistry;
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::sim::{SimParams, SimReport, Simulator};
-use crate::workload::{Dataset, Request, TraceGen};
+use crate::workload::{
+    ArrivalProcess, ClassMix, ClassSpec, Dataset, Request, ScenarioSpec, ScenarioTrace,
+    SessionProfile, TraceGen,
+};
+use crate::{Error, Result};
 
 /// One evaluated system from the paper's §6.1 baseline list.
 #[derive(Clone, Copy, Debug)]
@@ -128,11 +137,175 @@ pub fn llm_native_rel_err() -> f64 {
     }
 }
 
-/// Bench-size knob: `STAR_BENCH_FAST=1` shrinks run lengths ~5x.
+/// CI smoke mode (`ci.sh --smoke` exports `STAR_BENCH_SMOKE=1`): every
+/// bench runs at drastically reduced scale (≤2k requests, ≤8 instances)
+/// so the whole suite plus JSON validation finishes in minutes.
+/// `STAR_BENCH_SMOKE=0` (or empty) means OFF, matching ci.sh's check —
+/// an explicit opt-out must not silently produce smoke-scale numbers.
+pub fn smoke() -> bool {
+    matches!(std::env::var("STAR_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Bench-size knob: `STAR_BENCH_SMOKE=1` shrinks run lengths ~10x (hard
+/// cap 2k), `STAR_BENCH_FAST=1` ~5x.
 pub fn scaled(n: usize) -> usize {
-    if std::env::var("STAR_BENCH_FAST").is_ok() {
+    if smoke() {
+        (n / 10).clamp(20, 2_000)
+    } else if std::env::var("STAR_BENCH_FAST").is_ok() {
         (n / 5).max(20)
     } else {
         n
+    }
+}
+
+/// Run one paper-system scenario over a full workload-scenario trace
+/// (sessions included) — the scenario-diversity counterpart of
+/// [`run_scenario`].
+pub fn run_scenario_trace(
+    scenario: Scenario,
+    mut exp: ExperimentConfig,
+    h800: bool,
+    trace: &ScenarioTrace,
+) -> SimReport {
+    exp.rescheduler.enabled = scenario.rescheduling;
+    exp.predictor = scenario.predictor;
+    Simulator::with_scenario(
+        sim_params(exp, h800),
+        trace.clone(),
+        &PolicyRegistry::with_builtins(),
+    )
+    .expect("builtin policy construction")
+    .run()
+}
+
+// ---------------------------------------------------------------------
+// named workload scenarios
+
+type ScenarioBuilder = fn(&ExperimentConfig) -> ScenarioSpec;
+
+/// String-keyed registry of workload scenarios, mirroring
+/// [`PolicyRegistry`]: benches, tests, and the CLI (`--scenario`) select
+/// scenarios by name. Builders read the experiment's `cluster.rps` /
+/// `cluster.dataset` so one name scales across cluster shapes.
+pub struct ScenarioRegistry {
+    builders: BTreeMap<String, ScenarioBuilder>,
+}
+
+impl ScenarioRegistry {
+    /// Registry with the builtin scenario set.
+    pub fn with_builtins() -> ScenarioRegistry {
+        let mut r = ScenarioRegistry {
+            builders: BTreeMap::new(),
+        };
+        r.register("stationary", build_stationary);
+        r.register("bursty_mixed", build_bursty_mixed);
+        r.register("diurnal_chat", build_diurnal_chat);
+        r.register("multi_round", build_multi_round);
+        r
+    }
+
+    pub fn register(&mut self, name: &str, builder: ScenarioBuilder) {
+        self.builders.insert(name.to_string(), builder);
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.builders.keys().cloned().collect()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.builders.contains_key(name)
+    }
+
+    pub fn build(&self, name: &str, exp: &ExperimentConfig) -> Result<ScenarioSpec> {
+        match self.builders.get(name) {
+            Some(b) => {
+                let mut spec = b(exp);
+                spec.name = name.to_string();
+                spec.validate()?;
+                Ok(spec)
+            }
+            None => Err(Error::config(format!(
+                "unknown scenario `{name}` (known: {})",
+                self.names().join("|")
+            ))),
+        }
+    }
+}
+
+/// Resolve an experiment's workload scenario: explicit `[workload.*]`
+/// tables win, then a registry name (`--scenario` / `workload.scenario`),
+/// else `None` (legacy stationary `TraceGen` synthesis).
+pub fn resolve_scenario(exp: &ExperimentConfig) -> Result<Option<ScenarioSpec>> {
+    if let Some(spec) = &exp.scenario {
+        spec.validate()?;
+        return Ok(Some(spec.clone()));
+    }
+    if let Some(name) = &exp.scenario_name {
+        return ScenarioRegistry::with_builtins().build(name, exp).map(Some);
+    }
+    Ok(None)
+}
+
+fn build_stationary(exp: &ExperimentConfig) -> ScenarioSpec {
+    ScenarioSpec::stationary(exp.cluster.dataset, exp.cluster.rps)
+}
+
+/// On/off bursts over the three-class production mix. Rates are chosen so
+/// the long-run mean equals `cluster.rps`:
+/// (2.5·rps·20 s + 0.25·rps·40 s) / 60 s = rps.
+fn build_bursty_mixed(exp: &ExperimentConfig) -> ScenarioSpec {
+    let rps = exp.cluster.rps;
+    ScenarioSpec {
+        name: "bursty_mixed".to_string(),
+        arrival: ArrivalProcess::OnOff {
+            rps_on: rps * 2.5,
+            rps_off: rps * 0.25,
+            mean_on_s: 20.0,
+            mean_off_s: 40.0,
+        },
+        classes: ClassMix::mixed_default(),
+        sessions: None,
+        pico_scale: None,
+    }
+}
+
+/// Slow diurnal ramp (mean = `cluster.rps`) over a chat-heavy mix.
+fn build_diurnal_chat(exp: &ExperimentConfig) -> ScenarioSpec {
+    let rps = exp.cluster.rps;
+    let mut chat = ClassSpec::chat();
+    chat.weight = 0.8;
+    let mut summ = ClassSpec::summarization();
+    summ.weight = 0.2;
+    ScenarioSpec {
+        name: "diurnal_chat".to_string(),
+        arrival: ArrivalProcess::Diurnal {
+            base_rps: rps * 0.5,
+            peak_rps: rps * 1.5,
+            period_s: 600.0,
+        },
+        classes: ClassMix::new(vec![chat, summ]).expect("builtin mix"),
+        sessions: None,
+        pico_scale: None,
+    }
+}
+
+/// Multi-round conversations over the mixed classes: 60% of initial
+/// requests open a 2–4 turn session whose later turns re-arrive with the
+/// accumulated context (arXiv:2602.14516's setting).
+fn build_multi_round(exp: &ExperimentConfig) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "multi_round".to_string(),
+        arrival: ArrivalProcess::Poisson {
+            rps: exp.cluster.rps,
+        },
+        classes: ClassMix::mixed_default(),
+        sessions: Some(SessionProfile {
+            session_frac: 0.6,
+            min_turns: 2,
+            max_turns: 4,
+            think_mean_s: 5.0,
+            max_context_tokens: 32_768,
+        }),
+        pico_scale: None,
     }
 }

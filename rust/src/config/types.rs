@@ -3,7 +3,9 @@
 use std::collections::BTreeMap;
 
 use super::{Config, Value};
-use crate::workload::Dataset;
+use crate::workload::{
+    ArrivalProcess, ClassMix, ClassSpec, Dataset, ScenarioSpec, SessionProfile,
+};
 use crate::{Error, Result};
 
 /// Which remaining-length predictor drives the rescheduler.
@@ -159,6 +161,16 @@ pub struct ExperimentConfig {
     /// except the two names above, with the `policy.` prefix stripped
     /// (e.g. `policy.slo_aware.mem_weight = 2.0`).
     pub policy_params: BTreeMap<String, f64>,
+    /// Named workload scenario (config key `workload.scenario` or CLI
+    /// `--scenario`), resolved against the scenario registry
+    /// (`bench::scenarios::ScenarioRegistry`) by the drivers. Explicit
+    /// `[workload.*]` tables ([`Self::scenario`]) take precedence.
+    pub scenario_name: Option<String>,
+    /// Fully-specified scenario assembled from `[workload.arrival]`,
+    /// `[workload.class.*]`, and `[workload.session]` tables. `None` =
+    /// legacy stationary single-class synthesis from `cluster.dataset` /
+    /// `cluster.rps`.
+    pub scenario: Option<ScenarioSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -172,6 +184,8 @@ impl Default for ExperimentConfig {
             dispatch_policy: "current_load".to_string(),
             reschedule_policy: "star".to_string(),
             policy_params: BTreeMap::new(),
+            scenario_name: None,
+            scenario: None,
         }
     }
 }
@@ -236,6 +250,12 @@ impl ExperimentConfig {
                 }
             }
         }
+        let scenario_name = match cfg.get("workload.scenario") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(_) => return Err(Error::config("workload.scenario must be a string")),
+            None => None,
+        };
+        let scenario = scenario_from_config(cfg, &cluster)?;
         Ok(ExperimentConfig {
             cluster,
             rescheduler,
@@ -247,7 +267,20 @@ impl ExperimentConfig {
                 .str_or("policy.reschedule", &ed.reschedule_policy)
                 .to_string(),
             policy_params,
+            scenario_name,
+            scenario,
         })
+    }
+
+    /// Re-assemble [`Self::scenario`] from `cfg`'s `[workload.*]` tables
+    /// against the CURRENT cluster settings. Drivers call this after
+    /// applying CLI overrides (`--rps`, `--dataset`): table defaults
+    /// derived from `cluster.rps` / `cluster.dataset` must track the
+    /// final values, not the ones frozen at config-parse time ("CLI flags
+    /// win").
+    pub fn rebuild_scenario(&mut self, cfg: &Config) -> Result<()> {
+        self.scenario = scenario_from_config(cfg, &self.cluster)?;
+        Ok(())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -271,6 +304,9 @@ impl ExperimentConfig {
         }
         if self.rescheduler.default_remaining <= 0.0 {
             return Err(Error::config("default_remaining must be > 0"));
+        }
+        if let Some(spec) = &self.scenario {
+            spec.validate()?;
         }
         // policy names are resolved against the *builtin* registry here;
         // custom registries bypass validate() and surface unknown names
@@ -317,6 +353,137 @@ impl Default for PredictorKind {
     fn default() -> Self {
         PredictorKind::Oracle
     }
+}
+
+/// Assemble a [`ScenarioSpec`] from the `[workload.*]` tables, or `None`
+/// when no such table is present (the legacy stationary path). Class
+/// tables start from the builtin per-class profiles and override fields;
+/// classes without a table are absent from the mix.
+fn scenario_from_config(cfg: &Config, cluster: &ClusterConfig) -> Result<Option<ScenarioSpec>> {
+    let has_prefix = |p: &str| cfg.keys().any(|k| k.starts_with(p));
+    if !has_prefix("workload.arrival.")
+        && !has_prefix("workload.class.")
+        && !has_prefix("workload.session.")
+    {
+        return Ok(None);
+    }
+
+    let kind = cfg
+        .str_or("workload.arrival.kind", "poisson")
+        .to_ascii_lowercase();
+    let rps = cfg.f64_or("workload.arrival.rps", cluster.rps);
+    let arrival = match kind.as_str() {
+        "poisson" => ArrivalProcess::Poisson { rps },
+        "onoff" | "on_off" | "bursty" => ArrivalProcess::OnOff {
+            rps_on: cfg.f64_or("workload.arrival.rps_on", rps * 2.5),
+            rps_off: cfg.f64_or("workload.arrival.rps_off", rps * 0.25),
+            mean_on_s: cfg.f64_or("workload.arrival.mean_on_s", 20.0),
+            mean_off_s: cfg.f64_or("workload.arrival.mean_off_s", 40.0),
+        },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base_rps: cfg.f64_or("workload.arrival.base_rps", rps * 0.5),
+            peak_rps: cfg.f64_or("workload.arrival.peak_rps", rps * 1.5),
+            period_s: cfg.f64_or("workload.arrival.period_s", 600.0),
+        },
+        "replay" => {
+            let path = cfg.str_or("workload.arrival.path", "");
+            if path.is_empty() {
+                return Err(Error::config(
+                    "workload.arrival.path is required for kind = \"replay\"",
+                ));
+            }
+            ArrivalProcess::from_file(std::path::Path::new(path))?
+        }
+        other => {
+            return Err(Error::config(format!(
+                "unknown workload.arrival.kind `{other}` (known: poisson|onoff|diurnal|replay)"
+            )))
+        }
+    };
+
+    // unknown class-table names fail loudly (same rule as --scenario /
+    // --dataset / arrival.kind): a typoed or aliased table would
+    // otherwise be silently dropped and the run would use a different
+    // workload than configured. Canonical names only — aliases accepted
+    // by `RequestClass::parse` would still be skipped by the loop below.
+    for full_key in cfg.keys() {
+        let Some(rest) = full_key.strip_prefix("workload.class.") else {
+            continue;
+        };
+        let name = rest.split('.').next().unwrap_or(rest);
+        if !crate::workload::RequestClass::ALL
+            .iter()
+            .any(|c| c.name() == name)
+        {
+            return Err(Error::config(format!(
+                "unknown workload.class table `{name}` (known: chat|reasoning|summarization)"
+            )));
+        }
+    }
+    let mut specs = Vec::new();
+    for class in crate::workload::RequestClass::ALL {
+        let prefix = format!("workload.class.{}.", class.name());
+        if !has_prefix(&prefix) {
+            continue;
+        }
+        let key = |k: &str| format!("{prefix}{k}");
+        let mut s = ClassSpec::builtin(class);
+        s.weight = cfg.f64_or(&key("weight"), s.weight);
+        s.slo.ttft_s = cfg.f64_or(&key("slo_ttft_s"), s.slo.ttft_s);
+        s.slo.tpot_s = cfg.f64_or(&key("slo_tpot_s"), s.slo.tpot_s);
+        s.lengths.out_mu = cfg.f64_or(&key("out_mu"), s.lengths.out_mu);
+        s.lengths.out_sigma = cfg.f64_or(&key("out_sigma"), s.lengths.out_sigma);
+        s.lengths.cap_frac = cfg.f64_or(&key("cap_frac"), s.lengths.cap_frac);
+        s.lengths.in_mu = cfg.f64_or(&key("in_mu"), s.lengths.in_mu);
+        s.lengths.in_sigma = cfg.f64_or(&key("in_sigma"), s.lengths.in_sigma);
+        // caps are cast to u32: reject values a bare `as u32` would wrap
+        // (negative) or that panic downstream (zero makes clamp(1, cap)
+        // assert in sample_output)
+        let cap = cfg.i64_or(&key("cap"), s.lengths.cap as i64);
+        let in_cap = cfg.i64_or(&key("in_cap"), s.lengths.in_cap as i64);
+        if !(1..=u32::MAX as i64).contains(&cap) || !(1..=u32::MAX as i64).contains(&in_cap) {
+            return Err(Error::config(format!(
+                "workload.class.{}: cap/in_cap must be in [1, {}]",
+                class.name(),
+                u32::MAX
+            )));
+        }
+        s.lengths.cap = cap as u32;
+        s.lengths.in_cap = in_cap as u32;
+        specs.push(s);
+    }
+    let classes = if specs.is_empty() {
+        ClassMix::single(ClassSpec::dataset(cluster.dataset))
+    } else {
+        ClassMix::new(specs)?
+    };
+
+    let sessions = if has_prefix("workload.session.")
+        && cfg.bool_or("workload.session.enabled", true)
+    {
+        let d = SessionProfile::default();
+        Some(SessionProfile {
+            session_frac: cfg.f64_or("workload.session.frac", d.session_frac),
+            min_turns: cfg.i64_or("workload.session.min_turns", d.min_turns as i64) as u32,
+            max_turns: cfg.i64_or("workload.session.max_turns", d.max_turns as i64) as u32,
+            think_mean_s: cfg.f64_or("workload.session.think_mean_s", d.think_mean_s),
+            max_context_tokens: cfg
+                .i64_or("workload.session.max_context", d.max_context_tokens as i64)
+                as u32,
+        })
+    } else {
+        None
+    };
+
+    let spec = ScenarioSpec {
+        name: "custom".to_string(),
+        arrival,
+        classes,
+        sessions,
+        pico_scale: None,
+    };
+    spec.validate()?;
+    Ok(Some(spec))
 }
 
 #[cfg(test)]
@@ -404,6 +571,85 @@ mod tests {
             Some(&0.9)
         );
         exp.validate().unwrap();
+    }
+
+    #[test]
+    fn workload_tables_build_a_scenario() {
+        use crate::workload::{ArrivalProcess, RequestClass};
+        let cfg = Config::from_str(
+            "[workload]\nscenario = \"bursty_mixed\"\n\
+             [workload.arrival]\nkind = \"onoff\"\nrps_on = 2.0\nrps_off = 0.1\n\
+             mean_on_s = 10\nmean_off_s = 30\n\
+             [workload.class.chat]\nweight = 0.7\nslo_tpot_s = 0.030\n\
+             [workload.class.reasoning]\nweight = 0.3\n\
+             [workload.session]\nfrac = 0.4\nmax_turns = 5\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.scenario_name.as_deref(), Some("bursty_mixed"));
+        let spec = exp.scenario.as_ref().expect("workload tables present");
+        assert_eq!(
+            spec.arrival,
+            ArrivalProcess::OnOff {
+                rps_on: 2.0,
+                rps_off: 0.1,
+                mean_on_s: 10.0,
+                mean_off_s: 30.0,
+            }
+        );
+        assert_eq!(spec.classes.specs().len(), 2);
+        let chat = spec.classes.spec_of(RequestClass::Chat).unwrap();
+        assert!((chat.weight - 0.7).abs() < 1e-12);
+        assert!((chat.slo.tpot_s - 0.030).abs() < 1e-12);
+        let sessions = spec.sessions.as_ref().unwrap();
+        assert!((sessions.session_frac - 0.4).abs() < 1e-12);
+        assert_eq!(sessions.max_turns, 5);
+        exp.validate().unwrap();
+    }
+
+    #[test]
+    fn workload_tables_absent_means_no_scenario() {
+        let cfg = Config::from_str("[cluster]\nrps = 0.5\n").unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!(exp.scenario.is_none());
+        assert!(exp.scenario_name.is_none());
+    }
+
+    #[test]
+    fn bad_arrival_kind_is_rejected_with_names() {
+        let cfg = Config::from_str("[workload.arrival]\nkind = \"lunar\"\n").unwrap();
+        let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("poisson|onoff|diurnal|replay"), "{err}");
+    }
+
+    #[test]
+    fn unknown_class_table_is_rejected_with_names() {
+        // typo
+        let cfg = Config::from_str("[workload.class.reasonning]\nweight = 0.5\n").unwrap();
+        let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown workload.class table `reasonning`"), "{err}");
+        assert!(err.contains("chat|reasoning|summarization"), "{err}");
+        // alias: RequestClass::parse accepts "summary", but the table
+        // loop probes canonical names only — must error, not silently drop
+        let cfg = Config::from_str("[workload.class.summary]\nweight = 0.5\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn degenerate_class_caps_error_instead_of_panicking() {
+        for bad in ["cap = 0", "cap = -1", "in_cap = 0"] {
+            let cfg =
+                Config::from_str(&format!("[workload.class.chat]\n{bad}\n")).unwrap();
+            let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains("cap/in_cap"), "{bad}: {err}");
+        }
+        // out-of-band SLO / sigma values are caught by spec validation
+        let cfg =
+            Config::from_str("[workload.class.chat]\nslo_tpot_s = 0.0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg =
+            Config::from_str("[workload.class.chat]\nout_sigma = -1.0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
     }
 
     #[test]

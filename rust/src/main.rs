@@ -1,16 +1,19 @@
 //! `star` — CLI launcher for the STAR serving stack.
 //!
 //! Subcommands:
-//!   check      load + smoke-test the AOT artifacts
-//!   workload   print Table-2-style statistics for a synthetic trace
-//!   simulate   run the event-driven cluster simulator (paper §6.3)
-//!   serve      run the live PD-disaggregated server on star-pico
+//!   check           load + smoke-test the AOT artifacts
+//!   workload        print Table-2-style statistics for a synthetic trace
+//!   simulate        run the event-driven cluster simulator (paper §6.3)
+//!   serve           run the live PD-disaggregated server on star-pico
+//!   validate-bench  assert BENCH_*.json files parse and carry
+//!                   schema_version (the ci.sh --smoke gate)
 //!
 //! Most options can also be set from a TOML config (`--config path`) with
 //! CLI flags winning.
 
 use std::sync::Arc;
 
+use star::bench::scenarios::{resolve_scenario, ScenarioRegistry};
 use star::cli::{Args, Spec};
 use star::config::{Config, ExperimentConfig, PredictorKind};
 use star::coordinator::PolicyRegistry;
@@ -18,7 +21,7 @@ use star::metrics::Slo;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
 use star::sim::{SimParams, Simulator};
-use star::workload::{Dataset, TraceGen, TraceStats};
+use star::workload::{Dataset, ScenarioTrace, TraceGen, TraceStats};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +38,7 @@ fn main() {
         "workload" => run_workload(&args),
         "simulate" => run_simulate(&args),
         "serve" => run_serve(&args),
+        "validate-bench" => run_validate_bench(&args),
         "" | "help" => {
             println!("{}", spec.render_help());
             Ok(())
@@ -77,6 +81,11 @@ fn spec() -> Spec {
                 "name",
                 "star | memory_pressure | none (registry name)",
             ),
+            (
+                "scenario",
+                "name",
+                "workload scenario: stationary | bursty_mixed | diurnal_chat | multi_round",
+            ),
             ("predictor", "name", "none|oracle|llm_native|2bin|4bin|6bin"),
             ("interval", "s", "rescheduler interval seconds"),
             ("seed", "n", "PRNG seed"),
@@ -116,8 +125,7 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     }
     let mut exp = ExperimentConfig::from_config(&cfg)?;
     if let Some(d) = args.opt("dataset") {
-        exp.cluster.dataset = Dataset::parse(d)
-            .ok_or_else(|| star::Error::Cli(format!("bad dataset `{d}`")))?;
+        exp.cluster.dataset = Dataset::parse(d).ok_or_else(|| bad_dataset(d))?;
     }
     exp.cluster.rps = args.opt_f64("rps", exp.cluster.rps)?;
     exp.cluster.n_requests = args.opt_usize("requests", exp.cluster.n_requests)?;
@@ -141,9 +149,36 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     if let Some(r) = args.opt("reschedule") {
         exp.reschedule_policy = r.to_string();
     }
+    // [workload.*] table defaults derive from cluster.rps / dataset:
+    // rebuild the scenario so the CLI overrides above are honored (flags
+    // win, as documented), instead of freezing config-parse-time values
+    exp.rebuild_scenario(&cfg)?;
+    if let Some(s) = args.opt("scenario") {
+        // the CLI name overrides any [workload.*] tables from --config
+        exp.scenario_name = Some(s.to_string());
+        exp.scenario = None;
+        let reg = ScenarioRegistry::with_builtins();
+        if !reg.has(s) {
+            return Err(star::Error::Cli(format!(
+                "unknown scenario `{s}` (known: {})",
+                reg.names().join("|")
+            )));
+        }
+    }
     exp.record_traces = args.flag("traces") || args.opt("trace-out").is_some();
+    // validate() surfaces unknown --dispatch/--reschedule names with the
+    // full registry list — never silently fall back to a default policy
     exp.validate()?;
     Ok(exp)
+}
+
+/// Unknown-dataset error listing the valid names (the old message was a
+/// bare "bad dataset" that left users guessing).
+fn bad_dataset(d: &str) -> star::Error {
+    star::Error::Cli(format!(
+        "unknown dataset `{d}` (known: {})",
+        Dataset::NAMES.join("|")
+    ))
 }
 
 fn run_check(args: &Args) -> Result<(), star::Error> {
@@ -176,8 +211,8 @@ fn run_check(args: &Args) -> Result<(), star::Error> {
 }
 
 fn run_workload(args: &Args) -> Result<(), star::Error> {
-    let ds = Dataset::parse(args.opt_or("dataset", "sharegpt"))
-        .ok_or_else(|| star::Error::Cli("bad dataset".into()))?;
+    let name = args.opt_or("dataset", "sharegpt");
+    let ds = Dataset::parse(name).ok_or_else(|| bad_dataset(name))?;
     let n = args.opt_usize("requests", 20_000)?;
     let rps = args.opt_f64("rps", 1.0)?;
     let seed = args.opt_u64("seed", 0)?;
@@ -198,17 +233,29 @@ fn run_workload(args: &Args) -> Result<(), star::Error> {
 fn run_simulate(args: &Args) -> Result<(), star::Error> {
     let exp = experiment_of(args)?;
     let verbose = args.flag("verbose");
-    let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps);
-    let trace = match args.opt("duration") {
-        Some(_) => gen.generate_for(args.opt_f64("duration", 2000.0)?, exp.cluster.seed),
-        None => gen.generate(exp.cluster.n_requests, exp.cluster.seed),
+    let scenario = resolve_scenario(&exp)?;
+    let strace = match &scenario {
+        Some(spec) => match args.opt("duration") {
+            Some(_) => spec.generate_for(args.opt_f64("duration", 2000.0)?, exp.cluster.seed),
+            None => spec.generate(exp.cluster.n_requests, exp.cluster.seed),
+        },
+        None => {
+            let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps);
+            let trace = match args.opt("duration") {
+                Some(_) => gen.generate_for(args.opt_f64("duration", 2000.0)?, exp.cluster.seed),
+                None => gen.generate(exp.cluster.n_requests, exp.cluster.seed),
+            };
+            ScenarioTrace::from_requests(trace)
+        }
     };
     if verbose {
         println!(
-            "simulating {} requests on {} decode instances (dispatch={} reschedule={} \
-             resched={} predictor={})",
-            trace.len(),
+            "simulating {} requests (+{} session follow-ups) on {} decode instances \
+             (scenario={} dispatch={} reschedule={} resched={} predictor={})",
+            strace.requests.len(),
+            strace.sessions.total_follow_ups(),
             exp.cluster.n_decode,
+            scenario.as_ref().map_or("legacy", |s| s.name.as_str()),
             exp.dispatch_policy,
             exp.reschedule_policy,
             exp.rescheduler.enabled,
@@ -219,8 +266,28 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
         exp,
         ..Default::default()
     };
-    let report = Simulator::with_registry(params, &trace, &PolicyRegistry::with_builtins())?.run();
+    let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())?.run();
     println!("{}", report.summary(Slo::default()));
+    if let Some(spec) = &scenario {
+        // per-class TTFT/TPOT percentiles + goodput against each class's
+        // own SLO — the violations the aggregate line hides
+        let per_class = report.class_summary(&spec.slos());
+        if !per_class.is_empty() {
+            println!("{per_class}");
+        }
+        if !report.session_chains.is_empty() {
+            let realized: usize = report
+                .session_chains
+                .iter()
+                .map(|c| c.len().saturating_sub(1))
+                .sum();
+            println!(
+                "sessions: {} chains, {} follow-up turns realized",
+                report.session_chains.len(),
+                realized
+            );
+        }
+    }
     println!(
         "scheduler: {} intervals, {} candidates, max decision {} us",
         report.scheduler_stats.intervals,
@@ -231,6 +298,26 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
         report.recorder.write_tsv(std::path::Path::new(path))?;
         println!("trace written to {path}");
     }
+    Ok(())
+}
+
+/// `star validate-bench BENCH_a.json [BENCH_b.json ...]` — the smoke-gate
+/// assertion that every emitted bench JSON parses and carries the shared
+/// writer's `schema_version`.
+fn run_validate_bench(args: &Args) -> Result<(), star::Error> {
+    if args.positionals.is_empty() {
+        return Err(star::Error::Cli(
+            "validate-bench expects at least one BENCH_*.json path".into(),
+        ));
+    }
+    for path in &args.positionals {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| star::Error::Cli(format!("{path}: {e}")))?;
+        star::bench::json::validate_bench_json(&text)
+            .map_err(|e| star::Error::Cli(format!("{path}: {e}")))?;
+        println!("OK {path}");
+    }
+    println!("validate-bench: {} file(s) OK", args.positionals.len());
     Ok(())
 }
 
@@ -249,15 +336,35 @@ fn run_serve(args: &Args) -> Result<(), star::Error> {
     exp.cluster.max_batch = exp.cluster.max_batch.min(8);
     let dir = artifacts_dir(args.opt("artifacts"))?;
     let rt = Arc::new(StarRuntime::load(&dir)?);
-    let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps)
-        .pico(rt.meta.max_prompt as u32 - 8, rt.meta.max_output as u32);
-    let trace = gen.generate(exp.cluster.n_requests, exp.cluster.seed);
-    let live: Vec<LiveRequest> = trace
-        .iter()
-        .map(|r| LiveRequest::from_trace(r, rt.meta.max_prompt))
-        .collect();
+    // scenario runs replay the same schedule as the simulator: identical
+    // initial trace (pico-scaled) plus the session plan, whose follow-up
+    // turns the server realizes on each turn's live completion
+    let scenario = resolve_scenario(&exp)?;
+    let (live, sessions) = match scenario {
+        Some(spec) => {
+            let spec = spec.pico(rt.meta.max_prompt as u32 - 8, rt.meta.max_output as u32);
+            let strace = spec.generate(exp.cluster.n_requests, exp.cluster.seed);
+            let live: Vec<LiveRequest> = strace
+                .requests
+                .iter()
+                .map(|r| LiveRequest::from_trace(r, rt.meta.max_prompt))
+                .collect();
+            (live, strace.sessions)
+        }
+        None => {
+            let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps)
+                .pico(rt.meta.max_prompt as u32 - 8, rt.meta.max_output as u32);
+            let trace = gen.generate(exp.cluster.n_requests, exp.cluster.seed);
+            let live: Vec<LiveRequest> = trace
+                .iter()
+                .map(|r| LiveRequest::from_trace(r, rt.meta.max_prompt))
+                .collect();
+            (live, star::workload::SessionPlan::default())
+        }
+    };
     let params = ServeParams {
         exp,
+        sessions,
         ..Default::default()
     };
     let server = Server::new(rt, params);

@@ -7,7 +7,8 @@ mod variance;
 pub use recorder::{TraceEvent, TraceRecorder, TraceRow};
 pub use variance::{snapshot_variance, RunningVariance, VarianceOverTime};
 
-use crate::Time;
+use crate::workload::{RequestClass, SloByClass};
+use crate::{RequestId, Time};
 
 /// Exact percentile store. At our experiment sizes (<= a few million
 /// samples) keeping raw samples is cheaper than a sketch and exact.
@@ -85,6 +86,10 @@ impl Percentiles {
 /// system; consumed by [`RunMetrics`].
 #[derive(Clone, Debug, Default)]
 pub struct RequestLatency {
+    /// Request id (joins per-class / per-session analyses to the trace).
+    pub id: RequestId,
+    /// Workload class the request belongs to.
+    pub class: RequestClass,
     pub arrival: Time,
     pub prefill_done: Option<Time>,
     pub first_token: Option<Time>,
@@ -180,25 +185,75 @@ impl RunMetrics {
         good as f64 / self.duration
     }
 
-    /// P99 of per-request mean TPOT, in milliseconds (Fig. 10 bottom row).
-    pub fn p99_tpot_ms(&self) -> f64 {
+    /// Rate of requests meeting the SLO of their OWN class — the per-class
+    /// goodput definition scenario runs report (aggregate [`Self::goodput`]
+    /// judges every class against one target and hides class violations).
+    pub fn goodput_by_class(&self, slos: &SloByClass) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        let good = self
+            .completed
+            .iter()
+            .filter(|r| r.meets_slo(slos.get(r.class)))
+            .count();
+        good as f64 / self.duration
+    }
+
+    /// Subset of this run belonging to one request class. Duration is the
+    /// full run's (rates stay comparable); run-wide counters (OOMs,
+    /// migrations) are not attributable per class and are zeroed.
+    pub fn filter_class(&self, class: RequestClass) -> RunMetrics {
+        RunMetrics {
+            completed: self
+                .completed
+                .iter()
+                .filter(|r| r.class == class)
+                .cloned()
+                .collect(),
+            duration: self.duration,
+            oom_events: 0,
+            migrations: 0,
+        }
+    }
+
+    /// Classes with at least one completed request, in canonical order.
+    pub fn classes_present(&self) -> Vec<RequestClass> {
+        RequestClass::ALL
+            .into_iter()
+            .filter(|c| self.completed.iter().any(|r| r.class == *c))
+            .collect()
+    }
+
+    /// Quantile of per-request mean TPOT, in milliseconds.
+    pub fn quantile_tpot_ms(&self, q: f64) -> f64 {
         let mut p = Percentiles::new();
         for r in &self.completed {
             if let Some(t) = r.mean_tpot {
                 p.record(t * 1e3);
             }
         }
-        p.p99()
+        p.quantile(q)
     }
 
-    pub fn p99_ttft_ms(&self) -> f64 {
+    /// Quantile of TTFT, in milliseconds.
+    pub fn quantile_ttft_ms(&self, q: f64) -> f64 {
         let mut p = Percentiles::new();
         for r in &self.completed {
             if let Some(t) = r.ttft() {
                 p.record(t * 1e3);
             }
         }
-        p.p99()
+        p.quantile(q)
+    }
+
+    /// P99 of per-request mean TPOT, in milliseconds (Fig. 10 bottom row).
+    pub fn p99_tpot_ms(&self) -> f64 {
+        self.quantile_tpot_ms(0.99)
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        self.quantile_ttft_ms(0.99)
     }
 
     pub fn mean_tpot_ms(&self) -> f64 {
@@ -290,6 +345,46 @@ mod tests {
             ..Default::default()
         };
         assert!((m.goodput(slo) - 0.1).abs() < 1e-12, "only the first counts");
+    }
+
+    #[test]
+    fn per_class_goodput_judges_each_class_against_its_own_slo() {
+        let mk = |class: RequestClass, ttft: f64, tpot: f64| RequestLatency {
+            class,
+            arrival: 0.0,
+            first_token: Some(ttft),
+            mean_tpot: Some(tpot),
+            finished: Some(10.0),
+            output_tokens: 10,
+            ..Default::default()
+        };
+        // a 40 ms-TPOT reasoning request: violates the default 25 ms SLO
+        // but meets reasoning's relaxed 50 ms target
+        let m = RunMetrics {
+            completed: vec![
+                mk(RequestClass::Chat, 0.5, 0.010),
+                mk(RequestClass::Reasoning, 1.5, 0.040),
+            ],
+            duration: 10.0,
+            ..Default::default()
+        };
+        let uniform = SloByClass::uniform(Slo::default());
+        assert!((m.goodput_by_class(&uniform) - 0.1).abs() < 1e-12);
+        let relaxed = uniform.with(
+            RequestClass::Reasoning,
+            Slo {
+                ttft_s: 2.0,
+                tpot_s: 0.050,
+            },
+        );
+        assert!((m.goodput_by_class(&relaxed) - 0.2).abs() < 1e-12);
+        // class filters partition the completed set
+        assert_eq!(m.filter_class(RequestClass::Chat).completed.len(), 1);
+        assert_eq!(m.filter_class(RequestClass::Summarization).completed.len(), 0);
+        assert_eq!(
+            m.classes_present(),
+            vec![RequestClass::Chat, RequestClass::Reasoning]
+        );
     }
 
     #[test]

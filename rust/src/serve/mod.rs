@@ -31,7 +31,7 @@ mod server;
 pub use instance::{DecodeCommand, DecodeEvent, DecodeInstance, SlotSnapshot};
 pub use server::{ServeOutcome, ServeParams, Server};
 
-use crate::workload::Request;
+use crate::workload::{Request, RequestClass, SessionTurn};
 use crate::{RequestId, Time};
 
 /// A request as submitted to the live server: trace metadata plus the
@@ -44,27 +44,52 @@ pub struct LiveRequest {
     /// Forced output length (trace-driven runs); None = sample to EOS.
     pub forced_output: Option<u32>,
     pub tag: u8,
+    /// Workload class (per-class SLO accounting).
+    pub class: RequestClass,
 }
 
 impl LiveRequest {
     /// Synthesize the prompt for a trace request in the reasoning-trace
     /// language (tag byte selects the expected-length band).
     pub fn from_trace(req: &Request, max_prompt: usize) -> LiveRequest {
-        let tag_byte = b"abcdefghijklmnop"[(req.tag & 15) as usize];
-        let mut prompt = vec![1u8, b'Q', tag_byte];
-        let payload_len = (req.prompt_len as usize).clamp(1, max_prompt - 4);
-        for i in 0..payload_len {
-            prompt.push(b'a' + ((req.id as usize + i * 7) % 26) as u8);
-        }
-        prompt.push(b'?');
         LiveRequest {
             id: req.id,
             arrival: req.arrival,
-            prompt,
+            prompt: synth_prompt(req.id, req.tag, req.prompt_len, max_prompt),
             forced_output: Some(req.output_len),
             tag: req.tag,
+            class: req.class,
         }
     }
+
+    /// Synthesize a session follow-up turn (same prompt language; the
+    /// turn's prompt length already includes the accumulated history).
+    pub fn for_session_turn(
+        id: RequestId,
+        arrival: Time,
+        turn: &SessionTurn,
+        max_prompt: usize,
+    ) -> LiveRequest {
+        LiveRequest {
+            id,
+            arrival,
+            prompt: synth_prompt(id, turn.tag, turn.prompt_len, max_prompt),
+            forced_output: Some(turn.output_len),
+            tag: turn.tag,
+            class: turn.class,
+        }
+    }
+}
+
+fn synth_prompt(id: RequestId, tag: u8, prompt_len: u32, max_prompt: usize) -> Vec<u8> {
+    let tag_byte = b"abcdefghijklmnop"[(tag & 15) as usize];
+    let mut prompt = vec![1u8, b'Q', tag_byte];
+    let payload_len = (prompt_len as usize).clamp(1, max_prompt - 4);
+    for i in 0..payload_len {
+        prompt.push(b'a' + ((id as usize + i * 7) % 26) as u8);
+    }
+    prompt.push(b'?');
+    prompt
 }
 
 /// Temperature sampling over logits (the serving-side sampler; greedy at
@@ -129,6 +154,7 @@ mod tests {
             prompt_len: 10,
             output_len: 100,
             tag: 15,
+            class: RequestClass::Chat,
         };
         let lr = LiveRequest::from_trace(&req, 128);
         assert_eq!(lr.prompt[0], 1); // BOS

@@ -19,6 +19,7 @@ use crate::metrics::{
     RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime,
 };
 use crate::runtime::StarRuntime;
+use crate::workload::SessionPlan;
 use crate::{InstanceId, RequestId, Result, Time};
 
 /// Live-serving parameters (mirrors the simulator's [`SimParams`]). The
@@ -33,6 +34,11 @@ pub struct ServeParams {
     pub migration: MigrationCostModel,
     /// Hard wall-clock cap for the run.
     pub max_wall_s: f64,
+    /// Multi-round session plan (scenario workloads): the server replays
+    /// the same per-turn schedule as the simulator — a session's next turn
+    /// is submitted a think-time after the previous turn completes, with
+    /// its prompt carrying the accumulated history.
+    pub sessions: SessionPlan,
 }
 
 impl Default for ServeParams {
@@ -42,6 +48,7 @@ impl Default for ServeParams {
             temperature: 0.9,
             migration: MigrationCostModel::new_25gbps(4096),
             max_wall_s: 600.0,
+            sessions: SessionPlan::default(),
         }
     }
 }
@@ -76,6 +83,20 @@ struct InstanceState {
     cmd: Sender<DecodeCommand>,
     kv_used: u64,
     kv_capacity: u64,
+}
+
+/// Live-side multi-round session bookkeeping: the plan plus the realized
+/// turn cursor and the queue of spawned-but-not-yet-arrived follow-ups.
+struct SessionRt {
+    plan: SessionPlan,
+    /// request id -> (session, index of its successor turn in the script).
+    cursor: HashMap<RequestId, (u32, u32)>,
+    /// (arrival wall-time s, request) awaiting injection.
+    queue: Vec<(Time, LiveRequest)>,
+    next_id: RequestId,
+    /// Follow-up requests spawned so far (the run's total request count is
+    /// `initial + spawned`).
+    spawned: usize,
 }
 
 /// The live server. Owns the runtime, the experiment wiring, and the
@@ -194,6 +215,8 @@ impl Server {
                 r.id,
                 ReqTracker {
                     latency: RequestLatency {
+                        id: r.id,
+                        class: r.class,
                         arrival: r.arrival,
                         ..Default::default()
                     },
@@ -205,6 +228,19 @@ impl Server {
                 },
             );
         }
+        let mut session = SessionRt {
+            cursor: self
+                .params
+                .sessions
+                .first_turns
+                .iter()
+                .map(|&(rid, s)| (rid, (s, 0u32)))
+                .collect(),
+            queue: Vec::new(),
+            next_id: requests.iter().map(|r| r.id).max().map_or(0, |m| m + 1),
+            spawned: 0,
+            plan: self.params.sessions.clone(),
+        };
         let mut control =
             ControlLoop::from_experiment(exp, self.params.migration, &self.registry)?;
         let mut recorder = TraceRecorder::new(exp.record_traces);
@@ -250,7 +286,7 @@ impl Server {
         }
 
         // --- main loop ---
-        while completed + failed < n_requests {
+        while completed + failed < n_requests + session.spawned {
             if start.elapsed().as_secs_f64() > self.params.max_wall_s {
                 eprintln!("[serve] wall cap hit: {}s", self.params.max_wall_s);
                 break;
@@ -265,6 +301,22 @@ impl Server {
                     .send(r)
                     .map_err(|_| crate::Error::coordinator("prefill pool died"))?;
                 next_arrival += 1;
+            }
+
+            // inject session follow-up turns whose think time has elapsed
+            // (the simulator replays the same schedule via its
+            // SessionFollowUp event)
+            let mut i = 0;
+            while i < session.queue.len() {
+                if session.queue[i].0 <= now_s {
+                    let (_, lr) = session.queue.swap_remove(i);
+                    recorder.record(now_s, TraceEvent::Arrived { request: lr.id });
+                    pf_in_tx
+                        .send(lr)
+                        .map_err(|_| crate::Error::coordinator("prefill pool died"))?;
+                } else {
+                    i += 1;
+                }
             }
 
             // re-dispatch parked payloads whose time has come: rejected
@@ -402,6 +454,7 @@ impl Server {
                             &mut completed,
                             &mut oom_events,
                             &mut output_mean,
+                            &mut session,
                         );
                         pending = ev_rx.try_recv().ok();
                     }
@@ -514,6 +567,7 @@ impl Server {
         completed: &mut usize,
         oom_events: &mut u64,
         output_mean: &mut RunningVariance,
+        session: &mut SessionRt,
     ) {
         match ev {
             DecodeEvent::Token { id, at, .. } => {
@@ -544,9 +598,11 @@ impl Server {
                     state.release_inbound(dst, amt);
                     migrating.retain(|&m| m != id);
                 }
+                let mut finished_now = false;
                 if let Some(t) = trackers.get_mut(&id) {
                     if !t.done {
                         t.done = true;
+                        finished_now = true;
                         *completed += 1;
                         output_mean.push(generated as f64);
                         t.latency.finished = Some(since(at));
@@ -559,6 +615,50 @@ impl Server {
                                 instance,
                             },
                         );
+                    }
+                }
+                // spawn the session's next turn: it arrives a think-time
+                // after THIS completion, prompt carrying the accumulated
+                // history (same schedule the simulator realizes)
+                if finished_now {
+                    let cursor = session.cursor.get(&id).copied();
+                    if let Some((s, k)) = cursor {
+                        let turn = session
+                            .plan
+                            .scripts
+                            .get(s as usize)
+                            .and_then(|sc| sc.get(k as usize))
+                            .cloned();
+                        if let Some(turn) = turn {
+                            let nid = session.next_id;
+                            session.next_id += 1;
+                            let arrival = since(at) + turn.think_time_s;
+                            let lr = LiveRequest::for_session_turn(
+                                nid,
+                                arrival,
+                                &turn,
+                                self.runtime.meta.max_prompt,
+                            );
+                            trackers.insert(
+                                nid,
+                                ReqTracker {
+                                    latency: RequestLatency {
+                                        id: nid,
+                                        class: turn.class,
+                                        arrival,
+                                        ..Default::default()
+                                    },
+                                    last_token: None,
+                                    tpot_sum: 0.0,
+                                    tpot_max: 0.0,
+                                    generated: 0,
+                                    done: false,
+                                },
+                            );
+                            session.cursor.insert(nid, (s, k + 1));
+                            session.queue.push((arrival, lr));
+                            session.spawned += 1;
+                        }
                     }
                 }
             }

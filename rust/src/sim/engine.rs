@@ -10,7 +10,7 @@
 //! `benches/bench_sim_core.rs` quantifies the gap and
 //! [`SimParams::validate_state`] proves the two agree after every event.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use super::events::{Event, EventQueue};
 use super::report::SimReport;
@@ -24,7 +24,7 @@ use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::KvCacheManager;
 use crate::metrics::{RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
 use crate::predictor::{build_sim_predictor, LengthPredictor, PredictInput};
-use crate::workload::Request;
+use crate::workload::{Request, ScenarioTrace, SessionPlan};
 use crate::{InstanceId, RequestId, Result, Time};
 
 /// How scheduling decisions read cluster state.
@@ -112,6 +112,15 @@ pub struct Simulator {
     oom_events: u64,
     migrations_started: u64,
     output_mean: RunningVariance,
+    /// Multi-round session scripts (scenario workloads; empty otherwise).
+    sessions: SessionPlan,
+    /// request id -> (session, index of its successor turn in the script).
+    session_cursor: HashMap<RequestId, (u32, u32)>,
+    /// Realized request-id chains per session, in turn order.
+    session_chains: Vec<Vec<RequestId>>,
+    /// Follow-up events scheduled but not yet fired (their request records
+    /// do not exist yet, so the termination check must wait for them).
+    pending_follow_ups: usize,
 }
 
 impl Simulator {
@@ -130,6 +139,18 @@ impl Simulator {
         trace: &[Request],
         registry: &PolicyRegistry,
     ) -> Result<Simulator> {
+        Self::with_scenario(params, ScenarioTrace::from_requests(trace.to_vec()), registry)
+    }
+
+    /// Build over a full scenario trace (arrival process + class mix +
+    /// multi-round session plan). Follow-up turns are realized at run time
+    /// through [`Event::SessionFollowUp`]: turn k+1 arrives only after
+    /// turn k completes, with its prompt carrying the accumulated history.
+    pub fn with_scenario(
+        params: SimParams,
+        trace: ScenarioTrace,
+        registry: &PolicyRegistry,
+    ) -> Result<Simulator> {
         let exp = &params.exp;
         let n_dec = exp.cluster.n_decode;
         let mut control = ControlLoop::from_experiment(exp, params.migration, registry)?;
@@ -138,7 +159,20 @@ impl Simulator {
             exp.cluster.max_batch / 2,
         );
         control.observe_avg_iter_s(seed_avg_iter_s);
-        let cap = trace.iter().map(|r| r.output_len).max().unwrap_or(512) as f64;
+        let cap = trace
+            .requests
+            .iter()
+            .map(|r| r.output_len)
+            .chain(
+                trace
+                    .sessions
+                    .scripts
+                    .iter()
+                    .flatten()
+                    .map(|t| t.output_len),
+            )
+            .max()
+            .unwrap_or(512) as f64;
         let predictor = build_sim_predictor(
             exp.predictor,
             cap,
@@ -147,12 +181,14 @@ impl Simulator {
         );
 
         let mut queue = EventQueue::new();
-        let mut requests = Vec::with_capacity(trace.len());
-        for r in trace {
+        let mut requests = Vec::with_capacity(trace.requests.len());
+        for r in &trace.requests {
+            debug_assert_eq!(r.id as usize, requests.len(), "trace ids must be dense");
             queue.push(r.arrival, Event::Arrival { request: r.id });
             requests.push(SimRequest {
                 id: r.id,
                 arrival: r.arrival,
+                class: r.class,
                 prompt_len: r.prompt_len,
                 output_len: r.output_len,
                 generated: 0,
@@ -160,6 +196,8 @@ impl Simulator {
                 predicted_remaining: None,
                 iters_since_predict: 0,
                 latency: crate::metrics::RequestLatency {
+                    id: r.id,
+                    class: r.class,
                     arrival: r.arrival,
                     ..Default::default()
                 },
@@ -169,6 +207,13 @@ impl Simulator {
             });
         }
         queue.push(exp.rescheduler.interval_s, Event::SchedulerTick);
+
+        let mut session_cursor = HashMap::new();
+        let mut session_chains = vec![Vec::new(); trace.sessions.scripts.len()];
+        for &(rid, s) in &trace.sessions.first_turns {
+            session_cursor.insert(rid, (s, 0u32));
+            session_chains[s as usize].push(rid);
+        }
 
         let decode: Vec<DecodeSim> = (0..n_dec)
             .map(|id| DecodeSim {
@@ -215,6 +260,10 @@ impl Simulator {
             oom_events: 0,
             migrations_started: 0,
             output_mean: RunningVariance::new(),
+            sessions: trace.sessions,
+            session_cursor,
+            session_chains,
+            pending_follow_ups: 0,
             params,
         })
     }
@@ -238,11 +287,18 @@ impl Simulator {
                     kv_tokens,
                 } => self.on_migration_done(request, from, to, kv_tokens),
                 Event::SchedulerTick => self.on_scheduler_tick(),
+                Event::SessionFollowUp { session, turn } => {
+                    self.on_session_follow_up(session, turn)
+                }
             }
             if self.params.validate_state {
                 self.assert_state_consistent();
             }
-            if self.completed + self.failed == self.requests.len() {
+            // in-flight follow-up turns have no request record yet — the
+            // run is only over once they have fired and completed too
+            if self.completed + self.failed == self.requests.len()
+                && self.pending_follow_ups == 0
+            {
                 break;
             }
         }
@@ -570,6 +626,56 @@ impl Simulator {
                 instance: di,
             },
         );
+        self.schedule_follow_up(id);
+    }
+
+    /// If `id` has a successor turn in its session script, schedule its
+    /// arrival a think-time after this completion. Sessions whose turn
+    /// fails terminally (watermark rejection / unrecoverable OOM) are
+    /// abandoned: the user never saw the answer, so no follow-up.
+    fn schedule_follow_up(&mut self, id: RequestId) {
+        let Some(&(s, k)) = self.session_cursor.get(&id) else {
+            return;
+        };
+        let Some(turn) = self.sessions.scripts[s as usize].get(k as usize) else {
+            return;
+        };
+        self.pending_follow_ups += 1;
+        self.queue.push(
+            self.now + turn.think_time_s,
+            Event::SessionFollowUp { session: s, turn: k },
+        );
+    }
+
+    /// A session's next turn arrives: materialize its request record (the
+    /// prompt carries the accumulated history) and route it to prefill.
+    fn on_session_follow_up(&mut self, session: u32, turn_idx: u32) {
+        self.pending_follow_ups -= 1;
+        let turn = self.sessions.scripts[session as usize][turn_idx as usize].clone();
+        let id = self.requests.len() as RequestId;
+        self.requests.push(SimRequest {
+            id,
+            arrival: self.now,
+            class: turn.class,
+            prompt_len: turn.prompt_len,
+            output_len: turn.output_len,
+            generated: 0,
+            state: ReqState::Prefill,
+            predicted_remaining: None,
+            iters_since_predict: 0,
+            latency: crate::metrics::RequestLatency {
+                id,
+                class: turn.class,
+                arrival: self.now,
+                ..Default::default()
+            },
+            last_token_at: None,
+            tpot_sum: 0.0,
+            tpot_max: 0.0,
+        });
+        self.session_cursor.insert(id, (session, turn_idx + 1));
+        self.session_chains[session as usize].push(id);
+        self.on_arrival(id);
     }
 
     // ------------------------------------------------------------------
@@ -779,6 +885,7 @@ impl Simulator {
             recorder: self.recorder,
             scheduler_stats: self.control.stats(),
             per_instance_tokens: self.decode.iter().map(|d| d.tokens_decoded).collect(),
+            session_chains: self.session_chains,
         };
         for r in self.requests {
             if matches!(r.state, ReqState::Done) && r.latency.finished.is_some() {
@@ -927,6 +1034,7 @@ mod tests {
             prompt_len: 9_500,
             output_len: 50,
             tag: 0,
+            class: Default::default(),
         }];
         let params = SimParams {
             exp,
@@ -958,6 +1066,7 @@ mod tests {
             prompt_len: 8_900,
             output_len: 40,
             tag: 0,
+            class: Default::default(),
         }];
         let params = SimParams {
             exp,
@@ -968,6 +1077,61 @@ mod tests {
         let report = Simulator::new(params, &trace).run();
         assert_eq!(report.completed.len(), 1);
         assert_eq!(report.n_failed, 0);
+    }
+
+    #[test]
+    fn session_follow_ups_arrive_only_after_prior_turn_completes() {
+        use crate::workload::{ArrivalProcess, ClassMix, ClassSpec, ScenarioSpec, SessionProfile};
+        let spec = ScenarioSpec {
+            name: "unit_sessions".to_string(),
+            arrival: ArrivalProcess::Poisson { rps: 0.5 },
+            classes: ClassMix::single(ClassSpec::chat()),
+            sessions: Some(SessionProfile {
+                session_frac: 0.8,
+                min_turns: 2,
+                max_turns: 3,
+                think_mean_s: 2.0,
+                max_context_tokens: 16_384,
+            }),
+            pico_scale: None,
+        };
+        let strace = spec.generate(30, 8);
+        assert!(strace.sessions.total_follow_ups() > 0, "need sessions");
+        let expected = strace.total_planned();
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_decode = 3;
+        exp.cluster.kv_capacity_tokens = 400_000; // roomy: nothing fails
+        exp.predictor = PredictorKind::Oracle;
+        let params = SimParams {
+            exp,
+            ..Default::default()
+        };
+        let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())
+            .expect("builtin policies")
+            .run();
+        assert_eq!(report.n_failed, 0);
+        assert_eq!(
+            report.completed.len(),
+            expected,
+            "every planned turn must be realized and completed"
+        );
+        let by_id: std::collections::HashMap<_, _> =
+            report.completed.iter().map(|l| (l.id, l)).collect();
+        let mut multi_turn = 0;
+        for chain in &report.session_chains {
+            for w in chain.windows(2) {
+                let prev = by_id[&w[0]];
+                let next = by_id[&w[1]];
+                assert!(
+                    next.arrival >= prev.finished.unwrap() - 1e-9,
+                    "turn arrived at {} before its predecessor finished at {}",
+                    next.arrival,
+                    prev.finished.unwrap()
+                );
+                multi_turn += 1;
+            }
+        }
+        assert!(multi_turn > 0, "no realized multi-turn chain");
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub enum Event {
     },
     /// Periodic scheduler tick (Algorithm 1 interval).
     SchedulerTick,
+    /// A multi-round session's next turn arrives (scheduled at the prior
+    /// turn's completion + think time; the request record is created when
+    /// this fires). `turn` indexes the session script in the
+    /// [`crate::workload::SessionPlan`].
+    SessionFollowUp { session: u32, turn: u32 },
 }
 
 #[derive(Clone, Debug)]

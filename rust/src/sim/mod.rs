@@ -25,9 +25,10 @@ mod events;
 mod report;
 
 pub use engine::{SimParams, Simulator, StateMode};
-pub use report::SimReport;
+pub use report::{ClassReport, SimReport};
 
 use crate::metrics::RequestLatency;
+use crate::workload::RequestClass;
 use crate::{InstanceId, RequestId, Time};
 
 /// Lifecycle of one simulated request.
@@ -51,6 +52,8 @@ pub enum ReqState {
 pub struct SimRequest {
     pub id: RequestId,
     pub arrival: Time,
+    /// Workload class (per-class SLO accounting).
+    pub class: RequestClass,
     pub prompt_len: u32,
     /// Ground-truth output length (the trace's realized length).
     pub output_len: u32,

@@ -1,9 +1,12 @@
 //! Simulation outputs: everything the benches need to print the paper's
-//! tables and figures.
+//! tables and figures, plus per-class SLO accounting for scenario runs
+//! (aggregate goodput hides class-level violations — the per-class rows
+//! are how a bursty mixed workload shows its tail).
 
 use crate::coordinator::ReschedulerStats;
 use crate::metrics::{RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
-use crate::Time;
+use crate::workload::{RequestClass, SloByClass};
+use crate::{RequestId, Time};
 
 /// Result of one simulation run.
 #[derive(Debug)]
@@ -22,6 +25,24 @@ pub struct SimReport {
     pub recorder: TraceRecorder,
     pub scheduler_stats: ReschedulerStats,
     pub per_instance_tokens: Vec<u64>,
+    /// Realized multi-round session chains (request ids in turn order);
+    /// empty for sessionless workloads.
+    pub session_chains: Vec<Vec<RequestId>>,
+}
+
+/// Per-class slice of a run: TTFT/TPOT percentiles and goodput against
+/// the class's own SLO target.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    pub class: RequestClass,
+    pub n: usize,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// req/s of this class meeting ITS class SLO.
+    pub goodput: f64,
+    pub slo: Slo,
 }
 
 impl SimReport {
@@ -33,6 +54,55 @@ impl SimReport {
             oom_events: self.oom_events,
             migrations: self.migrations,
         }
+    }
+
+    /// Per-class TTFT/TPOT percentiles + goodput, one row per class with
+    /// completed requests, judged against per-class SLOs.
+    pub fn class_metrics(&self, slos: &SloByClass) -> Vec<ClassReport> {
+        let m = self.metrics();
+        m.classes_present()
+            .into_iter()
+            .map(|class| {
+                let cm = m.filter_class(class);
+                let slo = slos.get(class);
+                ClassReport {
+                    class,
+                    n: cm.completed.len(),
+                    ttft_p50_ms: cm.quantile_ttft_ms(0.50),
+                    ttft_p99_ms: cm.quantile_ttft_ms(0.99),
+                    tpot_p50_ms: cm.quantile_tpot_ms(0.50),
+                    tpot_p99_ms: cm.quantile_tpot_ms(0.99),
+                    goodput: cm.goodput(slo),
+                    slo,
+                }
+            })
+            .collect()
+    }
+
+    /// Multi-line per-class summary (scenario runs append this to the
+    /// aggregate [`Self::summary`] line).
+    pub fn class_summary(&self, slos: &SloByClass) -> String {
+        let mut out = String::new();
+        for r in self.class_metrics(slos) {
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            out.push_str(&format!(
+                "class {:<14} n {:>6} | TTFT p50 {:>8.1} ms p99 {:>8.1} ms | \
+                 TPOT p50 {:>7.2} ms p99 {:>7.2} ms | goodput {:.4} req/s \
+                 (SLO {:.1}s TTFT / {:.0}ms TPOT)",
+                r.class.name(),
+                r.n,
+                r.ttft_p50_ms,
+                r.ttft_p99_ms,
+                r.tpot_p50_ms,
+                r.tpot_p99_ms,
+                r.goodput,
+                r.slo.ttft_s,
+                r.slo.tpot_s * 1e3,
+            ));
+        }
+        out
     }
 
     /// One-line summary used by examples and benches.

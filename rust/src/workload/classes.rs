@@ -1,0 +1,352 @@
+//! Request classes (the third scenario-diversity axis): chat / reasoning /
+//! summarization traffic with per-class length models and per-class SLO
+//! targets, after the mixed-downstream-workload setting of "Inference
+//! without Interference" (arXiv:2401.11181). Aggregate goodput hides
+//! per-class SLO violations; [`SloByClass`] + the per-class report in
+//! `sim::report` expose them.
+
+use super::LengthModel;
+use crate::metrics::Slo;
+use crate::prng::Pcg64;
+use crate::{Error, Result};
+
+/// Downstream workload class of a request. Known at arrival time (the
+/// application declares it) — unlike the realized output length, policies
+/// MAY read it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RequestClass {
+    /// Interactive chat: short prompts, short outputs, tight latency SLO.
+    #[default]
+    Chat,
+    /// Long-form reasoning: heavy near-cap output mode, relaxed SLO.
+    Reasoning,
+    /// Summarization: long prompts, short outputs, loose TTFT.
+    Summarization,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 3] = [
+        RequestClass::Chat,
+        RequestClass::Reasoning,
+        RequestClass::Summarization,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Chat => "chat",
+            RequestClass::Reasoning => "reasoning",
+            RequestClass::Summarization => "summarization",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RequestClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "chat" => Ok(RequestClass::Chat),
+            "reasoning" => Ok(RequestClass::Reasoning),
+            "summarization" | "summary" => Ok(RequestClass::Summarization),
+            other => Err(Error::config(format!(
+                "unknown request class `{other}` (known: chat|reasoning|summarization)"
+            ))),
+        }
+    }
+
+    /// Dense index for per-class arrays ([`SloByClass`]).
+    pub fn index(self) -> usize {
+        match self {
+            RequestClass::Chat => 0,
+            RequestClass::Reasoning => 1,
+            RequestClass::Summarization => 2,
+        }
+    }
+}
+
+/// One class's workload profile: arrival share, length model, SLO target.
+#[derive(Clone, Debug)]
+pub struct ClassSpec {
+    pub class: RequestClass,
+    /// Relative arrival weight within a [`ClassMix`].
+    pub weight: f64,
+    pub lengths: LengthModel,
+    pub slo: Slo,
+}
+
+impl ClassSpec {
+    /// Interactive chat: log-normal outputs around ~250 tokens, prompts
+    /// around ~200; SLO = paper default (1 s TTFT / 25 ms TPOT).
+    pub fn chat() -> Self {
+        ClassSpec {
+            class: RequestClass::Chat,
+            weight: 0.6,
+            lengths: LengthModel {
+                out_mu: 5.5,
+                out_sigma: 0.8,
+                cap_frac: 0.01,
+                cap_lo_frac: 0.92,
+                cap: 4_096,
+                in_mu: 5.3,
+                in_sigma: 0.9,
+                in_cap: 8_192,
+            },
+            slo: Slo {
+                ttft_s: 1.0,
+                tpot_s: 0.025,
+            },
+        }
+    }
+
+    /// Long-form reasoning: the ShareGPT-style heavy near-cap output mode,
+    /// with a relaxed SLO (users wait for chains of thought).
+    pub fn reasoning() -> Self {
+        ClassSpec {
+            class: RequestClass::Reasoning,
+            weight: 0.25,
+            lengths: LengthModel {
+                out_mu: 7.0,
+                out_sigma: 1.1,
+                cap_frac: 0.30,
+                cap_lo_frac: 0.92,
+                cap: 32_768,
+                in_mu: 4.0,
+                in_sigma: 1.0,
+                in_cap: 8_192,
+            },
+            slo: Slo {
+                ttft_s: 2.0,
+                tpot_s: 0.050,
+            },
+        }
+    }
+
+    /// Summarization: long documents in, short summaries out; TTFT is
+    /// dominated by the long prefill, so its SLO is loose there but tight
+    /// on decode pacing.
+    pub fn summarization() -> Self {
+        ClassSpec {
+            class: RequestClass::Summarization,
+            weight: 0.15,
+            lengths: LengthModel {
+                out_mu: 5.7,
+                out_sigma: 0.6,
+                cap_frac: 0.0,
+                cap_lo_frac: 0.92,
+                cap: 2_048,
+                in_mu: 8.3,
+                in_sigma: 0.8,
+                in_cap: 32_768,
+            },
+            slo: Slo {
+                ttft_s: 3.0,
+                tpot_s: 0.025,
+            },
+        }
+    }
+
+    pub fn builtin(class: RequestClass) -> Self {
+        match class {
+            RequestClass::Chat => Self::chat(),
+            RequestClass::Reasoning => Self::reasoning(),
+            RequestClass::Summarization => Self::summarization(),
+        }
+    }
+
+    /// Legacy single-class profile: a Table-2 dataset shape labelled
+    /// `Chat`, judged against the paper's default SLO.
+    pub fn dataset(ds: super::Dataset) -> Self {
+        ClassSpec {
+            class: RequestClass::Chat,
+            weight: 1.0,
+            lengths: LengthModel::for_dataset(ds),
+            slo: Slo::default(),
+        }
+    }
+
+    /// Sanity-check a (possibly config-overridden) class profile before
+    /// any sampling: a zero cap would panic inside `sample_output`'s
+    /// `clamp(1, cap)` mid-run instead of erroring at config time.
+    pub fn validate(&self) -> Result<()> {
+        let name = self.class.name();
+        let l = &self.lengths;
+        if l.cap == 0 || l.in_cap == 0 {
+            return Err(Error::config(format!(
+                "class {name}: length caps must be > 0"
+            )));
+        }
+        if !(0.0..=1.0).contains(&l.cap_frac) || !(0.0..=1.0).contains(&l.cap_lo_frac) {
+            return Err(Error::config(format!(
+                "class {name}: cap_frac/cap_lo_frac must be in [0,1]"
+            )));
+        }
+        if !l.out_mu.is_finite() || !l.in_mu.is_finite() {
+            return Err(Error::config(format!(
+                "class {name}: length-model mu must be finite"
+            )));
+        }
+        if !(0.0..).contains(&l.out_sigma) || !(0.0..).contains(&l.in_sigma) {
+            return Err(Error::config(format!(
+                "class {name}: length-model sigma must be >= 0"
+            )));
+        }
+        if self.slo.ttft_s <= 0.0 || self.slo.tpot_s <= 0.0 {
+            return Err(Error::config(format!(
+                "class {name}: SLO targets must be > 0"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Weighted mixture of class profiles.
+#[derive(Clone, Debug)]
+pub struct ClassMix {
+    specs: Vec<ClassSpec>,
+    total_weight: f64,
+}
+
+impl ClassMix {
+    pub fn new(specs: Vec<ClassSpec>) -> Result<ClassMix> {
+        if specs.is_empty() {
+            return Err(Error::config("class mix needs at least one class"));
+        }
+        if specs.iter().any(|s| s.weight <= 0.0 || !s.weight.is_finite()) {
+            return Err(Error::config("class weights must be finite and > 0"));
+        }
+        for (i, a) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|b| b.class == a.class) {
+                return Err(Error::config(format!(
+                    "class `{}` appears twice in the mix",
+                    a.class.name()
+                )));
+            }
+        }
+        let total_weight = specs.iter().map(|s| s.weight).sum();
+        Ok(ClassMix {
+            specs,
+            total_weight,
+        })
+    }
+
+    pub fn single(spec: ClassSpec) -> ClassMix {
+        ClassMix {
+            total_weight: spec.weight.max(1e-12),
+            specs: vec![spec],
+        }
+    }
+
+    /// The default three-class production mix (60/25/15).
+    pub fn mixed_default() -> ClassMix {
+        ClassMix::new(vec![
+            ClassSpec::chat(),
+            ClassSpec::reasoning(),
+            ClassSpec::summarization(),
+        ])
+        .expect("builtin mix is valid")
+    }
+
+    pub fn specs(&self) -> &[ClassSpec] {
+        &self.specs
+    }
+
+    pub fn spec_of(&self, class: RequestClass) -> Option<&ClassSpec> {
+        self.specs.iter().find(|s| s.class == class)
+    }
+
+    /// Draw a class spec with probability proportional to its weight.
+    pub fn sample(&self, rng: &mut Pcg64) -> &ClassSpec {
+        let mut u = rng.next_f64() * self.total_weight;
+        for s in &self.specs {
+            u -= s.weight;
+            if u <= 0.0 {
+                return s;
+            }
+        }
+        self.specs.last().expect("non-empty mix")
+    }
+
+    /// Per-class SLO lookup table; classes absent from the mix keep the
+    /// default SLO.
+    pub fn slos(&self) -> SloByClass {
+        let mut by = SloByClass::uniform(Slo::default());
+        for s in &self.specs {
+            by = by.with(s.class, s.slo);
+        }
+        by
+    }
+}
+
+/// Per-class SLO lookup: goodput judges each request against the target of
+/// ITS class, not a single aggregate SLO.
+#[derive(Clone, Copy, Debug)]
+pub struct SloByClass {
+    slos: [Slo; 3],
+}
+
+impl SloByClass {
+    pub fn uniform(slo: Slo) -> SloByClass {
+        SloByClass { slos: [slo; 3] }
+    }
+
+    pub fn with(mut self, class: RequestClass, slo: Slo) -> SloByClass {
+        self.slos[class.index()] = slo;
+        self
+    }
+
+    pub fn get(&self, class: RequestClass) -> Slo {
+        self.slos[class.index()]
+    }
+}
+
+impl Default for SloByClass {
+    fn default() -> Self {
+        SloByClass::uniform(Slo::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_parse_roundtrip() {
+        for c in RequestClass::ALL {
+            assert_eq!(RequestClass::parse(c.name()).unwrap(), c);
+        }
+        let err = RequestClass::parse("video").unwrap_err().to_string();
+        assert!(err.contains("chat|reasoning|summarization"), "{err}");
+    }
+
+    #[test]
+    fn mix_sampling_respects_weights() {
+        let mix = ClassMix::mixed_default();
+        let mut rng = Pcg64::new(5, 3);
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[mix.sample(&mut rng).class.index()] += 1;
+        }
+        let frac = |i: usize| counts[i] as f64 / 20_000.0;
+        assert!((frac(0) - 0.60).abs() < 0.03, "chat {}", frac(0));
+        assert!((frac(1) - 0.25).abs() < 0.03, "reasoning {}", frac(1));
+        assert!((frac(2) - 0.15).abs() < 0.03, "summarization {}", frac(2));
+    }
+
+    #[test]
+    fn mix_rejects_duplicates_and_bad_weights() {
+        assert!(ClassMix::new(vec![]).is_err());
+        let mut dup = vec![ClassSpec::chat(), ClassSpec::chat()];
+        dup[1].weight = 0.1;
+        assert!(ClassMix::new(dup).is_err());
+        let mut bad = vec![ClassSpec::chat()];
+        bad[0].weight = 0.0;
+        assert!(ClassMix::new(bad).is_err());
+    }
+
+    #[test]
+    fn slo_lookup_defaults_and_overrides() {
+        let by = ClassMix::mixed_default().slos();
+        assert!((by.get(RequestClass::Reasoning).tpot_s - 0.050).abs() < 1e-12);
+        assert!((by.get(RequestClass::Chat).ttft_s - 1.0).abs() < 1e-12);
+        let single = ClassMix::single(ClassSpec::chat()).slos();
+        // absent classes fall back to the default SLO
+        let fallback = single.get(RequestClass::Summarization).ttft_s;
+        assert!((fallback - Slo::default().ttft_s).abs() < 1e-12);
+    }
+}

@@ -11,8 +11,14 @@
 //! Two scales (DESIGN.md §5): `paper` (32K cap, simulator) and `pico`
 //! (512 cap, real execution through star-pico).
 
+mod arrival;
+mod classes;
+mod scenario;
 mod stats;
 
+pub use arrival::{ArrivalProcess, ArrivalSampler};
+pub use classes::{ClassMix, ClassSpec, RequestClass, SloByClass};
+pub use scenario::{ScenarioSpec, ScenarioTrace, SessionPlan, SessionProfile, SessionTurn};
 pub use stats::{LenStats, TraceStats};
 
 use crate::prng::Pcg64;
@@ -29,6 +35,8 @@ pub struct Request {
     pub output_len: u32,
     /// Corpus tag (drives prompt synthesis for the live LM path).
     pub tag: u8,
+    /// Workload class (known at arrival; drives per-class SLOs/metrics).
+    pub class: RequestClass,
 }
 
 /// Named dataset shapes from the paper's Table 2.
@@ -55,6 +63,9 @@ impl Dataset {
             Dataset::Alpaca => "alpaca",
         }
     }
+
+    /// Valid names for CLI / config error messages.
+    pub const NAMES: [&'static str; 2] = ["sharegpt", "alpaca"];
 }
 
 /// Length-distribution parameters at *paper scale* (32K cap).
@@ -132,6 +143,35 @@ impl LengthModel {
         let x = rng.lognormal(self.in_mu, self.in_sigma);
         (x.round() as u64).clamp(1, self.in_cap as u64) as u32
     }
+
+    /// Rescale a sampled (prompt, output) pair from this model's paper
+    /// scale to the pico real-execution domain, when one is given. The
+    /// single definition shared by [`TraceGen`] and
+    /// [`crate::workload::ScenarioSpec`], so sim and serve see identical
+    /// lengths.
+    pub fn rescale(&self, pico: Option<(u32, u32)>, prompt: u32, output: u32) -> (u32, u32) {
+        match pico {
+            None => (prompt, output),
+            Some((mp, mo)) => {
+                let p = ((prompt as f64) * (mp as f64) / (self.in_cap as f64))
+                    .round()
+                    .max(1.0) as u32;
+                let o = ((output as f64) * (mo as f64) / (self.cap as f64))
+                    .round()
+                    .max(1.0) as u32;
+                (p.min(mp), o.min(mo))
+            }
+        }
+    }
+
+    /// 16-band tag of a paper-scale output length (drives prompt synthesis
+    /// for the live LM path: the tag byte selects the expected-length
+    /// band).
+    pub fn tag_band(&self, output: u32) -> u8 {
+        (output as f64 / self.cap.max(1) as f64 * 15.0)
+            .round()
+            .clamp(0.0, 15.0) as u8
+    }
 }
 
 /// Trace generator: Poisson arrivals at `rps`, lengths from [`LengthModel`],
@@ -159,21 +199,6 @@ impl TraceGen {
         self
     }
 
-    fn rescale(&self, prompt: u32, output: u32) -> (u32, u32) {
-        match self.pico_scale {
-            None => (prompt, output),
-            Some((mp, mo)) => {
-                let p = ((prompt as f64) * (mp as f64) / (self.model.in_cap as f64))
-                    .round()
-                    .max(1.0) as u32;
-                let o = ((output as f64) * (mo as f64) / (self.model.cap as f64))
-                    .round()
-                    .max(1.0) as u32;
-                (p.min(mp), o.min(mo))
-            }
-        }
-    }
-
     /// Generate `n` requests with Poisson arrivals starting at t=0.
     pub fn generate(&self, n: usize, seed: u64) -> Vec<Request> {
         let mut rng = Pcg64::new(seed, WORKLOAD_STREAM);
@@ -183,18 +208,14 @@ impl TraceGen {
             t += rng.exponential(self.rps.max(1e-9));
             let prompt = self.model.sample_prompt(&mut rng);
             let output = self.model.sample_output(&mut rng);
-            let (prompt_len, output_len) = self.rescale(prompt, output);
-            // tag encodes the length band (16 bands) so the live-LM path
-            // can synthesize a prompt whose expected length matches.
-            let band = (output as f64 / self.model.cap as f64 * 15.0)
-                .round()
-                .clamp(0.0, 15.0) as u8;
+            let (prompt_len, output_len) = self.model.rescale(self.pico_scale, prompt, output);
             out.push(Request {
                 id: id as RequestId,
                 arrival: t,
                 prompt_len,
                 output_len,
-                tag: band,
+                tag: self.model.tag_band(output),
+                class: RequestClass::Chat,
             });
         }
         out
@@ -213,16 +234,14 @@ impl TraceGen {
             }
             let prompt = self.model.sample_prompt(&mut rng);
             let output = self.model.sample_output(&mut rng);
-            let (prompt_len, output_len) = self.rescale(prompt, output);
-            let band = (output as f64 / self.model.cap as f64 * 15.0)
-                .round()
-                .clamp(0.0, 15.0) as u8;
+            let (prompt_len, output_len) = self.model.rescale(self.pico_scale, prompt, output);
             out.push(Request {
                 id,
                 arrival: t,
                 prompt_len,
                 output_len,
-                tag: band,
+                tag: self.model.tag_band(output),
+                class: RequestClass::Chat,
             });
             id += 1;
         }

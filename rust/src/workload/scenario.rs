@@ -1,0 +1,372 @@
+//! Scenario synthesis: arrival process × class mix × multi-round sessions.
+//!
+//! A [`ScenarioSpec`] is the full workload shape of one experiment. Its
+//! [`ScenarioSpec::generate`] output is a [`ScenarioTrace`]: the initial
+//! request arrivals plus a [`SessionPlan`] of precomputed follow-up turns.
+//! Follow-up turns model multi-round conversations ("Efficient Multi-round
+//! LLM Inference over Disaggregated Serving", arXiv:2602.14516): turn k+1
+//! arrives a think-time after turn k *completes*, and its prompt includes
+//! the accumulated history (previous prompt + previous output + fresh user
+//! text). Because completion times are dynamic, the drivers — not the
+//! generator — realize follow-up arrivals: the simulator through its
+//! `SessionFollowUp` event, the live server through the same plan, so both
+//! replay the identical per-turn schedule.
+
+use super::arrival::ArrivalProcess;
+use super::classes::{ClassMix, ClassSpec, RequestClass, SloByClass};
+use super::Request;
+use crate::prng::Pcg64;
+use crate::{RequestId, Result, Time};
+
+/// PRNG stream id for scenario generation ("SCEN").
+const SCENARIO_STREAM: u64 = 0x5343_454e;
+
+/// Multi-round session shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionProfile {
+    /// Probability that an initial request starts a multi-round session.
+    pub session_frac: f64,
+    /// Total turns per session, uniform in `[min_turns, max_turns]`.
+    pub min_turns: u32,
+    pub max_turns: u32,
+    /// Mean think time between a turn's completion and the next turn's
+    /// arrival (exponential).
+    pub think_mean_s: f64,
+    /// Accumulated-history cap: follow-up prompts never exceed this.
+    pub max_context_tokens: u32,
+}
+
+impl Default for SessionProfile {
+    fn default() -> Self {
+        SessionProfile {
+            session_frac: 0.5,
+            min_turns: 2,
+            max_turns: 4,
+            think_mean_s: 5.0,
+            max_context_tokens: 32_768,
+        }
+    }
+}
+
+impl SessionProfile {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.session_frac) {
+            return Err(crate::Error::config("session.frac must be in [0,1]"));
+        }
+        if self.min_turns < 2 || self.max_turns < self.min_turns {
+            return Err(crate::Error::config(
+                "session turns need 2 <= min_turns <= max_turns",
+            ));
+        }
+        if self.think_mean_s <= 0.0 {
+            return Err(crate::Error::config("session.think_mean_s must be > 0"));
+        }
+        if self.max_context_tokens == 0 {
+            return Err(crate::Error::config("session.max_context must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+/// One precomputed follow-up turn of a session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionTurn {
+    /// Prompt length INCLUDING accumulated history tokens.
+    pub prompt_len: u32,
+    pub output_len: u32,
+    /// Delay between the previous turn's completion and this arrival.
+    pub think_time_s: f64,
+    pub class: RequestClass,
+    pub tag: u8,
+}
+
+/// The session side of a [`ScenarioTrace`]: per-session scripts of
+/// follow-up turns, plus which initial request opens which session.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionPlan {
+    /// `scripts[s]` = follow-up turns (turn 2, 3, …) of session `s`.
+    pub scripts: Vec<Vec<SessionTurn>>,
+    /// `(initial request id, session index)` pairs.
+    pub first_turns: Vec<(RequestId, u32)>,
+}
+
+impl SessionPlan {
+    pub fn is_empty(&self) -> bool {
+        self.scripts.is_empty()
+    }
+
+    /// Total follow-up requests this plan will spawn if every turn's
+    /// predecessor completes.
+    pub fn total_follow_ups(&self) -> usize {
+        self.scripts.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// A fully-specified workload scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Registry / display name ("stationary", "bursty_mixed", "custom"…).
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    pub classes: ClassMix,
+    pub sessions: Option<SessionProfile>,
+    /// If set, rescale lengths to the pico (real-execution) domain
+    /// `(max_prompt, max_output)` — mirrors `TraceGen::pico`.
+    pub pico_scale: Option<(u32, u32)>,
+}
+
+/// A generated scenario workload: initial arrivals + session plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioTrace {
+    pub requests: Vec<Request>,
+    pub sessions: SessionPlan,
+}
+
+impl ScenarioTrace {
+    /// Wrap a plain request trace (no sessions) — the compatibility path
+    /// every pre-scenario caller goes through.
+    pub fn from_requests(requests: Vec<Request>) -> ScenarioTrace {
+        ScenarioTrace {
+            requests,
+            sessions: SessionPlan::default(),
+        }
+    }
+
+    /// Initial requests plus every planned follow-up turn.
+    pub fn total_planned(&self) -> usize {
+        self.requests.len() + self.sessions.total_follow_ups()
+    }
+}
+
+impl ScenarioSpec {
+    /// The legacy single-class stationary workload (what `TraceGen`
+    /// produced): Poisson arrivals over one dataset-shaped class.
+    pub fn stationary(dataset: super::Dataset, rps: f64) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "stationary".to_string(),
+            arrival: ArrivalProcess::Poisson { rps },
+            classes: ClassMix::single(ClassSpec::dataset(dataset)),
+            sessions: None,
+            pico_scale: None,
+        }
+    }
+
+    /// Rescale to the real-execution domain (star-pico budgets).
+    pub fn pico(mut self, max_prompt: u32, max_output: u32) -> ScenarioSpec {
+        self.pico_scale = Some((max_prompt, max_output));
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.arrival.validate()?;
+        for spec in self.classes.specs() {
+            spec.validate()?;
+        }
+        if let Some(s) = &self.sessions {
+            s.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Per-class SLO targets of this scenario.
+    pub fn slos(&self) -> SloByClass {
+        self.classes.slos()
+    }
+
+    /// Generate `n` initial requests (sessions add follow-up turns on
+    /// top). Deterministic: same seed ⇒ identical trace.
+    pub fn generate(&self, n: usize, seed: u64) -> ScenarioTrace {
+        let mut rng = Pcg64::new(seed, SCENARIO_STREAM);
+        let times = self.arrival.sample(n, &mut rng);
+        self.build(&times, &mut rng)
+    }
+
+    /// Generate all initial requests arriving in `[0, duration]` seconds.
+    pub fn generate_for(&self, duration: Time, seed: u64) -> ScenarioTrace {
+        let mut rng = Pcg64::new(seed, SCENARIO_STREAM);
+        let times = self.arrival.sample_for(duration, &mut rng);
+        self.build(&times, &mut rng)
+    }
+
+    fn build(&self, times: &[Time], rng: &mut Pcg64) -> ScenarioTrace {
+        let mut requests = Vec::with_capacity(times.len());
+        let mut plan = SessionPlan::default();
+        for (id, &t) in times.iter().enumerate() {
+            let spec = self.classes.sample(rng);
+            let prompt_raw = spec.lengths.sample_prompt(rng);
+            let output_raw = spec.lengths.sample_output(rng);
+            let (prompt_len, output_len) =
+                spec.lengths.rescale(self.pico_scale, prompt_raw, output_raw);
+            requests.push(Request {
+                id: id as RequestId,
+                arrival: t,
+                prompt_len,
+                output_len,
+                tag: spec.lengths.tag_band(output_raw),
+                class: spec.class,
+            });
+            if let Some(sp) = &self.sessions {
+                // draw the session coin for every request so the arrival /
+                // length streams stay aligned regardless of the outcome
+                if sp.session_frac > 0.0 && rng.coin(sp.session_frac) {
+                    let total_turns =
+                        rng.range_u64(sp.min_turns as u64, sp.max_turns as u64) as u32;
+                    let script =
+                        self.build_script(sp, spec, prompt_len, output_len, total_turns, rng);
+                    if !script.is_empty() {
+                        plan.first_turns.push((id as RequestId, plan.scripts.len() as u32));
+                        plan.scripts.push(script);
+                    }
+                }
+            }
+        }
+        ScenarioTrace {
+            requests,
+            sessions: plan,
+        }
+    }
+
+    /// Follow-up turns 2..=total for one session: each prompt carries the
+    /// accumulated history of everything before it.
+    fn build_script(
+        &self,
+        sp: &SessionProfile,
+        spec: &ClassSpec,
+        first_prompt: u32,
+        first_output: u32,
+        total_turns: u32,
+        rng: &mut Pcg64,
+    ) -> Vec<SessionTurn> {
+        let max_ctx = match self.pico_scale {
+            Some((mp, _)) => sp.max_context_tokens.min(mp),
+            None => sp.max_context_tokens,
+        };
+        let mut script = Vec::new();
+        let mut ctx = first_prompt.saturating_add(first_output);
+        for _ in 1..total_turns {
+            let fresh_raw = spec.lengths.sample_prompt(rng);
+            let out_raw = spec.lengths.sample_output(rng);
+            let (fresh, output_len) = spec.lengths.rescale(self.pico_scale, fresh_raw, out_raw);
+            let prompt_len = ctx.saturating_add(fresh).clamp(1, max_ctx);
+            let think_time_s = rng.exponential(1.0 / sp.think_mean_s.max(1e-9));
+            script.push(SessionTurn {
+                prompt_len,
+                output_len,
+                think_time_s,
+                class: spec.class,
+                tag: spec.lengths.tag_band(out_raw),
+            });
+            ctx = prompt_len.saturating_add(output_len);
+        }
+        script
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Dataset;
+
+    fn session_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "test_sessions".to_string(),
+            arrival: ArrivalProcess::Poisson { rps: 1.0 },
+            classes: ClassMix::mixed_default(),
+            sessions: Some(SessionProfile {
+                session_frac: 0.7,
+                min_turns: 2,
+                max_turns: 4,
+                think_mean_s: 3.0,
+                max_context_tokens: 60_000,
+            }),
+            pico_scale: None,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let spec = session_spec();
+        assert_eq!(spec.generate(200, 9), spec.generate(200, 9));
+        assert_ne!(spec.generate(200, 9), spec.generate(200, 10));
+    }
+
+    #[test]
+    fn session_prompts_grow_with_history() {
+        let spec = session_spec();
+        let trace = spec.generate(400, 3);
+        assert!(!trace.sessions.is_empty(), "session_frac 0.7 must open sessions");
+        assert!(trace.sessions.total_follow_ups() > 0);
+        for &(rid, s) in &trace.sessions.first_turns {
+            let first = &trace.requests[rid as usize];
+            let script = &trace.sessions.scripts[s as usize];
+            let mut prev_ctx = first.prompt_len + first.output_len;
+            for turn in script {
+                assert!(
+                    turn.prompt_len >= prev_ctx.min(60_000),
+                    "turn prompt {} must include history {}",
+                    turn.prompt_len,
+                    prev_ctx
+                );
+                assert!(turn.prompt_len <= 60_000);
+                assert!(turn.think_time_s > 0.0);
+                prev_ctx = turn.prompt_len + turn.output_len;
+            }
+        }
+    }
+
+    #[test]
+    fn stationary_matches_trace_gen_shape() {
+        let spec = ScenarioSpec::stationary(Dataset::ShareGpt, 2.0);
+        let trace = spec.generate(4_000, 1);
+        assert!(trace.sessions.is_empty());
+        for w in trace.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let rate = trace.requests.len() as f64 / trace.requests.last().unwrap().arrival;
+        assert!((rate - 2.0).abs() < 0.2, "rate {rate}");
+        assert!(trace.requests.iter().all(|r| r.class == RequestClass::Chat));
+    }
+
+    #[test]
+    fn mixed_classes_all_present() {
+        let spec = ScenarioSpec {
+            sessions: None,
+            ..session_spec()
+        };
+        let trace = spec.generate(2_000, 4);
+        for class in RequestClass::ALL {
+            let n = trace.requests.iter().filter(|r| r.class == class).count();
+            assert!(n > 100, "class {} underrepresented: {n}", class.name());
+        }
+    }
+
+    #[test]
+    fn pico_scale_bounds_all_turns() {
+        let spec = session_spec().pico(128, 512);
+        let trace = spec.generate(500, 6);
+        for r in &trace.requests {
+            assert!((1..=128).contains(&r.prompt_len));
+            assert!((1..=512).contains(&r.output_len));
+        }
+        for script in &trace.sessions.scripts {
+            for turn in script {
+                assert!((1..=128).contains(&turn.prompt_len));
+                assert!((1..=512).contains(&turn.output_len));
+            }
+        }
+    }
+
+    #[test]
+    fn profile_validation() {
+        let mut p = SessionProfile::default();
+        p.session_frac = 1.5;
+        assert!(p.validate().is_err());
+        let mut p = SessionProfile::default();
+        p.min_turns = 1;
+        assert!(p.validate().is_err());
+        let mut p = SessionProfile::default();
+        p.max_turns = 1;
+        assert!(p.validate().is_err());
+        assert!(SessionProfile::default().validate().is_ok());
+    }
+}

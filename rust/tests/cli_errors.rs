@@ -1,0 +1,108 @@
+//! CLI error-surface tests: unknown `--dispatch` / `--reschedule` /
+//! `--dataset` / `--scenario` values must fail loudly WITH the list of
+//! valid names (they used to be silently ignored or reported without the
+//! candidates), and the scenario path must run end-to-end.
+
+use std::process::Command;
+
+fn star() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_star"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = star().args(args).output().expect("spawn star binary");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn unknown_dispatch_lists_valid_names() {
+    let (ok, _, err) = run(&["simulate", "--dispatch", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown dispatch policy `bogus`"), "{err}");
+    assert!(err.contains("round_robin"), "must list candidates: {err}");
+    assert!(err.contains("current_load"), "must list candidates: {err}");
+}
+
+#[test]
+fn unknown_reschedule_lists_valid_names() {
+    let (ok, _, err) = run(&["simulate", "--reschedule", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown reschedule policy `bogus`"), "{err}");
+    assert!(err.contains("memory_pressure"), "must list candidates: {err}");
+    assert!(err.contains("star"), "must list candidates: {err}");
+}
+
+#[test]
+fn unknown_dataset_lists_valid_names() {
+    for sub in ["simulate", "workload"] {
+        let (ok, _, err) = run(&[sub, "--dataset", "bogus", "--requests", "1"]);
+        assert!(!ok, "{sub} must fail on a bad dataset");
+        assert!(err.contains("unknown dataset `bogus`"), "{sub}: {err}");
+        assert!(err.contains("sharegpt|alpaca"), "{sub}: {err}");
+    }
+}
+
+#[test]
+fn unknown_scenario_lists_valid_names() {
+    let (ok, _, err) = run(&["simulate", "--scenario", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown scenario `bogus`"), "{err}");
+    assert!(err.contains("bursty_mixed"), "must list candidates: {err}");
+    assert!(err.contains("multi_round"), "must list candidates: {err}");
+}
+
+#[test]
+fn unknown_flag_still_reports_usage() {
+    let (ok, _, err) = run(&["simulate", "--frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("unknown flag --frobnicate"), "{err}");
+}
+
+#[test]
+fn bursty_scenario_simulation_runs_end_to_end_with_class_rows() {
+    let (ok, out, err) = run(&[
+        "simulate",
+        "--scenario",
+        "bursty_mixed",
+        "--requests",
+        "40",
+        "--rps",
+        "0.5",
+        "--kv-capacity",
+        "400000",
+    ]);
+    assert!(ok, "simulate --scenario bursty_mixed failed: {err}");
+    assert!(out.contains("completed"), "missing summary line: {out}");
+    // per-class rows (the violations the aggregate line hides)
+    assert!(out.contains("class chat"), "missing chat row: {out}");
+    assert!(out.contains("goodput"), "{out}");
+}
+
+#[test]
+fn validate_bench_accepts_good_and_rejects_bad_json() {
+    let dir = std::env::temp_dir().join("star_cli_validate_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let good = dir.join("BENCH_good.json");
+    let bad = dir.join("BENCH_bad.json");
+    std::fs::write(&good, "{\"schema_version\": 1, \"bench\": \"good\"}\n").unwrap();
+    std::fs::write(&bad, "{\"bench\": \"bad\"}\n").unwrap();
+    let (ok, out, _) = run(&["validate-bench", good.to_str().unwrap()]);
+    assert!(ok, "valid file must pass");
+    assert!(out.contains("1 file(s) OK"), "{out}");
+    let (ok, _, err) = run(&[
+        "validate-bench",
+        good.to_str().unwrap(),
+        bad.to_str().unwrap(),
+    ]);
+    assert!(!ok, "missing schema_version must fail");
+    assert!(err.contains("schema_version"), "{err}");
+    let (ok, _, err) = run(&["validate-bench"]);
+    assert!(!ok, "no files is an error");
+    assert!(err.contains("at least one"), "{err}");
+    std::fs::remove_file(&good).ok();
+    std::fs::remove_file(&bad).ok();
+}

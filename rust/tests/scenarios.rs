@@ -1,0 +1,264 @@
+//! Scenario-subsystem integration tests: determinism, distribution shape
+//! of the new arrival processes, session-ordering invariants through the
+//! simulator, and per-class SLO accounting (ISSUE 3 satellite coverage).
+
+use star::bench::scenarios::{resolve_scenario, run_scenario_trace, ScenarioRegistry};
+use star::config::{ExperimentConfig, PredictorKind};
+use star::prng::Pcg64;
+use star::sim::{SimParams, Simulator};
+use star::workload::{ArrivalProcess, RequestClass};
+
+fn base_exp(rps: f64, seed: u64) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_decode = 3;
+    exp.cluster.rps = rps;
+    exp.cluster.seed = seed;
+    exp.cluster.kv_capacity_tokens = 400_000; // roomy: nothing fails
+    exp.predictor = PredictorKind::Oracle;
+    exp
+}
+
+#[test]
+fn every_builtin_scenario_generates_deterministically() {
+    let reg = ScenarioRegistry::with_builtins();
+    let exp = base_exp(0.5, 7);
+    assert_eq!(
+        reg.names(),
+        vec!["bursty_mixed", "diurnal_chat", "multi_round", "stationary"]
+    );
+    for name in reg.names() {
+        let spec = reg.build(&name, &exp).expect("builtin scenario builds");
+        let a = spec.generate(300, 11);
+        let b = spec.generate(300, 11);
+        assert_eq!(a, b, "{name}: same seed must give an identical trace");
+        let c = spec.generate(300, 12);
+        assert_ne!(a, c, "{name}: different seed must differ");
+        for w in a.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "{name}: arrivals unsorted");
+        }
+    }
+}
+
+#[test]
+fn unknown_scenario_error_lists_the_registry() {
+    let reg = ScenarioRegistry::with_builtins();
+    let err = reg
+        .build("bogus", &ExperimentConfig::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown scenario `bogus`"), "{err}");
+    assert!(err.contains("bursty_mixed"), "{err}");
+    assert!(err.contains("stationary"), "{err}");
+}
+
+#[test]
+fn bursty_and_diurnal_traces_reproduce_their_mean_rps() {
+    // distribution-shape coverage: realized rate over a long trace must
+    // match the configured long-run mean within tolerance
+    // bursty tolerance is wide: MMPP phase durations are exponential, so
+    // the realized rate of one deterministic trace carries ~5% rel. std
+    for (name, tol_frac) in [("bursty_mixed", 0.20), ("diurnal_chat", 0.10)] {
+        let exp = base_exp(2.0, 3);
+        let spec = ScenarioRegistry::with_builtins()
+            .build(name, &exp)
+            .unwrap();
+        let mean = spec.arrival.mean_rps();
+        assert!(
+            (mean - 2.0).abs() < 1e-9,
+            "{name}: builders must preserve cluster.rps as the mean (got {mean})"
+        );
+        let mut rng = Pcg64::new(17, 29);
+        let times = spec.arrival.sample(25_000, &mut rng);
+        let realized = times.len() as f64 / times.last().unwrap();
+        assert!(
+            (realized - mean).abs() < tol_frac * mean,
+            "{name}: realized rate {realized:.3} vs configured mean {mean:.3}"
+        );
+    }
+}
+
+#[test]
+fn onoff_burstiness_exceeds_poisson() {
+    let exp = base_exp(2.0, 3);
+    let spec = ScenarioRegistry::with_builtins()
+        .build("bursty_mixed", &exp)
+        .unwrap();
+    let mut rng = Pcg64::new(5, 5);
+    let times = spec.arrival.sample(20_000, &mut rng);
+    let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+    let n = gaps.len() as f64;
+    let mean = gaps.iter().sum::<f64>() / n;
+    let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / n;
+    let cv = var.sqrt() / mean;
+    assert!(
+        cv > 1.2,
+        "bursty_mixed inter-arrival CV {cv:.2} should exceed the Poisson value 1.0"
+    );
+    // and the stationary baseline should sit near 1.0
+    let stat = ScenarioRegistry::with_builtins()
+        .build("stationary", &exp)
+        .unwrap();
+    let mut rng = Pcg64::new(5, 5);
+    let times = stat.arrival.sample(20_000, &mut rng);
+    let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+    let cv0 = var.sqrt() / mean;
+    assert!((cv0 - 1.0).abs() < 0.1, "poisson CV {cv0:.2}");
+}
+
+#[test]
+fn session_turns_never_arrive_before_prior_turn_completes() {
+    let mut exp = base_exp(0.4, 21);
+    exp.scenario_name = Some("multi_round".to_string());
+    let spec = resolve_scenario(&exp).unwrap().expect("named scenario");
+    let strace = spec.generate(60, exp.cluster.seed);
+    assert!(strace.sessions.total_follow_ups() > 0, "need follow-ups");
+    let planned = strace.total_planned();
+    let params = SimParams {
+        exp,
+        ..Default::default()
+    };
+    let report = Simulator::with_scenario(
+        params,
+        strace,
+        &star::coordinator::PolicyRegistry::with_builtins(),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.n_failed, 0, "roomy capacity: nothing may fail");
+    assert_eq!(report.completed.len(), planned);
+    let by_id: std::collections::HashMap<_, _> =
+        report.completed.iter().map(|l| (l.id, l)).collect();
+    let mut checked = 0;
+    for chain in &report.session_chains {
+        for w in chain.windows(2) {
+            let prev = by_id[&w[0]];
+            let next = by_id[&w[1]];
+            assert!(
+                next.arrival >= prev.finished.unwrap() - 1e-9,
+                "turn {} arrived at {:.3} before turn {} finished at {:.3}",
+                w[1],
+                next.arrival,
+                w[0],
+                prev.finished.unwrap()
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no realized multi-turn chains");
+}
+
+#[test]
+fn bursty_mixed_sim_reports_per_class_percentiles_and_goodput() {
+    // the acceptance-criteria path: bursty_mixed end-to-end with per-class
+    // TTFT/TPOT percentiles and per-class goodput in the report
+    let mut exp = base_exp(0.5, 9);
+    exp.scenario_name = Some("bursty_mixed".to_string());
+    let spec = resolve_scenario(&exp).unwrap().expect("named scenario");
+    let strace = spec.generate(150, exp.cluster.seed);
+    let slos = spec.slos();
+    let report = run_scenario_trace(
+        star::bench::scenarios::paper_scenarios()[3], // STAR Oracle
+        exp,
+        false,
+        &strace,
+    );
+    assert!(report.completed.len() > 100);
+    let per_class = report.class_metrics(&slos);
+    assert!(
+        per_class.len() >= 2,
+        "mixed workload must surface multiple classes: {per_class:?}"
+    );
+    for c in &per_class {
+        assert!(c.n > 0);
+        assert!(c.ttft_p50_ms.is_finite() && c.ttft_p50_ms > 0.0);
+        assert!(c.ttft_p99_ms >= c.ttft_p50_ms - 1e-9);
+        assert!(c.goodput >= 0.0);
+    }
+    let summary = report.class_summary(&slos);
+    for c in &per_class {
+        assert!(
+            summary.contains(c.class.name()),
+            "summary must mention {}: {summary}",
+            c.class.name()
+        );
+    }
+    // per-class goodput must differ from judging everything on one SLO
+    // whenever relaxed-SLO classes have violations of the strict target
+    let m = report.metrics();
+    assert!(m.goodput_by_class(&slos) >= 0.0);
+}
+
+#[test]
+fn classes_flow_from_trace_to_completed_latencies() {
+    let mut exp = base_exp(0.5, 13);
+    exp.scenario_name = Some("bursty_mixed".to_string());
+    let spec = resolve_scenario(&exp).unwrap().unwrap();
+    let strace = spec.generate(120, exp.cluster.seed);
+    let expect: std::collections::HashMap<u64, RequestClass> = strace
+        .requests
+        .iter()
+        .map(|r| (r.id, r.class))
+        .collect();
+    let params = SimParams {
+        exp,
+        ..Default::default()
+    };
+    let report = Simulator::with_scenario(
+        params,
+        strace,
+        &star::coordinator::PolicyRegistry::with_builtins(),
+    )
+    .unwrap()
+    .run();
+    assert!(!report.completed.is_empty());
+    for l in &report.completed {
+        assert_eq!(
+            l.class, expect[&l.id],
+            "latency {} lost its class label",
+            l.id
+        );
+    }
+}
+
+#[test]
+fn rebuild_scenario_tracks_cluster_overrides() {
+    // [workload.*] table defaults derive from cluster.rps; a CLI --rps
+    // applied after config parse must flow into the rebuilt scenario
+    let cfg = star::config::Config::from_str("[workload.arrival]\nkind = \"onoff\"\n").unwrap();
+    let mut exp = ExperimentConfig::from_config(&cfg).unwrap();
+    let frozen = exp.scenario.as_ref().unwrap().arrival.mean_rps();
+    exp.cluster.rps = 2.0; // simulate the CLI override
+    exp.rebuild_scenario(&cfg).unwrap();
+    let rebuilt = exp.scenario.as_ref().unwrap().arrival.mean_rps();
+    assert!((rebuilt - 2.0).abs() < 1e-9, "rebuilt mean {rebuilt}");
+    assert!(
+        (frozen - rebuilt).abs() > 1e-9,
+        "test must actually change the rate (frozen {frozen})"
+    );
+}
+
+#[test]
+fn replay_arrival_process_round_trips_through_config() {
+    let path = std::env::temp_dir().join("star_scenarios_replay.txt");
+    std::fs::write(&path, "0.25\n0.5\n1.5\n").unwrap();
+    let toml = format!(
+        "[workload.arrival]\nkind = \"replay\"\npath = \"{}\"\n",
+        path.display()
+    );
+    let cfg = star::config::Config::from_str(&toml).unwrap();
+    let exp = ExperimentConfig::from_config(&cfg).unwrap();
+    let spec = resolve_scenario(&exp).unwrap().expect("replay scenario");
+    assert_eq!(
+        spec.arrival,
+        ArrivalProcess::Replay {
+            times: vec![0.25, 0.5, 1.5]
+        }
+    );
+    // replay caps the trace length at the recorded series
+    let trace = spec.generate(10, 0);
+    assert_eq!(trace.requests.len(), 3);
+    assert_eq!(trace.requests[2].arrival, 1.5);
+    std::fs::remove_file(&path).ok();
+}

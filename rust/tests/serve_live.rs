@@ -26,6 +26,7 @@ fn tiny_request(id: u64, arrival: f64, out: u32, tag: u8) -> LiveRequest {
         prompt: vec![1, b'Q', b'a' + tag, b'x', b'y', b'?'],
         forced_output: Some(out),
         tag,
+        class: star::workload::RequestClass::Chat,
     }
 }
 
@@ -86,6 +87,58 @@ fn live_migration_preserves_completion() {
 }
 
 #[test]
+fn session_follow_up_turns_replay_on_live_path() {
+    use star::workload::{RequestClass, SessionPlan, SessionTurn};
+    let Some(rt) = runtime() else { return };
+    let mut params = ServeParams::default();
+    params.exp.cluster.n_prefill = 1;
+    params.exp.cluster.n_decode = 2;
+    params.exp.cluster.kv_capacity_tokens = 3_000;
+    params.exp.cluster.max_batch = 8;
+    params.exp.rescheduler.enabled = false;
+    params.exp.predictor = PredictorKind::Oracle;
+    params.max_wall_s = 120.0;
+    // request 0 opens a 2-turn session: the follow-up arrives only after
+    // turn 1 completes (plus a short think time) with a grown prompt
+    params.sessions = SessionPlan {
+        scripts: vec![vec![SessionTurn {
+            prompt_len: 24,
+            output_len: 15,
+            think_time_s: 0.2,
+            class: RequestClass::Chat,
+            tag: 1,
+        }]],
+        first_turns: vec![(0, 0)],
+    };
+    let reqs = vec![tiny_request(0, 0.0, 20, 1), tiny_request(1, 0.05, 20, 1)];
+    let server = Server::new(rt, params);
+    let out = server.run(reqs).expect("serve run");
+    assert_eq!(
+        out.metrics.completed.len(),
+        3,
+        "2 initial + 1 follow-up turn must complete"
+    );
+    let first = out
+        .metrics
+        .completed
+        .iter()
+        .find(|l| l.id == 0)
+        .expect("turn 1 completed");
+    let follow = out
+        .metrics
+        .completed
+        .iter()
+        .find(|l| l.id == 2)
+        .expect("follow-up spawned with the next free id");
+    assert!(
+        follow.arrival >= first.finished.unwrap() + 0.2 - 1e-6,
+        "follow-up at {} must wait for turn-1 completion {} + think time",
+        follow.arrival,
+        first.finished.unwrap()
+    );
+}
+
+#[test]
 fn llm_native_predictor_runs_on_live_path() {
     let Some(rt) = runtime() else { return };
     let mut params = ServeParams::default();
@@ -105,6 +158,7 @@ fn llm_native_predictor_runs_on_live_path() {
             prompt: vec![1, b'Q', b'c', b'd', b'e', b'?'],
             forced_output: None,
             tag: 2,
+            class: star::workload::RequestClass::Chat,
         })
         .collect();
     let server = Server::new(rt, params);
