@@ -7,27 +7,46 @@
 #   ./ci.sh --smoke     ... plus run every bench at smoke scale
 #                       (STAR_BENCH_SMOKE=1: ≤2k requests, ≤8 instances)
 #                       and validate every emitted BENCH_*.json
+#   ./ci.sh --bench NAME  build + run ONE bench (benches/NAME.rs) at smoke
+#                       scale and validate its BENCH_*.json — the quick
+#                       inner loop while iterating on a single bench
 #   ./ci.sh --no-lint   skip fmt/clippy (CI runs them as a separate job
 #                       so lint failures report independently of tests)
 #   STAR_BENCH_SMOKE=1 ./ci.sh   same as --smoke
 #
 # Every step is timed; on failure the script names the failing step
-# (build/test/fmt/clippy/smoke) so CI logs are triageable at a glance.
+# (build/test/fmt/clippy/smoke/bench) so CI logs are triageable at a glance.
 set -uo pipefail
 cd "$(dirname "$0")/rust" || exit 1
 
 SMOKE=0
 LINT=1
-for arg in "$@"; do
-  case "$arg" in
+BENCH_ONLY=""
+while [ $# -gt 0 ]; do
+  case "$1" in
     --smoke) SMOKE=1 ;;
     --no-lint) LINT=0 ;;
+    --bench)
+      if [ $# -lt 2 ]; then
+        echo "ci.sh: --bench expects a bench name (see benches/*.rs)" >&2
+        exit 2
+      fi
+      shift
+      BENCH_ONLY="$1"
+      ;;
     *)
-      echo "ci.sh: unknown argument \`$arg\` (supported: --smoke, --no-lint)" >&2
+      echo "ci.sh: unknown argument \`$1\` (supported: --smoke, --bench NAME, --no-lint)" >&2
       exit 2
       ;;
   esac
+  shift
 done
+
+if [ -n "$BENCH_ONLY" ] && [ ! -f "benches/$BENCH_ONLY.rs" ]; then
+  echo "ci.sh: unknown bench \`$BENCH_ONLY\`; known:" >&2
+  for f in benches/*.rs; do echo "  $(basename "$f" .rs)" >&2; done
+  exit 2
+fi
 # any non-empty value other than "0" enables smoke mode — the same rule
 # the benches' smoke() helper applies, so the two can never disagree
 if [ -n "${STAR_BENCH_SMOKE:-}" ] && [ "${STAR_BENCH_SMOKE}" != "0" ]; then
@@ -94,6 +113,28 @@ smoke_gate() {
   fi
   ./target/release/star validate-bench "${files[@]}"
 }
+
+# single-bench fast path: build, run it at smoke scale, validate its JSON
+single_bench() {
+  rm -f BENCH_*.json
+  if ! STAR_BENCH_SMOKE=1 cargo bench --bench "$BENCH_ONLY"; then
+    return 1
+  fi
+  local files=(BENCH_*.json)
+  if [ ! -e "${files[0]}" ]; then
+    echo "bench: $BENCH_ONLY emitted no BENCH_*.json" >&2
+    return 1
+  fi
+  ./target/release/star validate-bench "${files[@]}"
+}
+
+if [ -n "$BENCH_ONLY" ]; then
+  run_step build cargo build --release
+  run_step bench single_bench
+  print_summary
+  echo "ci.sh: bench \`$BENCH_ONLY\` passed"
+  exit 0
+fi
 
 run_step build cargo build --release
 run_step test cargo test -q

@@ -1,0 +1,201 @@
+//! Fig. 14 (beyond the paper): elastic instance pool vs static P/D
+//! splits under the drifting workload scenarios (diurnal_chat,
+//! bursty_mixed).
+//!
+//! Every static split of an 8-instance budget is run next to the elastic
+//! policies (`queue_pressure`, `predictive`) starting from a middling
+//! split with role flips only (`elastic.max_total = 0`, so the
+//! comparison is budget-fair). The claim under test: a pool that
+//! re-roles itself off the predictive load signal matches or beats the
+//! best frozen split on per-class goodput, because no single split is
+//! right for both the peak and the trough of a drifting workload.
+//! Emits `BENCH_elastic.json` (goodput, P99 TTFT/TPOT, scale-action
+//! count, and the instance-count timeline per elastic run).
+
+use star::bench::output::BenchJson;
+use star::bench::scenarios::{llm_native_rel_err, smoke, ScenarioRegistry};
+use star::bench::Table;
+use star::config::ExperimentConfig;
+use star::coordinator::PolicyRegistry;
+use star::sim::{SimParams, SimReport, Simulator};
+use star::workload::SloByClass;
+
+/// Fixed instance budget shared by every run.
+const TOTAL: usize = 8;
+
+struct RunRow {
+    label: String,
+    report: SimReport,
+    slos: SloByClass,
+    duration_planned: f64,
+}
+
+fn base_exp(
+    prefill: usize,
+    decode: usize,
+    scaling: &str,
+    rps: f64,
+    scenario: &str,
+) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_prefill = prefill;
+    exp.cluster.n_decode = decode;
+    exp.cluster.rps = rps;
+    exp.cluster.kv_capacity_tokens = 96_000;
+    exp.cluster.max_batch = 48;
+    exp.cluster.seed = 14;
+    exp.predictor_rel_err = llm_native_rel_err();
+    exp.scenario_name = Some(scenario.to_string());
+    exp.scaling_policy = scaling.to_string();
+    exp.elastic.scale_interval_s = 5.0;
+    exp.elastic.cooldown_s = 15.0;
+    exp.elastic.flip_delay_s = 2.0;
+    exp.elastic.max_total = 0; // flips only: budget-fair comparison
+    exp
+}
+
+fn run_one(label: &str, exp: ExperimentConfig, duration: f64) -> RunRow {
+    let spec = ScenarioRegistry::with_builtins()
+        .build(exp.scenario_name.as_deref().unwrap(), &exp)
+        .expect("builtin scenario");
+    let slos = spec.slos();
+    let trace = spec.generate_for(duration, exp.cluster.seed);
+    let params = SimParams {
+        exp,
+        max_sim_time: duration * 20.0,
+        ..Default::default()
+    };
+    let report = Simulator::with_scenario(params, trace, &PolicyRegistry::with_builtins())
+        .expect("builtin policies")
+        .run();
+    RunRow {
+        label: label.to_string(),
+        report,
+        slos,
+        duration_planned: duration,
+    }
+}
+
+fn timeline_json(report: &SimReport) -> String {
+    let mut s = String::from("[");
+    for (i, p) in report.pool_timeline.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!(
+            "[{:.1}, {}, {}]",
+            p.t, p.prefill_active, p.decode_active
+        ));
+    }
+    s.push(']');
+    s
+}
+
+fn main() {
+    let duration = if smoke() { 120.0 } else { 1800.0 };
+    let rps = if smoke() { 0.3 } else { 0.6 };
+
+    let mut json = BenchJson::new(
+        "elastic",
+        "elastic instance pool (flip-only, fixed 8-instance budget) vs static \
+         P/D splits under drifting scenarios",
+    );
+    json.field_num("duration_s", duration);
+    json.field_num("rps", rps);
+    json.field_int("total_instances", TOTAL as i64);
+
+    for scenario in ["diurnal_chat", "bursty_mixed"] {
+        let mut rows: Vec<RunRow> = Vec::new();
+        for prefill in [1usize, 2, 3, 4] {
+            let decode = TOTAL - prefill;
+            rows.push(run_one(
+                &format!("static {prefill}p/{decode}d"),
+                base_exp(prefill, decode, "static", rps, scenario),
+                duration,
+            ));
+        }
+        for scaling in ["queue_pressure", "predictive"] {
+            rows.push(run_one(
+                &format!("elastic {scaling} (from 2p/6d)"),
+                base_exp(2, TOTAL - 2, scaling, rps, scenario),
+                duration,
+            ));
+        }
+
+        let mut t = Table::new(
+            &format!("Fig 14 — {scenario}: static splits vs elastic policies"),
+            &[
+                "system",
+                "goodput (req/s)",
+                "P99 TTFT (ms)",
+                "P99 TPOT (ms)",
+                "completed",
+                "failed",
+                "scale actions",
+                "final pool",
+            ],
+        );
+        let mut best_static = f64::MIN;
+        let mut predictive_goodput = f64::MIN;
+        for row in &rows {
+            let m = row.report.metrics();
+            let goodput = m.goodput_by_class(&row.slos);
+            if row.label.starts_with("static") {
+                best_static = best_static.max(goodput);
+            }
+            if row.label.contains("predictive") {
+                predictive_goodput = goodput;
+            }
+            let final_pool = row
+                .report
+                .pool_timeline
+                .last()
+                .map(|p| format!("{}p/{}d", p.prefill_active, p.decode_active))
+                .unwrap_or_else(|| "-".to_string());
+            t.row(&[
+                row.label.clone(),
+                format!("{goodput:.4}"),
+                format!("{:.1}", m.p99_ttft_ms()),
+                format!("{:.2}", m.p99_tpot_ms()),
+                row.report.completed.len().to_string(),
+                row.report.n_failed.to_string(),
+                row.report.scale_actions.len().to_string(),
+                final_pool,
+            ]);
+            println!(
+                "[{scenario}] {}: goodput {goodput:.4} req/s over {:.0}s plan",
+                row.label, row.duration_planned
+            );
+        }
+        t.print();
+        json.table(&format!("{scenario}_results"), &t);
+        json.field_num(&format!("{scenario}_best_static_goodput"), best_static);
+        json.field_num(&format!("{scenario}_predictive_goodput"), predictive_goodput);
+        for row in &rows {
+            if !row.label.starts_with("static") {
+                let key = if row.label.contains("predictive") {
+                    format!("{scenario}_timeline_predictive")
+                } else {
+                    format!("{scenario}_timeline_queue_pressure")
+                };
+                json.field_raw(&key, &timeline_json(&row.report));
+                let actions: Vec<String> = row
+                    .report
+                    .scale_actions
+                    .iter()
+                    .map(|r| format!("\"{:.1}s {}\"", r.t, r.action))
+                    .collect();
+                json.field_raw(
+                    &format!("{key}_actions"),
+                    &format!("[{}]", actions.join(", ")),
+                );
+            }
+        }
+    }
+    json.write_or_die();
+    println!(
+        "claim: under drifting load the predictive elastic pool should match or \
+         beat the best static split's goodput (no frozen split fits both the \
+         peak and the trough)"
+    );
+}

@@ -8,7 +8,7 @@ mod parser;
 mod types;
 
 pub use parser::{parse_toml, Value};
-pub use types::{ClusterConfig, ExperimentConfig, PredictorKind, ReschedulerConfig};
+pub use types::{ClusterConfig, ElasticConfig, ExperimentConfig, PredictorKind, ReschedulerConfig};
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -109,6 +109,66 @@ impl Default for ReschedulerConfig {
     }
 }
 
+/// Elastic instance-pool parameters (`coordinator::elastic`): how fast
+/// the pool may change shape and how far it may shrink. The scaling
+/// *policy* itself is named by `ExperimentConfig::scaling_policy`
+/// (config key `policy.scaling`, CLI `--scaling`).
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Seconds between scaling decisions (the drivers' ScaleTick).
+    pub scale_interval_s: f64,
+    /// Modeled warm-up of a freshly provisioned instance (weights load,
+    /// CUDA graphs, allocator pools) before it accepts work.
+    pub provision_delay_s: f64,
+    /// Modeled re-role time of a drained instance flipping prefill↔decode
+    /// (smaller than a cold provision: weights stay resident).
+    pub flip_delay_s: f64,
+    /// Pool-size floors a scaling decision may never cross.
+    pub min_prefill: usize,
+    pub min_decode: usize,
+    /// Hard cap on total instances for `Provision` actions; 0 disables
+    /// provisioning entirely (the pool can only re-role, never grow) —
+    /// the fair setting for fixed-budget comparisons.
+    pub max_total: usize,
+    /// Minimum seconds between two executed scaling actions (thrash
+    /// damper; one in-flight transition already blocks new ones).
+    pub cooldown_s: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            scale_interval_s: 5.0,
+            provision_delay_s: 10.0,
+            flip_delay_s: 2.0,
+            min_prefill: 1,
+            min_decode: 1,
+            max_total: 0,
+            cooldown_s: 10.0,
+        }
+    }
+}
+
+impl ElasticConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.scale_interval_s <= 0.0 {
+            return Err(Error::config("elastic.scale_interval_s must be > 0"));
+        }
+        if self.provision_delay_s < 0.0 || self.flip_delay_s < 0.0 {
+            return Err(Error::config("elastic delays must be >= 0"));
+        }
+        if self.min_prefill == 0 || self.min_decode == 0 {
+            return Err(Error::config(
+                "elastic.min_prefill / min_decode must be >= 1",
+            ));
+        }
+        if self.cooldown_s < 0.0 {
+            return Err(Error::config("elastic.cooldown_s must be >= 0"));
+        }
+        Ok(())
+    }
+}
+
 /// Cluster + workload shape for one experiment run.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -157,6 +217,11 @@ pub struct ExperimentConfig {
     pub dispatch_policy: String,
     /// Reschedule policy, by registry name (config key `policy.reschedule`).
     pub reschedule_policy: String,
+    /// Scaling policy, by registry name (config key `policy.scaling`,
+    /// CLI `--scaling`). `"static"` = today's frozen pool (the default).
+    pub scaling_policy: String,
+    /// Elastic-pool mechanics (`[elastic]` table).
+    pub elastic: ElasticConfig,
     /// Policy-specific numeric knobs: every numeric `policy.*` config key
     /// except the two names above, with the `policy.` prefix stripped
     /// (e.g. `policy.slo_aware.mem_weight = 2.0`).
@@ -183,6 +248,8 @@ impl Default for ExperimentConfig {
             record_traces: false,
             dispatch_policy: "current_load".to_string(),
             reschedule_policy: "star".to_string(),
+            scaling_policy: "static".to_string(),
+            elastic: ElasticConfig::default(),
             policy_params: BTreeMap::new(),
             scenario_name: None,
             scenario: None,
@@ -233,7 +300,7 @@ impl ExperimentConfig {
             let Some(knob) = key.strip_prefix("policy.") else {
                 continue;
             };
-            if knob == "dispatch" || knob == "reschedule" {
+            if knob == "dispatch" || knob == "reschedule" || knob == "scaling" {
                 continue;
             }
             match cfg.get(key) {
@@ -256,6 +323,33 @@ impl ExperimentConfig {
             None => None,
         };
         let scenario = scenario_from_config(cfg, &cluster)?;
+        let eld = ElasticConfig::default();
+        // counts are range-checked as i64 BEFORE the usize cast: a
+        // negative value would otherwise wrap to ~2^64 and turn the
+        // guard floors (or the max_total provisioning cap) into silent
+        // nonsense instead of a config error
+        let min_prefill = cfg.i64_or("elastic.min_prefill", eld.min_prefill as i64);
+        let min_decode = cfg.i64_or("elastic.min_decode", eld.min_decode as i64);
+        let max_total = cfg.i64_or("elastic.max_total", eld.max_total as i64);
+        if min_prefill < 1 || min_decode < 1 {
+            return Err(Error::config(
+                "elastic.min_prefill / min_decode must be >= 1",
+            ));
+        }
+        if max_total < 0 {
+            return Err(Error::config(
+                "elastic.max_total must be >= 0 (0 disables provisioning)",
+            ));
+        }
+        let elastic = ElasticConfig {
+            scale_interval_s: cfg.f64_or("elastic.scale_interval_s", eld.scale_interval_s),
+            provision_delay_s: cfg.f64_or("elastic.provision_delay_s", eld.provision_delay_s),
+            flip_delay_s: cfg.f64_or("elastic.flip_delay_s", eld.flip_delay_s),
+            min_prefill: min_prefill as usize,
+            min_decode: min_decode as usize,
+            max_total: max_total as usize,
+            cooldown_s: cfg.f64_or("elastic.cooldown_s", eld.cooldown_s),
+        };
         Ok(ExperimentConfig {
             cluster,
             rescheduler,
@@ -266,6 +360,8 @@ impl ExperimentConfig {
             reschedule_policy: cfg
                 .str_or("policy.reschedule", &ed.reschedule_policy)
                 .to_string(),
+            scaling_policy: cfg.str_or("policy.scaling", &ed.scaling_policy).to_string(),
+            elastic,
             policy_params,
             scenario_name,
             scenario,
@@ -326,6 +422,14 @@ impl ExperimentConfig {
                 reg.reschedule_names().join("|")
             )));
         }
+        if !reg.has_scaling(&self.scaling_policy) {
+            return Err(Error::config(format!(
+                "unknown scaling policy `{}` (known: {})",
+                self.scaling_policy,
+                reg.scaling_names().join("|")
+            )));
+        }
+        self.elastic.validate()?;
         // knob keys are `<policy>.<knob>`; a typoed or aliased policy
         // prefix would otherwise be silently ignored and the default knob
         // value used — in a reproduction codebase the knob values ARE the
@@ -335,13 +439,15 @@ impl ExperimentConfig {
         for key in self.policy_params.keys() {
             let prefix = key.split('.').next().unwrap_or(key);
             let canonical = reg.dispatch_names().iter().any(|n| n == prefix)
-                || reg.reschedule_names().iter().any(|n| n == prefix);
+                || reg.reschedule_names().iter().any(|n| n == prefix)
+                || reg.scaling_names().iter().any(|n| n == prefix);
             if !canonical {
                 return Err(Error::config(format!(
                     "policy knob `{key}` must be prefixed with a canonical \
-                     policy name (dispatch: {}; reschedule: {})",
+                     policy name (dispatch: {}; reschedule: {}; scaling: {})",
                     reg.dispatch_names().join("|"),
-                    reg.reschedule_names().join("|")
+                    reg.reschedule_names().join("|"),
+                    reg.scaling_names().join("|")
                 )));
             }
         }
@@ -650,6 +756,54 @@ mod tests {
         let cfg =
             Config::from_str("[workload.class.chat]\nout_sigma = -1.0\n").unwrap();
         assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn elastic_table_and_scaling_key_parse_and_validate() {
+        let cfg = Config::from_str(
+            "[policy]\nscaling = \"predictive\"\n\
+             [elastic]\nscale_interval_s = 2.5\nmin_decode = 2\nmax_total = 12\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.scaling_policy, "predictive");
+        assert!((exp.elastic.scale_interval_s - 2.5).abs() < 1e-12);
+        assert_eq!(exp.elastic.min_decode, 2);
+        assert_eq!(exp.elastic.max_total, 12);
+        exp.validate().unwrap();
+        // defaults: static scaling, frozen totals
+        let exp = ExperimentConfig::from_config(&Config::from_str("").unwrap()).unwrap();
+        assert_eq!(exp.scaling_policy, "static");
+        assert_eq!(exp.elastic.max_total, 0);
+        // unknown scaling names and degenerate elastic values are rejected
+        let mut exp = ExperimentConfig::default();
+        exp.scaling_policy = "bogus".to_string();
+        let err = exp.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown scaling policy"), "{err}");
+        let mut exp = ExperimentConfig::default();
+        exp.elastic.min_decode = 0;
+        assert!(exp.validate().is_err());
+        // negative counts are rejected at parse time, not wrapped by the
+        // usize cast into absurd floors/caps
+        for bad in [
+            "[elastic]\nmin_decode = -1\n",
+            "[elastic]\nmin_prefill = 0\n",
+            "[elastic]\nmax_total = -1\n",
+        ] {
+            let cfg = Config::from_str(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_config(&cfg).is_err(),
+                "`{bad}` must be rejected"
+            );
+        }
+        let mut exp = ExperimentConfig::default();
+        exp.elastic.scale_interval_s = 0.0;
+        assert!(exp.validate().is_err());
+        // scaling-policy knobs pass the canonical-prefix check
+        let mut exp = ExperimentConfig::default();
+        exp.policy_params
+            .insert("predictive.kv_hi".to_string(), 0.9);
+        exp.validate().unwrap();
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use std::collections::HashMap;
 
+use super::elastic::Lifecycle;
 use super::{ClusterSnapshot, InstanceView, RequestView};
 use crate::{InstanceId, RequestId};
 
@@ -48,6 +49,9 @@ pub struct InstanceStats {
     inbound_reserved_tokens: u64,
     ewma_iter_ms: f64,
     iters: u64,
+    /// Elastic-pool lifecycle; only `Active` instances accept dispatches
+    /// or migration arrivals (see `coordinator::elastic`).
+    lifecycle: Lifecycle,
 }
 
 impl InstanceStats {
@@ -61,6 +65,7 @@ impl InstanceStats {
             inbound_reserved_tokens: 0,
             ewma_iter_ms: 0.0,
             iters: 0,
+            lifecycle: Lifecycle::Active,
         }
     }
 
@@ -115,6 +120,17 @@ impl InstanceStats {
     #[inline]
     pub fn requests(&self) -> &[RequestView] {
         &self.requests
+    }
+
+    #[inline]
+    pub fn lifecycle(&self) -> Lifecycle {
+        self.lifecycle
+    }
+
+    /// May this instance receive dispatches / migration arrivals?
+    #[inline]
+    pub fn is_schedulable(&self) -> bool {
+        self.lifecycle == Lifecycle::Active
     }
 }
 
@@ -278,10 +294,12 @@ impl ClusterState {
     }
 
     /// Record one scheduled decode iteration of length `iter_s` (EWMA
-    /// 0.9/0.1, seeded by the first sample).
+    /// 0.9/0.1, seeded by the first sample — unless the instance joined
+    /// mid-run with a cluster-median seed ([`Self::add_instance`]), which
+    /// the first real sample then *blends into* rather than overwrites).
     pub fn record_iteration(&mut self, di: usize, iter_s: f64) {
         let ms = iter_s * 1e3;
-        let new = if self.instances[di].iters == 0 {
+        let new = if self.instances[di].ewma_iter_ms <= 0.0 {
             ms
         } else {
             0.9 * self.instances[di].ewma_iter_ms + 0.1 * ms
@@ -313,6 +331,53 @@ impl ClusterState {
 
     pub fn set_capacity(&mut self, di: usize, kv_capacity_tokens: u64) {
         self.instances[di].kv_capacity_tokens = kv_capacity_tokens;
+    }
+
+    /// Set an instance's elastic lifecycle (drives schedulability).
+    pub fn set_lifecycle(&mut self, di: usize, lifecycle: Lifecycle) {
+        self.instances[di].lifecycle = lifecycle;
+    }
+
+    #[inline]
+    pub fn lifecycle(&self, di: usize) -> Lifecycle {
+        self.instances[di].lifecycle
+    }
+
+    /// Register a decode instance joining mid-run (elastic provision or
+    /// prefill→decode flip). Its iteration-time EWMA is seeded from the
+    /// cluster *median* of instances with live measurements — a fresh
+    /// instance must not fall back to the global construction-time
+    /// `initial_avg_iter_s` when the cluster already knows better.
+    /// Returns the new instance's id.
+    pub fn add_instance(&mut self, kv_capacity_tokens: u64) -> InstanceId {
+        let id = self.instances.len();
+        self.instances
+            .push(InstanceStats::new(id, kv_capacity_tokens));
+        if let Some(m) = self.median_busy_ewma_ms() {
+            self.set_iter_ewma(id, m);
+        }
+        id
+    }
+
+    /// Median EWMA iteration time (ms) over instances with at least one
+    /// measurement; `None` before any instance has measured.
+    pub fn median_busy_ewma_ms(&self) -> Option<f64> {
+        let mut busy: Vec<f64> = self
+            .instances
+            .iter()
+            .filter(|s| s.ewma_iter_ms > 0.0)
+            .map(|s| s.ewma_iter_ms)
+            .collect();
+        if busy.is_empty() {
+            return None;
+        }
+        busy.sort_by(|a, b| a.total_cmp(b));
+        let n = busy.len();
+        Some(if n % 2 == 1 {
+            busy[n / 2]
+        } else {
+            0.5 * (busy[n / 2 - 1] + busy[n / 2])
+        })
     }
 
     /// Replace one instance's membership wholesale from an authoritative
@@ -376,6 +441,7 @@ impl ClusterState {
                     requests: s.requests.clone(),
                     kv_capacity_tokens: s.kv_capacity_tokens,
                     inbound_reserved_tokens: s.inbound_reserved_tokens,
+                    lifecycle: s.lifecycle,
                 })
                 .collect(),
             tokens_per_interval: self.tokens_per_interval(),
@@ -409,6 +475,12 @@ impl ClusterState {
                 return Some(format!(
                     "instance {}: inbound reserved {} vs {}",
                     s.id, s.inbound_reserved_tokens, r.inbound_reserved_tokens
+                ));
+            }
+            if s.lifecycle != r.lifecycle {
+                return Some(format!(
+                    "instance {}: lifecycle {:?} vs {:?}",
+                    s.id, s.lifecycle, r.lifecycle
                 ));
             }
             if s.requests.len() != r.requests.len() {
@@ -627,6 +699,22 @@ impl<'a> InstanceRef<'a> {
                 .sum(),
         }
     }
+
+    /// Elastic-pool lifecycle (hand-built snapshots default to `Active`).
+    pub fn lifecycle(&self) -> Lifecycle {
+        match self.0 {
+            RefSrc::State(s) => s.lifecycle,
+            RefSrc::Snap(s) => s.lifecycle,
+        }
+    }
+
+    /// May this instance receive dispatches / migration arrivals? Every
+    /// placement decision (dispatch, migration destination) must respect
+    /// this — a `Draining` instance finishes its residents and nothing
+    /// else.
+    pub fn is_schedulable(&self) -> bool {
+        self.lifecycle() == Lifecycle::Active
+    }
 }
 
 #[cfg(test)]
@@ -740,6 +828,52 @@ mod tests {
         let mut snap = st.snapshot();
         snap.instances[0].requests[0].tokens = 101;
         assert!(st.consistency_diff(&snap).is_some());
+    }
+
+    #[test]
+    fn new_instance_seeds_ewma_from_cluster_median() {
+        let mut st = state();
+        // no measurements yet: a new instance starts unmeasured and the
+        // cluster average stays on the construction-time seed
+        let a = st.add_instance(10_000);
+        assert_eq!(a, 3);
+        assert_eq!(st.stats(a).ewma_iter_ms(), 0.0);
+        assert!(st.median_busy_ewma_ms().is_none());
+        // three live measurements: median of {10, 30, 80} = 30 ms
+        st.record_iteration(0, 0.010);
+        st.record_iteration(1, 0.030);
+        st.record_iteration(2, 0.080);
+        let b = st.add_instance(10_000);
+        assert!((st.stats(b).ewma_iter_ms() - 30.0).abs() < 1e-9);
+        // the seeded value participates in avg_iter_s immediately
+        let avg = st.avg_iter_s();
+        assert!((avg - (10.0 + 30.0 + 80.0 + 30.0) / 4.0 / 1e3).abs() < 1e-12);
+        // the first real sample BLENDS into the seed (0.9·30 + 0.1·50)
+        st.record_iteration(b, 0.050);
+        assert!((st.stats(b).ewma_iter_ms() - 32.0).abs() < 1e-9);
+        // even-count median: {10, 30} -> 20 ms
+        let mut st = state();
+        st.record_iteration(0, 0.010);
+        st.record_iteration(1, 0.030);
+        assert!((st.median_busy_ewma_ms().unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lifecycle_flows_through_views_and_snapshots() {
+        use crate::coordinator::elastic::Lifecycle;
+        let mut st = state();
+        assert!(st.view().instance(1).is_schedulable());
+        st.set_lifecycle(1, Lifecycle::Draining);
+        assert_eq!(st.lifecycle(1), Lifecycle::Draining);
+        assert!(!st.view().instance(1).is_schedulable());
+        let snap = st.snapshot();
+        assert_eq!(snap.instances[1].lifecycle, Lifecycle::Draining);
+        assert!(!snap.view().instance(1).is_schedulable());
+        assert!(st.consistency_diff(&snap).is_none());
+        // lifecycle drift is caught by the differential check
+        let mut bad = st.snapshot();
+        bad.instances[1].lifecycle = Lifecycle::Active;
+        assert!(st.consistency_diff(&bad).is_some());
     }
 
     #[test]

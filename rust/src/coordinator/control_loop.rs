@@ -11,37 +11,62 @@
 //! the live system runs.
 
 use super::cluster_state::ClusterView;
+use super::elastic::{ElasticGuard, PoolStats, ScalingAction, ScalingPolicy, StaticScaling};
 use super::policy::{DispatchPolicy, IncomingRequest, PolicyConfig, PolicyRegistry, ReschedulePolicy};
 use super::rescheduler::{MigrationDecision, ReschedulerStats};
-use crate::config::ExperimentConfig;
+use crate::config::{ElasticConfig, ExperimentConfig};
 use crate::costmodel::MigrationCostModel;
 use crate::{InstanceId, Result};
 
-/// One dispatch policy + one reschedule policy, driven identically by the
-/// live runtime and the simulator.
+/// One dispatch policy + one reschedule policy + one scaling policy,
+/// driven identically by the live runtime and the simulator.
 pub struct ControlLoop {
     dispatch: Box<dyn DispatchPolicy>,
     reschedule: Box<dyn ReschedulePolicy>,
     /// Master switch (`rescheduler.enabled`): when off, [`Self::reschedule`]
     /// is a no-op and the "vLLM baseline" behaviour falls out.
     rescheduling_enabled: bool,
+    /// Elastic-pool policy; `static` (the default) makes [`Self::scale`] a
+    /// guaranteed no-op, preserving frozen-pool behaviour exactly.
+    scaling: Box<dyn ScalingPolicy>,
+    guard: ElasticGuard,
 }
 
 impl ControlLoop {
+    /// Dispatch + reschedule with a frozen pool (`static` scaling) — the
+    /// pre-elastic constructor, kept for tests and embedders.
     pub fn new(
         dispatch: Box<dyn DispatchPolicy>,
         reschedule: Box<dyn ReschedulePolicy>,
         rescheduling_enabled: bool,
     ) -> ControlLoop {
+        Self::with_scaling(
+            dispatch,
+            reschedule,
+            rescheduling_enabled,
+            Box::new(StaticScaling),
+            ElasticConfig::default(),
+        )
+    }
+
+    pub fn with_scaling(
+        dispatch: Box<dyn DispatchPolicy>,
+        reschedule: Box<dyn ReschedulePolicy>,
+        rescheduling_enabled: bool,
+        scaling: Box<dyn ScalingPolicy>,
+        elastic: ElasticConfig,
+    ) -> ControlLoop {
         ControlLoop {
             dispatch,
             reschedule,
             rescheduling_enabled,
+            scaling,
+            guard: ElasticGuard::new(elastic),
         }
     }
 
-    /// Build both policies by name from the experiment config — the one
-    /// construction path every driver uses.
+    /// Build all three policies by name from the experiment config — the
+    /// one construction path every driver uses.
     pub fn from_experiment(
         exp: &ExperimentConfig,
         migration: MigrationCostModel,
@@ -50,10 +75,13 @@ impl ControlLoop {
         let cfg = PolicyConfig::from_experiment(exp, migration);
         let dispatch = registry.build_dispatch(&exp.dispatch_policy, &cfg)?;
         let reschedule = registry.build_reschedule(&exp.reschedule_policy, &cfg)?;
-        Ok(ControlLoop::new(
+        let scaling = registry.build_scaling(&exp.scaling_policy, &cfg)?;
+        Ok(ControlLoop::with_scaling(
             dispatch,
             reschedule,
             exp.rescheduler.enabled,
+            scaling,
+            exp.elastic.clone(),
         ))
     }
 
@@ -93,6 +121,30 @@ impl ControlLoop {
         self.reschedule.observe_default_remaining(tokens);
     }
 
+    /// Run one scale interval: ask the scaling policy for pool-shape
+    /// changes and clamp them through the [`ElasticGuard`] (floors, one
+    /// in-flight transition, cooldown). Empty under the builtin `static`
+    /// policy — [`StaticScaling::decide`] returns nothing by
+    /// construction, so `--scaling static` reproduces frozen-pool runs
+    /// exactly (and a third-party policy registered under any name,
+    /// including `static`, still gets its `decide` call). The caller
+    /// executes the returned actions (the simulator via its elastic
+    /// events, the live server on its threads).
+    pub fn scale(&mut self, view: &ClusterView<'_>, pool: &PoolStats) -> Vec<ScalingAction> {
+        let proposed = self.scaling.decide(view, pool);
+        if proposed.is_empty() {
+            return proposed;
+        }
+        self.guard.admit(proposed, view, pool)
+    }
+
+    /// Best-effort indicator that the pool may change shape (the builtin
+    /// `static` policy never acts). Display/diagnostics only — `scale`
+    /// itself always consults the policy.
+    pub fn elastic_enabled(&self) -> bool {
+        self.scaling.name() != "static"
+    }
+
     pub fn rescheduling_enabled(&self) -> bool {
         self.rescheduling_enabled
     }
@@ -103,6 +155,16 @@ impl ControlLoop {
 
     pub fn reschedule_name(&self) -> &str {
         self.reschedule.name()
+    }
+
+    pub fn scaling_name(&self) -> &str {
+        self.scaling.name()
+    }
+
+    /// Elastic mechanics (intervals, delays, floors) the drivers execute
+    /// against.
+    pub fn elastic_config(&self) -> &ElasticConfig {
+        self.guard.config()
     }
 
     /// Reschedule-policy counters for reports.
@@ -174,6 +236,40 @@ mod tests {
         assert!(
             ControlLoop::from_experiment(&e, MigrationCostModel::new_25gbps(1), &reg).is_err()
         );
+    }
+
+    #[test]
+    fn scale_is_inert_under_static_and_acts_under_pressure() {
+        use crate::coordinator::elastic::{PoolStats, ScalingAction};
+        let reg = PolicyRegistry::with_builtins();
+        let mut e = exp();
+        let mut c =
+            ControlLoop::from_experiment(&e, MigrationCostModel::new_25gbps(1), &reg).unwrap();
+        assert!(!c.elastic_enabled());
+        assert_eq!(c.scaling_name(), "static");
+        let pool = PoolStats {
+            prefill_active: 2,
+            decode_active: 2,
+            ..Default::default()
+        };
+        assert!(c.scale(&skewed().view(), &pool).is_empty());
+
+        // queue_pressure over a hot cluster flips a prefill into decode
+        e.scaling_policy = "queue_pressure".to_string();
+        let mut c =
+            ControlLoop::from_experiment(&e, MigrationCostModel::new_25gbps(1), &reg).unwrap();
+        assert!(c.elastic_enabled());
+        let hot = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 95_000, Some(100.0))], 100_000),
+                inst(1, vec![req(2, 95_000, Some(100.0))], 100_000),
+            ],
+            tokens_per_interval: 50.0,
+        };
+        let acts = c.scale(&hot.view(), &pool);
+        assert_eq!(acts, vec![ScalingAction::FlipToDecode]);
+        // guard cooldown: immediately after, nothing more
+        assert!(c.scale(&hot.view(), &pool).is_empty());
     }
 
     #[test]

@@ -1,0 +1,751 @@
+//! Elastic instance-pool subsystem: predictive autoscaling and
+//! prefill↔decode role flipping.
+//!
+//! The paper's rescheduler moves *requests* inside a fixed decode pool;
+//! this module moves the *pool* itself. Arrow (arXiv:2505.11916) and DOPD
+//! (arXiv:2511.20982) both show that a frozen prefill:decode split leaves
+//! goodput on the table once the workload drifts — exactly the bursty /
+//! diurnal scenarios the scenario registry synthesizes. The length
+//! predictor already gives a forward-looking aggregate load signal
+//! (Σ predicted remaining tokens), so the `predictive` policy drives the
+//! P/D ratio off the same quantity Algorithm 1 balances.
+//!
+//! Shape of the subsystem:
+//!
+//! * every instance carries a [`Lifecycle`]: `Provisioning → Active →
+//!   Draining → Retired`. Draining instances accept no dispatches and no
+//!   migration arrivals; once their residents finish or migrate out, the
+//!   driver fires its drain-complete path and the instance either retires
+//!   or re-roles (flip) after a modeled warm-up delay;
+//! * an object-safe [`ScalingPolicy`] decides [`ScalingAction`]s once per
+//!   scale interval from a borrowed [`ClusterView`] (decode side) plus
+//!   [`PoolStats`] (prefill side + rates). Policies are registered by
+//!   string in the `PolicyRegistry` next to dispatch/reschedule;
+//! * the [`ElasticGuard`] clamps decisions to the configured floors,
+//!   enforces one in-flight transition at a time, and applies a cooldown
+//!   — policies stay simple and the drivers stay deterministic;
+//! * both drivers execute the same decisions through `ControlLoop::scale`:
+//!   the simulator via `ScaleTick`/`InstanceReady`/`DrainComplete` events,
+//!   the live server by retiring/spawning decode-instance threads and
+//!   resizing the prefill worker pool.
+
+use std::fmt;
+
+use super::cluster_state::ClusterView;
+use super::policy::PolicyConfig;
+use crate::config::ElasticConfig;
+use crate::{InstanceId, Time};
+
+/// Lifecycle of one pool instance. `Active` is the only state that
+/// accepts dispatches or migration arrivals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Spawning / warming up; becomes `Active` after the modeled delay.
+    /// The builtin drivers represent warm-ups as *pool counters*
+    /// ([`PoolStats::prefill_provisioning`] / `decode_provisioning`) and
+    /// materialize the instance slot only when it turns Active, so they
+    /// never construct this variant themselves — it exists for drivers
+    /// and hand-built views that do materialize warming slots (policies
+    /// and the guard already treat it as unschedulable).
+    Provisioning,
+    #[default]
+    Active,
+    /// No new work; residents finish or migrate out, then the instance
+    /// retires or flips role.
+    Draining,
+    /// Out of the pool (slot kept so instance ids stay stable).
+    Retired,
+}
+
+/// Which pool an action targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolRole {
+    Prefill,
+    Decode,
+}
+
+impl fmt::Display for PoolRole {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PoolRole::Prefill => "prefill",
+            PoolRole::Decode => "decode",
+        })
+    }
+}
+
+/// One pool-shape change decided by a [`ScalingPolicy`]. Decode-side
+/// targets are named explicitly (policies see decode instances through the
+/// [`ClusterView`]); prefill-side selection is the executor's (policies
+/// cannot see inside the prefill pool, the executor picks the least-loaded
+/// active worker).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingAction {
+    /// Drain the least-loaded active prefill instance and re-role it as a
+    /// decode instance (after the flip warm-up).
+    FlipToDecode,
+    /// Drain decode instance `decode`; once empty it re-roles as a
+    /// prefill instance (after the flip warm-up).
+    FlipToPrefill { decode: InstanceId },
+    /// Add a brand-new instance of `role` (full provision warm-up).
+    Provision { role: PoolRole },
+    /// Drain and remove one instance of `role` (executor picks the
+    /// least-loaded active one).
+    Retire { role: PoolRole },
+}
+
+impl fmt::Display for ScalingAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScalingAction::FlipToDecode => write!(f, "flip_to_decode"),
+            ScalingAction::FlipToPrefill { decode } => write!(f, "flip_to_prefill({decode})"),
+            ScalingAction::Provision { role } => write!(f, "provision({role})"),
+            ScalingAction::Retire { role } => write!(f, "retire({role})"),
+        }
+    }
+}
+
+/// One executed scaling action, timestamped — the scale-action trace
+/// (determinism tests compare these verbatim; the elastic bench emits
+/// them as the instance-count timeline's annotations).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleRecord {
+    pub t: Time,
+    pub action: ScalingAction,
+}
+
+/// Pool-side inputs a [`ScalingPolicy`] consumes next to the decode-side
+/// [`ClusterView`]: pool composition by lifecycle, prefill backlog, and
+/// the measured rates that turn backlogs into instance counts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub now: Time,
+    pub prefill_active: usize,
+    pub prefill_draining: usize,
+    pub prefill_provisioning: usize,
+    pub decode_active: usize,
+    pub decode_draining: usize,
+    pub decode_provisioning: usize,
+    /// Requests waiting for (or running) prefill.
+    pub prefill_queued_reqs: usize,
+    /// Σ prompt/KV tokens of those requests.
+    pub prefill_queued_tokens: u64,
+    /// EWMA of the token arrival rate into prefill (tokens/s) — the
+    /// "incoming prefill work" side of the predictive signal.
+    pub arrival_tokens_per_s: f64,
+    /// EWMA of per-instance prefill service rate (tokens/s); 0 until
+    /// measured.
+    pub prefill_tokens_per_s: f64,
+}
+
+impl PoolStats {
+    /// Every instance currently owned by the pool, any lifecycle.
+    pub fn total_instances(&self) -> usize {
+        self.prefill_active
+            + self.prefill_draining
+            + self.prefill_provisioning
+            + self.decode_active
+            + self.decode_draining
+            + self.decode_provisioning
+    }
+
+    /// Any transition (drain or warm-up) still in flight?
+    pub fn transition_in_flight(&self) -> bool {
+        self.prefill_draining
+            + self.prefill_provisioning
+            + self.decode_draining
+            + self.decode_provisioning
+            > 0
+    }
+}
+
+/// Shared per-interval rate meter behind [`PoolStats`]'s measured
+/// rates. Both drivers fold the same counters through the same blend
+/// (0.5/0.5 EWMA, first tick seeds raw, prefill rate only updates on
+/// non-zero samples), so the predictive signal is defined once — a
+/// driver-local reimplementation drifting would silently break
+/// sim-vs-live comparability.
+#[derive(Clone, Debug, Default)]
+pub struct RateMeter {
+    arrival_tokens: u64,
+    prefill_tokens: u64,
+    arrival_rate_ewma: f64,
+    prefill_rate_ewma: f64,
+    ticks: u64,
+}
+
+impl RateMeter {
+    /// Tokens entering the prefill stage (count every admission to the
+    /// queue, recomputes included — they are prefill work).
+    pub fn on_arrival(&mut self, tokens: u64) {
+        self.arrival_tokens += tokens;
+    }
+
+    /// Tokens that completed prefill.
+    pub fn on_prefill_done(&mut self, tokens: u64) {
+        self.prefill_tokens += tokens;
+    }
+
+    /// Fold the interval's counters into the EWMAs and reset them.
+    /// `dt` is the elapsed interval; `active_prefill` normalizes the
+    /// service rate per instance.
+    pub fn tick(&mut self, dt: f64, active_prefill: usize) {
+        let dt = dt.max(1e-9);
+        let arr = self.arrival_tokens as f64 / dt;
+        self.arrival_rate_ewma = if self.ticks == 0 {
+            arr
+        } else {
+            0.5 * self.arrival_rate_ewma + 0.5 * arr
+        };
+        let pf = self.prefill_tokens as f64 / dt / active_prefill.max(1) as f64;
+        if pf > 0.0 {
+            self.prefill_rate_ewma = if self.prefill_rate_ewma <= 0.0 {
+                pf
+            } else {
+                0.5 * self.prefill_rate_ewma + 0.5 * pf
+            };
+        }
+        self.arrival_tokens = 0;
+        self.prefill_tokens = 0;
+        self.ticks += 1;
+    }
+
+    pub fn arrival_tokens_per_s(&self) -> f64 {
+        self.arrival_rate_ewma
+    }
+
+    pub fn prefill_tokens_per_s(&self) -> f64 {
+        self.prefill_rate_ewma
+    }
+}
+
+/// Pool-reshaping strategy, invoked once per scale interval. Pure with
+/// respect to its inputs: the caller (via [`ElasticGuard`] and the
+/// driver) validates and executes the returned actions.
+pub trait ScalingPolicy {
+    /// Registry name this policy answers to (diagnostics + reports).
+    fn name(&self) -> &str;
+
+    /// Propose pool-shape changes, best-first. The guard keeps at most
+    /// the first valid one.
+    fn decide(&mut self, view: &ClusterView<'_>, pool: &PoolStats) -> Vec<ScalingAction>;
+}
+
+// ---------------------------------------------------------------------
+// shared decode-side signals
+
+/// The active decode instance cheapest to drain: least projected work
+/// (+ inbound reservations), ties broken by lowest id. Shared by the
+/// builtin policies and by both drivers' `Retire { Decode }` executors.
+pub fn emptiest_active_decode(view: &ClusterView<'_>) -> Option<InstanceId> {
+    let mut best: Option<(f64, InstanceId)> = None;
+    for iv in view.instances() {
+        if !iv.is_schedulable() {
+            continue;
+        }
+        let w = iv.predicted_work() + iv.inbound_reserved_tokens() as f64;
+        let better = match best {
+            None => true,
+            Some((bw, bid)) => w < bw || (w == bw && iv.id() < bid),
+        };
+        if better {
+            best = Some((w, iv.id()));
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
+/// Best destination for a resident leaving a draining instance: the
+/// active instance with the most free KV that can re-admit `tokens`
+/// under the admission watermark with a batch slot available (ties on
+/// lowest id). The draining source is never schedulable, so it excludes
+/// itself. Shared by both drivers' drain-out paths.
+pub fn drain_destination(
+    view: &ClusterView<'_>,
+    tokens: u64,
+    max_batch: usize,
+) -> Option<InstanceId> {
+    use super::cluster_state::admission_watermark;
+    let mut best: Option<(u64, InstanceId)> = None;
+    for iv in view.instances() {
+        if !iv.is_schedulable() || iv.batch_size() >= max_batch {
+            continue;
+        }
+        if iv.effective_used() + tokens > admission_watermark(iv.kv_capacity_tokens()) {
+            continue;
+        }
+        let free = iv.free_tokens();
+        if best.map(|(bf, _)| free > bf).unwrap_or(true) {
+            best = Some((free, iv.id()));
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
+/// Mean effective KV occupancy fraction over active decode instances.
+fn active_kv_frac(view: &ClusterView<'_>) -> f64 {
+    let (mut used, mut cap) = (0.0f64, 0.0f64);
+    for iv in view.instances() {
+        if iv.is_schedulable() {
+            used += iv.effective_used() as f64;
+            cap += iv.kv_capacity_tokens() as f64;
+        }
+    }
+    if cap <= 0.0 {
+        0.0
+    } else {
+        used / cap
+    }
+}
+
+// ---------------------------------------------------------------------
+// builtin policies
+
+/// Today's behavior: the pool never changes shape. The default, and the
+/// regression baseline (`--scaling static` must reproduce frozen-pool
+/// reports bit-for-bit).
+#[derive(Clone, Debug, Default)]
+pub struct StaticScaling;
+
+impl ScalingPolicy for StaticScaling {
+    fn name(&self) -> &str {
+        "static"
+    }
+
+    fn decide(&mut self, _view: &ClusterView<'_>, _pool: &PoolStats) -> Vec<ScalingAction> {
+        Vec::new()
+    }
+}
+
+/// Reactive flipper: compares prefill-queue depth against decode KV
+/// headroom and flips toward whichever side is drowning *now*. Knobs
+/// (via `PolicyConfig::params`):
+///
+/// * `queue_pressure.queue_hi` — queued prefill tokens per active prefill
+///   instance that marks prefill as overloaded (default 4096)
+/// * `queue_pressure.kv_hi` — mean decode KV fraction above which decode
+///   needs capacity (default 0.85)
+/// * `queue_pressure.kv_lo` — mean decode KV fraction below which decode
+///   can afford to give an instance away (default 0.5)
+#[derive(Clone, Debug)]
+pub struct QueuePressureScaling {
+    queue_hi: f64,
+    kv_hi: f64,
+    kv_lo: f64,
+}
+
+impl QueuePressureScaling {
+    pub fn from_config(cfg: &PolicyConfig) -> Self {
+        QueuePressureScaling {
+            queue_hi: cfg.param_or("queue_pressure.queue_hi", 4096.0).max(1.0),
+            kv_hi: cfg.param_or("queue_pressure.kv_hi", 0.85).clamp(0.05, 1.0),
+            kv_lo: cfg.param_or("queue_pressure.kv_lo", 0.5).clamp(0.0, 1.0),
+        }
+    }
+}
+
+impl ScalingPolicy for QueuePressureScaling {
+    fn name(&self) -> &str {
+        "queue_pressure"
+    }
+
+    fn decide(&mut self, view: &ClusterView<'_>, pool: &PoolStats) -> Vec<ScalingAction> {
+        if pool.decode_active == 0 || pool.prefill_active == 0 {
+            return Vec::new();
+        }
+        let kv_frac = active_kv_frac(view);
+        let queue_per = pool.prefill_queued_tokens as f64 / pool.prefill_active as f64;
+        // decode side drowning while prefill has slack: take a prefill
+        if kv_frac >= self.kv_hi && queue_per < self.queue_hi / 2.0 {
+            let role = PoolRole::Decode;
+            return vec![ScalingAction::FlipToDecode, ScalingAction::Provision { role }];
+        }
+        // prefill backlog growing while decode has KV slack: give one back
+        if queue_per >= self.queue_hi && kv_frac <= self.kv_lo {
+            let mut out = Vec::new();
+            if let Some(di) = emptiest_active_decode(view) {
+                out.push(ScalingAction::FlipToPrefill { decode: di });
+            }
+            let role = PoolRole::Prefill;
+            out.push(ScalingAction::Provision { role });
+            return out;
+        }
+        Vec::new()
+    }
+}
+
+/// Predictive flipper — the ARES signal applied to the pool shape: the
+/// decode side's *future* KV demand is Σ (current tokens + predicted
+/// remaining) over its residents, and the prefill side's demand is the
+/// queued prompt tokens plus the arrival-rate lookahead. Each side is
+/// converted to a needed instance count and the pool flips toward the
+/// deficit before it materializes (the reactive policy waits for the
+/// queue or the KV meter to actually fill). Knobs:
+///
+/// * `predictive.target_kv_frac` — plan decode capacity so projected KV
+///   stays below this fraction (default 0.7)
+/// * `predictive.lookahead_s` — horizon for converting arrival rate into
+///   prefill work (default 15 s)
+/// * `predictive.kv_hi` — urgent decode-add threshold on *current*
+///   occupancy, independent of the projection (default 0.85)
+/// * `predictive.kv_lo` — only below this current occupancy may decode
+///   shed an instance (default 0.45)
+#[derive(Clone, Debug)]
+pub struct PredictiveScaling {
+    target_kv_frac: f64,
+    lookahead_s: f64,
+    kv_hi: f64,
+    kv_lo: f64,
+}
+
+impl PredictiveScaling {
+    pub fn from_config(cfg: &PolicyConfig) -> Self {
+        PredictiveScaling {
+            target_kv_frac: cfg
+                .param_or("predictive.target_kv_frac", 0.7)
+                .clamp(0.05, 1.0),
+            lookahead_s: cfg.param_or("predictive.lookahead_s", 15.0).max(1e-3),
+            kv_hi: cfg.param_or("predictive.kv_hi", 0.85).clamp(0.05, 1.0),
+            kv_lo: cfg.param_or("predictive.kv_lo", 0.45).clamp(0.0, 1.0),
+        }
+    }
+
+    /// Decode instances needed so Σ (tokens + predicted remaining) fits
+    /// under `target_kv_frac` of per-instance capacity.
+    fn needed_decode(&self, view: &ClusterView<'_>) -> usize {
+        let (mut projected, mut cap_sum, mut n) = (0.0f64, 0.0f64, 0usize);
+        for iv in view.instances() {
+            if iv.is_schedulable() {
+                projected += iv.predicted_work() + iv.inbound_reserved_tokens() as f64;
+                cap_sum += iv.kv_capacity_tokens() as f64;
+                n += 1;
+            }
+        }
+        if n == 0 || cap_sum <= 0.0 {
+            return 1;
+        }
+        let cap_per = cap_sum / n as f64;
+        (projected / (self.target_kv_frac * cap_per)).ceil().max(1.0) as usize
+    }
+
+    /// Prefill instances needed to clear the queue plus the lookahead's
+    /// incoming tokens within the lookahead.
+    fn needed_prefill(&self, pool: &PoolStats) -> usize {
+        if pool.prefill_tokens_per_s <= 0.0 {
+            // no service-rate measurement yet: hold the current shape
+            return pool.prefill_active.max(1);
+        }
+        let queued = pool.prefill_queued_tokens as f64;
+        let work = queued + pool.arrival_tokens_per_s * self.lookahead_s;
+        let per_inst = pool.prefill_tokens_per_s * self.lookahead_s;
+        (work / per_inst).ceil().max(1.0) as usize
+    }
+}
+
+impl ScalingPolicy for PredictiveScaling {
+    fn name(&self) -> &str {
+        "predictive"
+    }
+
+    fn decide(&mut self, view: &ClusterView<'_>, pool: &PoolStats) -> Vec<ScalingAction> {
+        if pool.decode_active == 0 || pool.prefill_active == 0 {
+            return Vec::new();
+        }
+        let kv_frac = active_kv_frac(view);
+        let needed_decode = self.needed_decode(view);
+        let needed_prefill = self.needed_prefill(pool);
+
+        // decode deficit (projected or already urgent): grow decode,
+        // preferably by taking a surplus prefill
+        if kv_frac >= self.kv_hi || pool.decode_active < needed_decode {
+            let prefill_surplus = pool.prefill_active > needed_prefill;
+            let mut out = Vec::new();
+            if prefill_surplus || kv_frac >= self.kv_hi {
+                out.push(ScalingAction::FlipToDecode);
+            }
+            let role = PoolRole::Decode;
+            out.push(ScalingAction::Provision { role });
+            return out;
+        }
+        // prefill deficit while decode has verified slack: flip one back
+        if pool.prefill_active < needed_prefill
+            && pool.decode_active > needed_decode
+            && kv_frac <= self.kv_lo
+        {
+            let mut out = Vec::new();
+            if let Some(di) = emptiest_active_decode(view) {
+                out.push(ScalingAction::FlipToPrefill { decode: di });
+            }
+            let role = PoolRole::Prefill;
+            out.push(ScalingAction::Provision { role });
+            return out;
+        }
+        Vec::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// guard
+
+/// Clamps a policy's proposals to what the pool may actually do: floors
+/// from [`ElasticConfig`], at most one action per tick, no new action
+/// while a transition is still in flight, and a cooldown after each
+/// executed action. Keeping this out of the policies means every policy
+/// (builtin or third-party) inherits the same safety envelope.
+#[derive(Clone, Debug)]
+pub struct ElasticGuard {
+    cfg: ElasticConfig,
+    last_action_t: Option<Time>,
+}
+
+impl ElasticGuard {
+    pub fn new(cfg: ElasticConfig) -> ElasticGuard {
+        ElasticGuard {
+            cfg,
+            last_action_t: None,
+        }
+    }
+
+    pub fn config(&self) -> &ElasticConfig {
+        &self.cfg
+    }
+
+    /// Validate `actions` best-first and keep the first admissible one
+    /// (empty if none). Records the admission time for the cooldown.
+    pub fn admit(
+        &mut self,
+        actions: Vec<ScalingAction>,
+        view: &ClusterView<'_>,
+        pool: &PoolStats,
+    ) -> Vec<ScalingAction> {
+        if actions.is_empty() {
+            return actions;
+        }
+        if pool.transition_in_flight() {
+            return Vec::new();
+        }
+        if let Some(t) = self.last_action_t {
+            if pool.now - t < self.cfg.cooldown_s {
+                return Vec::new();
+            }
+        }
+        for a in actions {
+            let ok = match a {
+                ScalingAction::FlipToDecode => pool.prefill_active > self.cfg.min_prefill,
+                ScalingAction::FlipToPrefill { decode } => {
+                    pool.decode_active > self.cfg.min_decode
+                        && decode < view.n_instances()
+                        && view.instance(decode).lifecycle() == Lifecycle::Active
+                }
+                ScalingAction::Provision { .. } => {
+                    self.cfg.max_total > 0 && pool.total_instances() < self.cfg.max_total
+                }
+                ScalingAction::Retire { role: PoolRole::Prefill } => {
+                    pool.prefill_active > self.cfg.min_prefill
+                }
+                ScalingAction::Retire { role: PoolRole::Decode } => {
+                    pool.decode_active > self.cfg.min_decode
+                }
+            };
+            if ok {
+                self.last_action_t = Some(pool.now);
+                return vec![a];
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{inst, req};
+    use crate::coordinator::ClusterSnapshot;
+
+    fn snap(loads: &[u64], cap: u64) -> ClusterSnapshot {
+        ClusterSnapshot {
+            instances: loads
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| inst(i, vec![req(i as u64 + 1, l, Some(100.0))], cap))
+                .collect(),
+            tokens_per_interval: 10.0,
+        }
+    }
+
+    fn pool(prefill: usize, decode: usize) -> PoolStats {
+        PoolStats {
+            now: 100.0,
+            prefill_active: prefill,
+            decode_active: decode,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn static_never_acts() {
+        let s = snap(&[90_000, 90_000], 100_000);
+        let mut p = StaticScaling;
+        assert!(p.decide(&s.view(), &pool(2, 2)).is_empty());
+    }
+
+    #[test]
+    fn queue_pressure_flips_toward_the_drowning_side() {
+        let mut p = QueuePressureScaling::from_config(&PolicyConfig::default());
+        // decode hot (95% KV), prefill idle: wants a decode instance
+        let hot = snap(&[95_000, 95_000], 100_000);
+        let acts = p.decide(&hot.view(), &pool(2, 2));
+        assert_eq!(acts.first(), Some(&ScalingAction::FlipToDecode));
+        // prefill backlogged, decode cold: gives the emptiest decode back
+        let cold = snap(&[30_000, 10_000], 100_000);
+        let mut st = pool(1, 2);
+        st.prefill_queued_tokens = 50_000;
+        let acts = p.decide(&cold.view(), &st);
+        assert_eq!(
+            acts.first(),
+            Some(&ScalingAction::FlipToPrefill { decode: 1 }),
+            "must pick the least-loaded decode instance"
+        );
+        // balanced: nothing
+        let mid = snap(&[60_000, 60_000], 100_000);
+        assert!(p.decide(&mid.view(), &pool(2, 2)).is_empty());
+    }
+
+    #[test]
+    fn predictive_reads_the_projected_signal() {
+        let mut p = PredictiveScaling::from_config(&PolicyConfig::default());
+        // current occupancy is low but predicted remaining is huge:
+        // projected demand (2 × (20k + 200k) = 440k) needs ~7 instances
+        // at 0.7 × 100k — predictive flips BEFORE the KV meter fills
+        let s = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 20_000, Some(200_000.0))], 100_000),
+                inst(1, vec![req(2, 20_000, Some(200_000.0))], 100_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut st = pool(3, 2);
+        st.prefill_tokens_per_s = 10_000.0; // prefill has measured slack
+        let acts = p.decide(&s.view(), &st);
+        assert_eq!(acts.first(), Some(&ScalingAction::FlipToDecode));
+        // nearly-done work, starved prefill: flip one back
+        let s = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 10_000, Some(100.0))], 100_000),
+                inst(1, vec![req(2, 1_000, Some(100.0))], 100_000),
+                inst(2, vec![req(3, 10_000, Some(100.0))], 100_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        let mut st = pool(1, 3);
+        st.prefill_queued_tokens = 400_000;
+        st.arrival_tokens_per_s = 20_000.0;
+        st.prefill_tokens_per_s = 10_000.0;
+        let acts = p.decide(&s.view(), &st);
+        assert_eq!(acts.first(), Some(&ScalingAction::FlipToPrefill { decode: 1 }));
+    }
+
+    #[test]
+    fn guard_enforces_floors_cooldown_and_single_transition() {
+        let cfg = ElasticConfig {
+            cooldown_s: 10.0,
+            ..Default::default()
+        };
+        let mut g = ElasticGuard::new(cfg);
+        let s = snap(&[100, 100], 100_000);
+        let flip_out = vec![ScalingAction::FlipToDecode];
+        let role = PoolRole::Decode;
+        let provision = vec![ScalingAction::Provision { role }];
+        // floor: cannot flip the last prefill instance away
+        let acts = g.admit(flip_out.clone(), &s.view(), &pool(1, 2));
+        assert!(acts.is_empty());
+        // falls through to the next admissible proposal
+        let both = vec![
+            ScalingAction::FlipToDecode,
+            ScalingAction::FlipToPrefill { decode: 0 },
+        ];
+        let acts = g.admit(both, &s.view(), &pool(1, 2));
+        assert_eq!(acts, vec![ScalingAction::FlipToPrefill { decode: 0 }]);
+        // cooldown: the very next tick is rejected
+        let mut st = pool(2, 2);
+        st.now = 105.0;
+        assert!(g.admit(flip_out.clone(), &s.view(), &st).is_empty());
+        let mut st = pool(2, 2);
+        st.now = 111.0;
+        assert_eq!(g.admit(flip_out.clone(), &s.view(), &st), flip_out);
+        // an in-flight transition blocks everything
+        let mut st = pool(4, 4);
+        st.now = 1000.0;
+        st.decode_draining = 1;
+        assert!(g.admit(flip_out.clone(), &s.view(), &st).is_empty());
+        // provisioning is disabled while max_total == 0
+        let mut st = pool(4, 4);
+        st.now = 2000.0;
+        assert!(g.admit(provision.clone(), &s.view(), &st).is_empty());
+        // ... and capped when enabled
+        let capped = ElasticConfig {
+            max_total: 9,
+            cooldown_s: 0.0,
+            ..Default::default()
+        };
+        let mut g = ElasticGuard::new(capped);
+        let mut st = pool(4, 4);
+        st.now = 3000.0;
+        assert_eq!(g.admit(provision.clone(), &s.view(), &st).len(), 1);
+        let mut st = pool(4, 5);
+        st.now = 4000.0;
+        assert!(g.admit(provision.clone(), &s.view(), &st).is_empty());
+    }
+
+    #[test]
+    fn guard_rejects_flipping_a_non_active_decode() {
+        let relaxed = ElasticConfig {
+            cooldown_s: 0.0,
+            ..Default::default()
+        };
+        let mut g = ElasticGuard::new(relaxed);
+        let mut s = snap(&[100, 100, 100], 100_000);
+        s.instances[1].lifecycle = Lifecycle::Draining;
+        // draining target: invalid; out-of-range target: invalid
+        for bad in [1usize, 7usize] {
+            let acts = g.admit(
+                vec![ScalingAction::FlipToPrefill { decode: bad }],
+                &s.view(),
+                &pool(2, 3),
+            );
+            assert!(acts.is_empty(), "target {bad} must be rejected");
+        }
+        let ok = vec![ScalingAction::FlipToPrefill { decode: 2 }];
+        assert_eq!(g.admit(ok.clone(), &s.view(), &pool(2, 3)), ok);
+    }
+
+    #[test]
+    fn rate_meter_blends_and_seeds() {
+        let mut m = RateMeter::default();
+        m.on_arrival(1000);
+        m.on_prefill_done(500);
+        m.tick(10.0, 1);
+        assert!((m.arrival_tokens_per_s() - 100.0).abs() < 1e-9, "first tick seeds raw");
+        assert!((m.prefill_tokens_per_s() - 50.0).abs() < 1e-9);
+        // second tick blends 0.5/0.5; a zero prefill sample leaves the
+        // service-rate estimate untouched (no work ≠ zero speed)
+        m.on_arrival(3000);
+        m.tick(10.0, 1);
+        assert!((m.arrival_tokens_per_s() - 200.0).abs() < 1e-9);
+        assert!((m.prefill_tokens_per_s() - 50.0).abs() < 1e-9);
+        // per-instance normalization
+        m.on_prefill_done(3000);
+        m.tick(10.0, 3);
+        assert!((m.prefill_tokens_per_s() - 75.0).abs() < 1e-9, "0.5*50 + 0.5*100");
+    }
+
+    #[test]
+    fn action_display_is_stable() {
+        assert_eq!(ScalingAction::FlipToDecode.to_string(), "flip_to_decode");
+        let flip = ScalingAction::FlipToPrefill { decode: 3 };
+        assert_eq!(flip.to_string(), "flip_to_prefill(3)");
+        let role = PoolRole::Decode;
+        assert_eq!(ScalingAction::Provision { role }.to_string(), "provision(decode)");
+        let role = PoolRole::Prefill;
+        assert_eq!(ScalingAction::Retire { role }.to_string(), "retire(prefill)");
+    }
+}

@@ -18,6 +18,7 @@
 
 pub mod cluster_state;
 pub mod control_loop;
+pub mod elastic;
 pub mod future_load;
 pub mod policy;
 pub mod rescheduler;
@@ -26,6 +27,10 @@ pub use cluster_state::{
     admission_watermark, ClusterState, ClusterView, InstanceRef, InstanceStats,
 };
 pub use control_loop::ControlLoop;
+pub use elastic::{
+    ElasticGuard, Lifecycle, PoolRole, PoolStats, RateMeter, ScaleRecord, ScalingAction,
+    ScalingPolicy,
+};
 pub use future_load::{FutureLoad, WorkerReport};
 pub use policy::{
     DispatchPolicy, IncomingRequest, PolicyConfig, PolicyRegistry, ReschedulePolicy,
@@ -63,6 +68,10 @@ pub struct InstanceView {
     /// Tokens reserved by migrations already in flight toward this
     /// instance (prevents racing two migrations into the same headroom).
     pub inbound_reserved_tokens: u64,
+    /// Elastic-pool lifecycle; hand-built snapshots default to `Active`
+    /// (a frozen pool is all-Active). Non-Active instances accept no
+    /// dispatches and no migration arrivals.
+    pub lifecycle: Lifecycle,
 }
 
 impl InstanceView {
@@ -131,6 +140,7 @@ pub(crate) mod testutil {
             requests: reqs,
             kv_capacity_tokens: cap,
             inbound_reserved_tokens: 0,
+            lifecycle: Lifecycle::default(),
         }
     }
 }

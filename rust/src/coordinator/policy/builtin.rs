@@ -7,9 +7,14 @@ use crate::coordinator::cluster_state::{ClusterView, InstanceRef};
 use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
 use crate::InstanceId;
 
-/// Shared fit-or-fallback argmin: prefer the best-scoring instance that can
-/// hold `incoming_tokens`; if nothing fits, return the best-scoring
-/// instance anyway (admission will queue or OOM there, mirroring vLLM).
+/// Shared fit-or-fallback argmin over *schedulable* (lifecycle-Active)
+/// instances: prefer the best-scoring one that can hold
+/// `incoming_tokens`; if nothing fits, return the best-scoring
+/// schedulable instance anyway (admission will queue or OOM there,
+/// mirroring vLLM). Only when the pool has zero schedulable instances —
+/// which the elastic guard's `min_decode` floor prevents in both drivers
+/// — does the fallback consider draining/retired slots, preserving the
+/// "always return an instance" contract for hand-built views.
 pub(super) fn argmin_with_fallback<G>(
     view: &ClusterView<'_>,
     incoming_tokens: u64,
@@ -21,8 +26,15 @@ where
     assert!(view.n_instances() > 0, "dispatch with no decode instances");
     let mut best: Option<(f64, InstanceId)> = None;
     let mut best_any: Option<(f64, InstanceId)> = None;
+    let mut best_unschedulable: Option<(f64, InstanceId)> = None;
     for iv in view.instances() {
         let s = score(&iv);
+        if !iv.is_schedulable() {
+            if best_unschedulable.map(|(b, _)| s < b).unwrap_or(true) {
+                best_unschedulable = Some((s, iv.id()));
+            }
+            continue;
+        }
         if best_any.map(|(b, _)| s < b).unwrap_or(true) {
             best_any = Some((s, iv.id()));
         }
@@ -30,7 +42,10 @@ where
             best = Some((s, iv.id()));
         }
     }
-    best.or(best_any).expect("non-empty instance list").1
+    best.or(best_any)
+        .or(best_unschedulable)
+        .expect("non-empty instance list")
+        .1
 }
 
 /// vLLM-style round-robin [paper ref 34]: even request *counts*, oblivious
@@ -57,11 +72,22 @@ impl DispatchPolicy for RoundRobinDispatch {
         assert!(n > 0, "dispatch with no decode instances");
         for off in 0..n {
             let idx = (self.cursor + off) % n;
-            if view.instance(idx).free_tokens() >= incoming.tokens {
+            let iv = view.instance(idx);
+            if iv.is_schedulable() && iv.free_tokens() >= incoming.tokens {
+                self.cursor = (idx + 1) % n;
+                return iv.id();
+            }
+        }
+        // nothing fits: place at the next schedulable slot from the cursor
+        for off in 0..n {
+            let idx = (self.cursor + off) % n;
+            if view.instance(idx).is_schedulable() {
                 self.cursor = (idx + 1) % n;
                 return view.instance(idx).id();
             }
         }
+        // zero schedulable instances (hand-built views only; the elastic
+        // guard's min_decode floor prevents this in the drivers)
         let idx = self.cursor % n;
         self.cursor = (idx + 1) % n;
         view.instance(idx).id()
@@ -254,6 +280,30 @@ mod tests {
             1,
             "predicted-load is not"
         );
+    }
+
+    #[test]
+    fn dispatch_skips_non_active_instances() {
+        use crate::coordinator::Lifecycle;
+        // instance 1 is the emptiest but draining: every dispatch policy
+        // must skip it
+        let mut snap = snap3([500, 0, 300]);
+        snap.instances[1].lifecycle = Lifecycle::Draining;
+        let mut cur = CurrentLoadDispatch;
+        assert_eq!(cur.choose(&snap.view(), &incoming(10, None)), 2);
+        let mut pred = PredictedLoadDispatch;
+        assert_eq!(pred.choose(&snap.view(), &incoming(10, None)), 2);
+        let mut rr = RoundRobinDispatch::new();
+        let picks: Vec<_> = (0..4)
+            .map(|_| rr.choose(&snap.view(), &incoming(10, None)))
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "round robin cycles over active only");
+        // nothing fits anywhere: still lands on a schedulable instance
+        let mut snap = snap3([10_000, 0, 10_000]);
+        snap.instances[1].lifecycle = Lifecycle::Retired;
+        let mut cur = CurrentLoadDispatch;
+        let id = cur.choose(&snap.view(), &incoming(500, None));
+        assert!(id == 0 || id == 2, "must not fall back to a retired slot");
     }
 
     #[test]

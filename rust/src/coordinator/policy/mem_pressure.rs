@@ -165,7 +165,7 @@ impl MemoryPressureRescheduler {
             let fl_peak = fl.trace.iter().cloned().fold(0.0, f64::max);
             let mut target: Option<(f64, usize)> = None;
             for t in 0..n {
-                if t == src {
+                if t == src || !insts[t].is_schedulable() {
                     continue;
                 }
                 self.stats.candidates_evaluated += 1;
@@ -251,7 +251,18 @@ impl ReschedulePolicy for MemoryPressureRescheduler {
     fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
         let t0 = Instant::now();
         self.stats.intervals += 1;
-        let insts: Vec<InstanceRef<'_>> = view.instances().collect();
+        // same working-set rule as the STAR rescheduler: draining
+        // instances remain sources (shedding helps the drain), retired /
+        // provisioning slots are out entirely
+        let insts: Vec<InstanceRef<'_>> = view
+            .instances()
+            .filter(|iv| {
+                matches!(
+                    iv.lifecycle(),
+                    crate::coordinator::Lifecycle::Active | crate::coordinator::Lifecycle::Draining
+                )
+            })
+            .collect();
         let g = view.tokens_per_interval();
         let default_rem = if self.use_prediction {
             None

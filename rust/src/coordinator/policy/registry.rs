@@ -12,12 +12,16 @@ use super::{
     CurrentLoadDispatch, DispatchPolicy, MemoryPressureRescheduler, NoopReschedule,
     PolicyConfig, PredictedLoadDispatch, ReschedulePolicy, RoundRobinDispatch, SloAwareDispatch,
 };
+use crate::coordinator::elastic::{
+    PredictiveScaling, QueuePressureScaling, ScalingPolicy, StaticScaling,
+};
 use crate::coordinator::rescheduler::Rescheduler;
 use crate::{Error, Result};
 
 type DispatchBuilder = Box<dyn Fn(&PolicyConfig) -> Result<Box<dyn DispatchPolicy>> + Send + Sync>;
 type RescheduleBuilder =
     Box<dyn Fn(&PolicyConfig) -> Result<Box<dyn ReschedulePolicy>> + Send + Sync>;
+type ScalingBuilder = Box<dyn Fn(&PolicyConfig) -> Result<Box<dyn ScalingPolicy>> + Send + Sync>;
 
 /// Registry of named policy builders. Names are normalized (lowercase,
 /// `-` → `_`) and may be aliased, so `--dispatch round-robin`, `rr`, and
@@ -26,6 +30,7 @@ type RescheduleBuilder =
 pub struct PolicyRegistry {
     dispatch: BTreeMap<String, DispatchBuilder>,
     reschedule: BTreeMap<String, RescheduleBuilder>,
+    scaling: BTreeMap<String, ScalingBuilder>,
     aliases: BTreeMap<String, String>,
 }
 
@@ -44,7 +49,9 @@ impl PolicyRegistry {
     /// dispatch — `round_robin` (`rr`), `current_load` (`load`),
     /// `predicted_load` (`predicted`), `slo_aware` (`slo`);
     /// reschedule — `star`, `memory_pressure` (`mem_pressure`),
-    /// `none` (`noop`, `off`).
+    /// `none` (`noop`, `off`);
+    /// scaling — `static` (`fixed`), `queue_pressure` (`qp`),
+    /// `predictive`.
     pub fn with_builtins() -> PolicyRegistry {
         let mut r = PolicyRegistry::new();
         r.register_dispatch("round_robin", |_| Ok(Box::new(RoundRobinDispatch::new())));
@@ -64,6 +71,15 @@ impl PolicyRegistry {
             Ok(Box::new(MemoryPressureRescheduler::from_config(cfg)))
         });
         r.register_reschedule("none", |_| Ok(Box::new(NoopReschedule::new())));
+        r.register_scaling("static", |_| Ok(Box::new(StaticScaling)));
+        r.register_scaling("queue_pressure", |cfg| {
+            Ok(Box::new(QueuePressureScaling::from_config(cfg)))
+        });
+        r.register_scaling("predictive", |cfg| {
+            Ok(Box::new(PredictiveScaling::from_config(cfg)))
+        });
+        r.alias("fixed", "static");
+        r.alias("qp", "queue_pressure");
         r.alias("rr", "round_robin");
         r.alias("load", "current_load");
         r.alias("predicted", "predicted_load");
@@ -90,6 +106,14 @@ impl PolicyRegistry {
         self.reschedule.insert(normalize(name), Box::new(builder));
     }
 
+    /// Register (or replace) a scaling-policy builder under `name`.
+    pub fn register_scaling<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn(&PolicyConfig) -> Result<Box<dyn ScalingPolicy>> + Send + Sync + 'static,
+    {
+        self.scaling.insert(normalize(name), Box::new(builder));
+    }
+
     /// Make `alias` resolve to `canonical` in both namespaces.
     pub fn alias(&mut self, alias: &str, canonical: &str) {
         self.aliases.insert(normalize(alias), normalize(canonical));
@@ -113,6 +137,10 @@ impl PolicyRegistry {
 
     pub fn has_reschedule(&self, name: &str) -> bool {
         self.lookup(&self.reschedule, name).is_some()
+    }
+
+    pub fn has_scaling(&self, name: &str) -> bool {
+        self.lookup(&self.scaling, name).is_some()
     }
 
     /// Construct the named dispatch policy.
@@ -141,6 +169,17 @@ impl PolicyRegistry {
         }
     }
 
+    /// Construct the named scaling policy.
+    pub fn build_scaling(&self, name: &str, cfg: &PolicyConfig) -> Result<Box<dyn ScalingPolicy>> {
+        match self.lookup(&self.scaling, name) {
+            Some(b) => b(cfg),
+            None => Err(Error::config(format!(
+                "unknown scaling policy `{name}` (known: {})",
+                self.scaling_names().join("|")
+            ))),
+        }
+    }
+
     /// Registered canonical dispatch names, sorted.
     pub fn dispatch_names(&self) -> Vec<String> {
         self.dispatch.keys().cloned().collect()
@@ -149,6 +188,11 @@ impl PolicyRegistry {
     /// Registered canonical reschedule names, sorted.
     pub fn reschedule_names(&self) -> Vec<String> {
         self.reschedule.keys().cloned().collect()
+    }
+
+    /// Registered canonical scaling names, sorted.
+    pub fn scaling_names(&self) -> Vec<String> {
+        self.scaling.keys().cloned().collect()
     }
 }
 
@@ -187,6 +231,35 @@ mod tests {
             let _ = p.decide(&snap().view());
             assert_eq!(p.stats().intervals, 1, "{name} must count intervals");
         }
+    }
+
+    #[test]
+    fn builds_every_builtin_scaling_policy() {
+        use crate::coordinator::elastic::PoolStats;
+        let reg = PolicyRegistry::with_builtins();
+        let cfg = PolicyConfig::default();
+        for name in ["static", "fixed", "queue_pressure", "qp", "Queue-Pressure", "predictive"] {
+            let mut p = reg.build_scaling(name, &cfg).unwrap();
+            let pool = PoolStats {
+                prefill_active: 1,
+                decode_active: 2,
+                ..Default::default()
+            };
+            // must not panic; static/fixed must do nothing
+            let acts = p.decide(&snap().view(), &pool);
+            if p.name() == "static" {
+                assert!(acts.is_empty());
+            }
+        }
+        assert!(reg.has_scaling("predictive"));
+        assert!(!reg.has_scaling("bogus"));
+        let e = reg.build_scaling("bogus", &cfg).unwrap_err().to_string();
+        assert!(e.contains("unknown scaling policy `bogus`"), "{e}");
+        assert!(e.contains("queue_pressure"), "{e}");
+        assert_eq!(
+            reg.scaling_names(),
+            vec!["predictive", "queue_pressure", "static"]
+        );
     }
 
     #[test]

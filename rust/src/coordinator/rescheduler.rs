@@ -97,7 +97,20 @@ impl Rescheduler {
         self.stats.intervals += 1;
         let mut decisions = Vec::new();
 
-        let insts: Vec<InstanceRef<'_>> = view.instances().collect();
+        // retired / still-provisioning instances are not part of the
+        // working set: their zero loads would drag w̄ down and flag half
+        // the cluster as overloaded. Draining instances stay in as
+        // *sources* (shedding their residents is exactly what a drain
+        // wants) but are never targets (see `underloaded` below).
+        let insts: Vec<InstanceRef<'_>> = view
+            .instances()
+            .filter(|iv| {
+                matches!(
+                    iv.lifecycle(),
+                    crate::coordinator::Lifecycle::Active | crate::coordinator::Lifecycle::Draining
+                )
+            })
+            .collect();
         let g = view.tokens_per_interval();
         let default_rem = if self.use_prediction {
             None
@@ -177,7 +190,11 @@ impl Rescheduler {
             .filter(|&i| w[i] > threshold || mem_hot(i))
             .collect();
         let underloaded: Vec<usize> = (0..n)
-            .filter(|&i| (reports[i].current_tokens as f64) < threshold && !mem_hot(i))
+            .filter(|&i| {
+                insts[i].is_schedulable()
+                    && (reports[i].current_tokens as f64) < threshold
+                    && !mem_hot(i)
+            })
             .collect();
         if overloaded.is_empty() || underloaded.is_empty() {
             return None;
@@ -458,6 +475,42 @@ mod tests {
         assert_eq!(d.src, 0);
         assert!(d.dst == 1 || d.dst == 2);
         assert!(d.var_reduction > 0.0);
+    }
+
+    #[test]
+    fn draining_instances_are_sources_never_targets() {
+        use crate::coordinator::Lifecycle;
+        let mut snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0)],
+            vec![(3, 500, 100.0)],
+            vec![(4, 600, 100.0)],
+        ]);
+        snap.instances[1].lifecycle = Lifecycle::Draining;
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        let ds = rs.decide(&snap.view());
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].dst, 2, "the draining instance must not receive work");
+        // an overloaded source that is itself draining still sheds
+        let mut snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0)],
+            vec![(3, 500, 100.0)],
+        ]);
+        snap.instances[0].lifecycle = Lifecycle::Draining;
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        let ds = rs.decide(&snap.view());
+        assert_eq!(ds.len(), 1);
+        assert_eq!((ds[0].src, ds[0].dst), (0, 1));
+        // retired slots are invisible to classification
+        let mut snap = snapshot(&[
+            vec![(1, 3000, 4000.0), (2, 3000, 4000.0)],
+            vec![(3, 500, 100.0)],
+            vec![],
+        ]);
+        snap.instances[2].lifecycle = Lifecycle::Retired;
+        let mut rs = Rescheduler::new(cfg(), mig(), true);
+        for d in rs.decide(&snap.view()) {
+            assert_ne!(d.dst, 2, "retired slot must never be a target");
+        }
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //!   workload        print Table-2-style statistics for a synthetic trace
 //!   simulate        run the event-driven cluster simulator (paper §6.3)
 //!   serve           run the live PD-disaggregated server on star-pico
+//!   list            print registered dispatch/reschedule/scaling
+//!                   policies and workload scenarios
 //!   validate-bench  assert BENCH_*.json files parse and carry
 //!                   schema_version (the ci.sh --smoke gate)
 //!
@@ -38,6 +40,7 @@ fn main() {
         "workload" => run_workload(&args),
         "simulate" => run_simulate(&args),
         "serve" => run_serve(&args),
+        "list" => run_list(),
         "validate-bench" => run_validate_bench(&args),
         "" | "help" => {
             println!("{}", spec.render_help());
@@ -80,6 +83,11 @@ fn spec() -> Spec {
                 "reschedule",
                 "name",
                 "star | memory_pressure | none (registry name)",
+            ),
+            (
+                "scaling",
+                "name",
+                "elastic pool policy: static | queue_pressure | predictive",
             ),
             (
                 "scenario",
@@ -148,6 +156,9 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     }
     if let Some(r) = args.opt("reschedule") {
         exp.reschedule_policy = r.to_string();
+    }
+    if let Some(s) = args.opt("scaling") {
+        exp.scaling_policy = s.to_string();
     }
     // [workload.*] table defaults derive from cluster.rps / dataset:
     // rebuild the scenario so the CLI overrides above are honored (flags
@@ -298,6 +309,20 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
         report.recorder.write_tsv(std::path::Path::new(path))?;
         println!("trace written to {path}");
     }
+    Ok(())
+}
+
+/// `star list` — the registered policy and scenario names, from the same
+/// registries the CLI/config resolve against (so the printed lists are
+/// the valid values for `--dispatch`/`--reschedule`/`--scaling`/
+/// `--scenario` by construction).
+fn run_list() -> Result<(), star::Error> {
+    let reg = PolicyRegistry::with_builtins();
+    println!("dispatch policies:   {}", reg.dispatch_names().join(" "));
+    println!("reschedule policies: {}", reg.reschedule_names().join(" "));
+    println!("scaling policies:    {}", reg.scaling_names().join(" "));
+    let scenarios = ScenarioRegistry::with_builtins();
+    println!("scenarios:           {}", scenarios.names().join(" "));
     Ok(())
 }
 

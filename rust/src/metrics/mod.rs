@@ -138,6 +138,20 @@ impl RequestLatency {
     }
 }
 
+/// One sample of the elastic pool's composition, taken once per scale
+/// interval by both drivers — the instance-count timeline the elastic
+/// bench plots and the determinism tests compare.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolSample {
+    pub t: Time,
+    pub prefill_active: usize,
+    pub decode_active: usize,
+    /// Instances draining out of either pool.
+    pub draining: usize,
+    /// Instances warming up toward either pool (provision or flip).
+    pub provisioning: usize,
+}
+
 /// SLO definition (paper §6.2: 1 s TTFT; TPOT 25 ms for the 7B model).
 #[derive(Clone, Copy, Debug)]
 pub struct Slo {

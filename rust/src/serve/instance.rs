@@ -25,6 +25,11 @@ pub enum DecodeCommand {
     /// Begin migrating a request out: pause it, extract its KV slot, and
     /// reply with [`DecodeEvent::MigratedOut`].
     MigrateOut { id: RequestId },
+    /// Elastic drain: stop accepting admissions (every further `Admit`
+    /// bounces back as [`DecodeEvent::AdmitRejected`], so a payload that
+    /// races a drain decision is returned, never lost); residents keep
+    /// decoding until they finish or migrate out.
+    Drain,
     Shutdown,
 }
 
@@ -138,6 +143,8 @@ impl DecodeInstance {
         let mut rng = Pcg64::new(self.seed, (self.id as u64) ^ 0xDEC0DE);
         let mut ewma_iter_ms = 0.0f64;
         let mut any_steps = false;
+        let mut draining = false;
+        let mut was_busy = false;
 
         'outer: loop {
             // 1. drain control traffic
@@ -158,10 +165,26 @@ impl DecodeInstance {
                 };
                 match cmd {
                     DecodeCommand::Shutdown => break 'outer,
+                    DecodeCommand::Drain => draining = true,
                     DecodeCommand::Admit(p) => {
-                        self.admit(
-                            *p, &mut slots, &mut kv_buf, &mut kv_mgr, bucket, max_batch, &events,
-                        );
+                        if draining {
+                            // drains accept no admissions; give the
+                            // payload back instead of dropping it
+                            let _ = events.send(DecodeEvent::AdmitRejected {
+                                instance: self.id,
+                                payload: p,
+                            });
+                        } else {
+                            self.admit(
+                                *p,
+                                &mut slots,
+                                &mut kv_buf,
+                                &mut kv_mgr,
+                                bucket,
+                                max_batch,
+                                &events,
+                            );
+                        }
                     }
                     DecodeCommand::MigrateOut { id } => {
                         self.migrate_out(id, &mut slots, &mut kv_buf, &mut kv_mgr, bucket, &events);
@@ -170,8 +193,24 @@ impl DecodeInstance {
             }
 
             if slots.iter().all(Option::is_none) {
+                // falling idle must be *reported*: the coordinator's view
+                // of this instance would otherwise keep the last busy
+                // report's slots forever (it only reconciles on Report),
+                // which both skews dispatch and stalls elastic drains.
+                if was_busy {
+                    was_busy = false;
+                    let _ = events.send(DecodeEvent::Report {
+                        instance: self.id,
+                        slots: Vec::new(),
+                        ewma_iter_ms,
+                        kv_used: kv_mgr.used_tokens(),
+                        kv_capacity: kv_mgr.capacity_tokens(),
+                        at: Instant::now(),
+                    });
+                }
                 continue;
             }
+            was_busy = true;
 
             // 2. one batched decode iteration
             let t0 = Instant::now();

@@ -3,6 +3,7 @@
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -11,12 +12,13 @@ use super::instance::{AdmitPayload, DecodeCommand, DecodeEvent, DecodeInstance};
 use super::LiveRequest;
 use crate::config::{ExperimentConfig, PredictorKind};
 use crate::coordinator::{
-    admission_watermark, ClusterState, ControlLoop, IncomingRequest, PolicyRegistry, RequestView,
-    ReschedulerStats,
+    admission_watermark, ClusterState, ControlLoop, IncomingRequest, Lifecycle, PolicyRegistry,
+    PoolRole, PoolStats, RateMeter, RequestView, ReschedulerStats, ScaleRecord, ScalingAction,
 };
 use crate::costmodel::MigrationCostModel;
 use crate::metrics::{
-    RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime,
+    PoolSample, RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder,
+    VarianceOverTime,
 };
 use crate::runtime::StarRuntime;
 use crate::workload::SessionPlan;
@@ -64,6 +66,10 @@ pub struct ServeOutcome {
     pub wall_s: f64,
     pub oom_events: u64,
     pub migrations: u64,
+    /// Elastic pool-size timeline, one sample per scale interval.
+    pub pool_timeline: Vec<PoolSample>,
+    /// Executed scaling actions, in decision order.
+    pub scale_actions: Vec<ScaleRecord>,
 }
 
 struct ReqTracker {
@@ -83,6 +89,40 @@ struct InstanceState {
     cmd: Sender<DecodeCommand>,
     kv_used: u64,
     kv_capacity: u64,
+    /// Elastic lifecycle (mirrored into the shared `ClusterState`).
+    lifecycle: Lifecycle,
+    /// Re-role as a prefill worker once this drain completes.
+    flip_to_prefill: bool,
+}
+
+/// Message from a prefill worker thread back to the coordinator.
+enum PrefillMsg {
+    Done {
+        req: LiveRequest,
+        kv: crate::runtime::HostTensor,
+        hidden: Vec<f32>,
+        first_token: i32,
+        at: Instant,
+    },
+    Err {
+        id: RequestId,
+        prompt_tokens: u64,
+        msg: String,
+    },
+}
+
+/// One prefill worker thread, as the coordinator sees it. Workers share
+/// one request channel, so "draining" a worker is just raising its stop
+/// flag: it finishes its current request and exits; queued work stays in
+/// the shared channel for the remaining workers.
+struct PrefillWorker {
+    stop: Arc<AtomicBool>,
+}
+
+impl PrefillWorker {
+    fn is_active(&self) -> bool {
+        !self.stop.load(Ordering::Relaxed)
+    }
 }
 
 /// Live-side multi-round session bookkeeping: the plan plus the realized
@@ -126,6 +166,92 @@ impl Server {
         }
     }
 
+    /// Spawn one decode-instance thread (initial pool and elastic joins).
+    fn spawn_decode_thread(
+        &self,
+        id: InstanceId,
+        ev_tx: &Sender<DecodeEvent>,
+    ) -> (InstanceState, std::thread::JoinHandle<()>) {
+        let exp = &self.params.exp;
+        let (cmd_tx, cmd_rx) = channel();
+        let inst = DecodeInstance {
+            id,
+            runtime: Arc::clone(&self.runtime),
+            kv_capacity_tokens: exp.cluster.kv_capacity_tokens,
+            block_tokens: exp.cluster.block_tokens,
+            max_batch: exp.cluster.max_batch,
+            predictor: exp.predictor,
+            predict_every_iters: exp.rescheduler.predict_every_iters,
+            temperature: self.params.temperature,
+            seed: exp.cluster.seed,
+        };
+        let ev = ev_tx.clone();
+        let handle = std::thread::spawn(move || inst.run(cmd_rx, ev));
+        (
+            InstanceState {
+                cmd: cmd_tx,
+                kv_used: 0,
+                kv_capacity: exp.cluster.kv_capacity_tokens,
+                lifecycle: Lifecycle::Active,
+                flip_to_prefill: false,
+            },
+            handle,
+        )
+    }
+
+    /// Spawn one prefill worker thread (initial pool and elastic joins).
+    /// Workers consume the shared request channel; the returned stop flag
+    /// drains the worker (finish the current request, then exit).
+    fn spawn_prefill_worker(
+        &self,
+        widx: u64,
+        rx: Arc<Mutex<Receiver<LiveRequest>>>,
+        tx: Sender<PrefillMsg>,
+    ) -> (PrefillWorker, std::thread::JoinHandle<()>) {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_w = Arc::clone(&stop);
+        let rt = Arc::clone(&self.runtime);
+        let temp = self.params.temperature;
+        let seed = self.params.exp.cluster.seed ^ (widx << 32);
+        let handle = std::thread::spawn(move || {
+            let mut rng = crate::prng::Pcg64::new(seed, 0x50524546);
+            loop {
+                if stop_w.load(Ordering::Relaxed) {
+                    break;
+                }
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv_timeout(Duration::from_millis(20))
+                };
+                let req = match req {
+                    Ok(r) => r,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                };
+                match rt.prefill(&req.prompt) {
+                    Ok(out) => {
+                        let tok = super::sample_token(&out.logits, temp, &mut rng) as i32;
+                        let _ = tx.send(PrefillMsg::Done {
+                            req,
+                            kv: out.kv,
+                            hidden: out.hidden,
+                            first_token: tok,
+                            at: Instant::now(),
+                        });
+                    }
+                    Err(e) => {
+                        let _ = tx.send(PrefillMsg::Err {
+                            id: req.id,
+                            prompt_tokens: req.prompt.len() as u64,
+                            msg: e.to_string(),
+                        });
+                    }
+                }
+            }
+        });
+        (PrefillWorker { stop }, handle)
+    }
+
     /// Serve a workload to completion; returns aggregated metrics.
     pub fn run(&self, mut requests: Vec<LiveRequest>) -> Result<ServeOutcome> {
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
@@ -139,74 +265,27 @@ impl Server {
         let mut instances: Vec<InstanceState> = Vec::new();
         let mut handles = Vec::new();
         for i in 0..exp.cluster.n_decode {
-            let (cmd_tx, cmd_rx) = channel();
-            let inst = DecodeInstance {
-                id: i,
-                runtime: Arc::clone(&self.runtime),
-                kv_capacity_tokens: exp.cluster.kv_capacity_tokens,
-                block_tokens: exp.cluster.block_tokens,
-                max_batch: exp.cluster.max_batch,
-                predictor: exp.predictor,
-                predict_every_iters: exp.rescheduler.predict_every_iters,
-                temperature: self.params.temperature,
-                seed: exp.cluster.seed,
-            };
-            let ev = ev_tx.clone();
-            handles.push(std::thread::spawn(move || inst.run(cmd_rx, ev)));
-            instances.push(InstanceState {
-                cmd: cmd_tx,
-                kv_used: 0,
-                kv_capacity: exp.cluster.kv_capacity_tokens,
-            });
+            let (st, handle) = self.spawn_decode_thread(i, &ev_tx);
+            handles.push(handle);
+            instances.push(st);
         }
 
         // --- spawn prefill workers ---
-        enum PrefillMsg {
-            Done {
-                req: LiveRequest,
-                kv: crate::runtime::HostTensor,
-                hidden: Vec<f32>,
-                first_token: i32,
-                at: Instant,
-            },
-            Err(RequestId, String),
-        }
         let (pf_in_tx, pf_in_rx) = channel::<LiveRequest>();
         let pf_in_rx = Arc::new(Mutex::new(pf_in_rx));
         let (pf_out_tx, pf_out_rx) = channel::<PrefillMsg>();
-        for w in 0..exp.cluster.n_prefill {
-            let rx = Arc::clone(&pf_in_rx);
-            let tx = pf_out_tx.clone();
-            let rt = Arc::clone(&self.runtime);
-            let temp = self.params.temperature;
-            let seed = exp.cluster.seed ^ (w as u64) << 32;
-            handles.push(std::thread::spawn(move || {
-                let mut rng = crate::prng::Pcg64::new(seed, 0x50524546);
-                loop {
-                    let req = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(req) = req else { break };
-                    match rt.prefill(&req.prompt) {
-                        Ok(out) => {
-                            let tok = super::sample_token(&out.logits, temp, &mut rng) as i32;
-                            let _ = tx.send(PrefillMsg::Done {
-                                req,
-                                kv: out.kv,
-                                hidden: out.hidden,
-                                first_token: tok,
-                                at: Instant::now(),
-                            });
-                        }
-                        Err(e) => {
-                            let _ = tx.send(PrefillMsg::Err(req.id, e.to_string()));
-                        }
-                    }
-                }
-            }));
+        let mut prefill_workers: Vec<PrefillWorker> = Vec::new();
+        let mut next_prefill_seed = 0u64;
+        for _ in 0..exp.cluster.n_prefill {
+            let (worker, handle) = self.spawn_prefill_worker(
+                next_prefill_seed,
+                Arc::clone(&pf_in_rx),
+                pf_out_tx.clone(),
+            );
+            next_prefill_seed += 1;
+            handles.push(handle);
+            prefill_workers.push(worker);
         }
-        drop(pf_out_tx);
 
         // --- coordinator state ---
         let mut trackers: HashMap<RequestId, ReqTracker> = HashMap::new();
@@ -263,6 +342,30 @@ impl Server {
         let mut last_tick = Instant::now();
         let interval = Duration::from_secs_f64(exp.rescheduler.interval_s);
 
+        // --- elastic-pool bookkeeping ---
+        let elastic = exp.elastic.clone();
+        let mut last_scale = Instant::now();
+        let scale_interval = Duration::from_secs_f64(elastic.scale_interval_s);
+        let ready_after = |delay_s: f64| Instant::now() + Duration::from_secs_f64(delay_s);
+        let mut pool_timeline: Vec<PoolSample> = Vec::new();
+        let mut scale_log: Vec<ScaleRecord> = Vec::new();
+        // warmed-up instances waiting to join: (ready time, role)
+        let mut pending_ready: Vec<(Instant, PoolRole)> = Vec::new();
+        let mut prefill_provisioning = 0usize;
+        let mut decode_provisioning = 0usize;
+        // prefill backlog: requests handed to the worker pool and not yet
+        // reported back (the shared channel is invisible, so count ends)
+        let mut prefill_inflight_reqs = 0usize;
+        let mut prefill_inflight_tokens = 0u64;
+        // shared arrival / prefill-service rate meter (same definition
+        // as the simulator's — the predictive policies' measured inputs)
+        let mut rates = RateMeter::default();
+        // stopped workers count as Draining for one scale interval so
+        // the guard's one-in-flight-transition rule covers live prefill
+        // drains too (the worker may still be finishing a request; its
+        // exit is not observable without joining the thread)
+        let mut prefill_drains: Vec<Instant> = Vec::new();
+
         // scheduler-visible cluster state, shared with the simulator's
         // driver layer: reconciled per instance from authoritative decode
         // reports, with reservation deltas applied at migration
@@ -297,6 +400,9 @@ impl Server {
             while next_arrival < requests.len() && requests[next_arrival].arrival <= now_s {
                 let r = requests[next_arrival].clone();
                 recorder.record(now_s, TraceEvent::Arrived { request: r.id });
+                prefill_inflight_reqs += 1;
+                prefill_inflight_tokens += r.prompt.len() as u64;
+                rates.on_arrival(r.prompt.len() as u64);
                 pf_in_tx
                     .send(r)
                     .map_err(|_| crate::Error::coordinator("prefill pool died"))?;
@@ -311,6 +417,9 @@ impl Server {
                 if session.queue[i].0 <= now_s {
                     let (_, lr) = session.queue.swap_remove(i);
                     recorder.record(now_s, TraceEvent::Arrived { request: lr.id });
+                    prefill_inflight_reqs += 1;
+                    prefill_inflight_tokens += lr.prompt.len() as u64;
+                    rates.on_arrival(lr.prompt.len() as u64);
                     pf_in_tx
                         .send(lr)
                         .map_err(|_| crate::Error::coordinator("prefill pool died"))?;
@@ -319,10 +428,43 @@ impl Server {
                 }
             }
 
+            // warmed-up elastic instances join their pools
+            let now_i = Instant::now();
+            let mut j = 0;
+            while j < pending_ready.len() {
+                if pending_ready[j].0 > now_i {
+                    j += 1;
+                    continue;
+                }
+                let (_, role) = pending_ready.swap_remove(j);
+                match role {
+                    PoolRole::Decode => {
+                        decode_provisioning -= 1;
+                        let id = instances.len();
+                        let added = state.add_instance(exp.cluster.kv_capacity_tokens);
+                        debug_assert_eq!(added, id, "state and thread pools must align");
+                        state.set_capacity(id, rounded_cap);
+                        let (st, handle) = self.spawn_decode_thread(id, &ev_tx);
+                        handles.push(handle);
+                        instances.push(st);
+                    }
+                    PoolRole::Prefill => {
+                        prefill_provisioning -= 1;
+                        let (worker, handle) = self.spawn_prefill_worker(
+                            next_prefill_seed,
+                            Arc::clone(&pf_in_rx),
+                            pf_out_tx.clone(),
+                        );
+                        next_prefill_seed += 1;
+                        handles.push(handle);
+                        prefill_workers.push(worker);
+                    }
+                }
+            }
+
             // re-dispatch parked payloads whose time has come: rejected
             // admissions, OOM recompute victims, and migrated-out requests
             // after their modeled KV-transfer delay (paper §5.4)
-            let now_i = Instant::now();
             while let Some((not_before, _)) = retries.front() {
                 if *not_before > now_i {
                     break;
@@ -375,10 +517,17 @@ impl Server {
             // prefill completions (non-blocking)
             while let Ok(msg) = pf_out_rx.try_recv() {
                 match msg {
-                    PrefillMsg::Err(id, e) => {
-                        eprintln!("[serve] prefill failed for {id}: {e}");
+                    PrefillMsg::Err {
+                        id,
+                        prompt_tokens,
+                        msg,
+                    } => {
+                        eprintln!("[serve] prefill failed for {id}: {msg}");
                         failed += 1;
                         trackers.get_mut(&id).unwrap().done = true;
+                        prefill_inflight_reqs = prefill_inflight_reqs.saturating_sub(1);
+                        prefill_inflight_tokens =
+                            prefill_inflight_tokens.saturating_sub(prompt_tokens);
                     }
                     PrefillMsg::Done {
                         req,
@@ -387,6 +536,10 @@ impl Server {
                         first_token,
                         at,
                     } => {
+                        prefill_inflight_reqs = prefill_inflight_reqs.saturating_sub(1);
+                        prefill_inflight_tokens =
+                            prefill_inflight_tokens.saturating_sub(req.prompt.len() as u64);
+                        rates.on_prefill_done(req.prompt.len() as u64);
                         let t = trackers.get_mut(&req.id).unwrap();
                         t.latency.prefill_done = Some(since(at));
                         t.latency.first_token = Some(since(at));
@@ -465,7 +618,10 @@ impl Server {
             if last_tick.elapsed() >= interval {
                 last_tick = Instant::now();
                 let now_s = start.elapsed().as_secs_f64();
+                // retired slots are out of the pool: they must not
+                // deflate the cross-instance variance metrics
                 let iters: Vec<f64> = (0..instances.len())
+                    .filter(|&i| instances[i].lifecycle != Lifecycle::Retired)
                     .map(|i| {
                         let s = state.stats(i);
                         if s.batch_size() == 0 {
@@ -476,9 +632,16 @@ impl Server {
                     })
                     .collect();
                 exec_var.snapshot(now_s, &iters);
-                let loads: Vec<f64> = instances.iter().map(|s| s.kv_used as f64).collect();
+                let loads: Vec<f64> = instances
+                    .iter()
+                    .filter(|s| s.lifecycle != Lifecycle::Retired)
+                    .map(|s| s.kv_used as f64)
+                    .collect();
                 load_var.snapshot(now_s, &loads);
                 for (i, st) in instances.iter().enumerate() {
+                    if st.lifecycle == Lifecycle::Retired {
+                        continue;
+                    }
                     recorder.record(
                         now_s,
                         TraceEvent::KvSample {
@@ -517,6 +680,156 @@ impl Server {
                 }
             }
 
+            // elastic scale tick: rates, drains, pool sample, decisions
+            if last_scale.elapsed() >= scale_interval {
+                let dt = last_scale.elapsed().as_secs_f64();
+                last_scale = Instant::now();
+                let now_s = start.elapsed().as_secs_f64();
+                prefill_drains.retain(|&t| t > Instant::now());
+                let prefill_active = prefill_workers.iter().filter(|w| w.is_active()).count();
+                rates.tick(dt, prefill_active);
+
+                // keep drains moving: migrate residents of draining
+                // instances toward active headroom, and retire instances
+                // whose drain has completed (reports show them empty and
+                // nothing is reserved toward them)
+                for di in 0..instances.len() {
+                    if instances[di].lifecycle != Lifecycle::Draining {
+                        continue;
+                    }
+                    let residents: Vec<RequestView> = state.active(di).to_vec();
+                    for r in residents {
+                        if r.migrating {
+                            continue;
+                        }
+                        let dst = crate::coordinator::elastic::drain_destination(
+                            &state.view(),
+                            r.tokens,
+                            exp.cluster.max_batch,
+                        );
+                        if let Some(dst) = dst {
+                            migrations += 1;
+                            migrating.push(r.id);
+                            state.set_migrating(r.id, true);
+                            state.reserve_inbound(dst, r.tokens);
+                            reservations.insert(r.id, (dst, r.tokens));
+                            recorder.record(
+                                now_s,
+                                TraceEvent::Migration {
+                                    request: r.id,
+                                    src: di,
+                                    dst,
+                                    kv_tokens: r.tokens,
+                                },
+                            );
+                            let _ = instances[di]
+                                .cmd
+                                .send(DecodeCommand::MigrateOut { id: r.id });
+                        }
+                    }
+                    let empty = state.stats(di).batch_size() == 0
+                        && state.stats(di).inbound_reserved_tokens() == 0
+                        && !reservations.values().any(|&(dst, _)| dst == di);
+                    if empty {
+                        // retire the slot for scheduling purposes but keep
+                        // the thread alive in Drain mode until the final
+                        // shutdown: a racing Admit that was accepted before
+                        // the Drain command (and not yet reflected in any
+                        // Report) would otherwise be lost with the thread.
+                        // The bounce path returns every later payload, and
+                        // an idle thread costs only its 20 ms poll.
+                        instances[di].lifecycle = Lifecycle::Retired;
+                        state.set_lifecycle(di, Lifecycle::Retired);
+                        if instances[di].flip_to_prefill {
+                            instances[di].flip_to_prefill = false;
+                            prefill_provisioning += 1;
+                            let at = ready_after(elastic.flip_delay_s);
+                            pending_ready.push((at, PoolRole::Prefill));
+                        }
+                    }
+                }
+
+                let pool = PoolStats {
+                    now: now_s,
+                    prefill_active,
+                    prefill_draining: prefill_drains.len(),
+                    prefill_provisioning,
+                    decode_active: instances
+                        .iter()
+                        .filter(|i| i.lifecycle == Lifecycle::Active)
+                        .count(),
+                    decode_draining: instances
+                        .iter()
+                        .filter(|i| i.lifecycle == Lifecycle::Draining)
+                        .count(),
+                    decode_provisioning,
+                    prefill_queued_reqs: prefill_inflight_reqs,
+                    prefill_queued_tokens: prefill_inflight_tokens,
+                    arrival_tokens_per_s: rates.arrival_tokens_per_s(),
+                    prefill_tokens_per_s: rates.prefill_tokens_per_s(),
+                };
+                pool_timeline.push(PoolSample {
+                    t: now_s,
+                    prefill_active: pool.prefill_active,
+                    decode_active: pool.decode_active,
+                    draining: pool.prefill_draining + pool.decode_draining,
+                    provisioning: pool.prefill_provisioning + pool.decode_provisioning,
+                });
+                for action in control.scale(&state.view(), &pool) {
+                    scale_log.push(ScaleRecord { t: now_s, action });
+                    match action {
+                        ScalingAction::FlipToDecode
+                        | ScalingAction::Retire {
+                            role: PoolRole::Prefill,
+                        } => {
+                            // drain the most recently added active worker
+                            // (workers share one queue, so any choice is
+                            // load-equivalent). Unlike the sim, the live
+                            // flip warm-up starts now and may overlap the
+                            // worker's final request — the pool can
+                            // transiently exceed the nominal budget by one
+                            // while the worker finishes.
+                            if let Some(w) = prefill_workers.iter().rev().find(|w| w.is_active()) {
+                                w.stop.store(true, Ordering::Relaxed);
+                                prefill_drains.push(Instant::now() + scale_interval);
+                                if action == ScalingAction::FlipToDecode {
+                                    decode_provisioning += 1;
+                                    let at = ready_after(elastic.flip_delay_s);
+                                    pending_ready.push((at, PoolRole::Decode));
+                                }
+                            }
+                        }
+                        ScalingAction::FlipToPrefill { decode } => {
+                            if instances[decode].lifecycle == Lifecycle::Active {
+                                instances[decode].lifecycle = Lifecycle::Draining;
+                                instances[decode].flip_to_prefill = true;
+                                state.set_lifecycle(decode, Lifecycle::Draining);
+                                let _ = instances[decode].cmd.send(DecodeCommand::Drain);
+                            }
+                        }
+                        ScalingAction::Retire {
+                            role: PoolRole::Decode,
+                        } => {
+                            let target =
+                                crate::coordinator::elastic::emptiest_active_decode(&state.view());
+                            if let Some(di) = target {
+                                instances[di].lifecycle = Lifecycle::Draining;
+                                instances[di].flip_to_prefill = false;
+                                state.set_lifecycle(di, Lifecycle::Draining);
+                                let _ = instances[di].cmd.send(DecodeCommand::Drain);
+                            }
+                        }
+                        ScalingAction::Provision { role } => {
+                            match role {
+                                PoolRole::Prefill => prefill_provisioning += 1,
+                                PoolRole::Decode => decode_provisioning += 1,
+                            }
+                            pending_ready.push((ready_after(elastic.provision_delay_s), role));
+                        }
+                    }
+                }
+            }
+
         }
 
         // shutdown
@@ -549,6 +862,8 @@ impl Server {
             wall_s: wall,
             oom_events,
             migrations,
+            pool_timeline,
+            scale_actions: scale_log,
         })
     }
 

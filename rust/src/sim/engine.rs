@@ -18,11 +18,12 @@ use super::{ReqState, SimRequest};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
     admission_watermark, ClusterSnapshot, ClusterState, ControlLoop, IncomingRequest,
-    InstanceView, PolicyRegistry, RequestView,
+    InstanceView, Lifecycle, PolicyRegistry, PoolRole, PoolStats, RateMeter, RequestView,
+    ScaleRecord, ScalingAction,
 };
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::KvCacheManager;
-use crate::metrics::{RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
+use crate::metrics::{PoolSample, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
 use crate::predictor::{build_sim_predictor, LengthPredictor, PredictInput};
 use crate::workload::{Request, ScenarioTrace, SessionPlan};
 use crate::{InstanceId, RequestId, Result, Time};
@@ -76,6 +77,14 @@ impl Default for SimParams {
 struct PrefillSim {
     queue: VecDeque<RequestId>,
     busy: Option<RequestId>,
+    /// Elastic lifecycle; only `Active` instances receive new requests.
+    lifecycle: Lifecycle,
+    /// Queued-token load: Σ kv_tokens over queue + busy (paper §2.1
+    /// dispatches "by load"; a queue-length rule lets one long prompt
+    /// hide an hour of work behind a short queue).
+    load_tokens: u64,
+    /// When this drain completes, the instance re-roles as decode.
+    flip_to_decode: bool,
 }
 
 struct DecodeSim {
@@ -88,6 +97,13 @@ struct DecodeSim {
     stepping: bool,
     epoch: u64,
     tokens_decoded: u64,
+    /// Elastic lifecycle (mirrored into [`ClusterState`] so policies see
+    /// it through their views).
+    lifecycle: Lifecycle,
+    /// When this drain completes, the instance re-roles as prefill.
+    flip_to_prefill: bool,
+    /// A DrainComplete event is already queued (dedupe).
+    drain_event_queued: bool,
 }
 
 /// Event-driven cluster simulator. Drive with [`Simulator::run`].
@@ -121,6 +137,18 @@ pub struct Simulator {
     /// Follow-up events scheduled but not yet fired (their request records
     /// do not exist yet, so the termination check must wait for them).
     pending_follow_ups: usize,
+    // -- elastic pool state --------------------------------------------
+    /// Instances warming up toward each pool (provision or flip).
+    prefill_provisioning: usize,
+    decode_provisioning: usize,
+    /// Pool composition, sampled once per ScaleTick.
+    pool_timeline: Vec<PoolSample>,
+    /// Executed scaling actions (the scale-action trace).
+    scale_log: Vec<ScaleRecord>,
+    /// Shared arrival / prefill-service rate meter (the predictive
+    /// policies' measured inputs; same definition as the live driver).
+    rates: RateMeter,
+    last_scale_t: Time,
 }
 
 impl Simulator {
@@ -207,6 +235,10 @@ impl Simulator {
             });
         }
         queue.push(exp.rescheduler.interval_s, Event::SchedulerTick);
+        // the scale tick always runs: under `static` scaling it only
+        // samples the pool timeline (ControlLoop::scale is a guaranteed
+        // no-op), so frozen-pool trajectories are untouched
+        queue.push(exp.elastic.scale_interval_s, Event::ScaleTick);
 
         let mut session_cursor = HashMap::new();
         let mut session_chains = vec![Vec::new(); trace.sessions.scripts.len()];
@@ -223,6 +255,9 @@ impl Simulator {
                 stepping: false,
                 epoch: 0,
                 tokens_decoded: 0,
+                lifecycle: Lifecycle::Active,
+                flip_to_prefill: false,
+                drain_event_queued: false,
             })
             .collect();
         let mut state = ClusterState::new(
@@ -250,6 +285,9 @@ impl Simulator {
                 .map(|_| PrefillSim {
                     queue: VecDeque::new(),
                     busy: None,
+                    lifecycle: Lifecycle::Active,
+                    load_tokens: 0,
+                    flip_to_decode: false,
                 })
                 .collect(),
             decode,
@@ -264,6 +302,12 @@ impl Simulator {
             session_cursor,
             session_chains,
             pending_follow_ups: 0,
+            prefill_provisioning: 0,
+            decode_provisioning: 0,
+            pool_timeline: Vec::new(),
+            scale_log: Vec::new(),
+            rates: RateMeter::default(),
+            last_scale_t: 0.0,
             params,
         })
     }
@@ -290,6 +334,9 @@ impl Simulator {
                 Event::SessionFollowUp { session, turn } => {
                     self.on_session_follow_up(session, turn)
                 }
+                Event::ScaleTick => self.on_scale_tick(),
+                Event::InstanceReady { role } => self.on_instance_ready(role),
+                Event::DrainComplete { instance } => self.on_drain_complete(instance),
             }
             if self.params.validate_state {
                 self.assert_state_consistent();
@@ -317,10 +364,21 @@ impl Simulator {
         } else {
             self.recorder.record(self.now, TraceEvent::Arrived { request: id });
         }
-        // prefill instance selection: shortest queue (paper §2.1: by load)
+        self.rates.on_arrival(self.requests[id as usize].kv_tokens());
+        self.enqueue_prefill(id);
+    }
+
+    /// Prefill instance selection: least queued-*token* load over active
+    /// instances (paper §2.1 dispatches "by load" — the old shortest-queue
+    /// rule let one long prompt hide an hour of work behind a two-entry
+    /// queue). Ties break on the lowest id for determinism.
+    fn enqueue_prefill(&mut self, id: RequestId) {
+        let tokens = self.requests[id as usize].kv_tokens();
         let pi = (0..self.prefill.len())
-            .min_by_key(|&i| self.prefill[i].queue.len() + self.prefill[i].busy.is_some() as usize)
-            .expect("at least one prefill instance");
+            .filter(|&i| self.prefill[i].lifecycle == Lifecycle::Active)
+            .min_by_key(|&i| (self.prefill[i].load_tokens, i))
+            .expect("at least one active prefill instance");
+        self.prefill[pi].load_tokens += tokens;
         self.prefill[pi].queue.push_back(id);
         self.maybe_start_prefill(pi);
     }
@@ -348,6 +406,11 @@ impl Simulator {
     fn on_prefill_done(&mut self, pi: usize, id: RequestId) {
         debug_assert_eq!(self.prefill[pi].busy, Some(id));
         self.prefill[pi].busy = None;
+        // prefill of a request never changes its token count, so this
+        // releases exactly what enqueue_prefill charged
+        let done_tokens = self.requests[id as usize].kv_tokens();
+        self.prefill[pi].load_tokens -= done_tokens;
+        self.rates.on_prefill_done(done_tokens);
 
         // initial (or refreshed, after recompute) length prediction
         let pred = {
@@ -376,13 +439,7 @@ impl Simulator {
             tokens: kv_tokens,
             predicted_remaining: pred,
         };
-        let di = match self.params.state_mode {
-            StateMode::Incremental => self.control.dispatch(&self.state.view(), &incoming),
-            StateMode::RebuildPerDecision => {
-                let snapshot = self.rebuild_snapshot();
-                self.control.dispatch(&snapshot.view(), &incoming)
-            }
-        };
+        let di = self.dispatch_decode(&incoming);
 
         if kv_tokens > admission_watermark(self.decode[di].kv.capacity_tokens()) {
             // can never pass admission, even on an idle instance: fail the
@@ -395,6 +452,27 @@ impl Simulator {
             self.kick(di);
         }
         self.maybe_start_prefill(pi);
+        self.maybe_complete_prefill_drain(pi);
+    }
+
+    /// Run the dispatch policy under the configured [`StateMode`]. The
+    /// drain invariant rides on this: as long as any Active decode
+    /// instance exists (the elastic guard's `min_decode` floor
+    /// guarantees one), no dispatch may land on a Draining/Retired slot.
+    fn dispatch_decode(&mut self, incoming: &IncomingRequest) -> usize {
+        let di = match self.params.state_mode {
+            StateMode::Incremental => self.control.dispatch(&self.state.view(), incoming),
+            StateMode::RebuildPerDecision => {
+                let snapshot = self.rebuild_snapshot();
+                self.control.dispatch(&snapshot.view(), incoming)
+            }
+        };
+        debug_assert!(
+            self.decode[di].lifecycle == Lifecycle::Active
+                || !self.decode.iter().any(|d| d.lifecycle == Lifecycle::Active),
+            "dispatch landed on non-active instance {di} while active instances exist"
+        );
+        di
     }
 
     // ------------------------------------------------------------------
@@ -627,6 +705,7 @@ impl Simulator {
             },
         );
         self.schedule_follow_up(id);
+        self.maybe_drain_complete(di);
     }
 
     /// If `id` has a successor turn in its session script, schedule its
@@ -693,6 +772,7 @@ impl Simulator {
                 requests: self.state.active(di).to_vec(),
                 kv_capacity_tokens: self.decode[di].kv.capacity_tokens(),
                 inbound_reserved_tokens: self.inbound_reserved_scan(self.decode[di].id),
+                lifecycle: self.decode[di].lifecycle,
             })
             .collect();
         ClusterSnapshot {
@@ -723,6 +803,7 @@ impl Simulator {
                 requests: Vec::new(),
                 kv_capacity_tokens: d.kv.capacity_tokens(),
                 inbound_reserved_tokens: 0,
+                lifecycle: d.lifecycle,
             })
             .collect();
         for r in &self.requests {
@@ -767,8 +848,11 @@ impl Simulator {
             }
         }
 
-        // metrics snapshots (taken whether or not rescheduling is on)
+        // metrics snapshots (taken whether or not rescheduling is on);
+        // retired slots are out of the pool and must not deflate the
+        // cross-instance variance
         let iters: Vec<f64> = (0..self.decode.len())
+            .filter(|&di| self.decode[di].lifecycle != Lifecycle::Retired)
             .map(|di| {
                 let s = self.state.stats(di);
                 if s.batch_size() == 0 {
@@ -782,10 +866,14 @@ impl Simulator {
         let loads: Vec<f64> = self
             .decode
             .iter()
+            .filter(|d| d.lifecycle != Lifecycle::Retired)
             .map(|d| d.kv.used_tokens() as f64)
             .collect();
         self.load_var.snapshot(self.now, &loads);
         for d in &self.decode {
+            if d.lifecycle == Lifecycle::Retired {
+                continue;
+            }
             self.recorder.record(
                 self.now,
                 TraceEvent::KvSample {
@@ -860,14 +948,323 @@ impl Simulator {
         // source frees its copy only after the transfer (both sides hold
         // KV during the copy, as with NIXL)
         self.decode[from].kv.release(id);
-        let r = &mut self.requests[id as usize];
-        debug_assert!(matches!(r.state, ReqState::Migrating { .. }));
-        r.state = ReqState::Pending(to);
+        debug_assert!(matches!(self.requests[id as usize].state, ReqState::Migrating { .. }));
         // release exactly what begin_migration reserved
         self.state.finish_migration(to, kv);
-        self.decode[to].pending.push_back(id);
-        self.kick(to);
+        // a flip decided after this migration left may have put the
+        // destination into Draining: deliver to the active pool instead
+        // (the KV is not yet admitted anywhere, so re-routing is free)
+        let dest = if self.decode[to].lifecycle == Lifecycle::Active {
+            to
+        } else {
+            let incoming = {
+                let r = &self.requests[id as usize];
+                IncomingRequest {
+                    id,
+                    tokens: r.kv_tokens(),
+                    predicted_remaining: r.predicted_remaining,
+                }
+            };
+            self.dispatch_decode(&incoming)
+        };
+        self.requests[id as usize].state = ReqState::Pending(dest);
+        self.decode[dest].pending.push_back(id);
+        self.kick(dest);
         self.kick(from);
+        self.maybe_drain_complete(from);
+        if dest != to {
+            self.maybe_drain_complete(to);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // elastic pool (coordinator::elastic executed on sim events)
+
+    /// Pool composition + backlog + measured rates for the scaling policy.
+    fn pool_stats(&self) -> PoolStats {
+        let mut ps = PoolStats {
+            now: self.now,
+            prefill_provisioning: self.prefill_provisioning,
+            decode_provisioning: self.decode_provisioning,
+            arrival_tokens_per_s: self.rates.arrival_tokens_per_s(),
+            prefill_tokens_per_s: self.rates.prefill_tokens_per_s(),
+            ..Default::default()
+        };
+        for p in &self.prefill {
+            match p.lifecycle {
+                Lifecycle::Active => {
+                    ps.prefill_active += 1;
+                    ps.prefill_queued_reqs += p.queue.len() + p.busy.is_some() as usize;
+                    ps.prefill_queued_tokens += p.load_tokens;
+                }
+                Lifecycle::Draining => ps.prefill_draining += 1,
+                _ => {}
+            }
+        }
+        for d in &self.decode {
+            match d.lifecycle {
+                Lifecycle::Active => ps.decode_active += 1,
+                Lifecycle::Draining => ps.decode_draining += 1,
+                _ => {}
+            }
+        }
+        ps
+    }
+
+    /// One scale interval: refresh the rate EWMAs, push draining
+    /// instances along, sample the timeline, and run the scaling policy
+    /// through the control loop (a guaranteed no-op under `static`).
+    fn on_scale_tick(&mut self) {
+        let interval = self.control.elastic_config().scale_interval_s;
+        let dt = self.now - self.last_scale_t;
+        let n_active_prefill = self
+            .prefill
+            .iter()
+            .filter(|p| p.lifecycle == Lifecycle::Active)
+            .count();
+        self.rates.tick(dt, n_active_prefill);
+        self.last_scale_t = self.now;
+
+        // keep drains moving: migrate residents of draining instances out
+        for di in 0..self.decode.len() {
+            if self.decode[di].lifecycle == Lifecycle::Draining {
+                self.drain_out(di);
+                self.maybe_drain_complete(di);
+            }
+        }
+
+        let pool = self.pool_stats();
+        self.pool_timeline.push(PoolSample {
+            t: self.now,
+            prefill_active: pool.prefill_active,
+            decode_active: pool.decode_active,
+            draining: pool.prefill_draining + pool.decode_draining,
+            provisioning: pool.prefill_provisioning + pool.decode_provisioning,
+        });
+        let actions = match self.params.state_mode {
+            StateMode::Incremental => self.control.scale(&self.state.view(), &pool),
+            StateMode::RebuildPerDecision => {
+                let snapshot = self.rebuild_snapshot();
+                self.control.scale(&snapshot.view(), &pool)
+            }
+        };
+        for action in actions {
+            self.scale_log.push(ScaleRecord { t: self.now, action });
+            self.execute_action(action);
+        }
+        self.queue.push(self.now + interval, Event::ScaleTick);
+    }
+
+    fn execute_action(&mut self, action: ScalingAction) {
+        match action {
+            ScalingAction::FlipToDecode => self.drain_prefill(true),
+            ScalingAction::Retire {
+                role: PoolRole::Prefill,
+            } => self.drain_prefill(false),
+            ScalingAction::FlipToPrefill { decode } => self.drain_decode(decode, true),
+            ScalingAction::Retire {
+                role: PoolRole::Decode,
+            } => {
+                if let Some(di) = self.emptiest_active_decode() {
+                    self.drain_decode(di, false);
+                }
+            }
+            ScalingAction::Provision { role } => {
+                let delay = self.control.elastic_config().provision_delay_s;
+                match role {
+                    PoolRole::Prefill => self.prefill_provisioning += 1,
+                    PoolRole::Decode => self.decode_provisioning += 1,
+                }
+                self.queue.push(self.now + delay, Event::InstanceReady { role });
+            }
+        }
+    }
+
+    /// The active decode instance cheapest to drain (shared heuristic
+    /// with the policies and the live driver; the state view carries the
+    /// same lifecycle this sim maintains).
+    fn emptiest_active_decode(&self) -> Option<usize> {
+        crate::coordinator::elastic::emptiest_active_decode(&self.state.view())
+    }
+
+    /// Start draining the least-loaded active prefill instance; when its
+    /// current request finishes it retires (and re-roles as decode when
+    /// `flip_to_decode`). Queued-but-unstarted requests re-route to the
+    /// remaining active prefill pool immediately.
+    fn drain_prefill(&mut self, flip_to_decode: bool) {
+        let candidates: Vec<usize> = (0..self.prefill.len())
+            .filter(|&i| self.prefill[i].lifecycle == Lifecycle::Active)
+            .collect();
+        // the guard's min_prefill floor leaves at least one OTHER active
+        if candidates.len() < 2 {
+            return;
+        }
+        let pi = candidates
+            .into_iter()
+            .min_by_key(|&i| (self.prefill[i].load_tokens, i))
+            .expect("non-empty candidate list");
+        self.prefill[pi].lifecycle = Lifecycle::Draining;
+        self.prefill[pi].flip_to_decode = flip_to_decode;
+        let queued: Vec<RequestId> = self.prefill[pi].queue.drain(..).collect();
+        for id in queued {
+            let tokens = self.requests[id as usize].kv_tokens();
+            self.prefill[pi].load_tokens -= tokens;
+            self.enqueue_prefill(id);
+        }
+        self.maybe_complete_prefill_drain(pi);
+    }
+
+    /// A draining prefill instance with no work left retires; a flip
+    /// schedules the decode-side warm-up.
+    fn maybe_complete_prefill_drain(&mut self, pi: usize) {
+        if self.prefill[pi].lifecycle != Lifecycle::Draining
+            || self.prefill[pi].busy.is_some()
+            || !self.prefill[pi].queue.is_empty()
+        {
+            return;
+        }
+        self.prefill[pi].lifecycle = Lifecycle::Retired;
+        if self.prefill[pi].flip_to_decode {
+            let delay = self.control.elastic_config().flip_delay_s;
+            self.decode_provisioning += 1;
+            let role = PoolRole::Decode;
+            self.queue.push(self.now + delay, Event::InstanceReady { role });
+        }
+    }
+
+    /// Start draining decode instance `di`: it accepts no dispatches and
+    /// no migration arrivals from here on. Pending (never-started)
+    /// requests re-dispatch to the active pool; batch residents migrate
+    /// out where headroom exists (here and on every ScaleTick) or simply
+    /// finish — either way no request is lost across the flip.
+    fn drain_decode(&mut self, di: usize, flip_to_prefill: bool) {
+        if self.decode[di].lifecycle != Lifecycle::Active {
+            return; // guard-validated; defensive against custom policies
+        }
+        self.decode[di].lifecycle = Lifecycle::Draining;
+        self.decode[di].flip_to_prefill = flip_to_prefill;
+        self.state.set_lifecycle(di, Lifecycle::Draining);
+        let pending: Vec<RequestId> = self.decode[di].pending.drain(..).collect();
+        for id in pending {
+            debug_assert!(
+                matches!(self.requests[id as usize].state, ReqState::Pending(d) if d == di)
+            );
+            let incoming = {
+                let r = &self.requests[id as usize];
+                IncomingRequest {
+                    id,
+                    tokens: r.kv_tokens(),
+                    predicted_remaining: r.predicted_remaining,
+                }
+            };
+            let dst = self.dispatch_decode(&incoming);
+            self.requests[id as usize].state = ReqState::Pending(dst);
+            self.decode[dst].pending.push_back(id);
+            self.kick(dst);
+        }
+        self.drain_out(di);
+        self.maybe_drain_complete(di);
+    }
+
+    /// Migrate residents of draining instance `di` toward active
+    /// instances with admission headroom (shared destination heuristic,
+    /// `elastic::drain_destination`). Residents with no feasible
+    /// destination keep decoding here and leave by completing.
+    fn drain_out(&mut self, di: usize) {
+        let max_batch = self.params.exp.cluster.max_batch;
+        let residents: Vec<RequestView> = self.state.active(di).to_vec();
+        for r in residents {
+            if r.migrating
+                || !matches!(self.requests[r.id as usize].state, ReqState::Decoding(d) if d == di)
+            {
+                continue;
+            }
+            let dst = crate::coordinator::elastic::drain_destination(
+                &self.state.view(),
+                r.tokens,
+                max_batch,
+            );
+            if let Some(dst) = dst {
+                self.start_migration(r.id, di, dst, r.tokens);
+            }
+        }
+    }
+
+    /// Queue a DrainComplete once a draining decode instance is fully
+    /// empty: no batch, no pending queue, no inbound reservation.
+    fn maybe_drain_complete(&mut self, di: usize) {
+        if self.decode[di].lifecycle != Lifecycle::Draining || self.decode[di].drain_event_queued {
+            return;
+        }
+        let s = self.state.stats(di);
+        if s.batch_size() == 0
+            && self.decode[di].pending.is_empty()
+            && s.inbound_reserved_tokens() == 0
+        {
+            self.decode[di].drain_event_queued = true;
+            self.queue.push(self.now, Event::DrainComplete { instance: di });
+        }
+    }
+
+    fn on_drain_complete(&mut self, di: usize) {
+        self.decode[di].drain_event_queued = false;
+        if self.decode[di].lifecycle != Lifecycle::Draining {
+            return; // stale (already handled)
+        }
+        let s = self.state.stats(di);
+        if s.batch_size() != 0
+            || !self.decode[di].pending.is_empty()
+            || s.inbound_reserved_tokens() != 0
+        {
+            return; // re-armed by whatever raced in; a later check re-queues
+        }
+        self.decode[di].lifecycle = Lifecycle::Retired;
+        self.state.set_lifecycle(di, Lifecycle::Retired);
+        if self.decode[di].flip_to_prefill {
+            let delay = self.control.elastic_config().flip_delay_s;
+            self.prefill_provisioning += 1;
+            let role = PoolRole::Prefill;
+            self.queue.push(self.now + delay, Event::InstanceReady { role });
+        }
+    }
+
+    /// A warmed-up instance joins its pool. Decode instances get a fresh
+    /// slot at the end of the id space (retired slots are never reused,
+    /// keeping instance ids stable for traces and per-instance metrics)
+    /// and an iteration-time EWMA seeded from the cluster median.
+    fn on_instance_ready(&mut self, role: PoolRole) {
+        match role {
+            PoolRole::Prefill => {
+                self.prefill_provisioning -= 1;
+                self.prefill.push(PrefillSim {
+                    queue: VecDeque::new(),
+                    busy: None,
+                    lifecycle: Lifecycle::Active,
+                    load_tokens: 0,
+                    flip_to_decode: false,
+                });
+            }
+            PoolRole::Decode => {
+                self.decode_provisioning -= 1;
+                let exp = &self.params.exp;
+                let kv =
+                    KvCacheManager::new(exp.cluster.kv_capacity_tokens, exp.cluster.block_tokens);
+                let id = self.state.add_instance(exp.cluster.kv_capacity_tokens);
+                debug_assert_eq!(id, self.decode.len(), "state and sim pools must align");
+                self.state.set_capacity(id, kv.capacity_tokens());
+                self.decode.push(DecodeSim {
+                    id,
+                    kv,
+                    pending: VecDeque::new(),
+                    stepping: false,
+                    epoch: 0,
+                    tokens_decoded: 0,
+                    lifecycle: Lifecycle::Active,
+                    flip_to_prefill: false,
+                    drain_event_queued: false,
+                });
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -886,6 +1283,8 @@ impl Simulator {
             scheduler_stats: self.control.stats(),
             per_instance_tokens: self.decode.iter().map(|d| d.tokens_decoded).collect(),
             session_chains: self.session_chains,
+            pool_timeline: self.pool_timeline,
+            scale_actions: self.scale_log,
         };
         for r in self.requests {
             if matches!(r.state, ReqState::Done) && r.latency.finished.is_some() {
@@ -1132,6 +1531,70 @@ mod tests {
             }
         }
         assert!(multi_turn > 0, "no realized multi-turn chain");
+    }
+
+    #[test]
+    fn prefill_selection_uses_queued_tokens_not_queue_length() {
+        // 2 prefill instances; a huge prompt lands first, then three short
+        // ones. The old shortest-QUEUE rule ties 1-vs-1 and parks a short
+        // prompt behind the ~5 s monster; token-load selection routes all
+        // three shorts to the other instance.
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_prefill = 2;
+        exp.cluster.n_decode = 2;
+        exp.cluster.kv_capacity_tokens = 400_000;
+        exp.predictor = PredictorKind::Oracle;
+        let mut trace = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 20_000,
+            output_len: 5,
+            tag: 0,
+            class: Default::default(),
+        }];
+        for i in 1..=3 {
+            trace.push(Request {
+                id: i,
+                arrival: 0.001 * i as f64,
+                prompt_len: 100,
+                output_len: 5,
+                tag: 0,
+                class: Default::default(),
+            });
+        }
+        let params = SimParams {
+            exp,
+            validate_state: true,
+            ..Default::default()
+        };
+        let report = Simulator::new(params, &trace).run();
+        assert_eq!(report.completed.len(), 4);
+        let by_id: HashMap<_, _> = report.completed.iter().map(|l| (l.id, l)).collect();
+        let big_done = by_id[&0].prefill_done.unwrap();
+        for i in 1..=3u64 {
+            let short_done = by_id[&i].prefill_done.unwrap();
+            assert!(
+                short_done < big_done,
+                "short request {i} finished prefill at {short_done:.3}s, after the \
+                 20k-token prompt at {big_done:.3}s — it was queued behind it"
+            );
+        }
+    }
+
+    #[test]
+    fn static_scaling_keeps_the_pool_frozen() {
+        let (p, trace) = small_params(40, 1.0);
+        let report = Simulator::new(p, &trace).run();
+        assert!(report.scale_actions.is_empty(), "static must never act");
+        for s in &report.pool_timeline {
+            assert_eq!(s.prefill_active, 1);
+            assert_eq!(s.decode_active, 3);
+            assert_eq!(s.draining + s.provisioning, 0);
+        }
+        assert!(
+            !report.pool_timeline.is_empty(),
+            "timeline is sampled even under static scaling"
+        );
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::coordinator::PoolRole;
 use crate::{InstanceId, RequestId, Time};
 
 /// Discrete simulation events.
@@ -34,6 +35,16 @@ pub enum Event {
     /// this fires). `turn` indexes the session script in the
     /// [`crate::workload::SessionPlan`].
     SessionFollowUp { session: u32, turn: u32 },
+    /// Elastic-pool scale interval: sample the pool, run the scaling
+    /// policy through the control loop, execute at most one action.
+    ScaleTick,
+    /// A provisioned or flipped instance finished its modeled warm-up and
+    /// joins the pool in `role`.
+    InstanceReady { role: PoolRole },
+    /// A draining decode instance ran out of residents (batch, pending
+    /// queue and inbound reservations all empty): retire it, or re-role
+    /// it if the drain was started by a flip.
+    DrainComplete { instance: InstanceId },
 }
 
 #[derive(Clone, Debug)]

@@ -3,8 +3,8 @@
 //! (aggregate goodput hides class-level violations — the per-class rows
 //! are how a bursty mixed workload shows its tail).
 
-use crate::coordinator::ReschedulerStats;
-use crate::metrics::{RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
+use crate::coordinator::{ReschedulerStats, ScaleRecord};
+use crate::metrics::{PoolSample, RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
 use crate::workload::{RequestClass, SloByClass};
 use crate::{RequestId, Time};
 
@@ -28,6 +28,11 @@ pub struct SimReport {
     /// Realized multi-round session chains (request ids in turn order);
     /// empty for sessionless workloads.
     pub session_chains: Vec<Vec<RequestId>>,
+    /// Elastic pool-size timeline, one sample per scale interval.
+    pub pool_timeline: Vec<PoolSample>,
+    /// Executed scaling actions, in decision order (the scale-action
+    /// trace the determinism tests compare verbatim).
+    pub scale_actions: Vec<ScaleRecord>,
 }
 
 /// Per-class slice of a run: TTFT/TPOT percentiles and goodput against

@@ -106,3 +106,57 @@ fn validate_bench_accepts_good_and_rejects_bad_json() {
     std::fs::remove_file(&good).ok();
     std::fs::remove_file(&bad).ok();
 }
+
+#[test]
+fn unknown_scaling_lists_valid_names() {
+    let (ok, _, err) = run(&["simulate", "--scaling", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown scaling policy `bogus`"), "{err}");
+    assert!(err.contains("queue_pressure"), "must list candidates: {err}");
+    assert!(err.contains("predictive"), "must list candidates: {err}");
+}
+
+#[test]
+fn list_prints_registered_policies_and_scenarios() {
+    let (ok, out, err) = run(&["list"]);
+    assert!(ok, "star list failed: {err}");
+    for needle in [
+        "dispatch policies:",
+        "reschedule policies:",
+        "scaling policies:",
+        "scenarios:",
+        "round_robin",
+        "current_load",
+        "slo_aware",
+        "star",
+        "memory_pressure",
+        "static",
+        "queue_pressure",
+        "predictive",
+        "bursty_mixed",
+        "diurnal_chat",
+        "multi_round",
+        "stationary",
+    ] {
+        assert!(out.contains(needle), "star list missing `{needle}`: {out}");
+    }
+}
+
+#[test]
+fn elastic_simulation_runs_end_to_end() {
+    let (ok, out, err) = run(&[
+        "simulate",
+        "--scenario",
+        "diurnal_chat",
+        "--scaling",
+        "predictive",
+        "--requests",
+        "40",
+        "--rps",
+        "0.5",
+        "--kv-capacity",
+        "400000",
+    ]);
+    assert!(ok, "simulate --scaling predictive failed: {err}");
+    assert!(out.contains("completed"), "missing summary line: {out}");
+}

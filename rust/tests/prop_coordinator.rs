@@ -36,6 +36,7 @@ fn random_snapshot(g: &mut Gen) -> ClusterSnapshot {
                 requests,
                 kv_capacity_tokens: g.u64(20_000, 200_000),
                 inbound_reserved_tokens: g.u64(0, 5_000),
+                lifecycle: Default::default(),
             }
         })
         .collect();
@@ -157,6 +158,7 @@ fn balanced_clusters_are_left_alone() {
                 }],
                 kv_capacity_tokens: 1_000_000,
                 inbound_reserved_tokens: 0,
+                lifecycle: Default::default(),
             })
             .collect();
         let snap = ClusterSnapshot {
@@ -206,6 +208,7 @@ fn round_robin_is_fair_on_uniform_clusters() {
                     requests: vec![],
                     kv_capacity_tokens: 1_000_000,
                     inbound_reserved_tokens: 0,
+                    lifecycle: Default::default(),
                 })
                 .collect(),
             tokens_per_interval: 10.0,

@@ -176,3 +176,37 @@ fn llm_native_predictor_runs_on_live_path() {
         );
     }
 }
+
+#[test]
+fn elastic_scaling_serves_to_completion() {
+    // wiring smoke for the live elastic path: scale ticks fire, the pool
+    // timeline is sampled, and every request still completes whether or
+    // not the policy decides to flip anything (timing dependent).
+    let Some(rt) = runtime() else { return };
+    let mut params = ServeParams::default();
+    params.exp.cluster.n_prefill = 2;
+    params.exp.cluster.n_decode = 2;
+    params.exp.cluster.kv_capacity_tokens = 3_000;
+    params.exp.cluster.max_batch = 8;
+    params.exp.rescheduler.enabled = false;
+    params.exp.predictor = PredictorKind::Oracle;
+    params.exp.scaling_policy = "queue_pressure".to_string();
+    params.exp.elastic.scale_interval_s = 0.25;
+    params.exp.elastic.cooldown_s = 0.5;
+    params.exp.elastic.flip_delay_s = 0.1;
+    params.max_wall_s = 120.0;
+    let reqs: Vec<LiveRequest> = (0..8)
+        .map(|i| tiny_request(i, 0.03 * i as f64, 20 + 5 * (i as u32 % 3), (i % 8) as u8))
+        .collect();
+    let server = Server::new(rt, params);
+    let out = server.run(reqs).expect("serve run");
+    assert_eq!(out.metrics.completed.len(), 8, "no request lost under elasticity");
+    assert!(
+        !out.pool_timeline.is_empty(),
+        "scale ticks must sample the pool"
+    );
+    for s in &out.pool_timeline {
+        assert!(s.prefill_active >= 1 && s.decode_active >= 1, "floors hold");
+    }
+    eprintln!("live scale actions: {:?}", out.scale_actions);
+}
