@@ -10,7 +10,6 @@
 
 use std::sync::Arc;
 
-use star::config::PredictorKind;
 use star::metrics::Slo;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
@@ -44,11 +43,11 @@ fn main() -> Result<(), star::Error> {
         tpot_s: 0.080,
     };
 
-    let configs: Vec<(&str, bool, PredictorKind)> = vec![
-        ("vLLM (dispatch only)", false, PredictorKind::None),
-        ("STAR w/o prediction", true, PredictorKind::None),
-        ("STAR w/ LLM-native", true, PredictorKind::LlmNative),
-        ("STAR Oracle", true, PredictorKind::Oracle),
+    let configs: Vec<(&str, bool, &str)> = vec![
+        ("vLLM (dispatch only)", false, "none"),
+        ("STAR w/o prediction", true, "none"),
+        ("STAR w/ LLM-native", true, "llm_native"),
+        ("STAR Oracle", true, "oracle"),
     ];
     println!(
         "\nserving {n_requests} ShareGPT-shaped requests at {rps} rps on \
@@ -64,7 +63,7 @@ fn main() -> Result<(), star::Error> {
         params.exp.cluster.seed = 17;
         params.exp.rescheduler.enabled = resched;
         params.exp.rescheduler.interval_s = 0.25;
-        params.exp.predictor = pred;
+        params.exp.predictor = pred.to_string();
         params.exp.dispatch_policy = "current_load".to_string();
         params.max_wall_s = 240.0;
 

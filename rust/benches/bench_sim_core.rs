@@ -28,7 +28,7 @@ use std::time::Instant;
 
 use star::bench::output::BenchJson;
 use star::bench::scenarios::smoke;
-use star::config::{ExperimentConfig, PredictorKind};
+use star::config::ExperimentConfig;
 use star::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use star::sim::{SimParams, Simulator, StateMode};
 use star::workload::{Dataset, TraceGen};
@@ -72,7 +72,7 @@ fn run_one(size: usize, n_requests: usize, mode: StateMode) -> Measure {
     exp.cluster.seed = 53;
     exp.cluster.kv_capacity_tokens = 160_000;
     exp.cluster.max_batch = 64;
-    exp.predictor = PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     exp.rescheduler.enabled = true;
     let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n_requests, 53);
     let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);

@@ -6,7 +6,6 @@
 use star::bench::output::BenchJson;
 use star::bench::scenarios::{scaled, sim_params, small_cluster};
 use star::bench::Table;
-use star::config::PredictorKind;
 use star::sim::Simulator;
 use star::workload::{Dataset, TraceGen};
 
@@ -21,7 +20,7 @@ fn main() {
     for dispatch in ["round_robin", "current_load"] {
         let mut exp = small_cluster(Dataset::ShareGpt, rps, 11);
         exp.rescheduler.enabled = false;
-        exp.predictor = PredictorKind::None;
+        exp.predictor = "none".to_string();
         exp.record_traces = true;
         exp.dispatch_policy = dispatch.to_string();
         let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n, 11);

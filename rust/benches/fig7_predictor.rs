@@ -1,0 +1,144 @@
+//! Predictor-ablation sweep (beyond the paper's Fig. 7): how much
+//! scheduling quality each predictor tier buys under the bursty mixed
+//! workload — none vs the paper's binned quantizations (2/4/6) vs the
+//! simulated LLM-native predictor at several noise levels vs its
+//! `debiased` variant vs the oracle, with rescheduling on. Emits
+//! `BENCH_predictor.json` (goodput / tail latency / migration counts per
+//! predictor, plus each run's calibration scorecard) through the shared
+//! writer, so `ci.sh --smoke`, `ci.sh --bench fig7_predictor`, and
+//! `star validate-bench` all pick it up.
+
+use star::bench::output::BenchJson;
+use star::bench::scenarios::{scaled, smoke, ScenarioRegistry};
+use star::bench::Table;
+use star::config::ExperimentConfig;
+use star::coordinator::PolicyRegistry;
+use star::sim::{SimParams, SimReport, Simulator};
+use star::workload::SloByClass;
+
+const SCENARIO: &str = "bursty_mixed";
+
+struct Run {
+    label: String,
+    report: SimReport,
+    slos: SloByClass,
+}
+
+fn run_one(label: &str, predictor: &str, rel_err: f64, n: usize, rps: f64) -> Run {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_prefill = 2;
+    exp.cluster.n_decode = 6;
+    exp.cluster.kv_capacity_tokens = 96_000;
+    exp.cluster.max_batch = 48;
+    exp.cluster.rps = rps;
+    exp.cluster.seed = 23;
+    exp.rescheduler.enabled = true;
+    exp.predictor = predictor.to_string();
+    exp.predictor_rel_err = rel_err;
+    exp.scenario_name = Some(SCENARIO.to_string());
+    let spec = ScenarioRegistry::with_builtins()
+        .build(SCENARIO, &exp)
+        .expect("builtin scenario");
+    let slos = spec.slos();
+    let trace = spec.generate(n, exp.cluster.seed);
+    let params = SimParams {
+        exp,
+        ..Default::default()
+    };
+    let report = Simulator::with_scenario(params, trace, &PolicyRegistry::with_builtins())
+        .expect("builtin construction")
+        .run();
+    Run {
+        label: label.to_string(),
+        report,
+        slos,
+    }
+}
+
+fn main() {
+    let n = scaled(800);
+    let rps = if smoke() { 0.3 } else { 0.45 };
+
+    // (label, registry name, rel_err) — rel_err only matters for the
+    // noise-modelled predictors
+    let settings: Vec<(String, &str, f64)> = vec![
+        ("none".into(), "none", 0.0),
+        ("binned2".into(), "binned2", 0.0),
+        ("binned4".into(), "binned4", 0.0),
+        ("binned6".into(), "binned6", 0.0),
+        ("llm_native rel_err=0.25".into(), "llm_native", 0.25),
+        ("llm_native rel_err=0.5".into(), "llm_native", 0.5),
+        ("llm_native rel_err=1.0".into(), "llm_native", 1.0),
+        ("debiased rel_err=0.5".into(), "debiased", 0.5),
+        ("oracle".into(), "oracle", 0.0),
+    ];
+
+    let mut json = BenchJson::new(
+        "predictor",
+        "predictor-ablation sweep under bursty_mixed: none / binned{2,4,6} / \
+         llm_native at several rel_err values / debiased / oracle, rescheduling on",
+    );
+    json.field_str("scenario", SCENARIO);
+    json.field_int("requests", n as i64);
+    json.field_num("rps", rps);
+
+    let mut t = Table::new(
+        "Fig 7 (ablation) - scheduling quality per predictor tier (bursty_mixed)",
+        &[
+            "predictor",
+            "goodput (req/s)",
+            "P99 TTFT (ms)",
+            "P99 TPOT (ms)",
+            "migrations",
+            "OOMs",
+            "cal. MAE (tokens)",
+            "cal. bias (tokens)",
+        ],
+    );
+    let mut goodputs: Vec<(String, f64)> = Vec::new();
+    for (label, predictor, rel_err) in &settings {
+        let run = run_one(label, predictor, *rel_err, n, rps);
+        let m = run.report.metrics();
+        let goodput = m.goodput_by_class(&run.slos);
+        let cal = run.report.scorecard.total();
+        t.row(&[
+            run.label.clone(),
+            format!("{goodput:.4}"),
+            format!("{:.1}", m.p99_ttft_ms()),
+            format!("{:.2}", m.p99_tpot_ms()),
+            run.report.migrations.to_string(),
+            run.report.oom_events.to_string(),
+            format!("{:.1}", cal.mae()),
+            format!("{:+.1}", cal.bias()),
+        ]);
+        println!(
+            "[{SCENARIO}] {label}: goodput {goodput:.4} req/s, {} migrations, \
+             calibration MAE {:.1} tokens (bias {:+.1})",
+            run.report.migrations,
+            cal.mae(),
+            cal.bias()
+        );
+        let key = label.replace([' ', '=', '.'], "_");
+        json.field_num(&format!("goodput_{key}"), goodput);
+        json.field_raw(&format!("scorecard_{key}"), &run.report.scorecard.json());
+        goodputs.push((run.label, goodput));
+    }
+    t.print();
+    json.table("ablation", &t);
+    json.write_or_die();
+
+    let get = |name: &str| {
+        goodputs
+            .iter()
+            .find(|(l, _)| l == name)
+            .map(|&(_, g)| g)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "claim: goodput should order oracle ({:.4}) >= llm_native ({:.4}) >= \
+         none ({:.4}); binned tiers interpolate between none and oracle",
+        get("oracle"),
+        get("llm_native rel_err=0.25"),
+        get("none"),
+    );
+}

@@ -6,7 +6,6 @@
 use star::bench::output::BenchJson;
 use star::bench::scenarios::{large_cluster, scaled, sim_params, trace_for};
 use star::bench::Table;
-use star::config::PredictorKind;
 use star::metrics::Slo;
 use star::sim::Simulator;
 use star::workload::Dataset;
@@ -18,12 +17,12 @@ fn main() {
         ttft_s: 1.0,
         tpot_s: 0.025,
     };
-    let settings: Vec<(&str, PredictorKind)> = vec![
-        ("Full", PredictorKind::Oracle),
-        ("6-bin", PredictorKind::Binned(6)),
-        ("4-bin", PredictorKind::Binned(4)),
-        ("2-bin", PredictorKind::Binned(2)),
-        ("No pred.", PredictorKind::None),
+    let settings: Vec<(&str, &str)> = vec![
+        ("Full", "oracle"),
+        ("6-bin", "binned6"),
+        ("4-bin", "binned4"),
+        ("2-bin", "binned2"),
+        ("No pred.", "none"),
     ];
 
     let mut t = Table::new(
@@ -35,7 +34,7 @@ fn main() {
     for (name, kind) in settings {
         let mut exp = large_cluster(Dataset::ShareGpt, rps, 61);
         exp.rescheduler.enabled = true;
-        exp.predictor = kind;
+        exp.predictor = kind.to_string();
         let trace = trace_for(&exp, n);
         let report = Simulator::new(sim_params(exp, true), &trace).run();
         let m = report.metrics();

@@ -6,7 +6,6 @@
 use star::bench::output::BenchJson;
 use star::bench::scenarios::{large_cluster, scaled, sim_params, trace_for};
 use star::bench::Table;
-use star::config::PredictorKind;
 use star::metrics::Slo;
 use star::sim::Simulator;
 use star::workload::Dataset;
@@ -36,10 +35,10 @@ fn main() {
         match k {
             Some(k) => {
                 // the simulated LLM-native predictor pays per-call latency
-                exp.predictor = PredictorKind::LlmNative;
+                exp.predictor = "llm_native".to_string();
                 exp.rescheduler.predict_every_iters = k;
             }
-            None => exp.predictor = PredictorKind::None,
+            None => exp.predictor = "none".to_string(),
         }
         let trace = trace_for(&exp, n);
         let report = Simulator::new(sim_params(exp, true), &trace).run();

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{ExperimentConfig, PredictorKind};
+use crate::config::ExperimentConfig;
 use crate::coordinator::PolicyRegistry;
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::sim::{SimParams, SimReport, Simulator};
@@ -16,12 +16,13 @@ use crate::workload::{
 };
 use crate::{Error, Result};
 
-/// One evaluated system from the paper's §6.1 baseline list.
+/// One evaluated system from the paper's §6.1 baseline list. The
+/// predictor is a `PredictorRegistry` name.
 #[derive(Clone, Copy, Debug)]
 pub struct Scenario {
     pub name: &'static str,
     pub rescheduling: bool,
-    pub predictor: PredictorKind,
+    pub predictor: &'static str,
 }
 
 /// The paper's four systems, in presentation order.
@@ -30,22 +31,22 @@ pub fn paper_scenarios() -> Vec<Scenario> {
         Scenario {
             name: "vLLM",
             rescheduling: false,
-            predictor: PredictorKind::None,
+            predictor: "none",
         },
         Scenario {
             name: "STAR w/o pred",
             rescheduling: true,
-            predictor: PredictorKind::None,
+            predictor: "none",
         },
         Scenario {
             name: "STAR w/ pred",
             rescheduling: true,
-            predictor: PredictorKind::LlmNative,
+            predictor: "llm_native",
         },
         Scenario {
             name: "STAR Oracle",
             rescheduling: true,
-            predictor: PredictorKind::Oracle,
+            predictor: "oracle",
         },
     ]
 }
@@ -99,7 +100,7 @@ pub fn run_scenario(
     trace: &[Request],
 ) -> SimReport {
     exp.rescheduler.enabled = scenario.rescheduling;
-    exp.predictor = scenario.predictor;
+    exp.predictor = scenario.predictor.to_string();
     Simulator::new(sim_params(exp, h800), trace).run()
 }
 
@@ -168,7 +169,7 @@ pub fn run_scenario_trace(
     trace: &ScenarioTrace,
 ) -> SimReport {
     exp.rescheduler.enabled = scenario.rescheduling;
-    exp.predictor = scenario.predictor;
+    exp.predictor = scenario.predictor.to_string();
     Simulator::with_scenario(
         sim_params(exp, h800),
         trace.clone(),

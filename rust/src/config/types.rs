@@ -8,7 +8,12 @@ use crate::workload::{
 };
 use crate::{Error, Result};
 
-/// Which remaining-length predictor drives the rescheduler.
+/// The live serving path's typed view of a predictor selection. The
+/// authoritative selector is the registry *name* string
+/// (`ExperimentConfig::predictor`, resolved through
+/// `predictor::PredictorRegistry`); this enum is what the decode-instance
+/// threads match on to pick their execution path (runtime MLP vs
+/// forced-length oracle), derived from the name via [`Self::parse`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PredictorKind {
     /// No prediction: classification uses current load only
@@ -21,36 +26,47 @@ pub enum PredictorKind {
     /// The trained LLM-native MLP (live runtime: through the HLO
     /// predictor artifact; simulator: oracle + calibrated relative noise).
     LlmNative,
+    /// LLM-native + online per-progress-bucket bias correction (the
+    /// simulator's `debiased` builtin; the live path runs the MLP
+    /// uncorrected).
+    Debiased,
 }
 
 impl PredictorKind {
     pub fn parse(s: &str) -> Result<Self> {
-        match s.to_ascii_lowercase().as_str() {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
             "none" => Ok(PredictorKind::None),
             "oracle" => Ok(PredictorKind::Oracle),
-            "llm_native" | "llm-native" | "native" => Ok(PredictorKind::LlmNative),
+            "llm_native" | "native" => Ok(PredictorKind::LlmNative),
+            "debiased" => Ok(PredictorKind::Debiased),
             other => {
-                if let Some(n) = other.strip_suffix("bin").or(other.strip_suffix("-bin")) {
+                let n = other
+                    .strip_prefix("binned")
+                    .or(other.strip_suffix("bin").map(|n| n.trim_matches('_')));
+                if let Some(n) = n {
                     let n: u8 = n
-                        .trim_matches('-')
                         .parse()
                         .map_err(|_| Error::config(format!("bad predictor `{other}`")))?;
                     Ok(PredictorKind::Binned(n))
                 } else {
                     Err(Error::config(format!(
-                        "unknown predictor `{other}` (none|oracle|llm_native|2bin|4bin|6bin)"
+                        "unknown predictor `{other}` \
+                         (none|oracle|llm_native|debiased|binned2|binned4|binned6)"
                     )))
                 }
             }
         }
     }
 
+    /// Canonical registry key (matches `PredictorRegistry::with_builtins`
+    /// names — the satellite invariant: display names ARE registry keys).
     pub fn name(&self) -> String {
         match self {
             PredictorKind::None => "none".into(),
             PredictorKind::Oracle => "oracle".into(),
-            PredictorKind::Binned(n) => format!("{n}bin"),
+            PredictorKind::Binned(n) => format!("binned{n}"),
             PredictorKind::LlmNative => "llm_native".into(),
+            PredictorKind::Debiased => "debiased".into(),
         }
     }
 
@@ -208,10 +224,20 @@ impl Default for ClusterConfig {
 pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub rescheduler: ReschedulerConfig,
-    pub predictor: PredictorKind,
+    /// Remaining-length predictor, by registry name (config key
+    /// `predictor.kind`, CLI `--predictor`), resolved against
+    /// `predictor::PredictorRegistry` — the same string-selection surface
+    /// as the scheduling policies.
+    pub predictor: String,
     /// Relative noise of the simulated LLM-native predictor (calibrated
     /// from artifacts/predictor_eval.tsv MAE / mean-remaining).
     pub predictor_rel_err: f64,
+    /// Estimate quantile the OOM-avoidance / migration-target checks
+    /// consume (`predictor.conservative_q`, default 0.9 — p90).
+    pub predictor_conservative_q: f64,
+    /// Estimate quantile the balancing objectives consume
+    /// (`predictor.balance_q`, default 0.5 — the mean).
+    pub predictor_balance_q: f64,
     pub record_traces: bool,
     /// Dispatch policy, by registry name (config key `policy.dispatch`).
     pub dispatch_policy: String,
@@ -243,8 +269,10 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             cluster: ClusterConfig::default(),
             rescheduler: ReschedulerConfig::default(),
-            predictor: PredictorKind::default(),
+            predictor: "oracle".to_string(),
             predictor_rel_err: 0.0,
+            predictor_conservative_q: 0.9,
+            predictor_balance_q: 0.5,
             record_traces: false,
             dispatch_policy: "current_load".to_string(),
             reschedule_policy: "star".to_string(),
@@ -293,7 +321,7 @@ impl ExperimentConfig {
             initial_avg_iter_s: cfg.f64_or("rescheduler.initial_avg_iter_s", rd.initial_avg_iter_s),
             default_remaining: cfg.f64_or("rescheduler.default_remaining", rd.default_remaining),
         };
-        let predictor = PredictorKind::parse(cfg.str_or("predictor.kind", "oracle"))?;
+        let predictor = cfg.str_or("predictor.kind", "oracle").to_string();
         let ed = ExperimentConfig::default();
         let mut policy_params = BTreeMap::new();
         for key in cfg.keys() {
@@ -355,6 +383,9 @@ impl ExperimentConfig {
             rescheduler,
             predictor,
             predictor_rel_err: cfg.f64_or("predictor.rel_err", 0.25),
+            predictor_conservative_q: cfg
+                .f64_or("predictor.conservative_q", ed.predictor_conservative_q),
+            predictor_balance_q: cfg.f64_or("predictor.balance_q", ed.predictor_balance_q),
             record_traces: cfg.bool_or("experiment.record_traces", false),
             dispatch_policy: cfg.str_or("policy.dispatch", &ed.dispatch_policy).to_string(),
             reschedule_policy: cfg
@@ -377,6 +408,12 @@ impl ExperimentConfig {
     pub fn rebuild_scenario(&mut self, cfg: &Config) -> Result<()> {
         self.scenario = scenario_from_config(cfg, &self.cluster)?;
         Ok(())
+    }
+
+    /// Whether the configured predictor produces estimates at all
+    /// (Alg. 1 `usePrediction`): everything except the `none` builtin.
+    pub fn predictor_uses_prediction(&self) -> bool {
+        self.predictor.to_ascii_lowercase().replace('-', "_") != "none"
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -403,6 +440,35 @@ impl ExperimentConfig {
         }
         if let Some(spec) = &self.scenario {
             spec.validate()?;
+        }
+        for (key, q) in [
+            ("predictor.conservative_q", self.predictor_conservative_q),
+            ("predictor.balance_q", self.predictor_balance_q),
+        ] {
+            if !(q > 0.0 && q < 1.0) {
+                return Err(Error::config(format!("{key} must be in (0, 1), got {q}")));
+            }
+        }
+        // the OOM-avoidance view must dominate the balancing view
+        // (load_hi pointwise >= load is what every memory-safety check
+        // rests on); an inverted pair would silently under-protect
+        if self.predictor_conservative_q < self.predictor_balance_q {
+            return Err(Error::config(format!(
+                "predictor.conservative_q ({}) must be >= predictor.balance_q ({})",
+                self.predictor_conservative_q, self.predictor_balance_q
+            )));
+        }
+        // the predictor name resolves against the *builtin* predictor
+        // registry here — same rule as the policies below: custom
+        // registries bypass validate() and surface unknown names when the
+        // driver builds the predictor (Simulator::with_registries).
+        let pred_reg = crate::predictor::PredictorRegistry::with_builtins();
+        if !pred_reg.has(&self.predictor) {
+            return Err(Error::config(format!(
+                "unknown predictor `{}` (known: {})",
+                self.predictor,
+                pred_reg.names().join("|")
+            )));
         }
         // policy names are resolved against the *builtin* registry here;
         // custom registries bypass validate() and surface unknown names
@@ -605,6 +671,30 @@ mod tests {
             PredictorKind::LlmNative
         );
         assert_eq!(PredictorKind::parse("6bin").unwrap(), PredictorKind::Binned(6));
+        // registry-canonical spellings parse too, and names round-trip to
+        // the registry keys (no `6bin`/`llm_native(sim,σ=…)` leakage)
+        assert_eq!(
+            PredictorKind::parse("binned4").unwrap(),
+            PredictorKind::Binned(4)
+        );
+        assert_eq!(
+            PredictorKind::parse("debiased").unwrap(),
+            PredictorKind::Debiased
+        );
+        for k in [
+            PredictorKind::None,
+            PredictorKind::Oracle,
+            PredictorKind::Binned(6),
+            PredictorKind::LlmNative,
+            PredictorKind::Debiased,
+        ] {
+            assert_eq!(PredictorKind::parse(&k.name()).unwrap(), k);
+            assert!(
+                crate::predictor::PredictorRegistry::with_builtins().has(&k.name()),
+                "{} must be a registry key",
+                k.name()
+            );
+        }
         assert!(PredictorKind::parse("magic").is_err());
     }
 
@@ -626,7 +716,48 @@ mod tests {
         let exp = ExperimentConfig::from_config(&cfg).unwrap();
         assert_eq!(exp.cluster.n_decode, 8);
         assert_eq!(exp.cluster.dataset, Dataset::Alpaca);
-        assert_eq!(exp.predictor, PredictorKind::Binned(4));
+        assert_eq!(exp.predictor, "4bin");
+        exp.validate().expect("4bin aliases the binned4 builtin");
+    }
+
+    #[test]
+    fn predictor_name_and_quantiles_parse_and_validate() {
+        let cfg = Config::from_str(
+            "[predictor]\nkind = \"debiased\"\nrel_err = 0.4\n\
+             conservative_q = 0.95\nbalance_q = 0.5\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.predictor, "debiased");
+        assert!((exp.predictor_rel_err - 0.4).abs() < 1e-12);
+        assert!((exp.predictor_conservative_q - 0.95).abs() < 1e-12);
+        exp.validate().unwrap();
+        // unknown predictor names fail validation WITH the registry list
+        let mut exp = ExperimentConfig::default();
+        exp.predictor = "crystal_ball".to_string();
+        let err = exp.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown predictor `crystal_ball`"), "{err}");
+        assert!(err.contains("binned4"), "{err}");
+        assert!(err.contains("llm_native"), "{err}");
+        // degenerate quantiles are rejected
+        for bad in [0.0, 1.0, -0.5, 1.5] {
+            let mut exp = ExperimentConfig::default();
+            exp.predictor_conservative_q = bad;
+            assert!(exp.validate().is_err(), "conservative_q {bad} must fail");
+        }
+        // an inverted pair (conservative below balance) is rejected too:
+        // it would flip the load_hi >= load dominance the memory-safety
+        // checks rest on
+        let mut exp = ExperimentConfig::default();
+        exp.predictor_conservative_q = 0.4;
+        exp.predictor_balance_q = 0.6;
+        let err = exp.validate().unwrap_err().to_string();
+        assert!(err.contains("must be >= predictor.balance_q"), "{err}");
+        // the `none` builtin is the only no-prediction selection
+        let mut exp = ExperimentConfig::default();
+        assert!(exp.predictor_uses_prediction());
+        exp.predictor = "None".to_string();
+        assert!(!exp.predictor_uses_prediction());
     }
 
     #[test]

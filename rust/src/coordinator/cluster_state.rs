@@ -21,6 +21,7 @@ use std::collections::HashMap;
 
 use super::elastic::Lifecycle;
 use super::{ClusterSnapshot, InstanceView, RequestView};
+use crate::predictor::{normal_quantile, Prediction};
 use crate::{InstanceId, RequestId};
 
 /// KV-token admission watermark (vLLM-style 10% growth headroom): an
@@ -43,8 +44,13 @@ pub struct InstanceStats {
     requests: Vec<RequestView>,
     /// Σ tokens over active requests (== [`InstanceView::token_load`]).
     active_tokens: u64,
-    /// Σ `predicted_remaining.unwrap_or(0.0)` over active requests.
+    /// Σ predicted-remaining *means* over active requests (0 for
+    /// unpredicted requests).
     predicted_sum: f64,
+    /// Σ predicted-remaining *sigmas* over active requests — makes the
+    /// quantile aggregate [`Self::predicted_work_q`] O(1)
+    /// (Σ quantile_q(r) = Σ mean + z(q)·Σ σ).
+    sigma_sum: f64,
     /// Tokens promised to migrations in flight toward this instance.
     inbound_reserved_tokens: u64,
     ewma_iter_ms: f64,
@@ -62,6 +68,7 @@ impl InstanceStats {
             requests: Vec::new(),
             active_tokens: 0,
             predicted_sum: 0.0,
+            sigma_sum: 0.0,
             inbound_reserved_tokens: 0,
             ewma_iter_ms: 0.0,
             iters: 0,
@@ -100,11 +107,21 @@ impl InstanceStats {
         self.kv_capacity_tokens.saturating_sub(self.effective_used())
     }
 
-    /// Projected work Σ (tokens + predicted remaining), the
+    /// Projected work Σ (tokens + predicted remaining mean), the
     /// `predicted_load` dispatch score, in O(1).
     #[inline]
     pub fn predicted_work(&self) -> f64 {
         self.active_tokens as f64 + self.predicted_sum.max(0.0)
+    }
+
+    /// Quantile-`q` projected work: Σ tokens + Σ quantile_q(remaining)
+    /// = tokens + (Σ mean + z(q)·Σ σ), in O(1). Intended for q ≥ 0.5
+    /// (the conservative OOM-avoidance view); at q = 0.5 it equals
+    /// [`Self::predicted_work`].
+    #[inline]
+    pub fn predicted_work_q(&self, q: f64) -> f64 {
+        let proj = self.predicted_sum + normal_quantile(q) * self.sigma_sum;
+        self.active_tokens as f64 + proj.max(0.0)
     }
 
     #[inline]
@@ -204,7 +221,7 @@ impl ClusterState {
         di: usize,
         id: RequestId,
         tokens: u64,
-        predicted_remaining: Option<f64>,
+        predicted_remaining: Option<Prediction>,
     ) {
         debug_assert!(
             !self.index.contains_key(&id),
@@ -219,7 +236,8 @@ impl ClusterState {
             migrating: false,
         });
         inst.active_tokens += tokens;
-        inst.predicted_sum += predicted_remaining.unwrap_or(0.0);
+        inst.predicted_sum += predicted_remaining.map_or(0.0, |p| p.mean);
+        inst.sigma_sum += predicted_remaining.map_or(0.0, |p| p.sigma);
     }
 
     /// One generated token appended to `id`'s KV.
@@ -231,12 +249,15 @@ impl ClusterState {
     }
 
     /// Refresh `id`'s predicted remaining length (reprediction).
-    pub fn set_prediction(&mut self, id: RequestId, predicted_remaining: Option<f64>) {
+    pub fn set_prediction(&mut self, id: RequestId, predicted_remaining: Option<Prediction>) {
         let &(di, slot) = self.index.get(&id).expect("prediction for untracked request");
         let inst = &mut self.instances[di];
-        let old = inst.requests[slot].predicted_remaining.unwrap_or(0.0);
+        let old = inst.requests[slot].predicted_remaining;
         inst.requests[slot].predicted_remaining = predicted_remaining;
-        inst.predicted_sum += predicted_remaining.unwrap_or(0.0) - old;
+        inst.predicted_sum +=
+            predicted_remaining.map_or(0.0, |p| p.mean) - old.map_or(0.0, |p| p.mean);
+        inst.sigma_sum +=
+            predicted_remaining.map_or(0.0, |p| p.sigma) - old.map_or(0.0, |p| p.sigma);
     }
 
     /// Mark/unmark a tracked request as mid-migration (it stays in the
@@ -258,7 +279,8 @@ impl ClusterState {
             self.index.insert(moved.id, (di, slot));
         }
         inst.active_tokens -= view.tokens;
-        inst.predicted_sum -= view.predicted_remaining.unwrap_or(0.0);
+        inst.predicted_sum -= view.predicted_remaining.map_or(0.0, |p| p.mean);
+        inst.sigma_sum -= view.predicted_remaining.map_or(0.0, |p| p.sigma);
         Some(view)
     }
 
@@ -393,7 +415,11 @@ impl ClusterState {
         inst.active_tokens = requests.iter().map(|r| r.tokens).sum();
         inst.predicted_sum = requests
             .iter()
-            .map(|r| r.predicted_remaining.unwrap_or(0.0))
+            .map(|r| r.predicted_remaining.map_or(0.0, |p| p.mean))
+            .sum();
+        inst.sigma_sum = requests
+            .iter()
+            .map(|r| r.predicted_remaining.map_or(0.0, |p| p.sigma))
             .sum();
         inst.requests = requests;
         for (slot, r) in self.instances[di].requests.iter().enumerate() {
@@ -499,14 +525,16 @@ impl ClusterState {
                 if a.id != b.id || a.tokens != b.tokens || a.migrating != b.migrating {
                     return Some(format!("instance {}: request {:?} vs {:?}", s.id, a, b));
                 }
-                let (pa, pb) = (
-                    a.predicted_remaining.unwrap_or(f64::NAN),
-                    b.predicted_remaining.unwrap_or(f64::NAN),
-                );
-                if pa.is_nan() != pb.is_nan() || (!pa.is_nan() && (pa - pb).abs() > 1e-9) {
+                let close = |x: f64, y: f64| (x - y).abs() <= 1e-9;
+                let agree = match (a.predicted_remaining, b.predicted_remaining) {
+                    (None, None) => true,
+                    (Some(pa), Some(pb)) => close(pa.mean, pb.mean) && close(pa.sigma, pb.sigma),
+                    _ => false,
+                };
+                if !agree {
                     return Some(format!(
-                        "instance {}: request {} prediction {pa} vs {pb}",
-                        s.id, a.id
+                        "instance {}: request {} prediction {:?} vs {:?}",
+                        s.id, a.id, a.predicted_remaining, b.predicted_remaining
                     ));
                 }
             }
@@ -521,12 +549,23 @@ impl ClusterState {
             let pred: f64 = r
                 .requests
                 .iter()
-                .map(|v| v.predicted_remaining.unwrap_or(0.0))
+                .map(|v| v.predicted_remaining.map_or(0.0, |p| p.mean))
                 .sum();
             if (s.predicted_sum - pred).abs() > 1e-6 * pred.abs().max(1.0) {
                 return Some(format!(
                     "instance {}: predicted_sum {} vs recomputed {}",
                     s.id, s.predicted_sum, pred
+                ));
+            }
+            let sig: f64 = r
+                .requests
+                .iter()
+                .map(|v| v.predicted_remaining.map_or(0.0, |p| p.sigma))
+                .sum();
+            if (s.sigma_sum - sig).abs() > 1e-6 * sig.abs().max(1.0) {
+                return Some(format!(
+                    "instance {}: sigma_sum {} vs recomputed {}",
+                    s.id, s.sigma_sum, sig
                 ));
             }
         }
@@ -688,7 +727,7 @@ impl<'a> InstanceRef<'a> {
         }
     }
 
-    /// Σ (tokens + predicted remaining) — the `predicted_load` score.
+    /// Σ (tokens + predicted remaining mean) — the `predicted_load` score.
     pub fn predicted_work(&self) -> f64 {
         match self.0 {
             RefSrc::State(s) => s.predicted_work(),
@@ -697,6 +736,26 @@ impl<'a> InstanceRef<'a> {
                 .iter()
                 .map(|r| r.tokens as f64 + r.remaining_or(0.0))
                 .sum(),
+        }
+    }
+
+    /// Quantile-`q` projected work: tokens + (Σ mean + z(q)·Σ σ), the
+    /// conservative planning view `elastic::predictive` consumes. O(1) on
+    /// state-backed views; the snapshot path computes the identical
+    /// formula, so the two backings agree exactly.
+    pub fn predicted_work_q(&self, q: f64) -> f64 {
+        match self.0 {
+            RefSrc::State(s) => s.predicted_work_q(q),
+            RefSrc::Snap(s) => {
+                let (mean, sigma) = s.requests.iter().fold((0.0f64, 0.0f64), |(m, sg), r| {
+                    match r.predicted_remaining {
+                        Some(p) => (m + p.mean, sg + p.sigma),
+                        None => (m, sg),
+                    }
+                });
+                let proj = mean + crate::predictor::normal_quantile(q) * sigma;
+                s.token_load() as f64 + proj.max(0.0)
+            }
         }
     }
 
@@ -725,10 +784,15 @@ mod tests {
         ClusterState::new(3, 10_000, 1.0, 0.02, 1e-6)
     }
 
+    /// Exact (zero-spread) prediction literal for the admission tests.
+    fn pr(v: f64) -> Option<Prediction> {
+        Some(Prediction::exact(v))
+    }
+
     #[test]
     fn admit_append_release_roundtrip() {
         let mut st = state();
-        st.admit(0, 1, 100, Some(50.0));
+        st.admit(0, 1, 100, pr(50.0));
         st.admit(0, 2, 200, None);
         assert_eq!(st.stats(0).token_load(), 300);
         assert_eq!(st.stats(0).batch_size(), 2);
@@ -759,7 +823,7 @@ mod tests {
     #[test]
     fn migration_moves_reservation_not_load() {
         let mut st = state();
-        st.admit(0, 7, 500, Some(100.0));
+        st.admit(0, 7, 500, pr(100.0));
         let moved = st.begin_migration(7, 2).unwrap();
         assert_eq!(moved, 500);
         assert_eq!(st.stats(0).token_load(), 0);
@@ -769,15 +833,15 @@ mod tests {
         st.finish_migration(2, moved);
         assert_eq!(st.stats(2).inbound_reserved_tokens(), 0);
         // re-admission on the destination completes the move
-        st.admit(2, 7, 500, Some(100.0));
+        st.admit(2, 7, 500, pr(100.0));
         assert_eq!(st.stats(2).token_load(), 500);
     }
 
     #[test]
     fn prediction_refresh_is_a_delta() {
         let mut st = state();
-        st.admit(0, 1, 100, Some(40.0));
-        st.set_prediction(1, Some(90.0));
+        st.admit(0, 1, 100, pr(40.0));
+        st.set_prediction(1, pr(90.0));
         assert!((st.stats(0).predicted_work() - 190.0).abs() < 1e-9);
         st.set_prediction(1, None);
         assert!((st.stats(0).predicted_work() - 100.0).abs() < 1e-9);
@@ -799,7 +863,7 @@ mod tests {
     #[test]
     fn view_and_snapshot_agree() {
         let mut st = state();
-        st.admit(0, 1, 100, Some(50.0));
+        st.admit(0, 1, 100, pr(50.0));
         st.admit(1, 2, 300, None);
         st.reserve_inbound(2, 64);
         let snap = st.snapshot();
@@ -880,14 +944,14 @@ mod tests {
     fn sync_instance_reconciles_membership() {
         let mut st = state();
         st.admit(0, 1, 100, None);
-        st.admit(0, 2, 200, Some(10.0));
+        st.admit(0, 2, 200, pr(10.0));
         st.sync_instance(
             0,
             vec![
                 RequestView {
                     id: 2,
                     tokens: 250,
-                    predicted_remaining: Some(5.0),
+                    predicted_remaining: pr(5.0),
                     migrating: true,
                 },
                 RequestView {

@@ -389,12 +389,21 @@ impl ScalingPolicy for QueuePressureScaling {
 ///   occupancy, independent of the projection (default 0.85)
 /// * `predictive.kv_lo` — only below this current occupancy may decode
 ///   shed an instance (default 0.45)
+///
+/// Capacity planning is OOM-avoidance, so the projected demand is read at
+/// the *conservative* estimate quantile
+/// (`Prediction::quantile(conservative_q)`, p90 by default, configured
+/// via `[predictor] conservative_q`): an uncertain remaining length must
+/// be planned for as if long, or the pool under-provisions exactly when
+/// the predictor is least sure.
 #[derive(Clone, Debug)]
 pub struct PredictiveScaling {
     target_kv_frac: f64,
     lookahead_s: f64,
     kv_hi: f64,
     kv_lo: f64,
+    /// Estimate quantile of the projected-demand signal.
+    q: f64,
 }
 
 impl PredictiveScaling {
@@ -406,16 +415,17 @@ impl PredictiveScaling {
             lookahead_s: cfg.param_or("predictive.lookahead_s", 15.0).max(1e-3),
             kv_hi: cfg.param_or("predictive.kv_hi", 0.85).clamp(0.05, 1.0),
             kv_lo: cfg.param_or("predictive.kv_lo", 0.45).clamp(0.0, 1.0),
+            q: cfg.conservative_q,
         }
     }
 
-    /// Decode instances needed so Σ (tokens + predicted remaining) fits
-    /// under `target_kv_frac` of per-instance capacity.
+    /// Decode instances needed so Σ (tokens + quantile-q predicted
+    /// remaining) fits under `target_kv_frac` of per-instance capacity.
     fn needed_decode(&self, view: &ClusterView<'_>) -> usize {
         let (mut projected, mut cap_sum, mut n) = (0.0f64, 0.0f64, 0usize);
         for iv in view.instances() {
             if iv.is_schedulable() {
-                projected += iv.predicted_work() + iv.inbound_reserved_tokens() as f64;
+                projected += iv.predicted_work_q(self.q) + iv.inbound_reserved_tokens() as f64;
                 cap_sum += iv.kv_capacity_tokens() as f64;
                 n += 1;
             }

@@ -9,6 +9,16 @@
 //! scheduling interval every active request generates `g ≈ interval /
 //! avg_iter_time` tokens; a request with predicted remaining N̂(r) ≤ g·t
 //! has completed by step t and frees its KV, contributing 0.
+//!
+//! Predictions carry uncertainty ([`Prediction`]), so every projection is
+//! taken at a *quantile* of the remaining-length estimate: the balancing
+//! objective uses the mean (`balance_q`, 0.5 by default), while the
+//! OOM-avoidance checks read the conservative aggregate trace
+//! (`conservative_q`, p90 by default) — a request whose length is
+//! uncertain must be assumed to hold its KV longer before a memory-safety
+//! decision banks on the space.
+//!
+//! [`Prediction`]: crate::predictor::Prediction
 
 use super::cluster_state::InstanceRef;
 use super::RequestView;
@@ -21,14 +31,25 @@ pub struct FutureLoad {
 }
 
 impl FutureLoad {
-    /// Project one request. `g` = tokens per interval, `default_remaining`
-    /// = assumed remaining when prediction is off (paper "w/o prediction":
-    /// the scheduler only trusts current state, so the projection holds
-    /// the request's load flat).
-    pub fn of_request(r: &RequestView, g: f64, horizon: usize, default_remaining: Option<f64>) -> FutureLoad {
+    /// Project one request at quantile `q` of its remaining-length
+    /// estimate. `g` = tokens per interval, `default_remaining` = assumed
+    /// remaining when prediction is off (paper "w/o prediction": the
+    /// scheduler only trusts current state, so the projection holds the
+    /// request's load flat).
+    pub fn of_request(
+        r: &RequestView,
+        g: f64,
+        horizon: usize,
+        default_remaining: Option<f64>,
+        q: f64,
+    ) -> FutureLoad {
         let mut trace = Vec::with_capacity(horizon + 1);
         trace.push(r.tokens as f64);
-        match r.predicted_remaining.or(default_remaining) {
+        let rem = r
+            .predicted_remaining
+            .map(|p| p.quantile(q))
+            .or(default_remaining);
+        match rem {
             Some(rem) => {
                 for t in 1..=horizon {
                     let gen = g * t as f64;
@@ -52,13 +73,18 @@ impl FutureLoad {
 }
 
 /// What a worker reports to the scheduler each interval: its identity,
-/// the H-step aggregate load trace, and per-request projections (needed
+/// the H-step aggregate load traces, and per-request projections (needed
 /// only for requests that become migration candidates).
 #[derive(Clone, Debug)]
 pub struct WorkerReport {
     pub instance: usize,
-    /// Aggregate projected load: `load[t]` = Σ_r trace_r[t], t in 0..=H.
+    /// Aggregate projected load at the *balancing* quantile (mean by
+    /// default): `load[t]` = Σ_r trace_r[t], t in 0..=H.
     pub load: Vec<f64>,
+    /// Aggregate projected load at the *conservative* quantile (p90 by
+    /// default) — the OOM-avoidance view behind [`Self::projected_peak`].
+    /// Pointwise ≥ `load`; equal when every estimate is exact (σ = 0).
+    pub load_hi: Vec<f64>,
     /// Weighted workload w_i = Σ_{t=1..H} β_t · load[t] (Alg. 1 line 13).
     pub weighted: f64,
     pub current_tokens: u64,
@@ -68,19 +94,37 @@ pub struct WorkerReport {
 
 impl WorkerReport {
     /// Compute a report from an instance view — the "worker-side
-    /// pre-simulation" step. `betas[t-1]` weights future step t.
+    /// pre-simulation" step. `betas[t-1]` weights future step t;
+    /// `balance_q` / `conservative_q` select the estimate quantiles of the
+    /// two aggregate traces.
     pub fn compute(
         view: &InstanceRef<'_>,
         g: f64,
         betas: &[f64],
         default_remaining: Option<f64>,
+        balance_q: f64,
+        conservative_q: f64,
     ) -> WorkerReport {
         let horizon = betas.len();
         let mut load = vec![0.0; horizon + 1];
+        let mut load_hi = vec![0.0; horizon + 1];
+        let same_q = (balance_q - conservative_q).abs() < 1e-12;
         for r in view.requests() {
-            let fl = FutureLoad::of_request(r, g, horizon, default_remaining);
+            let fl = FutureLoad::of_request(r, g, horizon, default_remaining, balance_q);
             for (t, v) in fl.trace.iter().enumerate() {
                 load[t] += v;
+            }
+            // σ = 0 (or equal quantiles) makes the traces identical; skip
+            // the second projection then
+            if same_q || r.predicted_remaining.map_or(true, |p| p.sigma <= 0.0) {
+                for (t, v) in fl.trace.iter().enumerate() {
+                    load_hi[t] += v;
+                }
+            } else {
+                let fh = FutureLoad::of_request(r, g, horizon, default_remaining, conservative_q);
+                for (t, v) in fh.trace.iter().enumerate() {
+                    load_hi[t] += v;
+                }
             }
         }
         let weighted = betas
@@ -91,6 +135,7 @@ impl WorkerReport {
         WorkerReport {
             instance: view.id(),
             load,
+            load_hi,
             weighted,
             current_tokens: view.token_load(),
             kv_capacity_tokens: view.kv_capacity_tokens(),
@@ -98,12 +143,12 @@ impl WorkerReport {
         }
     }
 
-    /// Projected peak KV occupancy over the horizon, tokens: the load
-    /// trace maximum plus capacity already promised to in-flight
-    /// migrations. The single definition both the STAR memory-safety
-    /// check and the memory-pressure trigger rest on.
+    /// Projected peak KV occupancy over the horizon, tokens: the
+    /// *conservative* load-trace maximum plus capacity already promised to
+    /// in-flight migrations. The single definition both the STAR
+    /// memory-safety check and the memory-pressure trigger rest on.
     pub fn projected_peak(&self) -> f64 {
-        self.load.iter().cloned().fold(0.0, f64::max) + self.inbound_reserved_tokens as f64
+        self.load_hi.iter().cloned().fold(0.0, f64::max) + self.inbound_reserved_tokens as f64
     }
 
     /// Projected free KV headroom at the *worst* point of the horizon
@@ -122,11 +167,12 @@ pub fn beta_schedule(horizon: usize, decay: f64) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::{inst, req};
+    use crate::predictor::Prediction;
 
     #[test]
     fn future_load_completes_and_frees() {
         let r = req(1, 100, Some(25.0));
-        let fl = FutureLoad::of_request(&r, 10.0, 4, None);
+        let fl = FutureLoad::of_request(&r, 10.0, 4, None, 0.5);
         // t=0: 100; t=1: 110; t=2: 120; t=3 (gen=30 >= 25): 0
         assert_eq!(fl.trace, vec![100.0, 110.0, 120.0, 0.0, 0.0]);
     }
@@ -134,27 +180,60 @@ mod tests {
     #[test]
     fn future_load_without_prediction_grows_flat() {
         let r = req(1, 100, None);
-        let fl = FutureLoad::of_request(&r, 10.0, 2, None);
+        let fl = FutureLoad::of_request(&r, 10.0, 2, None, 0.5);
         assert_eq!(fl.trace, vec![100.0, 110.0, 120.0]);
+    }
+
+    #[test]
+    fn conservative_quantile_holds_kv_longer() {
+        // mean 25, σ 10: p90 ≈ 37.8, so at g=10 the request frees one
+        // step LATER under the conservative view
+        let mut r = req(1, 100, None);
+        r.predicted_remaining = Some(Prediction::new(25.0, 10.0, 0));
+        let lo = FutureLoad::of_request(&r, 10.0, 4, None, 0.5);
+        let hi = FutureLoad::of_request(&r, 10.0, 4, None, 0.9);
+        assert_eq!(lo.trace, vec![100.0, 110.0, 120.0, 0.0, 0.0]);
+        assert_eq!(hi.trace, vec![100.0, 110.0, 120.0, 130.0, 0.0]);
+        for (l, h) in lo.trace.iter().zip(&hi.trace) {
+            assert!(h >= l, "conservative trace must dominate pointwise");
+        }
     }
 
     #[test]
     fn report_aggregates_requests() {
         let v = inst(0, vec![req(1, 100, Some(1000.0)), req(2, 50, Some(5.0))], 10_000);
         let betas = beta_schedule(2, 0.5);
-        let rep = WorkerReport::compute(&v.view(), 10.0, &betas, None);
+        let rep = WorkerReport::compute(&v.view(), 10.0, &betas, None, 0.5, 0.9);
         // t=0: 150; t=1: 110+0(done: 10>=5)=110; t=2: 120
         assert_eq!(rep.load, vec![150.0, 110.0, 120.0]);
+        // exact predictions: the conservative trace is identical
+        assert_eq!(rep.load_hi, rep.load);
         let expect_w = 0.5 * 110.0 + 0.25 * 120.0;
         assert!((rep.weighted - expect_w).abs() < 1e-9);
         assert_eq!(rep.current_tokens, 150);
     }
 
     #[test]
+    fn report_separates_balance_and_conservative_views() {
+        // one uncertain request (mean 5, σ 20): under the mean it is done
+        // by t=1 (g=10 ≥ 5); at p90 (≈ 30.6) it survives through t=3
+        let mut r = req(1, 100, None);
+        r.predicted_remaining = Some(Prediction::new(5.0, 20.0, 0));
+        let v = inst(0, vec![r], 10_000);
+        let rep = WorkerReport::compute(&v.view(), 10.0, &beta_schedule(4, 1.0), None, 0.5, 0.9);
+        assert_eq!(rep.load, vec![100.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(rep.load_hi, vec![100.0, 110.0, 120.0, 130.0, 0.0]);
+        // the peak definition reads the conservative trace
+        assert!((rep.projected_peak() - 130.0).abs() < 1e-9);
+        // the weighted (balancing) workload reads the mean trace
+        assert!(rep.weighted.abs() < 1e-9);
+    }
+
+    #[test]
     fn min_free_accounts_for_peak_and_reservations() {
         let mut v = inst(0, vec![req(1, 100, Some(1000.0))], 200);
         v.inbound_reserved_tokens = 50;
-        let rep = WorkerReport::compute(&v.view(), 30.0, &beta_schedule(2, 1.0), None);
+        let rep = WorkerReport::compute(&v.view(), 30.0, &beta_schedule(2, 1.0), None, 0.5, 0.9);
         // peak load = 160 at t=2, +50 reserved => free = 200-210 = -10
         assert!((rep.min_free_over_horizon() - (-10.0)).abs() < 1e-9);
     }

@@ -37,6 +37,10 @@ pub use policy::{
 };
 pub use rescheduler::{MigrationDecision, Rescheduler, ReschedulerStats};
 
+// the uncertainty-aware prediction signal policies consume (re-exported so
+// policy code and tests reach it without crossing into `crate::predictor`)
+pub use crate::predictor::Prediction;
+
 use crate::{InstanceId, RequestId};
 
 /// Scheduler-visible state of one active decode request.
@@ -45,17 +49,26 @@ pub struct RequestView {
     pub id: RequestId,
     /// Current token count N(r): prompt + generated so far (KV footprint).
     pub tokens: u64,
-    /// Predicted remaining generation length N̂(r), if prediction is on.
-    pub predicted_remaining: Option<f64>,
+    /// Predicted remaining generation length N̂(r) with its uncertainty,
+    /// if prediction is on.
+    pub predicted_remaining: Option<Prediction>,
     /// Set while the request is being migrated (excluded from candidates).
     pub migrating: bool,
 }
 
 impl RequestView {
-    /// Remaining estimate used by the policies; without prediction the
-    /// scheduler must assume "unknown", modeled as a configurable default.
+    /// Mean remaining estimate (the balancing view); without prediction
+    /// the scheduler must assume "unknown", modeled as a configurable
+    /// default.
     pub fn remaining_or(&self, default: f64) -> f64 {
-        self.predicted_remaining.unwrap_or(default)
+        self.predicted_remaining.map_or(default, |p| p.mean)
+    }
+
+    /// Quantile-`q` remaining estimate — the conservative view the
+    /// OOM-avoidance and migration-target checks consume (p90 by
+    /// default; see `[predictor] conservative_q`).
+    pub fn remaining_q(&self, q: f64, default: f64) -> f64 {
+        self.predicted_remaining.map_or(default, |p| p.quantile(q))
     }
 }
 
@@ -129,7 +142,7 @@ pub(crate) mod testutil {
         RequestView {
             id,
             tokens,
-            predicted_remaining: rem,
+            predicted_remaining: rem.map(Prediction::exact),
             migrating: false,
         }
     }

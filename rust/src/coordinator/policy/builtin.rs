@@ -121,7 +121,7 @@ impl DispatchPolicy for PredictedLoadDispatch {
     }
 
     fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
-        let pred = incoming.predicted_remaining.unwrap_or(0.0);
+        let pred = incoming.predicted_remaining.map_or(0.0, |p| p.mean);
         // predicted_work is an O(1) aggregate on state-backed views — the
         // hand-off decision no longer walks the instance's batch
         argmin_with_fallback(view, incoming.tokens, |iv| {
@@ -168,7 +168,7 @@ mod tests {
         IncomingRequest {
             id: 0,
             tokens,
-            predicted_remaining: pred,
+            predicted_remaining: pred.map(crate::predictor::Prediction::exact),
         }
     }
 

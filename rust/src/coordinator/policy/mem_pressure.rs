@@ -25,6 +25,11 @@ use crate::costmodel::MigrationCostModel;
 /// * `memory_pressure.trigger_frac` — projected-peak fraction of capacity
 ///   that marks an instance as at risk (default 0.85). Targets must stay
 ///   below it after receiving a migration.
+///
+/// Every projection here is a memory-safety question, so remaining-length
+/// estimates are consumed at the configured *conservative* quantile
+/// (`Prediction::quantile(conservative_q)`, p90 by default): an uncertain
+/// length must be assumed long before this policy banks on headroom.
 #[derive(Clone, Debug)]
 pub struct MemoryPressureRescheduler {
     cfg: ReschedulerConfig,
@@ -33,6 +38,8 @@ pub struct MemoryPressureRescheduler {
     trigger_frac: f64,
     avg_iter_s: f64,
     default_remaining: f64,
+    balance_q: f64,
+    conservative_q: f64,
     betas: Vec<f64>,
     stats: ReschedulerStats,
 }
@@ -46,6 +53,8 @@ impl MemoryPressureRescheduler {
                 .clamp(0.05, 1.0),
             avg_iter_s: cfg.rescheduler.initial_avg_iter_s,
             default_remaining: cfg.rescheduler.default_remaining,
+            balance_q: cfg.balance_q,
+            conservative_q: cfg.conservative_q,
             use_prediction: cfg.use_prediction,
             migration: cfg.migration,
             cfg: cfg.rescheduler.clone(),
@@ -120,18 +129,20 @@ impl MemoryPressureRescheduler {
                 continue;
             }
             let rem = match (self.use_prediction, r.predicted_remaining) {
-                (true, Some(p)) => p,
+                (true, Some(p)) => p.mean,
                 (true, None) => continue, // not yet predicted
                 (false, _) => self.default_remaining,
             };
-            // migration must amortize (same bound as Alg. 1 line 20)
+            // migration must amortize (same bound as Alg. 1 line 20;
+            // judged on the mean — the balanced expectation)
             if rem <= self.migration.overhead_iterations(r.tokens, self.avg_iter_s) {
                 continue;
             }
-            let fl = FutureLoad::of_request(r, g, horizon, default_rem);
+            // peak math is all OOM-avoidance: conservative quantile
+            let fl = FutureLoad::of_request(r, g, horizon, default_rem, self.conservative_q);
             // exact peak relief: source peak with vs. without this request
             let peak_without = src_rep
-                .load
+                .load_hi
                 .iter()
                 .zip(&fl.trace)
                 .map(|(l, c)| l - c)
@@ -233,10 +244,13 @@ impl MemoryPressureRescheduler {
         } else {
             Some(self.default_remaining)
         };
-        let fl = FutureLoad::of_request(r, g, self.cfg.horizon, default_rem);
+        let fl = FutureLoad::of_request(r, g, self.cfg.horizon, default_rem, self.balance_q);
+        let fh = FutureLoad::of_request(r, g, self.cfg.horizon, default_rem, self.conservative_q);
         for t in 0..fl.trace.len() {
             reports[s_idx].load[t] -= fl.trace[t];
             reports[d_idx].load[t] += fl.trace[t];
+            reports[s_idx].load_hi[t] -= fh.trace[t];
+            reports[d_idx].load_hi[t] += fh.trace[t];
         }
         reports[s_idx].current_tokens = reports[s_idx].current_tokens.saturating_sub(d.kv_tokens);
         reports[d_idx].current_tokens += d.kv_tokens;
@@ -271,7 +285,16 @@ impl ReschedulePolicy for MemoryPressureRescheduler {
         };
         let mut reports: Vec<WorkerReport> = insts
             .iter()
-            .map(|v| WorkerReport::compute(v, g, &self.betas, default_rem))
+            .map(|v| {
+                WorkerReport::compute(
+                    v,
+                    g,
+                    &self.betas,
+                    default_rem,
+                    self.balance_q,
+                    self.conservative_q,
+                )
+            })
             .collect();
 
         let mut decisions = Vec::new();

@@ -36,6 +36,7 @@ use super::cluster_state::ClusterView;
 use super::rescheduler::{MigrationDecision, ReschedulerStats};
 use crate::config::{ExperimentConfig, ReschedulerConfig};
 use crate::costmodel::MigrationCostModel;
+use crate::predictor::Prediction;
 use crate::{InstanceId, RequestId};
 
 /// A request at prefill→decode hand-off time, as a dispatch policy sees it.
@@ -47,7 +48,7 @@ pub struct IncomingRequest {
     pub tokens: u64,
     /// Predicted output length from the prefill-time prediction
     /// (None when prediction is off or not yet available).
-    pub predicted_remaining: Option<f64>,
+    pub predicted_remaining: Option<Prediction>,
 }
 
 /// Prefill→decode placement strategy. Implementations may keep internal
@@ -107,6 +108,12 @@ pub struct PolicyConfig {
     pub migration: MigrationCostModel,
     /// Whether length predictions are available (Alg. 1 `usePrediction`).
     pub use_prediction: bool,
+    /// Estimate quantile for balancing objectives (`[predictor]
+    /// balance_q`, default 0.5 = the mean).
+    pub balance_q: f64,
+    /// Estimate quantile for OOM-avoidance / migration-target checks
+    /// (`[predictor] conservative_q`, default 0.9).
+    pub conservative_q: f64,
     /// Policy-specific numeric knobs, keyed `<policy>.<knob>`.
     pub params: BTreeMap<String, f64>,
 }
@@ -117,6 +124,8 @@ impl Default for PolicyConfig {
             rescheduler: ReschedulerConfig::default(),
             migration: MigrationCostModel::new_25gbps(128 * 1024),
             use_prediction: true,
+            balance_q: 0.5,
+            conservative_q: 0.9,
             params: BTreeMap::new(),
         }
     }
@@ -128,7 +137,9 @@ impl PolicyConfig {
         PolicyConfig {
             rescheduler: exp.rescheduler.clone(),
             migration,
-            use_prediction: exp.predictor.uses_prediction(),
+            use_prediction: exp.predictor_uses_prediction(),
+            balance_q: exp.predictor_balance_q,
+            conservative_q: exp.predictor_conservative_q,
             params: exp.policy_params.clone(),
         }
     }
@@ -152,10 +163,18 @@ mod tests {
     }
 
     #[test]
-    fn from_experiment_inherits_prediction_flag() {
+    fn from_experiment_inherits_prediction_flag_and_quantiles() {
         let mut exp = ExperimentConfig::default();
-        exp.predictor = crate::config::PredictorKind::None;
+        exp.predictor = "none".to_string();
         let cfg = PolicyConfig::from_experiment(&exp, MigrationCostModel::new_25gbps(1));
         assert!(!cfg.use_prediction);
+        let mut exp = ExperimentConfig::default();
+        exp.predictor = "llm_native".to_string();
+        exp.predictor_conservative_q = 0.95;
+        exp.predictor_balance_q = 0.4;
+        let cfg = PolicyConfig::from_experiment(&exp, MigrationCostModel::new_25gbps(1));
+        assert!(cfg.use_prediction);
+        assert_eq!(cfg.conservative_q, 0.95);
+        assert_eq!(cfg.balance_q, 0.4);
     }
 }

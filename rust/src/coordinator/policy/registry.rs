@@ -60,13 +60,7 @@ impl PolicyRegistry {
         r.register_dispatch("slo_aware", |cfg| {
             Ok(Box::new(SloAwareDispatch::from_config(cfg)))
         });
-        r.register_reschedule("star", |cfg| {
-            Ok(Box::new(Rescheduler::new(
-                cfg.rescheduler.clone(),
-                cfg.migration,
-                cfg.use_prediction,
-            )))
-        });
+        r.register_reschedule("star", |cfg| Ok(Box::new(Rescheduler::from_config(cfg))));
         r.register_reschedule("memory_pressure", |cfg| {
             Ok(Box::new(MemoryPressureRescheduler::from_config(cfg)))
         });

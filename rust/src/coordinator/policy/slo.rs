@@ -25,11 +25,16 @@ use crate::InstanceId;
 ///   (default 1.0)
 /// * `slo_aware.horizon_tokens` — lookahead in tokens; remaining work past
 ///   this does not count against near-term deadlines (default 4096)
+///
+/// Remaining-work estimates are consumed at the configured *balancing*
+/// quantile (`[predictor] balance_q`, mean by default) — placement is a
+/// balancing decision, not a memory-safety one.
 #[derive(Clone, Debug)]
 pub struct SloAwareDispatch {
     mem_weight: f64,
     load_weight: f64,
     horizon_tokens: f64,
+    q: f64,
 }
 
 impl SloAwareDispatch {
@@ -38,6 +43,7 @@ impl SloAwareDispatch {
             mem_weight: cfg.param_or("slo_aware.mem_weight", 1.0),
             load_weight: cfg.param_or("slo_aware.load_weight", 1.0),
             horizon_tokens: cfg.param_or("slo_aware.horizon_tokens", 4096.0).max(1.0),
+            q: cfg.balance_q,
         }
     }
 
@@ -51,13 +57,13 @@ impl SloAwareDispatch {
         let committed: f64 = iv
             .requests()
             .iter()
-            .map(|r| r.tokens as f64 + r.remaining_or(0.0).min(self.horizon_tokens))
+            .map(|r| r.tokens as f64 + r.remaining_q(self.q, 0.0).min(self.horizon_tokens))
             .sum::<f64>()
             + iv.inbound_reserved_tokens() as f64
             + incoming.tokens as f64
             + incoming
                 .predicted_remaining
-                .unwrap_or(0.0)
+                .map_or(0.0, |p| p.quantile(self.q))
                 .min(self.horizon_tokens);
         self.mem_weight * mem + self.load_weight * (committed / cap)
     }
@@ -87,7 +93,7 @@ mod tests {
         IncomingRequest {
             id: 0,
             tokens,
-            predicted_remaining: pred,
+            predicted_remaining: pred.map(crate::predictor::Prediction::exact),
         }
     }
 

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use super::cluster_state::{admission_watermark, ClusterView, InstanceRef};
 use super::future_load::{beta_schedule, FutureLoad, WorkerReport};
-use super::policy::ReschedulePolicy;
+use super::policy::{PolicyConfig, ReschedulePolicy};
 use crate::config::ReschedulerConfig;
 use crate::costmodel::MigrationCostModel;
 use crate::{InstanceId, RequestId};
@@ -69,6 +69,12 @@ pub struct Rescheduler {
     /// [`ReschedulerConfig::default_remaining`]; the caller refines it to
     /// the workload's running mean output length).
     pub default_remaining: f64,
+    /// Estimate quantile the balancing objective reads (0.5 = mean; see
+    /// `[predictor] balance_q`).
+    pub balance_q: f64,
+    /// Estimate quantile the memory-safety checks read (p90 by default;
+    /// see `[predictor] conservative_q`).
+    pub conservative_q: f64,
     pub stats: ReschedulerStats,
 }
 
@@ -86,8 +92,19 @@ impl Rescheduler {
             avg_iter_s,
             use_prediction,
             default_remaining,
+            balance_q: 0.5,
+            conservative_q: 0.9,
             stats: ReschedulerStats::default(),
         }
+    }
+
+    /// Build from a [`PolicyConfig`] — the registry path, which also
+    /// wires the configured estimate quantiles in.
+    pub fn from_config(cfg: &PolicyConfig) -> Self {
+        let mut rs = Rescheduler::new(cfg.rescheduler.clone(), cfg.migration, cfg.use_prediction);
+        rs.balance_q = cfg.balance_q;
+        rs.conservative_q = cfg.conservative_q;
+        rs
     }
 
     /// Run one scheduling interval over a cluster view; returns up to
@@ -119,7 +136,16 @@ impl Rescheduler {
         };
         let mut reports: Vec<WorkerReport> = insts
             .iter()
-            .map(|v| WorkerReport::compute(v, g, &self.betas, default_rem))
+            .map(|v| {
+                WorkerReport::compute(
+                    v,
+                    g,
+                    &self.betas,
+                    default_rem,
+                    self.balance_q,
+                    self.conservative_q,
+                )
+            })
             .collect();
 
         // requests already chosen this interval: the views cannot be
@@ -179,8 +205,11 @@ impl Rescheduler {
         // prediction sees the growth *before* it materializes.
         let mem_hot = |i: usize| -> bool {
             let rep = &reports[i];
+            // OOM-avoidance reads the conservative aggregate trace: an
+            // instance whose p90 projection crosses the line is hot even
+            // when the mean projection is still comfortable
             let level = if self.use_prediction {
-                rep.load.iter().cloned().fold(0.0, f64::max)
+                rep.load_hi.iter().cloned().fold(0.0, f64::max)
             } else {
                 rep.load[0]
             };
@@ -241,13 +270,14 @@ impl Rescheduler {
                     }
                     let rem = if self.use_prediction {
                         match r.predicted_remaining {
-                            Some(p) => p,
+                            Some(p) => p.mean,
                             None => continue, // not yet predicted
                         }
                     } else {
                         self.default_remaining
                     };
                     // line 20: remaining work must amortize the transfer
+                    // (judged on the mean — the balanced expectation)
                     if rem <= min_remaining(r.tokens) {
                         continue;
                     }
@@ -259,11 +289,18 @@ impl Rescheduler {
                         continue;
                     }
                     // line 21: target memory safety over the horizon — the
-                    // request arrives with N(r) KV and grows by up to g·H
-                    // (capped by its predicted remaining)
-                    let growth = rem.min(g * horizon as f64);
+                    // request arrives with N(r) KV and grows by up to g·H,
+                    // capped by the CONSERVATIVE quantile of its predicted
+                    // remaining (an uncertain length must not be assumed
+                    // short when banking on the destination's headroom)
+                    let rem_hi = if self.use_prediction {
+                        r.remaining_q(self.conservative_q, rem)
+                    } else {
+                        rem
+                    };
+                    let growth = rem_hi.min(g * horizon as f64);
                     let peak_dst = dst_rep
-                        .load
+                        .load_hi
                         .iter()
                         .cloned()
                         .fold(0.0, f64::max)
@@ -277,6 +314,7 @@ impl Rescheduler {
                     self.stats.candidates_evaluated += 1;
 
                     // O(H) incremental objective with r moved s -> t_i
+                    // (balancing view: the mean quantile)
                     let fl = FutureLoad::of_request(
                         r,
                         g,
@@ -286,6 +324,7 @@ impl Rescheduler {
                         } else {
                             Some(self.default_remaining)
                         },
+                        self.balance_q,
                     );
                     let eval_horizon = if self.use_prediction { horizon } else { 0 };
                     let mut obj = 0.0;
@@ -352,19 +391,18 @@ impl Rescheduler {
             .iter()
             .find(|r| r.id == d.request)
             .expect("decision request present");
-        let fl = FutureLoad::of_request(
-            r,
-            g,
-            self.cfg.horizon,
-            if self.use_prediction {
-                None
-            } else {
-                Some(self.default_remaining)
-            },
-        );
+        let default_rem = if self.use_prediction {
+            None
+        } else {
+            Some(self.default_remaining)
+        };
+        let fl = FutureLoad::of_request(r, g, self.cfg.horizon, default_rem, self.balance_q);
+        let fh = FutureLoad::of_request(r, g, self.cfg.horizon, default_rem, self.conservative_q);
         for t in 0..fl.trace.len() {
             reports[s_idx].load[t] -= fl.trace[t];
             reports[d_idx].load[t] += fl.trace[t];
+            reports[s_idx].load_hi[t] -= fh.trace[t];
+            reports[d_idx].load_hi[t] += fh.trace[t];
         }
         reports[s_idx].current_tokens = reports[s_idx].current_tokens.saturating_sub(d.kv_tokens);
         reports[d_idx].current_tokens += d.kv_tokens;

@@ -20,6 +20,7 @@ use star::cli::{Args, Spec};
 use star::config::{Config, ExperimentConfig, PredictorKind};
 use star::coordinator::PolicyRegistry;
 use star::metrics::Slo;
+use star::predictor::PredictorRegistry;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
 use star::sim::{SimParams, Simulator};
@@ -107,14 +108,14 @@ fn spec() -> Spec {
     }
 }
 
-/// Map a `--policy` name onto (rescheduler enabled, predictor kind).
-fn policy_of(args: &Args) -> Result<(bool, Option<PredictorKind>), star::Error> {
+/// Map a `--policy` name onto (rescheduler enabled, predictor name).
+fn policy_of(args: &Args) -> Result<(bool, Option<&'static str>), star::Error> {
     match args.opt("policy") {
         None => Ok((true, None)),
-        Some("vllm") => Ok((false, Some(PredictorKind::None))),
-        Some("star-nopred") => Ok((true, Some(PredictorKind::None))),
+        Some("vllm") => Ok((false, Some("none"))),
+        Some("star-nopred") => Ok((true, Some("none"))),
         Some("star") => Ok((true, None)),
-        Some("oracle") => Ok((true, Some(PredictorKind::Oracle))),
+        Some("oracle") => Ok((true, Some("oracle"))),
         Some(other) => Err(star::Error::Cli(format!(
             "unknown policy `{other}` (vllm|star|star-nopred|oracle)"
         ))),
@@ -146,10 +147,19 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     let (resched, pred) = policy_of(args)?;
     exp.rescheduler.enabled = resched;
     if let Some(p) = pred {
-        exp.predictor = p;
+        exp.predictor = p.to_string();
     }
     if let Some(p) = args.opt("predictor") {
-        exp.predictor = PredictorKind::parse(p)?;
+        // any registered predictor name; validate() rejects unknown ones
+        // with the registry's candidate list
+        exp.predictor = p.to_string();
+    }
+    // canonicalize alias spellings of the builtins ("4bin" → "binned4")
+    // so every surface — --verbose echo, bench JSON, scorecard output —
+    // shows the registry key; unknown names pass through for validate()
+    // to reject with the candidate list
+    if let Ok(kind) = PredictorKind::parse(&exp.predictor) {
+        exp.predictor = kind.name();
     }
     if let Some(d) = args.opt("dispatch") {
         exp.dispatch_policy = d.to_string();
@@ -270,7 +280,7 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
             exp.dispatch_policy,
             exp.reschedule_policy,
             exp.rescheduler.enabled,
-            exp.predictor.name()
+            exp.predictor
         );
     }
     let params = SimParams {
@@ -305,6 +315,12 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
         report.scheduler_stats.candidates_evaluated,
         report.scheduler_stats.max_decision_us
     );
+    if !report.scorecard.is_empty() {
+        println!(
+            "predictor calibration (signed error / MAE per progress bucket):\n{}",
+            report.scorecard.summary()
+        );
+    }
     if let Some(path) = args.opt("trace-out") {
         report.recorder.write_tsv(std::path::Path::new(path))?;
         println!("trace written to {path}");
@@ -312,15 +328,17 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
     Ok(())
 }
 
-/// `star list` — the registered policy and scenario names, from the same
-/// registries the CLI/config resolve against (so the printed lists are
-/// the valid values for `--dispatch`/`--reschedule`/`--scaling`/
-/// `--scenario` by construction).
+/// `star list` — the registered policy, predictor, and scenario names,
+/// from the same registries the CLI/config resolve against (so the
+/// printed lists are the valid values for `--dispatch`/`--reschedule`/
+/// `--scaling`/`--predictor`/`--scenario` by construction).
 fn run_list() -> Result<(), star::Error> {
     let reg = PolicyRegistry::with_builtins();
     println!("dispatch policies:   {}", reg.dispatch_names().join(" "));
     println!("reschedule policies: {}", reg.reschedule_names().join(" "));
     println!("scaling policies:    {}", reg.scaling_names().join(" "));
+    let predictors = PredictorRegistry::with_builtins();
+    println!("predictors:          {}", predictors.names().join(" "));
     let scenarios = ScenarioRegistry::with_builtins();
     println!("scenarios:           {}", scenarios.names().join(" "));
     Ok(())

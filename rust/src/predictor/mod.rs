@@ -1,12 +1,38 @@
-//! Runtime remaining-length predictors (paper §4 + §6 ablations).
+//! The prediction subsystem (paper §4 + §6 ablations), first-class and
+//! pluggable — the estimates that drive every rescheduling decision.
 //!
-//! The live serving path uses [`HloPredictor`] (the trained LLM-native MLP
-//! executed through PJRT — see `crate::runtime`); the simulator uses
-//! [`OraclePredictor`] / [`BinnedOracle`] / [`NoisyOracle`] exactly as the
-//! paper's large-scale simulator does ("we leverage the actual remaining
-//! generation lengths to simulate an oracle predictor", §6.3).
+//! Four layers, mirroring the policy architecture (DESIGN.md §12):
+//!
+//! * **registry** ([`PredictorRegistry`]) — string-keyed construction of
+//!   [`LengthPredictor`]s (`none|oracle|binned2|binned4|binned6|
+//!   llm_native|debiased`), selected via config `[predictor]` / CLI
+//!   `--predictor`, printed by `star list`;
+//! * **signal** ([`Prediction`]) — uncertainty-aware estimates
+//!   `{mean, sigma, quantile(q), issued_at_iter}` carried through
+//!   `ClusterState`/`ClusterView`: OOM-avoidance checks consume a
+//!   conservative quantile, balancing objectives the mean;
+//! * **calibration** ([`Scorecard`]) — per-progress-bucket signed error +
+//!   MAE accumulated at request completion, reported in
+//!   `SimReport`/`ServeOutcome` and fed back to the [`DebiasedPredictor`];
+//! * **reprediction** ([`Repredictor`]) — the ONE batched due-slot scan +
+//!   cost accounting shared by `sim::engine` and `serve::instance`.
+//!
+//! The live serving path uses the trained LLM-native MLP executed through
+//! PJRT (see `crate::runtime`); the simulator uses [`OraclePredictor`] /
+//! [`BinnedOracle`] / [`NoisyOracle`] exactly as the paper's large-scale
+//! simulator does ("we leverage the actual remaining generation lengths
+//! to simulate an oracle predictor", §6.3).
 
-use crate::config::PredictorKind;
+mod registry;
+mod repredict;
+mod scorecard;
+mod signal;
+
+pub use registry::{PredictorContext, PredictorRegistry};
+pub use repredict::Repredictor;
+pub use scorecard::{BucketStats, PredSample, Scorecard, PROGRESS_BUCKETS};
+pub use signal::{normal_quantile, Prediction};
+
 use crate::prng::Pcg64;
 use crate::RequestId;
 
@@ -23,8 +49,12 @@ pub struct PredictInput {
 /// A remaining-generation-length predictor (token units).
 pub trait LengthPredictor: Send {
     /// Estimate remaining output length; None = no estimate available.
-    fn predict(&mut self, input: &PredictInput) -> Option<f64>;
+    fn predict(&mut self, input: &PredictInput) -> Option<Prediction>;
+
+    /// Registry key this predictor answers to (diagnostics, bench JSON,
+    /// CLI output — plain ASCII, no parameter decorations).
     fn name(&self) -> String;
+
     /// Latency cost of one prediction batch of size `batch` in seconds
     /// (added to the decode iteration it runs in — paper §5.3).
     fn cost_s(&self, batch: usize) -> f64 {
@@ -32,13 +62,19 @@ pub trait LengthPredictor: Send {
         // scaled to our pico model (~30x smaller d): dominated by launch.
         40e-6 + 4e-6 * batch as f64
     }
+
+    /// Completion feedback: the request's realized output length plus the
+    /// prediction log the driver kept for it. Online-calibrating
+    /// predictors (the `debiased` builtin) learn from this; everything
+    /// else ignores it.
+    fn observe_completion(&mut self, _output_len: u32, _samples: &[PredSample]) {}
 }
 
 /// "STAR w/o prediction": no estimates.
 pub struct NoPredictor;
 
 impl LengthPredictor for NoPredictor {
-    fn predict(&mut self, _input: &PredictInput) -> Option<f64> {
+    fn predict(&mut self, _input: &PredictInput) -> Option<Prediction> {
         None
     }
     fn name(&self) -> String {
@@ -49,12 +85,14 @@ impl LengthPredictor for NoPredictor {
     }
 }
 
-/// Exact remaining lengths ("STAR Oracle").
+/// Exact remaining lengths ("STAR Oracle"): zero-spread predictions.
 pub struct OraclePredictor;
 
 impl LengthPredictor for OraclePredictor {
-    fn predict(&mut self, input: &PredictInput) -> Option<f64> {
-        input.true_remaining.map(|r| r as f64)
+    fn predict(&mut self, input: &PredictInput) -> Option<Prediction> {
+        input
+            .true_remaining
+            .map(|r| Prediction::new(r as f64, 0.0, input.generated as u64))
     }
     fn name(&self) -> String {
         "oracle".into()
@@ -90,30 +128,42 @@ impl BinnedOracle {
         BinnedOracle { bounds, cap }
     }
 
-    /// Midpoint of the bin containing `remaining`.
-    fn quantize(&self, remaining: f64) -> f64 {
+    /// The bin containing `remaining`, as `(midpoint, width)` in tokens.
+    /// Simple ascending scan over half-open bins `[lo, hi)` with the last
+    /// bin closed at the cap: a value exactly on an interior boundary
+    /// belongs to the bin it OPENS, `remaining >= cap` lands in the last
+    /// bin (never a bare `cap` passthrough).
+    fn quantize(&self, remaining: f64) -> (f64, f64) {
         let frac = (remaining / self.cap).clamp(0.0, 1.0);
         let mut lo = 0.0;
         for &hi in &self.bounds {
-            if frac < hi || (hi - 1.0).abs() < f64::EPSILON {
-                if frac <= hi {
-                    return (lo + hi) / 2.0 * self.cap;
-                }
+            if frac < hi {
+                return ((lo + hi) / 2.0 * self.cap, (hi - lo) * self.cap);
             }
             lo = hi;
         }
-        self.cap
+        // frac sits on the top bound (clamp caps it at 1.0): closed last bin
+        let hi = self.bounds.last().copied().unwrap_or(1.0);
+        let lo = if self.bounds.len() >= 2 {
+            self.bounds[self.bounds.len() - 2]
+        } else {
+            0.0
+        };
+        ((lo + hi) / 2.0 * self.cap, (hi - lo) * self.cap)
     }
 }
 
 impl LengthPredictor for BinnedOracle {
-    fn predict(&mut self, input: &PredictInput) -> Option<f64> {
-        input
-            .true_remaining
-            .map(|r| self.quantize(r as f64))
+    fn predict(&mut self, input: &PredictInput) -> Option<Prediction> {
+        input.true_remaining.map(|r| {
+            let (mid, width) = self.quantize(r as f64);
+            // a bin collapses everything inside it to the midpoint: model
+            // the spread as uniform over the bin (σ = width / √12)
+            Prediction::new(mid, width / 12f64.sqrt(), input.generated as u64)
+        })
     }
     fn name(&self) -> String {
-        format!("{}bin", self.bounds.len())
+        format!("binned{}", self.bounds.len())
     }
     fn cost_s(&self, _batch: usize) -> f64 {
         0.0
@@ -146,30 +196,91 @@ impl NoisyOracle {
 }
 
 impl LengthPredictor for NoisyOracle {
-    fn predict(&mut self, input: &PredictInput) -> Option<f64> {
+    fn predict(&mut self, input: &PredictInput) -> Option<Prediction> {
         let rem = input.true_remaining? as f64;
         let progress = (input.generated as f64 / self.progress_scale).min(1.0);
-        let sigma = self.rel_err * (1.0 - (1.0 - self.late_factor) * progress);
-        let noise = self.rng.normal(0.0, sigma);
-        Some((rem * noise.exp()).max(0.0))
+        let sigma_rel = self.rel_err * (1.0 - (1.0 - self.late_factor) * progress);
+        let noise = self.rng.normal(0.0, sigma_rel);
+        let mean = (rem * noise.exp()).max(0.0);
+        // first-order spread of the log-normal estimate: σ ≈ mean · σ_rel
+        Some(Prediction::new(
+            mean,
+            mean * sigma_rel,
+            input.generated as u64,
+        ))
     }
     fn name(&self) -> String {
-        format!("llm_native(sim,σ={})", self.rel_err)
+        "llm_native".into()
     }
 }
 
-/// Build the simulator-side predictor for a config.
-pub fn build_sim_predictor(
-    kind: PredictorKind,
-    cap: f64,
-    rel_err: f64,
-    seed: u64,
-) -> Box<dyn LengthPredictor> {
-    match kind {
-        PredictorKind::None => Box::new(NoPredictor),
-        PredictorKind::Oracle => Box::new(OraclePredictor),
-        PredictorKind::Binned(n) => Box::new(BinnedOracle::paper_bins(n, cap)),
-        PredictorKind::LlmNative => Box::new(NoisyOracle::new(rel_err, seed)),
+/// LLM-native (simulated) + online bias correction: subtracts the
+/// per-progress-bucket mean signed error learned from completed requests
+/// ([`LengthPredictor::observe_completion`] feedback, the same samples the
+/// run's [`Scorecard`] accumulates). The log-normal noise model genuinely
+/// over-predicts on average (E[e^N(0,σ)] = e^{σ²/2} > 1), so there is a
+/// real bias to remove.
+pub struct DebiasedPredictor {
+    inner: NoisyOracle,
+    /// Learned mean residual error per progress bucket (stochastic
+    /// approximation: bias += α · residual).
+    bias: [f64; PROGRESS_BUCKETS],
+    n: [u64; PROGRESS_BUCKETS],
+}
+
+impl DebiasedPredictor {
+    pub fn new(rel_err: f64, seed: u64) -> DebiasedPredictor {
+        DebiasedPredictor {
+            inner: NoisyOracle::new(rel_err, seed),
+            bias: [0.0; PROGRESS_BUCKETS],
+            n: [0; PROGRESS_BUCKETS],
+        }
+    }
+
+    /// Learned per-bucket corrections (diagnostics / tests).
+    pub fn bias_estimates(&self) -> [f64; PROGRESS_BUCKETS] {
+        self.bias
+    }
+}
+
+impl LengthPredictor for DebiasedPredictor {
+    fn predict(&mut self, input: &PredictInput) -> Option<Prediction> {
+        let raw = self.inner.predict(input)?;
+        // progress at prediction time is only *estimable* (total length is
+        // unknown until completion): use generated / (generated + predicted)
+        let est_total = input.generated as f64 + raw.mean;
+        let progress = if est_total <= 0.0 {
+            0.0
+        } else {
+            input.generated as f64 / est_total
+        };
+        let b = Scorecard::bucket_of(progress);
+        Some(Prediction::new(
+            (raw.mean - self.bias[b]).max(0.0),
+            raw.sigma,
+            raw.issued_at_iter,
+        ))
+    }
+
+    fn name(&self) -> String {
+        "debiased".into()
+    }
+
+    fn observe_completion(&mut self, output_len: u32, samples: &[PredSample]) {
+        if output_len == 0 {
+            return;
+        }
+        for s in samples {
+            let actual = output_len.saturating_sub(s.generated) as f64;
+            let progress = s.generated as f64 / output_len as f64;
+            let b = Scorecard::bucket_of(progress);
+            self.n[b] += 1;
+            // the logged samples are post-correction, so the residual
+            // error integrates into the bias estimate (Robbins–Monro with
+            // a floored step so late drift is still tracked)
+            let alpha = (1.0 / self.n[b] as f64).max(0.02);
+            self.bias[b] += alpha * (s.predicted - actual);
+        }
     }
 }
 
@@ -188,13 +299,17 @@ mod tests {
     #[test]
     fn oracle_is_exact() {
         let mut p = OraclePredictor;
-        assert_eq!(p.predict(&input(10, 500)), Some(500.0));
+        let pred = p.predict(&input(10, 500)).unwrap();
+        assert_eq!(pred.mean, 500.0);
+        assert_eq!(pred.sigma, 0.0);
+        assert_eq!(pred.issued_at_iter, 10);
+        assert_eq!(pred.quantile(0.9), 500.0, "zero spread: every quantile is the mean");
     }
 
     #[test]
     fn none_returns_none() {
         let mut p = NoPredictor;
-        assert_eq!(p.predict(&input(10, 500)), None);
+        assert!(p.predict(&input(10, 500)).is_none());
         assert_eq!(p.cost_s(10), 0.0);
     }
 
@@ -203,9 +318,9 @@ mod tests {
         let b = BinnedOracle::paper_bins(6, 32_768.0);
         // 1K remaining -> bin [0, 2K) -> midpoint 1K
         let mut p = BinnedOracle::paper_bins(6, 32_768.0);
-        assert!((p.predict(&input(0, 1_000)).unwrap() - 1_024.0).abs() < 1.0);
+        assert!((p.predict(&input(0, 1_000)).unwrap().mean - 1_024.0).abs() < 1.0);
         // 30K remaining -> bin [16K, 32K) -> midpoint 24K
-        assert!((p.predict(&input(0, 30_000)).unwrap() - 24_576.0).abs() < 1.0);
+        assert!((p.predict(&input(0, 30_000)).unwrap().mean - 24_576.0).abs() < 1.0);
         assert_eq!(b.bounds.len(), 6);
     }
 
@@ -215,18 +330,61 @@ mod tests {
         // everything below 8K predicts the same midpoint (4K)
         let a = p.predict(&input(0, 100)).unwrap();
         let b = p.predict(&input(0, 7_900)).unwrap();
-        assert_eq!(a, b);
-        assert!((a - 4_096.0).abs() < 1.0);
+        assert_eq!(a.mean, b.mean);
+        assert!((a.mean - 4_096.0).abs() < 1.0);
+        // the bin's spread is its width / sqrt(12)
+        assert!((a.sigma - 8_192.0 / 12f64.sqrt()).abs() < 1.0);
+    }
+
+    #[test]
+    fn binned_exact_boundary_lands_in_the_upper_bin() {
+        // the satellite regression: a value exactly ON an interior bound
+        // belongs to the bin it opens ([0,8K), [8K,32K] — 8K is upper-bin),
+        // via a plain ascending scan with no float special-cases
+        let mut p = BinnedOracle::paper_bins(2, 32_768.0);
+        let at_bound = p.predict(&input(0, 8_192)).unwrap();
+        assert!(
+            (at_bound.mean - 20_480.0).abs() < 1.0,
+            "8K sits in [8K, 32K], midpoint 20K — got {}",
+            at_bound.mean
+        );
+        let below = p.predict(&input(0, 8_191)).unwrap();
+        assert!((below.mean - 4_096.0).abs() < 1.0);
+        // 6-bin interior bound: 8K opens [8K, 16K), midpoint 12K
+        let mut p6 = BinnedOracle::paper_bins(6, 32_768.0);
+        let at6 = p6.predict(&input(0, 8_192)).unwrap();
+        assert!((at6.mean - 12_288.0).abs() < 1.0, "got {}", at6.mean);
+    }
+
+    #[test]
+    fn binned_over_cap_lands_in_the_last_bin() {
+        // remaining > cap must quantize into the closed last bin (its
+        // midpoint), never fall through to a bare `cap` passthrough
+        let mut p = BinnedOracle::paper_bins(2, 32_768.0);
+        for rem in [32_768u32, 40_000, 1_000_000] {
+            let got = p.predict(&input(0, rem)).unwrap();
+            assert!(
+                (got.mean - 20_480.0).abs() < 1.0,
+                "remaining {rem} must hit the [8K, 32K] midpoint, got {}",
+                got.mean
+            );
+        }
+        // single-bin degenerate shape still answers sanely
+        let mut one = BinnedOracle {
+            bounds: vec![1.0],
+            cap: 100.0,
+        };
+        assert!((one.predict(&input(0, 500)).unwrap().mean - 50.0).abs() < 1e-9);
     }
 
     #[test]
     fn noisy_oracle_centered_and_improving() {
         let mut p = NoisyOracle::new(0.4, 7);
         let early: Vec<f64> = (0..3000)
-            .map(|_| (p.predict(&input(0, 1_000)).unwrap() - 1_000.0).abs())
+            .map(|_| (p.predict(&input(0, 1_000)).unwrap().mean - 1_000.0).abs())
             .collect();
         let late: Vec<f64> = (0..3000)
-            .map(|_| (p.predict(&input(2_000, 1_000)).unwrap() - 1_000.0).abs())
+            .map(|_| (p.predict(&input(2_000, 1_000)).unwrap().mean - 1_000.0).abs())
             .collect();
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
         assert!(mean(&late) < mean(&early) * 0.7, "late should be tighter");
@@ -234,14 +392,61 @@ mod tests {
     }
 
     #[test]
-    fn build_matches_kind() {
-        assert_eq!(
-            build_sim_predictor(PredictorKind::Oracle, 512.0, 0.2, 0).name(),
-            "oracle"
+    fn noisy_oracle_reports_its_spread() {
+        let mut p = NoisyOracle::new(0.4, 3);
+        let pred = p.predict(&input(0, 1_000)).unwrap();
+        assert!(pred.sigma > 0.0, "llm_native predictions carry uncertainty");
+        assert!((pred.sigma - pred.mean * 0.4).abs() < 1e-9);
+        assert!(pred.quantile(0.9) > pred.mean, "p90 sits above the mean");
+        assert_eq!(p.name(), "llm_native", "no σ decoration in the name");
+    }
+
+    #[test]
+    fn debiased_learns_away_the_lognormal_bias() {
+        // the log-normal noise over-predicts by e^{σ²/2}; after feedback
+        // from many completions the corrected estimates must be closer to
+        // centered than the raw ones
+        let rel = 0.5;
+        let mut raw = NoisyOracle::new(rel, 11);
+        let mut deb = DebiasedPredictor::new(rel, 11);
+        let mean_err = |errs: &[f64]| errs.iter().sum::<f64>() / errs.len() as f64;
+        let mut raw_errs = Vec::new();
+        let mut deb_errs = Vec::new();
+        for round in 0..3000 {
+            let rem = 1_000u32;
+            let r = raw.predict(&input(0, rem)).unwrap().mean - rem as f64;
+            let d = deb.predict(&input(0, rem)).unwrap();
+            // feed the completion back (output = rem since generated = 0)
+            deb.observe_completion(
+                rem,
+                &[PredSample { generated: 0, predicted: d.mean }],
+            );
+            if round >= 1000 {
+                // judge after warm-up
+                raw_errs.push(r);
+                deb_errs.push(d.mean - rem as f64);
+            }
+        }
+        let rb = mean_err(&raw_errs);
+        let db = mean_err(&deb_errs);
+        assert!(rb > 30.0, "raw log-normal noise must over-predict: {rb}");
+        assert!(
+            db.abs() < rb.abs() * 0.6,
+            "debiasing must cut the bias: raw {rb:.1} vs debiased {db:.1}"
         );
-        assert_eq!(
-            build_sim_predictor(PredictorKind::Binned(4), 512.0, 0.2, 0).name(),
-            "4bin"
-        );
+        assert!(deb.bias_estimates()[0] > 0.0, "learned a positive correction");
+    }
+
+    #[test]
+    fn registry_build_matches_names() {
+        let ctx = PredictorContext {
+            cap: 512.0,
+            rel_err: 0.2,
+            seed: 0,
+        };
+        let reg = PredictorRegistry::with_builtins();
+        assert_eq!(reg.build("oracle", &ctx).unwrap().name(), "oracle");
+        assert_eq!(reg.build("4bin", &ctx).unwrap().name(), "binned4");
+        assert_eq!(reg.build("debiased", &ctx).unwrap().name(), "debiased");
     }
 }

@@ -1,0 +1,245 @@
+//! String-keyed predictor construction, mirroring
+//! `coordinator::PolicyRegistry`: the single place where predictor names
+//! meet predictor types. Config files (`[predictor] kind = "..."`), the
+//! CLI (`--predictor`), benches, and tests all go through
+//! [`PredictorRegistry::build`]; third-party code extends the set with
+//! [`PredictorRegistry::register`] without touching predictor internals
+//! (`Simulator::with_registries` accepts a custom registry).
+
+use std::collections::BTreeMap;
+
+use super::{BinnedOracle, DebiasedPredictor, LengthPredictor, NoPredictor, NoisyOracle, OraclePredictor};
+use crate::{Error, Result};
+
+/// Everything a predictor builder may draw on. One context type keeps the
+/// registry signature stable as predictors grow knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictorContext {
+    /// Output-length cap the trace implies (scales the paper's bin
+    /// boundaries, expressed as fractions of the cap).
+    pub cap: f64,
+    /// Relative error of the simulated LLM-native predictor
+    /// (`predictor.rel_err`).
+    pub rel_err: f64,
+    /// Noise seed (derived from the experiment seed by the drivers).
+    pub seed: u64,
+}
+
+impl Default for PredictorContext {
+    fn default() -> Self {
+        PredictorContext {
+            cap: 32_768.0,
+            rel_err: 0.25,
+            seed: 0,
+        }
+    }
+}
+
+type PredictorBuilder =
+    Box<dyn Fn(&PredictorContext) -> Result<Box<dyn LengthPredictor>> + Send + Sync>;
+
+/// Registry of named predictor builders. Names are normalized (lowercase,
+/// `-` → `_`) and may be aliased, so `--predictor 4bin`, `4-bin`, and
+/// `binned4` all resolve to the same builder.
+#[derive(Default)]
+pub struct PredictorRegistry {
+    builders: BTreeMap<String, PredictorBuilder>,
+    aliases: BTreeMap<String, String>,
+}
+
+/// Name normalization shared with lookups (lowercase, `-` → `_`).
+pub fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace('-', "_")
+}
+
+impl PredictorRegistry {
+    /// An empty registry (for fully custom predictor sets).
+    pub fn new() -> PredictorRegistry {
+        PredictorRegistry::default()
+    }
+
+    /// The built-in predictor set: `none`, `oracle`, `binned2` (`2bin`),
+    /// `binned4` (`4bin`), `binned6` (`6bin`), `llm_native` (`native`),
+    /// and `debiased` (llm-native + online per-bucket bias correction).
+    pub fn with_builtins() -> PredictorRegistry {
+        let mut r = PredictorRegistry::new();
+        r.register("none", |_| Ok(Box::new(NoPredictor)));
+        r.register("oracle", |_| Ok(Box::new(OraclePredictor)));
+        for n in [2u8, 4, 6] {
+            r.register(&format!("binned{n}"), move |ctx| {
+                Ok(Box::new(BinnedOracle::paper_bins(n, ctx.cap)))
+            });
+        }
+        r.register("llm_native", |ctx| {
+            Ok(Box::new(NoisyOracle::new(ctx.rel_err, ctx.seed)))
+        });
+        r.register("debiased", |ctx| {
+            Ok(Box::new(DebiasedPredictor::new(ctx.rel_err, ctx.seed)))
+        });
+        for (alias, canon) in [
+            ("2bin", "binned2"),
+            ("4bin", "binned4"),
+            ("6bin", "binned6"),
+            // hyphenated spellings normalize to `N_bin`, so that form
+            // needs its own alias entry (normalize() runs on lookups AND
+            // on alias keys, but "4-bin" → "4_bin" ≠ "4bin")
+            ("2_bin", "binned2"),
+            ("4_bin", "binned4"),
+            ("6_bin", "binned6"),
+        ] {
+            r.alias(alias, canon);
+        }
+        r.alias("native", "llm_native");
+        r
+    }
+
+    /// Register (or replace) a predictor builder under `name`.
+    pub fn register<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn(&PredictorContext) -> Result<Box<dyn LengthPredictor>> + Send + Sync + 'static,
+    {
+        self.builders.insert(normalize(name), Box::new(builder));
+    }
+
+    /// Make `alias` resolve to `canonical`. A direct registration under an
+    /// alias-colliding name wins over the alias (same rule as the policy
+    /// registry).
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.aliases.insert(normalize(alias), normalize(canonical));
+    }
+
+    fn lookup(&self, name: &str) -> Option<&PredictorBuilder> {
+        let n = normalize(name);
+        if let Some(b) = self.builders.get(&n) {
+            return Some(b);
+        }
+        self.aliases.get(&n).and_then(|canon| self.builders.get(canon))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.lookup(name).is_some()
+    }
+
+    /// Construct the named predictor; unknown names error with the
+    /// registered canonical list.
+    pub fn build(&self, name: &str, ctx: &PredictorContext) -> Result<Box<dyn LengthPredictor>> {
+        match self.lookup(name) {
+            Some(b) => b(ctx),
+            None => Err(Error::config(format!(
+                "unknown predictor `{name}` (known: {})",
+                self.names().join("|")
+            ))),
+        }
+    }
+
+    /// Registered canonical predictor names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.builders.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PredictInput, Prediction};
+    use super::*;
+
+    fn ctx() -> PredictorContext {
+        PredictorContext {
+            cap: 32_768.0,
+            rel_err: 0.3,
+            seed: 7,
+        }
+    }
+
+    fn input(rem: u32) -> PredictInput {
+        PredictInput {
+            id: 1,
+            generated: 0,
+            true_remaining: Some(rem),
+        }
+    }
+
+    #[test]
+    fn builds_every_builtin_by_canonical_name_and_alias() {
+        let reg = PredictorRegistry::with_builtins();
+        for name in [
+            "none", "oracle", "binned2", "binned4", "binned6", "llm_native", "debiased",
+            // aliases + normalization
+            "2bin", "4-bin", "6bin", "native", "LLM-Native", "Oracle",
+        ] {
+            let mut p = reg.build(name, &ctx()).unwrap_or_else(|e| {
+                panic!("builtin `{name}` must build: {e}")
+            });
+            let _ = p.predict(&input(1000));
+        }
+    }
+
+    #[test]
+    fn display_names_are_registry_keys() {
+        // the satellite invariant: what a predictor calls itself is the
+        // key that builds it (no `llm_native(sim,σ=…)` leaking into bench
+        // JSON / CLI output)
+        let reg = PredictorRegistry::with_builtins();
+        for name in reg.names() {
+            let p = reg.build(&name, &ctx()).unwrap();
+            assert_eq!(p.name(), name, "display name must be the registry key");
+            assert!(
+                p.name().is_ascii(),
+                "predictor names must be plain ASCII: {}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn every_builtin_is_registered() {
+        // new builtins cannot silently miss registration: this list is
+        // asserted verbatim (and `star list` prints the same registry,
+        // covered in tests/cli_errors.rs)
+        let reg = PredictorRegistry::with_builtins();
+        assert_eq!(
+            reg.names(),
+            vec![
+                "binned2",
+                "binned4",
+                "binned6",
+                "debiased",
+                "llm_native",
+                "none",
+                "oracle",
+            ]
+        );
+    }
+
+    #[test]
+    fn unknown_names_error_with_known_list() {
+        let reg = PredictorRegistry::with_builtins();
+        let e = reg.build("magic8ball", &ctx()).unwrap_err().to_string();
+        assert!(e.contains("unknown predictor `magic8ball`"), "{e}");
+        assert!(e.contains("binned4"), "{e}");
+        assert!(e.contains("llm_native"), "{e}");
+        assert!(!reg.has("magic8ball"));
+        assert!(reg.has("debiased"));
+    }
+
+    #[test]
+    fn third_party_registration_and_override() {
+        let mut reg = PredictorRegistry::with_builtins();
+        struct Fixed(f64);
+        impl LengthPredictor for Fixed {
+            fn predict(&mut self, _i: &PredictInput) -> Option<Prediction> {
+                Some(Prediction::exact(self.0))
+            }
+            fn name(&self) -> String {
+                "fixed".into()
+            }
+        }
+        reg.register("fixed", |_| Ok(Box::new(Fixed(77.0))));
+        let mut p = reg.build("fixed", &ctx()).unwrap();
+        assert_eq!(p.predict(&input(1)).unwrap().mean, 77.0);
+        // direct registration under an alias-colliding name shadows it
+        reg.register("2bin", |_| Ok(Box::new(Fixed(1.0))));
+        let mut p = reg.build("2bin", &ctx()).unwrap();
+        assert_eq!(p.predict(&input(1)).unwrap().mean, 1.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! The shared reprediction engine (paper §5.3): ONE due-slot scan +
+//! batch-cost accounting used by both drivers.
+//!
+//! Before this module, `sim::engine` and `serve::instance` each carried
+//! their own copy of the "re-predict every k decode iterations" plumbing
+//! — an inline counter compare in three places, with the batched-cost
+//! arithmetic duplicated and free to drift. [`Repredictor`] owns the
+//! schedule once: a request re-predicts every `every_iters` iterations,
+//! due slots are batched into a single predictor call, and that batch's
+//! latency is charged to the decode iteration it runs in.
+
+use super::LengthPredictor;
+
+/// The reprediction schedule shared by the simulator and the live decode
+/// instance threads.
+#[derive(Clone, Copy, Debug)]
+pub struct Repredictor {
+    every_iters: u32,
+}
+
+impl Repredictor {
+    /// `every_iters` is clamped to ≥ 1 (the paper's k; k=20 default).
+    pub fn new(every_iters: u32) -> Repredictor {
+        Repredictor {
+            every_iters: every_iters.max(1),
+        }
+    }
+
+    pub fn every_iters(&self) -> u32 {
+        self.every_iters
+    }
+
+    /// Is a slot whose per-request counter has just been incremented due
+    /// for reprediction now? (The caller resets the counter to 0 after
+    /// applying the new estimate.)
+    #[inline]
+    pub fn is_due(&self, iters_since_predict: u32) -> bool {
+        iters_since_predict >= self.every_iters
+    }
+
+    /// Will this slot be due once the upcoming iteration's increment
+    /// lands? The pre-step scan: the batched prediction's latency must be
+    /// charged to the iteration it runs in (§5.3), so the simulator counts
+    /// due slots *before* stepping.
+    #[inline]
+    pub fn due_next(&self, iters_since_predict: u32) -> bool {
+        self.is_due(iters_since_predict.saturating_add(1))
+    }
+
+    /// The batched due-slot scan: keep the keys whose counters are due.
+    /// Both drivers run their slot tables through this one function.
+    pub fn due_slots<T>(&self, slots: impl Iterator<Item = (T, u32)>) -> Vec<T> {
+        slots
+            .filter(|(_, c)| self.is_due(*c))
+            .map(|(t, _)| t)
+            .collect()
+    }
+
+    /// Latency cost of one reprediction batch of `due` slots, seconds —
+    /// zero when nothing is due (no batch is launched).
+    pub fn batch_cost_s(&self, predictor: &dyn LengthPredictor, due: usize) -> f64 {
+        if due == 0 {
+            0.0
+        } else {
+            predictor.cost_s(due)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NoisyOracle;
+    use super::*;
+
+    #[test]
+    fn schedule_is_every_k_iters() {
+        let r = Repredictor::new(20);
+        assert!(!r.is_due(19));
+        assert!(r.is_due(20));
+        assert!(r.is_due(21));
+        assert!(r.due_next(19), "due once the increment lands");
+        assert!(!r.due_next(18));
+        assert_eq!(r.every_iters(), 20);
+    }
+
+    #[test]
+    fn zero_interval_clamps_to_one() {
+        let r = Repredictor::new(0);
+        assert_eq!(r.every_iters(), 1);
+        assert!(r.is_due(1));
+        assert!(!r.is_due(0));
+    }
+
+    #[test]
+    fn scan_keeps_due_keys_in_order() {
+        let r = Repredictor::new(5);
+        let counters = vec![(0usize, 4u32), (1, 5), (2, 0), (3, 7)];
+        assert_eq!(r.due_slots(counters.into_iter()), vec![1, 3]);
+    }
+
+    #[test]
+    fn batch_cost_is_zero_when_empty() {
+        let r = Repredictor::new(20);
+        let p = NoisyOracle::new(0.3, 1);
+        assert_eq!(r.batch_cost_s(&p, 0), 0.0);
+        let one = r.batch_cost_s(&p, 1);
+        let ten = r.batch_cost_s(&p, 10);
+        assert!(one > 0.0 && ten > one, "batched cost grows with batch");
+    }
+}

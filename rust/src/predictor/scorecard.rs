@@ -1,0 +1,306 @@
+//! Online calibration scorecard: signed error and MAE per progress
+//! bucket, accumulated at request **completion** (only then is the actual
+//! remaining length at each prediction point known — the same contract
+//! the live path has, where ground truth never exists at prediction
+//! time).
+//!
+//! The drivers log a [`PredSample`] every time a request's estimate is
+//! (re)issued; at completion the samples fold into the run's
+//! [`Scorecard`] (reported in `SimReport` / `ServeOutcome`) and are also
+//! fed back to the predictor (`LengthPredictor::observe_completion`),
+//! which is what the `debiased` builtin learns its correction from.
+
+/// Number of generation-progress buckets ([0, 1) split evenly; the last
+/// bucket is closed at 1).
+pub const PROGRESS_BUCKETS: usize = 5;
+
+/// One issued prediction, as the drivers log it: how many tokens had been
+/// generated, and what remaining length was predicted. The actual
+/// remaining at that point is `output_len - generated`, known at
+/// completion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredSample {
+    /// Tokens generated when the prediction was issued.
+    pub generated: u32,
+    /// Predicted remaining output length (mean), tokens.
+    pub predicted: f64,
+}
+
+/// Accumulated error statistics of one progress bucket.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BucketStats {
+    /// Number of folded prediction samples.
+    pub n: u64,
+    /// Σ (predicted − actual): positive = systematic over-prediction.
+    pub signed_sum: f64,
+    /// Σ |predicted − actual|.
+    pub abs_sum: f64,
+    /// Σ actual remaining — normalizes MAE into a relative error.
+    pub actual_sum: f64,
+}
+
+impl BucketStats {
+    /// Mean signed error (bias), tokens; 0 when empty.
+    pub fn bias(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.signed_sum / self.n as f64
+        }
+    }
+
+    /// Mean absolute error, tokens; 0 when empty.
+    pub fn mae(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.abs_sum / self.n as f64
+        }
+    }
+
+    /// MAE relative to the mean actual remaining length (the unit-free
+    /// calibration number comparable to the injected `rel_err`).
+    pub fn rel_mae(&self) -> f64 {
+        if self.actual_sum <= 0.0 {
+            0.0
+        } else {
+            self.abs_sum / self.actual_sum
+        }
+    }
+
+    fn fold(&mut self, other: &BucketStats) {
+        self.n += other.n;
+        self.signed_sum += other.signed_sum;
+        self.abs_sum += other.abs_sum;
+        self.actual_sum += other.actual_sum;
+    }
+}
+
+/// Per-progress-bucket calibration accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Scorecard {
+    buckets: [BucketStats; PROGRESS_BUCKETS],
+}
+
+impl Scorecard {
+    pub fn new() -> Scorecard {
+        Scorecard::default()
+    }
+
+    /// Bucket index of a generation progress fraction in [0, 1].
+    pub fn bucket_of(progress: f64) -> usize {
+        ((progress.clamp(0.0, 1.0) * PROGRESS_BUCKETS as f64) as usize)
+            .min(PROGRESS_BUCKETS - 1)
+    }
+
+    /// Record one (signed error, actual remaining) observation at a
+    /// progress fraction.
+    pub fn record(&mut self, progress: f64, signed_err: f64, actual: f64) {
+        let b = &mut self.buckets[Self::bucket_of(progress)];
+        b.n += 1;
+        b.signed_sum += signed_err;
+        b.abs_sum += signed_err.abs();
+        b.actual_sum += actual.max(0.0);
+    }
+
+    /// Fold a completed request's prediction log: each sample's actual
+    /// remaining is `output_len − generated`, its progress is
+    /// `generated / output_len`.
+    pub fn observe_completion(&mut self, output_len: u32, samples: &[PredSample]) {
+        if output_len == 0 {
+            return;
+        }
+        for s in samples {
+            let actual = output_len.saturating_sub(s.generated) as f64;
+            let progress = s.generated as f64 / output_len as f64;
+            self.record(progress, s.predicted - actual, actual);
+        }
+    }
+
+    pub fn bucket(&self, idx: usize) -> &BucketStats {
+        &self.buckets[idx]
+    }
+
+    pub fn buckets(&self) -> &[BucketStats] {
+        &self.buckets
+    }
+
+    /// All buckets folded into one aggregate.
+    pub fn total(&self) -> BucketStats {
+        let mut t = BucketStats::default();
+        for b in &self.buckets {
+            t.fold(b);
+        }
+        t
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|b| b.n == 0)
+    }
+
+    /// Fold another scorecard in (e.g. serve-side per-run merges).
+    pub fn merge(&mut self, other: &Scorecard) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            a.fold(b);
+        }
+    }
+
+    /// One row per non-empty bucket, for reports and the CLI:
+    /// `progress [0.0,0.2)  n 123  bias +45.6  MAE 78.9 (12.3% rel)`.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            if b.n == 0 {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            let lo = i as f64 / PROGRESS_BUCKETS as f64;
+            let hi = (i + 1) as f64 / PROGRESS_BUCKETS as f64;
+            out.push_str(&format!(
+                "progress [{lo:.1},{hi:.1})  n {:>7}  bias {:>+9.1}  MAE {:>8.1} ({:.1}% rel)",
+                b.n,
+                b.bias(),
+                b.mae(),
+                100.0 * b.rel_mae(),
+            ));
+        }
+        out
+    }
+
+    /// Raw JSON array (one object per bucket) for the bench writer's
+    /// `field_raw` — re-parsed by the smoke gate, so it must stay valid.
+    pub fn json(&self) -> String {
+        let mut s = String::from("[");
+        for (i, b) in self.buckets.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let fin = |v: f64| if v.is_finite() { v } else { 0.0 };
+            s.push_str(&format!(
+                "{{\"bucket\": {i}, \"n\": {}, \"bias\": {}, \"mae\": {}, \"rel_mae\": {}}}",
+                b.n,
+                fin(b.bias()),
+                fin(b.mae()),
+                fin(b.rel_mae()),
+            ));
+        }
+        s.push(']');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_progress() {
+        assert_eq!(Scorecard::bucket_of(0.0), 0);
+        assert_eq!(Scorecard::bucket_of(0.19), 0);
+        assert_eq!(Scorecard::bucket_of(0.2), 1);
+        assert_eq!(Scorecard::bucket_of(0.99), 4);
+        assert_eq!(Scorecard::bucket_of(1.0), 4, "closed top bucket");
+        assert_eq!(Scorecard::bucket_of(7.0), 4, "clamped");
+        assert_eq!(Scorecard::bucket_of(-1.0), 0, "clamped");
+    }
+
+    #[test]
+    fn completion_folds_samples_with_true_remaining() {
+        let mut sc = Scorecard::new();
+        // request of 100 output tokens, predicted 60 at g=0 (actual 100,
+        // err -40, bucket 0) and 55 at g=50 (actual 50, err +5, bucket 2)
+        sc.observe_completion(
+            100,
+            &[
+                PredSample { generated: 0, predicted: 60.0 },
+                PredSample { generated: 50, predicted: 55.0 },
+            ],
+        );
+        let b0 = sc.bucket(0);
+        assert_eq!(b0.n, 1);
+        assert!((b0.bias() + 40.0).abs() < 1e-9);
+        assert!((b0.mae() - 40.0).abs() < 1e-9);
+        let b2 = sc.bucket(2);
+        assert_eq!(b2.n, 1);
+        assert!((b2.bias() - 5.0).abs() < 1e-9);
+        let t = sc.total();
+        assert_eq!(t.n, 2);
+        assert!((t.mae() - 22.5).abs() < 1e-9);
+        assert!((t.bias() + 17.5).abs() < 1e-9);
+        assert!((t.rel_mae() - 45.0 / 150.0).abs() < 1e-9);
+        assert!(!sc.is_empty());
+        assert!(sc.summary().contains("bias"));
+    }
+
+    #[test]
+    fn exact_predictions_score_zero() {
+        let mut sc = Scorecard::new();
+        for g in [0u32, 20, 40, 60, 80] {
+            sc.observe_completion(
+                100,
+                &[PredSample { generated: g, predicted: (100 - g) as f64 }],
+            );
+        }
+        let t = sc.total();
+        assert_eq!(t.n, 5);
+        assert_eq!(t.mae(), 0.0);
+        assert_eq!(t.bias(), 0.0);
+        // every bucket saw its own progress point
+        for i in 0..PROGRESS_BUCKETS {
+            assert_eq!(sc.bucket(i).n, 1, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn mae_matches_injected_noise_level() {
+        // additive noise of a known scale: per-bucket MAE must recover it
+        let mut sc = Scorecard::new();
+        let mut rng = crate::prng::Pcg64::new(42, 0x5c0);
+        let noise = 30.0;
+        for _ in 0..4000 {
+            let g = (rng.normal(0.0, 1.0).abs() * 20.0).min(90.0) as u32;
+            let actual = (100 - g) as f64;
+            let err = rng.normal(0.0, noise);
+            sc.observe_completion(
+                100,
+                &[PredSample { generated: g, predicted: actual + err }],
+            );
+        }
+        let t = sc.total();
+        // E|N(0,σ)| = σ·√(2/π) ≈ 0.798 σ
+        let expect = noise * (2.0 / std::f64::consts::PI).sqrt();
+        assert!(
+            (t.mae() - expect).abs() < 0.15 * expect,
+            "MAE {} should be ~{expect}",
+            t.mae()
+        );
+        assert!(
+            t.bias().abs() < 0.1 * noise,
+            "unbiased noise must score near-zero bias: {}",
+            t.bias()
+        );
+    }
+
+    #[test]
+    fn merge_and_json_render() {
+        let mut a = Scorecard::new();
+        a.record(0.1, 5.0, 50.0);
+        let mut b = Scorecard::new();
+        b.record(0.1, -5.0, 50.0);
+        b.record(0.9, 1.0, 10.0);
+        a.merge(&b);
+        assert_eq!(a.bucket(0).n, 2);
+        assert_eq!(a.bucket(0).bias(), 0.0);
+        assert_eq!(a.bucket(4).n, 1);
+        let j = a.json();
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\"rel_mae\""));
+        // zero-length outputs are ignored, not a division by zero
+        let mut z = Scorecard::new();
+        z.observe_completion(0, &[PredSample { generated: 0, predicted: 1.0 }]);
+        assert!(z.is_empty());
+        assert_eq!(z.summary(), "");
+    }
+}

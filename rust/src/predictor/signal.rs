@@ -1,0 +1,169 @@
+//! The uncertainty-aware prediction signal.
+//!
+//! The predictor layer used to hand schedulers a bare `Option<f64>`, which
+//! forced every consumer to treat a 6-bin guess and an oracle value as
+//! equally trustworthy. [`Prediction`] carries the point estimate *and*
+//! its spread, so OOM-avoidance checks can plan against a conservative
+//! quantile (p90 by default) while load-balancing objectives keep using
+//! the mean — the split Arrow (arXiv:2505.11916) and SLO-aware
+//! disaggregated scheduling (arXiv:2605.02329) show is what makes
+//! adaptive scheduling beat static splits.
+
+/// One remaining-generation-length estimate (token units) with its
+/// uncertainty. Cheap to copy; carried through `ClusterState` /
+/// `ClusterView` into every policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    /// Point estimate of the remaining output length.
+    pub mean: f64,
+    /// One standard deviation of the estimate, token units. 0 for exact
+    /// predictors (oracle) and for live point estimates without a
+    /// calibrated spread.
+    pub sigma: f64,
+    /// The request's generated-token count when this estimate was issued —
+    /// the reprediction clock both drivers share (staleness diagnostic).
+    pub issued_at_iter: u64,
+}
+
+impl Prediction {
+    pub fn new(mean: f64, sigma: f64, issued_at_iter: u64) -> Prediction {
+        Prediction {
+            mean,
+            sigma: sigma.max(0.0),
+            issued_at_iter,
+        }
+    }
+
+    /// An exact (zero-spread) estimate — the compatibility constructor for
+    /// tests and point-estimate producers.
+    pub fn exact(mean: f64) -> Prediction {
+        Prediction::new(mean, 0.0, 0)
+    }
+
+    /// Quantile `q` of the estimate under a normal error model, clamped
+    /// to be non-negative (a remaining length cannot be). `quantile(0.5)`
+    /// is exactly `mean` (the balancing view); `quantile(0.9)` is the
+    /// conservative view the OOM-avoidance checks consume.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.sigma <= 0.0 {
+            return self.mean.max(0.0);
+        }
+        (self.mean + normal_quantile(q) * self.sigma).max(0.0)
+    }
+}
+
+/// Standard normal quantile (inverse CDF) via Acklam's rational
+/// approximation (|relative error| < 1.15e-9 over (0, 1)). Inputs are
+/// clamped into (0, 1); `normal_quantile(0.5)` is exactly 0.
+pub fn normal_quantile(q: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let q = q.clamp(1e-12, 1.0 - 1e-12);
+    if q < P_LOW {
+        let r = (-2.0 * q.ln()).sqrt();
+        (((((C[0] * r + C[1]) * r + C[2]) * r + C[3]) * r + C[4]) * r + C[5])
+            / ((((D[0] * r + D[1]) * r + D[2]) * r + D[3]) * r + 1.0)
+    } else if q <= 1.0 - P_LOW {
+        let r = q - 0.5;
+        let s = r * r;
+        (((((A[0] * s + A[1]) * s + A[2]) * s + A[3]) * s + A[4]) * s + A[5]) * r
+            / (((((B[0] * s + B[1]) * s + B[2]) * s + B[3]) * s + B[4]) * s + 1.0)
+    } else {
+        let r = (-2.0 * (1.0 - q).ln()).sqrt();
+        -(((((C[0] * r + C[1]) * r + C[2]) * r + C[3]) * r + C[4]) * r + C[5])
+            / ((((D[0] * r + D[1]) * r + D[2]) * r + D[3]) * r + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_exactly_zero() {
+        assert_eq!(normal_quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn known_quantiles_match_tables() {
+        for (q, z) in [
+            (0.90, 1.2815515655446004),
+            (0.95, 1.6448536269514722),
+            (0.99, 2.3263478740408408),
+            (0.10, -1.2815515655446004),
+            (0.025, -1.9599639845400545),
+        ] {
+            let got = normal_quantile(q);
+            assert!(
+                (got - z).abs() < 1e-6,
+                "z({q}) = {got}, want {z}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_is_monotone_in_q() {
+        let p = Prediction::new(100.0, 20.0, 0);
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..100 {
+            let v = p.quantile(i as f64 / 100.0);
+            assert!(v >= prev, "quantile not monotone at q={}", i);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn exact_predictions_ignore_q() {
+        let p = Prediction::exact(123.0);
+        assert_eq!(p.quantile(0.1), 123.0);
+        assert_eq!(p.quantile(0.5), 123.0);
+        assert_eq!(p.quantile(0.99), 123.0);
+    }
+
+    #[test]
+    fn p90_adds_about_1_28_sigma() {
+        let p = Prediction::new(1000.0, 100.0, 0);
+        assert!((p.quantile(0.9) - 1128.155).abs() < 0.01);
+        assert!((p.quantile(0.5) - 1000.0).abs() < 1e-12);
+        // clamped at zero: a deep-left quantile of a small mean
+        let small = Prediction::new(10.0, 100.0, 0);
+        assert_eq!(small.quantile(0.01), 0.0);
+    }
+
+    #[test]
+    fn negative_sigma_is_clamped() {
+        let p = Prediction::new(50.0, -3.0, 7);
+        assert_eq!(p.sigma, 0.0);
+        assert_eq!(p.issued_at_iter, 7);
+        assert_eq!(p.quantile(0.99), 50.0);
+    }
+}

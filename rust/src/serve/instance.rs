@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 use crate::config::PredictorKind;
 use crate::coordinator::admission_watermark;
 use crate::kvcache::KvCacheManager;
+use crate::predictor::{Prediction, Repredictor};
 use crate::prng::Pcg64;
 use crate::runtime::{HostTensor, StarRuntime};
 use crate::{InstanceId, RequestId};
@@ -48,7 +49,7 @@ pub struct AdmitPayload {
     /// Tokens to replay through decode before resuming emission
     /// (OOM recompute path: rebuilds the KV cache).
     pub replay: VecDeque<u8>,
-    pub predicted_remaining: Option<f64>,
+    pub predicted_remaining: Option<Prediction>,
 }
 
 /// Events from a decode instance to the coordinator.
@@ -98,7 +99,7 @@ pub enum DecodeEvent {
 pub struct SlotSnapshot {
     pub id: RequestId,
     pub tokens: u64,
-    pub predicted_remaining: Option<f64>,
+    pub predicted_remaining: Option<Prediction>,
 }
 
 struct Slot {
@@ -109,7 +110,7 @@ struct Slot {
     forced_remaining: Option<u32>,
     replay: VecDeque<u8>,
     token_history: Vec<u8>,
-    predicted_remaining: Option<f64>,
+    predicted_remaining: Option<Prediction>,
     iters_since_predict: u32,
 }
 
@@ -141,6 +142,9 @@ impl DecodeInstance {
         let mut kv_mgr = KvCacheManager::new(self.kv_capacity_tokens, self.block_tokens);
         let mut slots: Vec<Option<Slot>> = (0..bucket).map(|_| None).collect();
         let mut rng = Pcg64::new(self.seed, (self.id as u64) ^ 0xDEC0DE);
+        // the SAME reprediction schedule the simulator runs
+        // (predictor::Repredictor — one due-slot scan, one cost model)
+        let repred = Repredictor::new(self.predict_every_iters);
         let mut ewma_iter_ms = 0.0f64;
         let mut any_steps = false;
         let mut draining = false;
@@ -238,7 +242,6 @@ impl DecodeInstance {
             let max_seq = self.runtime.meta.max_seq as i32;
             let mut finished: Vec<usize> = Vec::new();
             let mut oom_victims: Vec<Box<AdmitPayload>> = Vec::new();
-            let mut predict_slots: Vec<usize> = Vec::new();
 
             for i in 0..bucket {
                 let Some(slot) = slots[i].as_mut() else {
@@ -309,18 +312,29 @@ impl DecodeInstance {
                     finished.push(i);
                 } else {
                     slot.next_token = sampled;
-                    if self.predictor.uses_prediction()
-                        && slot.iters_since_predict >= self.predict_every_iters
-                    {
-                        predict_slots.push(i);
-                    }
                 }
             }
 
-            // 4. reprediction (batched over due slots; paper §5.3)
+            // 4. reprediction: the shared batched due-slot scan (§5.3),
+            // identical to the simulator's (predictor::Repredictor)
+            let predict_slots: Vec<usize> = if self.predictor.uses_prediction() {
+                repred.due_slots((0..bucket).filter_map(|i| {
+                    let s = slots[i].as_ref()?;
+                    // finished slots leave this step; replaying slots have
+                    // not resumed emission yet
+                    if finished.contains(&i) || !s.replay.is_empty() {
+                        return None;
+                    }
+                    Some((i, s.iters_since_predict))
+                }))
+            } else {
+                Vec::new()
+            };
             if !predict_slots.is_empty() {
                 match self.predictor {
-                    PredictorKind::LlmNative => {
+                    // the live `debiased` selection runs the MLP estimate
+                    // uncorrected (online debiasing is simulator-side)
+                    PredictorKind::LlmNative | PredictorKind::Debiased => {
                         let mut h = Vec::with_capacity(predict_slots.len() * d);
                         for &i in &predict_slots {
                             h.extend_from_slice(&out.hidden[i * d..(i + 1) * d]);
@@ -328,7 +342,13 @@ impl DecodeInstance {
                         if let Ok(preds) = self.runtime.predict_remaining(&h) {
                             for (k, &i) in predict_slots.iter().enumerate() {
                                 if let Some(s) = slots[i].as_mut() {
-                                    s.predicted_remaining = Some(preds[k] as f64);
+                                    // live point estimate: no calibrated
+                                    // spread, so σ = 0 (quantiles = mean)
+                                    s.predicted_remaining = Some(Prediction::new(
+                                        preds[k] as f64,
+                                        0.0,
+                                        s.generated as u64,
+                                    ));
                                     s.iters_since_predict = 0;
                                 }
                             }
@@ -337,9 +357,13 @@ impl DecodeInstance {
                     PredictorKind::Oracle | PredictorKind::Binned(_) => {
                         for &i in &predict_slots {
                             if let Some(s) = slots[i].as_mut() {
-                                s.predicted_remaining = s
-                                    .forced_remaining
-                                    .map(|r| (r - s.generated) as f64);
+                                s.predicted_remaining = s.forced_remaining.map(|r| {
+                                    Prediction::new(
+                                        r.saturating_sub(s.generated) as f64,
+                                        0.0,
+                                        s.generated as u64,
+                                    )
+                                });
                                 s.iters_since_predict = 0;
                             }
                         }

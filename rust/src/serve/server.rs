@@ -20,6 +20,7 @@ use crate::metrics::{
     PoolSample, RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder,
     VarianceOverTime,
 };
+use crate::predictor::{PredSample, Prediction, Scorecard};
 use crate::runtime::StarRuntime;
 use crate::workload::SessionPlan;
 use crate::{InstanceId, RequestId, Result, Time};
@@ -70,6 +71,9 @@ pub struct ServeOutcome {
     pub pool_timeline: Vec<PoolSample>,
     /// Executed scaling actions, in decision order.
     pub scale_actions: Vec<ScaleRecord>,
+    /// Predictor calibration: signed error + MAE per progress bucket,
+    /// accumulated at request completion (empty under `none`).
+    pub scorecard: Scorecard,
 }
 
 struct ReqTracker {
@@ -79,6 +83,16 @@ struct ReqTracker {
     tpot_max: f64,
     generated: u32,
     done: bool,
+    /// Estimates issued for this request (initial + repredictions seen in
+    /// instance reports), folded into the run's calibration scorecard at
+    /// completion.
+    pred_log: Vec<PredSample>,
+    /// Issue point of the last logged estimate (dedupe key: reports
+    /// repeat each estimate every step, but `issued_at_iter` is strictly
+    /// increasing per reprediction — deduping on the VALUE would drop a
+    /// distinct reprediction that happens to return the same number,
+    /// exactly the stuck-predictor case the scorecard exists to expose).
+    last_pred_iter: Option<u64>,
 }
 
 /// Per-instance plumbing the coordinator keeps outside the shared
@@ -167,9 +181,12 @@ impl Server {
     }
 
     /// Spawn one decode-instance thread (initial pool and elastic joins).
+    /// `pred_kind` is the live execution path derived once from the
+    /// experiment's predictor registry name.
     fn spawn_decode_thread(
         &self,
         id: InstanceId,
+        pred_kind: PredictorKind,
         ev_tx: &Sender<DecodeEvent>,
     ) -> (InstanceState, std::thread::JoinHandle<()>) {
         let exp = &self.params.exp;
@@ -180,7 +197,7 @@ impl Server {
             kv_capacity_tokens: exp.cluster.kv_capacity_tokens,
             block_tokens: exp.cluster.block_tokens,
             max_batch: exp.cluster.max_batch,
-            predictor: exp.predictor,
+            predictor: pred_kind,
             predict_every_iters: exp.rescheduler.predict_every_iters,
             temperature: self.params.temperature,
             seed: exp.cluster.seed,
@@ -257,6 +274,22 @@ impl Server {
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let exp = &self.params.exp;
         let n_requests = requests.len();
+        // the live execution path for the configured predictor name. The
+        // REGISTRY is the authoritative grammar (same one the simulator
+        // builds from and validate() checks against): gate on it first so
+        // a name the sim would reject (e.g. `binned9`, which
+        // PredictorKind::parse alone would happily accept) fails here too
+        // instead of silently serving, and custom sim-only registrations
+        // error with the builtin candidate list rather than a parse error.
+        let pred_reg = crate::predictor::PredictorRegistry::with_builtins();
+        if !pred_reg.has(&exp.predictor) {
+            return Err(crate::Error::config(format!(
+                "unknown predictor `{}` for the live path (known: {})",
+                exp.predictor,
+                pred_reg.names().join("|")
+            )));
+        }
+        let pred_kind = PredictorKind::parse(&exp.predictor)?;
         let start = Instant::now();
         let since = |at: Instant| -> Time { at.duration_since(start).as_secs_f64() };
 
@@ -265,7 +298,7 @@ impl Server {
         let mut instances: Vec<InstanceState> = Vec::new();
         let mut handles = Vec::new();
         for i in 0..exp.cluster.n_decode {
-            let (st, handle) = self.spawn_decode_thread(i, &ev_tx);
+            let (st, handle) = self.spawn_decode_thread(i, pred_kind, &ev_tx);
             handles.push(handle);
             instances.push(st);
         }
@@ -304,6 +337,8 @@ impl Server {
                     tpot_max: 0.0,
                     generated: 0,
                     done: false,
+                    pred_log: Vec::new(),
+                    last_pred_iter: None,
                 },
             );
         }
@@ -329,6 +364,9 @@ impl Server {
         let mut failed = 0usize;
         let mut oom_events = 0u64;
         let mut migrations = 0u64;
+        // online calibration: folded at each completion from the per-
+        // request prediction logs (same definition as the simulator's)
+        let mut scorecard = Scorecard::new();
         // realized output lengths: refines the no-prediction remaining
         // estimate, mirroring the simulator's feed of output_mean / 2
         let mut output_mean = RunningVariance::new();
@@ -444,7 +482,7 @@ impl Server {
                         let added = state.add_instance(exp.cluster.kv_capacity_tokens);
                         debug_assert_eq!(added, id, "state and thread pools must align");
                         state.set_capacity(id, rounded_cap);
-                        let (st, handle) = self.spawn_decode_thread(id, &ev_tx);
+                        let (st, handle) = self.spawn_decode_thread(id, pred_kind, &ev_tx);
                         handles.push(handle);
                         instances.push(st);
                     }
@@ -552,18 +590,27 @@ impl Server {
                             },
                         );
                         // initial prediction (drives PredictedLoad dispatch
-                        // and seeds the rescheduler's view)
-                        let pred = match self.params.exp.predictor {
+                        // and seeds the rescheduler's view). Live estimates
+                        // are points (σ = 0): quantiles degrade to the mean.
+                        let pred = match pred_kind {
                             PredictorKind::None => None,
-                            PredictorKind::LlmNative => self
+                            PredictorKind::LlmNative | PredictorKind::Debiased => self
                                 .runtime
                                 .predict_remaining(&hidden)
                                 .ok()
-                                .map(|v| v[0] as f64),
+                                .map(|v| Prediction::new(v[0] as f64, 0.0, 0)),
                             PredictorKind::Oracle | PredictorKind::Binned(_) => {
-                                req.forced_output.map(|o| o as f64)
+                                req.forced_output.map(|o| Prediction::exact(o as f64))
                             }
                         };
+                        if let Some(p) = pred {
+                            let t = trackers.get_mut(&req.id).expect("tracker exists");
+                            t.pred_log.push(PredSample {
+                                generated: 0,
+                                predicted: p.mean,
+                            });
+                            t.last_pred_iter = Some(p.issued_at_iter);
+                        }
                         let di = control.dispatch(
                             &state.view(),
                             &IncomingRequest {
@@ -607,6 +654,7 @@ impl Server {
                             &mut completed,
                             &mut oom_events,
                             &mut output_mean,
+                            &mut scorecard,
                             &mut session,
                         );
                         pending = ev_rx.try_recv().ok();
@@ -864,6 +912,7 @@ impl Server {
             migrations,
             pool_timeline,
             scale_actions: scale_log,
+            scorecard,
         })
     }
 
@@ -882,6 +931,7 @@ impl Server {
         completed: &mut usize,
         oom_events: &mut u64,
         output_mean: &mut RunningVariance,
+        scorecard: &mut Scorecard,
         session: &mut SessionRt,
     ) {
         match ev {
@@ -923,6 +973,10 @@ impl Server {
                         t.latency.finished = Some(since(at));
                         t.latency.output_tokens = generated;
                         t.latency.finalize_tpot(t.generated, t.tpot_sum, t.tpot_max);
+                        // completion is when every logged estimate gains a
+                        // ground truth: fold into the calibration scorecard
+                        let log = std::mem::take(&mut t.pred_log);
+                        scorecard.observe_completion(generated, &log);
                         recorder.record(
                             since(at),
                             TraceEvent::Finished {
@@ -968,6 +1022,8 @@ impl Server {
                                     tpot_max: 0.0,
                                     generated: 0,
                                     done: false,
+                                    pred_log: Vec::new(),
+                                    last_pred_iter: None,
                                 },
                             );
                             session.cursor.insert(nid, (s, k + 1));
@@ -1034,6 +1090,29 @@ impl Server {
                         migrating: migrating.contains(&s.id),
                     })
                     .collect();
+                // reports are also where repredictions surface: log each
+                // changed estimate for the completion-time scorecard fold.
+                // The sample's progress point is the estimate's ISSUE time
+                // (`issued_at_iter`, stamped by the instance thread) — the
+                // tracker's current token count may already be past it,
+                // which would charge the predictor for tokens generated
+                // after it spoke (an exact oracle would score a fake bias).
+                for s in &slots {
+                    let Some(p) = s.predicted_remaining else {
+                        continue;
+                    };
+                    if let Some(t) = trackers.get_mut(&s.id) {
+                        let fresh =
+                            t.last_pred_iter.map_or(true, |prev| p.issued_at_iter > prev);
+                        if fresh && !t.done {
+                            t.pred_log.push(PredSample {
+                                generated: p.issued_at_iter as u32,
+                                predicted: p.mean,
+                            });
+                            t.last_pred_iter = Some(p.issued_at_iter);
+                        }
+                    }
+                }
                 state.sync_instance(instance, views);
                 state.set_iter_ewma(instance, ewma_iter_ms);
                 state.set_capacity(instance, kv_capacity);

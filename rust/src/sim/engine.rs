@@ -24,7 +24,10 @@ use crate::coordinator::{
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::KvCacheManager;
 use crate::metrics::{PoolSample, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
-use crate::predictor::{build_sim_predictor, LengthPredictor, PredictInput};
+use crate::predictor::{
+    LengthPredictor, PredSample, PredictInput, PredictorContext, PredictorRegistry, Repredictor,
+    Scorecard,
+};
 use crate::workload::{Request, ScenarioTrace, SessionPlan};
 use crate::{InstanceId, RequestId, Result, Time};
 
@@ -120,6 +123,11 @@ pub struct Simulator {
     state: ClusterState,
     control: ControlLoop,
     predictor: Box<dyn LengthPredictor>,
+    /// Shared reprediction schedule (the SAME batched due-slot scan the
+    /// live decode instances run — `predictor::Repredictor`).
+    repredictor: Repredictor,
+    /// Online calibration accumulator, folded at request completion.
+    scorecard: Scorecard,
     pub recorder: TraceRecorder,
     exec_var: VarianceOverTime,
     load_var: VarianceOverTime,
@@ -174,10 +182,25 @@ impl Simulator {
     /// multi-round session plan). Follow-up turns are realized at run time
     /// through [`Event::SessionFollowUp`]: turn k+1 arrives only after
     /// turn k completes, with its prompt carrying the accumulated history.
+    /// The predictor is resolved by name (`exp.predictor`) against the
+    /// builtin [`PredictorRegistry`]; use [`Simulator::with_registries`]
+    /// for custom predictors.
     pub fn with_scenario(
         params: SimParams,
         trace: ScenarioTrace,
         registry: &PolicyRegistry,
+    ) -> Result<Simulator> {
+        Self::with_registries(params, trace, registry, &PredictorRegistry::with_builtins())
+    }
+
+    /// Fully-pluggable construction: policies AND predictors resolved by
+    /// name against caller-supplied registries — the extension point for
+    /// third-party predictors (mirrors the policy path).
+    pub fn with_registries(
+        params: SimParams,
+        trace: ScenarioTrace,
+        registry: &PolicyRegistry,
+        predictors: &PredictorRegistry,
     ) -> Result<Simulator> {
         let exp = &params.exp;
         let n_dec = exp.cluster.n_decode;
@@ -201,12 +224,14 @@ impl Simulator {
             )
             .max()
             .unwrap_or(512) as f64;
-        let predictor = build_sim_predictor(
-            exp.predictor,
-            cap,
-            exp.predictor_rel_err,
-            exp.cluster.seed ^ 0x9e37,
-        );
+        let predictor = predictors.build(
+            &exp.predictor,
+            &PredictorContext {
+                cap,
+                rel_err: exp.predictor_rel_err,
+                seed: exp.cluster.seed ^ 0x9e37,
+            },
+        )?;
 
         let mut queue = EventQueue::new();
         let mut requests = Vec::with_capacity(trace.requests.len());
@@ -223,6 +248,7 @@ impl Simulator {
                 state: ReqState::Prefill,
                 predicted_remaining: None,
                 iters_since_predict: 0,
+                pred_log: Vec::new(),
                 latency: crate::metrics::RequestLatency {
                     id: r.id,
                     class: r.class,
@@ -276,6 +302,8 @@ impl Simulator {
         Ok(Simulator {
             control,
             predictor,
+            repredictor: Repredictor::new(exp.rescheduler.predict_every_iters),
+            scorecard: Scorecard::new(),
             recorder: TraceRecorder::new(exp.record_traces),
             exec_var: VarianceOverTime::new(),
             load_var: VarianceOverTime::new(),
@@ -423,6 +451,12 @@ impl Simulator {
         };
         let r = &mut self.requests[id as usize];
         r.predicted_remaining = pred;
+        if let Some(p) = pred {
+            r.pred_log.push(PredSample {
+                generated: r.generated,
+                predicted: p.mean,
+            });
+        }
         r.latency.prefill_done = Some(self.now);
         self.recorder.record(
             self.now,
@@ -527,21 +561,22 @@ impl Simulator {
         d.epoch += 1;
         let epoch = d.epoch;
         // prediction overhead lands on iterations where repredictions fire
-        let k = self.params.exp.rescheduler.predict_every_iters.max(1);
-        let mut n_pred = 0usize;
-        for rv in self.state.active(di) {
-            if self.requests[rv.id as usize].iters_since_predict + 1 >= k {
-                n_pred += 1;
-            }
-        }
+        // (shared pre-step due-slot scan, predictor::Repredictor)
+        let n_pred = self
+            .state
+            .active(di)
+            .iter()
+            .filter(|rv| {
+                self.repredictor
+                    .due_next(self.requests[rv.id as usize].iters_since_predict)
+            })
+            .count();
         let stats = self.state.stats(di);
         let mut dt = self
             .params
             .decode_cost
             .iter_time(stats.token_load(), stats.batch_size());
-        if n_pred > 0 {
-            dt += self.predictor.cost_s(n_pred);
-        }
+        dt += self.repredictor.batch_cost_s(&*self.predictor, n_pred);
         let at = self.now + dt;
         // EWMA of iteration latency for the exec-variance metric
         self.state.record_iteration(di, dt);
@@ -556,7 +591,6 @@ impl Simulator {
         self.state.complete_iteration(di);
 
         let batch: Vec<RequestId> = self.state.active(di).iter().map(|r| r.id).collect();
-        let k = self.params.exp.rescheduler.predict_every_iters.max(1);
         let mut finished: Vec<RequestId> = Vec::new();
         let mut evicted: Vec<RequestId> = Vec::new();
 
@@ -600,7 +634,7 @@ impl Simulator {
 
             if r.generated >= r.output_len {
                 finished.push(id);
-            } else if r.iters_since_predict >= k {
+            } else if self.repredictor.is_due(r.iters_since_predict) {
                 r.iters_since_predict = 0;
                 let input = PredictInput {
                     id,
@@ -608,7 +642,14 @@ impl Simulator {
                     true_remaining: Some(r.output_len - r.generated),
                 };
                 let p = self.predictor.predict(&input);
-                self.requests[id as usize].predicted_remaining = p;
+                let r = &mut self.requests[id as usize];
+                if let Some(pp) = p {
+                    r.pred_log.push(PredSample {
+                        generated: r.generated,
+                        predicted: pp.mean,
+                    });
+                }
+                r.predicted_remaining = p;
                 self.state.set_prediction(id, p);
             }
         }
@@ -695,8 +736,18 @@ impl Simulator {
         r.latency.output_tokens = r.generated;
         // mean gap between consecutive tokens, including migration stalls
         r.latency.finalize_tpot(r.generated, r.tpot_sum, r.tpot_max);
-        self.output_mean.push(r.generated as f64);
+        let generated = r.generated;
+        // completion is the first moment every logged estimate has a known
+        // ground truth: fold the log into the calibration scorecard and
+        // feed it back to the predictor (the `debiased` builtin learns
+        // its per-bucket correction from exactly this)
+        let log = std::mem::take(&mut r.pred_log);
+        self.output_mean.push(generated as f64);
         self.completed += 1;
+        if !log.is_empty() {
+            self.scorecard.observe_completion(generated, &log);
+            self.predictor.observe_completion(generated, &log);
+        }
         self.recorder.record(
             self.now,
             TraceEvent::Finished {
@@ -742,6 +793,7 @@ impl Simulator {
             state: ReqState::Prefill,
             predicted_remaining: None,
             iters_since_predict: 0,
+            pred_log: Vec::new(),
             latency: crate::metrics::RequestLatency {
                 id,
                 class: turn.class,
@@ -1280,6 +1332,7 @@ impl Simulator {
             exec_var: self.exec_var,
             load_var: self.load_var,
             recorder: self.recorder,
+            scorecard: self.scorecard,
             scheduler_stats: self.control.stats(),
             per_instance_tokens: self.decode.iter().map(|d| d.tokens_decoded).collect(),
             session_chains: self.session_chains,
@@ -1298,7 +1351,6 @@ impl Simulator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PredictorKind;
     use crate::workload::{Dataset, TraceGen};
 
     fn small_params(n_req: usize, rps: f64) -> (SimParams, Vec<Request>) {
@@ -1307,7 +1359,7 @@ mod tests {
         exp.cluster.n_requests = n_req;
         exp.cluster.rps = rps;
         exp.cluster.kv_capacity_tokens = 200_000;
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n_req, 42);
         (
             SimParams {
@@ -1426,7 +1478,7 @@ mod tests {
         let mut exp = ExperimentConfig::default();
         exp.cluster.n_decode = 2;
         exp.cluster.kv_capacity_tokens = 10_000; // watermark = 9000
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         let trace = vec![Request {
             id: 0,
             arrival: 0.0,
@@ -1458,7 +1510,7 @@ mod tests {
         let mut exp = ExperimentConfig::default();
         exp.cluster.n_decode = 2;
         exp.cluster.kv_capacity_tokens = 10_000;
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         let trace = vec![Request {
             id: 0,
             arrival: 0.0,
@@ -1500,7 +1552,7 @@ mod tests {
         let mut exp = ExperimentConfig::default();
         exp.cluster.n_decode = 3;
         exp.cluster.kv_capacity_tokens = 400_000; // roomy: nothing fails
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         let params = SimParams {
             exp,
             ..Default::default()
@@ -1543,7 +1595,7 @@ mod tests {
         exp.cluster.n_prefill = 2;
         exp.cluster.n_decode = 2;
         exp.cluster.kv_capacity_tokens = 400_000;
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         let mut trace = vec![Request {
             id: 0,
             arrival: 0.0,

@@ -28,6 +28,7 @@ pub use engine::{SimParams, Simulator, StateMode};
 pub use report::{ClassReport, SimReport};
 
 use crate::metrics::RequestLatency;
+use crate::predictor::{PredSample, Prediction};
 use crate::workload::RequestClass;
 use crate::{InstanceId, RequestId, Time};
 
@@ -59,8 +60,14 @@ pub struct SimRequest {
     pub output_len: u32,
     pub generated: u32,
     pub state: ReqState,
-    pub predicted_remaining: Option<f64>,
+    pub predicted_remaining: Option<Prediction>,
     pub iters_since_predict: u32,
+    /// Every estimate issued for this request, folded into the run's
+    /// calibration [`Scorecard`] (and fed back to the predictor) at
+    /// completion — only then is the true remaining length known.
+    ///
+    /// [`Scorecard`]: crate::predictor::Scorecard
+    pub pred_log: Vec<PredSample>,
     pub latency: RequestLatency,
     /// Last time a token was emitted (TPOT gap tracking).
     pub last_token_at: Option<Time>,

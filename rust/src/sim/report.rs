@@ -5,6 +5,7 @@
 
 use crate::coordinator::{ReschedulerStats, ScaleRecord};
 use crate::metrics::{PoolSample, RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
+use crate::predictor::Scorecard;
 use crate::workload::{RequestClass, SloByClass};
 use crate::{RequestId, Time};
 
@@ -23,6 +24,9 @@ pub struct SimReport {
     /// Cross-instance variance of KV token load over time.
     pub load_var: VarianceOverTime,
     pub recorder: TraceRecorder,
+    /// Predictor calibration: signed error + MAE per progress bucket,
+    /// accumulated at request completion (empty under `none`).
+    pub scorecard: Scorecard,
     pub scheduler_stats: ReschedulerStats,
     pub per_instance_tokens: Vec<u64>,
     /// Realized multi-round session chains (request ids in turn order);

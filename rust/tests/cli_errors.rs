@@ -108,6 +108,57 @@ fn validate_bench_accepts_good_and_rejects_bad_json() {
 }
 
 #[test]
+fn unknown_predictor_lists_valid_names() {
+    let (ok, _, err) = run(&["simulate", "--predictor", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown predictor `bogus`"), "{err}");
+    for needle in ["none", "oracle", "binned2", "binned4", "binned6", "llm_native", "debiased"] {
+        assert!(err.contains(needle), "must list candidate `{needle}`: {err}");
+    }
+}
+
+#[test]
+fn predictor_selects_any_registered_name_end_to_end() {
+    // the acceptance claim: `star simulate --predictor <name>` selects any
+    // registered predictor by string (alias spellings included), and the
+    // display name that reaches the output is the registry key
+    for name in ["debiased", "binned4", "4bin"] {
+        let (ok, out, err) = run(&[
+            "simulate",
+            "--predictor",
+            name,
+            "--requests",
+            "20",
+            "--rps",
+            "0.5",
+            "--kv-capacity",
+            "400000",
+            "--verbose",
+        ]);
+        assert!(ok, "simulate --predictor {name} failed: {err}");
+        assert!(out.contains("completed"), "{name}: missing summary: {out}");
+    }
+    // a predicting run reports its calibration scorecard
+    let (ok, out, err) = run(&[
+        "simulate",
+        "--predictor",
+        "llm_native",
+        "--requests",
+        "30",
+        "--rps",
+        "0.5",
+        "--kv-capacity",
+        "400000",
+    ]);
+    assert!(ok, "{err}");
+    assert!(
+        out.contains("predictor calibration"),
+        "scorecard summary missing: {out}"
+    );
+    assert!(out.contains("MAE"), "{out}");
+}
+
+#[test]
 fn unknown_scaling_lists_valid_names() {
     let (ok, _, err) = run(&["simulate", "--scaling", "bogus", "--requests", "1"]);
     assert!(!ok);
@@ -124,6 +175,7 @@ fn list_prints_registered_policies_and_scenarios() {
         "dispatch policies:",
         "reschedule policies:",
         "scaling policies:",
+        "predictors:",
         "scenarios:",
         "round_robin",
         "current_load",
@@ -133,6 +185,14 @@ fn list_prints_registered_policies_and_scenarios() {
         "static",
         "queue_pressure",
         "predictive",
+        // the predictor registry, so a new builtin cannot silently miss
+        // registration (the registry unit test pins the exact list)
+        "binned2",
+        "binned4",
+        "binned6",
+        "llm_native",
+        "debiased",
+        "oracle",
         "bursty_mixed",
         "diurnal_chat",
         "multi_round",

@@ -18,7 +18,7 @@ fn exp_for(scenario: &str, n_decode: usize, scaling: &str) -> ExperimentConfig {
     exp.cluster.n_requests = 100;
     exp.cluster.kv_capacity_tokens = 400_000;
     exp.cluster.seed = 11;
-    exp.predictor = star::config::PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     exp.scenario_name = Some(scenario.to_string());
     exp.scaling_policy = scaling.to_string();
     exp.elastic.scale_interval_s = 2.0;

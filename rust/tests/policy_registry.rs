@@ -51,7 +51,7 @@ fn experiment() -> ExperimentConfig {
     exp.cluster.n_requests = 30;
     exp.cluster.rps = 0.5;
     exp.cluster.kv_capacity_tokens = 400_000;
-    exp.predictor = star::config::PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     exp
 }
 

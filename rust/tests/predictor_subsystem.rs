@@ -1,0 +1,268 @@
+//! Integration tests over the first-class prediction subsystem: the
+//! goodput value of predictor quality (sanity ordering), the calibration
+//! scorecard's fidelity to the injected noise, run determinism per
+//! (seed, predictor), uncertainty-aware quantile aggregates, and
+//! third-party predictor registration end-to-end.
+
+use star::bench::scenarios::ScenarioRegistry;
+use star::config::ExperimentConfig;
+use star::coordinator::{ClusterState, PolicyRegistry, Prediction};
+use star::metrics::TraceEvent;
+use star::predictor::{LengthPredictor, PredictInput, PredictorRegistry};
+use star::sim::{SimParams, SimReport, Simulator};
+
+fn scenario_exp(scenario: &str, predictor: &str, rel_err: f64, seed: u64) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_prefill = 2;
+    exp.cluster.n_decode = 6;
+    exp.cluster.kv_capacity_tokens = 96_000;
+    exp.cluster.max_batch = 48;
+    exp.cluster.rps = 0.45;
+    exp.cluster.seed = seed;
+    exp.rescheduler.enabled = true;
+    exp.predictor = predictor.to_string();
+    exp.predictor_rel_err = rel_err;
+    exp.scenario_name = Some(scenario.to_string());
+    exp
+}
+
+fn run(exp: &ExperimentConfig, n: usize) -> SimReport {
+    let spec = ScenarioRegistry::with_builtins()
+        .build(exp.scenario_name.as_deref().unwrap(), exp)
+        .expect("builtin scenario");
+    let trace = spec.generate(n, exp.cluster.seed);
+    let params = SimParams {
+        exp: exp.clone(),
+        ..Default::default()
+    };
+    Simulator::with_scenario(params, trace, &PolicyRegistry::with_builtins())
+        .expect("builtin construction")
+        .run()
+}
+
+/// Requests meeting their own class SLO (the per-class goodput counter).
+fn good_count(exp: &ExperimentConfig, report: &SimReport) -> usize {
+    let spec = ScenarioRegistry::with_builtins()
+        .build(exp.scenario_name.as_deref().unwrap(), exp)
+        .unwrap();
+    let slos = spec.slos();
+    report
+        .completed
+        .iter()
+        .filter(|r| r.meets_slo(slos.get(r.class)))
+        .count()
+}
+
+#[test]
+fn goodput_orders_oracle_llm_native_none_under_bursty_mixed() {
+    // the sanity ordering the whole subsystem exists for: with
+    // rescheduling on, better length information must not hurt. Summed
+    // over seeds with a small slack (weak ordering — equality is fine
+    // when the cluster is unsaturated).
+    let (mut oracle, mut llm, mut none) = (0usize, 0usize, 0usize);
+    for seed in [3u64, 17, 29] {
+        let e = scenario_exp("bursty_mixed", "oracle", 0.0, seed);
+        oracle += good_count(&e, &run(&e, 150));
+        let e = scenario_exp("bursty_mixed", "llm_native", 0.5, seed);
+        llm += good_count(&e, &run(&e, 150));
+        let e = scenario_exp("bursty_mixed", "none", 0.0, seed);
+        none += good_count(&e, &run(&e, 150));
+    }
+    assert!(oracle > 0 && llm > 0 && none > 0, "{oracle}/{llm}/{none}");
+    assert!(
+        oracle as f64 >= llm as f64 * 0.97,
+        "oracle ({oracle}) should not lose to llm_native ({llm})"
+    );
+    assert!(
+        llm as f64 >= none as f64 * 0.97,
+        "llm_native ({llm}) should not lose to none ({none})"
+    );
+    assert!(
+        oracle as f64 >= none as f64 * 0.99,
+        "oracle ({oracle}) must at least match none ({none})"
+    );
+}
+
+#[test]
+fn scorecard_mae_matches_injected_noise() {
+    // oracle: exact predictions, so the completion-time scorecard must be
+    // exactly zero-error (and populated — the wiring claim)
+    let e = scenario_exp("bursty_mixed", "oracle", 0.0, 7);
+    let report = run(&e, 80);
+    let t = report.scorecard.total();
+    assert!(t.n > 0, "oracle runs must still log predictions");
+    assert_eq!(t.mae(), 0.0, "oracle MAE must be exactly zero");
+    assert_eq!(t.bias(), 0.0, "oracle bias must be exactly zero");
+
+    // llm_native at rel_err 0.5: the measured relative MAE must recover
+    // the injected noise scale. σ_eff shrinks from 0.5 (progress 0) to
+    // 0.175 (late), and E|e^N(0,σ)−1| ≈ 0.14..0.41 over that range, so
+    // the aggregate relative MAE lands well inside (0.06, 0.9).
+    let e = scenario_exp("bursty_mixed", "llm_native", 0.5, 7);
+    let report = run(&e, 80);
+    let t = report.scorecard.total();
+    assert!(t.n > 0);
+    let rel = t.rel_mae();
+    assert!(
+        rel > 0.06 && rel < 0.9,
+        "relative MAE {rel:.3} should reflect the injected rel_err 0.5"
+    );
+    // log-normal noise over-predicts on average (E[e^N] = e^{σ²/2} > 1)
+    assert!(
+        t.bias() > 0.0,
+        "multiplicative log-normal noise must show positive bias, got {}",
+        t.bias()
+    );
+
+    // `none` never logs anything
+    let e = scenario_exp("bursty_mixed", "none", 0.0, 7);
+    let report = run(&e, 40);
+    assert!(report.scorecard.is_empty());
+}
+
+#[test]
+fn debiased_scorecard_bias_is_smaller_than_llm_native() {
+    // the debiased builtin learns from the same completion feedback the
+    // scorecard accumulates; over a run its |bias| must come out below
+    // the raw llm_native predictor's at the same noise level
+    let e = scenario_exp("bursty_mixed", "llm_native", 0.5, 11);
+    let raw = run(&e, 200).scorecard.total();
+    let e = scenario_exp("bursty_mixed", "debiased", 0.5, 11);
+    let deb = run(&e, 200).scorecard.total();
+    assert!(raw.n > 0 && deb.n > 0);
+    assert!(
+        deb.bias().abs() < raw.bias().abs(),
+        "debiasing must shrink the bias: raw {:+.1} vs debiased {:+.1}",
+        raw.bias(),
+        deb.bias()
+    );
+}
+
+#[test]
+fn same_seed_same_predictor_is_deterministic_in_scale_and_migration_traces() {
+    // determinism satellite: same seed + same predictor ⇒ identical
+    // scale-action trace AND identical migration trace (elastic pool +
+    // noisy predictor + rescheduler all driven off the one seed)
+    let mk = || {
+        let mut e = scenario_exp("diurnal_chat", "llm_native", 0.5, 13);
+        e.scaling_policy = "predictive".to_string();
+        e.elastic.scale_interval_s = 2.0;
+        e.elastic.cooldown_s = 2.0;
+        e.elastic.flip_delay_s = 1.0;
+        e.record_traces = true;
+        e
+    };
+    let a = run(&mk(), 120);
+    let b = run(&mk(), 120);
+    assert_eq!(a.scale_actions, b.scale_actions, "scale-action traces differ");
+    let migrations = |r: &SimReport| -> Vec<(f64, u64, usize, usize)> {
+        r.recorder
+            .rows()
+            .iter()
+            .filter_map(|row| match row.event {
+                TraceEvent::Migration {
+                    request, src, dst, ..
+                } => Some((row.t, request, src, dst)),
+                _ => None,
+            })
+            .collect()
+    };
+    assert_eq!(migrations(&a), migrations(&b), "migration traces differ");
+    assert_eq!(a.completed.len(), b.completed.len());
+    assert_eq!(a.duration.to_bits(), b.duration.to_bits());
+}
+
+#[test]
+fn quantile_aggregates_agree_between_state_and_snapshot_views() {
+    // predicted_work_q is the elastic::predictive planning signal: the
+    // O(1) state aggregate and the snapshot recomputation must agree, and
+    // p90 must sit above the mean exactly when estimates carry spread
+    let mut st = ClusterState::new(2, 100_000, 1.0, 0.02, 1e-6);
+    st.admit(0, 1, 1_000, Some(Prediction::new(500.0, 100.0, 0)));
+    st.admit(0, 2, 2_000, Some(Prediction::new(300.0, 50.0, 0)));
+    st.admit(1, 3, 500, Some(Prediction::exact(400.0)));
+    let snap = st.snapshot();
+    for q in [0.5, 0.9, 0.99] {
+        for i in 0..2 {
+            let a = st.view().instance(i).predicted_work_q(q);
+            let b = snap.view().instance(i).predicted_work_q(q);
+            assert!((a - b).abs() < 1e-9, "q={q} instance {i}: {a} vs {b}");
+        }
+    }
+    let mean = st.view().instance(0).predicted_work();
+    let p90 = st.view().instance(0).predicted_work_q(0.9);
+    assert!((mean - 3_800.0).abs() < 1e-9);
+    // z(0.9) ≈ 1.2816 over Σσ = 150
+    assert!((p90 - (3_800.0 + 1.2815515655446004 * 150.0)).abs() < 1e-6);
+    // zero-spread estimates: every quantile equals the mean
+    let exact = st.view().instance(1).predicted_work_q(0.99);
+    assert!((exact - st.view().instance(1).predicted_work()).abs() < 1e-12);
+    // releases keep the sigma aggregate coherent (consistency_diff covers
+    // the mean AND sigma sums)
+    st.release(1);
+    assert!(st.consistency_diff(&st.snapshot()).is_none());
+}
+
+#[test]
+fn custom_predictor_registers_and_runs_end_to_end() {
+    // the PredictorRegistry mirror of tests/policy_registry.rs: a
+    // third-party predictor selected purely by string through
+    // Simulator::with_registries
+    struct Flat;
+    impl LengthPredictor for Flat {
+        fn predict(&mut self, input: &PredictInput) -> Option<Prediction> {
+            Some(Prediction::new(64.0, 16.0, input.generated as u64))
+        }
+        fn name(&self) -> String {
+            "flat64".into()
+        }
+    }
+    let mut predictors = PredictorRegistry::with_builtins();
+    predictors.register("flat64", |_| Ok(Box::new(Flat)));
+
+    let mut exp = scenario_exp("bursty_mixed", "flat64", 0.0, 5);
+    exp.cluster.n_decode = 3;
+    let spec = ScenarioRegistry::with_builtins()
+        .build("bursty_mixed", &exp)
+        .unwrap();
+    let trace = spec.generate(40, exp.cluster.seed);
+    let params = SimParams {
+        exp,
+        validate_state: true,
+        ..Default::default()
+    };
+    let report = Simulator::with_registries(
+        params,
+        trace,
+        &PolicyRegistry::with_builtins(),
+        &predictors,
+    )
+    .expect("custom predictor must build by name")
+    .run();
+    assert_eq!(report.completed.len() + report.n_failed, 40);
+    assert!(
+        report.scorecard.total().n > 0,
+        "custom predictions flow into the scorecard too"
+    );
+
+    // an unregistered name surfaces the registry error, not a fallback
+    let mut exp = scenario_exp("bursty_mixed", "not_registered", 0.0, 5);
+    exp.cluster.n_decode = 3;
+    let spec = ScenarioRegistry::with_builtins()
+        .build("bursty_mixed", &exp)
+        .unwrap();
+    let trace = spec.generate(4, exp.cluster.seed);
+    let err = Simulator::with_scenario(
+        SimParams {
+            exp,
+            ..Default::default()
+        },
+        trace,
+        &PolicyRegistry::with_builtins(),
+    )
+    .err()
+    .expect("unknown predictor must fail construction")
+    .to_string();
+    assert!(err.contains("unknown predictor `not_registered`"), "{err}");
+    assert!(err.contains("llm_native"), "{err}");
+}

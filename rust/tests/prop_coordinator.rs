@@ -4,7 +4,7 @@
 use star::config::ReschedulerConfig;
 use star::coordinator::{
     ClusterSnapshot, ClusterState, IncomingRequest, InstanceView, PolicyConfig, PolicyRegistry,
-    RequestView, Rescheduler,
+    Prediction, RequestView, Rescheduler,
 };
 use star::costmodel::MigrationCostModel;
 use star::kvcache::KvCacheManager;
@@ -23,7 +23,7 @@ fn random_snapshot(g: &mut Gen) -> ClusterSnapshot {
                         id: next_id,
                         tokens: g.u64(1, 8_000),
                         predicted_remaining: if g.bool() {
-                            Some(g.f64(0.0, 30_000.0))
+                            Some(Prediction::exact(g.f64(0.0, 30_000.0)))
                         } else {
                             None
                         },
@@ -153,7 +153,7 @@ fn balanced_clusters_are_left_alone() {
                 requests: vec![RequestView {
                     id: id as u64 + 1,
                     tokens,
-                    predicted_remaining: Some(rem),
+                    predicted_remaining: Some(Prediction::exact(rem)),
                     migrating: false,
                 }],
                 kv_capacity_tokens: 1_000_000,
@@ -185,7 +185,7 @@ fn dispatcher_always_returns_valid_instance() {
             let incoming = IncomingRequest {
                 id: req_id,
                 tokens: g.u64(1, 2_000),
-                predicted_remaining: Some(g.f64(0.0, 1_000.0)),
+                predicted_remaining: Some(Prediction::exact(g.f64(0.0, 1_000.0))),
             };
             let id = d.choose(&snap.view(), &incoming);
             prop_assert(
@@ -254,7 +254,7 @@ fn cluster_state_reservation_accounting_under_concurrent_migrations() {
                     let di = g.usize(0, n_inst - 1);
                     let tokens = g.u64(1, 4_000);
                     let pred = g.bool().then(|| g.f64(0.0, 10_000.0));
-                    st.admit(di, next_id, tokens, pred);
+                    st.admit(di, next_id, tokens, pred.map(Prediction::exact));
                     active.push((next_id, di, tokens, pred));
                 }
                 2 => {
@@ -268,7 +268,7 @@ fn cluster_state_reservation_accounting_under_concurrent_migrations() {
                     if !active.is_empty() {
                         let i = g.usize(0, active.len() - 1);
                         let pred = g.bool().then(|| g.f64(0.0, 10_000.0));
-                        st.set_prediction(active[i].0, pred);
+                        st.set_prediction(active[i].0, pred.map(Prediction::exact));
                         active[i].3 = pred;
                     }
                 }
@@ -293,7 +293,7 @@ fn cluster_state_reservation_accounting_under_concurrent_migrations() {
                         let (id, dst, tokens, pred) = inflight.swap_remove(i);
                         st.finish_migration(dst, tokens);
                         // delivery re-admits on the reserved destination
-                        st.admit(dst, id, tokens, pred);
+                        st.admit(dst, id, tokens, pred.map(Prediction::exact));
                         active.push((id, dst, tokens, pred));
                     } else if !active.is_empty() {
                         let i = g.usize(0, active.len() - 1);

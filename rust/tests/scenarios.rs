@@ -3,7 +3,7 @@
 //! simulator, and per-class SLO accounting (ISSUE 3 satellite coverage).
 
 use star::bench::scenarios::{resolve_scenario, run_scenario_trace, ScenarioRegistry};
-use star::config::{ExperimentConfig, PredictorKind};
+use star::config::ExperimentConfig;
 use star::prng::Pcg64;
 use star::sim::{SimParams, Simulator};
 use star::workload::{ArrivalProcess, RequestClass};
@@ -14,7 +14,7 @@ fn base_exp(rps: f64, seed: u64) -> ExperimentConfig {
     exp.cluster.rps = rps;
     exp.cluster.seed = seed;
     exp.cluster.kv_capacity_tokens = 400_000; // roomy: nothing fails
-    exp.predictor = PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     exp
 }
 

@@ -5,7 +5,6 @@
 
 use std::sync::Arc;
 
-use star::config::PredictorKind;
 use star::runtime::{artifacts_dir, StarRuntime};
 use star::serve::{LiveRequest, ServeParams, Server};
 
@@ -40,7 +39,7 @@ fn serves_forced_length_requests_to_completion() {
     params.exp.cluster.max_batch = 8;
     params.exp.rescheduler.enabled = true;
     params.exp.rescheduler.interval_s = 0.2;
-    params.exp.predictor = PredictorKind::Oracle;
+    params.exp.predictor = "oracle".to_string();
     params.max_wall_s = 120.0;
     let reqs: Vec<LiveRequest> = (0..6)
         .map(|i| tiny_request(i, 0.05 * i as f64, 20 + 10 * (i as u32 % 3), (i % 8) as u8))
@@ -67,7 +66,7 @@ fn live_migration_preserves_completion() {
     params.exp.rescheduler.enabled = true;
     params.exp.rescheduler.interval_s = 0.15;
     params.exp.rescheduler.theta = 0.05; // aggressive: force migrations
-    params.exp.predictor = PredictorKind::Oracle;
+    params.exp.predictor = "oracle".to_string();
     params.max_wall_s = 180.0;
     // skew: one very long request plus a crowd of short ones arriving
     // together so one instance overloads
@@ -96,7 +95,7 @@ fn session_follow_up_turns_replay_on_live_path() {
     params.exp.cluster.kv_capacity_tokens = 3_000;
     params.exp.cluster.max_batch = 8;
     params.exp.rescheduler.enabled = false;
-    params.exp.predictor = PredictorKind::Oracle;
+    params.exp.predictor = "oracle".to_string();
     params.max_wall_s = 120.0;
     // request 0 opens a 2-turn session: the follow-up arrives only after
     // turn 1 completes (plus a short think time) with a grown prompt
@@ -147,7 +146,7 @@ fn llm_native_predictor_runs_on_live_path() {
     params.exp.cluster.kv_capacity_tokens = 3_000;
     params.exp.cluster.max_batch = 8;
     params.exp.rescheduler.enabled = true;
-    params.exp.predictor = PredictorKind::LlmNative;
+    params.exp.predictor = "llm_native".to_string();
     params.exp.rescheduler.predict_every_iters = 5;
     params.max_wall_s = 120.0;
     // EOS-driven generation (no forced length): the real serving mode
@@ -189,7 +188,7 @@ fn elastic_scaling_serves_to_completion() {
     params.exp.cluster.kv_capacity_tokens = 3_000;
     params.exp.cluster.max_batch = 8;
     params.exp.rescheduler.enabled = false;
-    params.exp.predictor = PredictorKind::Oracle;
+    params.exp.predictor = "oracle".to_string();
     params.exp.scaling_policy = "queue_pressure".to_string();
     params.exp.elastic.scale_interval_s = 0.25;
     params.exp.elastic.cooldown_s = 0.5;

@@ -3,7 +3,6 @@
 //! benches then quantify).
 
 use star::bench::scenarios::{paper_scenarios, run_scenario, small_cluster, trace_for};
-use star::config::PredictorKind;
 use star::metrics::Slo;
 use star::prop::{prop_assert, property};
 use star::sim::{SimParams, Simulator, StateMode};
@@ -99,7 +98,7 @@ fn migrated_requests_complete_correctly() {
     let mut exp = small_cluster(Dataset::ShareGpt, 0.2, 77);
     exp.rescheduler.enabled = true;
     exp.rescheduler.interval_s = 0.4;
-    exp.predictor = PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     let trace = trace_for(&exp, 120);
     let report = Simulator::new(
         SimParams {
@@ -124,14 +123,9 @@ fn migrated_requests_complete_correctly() {
 #[test]
 fn binned_predictors_interpolate_between_none_and_oracle() {
     let mut results = Vec::new();
-    for kind in [
-        PredictorKind::None,
-        PredictorKind::Binned(2),
-        PredictorKind::Binned(6),
-        PredictorKind::Oracle,
-    ] {
+    for kind in ["none", "binned2", "binned6", "oracle"] {
         let mut exp = small_cluster(Dataset::ShareGpt, 0.13, 21);
-        exp.predictor = kind;
+        exp.predictor = kind.to_string();
         exp.rescheduler.enabled = true;
         let trace = trace_for(&exp, 150);
         let report = Simulator::new(
@@ -163,7 +157,7 @@ fn memory_pressure_rescheduler_cuts_ooms_under_tight_memory() {
     let mk = |reschedule: &str, enabled: bool, seed: u64| {
         let mut exp = small_cluster(Dataset::ShareGpt, 1.2, seed);
         exp.cluster.kv_capacity_tokens = 30_000; // tight
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         exp.rescheduler.enabled = enabled;
         exp.rescheduler.interval_s = 0.5;
         exp.reschedule_policy = reschedule.to_string();
@@ -207,7 +201,7 @@ fn all_requests_terminate_under_rescheduling_and_oom() {
     for seed in [1u64, 7, 23] {
         let mut exp = small_cluster(Dataset::ShareGpt, 1.5, seed);
         exp.cluster.kv_capacity_tokens = 35_000;
-        exp.predictor = PredictorKind::Oracle;
+        exp.predictor = "oracle".to_string();
         exp.rescheduler.enabled = true;
         exp.rescheduler.interval_s = 0.5;
         let trace = trace_for(&exp, 80);
@@ -241,7 +235,7 @@ fn incremental_state_matches_rebuild_under_full_stress() {
     // RebuildPerDecision compatibility mode takes the identical trajectory
     let mut exp = small_cluster(Dataset::ShareGpt, 1.2, 5);
     exp.cluster.kv_capacity_tokens = 40_000;
-    exp.predictor = PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     exp.rescheduler.enabled = true;
     exp.rescheduler.interval_s = 0.5;
     let trace = trace_for(&exp, 70);
@@ -266,7 +260,7 @@ fn scheduler_decision_time_stays_bounded() {
     let mut exp = small_cluster(Dataset::ShareGpt, 2.0, 5);
     exp.cluster.n_decode = 64;
     exp.cluster.n_prefill = 8;
-    exp.predictor = PredictorKind::Oracle;
+    exp.predictor = "oracle".to_string();
     let trace = TraceGen::new(Dataset::ShareGpt, 2.0).generate_for(60.0, 5);
     let report = Simulator::new(
         SimParams {
