@@ -8,7 +8,10 @@ mod parser;
 mod types;
 
 pub use parser::{parse_toml, Value};
-pub use types::{ClusterConfig, ElasticConfig, ExperimentConfig, PredictorKind, ReschedulerConfig};
+pub use types::{
+    ClusterConfig, ElasticConfig, ExperimentConfig, KvCacheConfig, PredictorKind,
+    ReschedulerConfig,
+};
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -185,6 +185,74 @@ impl ElasticConfig {
     }
 }
 
+/// Prefix-cache parameters (`[kvcache]` table; `kvcache::PrefixCache`).
+#[derive(Clone, Debug)]
+pub struct KvCacheConfig {
+    /// Retention policy, by registry name (config key `kvcache.policy`,
+    /// CLI `--cache`), resolved against `kvcache::CachePolicyRegistry`.
+    /// `"none"` — the default — turns the subsystem off entirely: no
+    /// lookups, no insertions, no events, traces bit-for-bit identical to
+    /// pre-cache builds.
+    pub policy: String,
+    /// Per-instance budget for idle cached prefixes, in KV tokens.
+    pub budget_tokens: u64,
+    /// Lifetime of a cached prefix for TTL-based policies, seconds.
+    pub ttl_s: f64,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig {
+            policy: "none".to_string(),
+            budget_tokens: 200_000,
+            ttl_s: 60.0,
+        }
+    }
+}
+
+impl KvCacheConfig {
+    /// Is a real (non-`none`) policy selected? (Alias-aware: `off` is the
+    /// `none` builtin.)
+    pub fn enabled(&self) -> bool {
+        !matches!(
+            self.policy.to_ascii_lowercase().replace('-', "_").as_str(),
+            "none" | "off"
+        )
+    }
+
+    /// `tick_s` is the scheduler interval: TTL sweeps run on the
+    /// scheduler tick, so a TTL shorter than one tick could never be
+    /// enforced and is rejected rather than silently rounded up.
+    pub fn validate(&self, tick_s: f64) -> Result<()> {
+        let reg = crate::kvcache::CachePolicyRegistry::with_builtins();
+        if !reg.has(&self.policy) {
+            return Err(Error::config(format!(
+                "unknown cache policy `{}` (known: {})",
+                self.policy,
+                reg.names().join("|")
+            )));
+        }
+        if !self.enabled() {
+            return Ok(());
+        }
+        if self.budget_tokens == 0 {
+            return Err(Error::config(
+                "kvcache.budget_tokens must be > 0 (a zero budget can cache nothing; \
+                 use policy = \"none\" to disable the cache)",
+            ));
+        }
+        if self.ttl_s < tick_s {
+            return Err(Error::config(format!(
+                "kvcache.ttl_s ({}) must be >= the scheduler tick \
+                 (rescheduler.interval_s = {}): a TTL shorter than one scheduler \
+                 tick can never be enforced",
+                self.ttl_s, tick_s
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Cluster + workload shape for one experiment run.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -248,6 +316,8 @@ pub struct ExperimentConfig {
     pub scaling_policy: String,
     /// Elastic-pool mechanics (`[elastic]` table).
     pub elastic: ElasticConfig,
+    /// Prefix-cache subsystem (`[kvcache]` table, CLI `--cache`).
+    pub kvcache: KvCacheConfig,
     /// Policy-specific numeric knobs: every numeric `policy.*` config key
     /// except the two names above, with the `policy.` prefix stripped
     /// (e.g. `policy.slo_aware.mem_weight = 2.0`).
@@ -278,6 +348,7 @@ impl Default for ExperimentConfig {
             reschedule_policy: "star".to_string(),
             scaling_policy: "static".to_string(),
             elastic: ElasticConfig::default(),
+            kvcache: KvCacheConfig::default(),
             policy_params: BTreeMap::new(),
             scenario_name: None,
             scenario: None,
@@ -378,6 +449,22 @@ impl ExperimentConfig {
             max_total: max_total as usize,
             cooldown_s: cfg.f64_or("elastic.cooldown_s", eld.cooldown_s),
         };
+        // the budget is range-checked as i64 BEFORE the u64 cast — same
+        // rationale as the elastic counts: a negative budget would wrap
+        // to ~2^64 and read as "unbounded" instead of erroring
+        let kd = KvCacheConfig::default();
+        let budget = cfg.i64_or("kvcache.budget_tokens", kd.budget_tokens as i64);
+        if budget < 1 {
+            return Err(Error::config(
+                "kvcache.budget_tokens must be >= 1 (a zero or negative budget can \
+                 cache nothing; use kvcache.policy = \"none\" to disable the cache)",
+            ));
+        }
+        let kvcache = KvCacheConfig {
+            policy: cfg.str_or("kvcache.policy", &kd.policy).to_string(),
+            budget_tokens: budget as u64,
+            ttl_s: cfg.f64_or("kvcache.ttl_s", kd.ttl_s),
+        };
         Ok(ExperimentConfig {
             cluster,
             rescheduler,
@@ -393,6 +480,7 @@ impl ExperimentConfig {
                 .to_string(),
             scaling_policy: cfg.str_or("policy.scaling", &ed.scaling_policy).to_string(),
             elastic,
+            kvcache,
             policy_params,
             scenario_name,
             scenario,
@@ -496,6 +584,7 @@ impl ExperimentConfig {
             )));
         }
         self.elastic.validate()?;
+        self.kvcache.validate(self.rescheduler.interval_s)?;
         // knob keys are `<policy>.<knob>`; a typoed or aliased policy
         // prefix would otherwise be silently ignored and the default knob
         // value used — in a reproduction codebase the knob values ARE the
@@ -935,6 +1024,67 @@ mod tests {
         exp.policy_params
             .insert("predictive.kv_hi".to_string(), 0.9);
         exp.validate().unwrap();
+    }
+
+    #[test]
+    fn kvcache_table_parses_and_validates() {
+        let cfg = Config::from_str(
+            "[kvcache]\npolicy = \"predictive\"\nbudget_tokens = 50000\nttl_s = 30.0\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.kvcache.policy, "predictive");
+        assert_eq!(exp.kvcache.budget_tokens, 50_000);
+        assert!((exp.kvcache.ttl_s - 30.0).abs() < 1e-12);
+        assert!(exp.kvcache.enabled());
+        exp.validate().unwrap();
+        // defaults: cache off, sane budget/TTL
+        let exp = ExperimentConfig::from_config(&Config::from_str("").unwrap()).unwrap();
+        assert_eq!(exp.kvcache.policy, "none");
+        assert!(!exp.kvcache.enabled());
+        exp.validate().unwrap();
+        // the `off` alias counts as disabled too
+        let mut exp = ExperimentConfig::default();
+        exp.kvcache.policy = "off".to_string();
+        assert!(!exp.kvcache.enabled());
+        exp.validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_kvcache_configs_are_rejected() {
+        // zero/negative budgets fail at parse time, before the u64 cast
+        for bad in [
+            "[kvcache]\nbudget_tokens = 0\n",
+            "[kvcache]\nbudget_tokens = -5\n",
+        ] {
+            let cfg = Config::from_str(bad).unwrap();
+            let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains("kvcache.budget_tokens"), "`{bad}`: {err}");
+        }
+        // unknown policy names fail validation WITH the registry list
+        let mut exp = ExperimentConfig::default();
+        exp.kvcache.policy = "bogus".to_string();
+        let err = exp.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown cache policy `bogus`"), "{err}");
+        assert!(err.contains("lru"), "{err}");
+        assert!(err.contains("predictive"), "{err}");
+        // a TTL shorter than one scheduler tick can never be enforced
+        let mut exp = ExperimentConfig::default();
+        exp.kvcache.policy = "ttl".to_string();
+        exp.kvcache.ttl_s = 0.5;
+        exp.rescheduler.interval_s = 1.0;
+        let err = exp.validate().unwrap_err().to_string();
+        assert!(err.contains("scheduler tick"), "{err}");
+        // ...but with the cache off the same TTL is fine (inert subsystem
+        // must not constrain unrelated knobs)
+        let mut exp = ExperimentConfig::default();
+        exp.kvcache.ttl_s = 0.5;
+        exp.validate().unwrap();
+        // zero budget on a hand-built enabled config is caught too
+        let mut exp = ExperimentConfig::default();
+        exp.kvcache.policy = "lru".to_string();
+        exp.kvcache.budget_tokens = 0;
+        assert!(exp.validate().is_err());
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub struct InstanceStats {
     sigma_sum: f64,
     /// Tokens promised to migrations in flight toward this instance.
     inbound_reserved_tokens: u64,
+    /// Idle prefix-cache KV resident on this instance (completed session
+    /// turns retained for reuse, see `kvcache::PrefixCache`). Counted in
+    /// [`Self::effective_used`] so admission, memory-pressure rescheduling,
+    /// and the elastic scaler see cached bytes competing honestly with
+    /// live requests. Always 0 under the `none` cache policy.
+    cached_tokens: u64,
     ewma_iter_ms: f64,
     iters: u64,
     /// Elastic-pool lifecycle; only `Active` instances accept dispatches
@@ -70,6 +76,7 @@ impl InstanceStats {
             predicted_sum: 0.0,
             sigma_sum: 0.0,
             inbound_reserved_tokens: 0,
+            cached_tokens: 0,
             ewma_iter_ms: 0.0,
             iters: 0,
             lifecycle: Lifecycle::Active,
@@ -98,8 +105,13 @@ impl InstanceStats {
     }
 
     #[inline]
+    pub fn cached_tokens(&self) -> u64 {
+        self.cached_tokens
+    }
+
+    #[inline]
     pub fn effective_used(&self) -> u64 {
-        self.active_tokens + self.inbound_reserved_tokens
+        self.active_tokens + self.inbound_reserved_tokens + self.cached_tokens
     }
 
     #[inline]
@@ -300,6 +312,25 @@ impl ClusterState {
         inst.inbound_reserved_tokens = inst.inbound_reserved_tokens.saturating_sub(tokens);
     }
 
+    /// A completed-turn prefix was retained on `di` (its KV blocks stay
+    /// resident while the session is away). Mirrors
+    /// `kvcache::PrefixCache` insertions.
+    pub fn add_cached(&mut self, di: usize, tokens: u64) {
+        self.instances[di].cached_tokens += tokens;
+    }
+
+    /// A retained prefix left `di` (hit, eviction, expiry, or drain
+    /// flush). Mirrors `kvcache::PrefixCache` removals.
+    pub fn sub_cached(&mut self, di: usize, tokens: u64) {
+        let inst = &mut self.instances[di];
+        debug_assert!(
+            inst.cached_tokens >= tokens,
+            "releasing more cached tokens than held on instance {}",
+            inst.id
+        );
+        inst.cached_tokens = inst.cached_tokens.saturating_sub(tokens);
+    }
+
     /// Simulator-style migration start: the request leaves the source
     /// batch immediately and its current KV footprint is reserved on the
     /// destination. Returns the reserved token count.
@@ -467,6 +498,7 @@ impl ClusterState {
                     requests: s.requests.clone(),
                     kv_capacity_tokens: s.kv_capacity_tokens,
                     inbound_reserved_tokens: s.inbound_reserved_tokens,
+                    cached_tokens: s.cached_tokens,
                     lifecycle: s.lifecycle,
                 })
                 .collect(),
@@ -501,6 +533,12 @@ impl ClusterState {
                 return Some(format!(
                     "instance {}: inbound reserved {} vs {}",
                     s.id, s.inbound_reserved_tokens, r.inbound_reserved_tokens
+                ));
+            }
+            if s.cached_tokens != r.cached_tokens {
+                return Some(format!(
+                    "instance {}: cached tokens {} vs {}",
+                    s.id, s.cached_tokens, r.cached_tokens
                 ));
             }
             if s.lifecycle != r.lifecycle {
@@ -699,6 +737,15 @@ impl<'a> InstanceRef<'a> {
         }
     }
 
+    /// Idle prefix-cache KV resident on this instance (0 with the cache
+    /// off); already included in [`Self::effective_used`].
+    pub fn cached_tokens(&self) -> u64 {
+        match self.0 {
+            RefSrc::State(s) => s.cached_tokens,
+            RefSrc::Snap(s) => s.cached_tokens,
+        }
+    }
+
     pub fn token_load(&self) -> u64 {
         match self.0 {
             RefSrc::State(s) => s.token_load(),
@@ -883,6 +930,27 @@ mod tests {
         }
         assert_eq!(v.n_instances(), sv.n_instances());
         assert!((v.tokens_per_interval() - sv.tokens_per_interval()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cached_tokens_compete_through_effective_used() {
+        let mut st = state();
+        st.admit(0, 1, 100, None);
+        st.add_cached(0, 4_000);
+        assert_eq!(st.stats(0).cached_tokens(), 4_000);
+        assert_eq!(st.stats(0).effective_used(), 4_100);
+        assert_eq!(st.stats(0).free_tokens(), 10_000 - 4_100);
+        // the snapshot path carries the same aggregate
+        let snap = st.snapshot();
+        assert!(st.consistency_diff(&snap).is_none());
+        assert_eq!(snap.view().instance(0).cached_tokens(), 4_000);
+        assert_eq!(snap.view().instance(0).effective_used(), 4_100);
+        // drift in the mirrored total is caught
+        let mut bad = st.snapshot();
+        bad.instances[0].cached_tokens = 0;
+        assert!(st.consistency_diff(&bad).is_some());
+        st.sub_cached(0, 4_000);
+        assert_eq!(st.stats(0).effective_used(), 100);
     }
 
     #[test]

@@ -212,6 +212,7 @@ mod tests {
                 id: 9,
                 tokens: 10,
                 predicted_remaining: None,
+                preferred_instance: None,
             },
         );
         assert_eq!(id, 1, "current_load picks the lighter instance");

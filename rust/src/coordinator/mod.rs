@@ -81,6 +81,10 @@ pub struct InstanceView {
     /// Tokens reserved by migrations already in flight toward this
     /// instance (prevents racing two migrations into the same headroom).
     pub inbound_reserved_tokens: u64,
+    /// Idle prefix-cache KV retained on this instance for session reuse
+    /// (`kvcache::PrefixCache`); 0 with the cache off. Included in
+    /// [`Self::effective_used`] so cached bytes compete with admissions.
+    pub cached_tokens: u64,
     /// Elastic-pool lifecycle; hand-built snapshots default to `Active`
     /// (a frozen pool is all-Active). Non-Active instances accept no
     /// dispatches and no migration arrivals.
@@ -94,7 +98,7 @@ impl InstanceView {
     }
 
     pub fn effective_used(&self) -> u64 {
-        self.token_load() + self.inbound_reserved_tokens
+        self.token_load() + self.inbound_reserved_tokens + self.cached_tokens
     }
 
     pub fn free_tokens(&self) -> u64 {
@@ -153,6 +157,7 @@ pub(crate) mod testutil {
             requests: reqs,
             kv_capacity_tokens: cap,
             inbound_reserved_tokens: 0,
+            cached_tokens: 0,
             lifecycle: Lifecycle::default(),
         }
     }

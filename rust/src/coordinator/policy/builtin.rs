@@ -3,7 +3,7 @@
 //! plus the no-op rescheduler used as the "vLLM" baseline.
 
 use super::{DispatchPolicy, IncomingRequest, ReschedulePolicy};
-use crate::coordinator::cluster_state::{ClusterView, InstanceRef};
+use crate::coordinator::cluster_state::{admission_watermark, ClusterView, InstanceRef};
 use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
 use crate::InstanceId;
 
@@ -130,6 +130,42 @@ impl DispatchPolicy for PredictedLoadDispatch {
     }
 }
 
+/// Prefix-cache-aware hand-off: a follow-up turn whose session prefix is
+/// retained on some instance ([`IncomingRequest::preferred_instance`])
+/// goes back to that instance, so its prefill covers only the new suffix
+/// and no KV moves over the fabric. The preference is honored only while
+/// the holder is lifecycle-Active and the request clears its admission
+/// watermark; otherwise — and for every request without a cached prefix —
+/// the policy degrades to `current_load`'s effective-used argmin (the
+/// driver then runs the transfer-vs-recompute costmodel comparison for
+/// whatever instance wins).
+#[derive(Clone, Debug, Default)]
+pub struct SessionAffinityDispatch;
+
+impl DispatchPolicy for SessionAffinityDispatch {
+    fn name(&self) -> &str {
+        "session_affinity"
+    }
+
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
+        if let Some(pi) = incoming.preferred_instance {
+            if pi < view.n_instances() {
+                let iv = view.instance(pi);
+                // the cached prefix is already inside effective_used, so
+                // the watermark check double-counts it against the suffix;
+                // that is the conservative direction (never admit past it)
+                if iv.is_schedulable()
+                    && iv.effective_used() + incoming.tokens
+                        <= admission_watermark(iv.kv_capacity_tokens())
+                {
+                    return iv.id();
+                }
+            }
+        }
+        argmin_with_fallback(view, incoming.tokens, |iv| iv.effective_used() as f64)
+    }
+}
+
 /// Never migrates: the dispatch-only "vLLM" baseline, and the policy the
 /// control loop runs when rescheduling is disabled by config.
 #[derive(Clone, Debug, Default)]
@@ -169,6 +205,14 @@ mod tests {
             id: 0,
             tokens,
             predicted_remaining: pred.map(crate::predictor::Prediction::exact),
+            preferred_instance: None,
+        }
+    }
+
+    fn incoming_at(tokens: u64, preferred: InstanceId) -> IncomingRequest {
+        IncomingRequest {
+            preferred_instance: Some(preferred),
+            ..incoming(tokens, None)
         }
     }
 
@@ -304,6 +348,42 @@ mod tests {
         let mut cur = CurrentLoadDispatch;
         let id = cur.choose(&snap.view(), &incoming(500, None));
         assert!(id == 0 || id == 2, "must not fall back to a retired slot");
+    }
+
+    #[test]
+    fn session_affinity_honors_preference_with_headroom() {
+        // instance 2 is busier than 1 but holds the session's prefix
+        let snap = snap3([500, 100, 3_000]);
+        let mut d = SessionAffinityDispatch;
+        assert_eq!(d.choose(&snap.view(), &incoming_at(50, 2)), 2);
+        // no preference: degrades to the current-load argmin
+        assert_eq!(d.choose(&snap.view(), &incoming(50, None)), 1);
+    }
+
+    #[test]
+    fn session_affinity_falls_back_when_holder_cannot_take_it() {
+        use crate::coordinator::Lifecycle;
+        // holder past the admission watermark (9000 of 10000)
+        let snap = snap3([500, 100, 8_990]);
+        let mut d = SessionAffinityDispatch;
+        assert_eq!(d.choose(&snap.view(), &incoming_at(50, 2)), 1);
+        // holder draining
+        let mut snap = snap3([500, 100, 300]);
+        snap.instances[2].lifecycle = Lifecycle::Draining;
+        assert_eq!(d.choose(&snap.view(), &incoming_at(50, 2)), 1);
+        // holder id out of range (stale preference after pool shrink)
+        let snap = snap3([500, 100, 300]);
+        assert_eq!(d.choose(&snap.view(), &incoming_at(50, 7)), 1);
+    }
+
+    #[test]
+    fn session_affinity_counts_cached_bytes_against_the_watermark() {
+        // idle cached KV pushes the holder past the watermark exactly like
+        // active load would
+        let mut snap = snap3([500, 100, 300]);
+        snap.instances[2].cached_tokens = 8_700;
+        let mut d = SessionAffinityDispatch;
+        assert_eq!(d.choose(&snap.view(), &incoming_at(50, 2)), 1);
     }
 
     #[test]

@@ -25,7 +25,10 @@ mod mem_pressure;
 mod registry;
 mod slo;
 
-pub use builtin::{CurrentLoadDispatch, NoopReschedule, PredictedLoadDispatch, RoundRobinDispatch};
+pub use builtin::{
+    CurrentLoadDispatch, NoopReschedule, PredictedLoadDispatch, RoundRobinDispatch,
+    SessionAffinityDispatch,
+};
 pub use mem_pressure::MemoryPressureRescheduler;
 pub use registry::PolicyRegistry;
 pub use slo::SloAwareDispatch;
@@ -49,6 +52,11 @@ pub struct IncomingRequest {
     /// Predicted output length from the prefill-time prediction
     /// (None when prediction is off or not yet available).
     pub predicted_remaining: Option<Prediction>,
+    /// Instance holding this request's cached session prefix, if any
+    /// (`kvcache::PrefixCache` hit). A preference, not a constraint:
+    /// `session_affinity` honors it while the holder is schedulable and
+    /// has headroom; every other policy ignores it.
+    pub preferred_instance: Option<InstanceId>,
 }
 
 /// Prefill→decode placement strategy. Implementations may keep internal

@@ -10,7 +10,8 @@ use std::collections::BTreeMap;
 
 use super::{
     CurrentLoadDispatch, DispatchPolicy, MemoryPressureRescheduler, NoopReschedule,
-    PolicyConfig, PredictedLoadDispatch, ReschedulePolicy, RoundRobinDispatch, SloAwareDispatch,
+    PolicyConfig, PredictedLoadDispatch, ReschedulePolicy, RoundRobinDispatch,
+    SessionAffinityDispatch, SloAwareDispatch,
 };
 use crate::coordinator::elastic::{
     PredictiveScaling, QueuePressureScaling, ScalingPolicy, StaticScaling,
@@ -47,7 +48,8 @@ impl PolicyRegistry {
     /// The built-in policy set:
     ///
     /// dispatch — `round_robin` (`rr`), `current_load` (`load`),
-    /// `predicted_load` (`predicted`), `slo_aware` (`slo`);
+    /// `predicted_load` (`predicted`), `slo_aware` (`slo`),
+    /// `session_affinity` (`affinity`);
     /// reschedule — `star`, `memory_pressure` (`mem_pressure`),
     /// `none` (`noop`, `off`);
     /// scaling — `static` (`fixed`), `queue_pressure` (`qp`),
@@ -60,6 +62,7 @@ impl PolicyRegistry {
         r.register_dispatch("slo_aware", |cfg| {
             Ok(Box::new(SloAwareDispatch::from_config(cfg)))
         });
+        r.register_dispatch("session_affinity", |_| Ok(Box::new(SessionAffinityDispatch)));
         r.register_reschedule("star", |cfg| Ok(Box::new(Rescheduler::from_config(cfg))));
         r.register_reschedule("memory_pressure", |cfg| {
             Ok(Box::new(MemoryPressureRescheduler::from_config(cfg)))
@@ -78,6 +81,7 @@ impl PolicyRegistry {
         r.alias("load", "current_load");
         r.alias("predicted", "predicted_load");
         r.alias("slo", "slo_aware");
+        r.alias("affinity", "session_affinity");
         r.alias("mem_pressure", "memory_pressure");
         r.alias("noop", "none");
         r.alias("off", "none");
@@ -211,12 +215,14 @@ mod tests {
         let reg = PolicyRegistry::with_builtins();
         let cfg = PolicyConfig::default();
         for name in ["round_robin", "rr", "Round-Robin", "current_load", "load",
-                     "predicted_load", "predicted", "slo_aware", "slo"] {
+                     "predicted_load", "predicted", "slo_aware", "slo",
+                     "session_affinity", "affinity"] {
             let mut p = reg.build_dispatch(name, &cfg).unwrap();
             let id = p.choose(&snap().view(), &IncomingRequest {
                 id: 0,
                 tokens: 10,
                 predicted_remaining: None,
+                preferred_instance: None,
             });
             assert!(id < 2, "{name} returned bogus instance");
         }
@@ -287,6 +293,7 @@ mod tests {
             id: 9,
             tokens: 1,
             predicted_remaining: None,
+            preferred_instance: None,
         });
         assert_eq!(id, 1);
         assert!(reg.has_dispatch("pin"));
@@ -302,6 +309,7 @@ mod tests {
                 id: 1,
                 tokens: 1,
                 predicted_remaining: None,
+                preferred_instance: None,
             },
         );
         assert_eq!(id, 0, "direct registration must shadow the alias");

@@ -94,6 +94,7 @@ mod tests {
             id: 0,
             tokens,
             predicted_remaining: pred.map(crate::predictor::Prediction::exact),
+            preferred_instance: None,
         }
     }
 

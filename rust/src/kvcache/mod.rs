@@ -1,274 +1,44 @@
-//! Paged KV-cache manager (PagedAttention-style block allocator).
+//! KV-cache subsystem: the per-instance paged allocator plus the
+//! cross-turn prefix cache.
 //!
-//! Each decode instance owns one [`KvCacheManager`]: requests allocate
-//! fixed-size token blocks as they generate; when an append cannot be
-//! served the instance experiences the paper's **Issue 1** OOM — victims
-//! must be evicted and their KV recomputed elsewhere. The manager also
-//! answers the rescheduler's memory-safety query (Alg. 1 line 21:
-//! `N_t(B_t,0) + N̂(r) <= C_mem`).
+//! Layer diagram (DESIGN.md §13):
+//!
+//! ```text
+//!   drivers (sim / serve)
+//!        │  insert at turn completion · take on follow-up · flush on drain
+//!        ▼
+//!   PrefixCache  ──policy──▶  CachePolicy (none | lru | ttl | predictive)
+//!        │  cached-token totals mirrored into ClusterState::cached_tokens
+//!        ▼
+//!   KvCacheManager (paged allocator, one per decode instance)
+//! ```
+//!
+//! * [`KvCacheManager`] ([`alloc`]) — PagedAttention-style block
+//!   allocator for *active* requests; OOM on exhaustion is the paper's
+//!   Issue-1 cascade.
+//! * [`PrefixCache`] ([`prefix`]) — retains completed-turn KV per
+//!   session under a configurable budget so a session's next turn
+//!   prefills only its new suffix (collapsed TTFT for later turns of
+//!   multi-round workloads).
+//! * [`CachePolicy`] ([`policy`]) — retention strategy; `predictive`
+//!   scores sessions by forecast return delay (PR 3 session scripts ×
+//!   PR 5 prediction signal).
+//! * [`CachePolicyRegistry`] ([`registry`]) — string-keyed construction
+//!   (`[kvcache] policy` / `--cache`), printed by `star list`.
+//! * [`CacheReport`] ([`report`]) — hit/miss/eviction/reuse counters both
+//!   drivers surface.
 
-use std::collections::HashMap;
+pub mod alloc;
+pub mod policy;
+pub mod prefix;
+pub mod registry;
+pub mod report;
 
-use crate::{Error, RequestId, Result};
-
-/// Tokens per block (vLLM default is 16).
-pub const DEFAULT_BLOCK_TOKENS: u32 = 16;
-
-/// Paged allocator for one instance's KV memory.
-#[derive(Clone, Debug)]
-pub struct KvCacheManager {
-    block_tokens: u32,
-    capacity_blocks: usize,
-    free_blocks: usize,
-    /// request -> (blocks held, tokens stored)
-    allocs: HashMap<RequestId, KvAlloc>,
-    /// Running Σ tokens over `allocs` so [`Self::used_tokens`] is O(1)
-    /// (it sits on the admission hot path).
-    used_tokens: u64,
-    /// high-water mark for reporting
-    peak_used_blocks: usize,
-}
-
-#[derive(Clone, Copy, Debug, Default)]
-pub struct KvAlloc {
-    pub blocks: usize,
-    pub tokens: u64,
-}
-
-impl KvCacheManager {
-    pub fn new(capacity_tokens: u64, block_tokens: u32) -> Self {
-        let capacity_blocks = (capacity_tokens / block_tokens as u64) as usize;
-        KvCacheManager {
-            block_tokens,
-            capacity_blocks,
-            free_blocks: capacity_blocks,
-            allocs: HashMap::new(),
-            used_tokens: 0,
-            peak_used_blocks: 0,
-        }
-    }
-
-    fn blocks_for(&self, tokens: u64) -> usize {
-        tokens.div_ceil(self.block_tokens as u64) as usize
-    }
-
-    /// Admit a request with `tokens` already materialized (prefill KV or a
-    /// migrated-in cache). Fails with [`Error::KvOom`] if it does not fit.
-    pub fn admit(&mut self, id: RequestId, tokens: u64, instance: usize) -> Result<()> {
-        assert!(
-            !self.allocs.contains_key(&id),
-            "request {id} admitted twice"
-        );
-        let need = self.blocks_for(tokens);
-        if need > self.free_blocks {
-            return Err(Error::KvOom {
-                instance,
-                need,
-                free: self.free_blocks,
-            });
-        }
-        self.free_blocks -= need;
-        self.allocs.insert(
-            id,
-            KvAlloc {
-                blocks: need,
-                tokens,
-            },
-        );
-        self.used_tokens += tokens;
-        self.note_peak();
-        Ok(())
-    }
-
-    /// Append one generated token; may allocate a new block.
-    pub fn append_token(&mut self, id: RequestId, instance: usize) -> Result<()> {
-        let alloc = self
-            .allocs
-            .get_mut(&id)
-            .unwrap_or_else(|| panic!("append for unknown request {id}"));
-        alloc.tokens += 1;
-        let need = alloc.tokens.div_ceil(self.block_tokens as u64) as usize;
-        if need > alloc.blocks {
-            if self.free_blocks == 0 {
-                // roll back the token count: the caller handles the OOM
-                alloc.tokens -= 1;
-                return Err(Error::KvOom {
-                    instance,
-                    need: 1,
-                    free: 0,
-                });
-            }
-            self.free_blocks -= 1;
-            alloc.blocks += 1;
-            self.note_peak();
-        }
-        self.used_tokens += 1;
-        Ok(())
-    }
-
-    /// Release a request's blocks (completion, migration-out, or eviction).
-    pub fn release(&mut self, id: RequestId) -> Option<KvAlloc> {
-        let alloc = self.allocs.remove(&id)?;
-        self.free_blocks += alloc.blocks;
-        self.used_tokens -= alloc.tokens;
-        Some(alloc)
-    }
-
-    /// Would a request with `tokens` KV fit right now?
-    pub fn would_fit(&self, tokens: u64) -> bool {
-        self.blocks_for(tokens) <= self.free_blocks
-    }
-
-    /// Memory-safety headroom in tokens (free blocks * block size).
-    pub fn free_tokens(&self) -> u64 {
-        self.free_blocks as u64 * self.block_tokens as u64
-    }
-
-    pub fn capacity_tokens(&self) -> u64 {
-        self.capacity_blocks as u64 * self.block_tokens as u64
-    }
-
-    /// Total tokens stored across requests. O(1).
-    pub fn used_tokens(&self) -> u64 {
-        self.used_tokens
-    }
-
-    /// Fraction of block capacity in use (Fig. 12's y-axis).
-    pub fn usage_frac(&self) -> f64 {
-        if self.capacity_blocks == 0 {
-            return 0.0;
-        }
-        (self.capacity_blocks - self.free_blocks) as f64 / self.capacity_blocks as f64
-    }
-
-    pub fn peak_usage_frac(&self) -> f64 {
-        if self.capacity_blocks == 0 {
-            return 0.0;
-        }
-        self.peak_used_blocks as f64 / self.capacity_blocks as f64
-    }
-
-    pub fn n_requests(&self) -> usize {
-        self.allocs.len()
-    }
-
-    pub fn tokens_of(&self, id: RequestId) -> Option<u64> {
-        self.allocs.get(&id).map(|a| a.tokens)
-    }
-
-    /// Pick eviction victims to free at least `need_blocks` blocks.
-    /// Policy: evict the *smallest* requests first — recompute-on-OOM must
-    /// replay the victim's whole history, so the cheapest victims minimize
-    /// wasted work (mirrors vLLM preempting the least-progress sequences;
-    /// evicting the largest request to free one block thrashes: it regrows
-    /// and evicts others in turn).
-    pub fn eviction_victims(&self, need_blocks: usize) -> Vec<RequestId> {
-        let mut by_size: Vec<(&RequestId, &KvAlloc)> = self.allocs.iter().collect();
-        by_size.sort_by(|a, b| a.1.blocks.cmp(&b.1.blocks).then(a.0.cmp(b.0)));
-        let mut freed = 0;
-        let mut victims = Vec::new();
-        for (id, alloc) in by_size {
-            if freed >= need_blocks {
-                break;
-            }
-            victims.push(*id);
-            freed += alloc.blocks;
-        }
-        victims
-    }
-
-    fn note_peak(&mut self) {
-        let used = self.capacity_blocks - self.free_blocks;
-        if used > self.peak_used_blocks {
-            self.peak_used_blocks = used;
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn mgr(cap_tokens: u64) -> KvCacheManager {
-        KvCacheManager::new(cap_tokens, 16)
-    }
-
-    #[test]
-    fn admit_and_release_roundtrip() {
-        let mut m = mgr(1600); // 100 blocks
-        m.admit(1, 100, 0).unwrap(); // 7 blocks
-        assert_eq!(m.used_tokens(), 100);
-        assert_eq!(m.n_requests(), 1);
-        let a = m.release(1).unwrap();
-        assert_eq!(a.tokens, 100);
-        assert_eq!(m.free_tokens(), 1600);
-    }
-
-    #[test]
-    fn append_allocates_blocks_lazily() {
-        let mut m = mgr(160); // 10 blocks
-        m.admit(1, 16, 0).unwrap(); // exactly 1 block
-        assert_eq!(m.free_tokens(), 144);
-        m.append_token(1, 0).unwrap(); // 17 tokens -> 2 blocks
-        assert_eq!(m.free_tokens(), 128);
-        for _ in 0..15 {
-            m.append_token(1, 0).unwrap(); // fills block 2, no new alloc
-        }
-        assert_eq!(m.free_tokens(), 128);
-    }
-
-    #[test]
-    fn oom_on_admit_when_full() {
-        let mut m = mgr(160);
-        m.admit(1, 150, 3).unwrap();
-        let err = m.admit(2, 32, 3).unwrap_err();
-        match err {
-            Error::KvOom { instance, .. } => assert_eq!(instance, 3),
-            e => panic!("unexpected {e}"),
-        }
-    }
-
-    #[test]
-    fn oom_on_append_rolls_back() {
-        let mut m = mgr(32); // 2 blocks
-        m.admit(1, 32, 0).unwrap();
-        let before = m.tokens_of(1).unwrap();
-        assert!(m.append_token(1, 0).is_err());
-        assert_eq!(m.tokens_of(1).unwrap(), before, "rollback failed");
-    }
-
-    #[test]
-    fn would_fit_matches_admit() {
-        let mut m = mgr(160);
-        assert!(m.would_fit(160));
-        assert!(!m.would_fit(161));
-        m.admit(1, 80, 0).unwrap();
-        assert!(m.would_fit(80));
-        assert!(!m.would_fit(81)); // 80 used = 5 blocks, 5 free
-    }
-
-    #[test]
-    fn eviction_prefers_cheapest() {
-        let mut m = mgr(1600);
-        m.admit(1, 500, 0).unwrap();
-        m.admit(2, 100, 0).unwrap();
-        m.admit(3, 300, 0).unwrap();
-        // smallest first: minimal recompute work lost per freed block
-        let v = m.eviction_victims(1);
-        assert_eq!(v[0], 2, "cheapest request should be first victim");
-        // needing more blocks walks up the size order (7 + 19 blocks)
-        let v = m.eviction_victims(25);
-        assert_eq!(v, vec![2, 3]);
-    }
-
-    #[test]
-    fn usage_frac_and_peak() {
-        let mut m = mgr(160);
-        assert_eq!(m.usage_frac(), 0.0);
-        m.admit(1, 80, 0).unwrap();
-        assert!((m.usage_frac() - 0.5).abs() < 1e-12);
-        m.release(1);
-        assert_eq!(m.usage_frac(), 0.0);
-        assert!((m.peak_usage_frac() - 0.5).abs() < 1e-12);
-    }
-}
+pub use alloc::{KvAlloc, KvCacheManager, DEFAULT_BLOCK_TOKENS};
+pub use policy::{
+    CachePolicy, CachedPrefix, LruCachePolicy, NoneCachePolicy, PredictiveCachePolicy,
+    TtlCachePolicy,
+};
+pub use prefix::PrefixCache;
+pub use registry::{CacheContext, CachePolicyRegistry};
+pub use report::CacheReport;

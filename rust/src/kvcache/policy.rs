@@ -1,0 +1,249 @@
+//! Retention policies for the prefix cache: who gets cached at turn
+//! completion, and who gets evicted first under budget pressure.
+//!
+//! Policies are deliberately small and pure — the [`PrefixCache`] layer
+//! owns the entry map, budgets, and counters; a policy only answers
+//! "keep this?" and "evict whom first?". The `predictive` policy is where
+//! the PR 5 prediction signal meets the PR 3 session scripts: a session's
+//! return delay (its next turn's think time) is carried as a
+//! [`Prediction`], and admission reads it at a conservative quantile, so
+//! an uncertain think-time estimate must promise a *soon* return before
+//! its prefix may occupy budget.
+//!
+//! [`PrefixCache`]: super::PrefixCache
+
+use crate::predictor::Prediction;
+use crate::{InstanceId, Time};
+
+/// One retained prefix: the completed turns of a session, resident on one
+/// instance, reusable iff the session's next turn lands there (or the
+/// transfer-vs-recompute comparison moves it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachedPrefix {
+    /// Session this prefix belongs to (one live prefix per session).
+    pub session: u32,
+    /// Decode instance holding the KV blocks.
+    pub instance: InstanceId,
+    /// Prefix length in tokens (prior prompt + generated history).
+    pub tokens: u64,
+    /// When the prefix was retained (TTL / LRU clock).
+    pub stored_at: Time,
+    /// Forecast of the session's return delay in seconds after
+    /// `stored_at` (the next turn's think time), `None` when the session
+    /// has no known successor turn. Carried as a [`Prediction`] so an
+    /// uncertain estimate is scored at a conservative quantile.
+    pub return_delay: Option<Prediction>,
+}
+
+impl CachedPrefix {
+    /// Conservative (quantile-`q`) estimate of when the session returns.
+    pub fn expected_return_at(&self, q: f64) -> Option<Time> {
+        self.return_delay
+            .map(|p| self.stored_at + p.quantile(q).max(0.0))
+    }
+}
+
+/// Retention strategy. Object-safe; registered by string in the
+/// [`CachePolicyRegistry`](super::CachePolicyRegistry).
+pub trait CachePolicy: Send {
+    /// Registry name this policy answers to (diagnostics + reports).
+    fn name(&self) -> &str;
+
+    /// `false` turns the whole subsystem off (`none`): no lookups, no
+    /// insertions, no events — the inert baseline the determinism tests
+    /// compare against.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Do TTL sweeps expire this policy's entries?
+    fn uses_ttl(&self) -> bool;
+
+    /// Retain `entry` at turn completion? (`ttl_s` is the configured
+    /// lifetime, so predictive admission can refuse sessions that will
+    /// not return inside it.)
+    fn admits(&self, entry: &CachedPrefix, ttl_s: f64) -> bool;
+
+    /// Eviction priority under budget pressure: HIGHER evicts first.
+    /// Only ordering within one policy matters; ties are broken by the
+    /// cache layer on session id for determinism.
+    fn victim_priority(&self, entry: &CachedPrefix, now: Time) -> f64;
+}
+
+/// The off switch: nothing is ever cached.
+#[derive(Clone, Debug, Default)]
+pub struct NoneCachePolicy;
+
+impl CachePolicy for NoneCachePolicy {
+    fn name(&self) -> &str {
+        "none"
+    }
+
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn uses_ttl(&self) -> bool {
+        false
+    }
+
+    fn admits(&self, _entry: &CachedPrefix, _ttl_s: f64) -> bool {
+        false
+    }
+
+    fn victim_priority(&self, _entry: &CachedPrefix, _now: Time) -> f64 {
+        0.0
+    }
+}
+
+/// Least-recently-stored eviction, no expiry: prefixes live until budget
+/// pressure pushes the oldest out.
+#[derive(Clone, Debug, Default)]
+pub struct LruCachePolicy;
+
+impl CachePolicy for LruCachePolicy {
+    fn name(&self) -> &str {
+        "lru"
+    }
+
+    fn uses_ttl(&self) -> bool {
+        false
+    }
+
+    fn admits(&self, _entry: &CachedPrefix, _ttl_s: f64) -> bool {
+        true
+    }
+
+    fn victim_priority(&self, entry: &CachedPrefix, now: Time) -> f64 {
+        now - entry.stored_at
+    }
+}
+
+/// LRU ordering plus a hard lifetime: entries older than `kvcache.ttl_s`
+/// are swept even with budget to spare (idle KV is not free — it competes
+/// with admissions through the cluster-state aggregate).
+#[derive(Clone, Debug, Default)]
+pub struct TtlCachePolicy;
+
+impl CachePolicy for TtlCachePolicy {
+    fn name(&self) -> &str {
+        "ttl"
+    }
+
+    fn uses_ttl(&self) -> bool {
+        true
+    }
+
+    fn admits(&self, _entry: &CachedPrefix, _ttl_s: f64) -> bool {
+        true
+    }
+
+    fn victim_priority(&self, entry: &CachedPrefix, now: Time) -> f64 {
+        now - entry.stored_at
+    }
+}
+
+/// Prediction-driven retention: only sessions forecast to return within
+/// the TTL are cached, and under pressure the entry whose return is
+/// farthest away is evicted first — the budget chases the sessions most
+/// likely to convert cached bytes into a hit.
+#[derive(Clone, Debug)]
+pub struct PredictiveCachePolicy {
+    /// Estimate quantile for return-delay forecasts (conservative: an
+    /// uncertain delay reads as long, same convention as the elastic
+    /// scaler's demand signal).
+    q: f64,
+}
+
+impl PredictiveCachePolicy {
+    pub fn new(conservative_q: f64) -> Self {
+        PredictiveCachePolicy {
+            q: conservative_q.clamp(0.5, 1.0),
+        }
+    }
+}
+
+impl CachePolicy for PredictiveCachePolicy {
+    fn name(&self) -> &str {
+        "predictive"
+    }
+
+    fn uses_ttl(&self) -> bool {
+        true
+    }
+
+    fn admits(&self, entry: &CachedPrefix, ttl_s: f64) -> bool {
+        match entry.return_delay {
+            Some(p) => p.quantile(self.q).max(0.0) <= ttl_s,
+            // no known successor turn: the prefix cannot be reused
+            None => false,
+        }
+    }
+
+    fn victim_priority(&self, entry: &CachedPrefix, now: Time) -> f64 {
+        // farthest forecast return evicts first; unknown returns (which
+        // admission normally refuses) evict before any forecast one
+        entry.expected_return_at(self.q).unwrap_or(f64::MAX) - now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(session: u32, stored_at: Time, delay: Option<f64>) -> CachedPrefix {
+        CachedPrefix {
+            session,
+            instance: 0,
+            tokens: 100,
+            stored_at,
+            return_delay: delay.map(Prediction::exact),
+        }
+    }
+
+    #[test]
+    fn none_is_fully_inert() {
+        let p = NoneCachePolicy;
+        assert!(!p.enabled());
+        assert!(!p.admits(&entry(1, 0.0, Some(1.0)), 60.0));
+    }
+
+    #[test]
+    fn lru_and_ttl_prioritize_oldest() {
+        for p in [&LruCachePolicy as &dyn CachePolicy, &TtlCachePolicy] {
+            let old = entry(1, 10.0, None);
+            let new = entry(2, 50.0, None);
+            assert!(p.admits(&old, 60.0));
+            assert!(
+                p.victim_priority(&old, 100.0) > p.victim_priority(&new, 100.0),
+                "{}: oldest must evict first",
+                p.name()
+            );
+        }
+        assert!(!LruCachePolicy.uses_ttl());
+        assert!(TtlCachePolicy.uses_ttl());
+    }
+
+    #[test]
+    fn predictive_admits_only_soon_returning_sessions() {
+        let p = PredictiveCachePolicy::new(0.9);
+        assert!(p.admits(&entry(1, 0.0, Some(5.0)), 60.0));
+        assert!(!p.admits(&entry(2, 0.0, Some(120.0)), 60.0), "returns after TTL");
+        assert!(!p.admits(&entry(3, 0.0, None), 60.0), "no successor turn");
+        // uncertainty pushes the conservative quantile past the TTL
+        let uncertain = CachedPrefix {
+            return_delay: Some(Prediction::new(50.0, 30.0, 0)),
+            ..entry(4, 0.0, None)
+        };
+        assert!(!p.admits(&uncertain, 60.0), "p90 of N(50, 30) > 60");
+    }
+
+    #[test]
+    fn predictive_evicts_farthest_return_first() {
+        let p = PredictiveCachePolicy::new(0.9);
+        let soon = entry(1, 0.0, Some(5.0));
+        let late = entry(2, 0.0, Some(50.0));
+        assert!(p.victim_priority(&late, 1.0) > p.victim_priority(&soon, 1.0));
+        assert!(p.victim_priority(&entry(3, 0.0, None), 1.0) > p.victim_priority(&late, 1.0));
+    }
+}

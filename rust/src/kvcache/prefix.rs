@@ -1,0 +1,394 @@
+//! The prefix-cache layer: retained completed-turn KV per session, under
+//! a per-instance token budget, with policy-ordered eviction.
+//!
+//! Ownership split (mirrors the predictor subsystem): this layer owns the
+//! entry map and every counter; the drivers own *placement* — they decide
+//! when a completed turn is offered (`insert`), when a follow-up consults
+//! the cache (`take`), and when an instance's entries must flush
+//! (`evict_instance`, the drain-then-flip interaction). Cached bytes are
+//! mirrored into `ClusterState::cached_tokens` by the caller so dispatch,
+//! admission, memory-pressure rescheduling, and the elastic scaler all
+//! see idle KV competing honestly with active requests.
+//!
+//! Determinism: the entry map is a `BTreeMap` keyed by session id and
+//! every eviction scan breaks priority ties on session id, so identical
+//! call sequences produce identical evictions — the property the sim's
+//! same-seed trace tests rely on.
+
+use std::collections::BTreeMap;
+
+use super::policy::{CachePolicy, CachedPrefix};
+use super::report::CacheReport;
+use crate::predictor::Prediction;
+use crate::{InstanceId, Time};
+
+/// Session-keyed prefix store. One live prefix per session; a newer
+/// turn's insert supersedes the old entry.
+pub struct PrefixCache {
+    policy: Box<dyn CachePolicy>,
+    /// Max cached tokens per instance.
+    budget_tokens: u64,
+    ttl_s: f64,
+    entries: BTreeMap<u32, CachedPrefix>,
+    /// Σ cached tokens per instance (grown on demand: elastic pools add
+    /// instances mid-run).
+    per_instance: Vec<u64>,
+    report: CacheReport,
+}
+
+impl PrefixCache {
+    pub fn new(policy: Box<dyn CachePolicy>, budget_tokens: u64, ttl_s: f64) -> PrefixCache {
+        let enabled = policy.enabled();
+        PrefixCache {
+            policy,
+            budget_tokens,
+            ttl_s,
+            entries: BTreeMap::new(),
+            per_instance: Vec::new(),
+            report: CacheReport {
+                enabled,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Is a real (non-`none`) policy active? When false every method is a
+    /// no-op, keeping the disabled path bit-for-bit inert.
+    pub fn enabled(&self) -> bool {
+        self.policy.enabled()
+    }
+
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
+    }
+
+    pub fn ttl_s(&self) -> f64 {
+        self.ttl_s
+    }
+
+    /// Offer a completed turn's prefix for retention. `hard_cap_tokens`
+    /// is the instance's physical headroom for cached bytes right now
+    /// (capacity − active KV − inbound reservations): the cache may evict
+    /// its own entries to fit under `min(budget, hard_cap)`, but never
+    /// displaces live requests. Returns whether the prefix was stored.
+    pub fn insert(
+        &mut self,
+        session: u32,
+        instance: InstanceId,
+        tokens: u64,
+        now: Time,
+        return_delay: Option<Prediction>,
+        hard_cap_tokens: u64,
+    ) -> bool {
+        if !self.enabled() || tokens == 0 {
+            return false;
+        }
+        // a newer turn supersedes any stale entry for the session
+        if let Some(old) = self.entries.remove(&session) {
+            self.sub_tokens(old.instance, old.tokens);
+        }
+        let entry = CachedPrefix {
+            session,
+            instance,
+            tokens,
+            stored_at: now,
+            return_delay,
+        };
+        if !self.policy.admits(&entry, self.ttl_s) {
+            return false;
+        }
+        let limit = self.budget_tokens.min(hard_cap_tokens);
+        if tokens > limit {
+            return false;
+        }
+        while self.cached_on(instance) + tokens > limit {
+            if self.evict_worst_on(instance, now).is_none() {
+                return false; // unreachable: tokens <= limit
+            }
+        }
+        self.ensure_len(instance);
+        self.per_instance[instance] += tokens;
+        self.entries.insert(session, entry);
+        self.report.insertions += 1;
+        true
+    }
+
+    /// Remove and return the session's prefix if present and unexpired.
+    /// Counts expiry internally; the CALLER classifies the outcome as a
+    /// hit ([`Self::note_hit`]) or miss ([`Self::note_miss`]) once it has
+    /// checked viability (lifecycle, admissibility) of the holding
+    /// instance.
+    pub fn take(&mut self, session: u32, now: Time) -> Option<CachedPrefix> {
+        if !self.enabled() {
+            return None;
+        }
+        let e = *self.entries.get(&session)?;
+        self.entries.remove(&session);
+        self.sub_tokens(e.instance, e.tokens);
+        if self.policy.uses_ttl() && now - e.stored_at > self.ttl_s {
+            self.report.expired += 1;
+            return None;
+        }
+        Some(e)
+    }
+
+    /// Borrow the session's entry without removing it.
+    pub fn peek(&self, session: u32) -> Option<&CachedPrefix> {
+        self.entries.get(&session)
+    }
+
+    /// Sweep expired entries (scheduler-tick housekeeping). No-op for
+    /// policies without a TTL.
+    pub fn expire(&mut self, now: Time) {
+        if !self.enabled() || !self.policy.uses_ttl() {
+            return;
+        }
+        let dead: Vec<u32> = self
+            .entries
+            .values()
+            .filter(|e| now - e.stored_at > self.ttl_s)
+            .map(|e| e.session)
+            .collect();
+        for s in dead {
+            if let Some(e) = self.entries.remove(&s) {
+                self.sub_tokens(e.instance, e.tokens);
+                self.report.expired += 1;
+            }
+        }
+    }
+
+    /// Flush every entry held by `instance` (drain-then-flip: a draining
+    /// instance must not retire holding prefixes). Returns tokens freed.
+    pub fn evict_instance(&mut self, instance: InstanceId) -> u64 {
+        let dead: Vec<u32> = self
+            .entries
+            .values()
+            .filter(|e| e.instance == instance)
+            .map(|e| e.session)
+            .collect();
+        let mut freed = 0;
+        for s in dead {
+            if let Some(e) = self.entries.remove(&s) {
+                self.sub_tokens(e.instance, e.tokens);
+                self.report.evictions += 1;
+                freed += e.tokens;
+            }
+        }
+        freed
+    }
+
+    /// Evict policy-ordered victims on `instance` until at least
+    /// `need_tokens` are freed (admission pressure: live requests always
+    /// win over idle prefixes). Returns tokens actually freed.
+    pub fn evict_for_headroom(
+        &mut self,
+        instance: InstanceId,
+        need_tokens: u64,
+        now: Time,
+    ) -> u64 {
+        let mut freed = 0;
+        while freed < need_tokens {
+            match self.evict_worst_on(instance, now) {
+                Some(t) => freed += t,
+                None => break,
+            }
+        }
+        freed
+    }
+
+    /// Σ cached tokens on `instance`. O(1).
+    pub fn cached_on(&self, instance: InstanceId) -> u64 {
+        self.per_instance.get(instance).copied().unwrap_or(0)
+    }
+
+    /// Σ cached tokens across the pool.
+    pub fn total_cached(&self) -> u64 {
+        self.per_instance.iter().sum()
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Every live entry (deterministic session-id order) — the sim's
+    /// reference-snapshot rebuild recomputes per-instance cached totals
+    /// from this.
+    pub fn entries(&self) -> impl Iterator<Item = &CachedPrefix> {
+        self.entries.values()
+    }
+
+    pub fn note_hit(&mut self, tokens_reused: u64) {
+        self.report.hits += 1;
+        self.report.tokens_reused += tokens_reused;
+    }
+
+    pub fn note_miss(&mut self) {
+        self.report.misses += 1;
+    }
+
+    /// A taken entry the caller could not use (holding instance drained /
+    /// inadmissible): its bytes are already released; account the drop.
+    pub fn note_evicted(&mut self) {
+        self.report.evictions += 1;
+    }
+
+    pub fn note_transfer(&mut self) {
+        self.report.transfer_decisions += 1;
+    }
+
+    pub fn note_recompute(&mut self) {
+        self.report.recompute_decisions += 1;
+    }
+
+    pub fn report(&self) -> CacheReport {
+        self.report.clone()
+    }
+
+    /// Worst-priority victim on `instance` (ties: lowest session id).
+    fn evict_worst_on(&mut self, instance: InstanceId, now: Time) -> Option<u64> {
+        let mut worst: Option<(f64, u32)> = None;
+        for e in self.entries.values() {
+            if e.instance != instance {
+                continue;
+            }
+            let p = self.policy.victim_priority(e, now);
+            let better = match worst {
+                None => true,
+                Some((wp, ws)) => p > wp || (p == wp && e.session < ws),
+            };
+            if better {
+                worst = Some((p, e.session));
+            }
+        }
+        let (_, session) = worst?;
+        let e = self.entries.remove(&session)?;
+        self.sub_tokens(e.instance, e.tokens);
+        self.report.evictions += 1;
+        Some(e.tokens)
+    }
+
+    fn ensure_len(&mut self, instance: InstanceId) {
+        if self.per_instance.len() <= instance {
+            self.per_instance.resize(instance + 1, 0);
+        }
+    }
+
+    fn sub_tokens(&mut self, instance: InstanceId, tokens: u64) {
+        self.ensure_len(instance);
+        debug_assert!(
+            self.per_instance[instance] >= tokens,
+            "cached-token accounting underflow on instance {instance}"
+        );
+        self.per_instance[instance] = self.per_instance[instance].saturating_sub(tokens);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy::{
+        LruCachePolicy, NoneCachePolicy, PredictiveCachePolicy, TtlCachePolicy,
+    };
+    use super::*;
+
+    fn lru(budget: u64) -> PrefixCache {
+        PrefixCache::new(Box::new(LruCachePolicy), budget, 60.0)
+    }
+
+    #[test]
+    fn none_policy_is_inert() {
+        let mut c = PrefixCache::new(Box::new(NoneCachePolicy), 1_000_000, 60.0);
+        assert!(!c.enabled());
+        assert!(!c.insert(1, 0, 100, 0.0, None, u64::MAX));
+        assert!(c.take(1, 1.0).is_none());
+        assert_eq!(c.total_cached(), 0);
+        let r = c.report();
+        assert!(!r.enabled);
+        assert_eq!(r, CacheReport::default());
+    }
+
+    #[test]
+    fn insert_take_roundtrip_tracks_per_instance_totals() {
+        let mut c = lru(10_000);
+        assert!(c.insert(7, 2, 300, 1.0, None, u64::MAX));
+        assert_eq!(c.cached_on(2), 300);
+        assert_eq!(c.total_cached(), 300);
+        let e = c.take(7, 2.0).expect("entry present");
+        assert_eq!((e.instance, e.tokens), (2, 300));
+        assert_eq!(c.total_cached(), 0);
+        assert!(c.take(7, 2.0).is_none(), "take removes");
+    }
+
+    #[test]
+    fn budget_pressure_evicts_oldest_first() {
+        let mut c = lru(500);
+        assert!(c.insert(1, 0, 200, 1.0, None, u64::MAX));
+        assert!(c.insert(2, 0, 200, 2.0, None, u64::MAX));
+        // 200 + 200 + 200 > 500: session 1 (oldest) must go
+        assert!(c.insert(3, 0, 200, 3.0, None, u64::MAX));
+        assert!(c.take(1, 4.0).is_none(), "oldest evicted");
+        assert!(c.peek(2).is_some());
+        assert!(c.peek(3).is_some());
+        assert_eq!(c.report().evictions, 1);
+        // budgets are per instance: another instance is unaffected
+        assert!(c.insert(4, 1, 400, 4.0, None, u64::MAX));
+        assert_eq!(c.cached_on(1), 400);
+    }
+
+    #[test]
+    fn hard_cap_blocks_and_oversized_prefixes_are_refused() {
+        let mut c = lru(10_000);
+        assert!(!c.insert(1, 0, 600, 1.0, None, 500), "over physical headroom");
+        assert!(!c.insert(2, 0, 20_000, 1.0, None, u64::MAX), "over budget");
+        assert_eq!(c.report().insertions, 0);
+    }
+
+    #[test]
+    fn ttl_expires_on_take_and_sweep() {
+        let mut c = PrefixCache::new(Box::new(TtlCachePolicy), 10_000, 10.0);
+        assert!(c.insert(1, 0, 100, 0.0, None, u64::MAX));
+        assert!(c.insert(2, 0, 100, 5.0, None, u64::MAX));
+        assert!(c.take(1, 11.0).is_none(), "expired on take");
+        assert_eq!(c.report().expired, 1);
+        c.expire(16.0);
+        assert!(c.peek(2).is_none(), "swept");
+        assert_eq!(c.report().expired, 2);
+        assert_eq!(c.total_cached(), 0);
+    }
+
+    #[test]
+    fn predictive_keeps_soon_returning_sessions_under_pressure() {
+        let mut c = PrefixCache::new(Box::new(PredictiveCachePolicy::new(0.9)), 500, 60.0);
+        assert!(c.insert(1, 0, 300, 0.0, Some(Prediction::exact(40.0)), u64::MAX));
+        // session 2 returns sooner; pressure must evict session 1 (latest
+        // forecast return), not the newcomer
+        assert!(c.insert(2, 0, 300, 1.0, Some(Prediction::exact(3.0)), u64::MAX));
+        assert!(c.peek(2).is_some());
+        assert!(c.peek(1).is_none());
+        // sessions that will not return inside the TTL are never stored
+        assert!(!c.insert(3, 1, 100, 2.0, Some(Prediction::exact(500.0)), u64::MAX));
+        assert!(!c.insert(4, 1, 100, 2.0, None, u64::MAX));
+    }
+
+    #[test]
+    fn evict_instance_flushes_only_that_instance() {
+        let mut c = lru(10_000);
+        c.insert(1, 0, 100, 1.0, None, u64::MAX);
+        c.insert(2, 0, 200, 2.0, None, u64::MAX);
+        c.insert(3, 1, 400, 3.0, None, u64::MAX);
+        assert_eq!(c.evict_instance(0), 300);
+        assert_eq!(c.cached_on(0), 0);
+        assert_eq!(c.cached_on(1), 400);
+        assert_eq!(c.report().evictions, 2);
+    }
+
+    #[test]
+    fn evict_for_headroom_frees_at_least_the_need() {
+        let mut c = lru(10_000);
+        c.insert(1, 0, 100, 1.0, None, u64::MAX);
+        c.insert(2, 0, 200, 2.0, None, u64::MAX);
+        let freed = c.evict_for_headroom(0, 80, 3.0);
+        assert!(freed >= 80, "freed {freed}");
+        assert_eq!(c.n_entries(), 1, "must not flush more than needed");
+        assert!(c.peek(2).is_some(), "newest entry survives");
+    }
+}

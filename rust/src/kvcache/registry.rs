@@ -1,0 +1,166 @@
+//! String-keyed cache-policy construction, mirroring
+//! `coordinator::PolicyRegistry` / `predictor::PredictorRegistry`: the
+//! single place where cache-policy names meet types. Config files
+//! (`[kvcache] policy = "..."`), the CLI (`--cache`), benches, and tests
+//! all go through [`CachePolicyRegistry::build`]; `star list` prints
+//! [`CachePolicyRegistry::names`].
+
+use std::collections::BTreeMap;
+
+use super::policy::{
+    CachePolicy, LruCachePolicy, NoneCachePolicy, PredictiveCachePolicy, TtlCachePolicy,
+};
+use crate::{Error, Result};
+
+/// Everything a cache-policy builder may draw on. One context type keeps
+/// the registry signature stable as policies grow knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheContext {
+    /// Estimate quantile for the predictive policy's return-delay
+    /// forecasts (shared convention with `[predictor] conservative_q`).
+    pub conservative_q: f64,
+}
+
+impl Default for CacheContext {
+    fn default() -> Self {
+        CacheContext { conservative_q: 0.9 }
+    }
+}
+
+type CacheBuilder = Box<dyn Fn(&CacheContext) -> Result<Box<dyn CachePolicy>> + Send + Sync>;
+
+/// Registry of named cache-policy builders. Names are normalized
+/// (lowercase, `-` → `_`) and may be aliased (`off` → `none`).
+#[derive(Default)]
+pub struct CachePolicyRegistry {
+    builders: BTreeMap<String, CacheBuilder>,
+    aliases: BTreeMap<String, String>,
+}
+
+/// Name normalization shared with lookups (lowercase, `-` → `_`).
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace('-', "_")
+}
+
+impl CachePolicyRegistry {
+    /// An empty registry (for fully custom policy sets).
+    pub fn new() -> CachePolicyRegistry {
+        CachePolicyRegistry::default()
+    }
+
+    /// The built-in set: `none` (`off`), `lru`, `ttl`, `predictive`.
+    pub fn with_builtins() -> CachePolicyRegistry {
+        let mut r = CachePolicyRegistry::new();
+        r.register("none", |_| Ok(Box::new(NoneCachePolicy)));
+        r.register("lru", |_| Ok(Box::new(LruCachePolicy)));
+        r.register("ttl", |_| Ok(Box::new(TtlCachePolicy)));
+        r.register("predictive", |ctx| {
+            Ok(Box::new(PredictiveCachePolicy::new(ctx.conservative_q)))
+        });
+        r.alias("off", "none");
+        r
+    }
+
+    /// Register (or replace) a policy builder under `name`.
+    pub fn register<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn(&CacheContext) -> Result<Box<dyn CachePolicy>> + Send + Sync + 'static,
+    {
+        self.builders.insert(normalize(name), Box::new(builder));
+    }
+
+    /// Make `alias` resolve to `canonical`. A direct registration under an
+    /// alias-colliding name wins over the alias (same rule as the policy
+    /// registry).
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.aliases.insert(normalize(alias), normalize(canonical));
+    }
+
+    fn lookup(&self, name: &str) -> Option<&CacheBuilder> {
+        let n = normalize(name);
+        if let Some(b) = self.builders.get(&n) {
+            return Some(b);
+        }
+        self.aliases.get(&n).and_then(|canon| self.builders.get(canon))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.lookup(name).is_some()
+    }
+
+    /// Construct the named policy; unknown names error with the
+    /// registered canonical list.
+    pub fn build(&self, name: &str, ctx: &CacheContext) -> Result<Box<dyn CachePolicy>> {
+        match self.lookup(name) {
+            Some(b) => b(ctx),
+            None => Err(Error::config(format!(
+                "unknown cache policy `{name}` (known: {})",
+                self.names().join("|")
+            ))),
+        }
+    }
+
+    /// Registered canonical policy names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.builders.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_builtin_by_canonical_name_and_alias() {
+        let reg = CachePolicyRegistry::with_builtins();
+        for name in ["none", "lru", "ttl", "predictive", "off", "LRU", "Predictive"] {
+            let p = reg
+                .build(name, &CacheContext::default())
+                .unwrap_or_else(|e| panic!("builtin `{name}` must build: {e}"));
+            assert!(p.name().is_ascii());
+        }
+    }
+
+    #[test]
+    fn display_names_are_registry_keys() {
+        let reg = CachePolicyRegistry::with_builtins();
+        for name in reg.names() {
+            let p = reg.build(&name, &CacheContext::default()).unwrap();
+            assert_eq!(p.name(), name, "display name must be the registry key");
+        }
+    }
+
+    #[test]
+    fn every_builtin_is_registered() {
+        // new builtins cannot silently miss registration: this list is
+        // asserted verbatim (and `star list` prints the same registry,
+        // covered in tests/cli_errors.rs)
+        let reg = CachePolicyRegistry::with_builtins();
+        assert_eq!(reg.names(), vec!["lru", "none", "predictive", "ttl"]);
+    }
+
+    #[test]
+    fn unknown_names_error_with_known_list() {
+        let reg = CachePolicyRegistry::with_builtins();
+        let e = reg
+            .build("magic", &CacheContext::default())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown cache policy `magic`"), "{e}");
+        assert!(e.contains("lru"), "{e}");
+        assert!(e.contains("predictive"), "{e}");
+        assert!(!reg.has("magic"));
+        assert!(reg.has("off"));
+    }
+
+    #[test]
+    fn third_party_registration_and_override() {
+        let mut reg = CachePolicyRegistry::with_builtins();
+        reg.register("aggressive_lru", |_| Ok(Box::new(LruCachePolicy)));
+        assert!(reg.has("aggressive-LRU"));
+        // direct registration under an alias-colliding name shadows it
+        reg.register("off", |_| Ok(Box::new(LruCachePolicy)));
+        let p = reg.build("off", &CacheContext::default()).unwrap();
+        assert_eq!(p.name(), "lru");
+    }
+}

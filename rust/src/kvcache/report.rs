@@ -1,0 +1,94 @@
+//! Cache-effectiveness accounting shared by both drivers: the simulator
+//! folds one [`CacheReport`] into its `SimReport`, the live server into
+//! its `ServeOutcome`, and `star simulate` prints the same summary line
+//! for either — hit rate and reuse volume are the numbers the prefix-cache
+//! bench sweeps, so they live next to the cache instead of being
+//! recomputed per driver.
+
+/// Counters for one run of the prefix-cache subsystem. All zeros (and
+/// `enabled == false`) under the `none` policy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheReport {
+    /// Was a real (non-`none`) cache policy active?
+    pub enabled: bool,
+    /// Follow-up turns that found a usable prefix.
+    pub hits: u64,
+    /// Follow-up turns that found nothing (or an unusable entry).
+    pub misses: u64,
+    /// Entries dropped because their TTL lapsed before reuse.
+    pub expired: u64,
+    /// Entries dropped for budget/capacity pressure or instance drains.
+    pub evictions: u64,
+    /// Prefixes retained at turn completion.
+    pub insertions: u64,
+    /// Σ prompt tokens whose prefill was skipped by hits.
+    pub tokens_reused: u64,
+    /// Hits routed away from the holding instance where moving the prefix
+    /// over the fabric beat recomputing it (costmodel comparison).
+    pub transfer_decisions: u64,
+    /// Hits routed away where recomputing the prefix was cheaper.
+    pub recompute_decisions: u64,
+}
+
+impl CacheReport {
+    /// Hits / (hits + misses); 0 when no follow-up consulted the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// One-line summary printed by `star simulate` for cache-enabled runs.
+    pub fn summary(&self) -> String {
+        format!(
+            "prefix cache: {} hits / {} misses ({:.1}% hit rate) | {} tokens reused | \
+             {} insertions | {} evictions (+{} expired) | off-instance hits: {} transferred, \
+             {} recomputed",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.tokens_reused,
+            self.insertions,
+            self.evictions,
+            self.expired,
+            self.transfer_decisions,
+            self.recompute_decisions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_empty_and_mixed() {
+        let mut r = CacheReport::default();
+        assert_eq!(r.hit_rate(), 0.0);
+        r.hits = 3;
+        r.misses = 1;
+        assert!((r.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_mentions_every_counter() {
+        let r = CacheReport {
+            enabled: true,
+            hits: 5,
+            misses: 2,
+            expired: 1,
+            evictions: 3,
+            insertions: 7,
+            tokens_reused: 1234,
+            transfer_decisions: 1,
+            recompute_decisions: 2,
+        };
+        let s = r.summary();
+        for needle in ["5 hits", "2 misses", "1234 tokens reused", "3 evictions", "+1 expired"] {
+            assert!(s.contains(needle), "missing `{needle}`: {s}");
+        }
+    }
+}

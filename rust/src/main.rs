@@ -96,6 +96,11 @@ fn spec() -> Spec {
                 "workload scenario: stationary | bursty_mixed | diurnal_chat | multi_round",
             ),
             ("predictor", "name", "none|oracle|llm_native|2bin|4bin|6bin"),
+            (
+                "cache",
+                "name",
+                "prefix-cache policy: none | lru | ttl | predictive",
+            ),
             ("interval", "s", "rescheduler interval seconds"),
             ("seed", "n", "PRNG seed"),
             ("duration", "s", "trace duration (simulate)"),
@@ -169,6 +174,9 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     }
     if let Some(s) = args.opt("scaling") {
         exp.scaling_policy = s.to_string();
+    }
+    if let Some(c) = args.opt("cache") {
+        exp.kvcache.policy = c.to_string();
     }
     // [workload.*] table defaults derive from cluster.rps / dataset:
     // rebuild the scenario so the CLI overrides above are honored (flags
@@ -289,6 +297,9 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
     };
     let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())?.run();
     println!("{}", report.summary(Slo::default()));
+    if report.cache.enabled {
+        println!("{}", report.cache.summary());
+    }
     if let Some(spec) = &scenario {
         // per-class TTFT/TPOT percentiles + goodput against each class's
         // own SLO — the violations the aggregate line hides
@@ -339,6 +350,8 @@ fn run_list() -> Result<(), star::Error> {
     println!("scaling policies:    {}", reg.scaling_names().join(" "));
     let predictors = PredictorRegistry::with_builtins();
     println!("predictors:          {}", predictors.names().join(" "));
+    let caches = star::kvcache::CachePolicyRegistry::with_builtins();
+    println!("cache policies:      {}", caches.names().join(" "));
     let scenarios = ScenarioRegistry::with_builtins();
     println!("scenarios:           {}", scenarios.names().join(" "));
     Ok(())
@@ -427,6 +440,9 @@ fn run_serve(args: &Args) -> Result<(), star::Error> {
         out.oom_events,
         out.migrations
     );
+    if out.cache.enabled {
+        println!("{}", out.cache.summary());
+    }
     if let Some(path) = args.opt("trace-out") {
         out.recorder.write_tsv(std::path::Path::new(path))?;
         println!("trace written to {path}");

@@ -95,6 +95,14 @@ pub struct RequestLatency {
     pub first_token: Option<Time>,
     pub finished: Option<Time>,
     pub output_tokens: u32,
+    /// Full prompt length in tokens (for follow-up turns: prior context +
+    /// the new user message).
+    pub prompt_tokens: u32,
+    /// Prompt tokens actually prefilled: equal to `prompt_tokens` on a
+    /// prefix-cache miss (or with the cache off), only the new suffix on
+    /// a hit — the per-turn evidence that cached turns skipped prefill
+    /// work (`prompt_tokens - suffix_tokens` = reused prefix).
+    pub suffix_tokens: u32,
     /// Mean time-per-output-token over the whole request (seconds).
     pub mean_tpot: Option<f64>,
     /// Max single-gap TPOT (captures migration stalls / overload spikes).

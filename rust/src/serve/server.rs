@@ -16,6 +16,7 @@ use crate::coordinator::{
     PoolRole, PoolStats, RateMeter, RequestView, ReschedulerStats, ScaleRecord, ScalingAction,
 };
 use crate::costmodel::MigrationCostModel;
+use crate::kvcache::{CacheContext, CachePolicyRegistry, CacheReport, PrefixCache};
 use crate::metrics::{
     PoolSample, RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder,
     VarianceOverTime,
@@ -74,6 +75,12 @@ pub struct ServeOutcome {
     /// Predictor calibration: signed error + MAE per progress bucket,
     /// accumulated at request completion (empty under `none`).
     pub scorecard: Scorecard,
+    /// Prefix-cache effectiveness counters (all zeros, `enabled == false`
+    /// under the `none` policy). The live cache is coordinator-side
+    /// accounting: it steers session-affinity routing and competes for
+    /// headroom like the simulator's, but the instance-side prefill still
+    /// computes the full prompt.
+    pub cache: CacheReport,
 }
 
 struct ReqTracker {
@@ -151,6 +158,22 @@ struct SessionRt {
     /// Follow-up requests spawned so far (the run's total request count is
     /// `initial + spawned`).
     spawned: usize,
+}
+
+/// Reconcile the shared state's cached-token mirror against the cache's
+/// per-instance totals. The cache mutates internally (supersede on insert,
+/// expiry inside `take`, budget evictions), so callers resync after every
+/// mutation instead of tracking deltas.
+fn sync_cached_mirror(state: &mut ClusterState, cache: &PrefixCache) {
+    for i in 0..state.n_instances() {
+        let want = cache.cached_on(i);
+        let have = state.stats(i).cached_tokens();
+        match want.cmp(&have) {
+            std::cmp::Ordering::Greater => state.add_cached(i, want - have),
+            std::cmp::Ordering::Less => state.sub_cached(i, have - want),
+            std::cmp::Ordering::Equal => {}
+        }
+    }
 }
 
 /// The live server. Owns the runtime, the experiment wiring, and the
@@ -330,6 +353,8 @@ impl Server {
                         id: r.id,
                         class: r.class,
                         arrival: r.arrival,
+                        prompt_tokens: r.prompt.len() as u32,
+                        suffix_tokens: r.prompt.len() as u32,
                         ..Default::default()
                     },
                     last_token: None,
@@ -357,6 +382,20 @@ impl Server {
         };
         let mut control =
             ControlLoop::from_experiment(exp, self.params.migration, &self.registry)?;
+        // coordinator-side prefix cache (same registry + config the sim
+        // builds from): drives session-affinity routing and competes for
+        // KV headroom via the ClusterState mirror. The live instance-side
+        // prefill still computes the full prompt — physical KV reuse is a
+        // sim-level model — so reuse counters here describe routing, not
+        // skipped FLOPs.
+        let cache_policy = CachePolicyRegistry::with_builtins().build(
+            &exp.kvcache.policy,
+            &CacheContext {
+                conservative_q: exp.predictor_conservative_q,
+            },
+        )?;
+        let mut prefix_cache =
+            PrefixCache::new(cache_policy, exp.kvcache.budget_tokens, exp.kvcache.ttl_s);
         let mut recorder = TraceRecorder::new(exp.record_traces);
         let mut exec_var = VarianceOverTime::new();
         let mut load_var = VarianceOverTime::new();
@@ -546,6 +585,7 @@ impl Server {
                             id: payload.id,
                             tokens,
                             predicted_remaining: payload.predicted_remaining,
+                            preferred_instance: None,
                         },
                     )
                 };
@@ -611,14 +651,66 @@ impl Server {
                             });
                             t.last_pred_iter = Some(p.issued_at_iter);
                         }
+                        // prefix-cache consultation: a follow-up turn whose
+                        // previous turn left its KV cached prefers the
+                        // holding instance (cursor index >= 1 marks a
+                        // follow-up; index 0 is a session's first turn).
+                        let mut preferred = None;
+                        let mut cache_hit: Option<(InstanceId, u64)> = None;
+                        if prefix_cache.enabled() {
+                            if let Some(&(s, k)) = session.cursor.get(&req.id) {
+                                if k >= 1 {
+                                    match prefix_cache.take(s, since(at)) {
+                                        Some(e)
+                                            if instances
+                                                .get(e.instance)
+                                                .map(|i| i.lifecycle == Lifecycle::Active)
+                                                .unwrap_or(false) =>
+                                        {
+                                            preferred = Some(e.instance);
+                                            cache_hit = Some((e.instance, e.tokens));
+                                        }
+                                        Some(_) => {
+                                            // holder drained/retired between
+                                            // turns: entry is unusable
+                                            prefix_cache.note_evicted();
+                                            prefix_cache.note_miss();
+                                        }
+                                        None => prefix_cache.note_miss(),
+                                    }
+                                    // take removes expired entries even when
+                                    // it returns None: resync the mirror
+                                    sync_cached_mirror(&mut state, &prefix_cache);
+                                }
+                            }
+                        }
                         let di = control.dispatch(
                             &state.view(),
                             &IncomingRequest {
                                 id: req.id,
                                 tokens: req.prompt.len() as u64,
                                 predicted_remaining: pred,
+                                preferred_instance: preferred,
                             },
                         );
+                        if let Some((holder, cached)) = cache_hit {
+                            let prompt = req.prompt.len() as u64;
+                            if di == holder {
+                                // at least one token must be prefilled to
+                                // produce this turn's first logits
+                                let reused = cached.min(prompt.saturating_sub(1));
+                                prefix_cache.note_hit(reused);
+                                if let Some(t) = trackers.get_mut(&req.id) {
+                                    t.latency.suffix_tokens = (prompt - reused) as u32;
+                                }
+                            } else {
+                                // routed away from the holder: the live path
+                                // always recomputes (no cross-instance KV
+                                // move on the serving substrate)
+                                prefix_cache.note_miss();
+                                prefix_cache.note_recompute();
+                            }
+                        }
                         let payload = Box::new(AdmitPayload {
                             id: req.id,
                             kv,
@@ -656,6 +748,7 @@ impl Server {
                             &mut output_mean,
                             &mut scorecard,
                             &mut session,
+                            &mut prefix_cache,
                         );
                         pending = ev_rx.try_recv().ok();
                     }
@@ -666,6 +759,12 @@ impl Server {
             if last_tick.elapsed() >= interval {
                 last_tick = Instant::now();
                 let now_s = start.elapsed().as_secs_f64();
+                if prefix_cache.enabled() {
+                    // TTL housekeeping rides the scheduler tick (same
+                    // cadence as the simulator's)
+                    prefix_cache.expire(now_s);
+                    sync_cached_mirror(&mut state, &prefix_cache);
+                }
                 // retired slots are out of the pool: they must not
                 // deflate the cross-instance variance metrics
                 let iters: Vec<f64> = (0..instances.len())
@@ -852,6 +951,12 @@ impl Server {
                                 instances[decode].lifecycle = Lifecycle::Draining;
                                 instances[decode].flip_to_prefill = true;
                                 state.set_lifecycle(decode, Lifecycle::Draining);
+                                // drain-then-flip invariant: a draining
+                                // instance flushes its cached prefixes
+                                if prefix_cache.enabled() {
+                                    prefix_cache.evict_instance(decode);
+                                    sync_cached_mirror(&mut state, &prefix_cache);
+                                }
                                 let _ = instances[decode].cmd.send(DecodeCommand::Drain);
                             }
                         }
@@ -864,6 +969,10 @@ impl Server {
                                 instances[di].lifecycle = Lifecycle::Draining;
                                 instances[di].flip_to_prefill = false;
                                 state.set_lifecycle(di, Lifecycle::Draining);
+                                if prefix_cache.enabled() {
+                                    prefix_cache.evict_instance(di);
+                                    sync_cached_mirror(&mut state, &prefix_cache);
+                                }
                                 let _ = instances[di].cmd.send(DecodeCommand::Drain);
                             }
                         }
@@ -913,6 +1022,7 @@ impl Server {
             pool_timeline,
             scale_actions: scale_log,
             scorecard,
+            cache: prefix_cache.report(),
         })
     }
 
@@ -933,6 +1043,7 @@ impl Server {
         output_mean: &mut RunningVariance,
         scorecard: &mut Scorecard,
         session: &mut SessionRt,
+        prefix_cache: &mut PrefixCache,
     ) {
         match ev {
             DecodeEvent::Token { id, at, .. } => {
@@ -964,10 +1075,12 @@ impl Server {
                     migrating.retain(|&m| m != id);
                 }
                 let mut finished_now = false;
+                let mut done_prompt_tokens = 0u32;
                 if let Some(t) = trackers.get_mut(&id) {
                     if !t.done {
                         t.done = true;
                         finished_now = true;
+                        done_prompt_tokens = t.latency.prompt_tokens;
                         *completed += 1;
                         output_mean.push(generated as f64);
                         t.latency.finished = Some(since(at));
@@ -1015,6 +1128,8 @@ impl Server {
                                         id: nid,
                                         class: turn.class,
                                         arrival,
+                                        prompt_tokens: lr.prompt.len() as u32,
+                                        suffix_tokens: lr.prompt.len() as u32,
                                         ..Default::default()
                                     },
                                     last_token: None,
@@ -1029,6 +1144,32 @@ impl Server {
                             session.cursor.insert(nid, (s, k + 1));
                             session.queue.push((arrival, lr));
                             session.spawned += 1;
+                            // retain the completed turn's KV for the
+                            // follow-up we just scheduled. Hard cap is the
+                            // instance's physical headroom for idle bytes:
+                            // capacity minus active KV minus inbound
+                            // reservations — live requests always win.
+                            if prefix_cache.enabled()
+                                && instances[instance].lifecycle == Lifecycle::Active
+                            {
+                                let kept = done_prompt_tokens as u64 + generated as u64;
+                                let stats = state.stats(instance);
+                                let hard_cap = stats
+                                    .kv_capacity_tokens()
+                                    .saturating_sub(instances[instance].kv_used)
+                                    .saturating_sub(stats.inbound_reserved_tokens());
+                                prefix_cache.insert(
+                                    s,
+                                    instance,
+                                    kept,
+                                    since(at),
+                                    Some(Prediction::exact(turn.think_time_s)),
+                                    hard_cap,
+                                );
+                                // insert may supersede or evict internally
+                                // even when it refuses: always resync
+                                sync_cached_mirror(state, prefix_cache);
+                            }
                         }
                     }
                 }
@@ -1075,7 +1216,7 @@ impl Server {
                 ewma_iter_ms,
                 kv_used,
                 kv_capacity,
-                ..
+                at,
             } => {
                 // authoritative per-instance reconciliation: the decode
                 // thread owns the truth; fold its report into the shared
@@ -1119,6 +1260,20 @@ impl Server {
                 let st = &mut instances[instance];
                 st.kv_used = kv_used;
                 st.kv_capacity = kv_capacity;
+                // batch growth encroaching on idle cached bytes: evict
+                // cold prefixes until the authoritative report plus the
+                // cache fit the instance again (live requests always win)
+                if prefix_cache.enabled() {
+                    let total = kv_used + prefix_cache.cached_on(instance);
+                    if total > kv_capacity {
+                        prefix_cache.evict_for_headroom(
+                            instance,
+                            total - kv_capacity,
+                            since(at),
+                        );
+                        sync_cached_mirror(state, prefix_cache);
+                    }
+                }
             }
         }
     }

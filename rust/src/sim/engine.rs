@@ -22,11 +22,11 @@ use crate::coordinator::{
     ScaleRecord, ScalingAction,
 };
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{CacheContext, CachePolicyRegistry, KvCacheManager, PrefixCache};
 use crate::metrics::{PoolSample, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
 use crate::predictor::{
-    LengthPredictor, PredSample, PredictInput, PredictorContext, PredictorRegistry, Repredictor,
-    Scorecard,
+    LengthPredictor, PredSample, PredictInput, Prediction, PredictorContext, PredictorRegistry,
+    Repredictor, Scorecard,
 };
 use crate::workload::{Request, ScenarioTrace, SessionPlan};
 use crate::{InstanceId, RequestId, Result, Time};
@@ -145,6 +145,14 @@ pub struct Simulator {
     /// Follow-up events scheduled but not yet fired (their request records
     /// do not exist yet, so the termination check must wait for them).
     pending_follow_ups: usize,
+    // -- prefix cache --------------------------------------------------
+    /// Session-prefix KV retained across turns (inert under `none`).
+    prefix_cache: PrefixCache,
+    /// Σ tokens of in-flight prefix holds per decode instance: a hit's
+    /// reused prefix stays accounted on its holder (mirrored into
+    /// [`ClusterState`]'s cached-token aggregate) from `take` until the
+    /// request is admitted or the hold is abandoned.
+    hold_tokens: Vec<u64>,
     // -- elastic pool state --------------------------------------------
     /// Instances warming up toward each pool (provision or flip).
     prefill_provisioning: usize,
@@ -232,6 +240,14 @@ impl Simulator {
                 seed: exp.cluster.seed ^ 0x9e37,
             },
         )?;
+        let cache_policy = CachePolicyRegistry::with_builtins().build(
+            &exp.kvcache.policy,
+            &CacheContext {
+                conservative_q: exp.predictor_conservative_q,
+            },
+        )?;
+        let prefix_cache =
+            PrefixCache::new(cache_policy, exp.kvcache.budget_tokens, exp.kvcache.ttl_s);
 
         let mut queue = EventQueue::new();
         let mut requests = Vec::with_capacity(trace.requests.len());
@@ -249,10 +265,14 @@ impl Simulator {
                 predicted_remaining: None,
                 iters_since_predict: 0,
                 pred_log: Vec::new(),
+                cached_prefix: 0,
+                prefix_hold: None,
                 latency: crate::metrics::RequestLatency {
                     id: r.id,
                     class: r.class,
                     arrival: r.arrival,
+                    prompt_tokens: r.prompt_len,
+                    suffix_tokens: r.prompt_len,
                     ..Default::default()
                 },
                 last_token_at: None,
@@ -330,6 +350,8 @@ impl Simulator {
             session_cursor,
             session_chains,
             pending_follow_ups: 0,
+            prefix_cache,
+            hold_tokens: vec![0; n_dec],
             prefill_provisioning: 0,
             decode_provisioning: 0,
             pool_timeline: Vec::new(),
@@ -365,6 +387,12 @@ impl Simulator {
                 Event::ScaleTick => self.on_scale_tick(),
                 Event::InstanceReady { role } => self.on_instance_ready(role),
                 Event::DrainComplete { instance } => self.on_drain_complete(instance),
+                Event::PrefixTransferDone {
+                    request,
+                    from,
+                    to,
+                    tokens,
+                } => self.on_prefix_transfer_done(request, from, to, tokens),
             }
             if self.params.validate_state {
                 self.assert_state_consistent();
@@ -392,7 +420,7 @@ impl Simulator {
         } else {
             self.recorder.record(self.now, TraceEvent::Arrived { request: id });
         }
-        self.rates.on_arrival(self.requests[id as usize].kv_tokens());
+        self.rates.on_arrival(self.requests[id as usize].prefill_tokens());
         self.enqueue_prefill(id);
     }
 
@@ -401,7 +429,7 @@ impl Simulator {
     /// rule let one long prompt hide an hour of work behind a two-entry
     /// queue). Ties break on the lowest id for determinism.
     fn enqueue_prefill(&mut self, id: RequestId) {
-        let tokens = self.requests[id as usize].kv_tokens();
+        let tokens = self.requests[id as usize].prefill_tokens();
         let pi = (0..self.prefill.len())
             .filter(|&i| self.prefill[i].lifecycle == Lifecycle::Active)
             .min_by_key(|&i| (self.prefill[i].load_tokens, i))
@@ -419,8 +447,9 @@ impl Simulator {
             return;
         };
         self.prefill[pi].busy = Some(id);
-        // recompute passes re-process prompt + generated tokens
-        let tokens = self.requests[id as usize].kv_tokens();
+        // recompute passes re-process prompt + generated tokens; a prefix
+        // hit computes only the uncached suffix
+        let tokens = self.requests[id as usize].prefill_tokens();
         let dt = self.params.prefill_cost.time(tokens);
         self.queue.push(
             self.now + dt,
@@ -434,9 +463,10 @@ impl Simulator {
     fn on_prefill_done(&mut self, pi: usize, id: RequestId) {
         debug_assert_eq!(self.prefill[pi].busy, Some(id));
         self.prefill[pi].busy = None;
-        // prefill of a request never changes its token count, so this
-        // releases exactly what enqueue_prefill charged
-        let done_tokens = self.requests[id as usize].kv_tokens();
+        // prefill of a request never changes its token count (and a hold
+        // is only abandoned, never created, mid-flight), so this releases
+        // exactly what enqueue_prefill charged
+        let done_tokens = self.requests[id as usize].prefill_tokens();
         self.prefill[pi].load_tokens -= done_tokens;
         self.rates.on_prefill_done(done_tokens);
 
@@ -466,20 +496,29 @@ impl Simulator {
             },
         );
 
-        // dispatch to a decode instance (the common P2D baseline layer)
+        // dispatch to a decode instance (the common P2D baseline layer);
+        // a prefix hit prefers the instance holding its cached KV
         let kv_tokens = self.requests[id as usize].kv_tokens();
+        let hold = self.requests[id as usize].prefix_hold;
         let incoming = IncomingRequest {
             id,
             tokens: kv_tokens,
             predicted_remaining: pred,
+            preferred_instance: hold,
         };
         let di = self.dispatch_decode(&incoming);
 
         if kv_tokens > admission_watermark(self.decode[di].kv.capacity_tokens()) {
             // can never pass admission, even on an idle instance: fail the
             // request terminally (counted, not silently lost)
+            self.release_hold(id);
             self.requests[id as usize].state = ReqState::Done;
             self.failed += 1;
+        } else if hold.is_some() && hold != Some(di) {
+            // dispatched away from the prefix holder: move the cached KV
+            // over the fabric or recompute it at the destination,
+            // whichever the cost models say is cheaper
+            self.start_prefix_transfer(id, hold.expect("checked is_some"), di);
         } else {
             self.requests[id as usize].state = ReqState::Pending(di);
             self.decode[di].pending.push_back(id);
@@ -487,6 +526,107 @@ impl Simulator {
         }
         self.maybe_start_prefill(pi);
         self.maybe_complete_prefill_drain(pi);
+    }
+
+    /// A prefix hit was dispatched away from its holder (`from`): fire a
+    /// [`Event::PrefixTransferDone`] after min(transfer, recompute) of the
+    /// costmodel comparison. The request enters the pending path only
+    /// once the prefix is in place at the destination.
+    fn start_prefix_transfer(&mut self, id: RequestId, from: InstanceId, to: InstanceId) {
+        let prefix = self.requests[id as usize].cached_prefix;
+        let transfer_s = self.params.migration.transfer_time(prefix);
+        let recompute_s = self.params.prefill_cost.time(prefix);
+        let dt = if transfer_s <= recompute_s {
+            // both sides hold the prefix during the copy (as with
+            // migrations): the holder's bytes release on completion
+            self.prefix_cache.note_transfer();
+            transfer_s
+        } else {
+            // recomputing at the destination is cheaper: the holder's
+            // copy is useless now, drop it immediately
+            self.prefix_cache.note_recompute();
+            self.requests[id as usize].prefix_hold = None;
+            self.hold_tokens[from] -= prefix;
+            self.sync_cached_mirror();
+            recompute_s
+        };
+        self.queue.push(
+            self.now + dt,
+            Event::PrefixTransferDone {
+                request: id,
+                from,
+                to,
+                tokens: prefix,
+            },
+        );
+    }
+
+    /// The cached prefix is in place at the destination (copied or
+    /// recomputed): release the holder's copy if it was kept for the
+    /// transfer and enter the normal pending/admission path. A target
+    /// that drained while the prefix was in flight re-routes to the
+    /// active pool, exactly like a migration landing on a drained slot.
+    fn on_prefix_transfer_done(
+        &mut self,
+        id: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+        tokens: u64,
+    ) {
+        if self.requests[id as usize].prefix_hold == Some(from) {
+            self.requests[id as usize].prefix_hold = None;
+            self.hold_tokens[from] -= tokens;
+            self.sync_cached_mirror();
+        }
+        // the prefix now travels with the request and merges into its
+        // full-footprint admission below
+        self.requests[id as usize].cached_prefix = 0;
+        let dest = if self.decode[to].lifecycle == Lifecycle::Active {
+            to
+        } else {
+            let incoming = {
+                let r = &self.requests[id as usize];
+                IncomingRequest {
+                    id,
+                    tokens: r.kv_tokens(),
+                    predicted_remaining: r.predicted_remaining,
+                    preferred_instance: None,
+                }
+            };
+            self.dispatch_decode(&incoming)
+        };
+        self.requests[id as usize].state = ReqState::Pending(dest);
+        self.decode[dest].pending.push_back(id);
+        self.kick(dest);
+    }
+
+    /// Drop a request's prefix hold (terminal failure, drain flush, or
+    /// forced headroom reclaim): the holder's cached bytes are no longer
+    /// promised to it. `cached_prefix` is kept so prefill-load accounting
+    /// stays symmetric; it is cleared at admission.
+    fn release_hold(&mut self, id: RequestId) {
+        let r = &mut self.requests[id as usize];
+        if let Some(x) = r.prefix_hold.take() {
+            let tokens = r.cached_prefix;
+            self.hold_tokens[x] -= tokens;
+            self.sync_cached_mirror();
+        }
+    }
+
+    /// Reconcile [`ClusterState`]'s per-instance cached-token mirror with
+    /// the cache's entry totals plus in-flight holds. O(instances);
+    /// called after any cache mutation (the cache may evict or supersede
+    /// entries internally, so callers cannot track deltas themselves).
+    fn sync_cached_mirror(&mut self) {
+        for di in 0..self.decode.len() {
+            let want = self.prefix_cache.cached_on(di) + self.hold_tokens[di];
+            let have = self.state.stats(di).cached_tokens();
+            if want > have {
+                self.state.add_cached(di, want - have);
+            } else if have > want {
+                self.state.sub_cached(di, have - want);
+            }
+        }
     }
 
     /// Run the dispatch policy under the configured [`StateMode`]. The
@@ -531,18 +671,52 @@ impl Simulator {
             }
             let need = self.requests[id as usize].kv_tokens();
             if need > watermark {
+                self.release_hold(id);
                 self.requests[id as usize].state = ReqState::Done;
                 self.failed += 1;
                 continue;
             }
-            let ok = self.decode[di].kv.used_tokens() + need <= watermark
-                && self.decode[di].kv.would_fit(need);
+            // a request admitted on the instance holding its prefix
+            // re-absorbs those cached bytes into its own footprint, so
+            // they don't count against it twice
+            let hold_credit = match self.requests[id as usize].prefix_hold {
+                Some(h) if h == di => self.requests[id as usize].cached_prefix,
+                _ => 0,
+            };
+            let used = self.decode[di].kv.used_tokens();
+            let cached = self
+                .state
+                .stats(di)
+                .cached_tokens()
+                .saturating_sub(hold_credit);
+            // idle cached prefixes always yield to live work: evict for
+            // headroom before giving up on admission
+            if cached > 0 && used + need + cached > watermark {
+                let freed = self
+                    .prefix_cache
+                    .evict_for_headroom(di, used + need + cached - watermark, self.now);
+                if freed > 0 {
+                    self.sync_cached_mirror();
+                }
+            }
+            let cached = self
+                .state
+                .stats(di)
+                .cached_tokens()
+                .saturating_sub(hold_credit);
+            let ok = used + need + cached <= watermark && self.decode[di].kv.would_fit(need);
             if ok {
                 self.decode[di]
                     .kv
                     .admit(id, need, di)
                     .expect("would_fit checked");
+                if hold_credit > 0 {
+                    self.requests[id as usize].prefix_hold = None;
+                    self.hold_tokens[di] -= hold_credit;
+                    self.sync_cached_mirror();
+                }
                 let r = &mut self.requests[id as usize];
+                r.cached_prefix = 0; // merged into the admitted footprint
                 r.state = ReqState::Decoding(di);
                 self.state.admit(di, id, need, r.predicted_remaining);
             } else {
@@ -654,10 +828,56 @@ impl Simulator {
             }
         }
 
+        // batch growth may encroach on idle cached bytes: the cache
+        // always yields (active + cached never exceeds capacity)
+        self.reclaim_cached_headroom(di);
         for id in finished {
             self.finish_request(di, id);
         }
         self.kick(di);
+    }
+
+    /// Keep the cache-accounting invariant (active KV + cached bytes ≤
+    /// capacity) as the live batch grows: evict cold entries first, then
+    /// abandon in-flight holds if the batch leaves them no room.
+    fn reclaim_cached_headroom(&mut self, di: usize) {
+        let cached = self.state.stats(di).cached_tokens();
+        if cached == 0 {
+            return;
+        }
+        let cap = self.decode[di].kv.capacity_tokens();
+        let used = self.decode[di].kv.used_tokens();
+        if used + cached <= cap {
+            return;
+        }
+        let freed = self
+            .prefix_cache
+            .evict_for_headroom(di, used + cached - cap, self.now);
+        if freed > 0 {
+            self.sync_cached_mirror();
+        }
+        // entries exhausted and still over: abandon un-admitted holds (a
+        // rare forced path; the lost prefix folds into the request's
+        // eventual full-footprint admission)
+        let mut over = (used + self.state.stats(di).cached_tokens()).saturating_sub(cap);
+        if over == 0 {
+            return;
+        }
+        let holders: Vec<RequestId> = self
+            .requests
+            .iter()
+            .filter(|r| r.prefix_hold == Some(di))
+            .map(|r| r.id)
+            .collect();
+        for id in holders {
+            if over == 0 {
+                break;
+            }
+            let tokens = self.requests[id as usize].cached_prefix;
+            self.release_hold(id);
+            self.prefix_cache.note_evicted();
+            over = over.saturating_sub(tokens);
+        }
     }
 
     /// OOM on `di` while appending for `for_id`: evict the largest
@@ -755,8 +975,43 @@ impl Simulator {
                 instance: di,
             },
         );
+        self.maybe_cache_prefix(di, id);
         self.schedule_follow_up(id);
         self.maybe_drain_complete(di);
+    }
+
+    /// Offer a completed session turn's KV to the prefix cache before its
+    /// blocks are recycled. The predicted return delay is the scripted
+    /// think time of the session's next turn when one exists (the
+    /// predictive policy's admission signal); a session at its last turn
+    /// offers `None`, which only the unconditional policies retain.
+    fn maybe_cache_prefix(&mut self, di: usize, id: RequestId) {
+        if !self.prefix_cache.enabled() || self.decode[di].lifecycle != Lifecycle::Active {
+            // drain-then-flip: a turn finishing mid-drain must not insert
+            // a fresh entry after drain_decode already flushed the slot
+            return;
+        }
+        let Some(&(s, k)) = self.session_cursor.get(&id) else {
+            return; // sessionless request: no key to return under
+        };
+        let return_delay = self.sessions.scripts[s as usize]
+            .get(k as usize)
+            .map(|t| Prediction::exact(t.think_time_s));
+        let tokens = self.requests[id as usize].kv_tokens();
+        // physical headroom for cached bytes right now: the cache may
+        // evict its own entries to fit, but never displaces live KV,
+        // inbound reservations, or other requests' holds
+        let hard_cap = self.decode[di]
+            .kv
+            .capacity_tokens()
+            .saturating_sub(self.decode[di].kv.used_tokens())
+            .saturating_sub(self.state.stats(di).inbound_reserved_tokens())
+            .saturating_sub(self.hold_tokens[di]);
+        self.prefix_cache
+            .insert(s, di, tokens, self.now, return_delay, hard_cap);
+        // the insert may supersede or evict entries even when it refuses
+        // the new one — always reconcile
+        self.sync_cached_mirror();
     }
 
     /// If `id` has a successor turn in its session script, schedule its
@@ -794,10 +1049,14 @@ impl Simulator {
             predicted_remaining: None,
             iters_since_predict: 0,
             pred_log: Vec::new(),
+            cached_prefix: 0,
+            prefix_hold: None,
             latency: crate::metrics::RequestLatency {
                 id,
                 class: turn.class,
                 arrival: self.now,
+                prompt_tokens: turn.prompt_len,
+                suffix_tokens: turn.prompt_len,
                 ..Default::default()
             },
             last_token_at: None,
@@ -806,6 +1065,36 @@ impl Simulator {
         });
         self.session_cursor.insert(id, (session, turn_idx + 1));
         self.session_chains[session as usize].push(id);
+        // consult the prefix cache before the turn enters prefill: a hit
+        // prefills only the new suffix and prefers the holding instance
+        if self.prefix_cache.enabled() {
+            match self.prefix_cache.take(session, self.now) {
+                Some(e) if self.decode[e.instance].lifecycle == Lifecycle::Active => {
+                    let r = &mut self.requests[id as usize];
+                    // at least one suffix token must remain to prefill
+                    let reused = e.tokens.min(r.prompt_len.saturating_sub(1) as u64);
+                    if reused > 0 {
+                        r.cached_prefix = reused;
+                        r.prefix_hold = Some(e.instance);
+                        r.latency.suffix_tokens = r.prompt_len - reused as u32;
+                        self.hold_tokens[e.instance] += reused;
+                        self.prefix_cache.note_hit(reused);
+                    } else {
+                        self.prefix_cache.note_miss();
+                    }
+                }
+                Some(_) => {
+                    // the holder left the active pool with the entry still
+                    // live (defensive: drains flush eagerly) — its bytes
+                    // were already released by take; count the drop
+                    self.prefix_cache.note_evicted();
+                    self.prefix_cache.note_miss();
+                }
+                None => self.prefix_cache.note_miss(),
+            }
+            // take removes expired entries even when it returns None
+            self.sync_cached_mirror();
+        }
         self.on_arrival(id);
     }
 
@@ -824,6 +1113,7 @@ impl Simulator {
                 requests: self.state.active(di).to_vec(),
                 kv_capacity_tokens: self.decode[di].kv.capacity_tokens(),
                 inbound_reserved_tokens: self.inbound_reserved_scan(self.decode[di].id),
+                cached_tokens: self.prefix_cache.cached_on(di) + self.hold_tokens[di],
                 lifecycle: self.decode[di].lifecycle,
             })
             .collect();
@@ -855,6 +1145,7 @@ impl Simulator {
                 requests: Vec::new(),
                 kv_capacity_tokens: d.kv.capacity_tokens(),
                 inbound_reserved_tokens: 0,
+                cached_tokens: 0,
                 lifecycle: d.lifecycle,
             })
             .collect();
@@ -870,6 +1161,17 @@ impl Simulator {
                     instances[to].inbound_reserved_tokens += r.kv_tokens()
                 }
                 _ => {}
+            }
+        }
+        // cached side, rebuilt from the cache's own entry list plus a
+        // scan for in-flight prefix holds — independent of the
+        // incremental mirror, so drift is caught
+        for e in self.prefix_cache.entries() {
+            instances[e.instance].cached_tokens += e.tokens;
+        }
+        for r in &self.requests {
+            if let Some(x) = r.prefix_hold {
+                instances[x].cached_tokens += r.cached_prefix;
             }
         }
         ClusterSnapshot {
@@ -888,9 +1190,39 @@ impl Simulator {
                 self.now
             );
         }
+        // cache-accounting invariant: cached bytes (entries + in-flight
+        // holds) plus live KV never oversubscribe an instance. Inbound
+        // reservations are promises — their bytes still live on the
+        // migration source — so they are not part of the physical sum.
+        for d in &self.decode {
+            let cached = self.state.stats(d.id).cached_tokens();
+            assert!(
+                d.kv.used_tokens() + cached <= d.kv.capacity_tokens(),
+                "instance {}: active {} + cached {} exceeds capacity {} at t={:.6}",
+                d.id,
+                d.kv.used_tokens(),
+                cached,
+                d.kv.capacity_tokens(),
+                self.now
+            );
+        }
+        if !self.prefix_cache.enabled() {
+            assert_eq!(
+                self.prefix_cache.total_cached(),
+                0,
+                "a disabled cache must hold nothing"
+            );
+        }
     }
 
     fn on_scheduler_tick(&mut self) {
+        // TTL housekeeping first, so this tick's decisions read cached
+        // pressure net of anything that just lapsed
+        if self.prefix_cache.enabled() {
+            self.prefix_cache.expire(self.now);
+            self.sync_cached_mirror();
+        }
+
         // stranded-request guard: an instance with an empty batch receives
         // no DecodeStep/MigrationDone events, so a pending request that
         // failed its first admission attempt would otherwise wait forever
@@ -1015,6 +1347,7 @@ impl Simulator {
                     id,
                     tokens: r.kv_tokens(),
                     predicted_remaining: r.predicted_remaining,
+                    preferred_instance: None,
                 }
             };
             self.dispatch_decode(&incoming)
@@ -1159,7 +1492,7 @@ impl Simulator {
         self.prefill[pi].flip_to_decode = flip_to_decode;
         let queued: Vec<RequestId> = self.prefill[pi].queue.drain(..).collect();
         for id in queued {
-            let tokens = self.requests[id as usize].kv_tokens();
+            let tokens = self.requests[id as usize].prefill_tokens();
             self.prefill[pi].load_tokens -= tokens;
             self.enqueue_prefill(id);
         }
@@ -1196,6 +1529,23 @@ impl Simulator {
         self.decode[di].lifecycle = Lifecycle::Draining;
         self.decode[di].flip_to_prefill = flip_to_prefill;
         self.state.set_lifecycle(di, Lifecycle::Draining);
+        // drain-then-flip invariant: retained prefixes must not outlive
+        // the drain — flush the instance's entries and abandon any
+        // in-flight holds still targeting it
+        if self.prefix_cache.enabled() {
+            self.prefix_cache.evict_instance(di);
+            let holders: Vec<RequestId> = self
+                .requests
+                .iter()
+                .filter(|r| r.prefix_hold == Some(di))
+                .map(|r| r.id)
+                .collect();
+            for id in holders {
+                self.release_hold(id);
+                self.prefix_cache.note_evicted();
+            }
+            self.sync_cached_mirror();
+        }
         let pending: Vec<RequestId> = self.decode[di].pending.drain(..).collect();
         for id in pending {
             debug_assert!(
@@ -1207,6 +1557,7 @@ impl Simulator {
                     id,
                     tokens: r.kv_tokens(),
                     predicted_remaining: r.predicted_remaining,
+                    preferred_instance: None,
                 }
             };
             let dst = self.dispatch_decode(&incoming);
@@ -1315,6 +1666,7 @@ impl Simulator {
                     flip_to_prefill: false,
                     drain_event_queued: false,
                 });
+                self.hold_tokens.push(0);
             }
         }
     }
@@ -1338,6 +1690,7 @@ impl Simulator {
             session_chains: self.session_chains,
             pool_timeline: self.pool_timeline,
             scale_actions: self.scale_log,
+            cache: self.prefix_cache.report(),
         };
         for r in self.requests {
             if matches!(r.state, ReqState::Done) && r.latency.finished.is_some() {
@@ -1583,6 +1936,74 @@ mod tests {
             }
         }
         assert!(multi_turn > 0, "no realized multi-turn chain");
+    }
+
+    #[test]
+    fn prefix_cache_hits_on_session_follow_ups() {
+        use crate::workload::{ArrivalProcess, ClassMix, ClassSpec, ScenarioSpec, SessionProfile};
+        let spec = ScenarioSpec {
+            name: "unit_cache".to_string(),
+            arrival: ArrivalProcess::Poisson { rps: 0.5 },
+            classes: ClassMix::single(ClassSpec::chat()),
+            sessions: Some(SessionProfile {
+                session_frac: 0.9,
+                min_turns: 2,
+                max_turns: 4,
+                think_mean_s: 2.0,
+                max_context_tokens: 16_384,
+            }),
+            pico_scale: None,
+        };
+        let strace = spec.generate(30, 11);
+        assert!(strace.sessions.total_follow_ups() > 0, "need sessions");
+        let expected = strace.total_planned();
+        let mut exp = ExperimentConfig::default();
+        exp.cluster.n_decode = 3;
+        exp.cluster.kv_capacity_tokens = 400_000;
+        exp.predictor = "oracle".to_string();
+        exp.dispatch_policy = "session_affinity".to_string();
+        exp.kvcache.policy = "lru".to_string();
+        exp.kvcache.budget_tokens = 100_000;
+        exp.kvcache.ttl_s = 120.0;
+        let params = SimParams {
+            exp,
+            validate_state: true,
+            ..Default::default()
+        };
+        let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())
+            .expect("builtin policies")
+            .run();
+        assert_eq!(report.n_failed, 0);
+        assert_eq!(report.completed.len(), expected);
+        assert!(report.cache.enabled);
+        assert!(
+            report.cache.hits > 0,
+            "multi-turn sessions with a warm cache must hit: {}",
+            report.cache.summary()
+        );
+        assert!(report.cache.tokens_reused > 0);
+        assert!(report.cache.insertions > 0);
+        // a hit prefills strictly less than its full prompt…
+        assert!(
+            report
+                .completed
+                .iter()
+                .any(|l| l.suffix_tokens < l.prompt_tokens),
+            "at least one completed turn must have reused a prefix"
+        );
+        // …and no request ever prefills more than it
+        for l in &report.completed {
+            assert!(l.suffix_tokens <= l.prompt_tokens, "request {}", l.id);
+            assert!(l.prompt_tokens > 0, "request {}", l.id);
+        }
+    }
+
+    #[test]
+    fn cache_off_report_is_inert() {
+        let (p, trace) = small_params(20, 0.5);
+        let report = Simulator::new(p, &trace).run();
+        assert!(!report.cache.enabled);
+        assert_eq!(report.cache, Default::default());
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub enum Event {
     /// queue and inbound reservations all empty): retire it, or re-role
     /// it if the drain was started by a flip.
     DrainComplete { instance: InstanceId },
+    /// A cached session prefix finished moving (or being recomputed) for
+    /// a follow-up turn that was dispatched away from the instance holding
+    /// it. The fire time is min(transfer, recompute) of the costmodel
+    /// comparison; `tokens` is the prefix footprint reserved on `to`.
+    PrefixTransferDone {
+        request: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+        tokens: u64,
+    },
 }
 
 #[derive(Clone, Debug)]

@@ -68,6 +68,15 @@ pub struct SimRequest {
     ///
     /// [`Scorecard`]: crate::predictor::Scorecard
     pub pred_log: Vec<PredSample>,
+    /// Tokens of this turn's prompt covered by a prefix-cache hit (0 on a
+    /// miss or with the cache off): prefill computes and loads only
+    /// `kv_tokens() - cached_prefix`; the cached blocks merge back into
+    /// the allocation at admission.
+    pub cached_prefix: u64,
+    /// Instance whose prefix cache produced [`Self::cached_prefix`]
+    /// (dispatch preference; cleared once the prefix is consumed or the
+    /// hit is abandoned).
+    pub prefix_hold: Option<InstanceId>,
     pub latency: RequestLatency,
     /// Last time a token was emitted (TPOT gap tracking).
     pub last_token_at: Option<Time>,
@@ -83,5 +92,14 @@ impl SimRequest {
     /// Current KV token footprint: prompt + generated.
     pub fn kv_tokens(&self) -> u64 {
         self.prompt_len as u64 + self.generated as u64
+    }
+
+    /// Tokens the next prefill pass must actually compute: the full
+    /// footprint minus any prefix-cache hit. `cached_prefix` is stable
+    /// for the whole prefill pipeline (set before enqueue, cleared only
+    /// at admission or prefix-transfer completion), so charge and release
+    /// always agree.
+    pub fn prefill_tokens(&self) -> u64 {
+        self.kv_tokens().saturating_sub(self.cached_prefix)
     }
 }

@@ -4,6 +4,7 @@
 //! are how a bursty mixed workload shows its tail).
 
 use crate::coordinator::{ReschedulerStats, ScaleRecord};
+use crate::kvcache::CacheReport;
 use crate::metrics::{PoolSample, RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
 use crate::predictor::Scorecard;
 use crate::workload::{RequestClass, SloByClass};
@@ -37,6 +38,10 @@ pub struct SimReport {
     /// Executed scaling actions, in decision order (the scale-action
     /// trace the determinism tests compare verbatim).
     pub scale_actions: Vec<ScaleRecord>,
+    /// Prefix-cache effectiveness counters (all zeros, `enabled == false`
+    /// under the `none` policy). `star simulate` prints
+    /// [`CacheReport::summary`] for cache-enabled runs.
+    pub cache: CacheReport,
 }
 
 /// Per-class slice of a run: TTFT/TPOT percentiles and goodput against

@@ -168,6 +168,56 @@ fn unknown_scaling_lists_valid_names() {
 }
 
 #[test]
+fn unknown_cache_policy_lists_valid_names() {
+    let (ok, _, err) = run(&["simulate", "--cache", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown cache policy `bogus`"), "{err}");
+    for needle in ["none", "lru", "ttl", "predictive"] {
+        assert!(err.contains(needle), "must list candidate `{needle}`: {err}");
+    }
+}
+
+#[test]
+fn cache_enabled_simulation_runs_end_to_end_with_cache_summary() {
+    let (ok, out, err) = run(&[
+        "simulate",
+        "--scenario",
+        "multi_round",
+        "--cache",
+        "lru",
+        "--dispatch",
+        "session_affinity",
+        "--requests",
+        "40",
+        "--rps",
+        "0.5",
+        "--kv-capacity",
+        "400000",
+    ]);
+    assert!(ok, "simulate --cache lru failed: {err}");
+    assert!(out.contains("completed"), "missing summary line: {out}");
+    assert!(out.contains("prefix cache:"), "missing cache summary: {out}");
+    assert!(out.contains("hit rate"), "{out}");
+    // the cache summary only prints for cache-enabled runs
+    let (ok, out, err) = run(&[
+        "simulate",
+        "--scenario",
+        "multi_round",
+        "--requests",
+        "40",
+        "--rps",
+        "0.5",
+        "--kv-capacity",
+        "400000",
+    ]);
+    assert!(ok, "{err}");
+    assert!(
+        !out.contains("prefix cache:"),
+        "cache-off run must not print a cache summary: {out}"
+    );
+}
+
+#[test]
 fn list_prints_registered_policies_and_scenarios() {
     let (ok, out, err) = run(&["list"]);
     assert!(ok, "star list failed: {err}");
@@ -176,6 +226,7 @@ fn list_prints_registered_policies_and_scenarios() {
         "reschedule policies:",
         "scaling policies:",
         "predictors:",
+        "cache policies:",
         "scenarios:",
         "round_robin",
         "current_load",
@@ -185,6 +236,10 @@ fn list_prints_registered_policies_and_scenarios() {
         "static",
         "queue_pressure",
         "predictive",
+        // the cache-policy registry (`--cache` candidates)
+        "session_affinity",
+        "lru",
+        "ttl",
         // the predictor registry, so a new builtin cannot silently miss
         // registration (the registry unit test pins the exact list)
         "binned2",

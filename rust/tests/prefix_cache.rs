@@ -1,0 +1,233 @@
+//! Prefix-cache subsystem integration tests (ISSUE 6): the `none` policy
+//! must be bit-for-bit inert, cache-on runs must stay deterministic, the
+//! cache-accounting invariant must hold under budget pressure (asserted
+//! by `validate_state` after every event), and — gated on
+//! `STAR_BENCH_SMOKE=1` — warm-cache session turns must beat `--cache
+//! none` on later-turn TTFT.
+
+use std::collections::HashSet;
+
+use star::bench::scenarios::ScenarioRegistry;
+use star::config::ExperimentConfig;
+use star::coordinator::PolicyRegistry;
+use star::prop::{prop_assert, property};
+use star::sim::{SimParams, SimReport, Simulator};
+
+fn session_exp(seed: u64) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_decode = 3;
+    exp.cluster.n_prefill = 2;
+    exp.cluster.rps = 0.5;
+    exp.cluster.seed = seed;
+    exp.cluster.kv_capacity_tokens = 400_000; // roomy: nothing fails
+    exp.predictor = "oracle".to_string();
+    exp.scenario_name = Some("multi_round".to_string());
+    exp.record_traces = true;
+    exp
+}
+
+fn run(exp: ExperimentConfig, n: usize, validate: bool) -> SimReport {
+    let spec = ScenarioRegistry::with_builtins()
+        .build(exp.scenario_name.as_deref().unwrap(), &exp)
+        .expect("builtin scenario");
+    let trace = spec.generate(n, exp.cluster.seed);
+    let params = SimParams {
+        exp,
+        validate_state: validate,
+        ..Default::default()
+    };
+    Simulator::with_scenario(params, trace, &PolicyRegistry::with_builtins())
+        .expect("builtin policies")
+        .run()
+}
+
+/// Every recorded trace row, rendered exactly — the bit-for-bit currency
+/// of the differential tests.
+fn trace_rows(r: &SimReport) -> Vec<String> {
+    r.recorder
+        .rows()
+        .iter()
+        .map(|row| format!("{:.12}|{:?}", row.t, row.event))
+        .collect()
+}
+
+/// Per-request completion fingerprint (sorted by id).
+fn completion_rows(r: &SimReport) -> Vec<String> {
+    let mut rows: Vec<String> = r
+        .completed
+        .iter()
+        .map(|l| {
+            format!(
+                "{}|{:?}|{:?}|{}|{}|{}",
+                l.id, l.first_token, l.finished, l.output_tokens, l.prompt_tokens, l.suffix_tokens
+            )
+        })
+        .collect();
+    rows.sort();
+    rows
+}
+
+#[test]
+fn cache_none_is_bit_for_bit_inert() {
+    // baseline: the defaults (cache off) — then `none` again with odd
+    // budget/TTL knobs, and `none` under session_affinity dispatch (which
+    // must degrade to current_load, the default, when no request ever
+    // carries a preference). All three must produce identical traces.
+    let base = run(session_exp(42), 60, false);
+    assert!(!base.cache.enabled);
+    assert_eq!(base.cache, Default::default());
+
+    let mut odd_knobs = session_exp(42);
+    odd_knobs.kvcache.policy = "none".to_string();
+    odd_knobs.kvcache.budget_tokens = 12_345;
+    odd_knobs.kvcache.ttl_s = 77.0;
+    let b = run(odd_knobs, 60, false);
+
+    let mut affinity = session_exp(42);
+    affinity.dispatch_policy = "session_affinity".to_string();
+    let c = run(affinity, 60, false);
+
+    for (label, other) in [("odd none knobs", &b), ("session_affinity + none", &c)] {
+        assert_eq!(
+            trace_rows(&base),
+            trace_rows(other),
+            "{label}: traces must be bit-for-bit identical to the cache-off baseline"
+        );
+        assert_eq!(completion_rows(&base), completion_rows(other), "{label}");
+        assert!((base.duration - other.duration).abs() < 1e-12, "{label}");
+        assert_eq!(base.migrations, other.migrations, "{label}");
+        assert_eq!(base.oom_events, other.oom_events, "{label}");
+        assert!(!other.cache.enabled, "{label}");
+    }
+    // cache off: every turn prefills its full prompt
+    for l in &base.completed {
+        assert_eq!(l.suffix_tokens, l.prompt_tokens, "request {}", l.id);
+    }
+}
+
+#[test]
+fn cache_on_runs_are_same_seed_deterministic() {
+    let mk = || {
+        let mut exp = session_exp(7);
+        exp.dispatch_policy = "session_affinity".to_string();
+        exp.kvcache.policy = "lru".to_string();
+        exp.kvcache.budget_tokens = 100_000;
+        exp.kvcache.ttl_s = 300.0;
+        run(exp, 60, true)
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(trace_rows(&a), trace_rows(&b));
+    assert_eq!(completion_rows(&a), completion_rows(&b));
+    assert_eq!(a.cache, b.cache, "cache counters must be deterministic");
+    assert!(a.cache.enabled);
+    assert!(
+        a.cache.hits + a.cache.misses > 0,
+        "multi_round follow-ups must consult the cache: {:?}",
+        a.cache
+    );
+}
+
+#[test]
+fn cache_accounting_invariant_holds_under_budget_pressure() {
+    // validate_state reasserts after EVERY event that (a) the incremental
+    // ClusterState mirror equals a from-scratch rebuild including cached
+    // tokens, and (b) active KV + cached KV fits each instance — so this
+    // property test's work is driving the cache through budget pressure,
+    // TTL expiry, eviction, and tight-memory admission across seeds and
+    // policies, then checking nothing leaked.
+    property("cache accounting under pressure", 8, |g| {
+        let seed = g.u64(0, 1 << 30);
+        let mut exp = session_exp(seed);
+        exp.cluster.kv_capacity_tokens = 40_000; // tight: real eviction
+        exp.dispatch_policy = "session_affinity".to_string();
+        exp.kvcache.policy = g.rng().choose(&["lru", "ttl", "predictive"]).to_string();
+        let policy = exp.kvcache.policy.clone();
+        exp.kvcache.budget_tokens = g.u64(2_000, 20_000); // tight budget
+        exp.kvcache.ttl_s = g.f64(5.0, 120.0);
+        exp.record_traces = false;
+        let report = run(exp, 40, true);
+        prop_assert(
+            report.completed.len() + report.n_failed == report.n_requests,
+            format!(
+                "seed {seed} policy {policy}: leaked requests (completed {} + failed {} \
+                 of {})",
+                report.completed.len(),
+                report.n_failed,
+                report.n_requests
+            ),
+        )
+    });
+}
+
+#[test]
+fn kvcache_policy_strings_build_through_the_exp_path() {
+    for policy in ["lru", "ttl", "predictive"] {
+        let mut exp = session_exp(3);
+        exp.dispatch_policy = "session_affinity".to_string();
+        exp.kvcache.policy = policy.to_string();
+        exp.kvcache.ttl_s = 200.0;
+        exp.record_traces = false;
+        exp.validate().expect("valid config");
+        let report = run(exp, 30, false);
+        assert!(report.cache.enabled, "{policy}");
+        assert!(
+            report.cache.insertions > 0,
+            "{policy}: multi-round sessions must retain prefixes: {:?}",
+            report.cache
+        );
+    }
+}
+
+/// Directional acceptance (STAR_BENCH_SMOKE=1 gate, like the bench smoke
+/// suite): with session_affinity dispatch and a warm cache, later session
+/// turns prefill only their suffix and their TTFT drops vs `--cache none`.
+#[test]
+fn warm_cache_cuts_later_turn_ttft_under_smoke_gate() {
+    let gate = std::env::var("STAR_BENCH_SMOKE").unwrap_or_default();
+    if gate.is_empty() || gate == "0" {
+        eprintln!("skipped: set STAR_BENCH_SMOKE=1 to run the directional check");
+        return;
+    }
+    let mk = |policy: &str| {
+        let mut exp = session_exp(17);
+        exp.dispatch_policy = "session_affinity".to_string();
+        exp.kvcache.policy = policy.to_string();
+        exp.kvcache.budget_tokens = 200_000;
+        exp.kvcache.ttl_s = 600.0;
+        exp.record_traces = false;
+        run(exp, 120, false)
+    };
+    let cold = mk("none");
+    let warm = mk("lru");
+    assert!(warm.cache.hits > 0, "warm run must hit: {:?}", warm.cache);
+    assert!(warm.cache.tokens_reused > 0, "{:?}", warm.cache);
+
+    let later_ttft = |r: &SimReport| -> f64 {
+        let later: HashSet<u64> = r
+            .session_chains
+            .iter()
+            .flat_map(|c| c.iter().skip(1).copied())
+            .collect();
+        let samples: Vec<f64> = r
+            .completed
+            .iter()
+            .filter(|l| later.contains(&l.id))
+            .filter_map(|l| l.ttft())
+            .collect();
+        assert!(!samples.is_empty(), "no later-turn completions");
+        samples.iter().sum::<f64>() / samples.len() as f64
+    };
+    let (c, w) = (later_ttft(&cold), later_ttft(&warm));
+    assert!(
+        w < c,
+        "warm cache should cut later-turn TTFT: warm {w:.4}s vs cold {c:.4}s"
+    );
+    // and at least one warm turn demonstrably prefilled only a suffix
+    assert!(
+        warm.completed
+            .iter()
+            .any(|l| l.suffix_tokens < l.prompt_tokens),
+        "no completed turn recorded a suffix-only prefill"
+    );
+}

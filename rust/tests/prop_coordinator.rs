@@ -36,6 +36,7 @@ fn random_snapshot(g: &mut Gen) -> ClusterSnapshot {
                 requests,
                 kv_capacity_tokens: g.u64(20_000, 200_000),
                 inbound_reserved_tokens: g.u64(0, 5_000),
+                cached_tokens: g.u64(0, 5_000),
                 lifecycle: Default::default(),
             }
         })
@@ -158,6 +159,7 @@ fn balanced_clusters_are_left_alone() {
                 }],
                 kv_capacity_tokens: 1_000_000,
                 inbound_reserved_tokens: 0,
+                cached_tokens: 0,
                 lifecycle: Default::default(),
             })
             .collect();
@@ -177,7 +179,13 @@ fn dispatcher_always_returns_valid_instance() {
         let snap = random_snapshot(g);
         let name = *g
             .rng()
-            .choose(&["round_robin", "current_load", "predicted_load", "slo_aware"]);
+            .choose(&[
+                "round_robin",
+                "current_load",
+                "predicted_load",
+                "slo_aware",
+                "session_affinity",
+            ]);
         let mut d = registry
             .build_dispatch(name, &PolicyConfig::default())
             .map_err(|e| e.to_string())?;
@@ -186,6 +194,9 @@ fn dispatcher_always_returns_valid_instance() {
                 id: req_id,
                 tokens: g.u64(1, 2_000),
                 predicted_remaining: Some(Prediction::exact(g.f64(0.0, 1_000.0))),
+                // random (possibly out-of-range) preferences: the policy
+                // must still return a valid instance
+                preferred_instance: g.bool().then(|| g.usize(0, 8)),
             };
             let id = d.choose(&snap.view(), &incoming);
             prop_assert(
@@ -208,6 +219,7 @@ fn round_robin_is_fair_on_uniform_clusters() {
                     requests: vec![],
                     kv_capacity_tokens: 1_000_000,
                     inbound_reserved_tokens: 0,
+                    cached_tokens: 0,
                     lifecycle: Default::default(),
                 })
                 .collect(),
@@ -223,6 +235,7 @@ fn round_robin_is_fair_on_uniform_clusters() {
                 id: 0,
                 tokens: 10,
                 predicted_remaining: None,
+                preferred_instance: None,
             };
             counts[d.choose(&snap.view(), &incoming)] += 1;
         }
