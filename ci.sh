@@ -12,20 +12,25 @@
 #                       inner loop while iterating on a single bench
 #   ./ci.sh --no-lint   skip fmt/clippy (CI runs them as a separate job
 #                       so lint failures report independently of tests)
+#   ./ci.sh --no-analyze  skip the `star analyze` determinism/safety lint
+#                       (CI runs it as a separate job, like --no-lint)
 #   STAR_BENCH_SMOKE=1 ./ci.sh   same as --smoke
 #
 # Every step is timed; on failure the script names the failing step
-# (build/test/fmt/clippy/smoke/bench) so CI logs are triageable at a glance.
+# (build/test/fmt/clippy/analyze/smoke/bench) so CI logs are triageable
+# at a glance.
 set -uo pipefail
 cd "$(dirname "$0")/rust" || exit 1
 
 SMOKE=0
 LINT=1
+ANALYZE=1
 BENCH_ONLY=""
 while [ $# -gt 0 ]; do
   case "$1" in
     --smoke) SMOKE=1 ;;
     --no-lint) LINT=0 ;;
+    --no-analyze) ANALYZE=0 ;;
     --bench)
       if [ $# -lt 2 ]; then
         echo "ci.sh: --bench expects a bench name (see benches/*.rs)" >&2
@@ -35,7 +40,7 @@ while [ $# -gt 0 ]; do
       BENCH_ONLY="$1"
       ;;
     *)
-      echo "ci.sh: unknown argument \`$1\` (supported: --smoke, --bench NAME, --no-lint)" >&2
+      echo "ci.sh: unknown argument \`$1\` (supported: --smoke, --bench NAME, --no-lint, --no-analyze)" >&2
       exit 2
       ;;
   esac
@@ -138,6 +143,13 @@ fi
 
 run_step build cargo build --release
 run_step test cargo test -q
+
+# `star analyze`: the dependency-free determinism/safety lint over src/
+# (R1 hash-collections, R2 wall-clock, R3 unsafe, R4 unwrap, R5 event
+# coverage). Exits nonzero on any finding, so the tree stays clean.
+if [ "$ANALYZE" = "1" ]; then
+  run_step analyze ./target/release/star analyze src
+fi
 
 if [ "$LINT" = "1" ]; then
   run_step fmt cargo fmt --check

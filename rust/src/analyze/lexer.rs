@@ -1,0 +1,406 @@
+//! Minimal Rust lexer for the `star analyze` pass (offline substitute for
+//! `syn`, in the same spirit as the hand-rolled JSON parser in
+//! [`crate::bench::json`]). It produces just enough structure for the
+//! rule engine: identifiers/keywords, punctuation, literals, and line
+//! comments (kept, because `// SAFETY:` and `// ANALYZE-OK:` waivers live
+//! there). It is *not* a full lexer — no token trees, no macro expansion —
+//! but it is exact about the things a grep is not: string/char/comment
+//! contents never produce identifier tokens, raw strings are skipped
+//! whole, and `'a` lifetimes are distinguished from `'a'` char literals.
+
+/// Token classes the rule engine consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe` is one token, `memory_unsafe_x` another).
+    Ident,
+    Num,
+    /// String literal (plain, raw, or byte). `text` is the *content*.
+    Str,
+    Char,
+    Lifetime,
+    /// `//`-comment; `text` is everything after the `//`.
+    LineComment,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One lexed token with its 1-indexed source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    line: u32,
+}
+
+/// Lex a source file. Never fails: unterminated constructs simply run to
+/// end of input (the analyzer lints real, compiling code; graceful
+/// degradation beats a parse error on a fixture).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut lx = Lexer {
+        bytes: src.as_bytes(),
+        pos: 0,
+        line: 1,
+    };
+    let mut toks = Vec::new();
+    while let Some(t) = lx.next_tok() {
+        toks.push(t);
+    }
+    toks
+}
+
+impl Lexer<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<u8> {
+        self.bytes.get(self.pos + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+        }
+        Some(b)
+    }
+
+    fn next_tok(&mut self) -> Option<Tok> {
+        loop {
+            let b = self.peek()?;
+            match b {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek_at(1) == Some(b'/') => return Some(self.line_comment()),
+                b'/' if self.peek_at(1) == Some(b'*') => self.block_comment(),
+                b'"' => return Some(self.string(b'"')),
+                b'\'' => return Some(self.quote()),
+                b'r' | b'b' if self.raw_string_ahead() => return Some(self.raw_string()),
+                b'b' if self.peek_at(1) == Some(b'"') => {
+                    self.bump(); // `b` prefix, then a plain string
+                    return Some(self.string(b'"'));
+                }
+                _ if b == b'_' || b.is_ascii_alphabetic() => return Some(self.ident()),
+                _ if b.is_ascii_digit() => return Some(self.number()),
+                _ => {
+                    let line = self.line;
+                    self.bump();
+                    return Some(Tok {
+                        kind: TokKind::Punct,
+                        text: (b as char).to_string(),
+                        line,
+                    });
+                }
+            }
+        }
+    }
+
+    fn line_comment(&mut self) -> Tok {
+        let line = self.line;
+        self.bump();
+        self.bump(); // the `//`
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b == b'\n' {
+                break;
+            }
+            self.bump();
+        }
+        Tok {
+            kind: TokKind::LineComment,
+            text: String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned(),
+            line,
+        }
+    }
+
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump(); // the `/*`
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(), self.peek_at(1)) {
+                (Some(b'/'), Some(b'*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+    }
+
+    fn string(&mut self, quote: u8) -> Tok {
+        let line = self.line;
+        self.bump(); // opening quote
+        let mut text = String::new();
+        while let Some(b) = self.peek() {
+            if b == quote {
+                self.bump();
+                break;
+            }
+            if b == b'\\' {
+                self.bump();
+                if let Some(esc) = self.bump() {
+                    text.push(esc as char);
+                }
+                continue;
+            }
+            self.bump();
+            text.push(b as char);
+        }
+        Tok {
+            kind: TokKind::Str,
+            text,
+            line,
+        }
+    }
+
+    /// `r"…"`, `r#"…"#`, `br##"…"##` — a prefix at the current position?
+    fn raw_string_ahead(&self) -> bool {
+        let mut off = 1; // past the leading r/b
+        if self.peek() == Some(b'b') {
+            if self.peek_at(1) != Some(b'r') {
+                return false;
+            }
+            off = 2;
+        }
+        loop {
+            match self.peek_at(off) {
+                Some(b'#') => off += 1,
+                Some(b'"') => return true,
+                _ => return false,
+            }
+        }
+    }
+
+    fn raw_string(&mut self) -> Tok {
+        let line = self.line;
+        if self.peek() == Some(b'b') {
+            self.bump();
+        }
+        self.bump(); // `r`
+        let mut hashes = 0usize;
+        while self.peek() == Some(b'#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening `"`
+        let start = self.pos;
+        let mut end = self.pos;
+        'scan: while let Some(b) = self.peek() {
+            if b == b'"' {
+                // candidate close: `"` followed by `hashes` hash marks
+                for h in 0..hashes {
+                    if self.peek_at(1 + h) != Some(b'#') {
+                        end = self.pos + 1;
+                        self.bump();
+                        continue 'scan;
+                    }
+                }
+                end = self.pos;
+                self.bump();
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            self.bump();
+            end = self.pos;
+        }
+        Tok {
+            kind: TokKind::Str,
+            text: String::from_utf8_lossy(&self.bytes[start..end]).into_owned(),
+            line,
+        }
+    }
+
+    /// `'` starts either a char literal or a lifetime. A lifetime is `'`
+    /// followed by an identifier with NO closing quote (`'a`, `'static`);
+    /// anything escaped or quote-closed is a char (`'a'`, `'\n'`, `'\''`).
+    fn quote(&mut self) -> Tok {
+        let line = self.line;
+        let is_lifetime = match self.peek_at(1) {
+            Some(c) if c == b'_' || c.is_ascii_alphabetic() => {
+                // scan the identifier; a `'` right after makes it a char
+                let mut off = 2;
+                while let Some(c2) = self.peek_at(off) {
+                    if c2 == b'_' || c2.is_ascii_alphanumeric() {
+                        off += 1;
+                    } else {
+                        break;
+                    }
+                }
+                self.peek_at(off) != Some(b'\'')
+            }
+            _ => false,
+        };
+        if is_lifetime {
+            self.bump(); // `'`
+            let start = self.pos;
+            while let Some(c) = self.peek() {
+                if c == b'_' || c.is_ascii_alphanumeric() {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            return Tok {
+                kind: TokKind::Lifetime,
+                text: String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned(),
+                line,
+            };
+        }
+        self.string(b'\'');
+        Tok {
+            kind: TokKind::Char,
+            text: String::new(),
+            line,
+        }
+    }
+
+    fn ident(&mut self) -> Tok {
+        let line = self.line;
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == b'_' || c.is_ascii_alphanumeric() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Tok {
+            kind: TokKind::Ident,
+            text: String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned(),
+            line,
+        }
+    }
+
+    fn number(&mut self) -> Tok {
+        let line = self.line;
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == b'_' {
+                self.bump();
+            } else if c == b'.' {
+                // `1.5` continues the number; `0..n` does not (range)
+                match self.peek_at(1) {
+                    Some(d) if d.is_ascii_digit() => {
+                        self.bump();
+                    }
+                    _ => break,
+                }
+            } else {
+                break;
+            }
+        }
+        Tok {
+            kind: TokKind::Num,
+            text: String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned(),
+            line,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_are_whole_words() {
+        // the reason this lexer exists: a grep for `unsafe` matches the
+        // test fn name below, the lexer does not
+        let toks = lex("fn memory_unsafe_target_rejected() { unsafe {} }");
+        let unsafe_toks: Vec<_> = toks.iter().filter(|t| t.is_ident("unsafe")).collect();
+        assert_eq!(unsafe_toks.len(), 1);
+        assert!(toks.iter().any(|t| t.is_ident("memory_unsafe_target_rejected")));
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = r#"
+            let a = "HashMap in a string";
+            /* HashMap in a block comment */
+            // HashMap in a line comment
+            let b = 'H';
+        "#;
+        let toks = lex(src);
+        assert!(!toks.iter().any(|t| t.is_ident("HashMap")));
+        assert_eq!(
+            toks.iter().filter(|t| t.kind == TokKind::LineComment).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_strings_are_single_tokens() {
+        let toks = lex(r###"let x = r#"unsafe { "nested" }"#; let y = 1;"###);
+        let strs: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("unsafe"));
+        assert!(!toks.iter().any(|t| t.is_ident("unsafe")));
+        assert!(toks.iter().any(|t| t.is_ident("y")), "lexing resumes after");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks.contains(&(TokKind::Lifetime, "a".to_string())));
+        assert_eq!(
+            toks.iter().filter(|(k, _)| *k == TokKind::Char).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn escaped_quote_char_is_not_a_lifetime() {
+        let toks = lex(r"let q = '\''; let l: &'static str = x;");
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+    }
+
+    #[test]
+    fn lines_are_tracked() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn range_expressions_do_not_swallow_idents() {
+        let toks = lex("for i in 0..bucket { }");
+        assert!(toks.iter().any(|t| t.is_ident("bucket")));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Num && t.text == "0"));
+    }
+}

@@ -1,0 +1,489 @@
+//! `star analyze` — dependency-free static analysis over the scheduling
+//! core (DESIGN.md §14).
+//!
+//! Every benchmark claim in this reproduction rests on bit-for-bit
+//! deterministic replay; the rules here are the invariants that keep it
+//! that way, enforced mechanically instead of by review:
+//!
+//! * **R1** `no-hash-collections` — no `HashMap`/`HashSet` in the
+//!   determinism-critical dirs (`sim/`, `coordinator/`, `serve/`,
+//!   `kvcache/`): iteration order is per-instance random and can fabricate
+//!   goodput deltas the size of the ones being measured. Use `BTreeMap`.
+//! * **R2** `no-wall-clock` — no `Instant::now`/`SystemTime`/`thread_rng`
+//!   in the simulated core (`sim/`, `coordinator/`, `kvcache/`,
+//!   `workload/`): time and randomness must flow through the event clock
+//!   and [`crate::prng`]. The live `serve/` layer is real time and exempt.
+//! * **R3** `unsafe-allowlist` — `unsafe` only in allowlisted files, and
+//!   every occurrence preceded by a `// SAFETY:` comment.
+//! * **R4** `no-bare-unwrap` — no `.unwrap()` in `sim/` + `serve/`
+//!   non-test code; `.expect("invariant")` names what broke.
+//! * **R5** `event-coverage` — every [`crate::sim::Event`] variant must be
+//!   matched in `sim/engine.rs` AND listed in its `VALIDATED_EVENTS`
+//!   coverage const, so a new event cannot dodge the invariant checker.
+//!
+//! Findings are one line each (`path:line: Rn rule-name: message | snippet`),
+//! and the CLI exits nonzero when any exist. Intentional exceptions carry a
+//! `// ANALYZE-OK: Rn reason` waiver on the finding line or the line above.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Tok, TokKind};
+
+use crate::{Error, Result};
+
+/// One rule violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path as displayed (scan root + relative path).
+    pub file: String,
+    /// 1-indexed line.
+    pub line: u32,
+    /// Rule id, e.g. `"R1"`.
+    pub rule: &'static str,
+    /// Rule slug, e.g. `"no-hash-collections"`.
+    pub rule_name: &'static str,
+    pub message: String,
+    /// The trimmed source line.
+    pub snippet: String,
+}
+
+impl Finding {
+    /// The machine-readable one-line form the CLI prints.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: {} {}: {} | {}",
+            self.file, self.line, self.rule, self.rule_name, self.message, self.snippet
+        )
+    }
+}
+
+/// Catalog entry for one rule.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule catalog, in report order. `star analyze --list-rules` prints
+/// this; `--rules` names validate against it.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "R1",
+        name: "no-hash-collections",
+        summary: "no HashMap/HashSet in sim/, coordinator/, serve/, kvcache/ \
+                  (iteration-order nondeterminism); use BTreeMap or waive",
+    },
+    RuleInfo {
+        id: "R2",
+        name: "no-wall-clock",
+        summary: "no Instant::now/SystemTime/thread_rng in sim/, coordinator/, \
+                  kvcache/, workload/ (time flows through the event clock and prng)",
+    },
+    RuleInfo {
+        id: "R3",
+        name: "unsafe-allowlist",
+        summary: "`unsafe` only in allowlisted files, each occurrence preceded \
+                  by a // SAFETY: comment",
+    },
+    RuleInfo {
+        id: "R4",
+        name: "no-bare-unwrap",
+        summary: "no bare .unwrap() in sim/ + serve/ non-test code; use \
+                  .expect(\"invariant\") or waive",
+    },
+    RuleInfo {
+        id: "R5",
+        name: "event-coverage",
+        summary: "every sim Event variant is matched in sim/engine.rs and named \
+                  in its VALIDATED_EVENTS coverage list",
+    },
+];
+
+/// Resolve a `--rules R1,R4` spec against the catalog. `None` means all.
+/// Unknown ids fail with the candidate list (the repo-wide CLI idiom).
+pub fn resolve_rules(spec: Option<&str>) -> Result<Vec<&'static str>> {
+    let Some(spec) = spec else {
+        return Ok(RULES.iter().map(|r| r.id).collect());
+    };
+    let mut out = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let hit = RULES
+            .iter()
+            .find(|r| r.id.eq_ignore_ascii_case(name) || r.name == name);
+        match hit {
+            Some(r) => {
+                if !out.contains(&r.id) {
+                    out.push(r.id);
+                }
+            }
+            None => {
+                let known: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+                return Err(Error::Cli(format!(
+                    "unknown analyze rule `{name}` (known: {})",
+                    known.join("|")
+                )));
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(Error::Cli("--rules selected no rules".into()));
+    }
+    Ok(out)
+}
+
+/// A lexed source file plus the line-level facts rules consume.
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated (rules match on this).
+    pub rel: String,
+    /// Path as displayed in findings.
+    pub display: String,
+    pub toks: Vec<Tok>,
+    /// Parallel to `toks`: inside a `#[cfg(test)]` / `#[test]` region?
+    pub in_test: Vec<bool>,
+    /// Lines carrying a `// SAFETY:` comment.
+    safety_lines: Vec<u32>,
+    /// `// ANALYZE-OK:` waivers: (line, rule id or None for all rules).
+    waivers: Vec<(u32, Option<String>)>,
+    /// Raw source lines, for snippets.
+    lines: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, display: &str, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let in_test = mark_test_regions(&toks);
+        let mut safety_lines = Vec::new();
+        let mut waivers = Vec::new();
+        for t in &toks {
+            if t.kind != TokKind::LineComment {
+                continue;
+            }
+            let body = t.text.trim_start();
+            if body.starts_with("SAFETY:") {
+                safety_lines.push(t.line);
+            }
+            if let Some(rest) = body.strip_prefix("ANALYZE-OK:") {
+                // `// ANALYZE-OK: R2 reason…` waives one rule; a bare
+                // `// ANALYZE-OK: reason…` waives every rule on the line
+                let first = rest.trim_start().split_whitespace().next().unwrap_or("");
+                let rule = RULES
+                    .iter()
+                    .find(|r| r.id.eq_ignore_ascii_case(first))
+                    .map(|r| r.id.to_string());
+                waivers.push((t.line, rule));
+            }
+        }
+        SourceFile {
+            rel: rel.to_string(),
+            display: display.to_string(),
+            toks,
+            in_test,
+            safety_lines,
+            waivers,
+            lines: src.lines().map(str::to_string).collect(),
+        }
+    }
+
+    /// Is a finding of `rule` at `line` waived? A waiver covers its own
+    /// line (trailing comment) and the line below (comment above the code).
+    pub fn waived(&self, rule: &str, line: u32) -> bool {
+        self.waivers.iter().any(|(wl, wr)| {
+            let line_hit = *wl == line || wl + 1 == line;
+            let rule_hit = match wr.as_deref() {
+                None => true,
+                Some(r) => r == rule,
+            };
+            line_hit && rule_hit
+        })
+    }
+
+    /// Is there a `// SAFETY:` comment on `line` or within the 4 lines
+    /// above it (multi-line justifications span several comment lines)?
+    pub fn safety_commented(&self, line: u32) -> bool {
+        self.safety_lines
+            .iter()
+            .any(|&sl| sl <= line && sl + 4 >= line)
+    }
+
+    pub fn snippet(&self, line: u32) -> String {
+        self.lines
+            .get(line as usize - 1)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    }
+
+    fn finding(&self, rule: &RuleInfo, line: u32, message: String) -> Finding {
+        Finding {
+            file: self.display.clone(),
+            line,
+            rule: rule.id,
+            rule_name: rule.name,
+            message,
+            snippet: self.snippet(line),
+        }
+    }
+
+    /// Emit a finding unless the line is waived.
+    pub(crate) fn push_finding(
+        &self,
+        out: &mut Vec<Finding>,
+        rule: &RuleInfo,
+        line: u32,
+        message: String,
+    ) {
+        if !self.waived(rule.id, line) {
+            out.push(self.finding(rule, line, message));
+        }
+    }
+}
+
+/// Mark the token spans of test-only code: an item annotated `#[cfg(test)]`
+/// (or any `cfg(...)` mentioning `test`, e.g. `all(test, …)`) or `#[test]`,
+/// through its matching closing brace. Rules R1/R4 scope to non-test code.
+fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut in_test = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if !(toks[i].is_punct('#') && toks.get(i + 1).is_some_and(|t| t.is_punct('['))) {
+            i += 1;
+            continue;
+        }
+        // collect the attribute `#[ … ]`
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < toks.len() && depth > 0 {
+            if toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(']') {
+                depth -= 1;
+            } else if toks[j].kind == TokKind::Ident {
+                idents.push(&toks[j].text);
+            }
+            j += 1;
+        }
+        let is_test_attr = idents.first() == Some(&"test")
+            || (idents.first() == Some(&"cfg") && idents.iter().any(|s| *s == "test"));
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // skip any further attributes between this one and the item
+        let mut k = j;
+        while k + 1 < toks.len() && toks[k].is_punct('#') && toks[k + 1].is_punct('[') {
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if toks[k].is_punct('[') {
+                    d += 1;
+                } else if toks[k].is_punct(']') {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // the item: everything to the matching `}` of its first brace, or
+        // to a `;` for brace-less items (`#[cfg(test)] use …;`)
+        while k < toks.len() && !toks[k].is_punct('{') && !toks[k].is_punct(';') {
+            k += 1;
+        }
+        if k < toks.len() && toks[k].is_punct('{') {
+            let mut d = 1usize;
+            k += 1;
+            while k < toks.len() && d > 0 {
+                if toks[k].is_punct('{') {
+                    d += 1;
+                } else if toks[k].is_punct('}') {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        } else if k < toks.len() {
+            k += 1; // consume the `;`
+        }
+        for flag in in_test.iter_mut().take(k.min(toks.len())).skip(attr_start) {
+            *flag = true;
+        }
+        i = k;
+    }
+    in_test
+}
+
+/// Collect every `.rs` file under `root`, sorted by relative path so the
+/// report (and the exit code) is deterministic across filesystems.
+pub fn collect_sources(root: &Path) -> Result<Vec<SourceFile>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    if !root.is_dir() {
+        return Err(Error::Cli(format!(
+            "analyze root `{}` is not a directory",
+            root.display()
+        )));
+    }
+    let mut paths = Vec::new();
+    walk(root, &mut paths).map_err(Error::Io)?;
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&p).map_err(Error::Io)?;
+        files.push(SourceFile::parse(&rel, &p.display().to_string(), &src));
+    }
+    Ok(files)
+}
+
+/// Run `rule_ids` over a source tree. Findings are sorted by
+/// (file, line, rule) — stable output for CI diffing.
+pub fn analyze_tree(root: &Path, rule_ids: &[&str]) -> Result<Vec<Finding>> {
+    let files = collect_sources(root)?;
+    let mut findings = Vec::new();
+    for id in rule_ids {
+        match *id {
+            "R1" => rules::check_hash_collections(&files, &mut findings),
+            "R2" => rules::check_wall_clock(&files, &mut findings),
+            "R3" => rules::check_unsafe(&files, &mut findings),
+            "R4" => rules::check_bare_unwrap(&files, &mut findings),
+            "R5" => rules::check_event_coverage(&files, &mut findings),
+            other => {
+                let known: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+                return Err(Error::Cli(format!(
+                    "unknown analyze rule `{other}` (known: {})",
+                    known.join("|")
+                )));
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(src: &str) -> SourceFile {
+        SourceFile::parse("sim/x.rs", "sim/x.rs", src)
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let f = file(
+            "fn live() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 fn helper() {}\n\
+             }\n\
+             fn also_live() {}\n",
+        );
+        let by_name = |name: &str| {
+            f.toks
+                .iter()
+                .zip(&f.in_test)
+                .find(|(t, _)| t.is_ident(name))
+                .map(|(_, in_t)| *in_t)
+                .unwrap()
+        };
+        assert!(!by_name("live"));
+        assert!(by_name("helper"));
+        assert!(!by_name("also_live"));
+    }
+
+    #[test]
+    fn test_regions_cover_test_fns_and_braceless_items() {
+        let f = file(
+            "#[test]\n\
+             #[ignore]\n\
+             fn t() { let x = 1; }\n\
+             #[cfg(test)]\n\
+             use std::collections::HashMap;\n\
+             fn live() {}\n",
+        );
+        let flags: Vec<(String, bool)> = f
+            .toks
+            .iter()
+            .zip(&f.in_test)
+            .filter(|(t, _)| t.kind == TokKind::Ident)
+            .map(|(t, in_t)| (t.text.clone(), *in_t))
+            .collect();
+        assert!(flags.contains(&("x".to_string(), true)));
+        assert!(flags.contains(&("HashMap".to_string(), true)));
+        assert!(flags.contains(&("live".to_string(), false)));
+    }
+
+    #[test]
+    fn waivers_cover_own_and_next_line() {
+        let f = file(
+            "// ANALYZE-OK: R1 justified\n\
+             let m = HashMap::new();\n\
+             let n = HashMap::new();\n",
+        );
+        assert!(f.waived("R1", 1));
+        assert!(f.waived("R1", 2));
+        assert!(!f.waived("R1", 3));
+        assert!(!f.waived("R4", 2), "rule-scoped waiver is rule-specific");
+    }
+
+    #[test]
+    fn bare_waiver_covers_all_rules() {
+        let f = file("let m = x.unwrap(); // ANALYZE-OK: proven above\n");
+        assert!(f.waived("R1", 1));
+        assert!(f.waived("R4", 1));
+    }
+
+    #[test]
+    fn safety_comment_window() {
+        let f = file(
+            "// SAFETY: the pointer is valid for the\n\
+             // lifetime of the arena it came from\n\
+             unsafe { work() }\n\n\n\n\n\
+             unsafe { other() }\n",
+        );
+        assert!(f.safety_commented(3));
+        assert!(!f.safety_commented(8));
+    }
+
+    #[test]
+    fn rule_resolution_accepts_ids_and_slugs_rejects_unknown() {
+        assert_eq!(resolve_rules(None).unwrap().len(), RULES.len());
+        assert_eq!(resolve_rules(Some("R1,R4")).unwrap(), vec!["R1", "R4"]);
+        assert_eq!(resolve_rules(Some("no-bare-unwrap")).unwrap(), vec!["R4"]);
+        let err = resolve_rules(Some("R9")).unwrap_err().to_string();
+        assert!(err.contains("unknown analyze rule `R9`"), "{err}");
+        assert!(err.contains("R1|R2|R3|R4|R5"), "{err}");
+    }
+
+    #[test]
+    fn finding_render_is_one_machine_readable_line() {
+        let f = file("let m = HashMap::new();\n");
+        let r = &RULES[0];
+        let mut out = Vec::new();
+        f.push_finding(&mut out, r, 1, "HashMap in determinism-critical code".into());
+        let line = out[0].render();
+        assert!(line.starts_with("sim/x.rs:1: R1 no-hash-collections:"), "{line}");
+        assert!(line.ends_with("| let m = HashMap::new();"), "{line}");
+    }
+}

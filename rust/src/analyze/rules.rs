@@ -1,0 +1,447 @@
+//! The rule implementations behind `star analyze` (catalog in
+//! [`super::RULES`], rationale in DESIGN.md §14). Each rule is a pure
+//! function over lexed [`SourceFile`]s: R1–R4 scan token streams
+//! file-by-file; R5 is a cross-file rule relating `sim/events.rs` to
+//! `sim/engine.rs`.
+
+use super::{Finding, RuleInfo, SourceFile, RULES};
+use crate::analyze::lexer::TokKind;
+
+fn rule(id: &str) -> &'static RuleInfo {
+    RULES
+        .iter()
+        .find(|r| r.id == id)
+        .expect("rule id in catalog")
+}
+
+fn in_dirs(file: &SourceFile, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| file.rel.starts_with(d))
+}
+
+/// R1: `HashMap`/`HashSet` named anywhere in non-test code of the
+/// determinism-critical dirs. A token-level pass cannot prove *iteration*,
+/// so the rule bans the types outright — `BTreeMap` costs O(log n) on maps
+/// that hold at most a few thousand requests, and a justified non-iterated
+/// use can carry an `// ANALYZE-OK: R1` waiver.
+pub fn check_hash_collections(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R1");
+    for f in files {
+        if !in_dirs(f, &["sim/", "coordinator/", "serve/", "kvcache/"]) {
+            continue;
+        }
+        for (t, &in_test) in f.toks.iter().zip(&f.in_test) {
+            if in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "HashMap" || t.text == "HashSet" {
+                f.push_finding(
+                    out,
+                    r,
+                    t.line,
+                    format!(
+                        "`{}` in determinism-critical code (iteration order is \
+                         per-instance random; use BTreeMap/BTreeSet)",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// R2: wall-clock time or OS randomness in the simulated core. Flags
+/// `Instant::now` call sites (a bare `use std::time::Instant` that is
+/// never `now()`ed is harmless), plus any mention of `SystemTime` or
+/// `thread_rng`.
+pub fn check_wall_clock(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R2");
+    for f in files {
+        if !in_dirs(f, &["sim/", "coordinator/", "kvcache/", "workload/"]) {
+            continue;
+        }
+        let toks = &f.toks;
+        for (i, (t, &in_test)) in toks.iter().zip(&f.in_test).enumerate() {
+            if in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            let hit = match t.text.as_str() {
+                "SystemTime" | "thread_rng" => Some(t.text.clone()),
+                "Instant" => {
+                    let now_call = toks.get(i + 1).is_some_and(|a| a.is_punct(':'))
+                        && toks.get(i + 2).is_some_and(|a| a.is_punct(':'))
+                        && toks.get(i + 3).is_some_and(|a| a.is_ident("now"));
+                    now_call.then(|| "Instant::now".to_string())
+                }
+                _ => None,
+            };
+            if let Some(what) = hit {
+                f.push_finding(
+                    out,
+                    r,
+                    t.line,
+                    format!(
+                        "`{what}` in the simulated core (sim time/randomness must \
+                         flow through the event clock and prng)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Files allowed to contain `unsafe`. The PR-7 audit found exactly one
+/// real site in the tree — the `Send`/`Sync` impls for the PJRT runtime
+/// in `runtime/models.rs`. (The issue's original list also named
+/// `coordinator/rescheduler.rs` and `coordinator/policy/mem_pressure.rs`,
+/// but those only contain "unsafe" inside test *function names* — the
+/// identifier-substring false positive this lexer exists to avoid.)
+pub const UNSAFE_ALLOWLIST: &[&str] = &["runtime/models.rs"];
+
+/// R3: every `unsafe` keyword must sit in an allowlisted file AND carry a
+/// `// SAFETY:` comment on the preceding lines.
+pub fn check_unsafe(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R3");
+    for f in files {
+        for (t, &in_test) in f.toks.iter().zip(&f.in_test) {
+            if in_test || !t.is_ident("unsafe") {
+                continue;
+            }
+            if !UNSAFE_ALLOWLIST.contains(&f.rel.as_str()) {
+                f.push_finding(
+                    out,
+                    r,
+                    t.line,
+                    format!(
+                        "`unsafe` outside the allowlist ({})",
+                        UNSAFE_ALLOWLIST.join(", ")
+                    ),
+                );
+            } else if !f.safety_commented(t.line) {
+                f.push_finding(
+                    out,
+                    r,
+                    t.line,
+                    "`unsafe` without a // SAFETY: comment on the preceding lines".into(),
+                );
+            }
+        }
+    }
+}
+
+/// R4: bare `.unwrap()` in `sim/` + `serve/` non-test code. A panic there
+/// should name the broken invariant (`.expect("…")`), not a line number.
+/// `unwrap_or`/`unwrap_or_else` are different identifiers and never match.
+pub fn check_bare_unwrap(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R4");
+    for f in files {
+        if !in_dirs(f, &["sim/", "serve/"]) {
+            continue;
+        }
+        let toks = &f.toks;
+        for (i, (t, &in_test)) in toks.iter().zip(&f.in_test).enumerate() {
+            if in_test || !t.is_ident("unwrap") {
+                continue;
+            }
+            let bare_call = i > 0
+                && toks[i - 1].is_punct('.')
+                && toks.get(i + 1).is_some_and(|a| a.is_punct('('))
+                && toks.get(i + 2).is_some_and(|a| a.is_punct(')'));
+            if bare_call {
+                f.push_finding(
+                    out,
+                    r,
+                    t.line,
+                    "bare `.unwrap()` (use .expect(\"invariant\") so a panic names \
+                     what broke)"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+/// R5: cross-file event-coverage rule. Parses the `enum Event` variants
+/// out of `sim/events.rs` and requires each to (a) appear as an
+/// `Event::<Variant>` match in `sim/engine.rs` and (b) be named in the
+/// engine's `VALIDATED_EVENTS` coverage const — the list
+/// `assert_state_consistent` checks at runtime — so a newly added event
+/// cannot dodge the invariant checker.
+pub fn check_event_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R5");
+    let Some(events) = files.iter().find(|f| f.rel == "sim/events.rs") else {
+        return; // not a tree with a sim layer; nothing to enforce
+    };
+    let Some(engine) = files.iter().find(|f| f.rel == "sim/engine.rs") else {
+        return;
+    };
+    let variants = enum_variants(events, "Event");
+    if variants.is_empty() {
+        return;
+    }
+
+    // (a) `Event :: Variant` token sequences anywhere in the engine
+    let mut matched: Vec<&str> = Vec::new();
+    let toks = &engine.toks;
+    for i in 0..toks.len() {
+        if toks[i].is_ident("Event")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        {
+            if let Some(v) = toks.get(i + 3) {
+                if v.kind == TokKind::Ident {
+                    matched.push(&v.text);
+                }
+            }
+        }
+    }
+
+    // (b) string literals inside the VALIDATED_EVENTS const
+    let mut listed: Vec<&str> = Vec::new();
+    let mut coverage_line = None;
+    if let Some(start) = toks.iter().position(|t| t.is_ident("VALIDATED_EVENTS")) {
+        coverage_line = Some(toks[start].line);
+        if let Some(open) = toks[start..].iter().position(|t| t.is_punct('[')) {
+            let mut depth = 0usize;
+            for t in &toks[start + open..] {
+                if t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Str {
+                    listed.push(&t.text);
+                }
+            }
+        }
+    }
+
+    for (name, line) in &variants {
+        if !matched.iter().any(|m| m == name) {
+            events.push_finding(
+                out,
+                r,
+                *line,
+                format!("Event::{name} is never matched in sim/engine.rs"),
+            );
+        }
+        if coverage_line.is_none() {
+            continue; // reported once below
+        }
+        if !listed.iter().any(|l| l == name) {
+            engine.push_finding(
+                out,
+                r,
+                coverage_line.unwrap_or(1),
+                format!("Event::{name} missing from the VALIDATED_EVENTS coverage list"),
+            );
+        }
+    }
+    if coverage_line.is_none() {
+        engine.push_finding(
+            out,
+            r,
+            1,
+            "sim/engine.rs has no VALIDATED_EVENTS coverage list".into(),
+        );
+    }
+}
+
+/// Extract `(variant, line)` pairs from `enum <name> { … }`. Variants are
+/// the identifiers at brace depth 1 that open a field list or end the arm
+/// (`Name {…}`, `Name(…)`, `Name,`, `Name }`); identifiers inside variant
+/// payloads sit at depth ≥ 2 or behind `(`/`<` and are skipped.
+fn enum_variants<'f>(file: &'f SourceFile, name: &str) -> Vec<(&'f str, u32)> {
+    let toks = &file.toks;
+    let mut i = 0;
+    // find `enum <name>` then its opening `{`
+    loop {
+        match toks[i..].iter().position(|t| t.is_ident("enum")) {
+            None => return Vec::new(),
+            Some(off) => {
+                i += off + 1;
+                if toks.get(i).is_some_and(|t| t.is_ident(name)) {
+                    break;
+                }
+            }
+        }
+    }
+    while i < toks.len() && !toks[i].is_punct('{') {
+        i += 1;
+    }
+    let mut variants = Vec::new();
+    let mut depth = 0usize; // brace depth relative to the enum body
+    let mut paren = 0usize;
+    let mut bracket = 0usize; // `#[…]` variant attributes
+    let mut expect_variant = true; // at depth 1, after `{` or a top-level `,`
+    for t in &toks[i..] {
+        if t.is_punct('{') {
+            depth += 1;
+            if depth == 2 {
+                expect_variant = false; // entering a struct-variant body
+            }
+            continue;
+        }
+        if t.is_punct('}') {
+            if depth == 1 {
+                break; // end of the enum
+            }
+            depth -= 1;
+            continue;
+        }
+        if t.is_punct('(') {
+            paren += 1;
+            continue;
+        }
+        if t.is_punct(')') {
+            paren = paren.saturating_sub(1);
+            continue;
+        }
+        if t.is_punct('[') {
+            bracket += 1;
+            continue;
+        }
+        if t.is_punct(']') {
+            bracket = bracket.saturating_sub(1);
+            continue;
+        }
+        if depth != 1 || paren > 0 || bracket > 0 {
+            continue;
+        }
+        if t.is_punct(',') {
+            expect_variant = true;
+            continue;
+        }
+        if expect_variant && t.kind == TokKind::Ident {
+            variants.push((t.text.as_str(), t.line));
+            expect_variant = false;
+        }
+    }
+    variants
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        SourceFile::parse(rel, rel, src)
+    }
+
+    #[test]
+    fn enum_variants_handles_all_arm_shapes() {
+        let f = file(
+            "sim/events.rs",
+            "pub enum Event {\n\
+                 Plain,\n\
+                 Tuple(u64, usize),\n\
+                 Struct { field: u64, other: bool },\n\
+                 #[allow(dead_code)]\n\
+                 Attributed,\n\
+                 Last { x: u64 }\n\
+             }\n",
+        );
+        let names: Vec<&str> = enum_variants(&f, "Event").iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["Plain", "Tuple", "Struct", "Attributed", "Last"]);
+    }
+
+    #[test]
+    fn r1_scopes_to_critical_dirs() {
+        let critical = file("sim/a.rs", "use std::collections::HashMap;\n");
+        let elsewhere = file("runtime/meta.rs", "use std::collections::HashMap;\n");
+        let mut out = Vec::new();
+        check_hash_collections(&[critical, elsewhere], &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].file, "sim/a.rs");
+        assert_eq!(out[0].rule, "R1");
+    }
+
+    #[test]
+    fn r2_requires_the_now_call_for_instant() {
+        let f = file(
+            "coordinator/x.rs",
+            "use std::time::Instant;\n\
+             fn f(at: Instant) {}\n\
+             fn g() { let t = Instant::now(); }\n",
+        );
+        let mut out = Vec::new();
+        check_wall_clock(&[f], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn r3_distinguishes_allowlist_from_missing_safety() {
+        let outside = file("kvcache/x.rs", "fn f() { unsafe { g() } }\n");
+        let allowed_no_comment = file("runtime/models.rs", "unsafe impl Send for X {}\n");
+        let allowed_ok = file(
+            "runtime/models.rs",
+            "// SAFETY: single-threaded PJRT handle, externally synchronized\n\
+             unsafe impl Send for X {}\n",
+        );
+        let mut out = Vec::new();
+        check_unsafe(&[outside, allowed_no_comment, allowed_ok], &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out[0].message.contains("outside the allowlist"));
+        assert!(out[1].message.contains("SAFETY"));
+    }
+
+    #[test]
+    fn r4_only_bare_unwrap_calls_match() {
+        let f = file(
+            "serve/x.rs",
+            "fn f(x: Option<u32>) -> u32 {\n\
+                 let a = x.unwrap_or(0);\n\
+                 let b = x.unwrap_or_else(|| 1);\n\
+                 let c = x.expect(\"checked above\");\n\
+                 x.unwrap()\n\
+             }\n",
+        );
+        let mut out = Vec::new();
+        check_bare_unwrap(&[f], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 5);
+    }
+
+    #[test]
+    fn r5_flags_unmatched_and_unlisted_variants() {
+        let events = file(
+            "sim/events.rs",
+            "pub enum Event { Tick, Arrive { id: u64 }, Finish(u64) }\n",
+        );
+        let engine = file(
+            "sim/engine.rs",
+            "pub const VALIDATED_EVENTS: &[&str] = &[\"Tick\", \"Arrive\"];\n\
+             fn run(ev: Event) {\n\
+                 match ev {\n\
+                     Event::Tick => {}\n\
+                     Event::Arrive { id } => drop(id),\n\
+                     _ => {}\n\
+                 }\n\
+             }\n",
+        );
+        let mut out = Vec::new();
+        check_event_coverage(&[events, engine], &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().any(|f| f.message.contains("never matched")
+            && f.message.contains("Finish")
+            && f.file == "sim/events.rs"));
+        assert!(out.iter().any(|f| f.message.contains("VALIDATED_EVENTS")
+            && f.message.contains("Finish")
+            && f.file == "sim/engine.rs"));
+    }
+
+    #[test]
+    fn r5_reports_a_missing_coverage_list_once() {
+        let events = file("sim/events.rs", "pub enum Event { Tick }\n");
+        let engine = file(
+            "sim/engine.rs",
+            "fn run(ev: Event) { match ev { Event::Tick => {} } }\n",
+        );
+        let mut out = Vec::new();
+        check_event_coverage(&[events, engine], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("no VALIDATED_EVENTS"));
+    }
+}

@@ -17,7 +17,7 @@
 //! assemble snapshots by hand (`snapshot.view()`). `bench_sim_core`
 //! quantifies the gap between the two paths.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::elastic::Lifecycle;
 use super::{ClusterSnapshot, InstanceView, RequestView};
@@ -170,7 +170,7 @@ impl InstanceStats {
 pub struct ClusterState {
     instances: Vec<InstanceStats>,
     /// request id → (instance index, slot in its membership vector).
-    index: HashMap<RequestId, (usize, usize)>,
+    index: BTreeMap<RequestId, (usize, usize)>,
     /// Scheduling interval (time base of `tokens_per_interval`).
     interval_s: f64,
     /// Assumed iteration time until any instance has measured one.
@@ -195,7 +195,7 @@ impl ClusterState {
             instances: (0..n_instances)
                 .map(|id| InstanceStats::new(id, kv_capacity_tokens))
                 .collect(),
-            index: HashMap::new(),
+            index: BTreeMap::new(),
             interval_s,
             seed_avg_iter_s,
             iter_floor_s,

@@ -263,6 +263,7 @@ impl ReschedulePolicy for MemoryPressureRescheduler {
     }
 
     fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
+        // ANALYZE-OK: R2 profiles the solver (max_decision_us), never sim time
         let t0 = Instant::now();
         self.stats.intervals += 1;
         // same working-set rule as the STAR rescheduler: draining

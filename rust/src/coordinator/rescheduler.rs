@@ -110,6 +110,7 @@ impl Rescheduler {
     /// Run one scheduling interval over a cluster view; returns up to
     /// `max_migrations_per_interval` migrations, best-first.
     pub fn decide(&mut self, view: &ClusterView<'_>) -> Vec<MigrationDecision> {
+        // ANALYZE-OK: R2 profiles the solver (max_decision_us), never sim time
         let t0 = Instant::now();
         self.stats.intervals += 1;
         let mut decisions = Vec::new();

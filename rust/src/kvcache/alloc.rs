@@ -7,7 +7,7 @@
 //! answers the rescheduler's memory-safety query (Alg. 1 line 21:
 //! `N_t(B_t,0) + N̂(r) <= C_mem`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::{Error, RequestId, Result};
 
@@ -21,7 +21,7 @@ pub struct KvCacheManager {
     capacity_blocks: usize,
     free_blocks: usize,
     /// request -> (blocks held, tokens stored)
-    allocs: HashMap<RequestId, KvAlloc>,
+    allocs: BTreeMap<RequestId, KvAlloc>,
     /// Running Σ tokens over `allocs` so [`Self::used_tokens`] is O(1)
     /// (it sits on the admission hot path).
     used_tokens: u64,
@@ -42,7 +42,7 @@ impl KvCacheManager {
             block_tokens,
             capacity_blocks,
             free_blocks: capacity_blocks,
-            allocs: HashMap::new(),
+            allocs: BTreeMap::new(),
             used_tokens: 0,
             peak_used_blocks: 0,
         }

@@ -20,6 +20,11 @@
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
 
+// Part of the unsafe-hygiene gate (`star analyze` R3): any future unsafe
+// fn must re-justify each unsafe operation in its body explicitly.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analyze;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -9,6 +9,9 @@
 //!                   policies and workload scenarios
 //!   validate-bench  assert BENCH_*.json files parse and carry
 //!                   schema_version (the ci.sh --smoke gate)
+//!   analyze         dependency-free determinism/safety lint over
+//!                   rust/src (rules R1-R5, DESIGN.md §14); nonzero
+//!                   exit on findings
 //!
 //! Most options can also be set from a TOML config (`--config path`) with
 //! CLI flags winning.
@@ -43,6 +46,7 @@ fn main() {
         "serve" => run_serve(&args),
         "list" => run_list(),
         "validate-bench" => run_validate_bench(&args),
+        "analyze" => run_analyze(&args),
         "" | "help" => {
             println!("{}", spec.render_help());
             Ok(())
@@ -105,10 +109,16 @@ fn spec() -> Spec {
             ("seed", "n", "PRNG seed"),
             ("duration", "s", "trace duration (simulate)"),
             ("trace-out", "path", "write event trace TSV"),
+            (
+                "rules",
+                "ids",
+                "analyze: comma-separated rule subset (R1..R5 or slugs)",
+            ),
         ],
         flags: vec![
             ("verbose", "chatty progress"),
             ("traces", "record runtime traces"),
+            ("list-rules", "analyze: print the rule catalog and exit"),
         ],
     }
 }
@@ -375,6 +385,53 @@ fn run_validate_bench(args: &Args) -> Result<(), star::Error> {
     }
     println!("validate-bench: {} file(s) OK", args.positionals.len());
     Ok(())
+}
+
+/// `star analyze [--rules R1,R4] [root]` — the determinism/safety lint
+/// pass (DESIGN.md §14). Scans `rust/src` by default (any source root can
+/// be passed as a positional — the fixture-corpus tests do), prints one
+/// machine-readable line per finding (`path:line: Rn rule-name: message |
+/// snippet`), and fails with the finding count when any exist.
+fn run_analyze(args: &Args) -> Result<(), star::Error> {
+    if args.flag("list-rules") {
+        for r in star::analyze::RULES {
+            println!("{} {}: {}", r.id, r.name, r.summary);
+        }
+        return Ok(());
+    }
+    let rules = star::analyze::resolve_rules(args.opt("rules"))?;
+    let root = match args.positionals.first() {
+        Some(p) => std::path::PathBuf::from(p),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or_else(|| {
+                star::Error::Cli(
+                    "cannot find rust/src from the current directory; \
+                     pass the source root as a positional"
+                        .into(),
+                )
+            })?,
+    };
+    let findings = star::analyze::analyze_tree(&root, &rules)?;
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    println!(
+        "analyze: {} finding(s) ({} rule(s) over {})",
+        findings.len(),
+        rules.len(),
+        root.display()
+    );
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        Err(star::Error::Cli(format!(
+            "analyze found {} violation(s)",
+            findings.len()
+        )))
+    }
 }
 
 fn run_serve(args: &Args) -> Result<(), star::Error> {

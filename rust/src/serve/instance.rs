@@ -256,7 +256,9 @@ impl DecodeInstance {
                             (0..bucket).find(|&j| slots[j].as_ref().map(|s| s.id) == Some(vid))
                         {
                             kv_mgr.release(vid);
-                            let v = slots[vi].take().unwrap();
+                            let v = slots[vi]
+                                .take()
+                                .expect("victim slot located by id scan above");
                             oom_victims.push(Box::new(AdmitPayload {
                                 id: v.id,
                                 kv: self.runtime.new_kv_buffer(1),
@@ -272,12 +274,14 @@ impl DecodeInstance {
                     if slots[i].is_none() {
                         continue; // this very slot was the victim
                     }
-                    let slot = slots[i].as_mut().unwrap();
+                    let slot = slots[i].as_mut().expect("slot checked occupied above");
                     kv_mgr
                         .append_token(slot.id, self.id)
                         .expect("append after eviction");
                 }
-                let slot = slots[i].as_mut().unwrap();
+                let slot = slots[i]
+                    .as_mut()
+                    .expect("slot survives eviction handling above");
                 slot.pos += 1;
                 slot.token_history.push(slot.next_token as u8);
 
@@ -374,7 +378,9 @@ impl DecodeInstance {
 
             // 5. completions
             for i in finished {
-                let slot = slots[i].take().unwrap();
+                let slot = slots[i]
+                    .take()
+                    .expect("finished indices point at occupied slots");
                 kv_mgr.release(slot.id);
                 let _ = events.send(DecodeEvent::Finished {
                     instance: self.id,
@@ -484,7 +490,9 @@ impl DecodeInstance {
         let Some(idx) = (0..bucket).find(|&i| slots[i].as_ref().map(|s| s.id) == Some(id)) else {
             return; // finished in the meantime: stale decision, ignore
         };
-        let slot = slots[idx].take().unwrap();
+        let slot = slots[idx]
+            .take()
+            .expect("migrate-out slot located by id scan above");
         kv_mgr.release(id);
         let kv = self
             .runtime

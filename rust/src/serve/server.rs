@@ -1,7 +1,7 @@
 //! The serving coordinator: proxy + dispatch + STAR rescheduling over the
 //! live instance threads.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -151,7 +151,7 @@ impl PrefillWorker {
 struct SessionRt {
     plan: SessionPlan,
     /// request id -> (session, index of its successor turn in the script).
-    cursor: HashMap<RequestId, (u32, u32)>,
+    cursor: BTreeMap<RequestId, (u32, u32)>,
     /// (arrival wall-time s, request) awaiting injection.
     queue: Vec<(Time, LiveRequest)>,
     next_id: RequestId,
@@ -260,7 +260,7 @@ impl Server {
                     break;
                 }
                 let req = {
-                    let guard = rx.lock().unwrap();
+                    let guard = rx.lock().expect("prefill rx mutex poisoned: a worker panicked");
                     guard.recv_timeout(Duration::from_millis(20))
                 };
                 let req = match req {
@@ -294,7 +294,11 @@ impl Server {
 
     /// Serve a workload to completion; returns aggregated metrics.
     pub fn run(&self, mut requests: Vec<LiveRequest>) -> Result<ServeOutcome> {
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        requests.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .expect("trace arrivals are finite")
+        });
         let exp = &self.params.exp;
         let n_requests = requests.len();
         // the live execution path for the configured predictor name. The
@@ -344,7 +348,7 @@ impl Server {
         }
 
         // --- coordinator state ---
-        let mut trackers: HashMap<RequestId, ReqTracker> = HashMap::new();
+        let mut trackers: BTreeMap<RequestId, ReqTracker> = BTreeMap::new();
         for r in &requests {
             trackers.insert(
                 r.id,
@@ -412,7 +416,7 @@ impl Server {
         let mut migrating: Vec<RequestId> = Vec::new();
         // exact capacity reservations made by migration decisions:
         // request -> (dst instance, reserved tokens)
-        let mut reservations: HashMap<RequestId, (InstanceId, u64)> = HashMap::new();
+        let mut reservations: BTreeMap<RequestId, (InstanceId, u64)> = BTreeMap::new();
         // admission retry queue: (not_before, payload)
         let mut retries: VecDeque<(Instant, Box<AdmitPayload>)> = VecDeque::new();
         let mut next_arrival = 0usize;
@@ -546,7 +550,9 @@ impl Server {
                 if *not_before > now_i {
                     break;
                 }
-                let (_, payload) = retries.pop_front().unwrap();
+                let (_, payload) = retries
+                    .pop_front()
+                    .expect("front checked non-empty above");
                 migrating.retain(|&id| id != payload.id);
                 state.set_migrating(payload.id, false);
                 let di = if let Some((dst, amt)) = reservations.remove(&payload.id) {
@@ -602,7 +608,10 @@ impl Server {
                     } => {
                         eprintln!("[serve] prefill failed for {id}: {msg}");
                         failed += 1;
-                        trackers.get_mut(&id).unwrap().done = true;
+                        trackers
+                            .get_mut(&id)
+                            .expect("prefill error for untracked request")
+                            .done = true;
                         prefill_inflight_reqs = prefill_inflight_reqs.saturating_sub(1);
                         prefill_inflight_tokens =
                             prefill_inflight_tokens.saturating_sub(prompt_tokens);
@@ -618,7 +627,9 @@ impl Server {
                         prefill_inflight_tokens =
                             prefill_inflight_tokens.saturating_sub(req.prompt.len() as u64);
                         rates.on_prefill_done(req.prompt.len() as u64);
-                        let t = trackers.get_mut(&req.id).unwrap();
+                        let t = trackers
+                            .get_mut(&req.id)
+                            .expect("prefill done for untracked request");
                         t.latency.prefill_done = Some(since(at));
                         t.latency.first_token = Some(since(at));
                         t.last_token = Some(at);
@@ -1031,11 +1042,11 @@ impl Server {
         &self,
         ev: DecodeEvent,
         since: &dyn Fn(Instant) -> Time,
-        trackers: &mut HashMap<RequestId, ReqTracker>,
+        trackers: &mut BTreeMap<RequestId, ReqTracker>,
         instances: &mut [InstanceState],
         state: &mut ClusterState,
         migrating: &mut Vec<RequestId>,
-        reservations: &mut HashMap<RequestId, (InstanceId, u64)>,
+        reservations: &mut BTreeMap<RequestId, (InstanceId, u64)>,
         recorder: &mut TraceRecorder,
         retries: &mut VecDeque<(Instant, Box<AdmitPayload>)>,
         completed: &mut usize,

@@ -10,7 +10,7 @@
 //! `benches/bench_sim_core.rs` quantifies the gap and
 //! [`SimParams::validate_state`] proves the two agree after every event.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use super::events::{Event, EventQueue};
 use super::report::SimReport;
@@ -139,7 +139,7 @@ pub struct Simulator {
     /// Multi-round session scripts (scenario workloads; empty otherwise).
     sessions: SessionPlan,
     /// request id -> (session, index of its successor turn in the script).
-    session_cursor: HashMap<RequestId, (u32, u32)>,
+    session_cursor: BTreeMap<RequestId, (u32, u32)>,
     /// Realized request-id chains per session, in turn order.
     session_chains: Vec<Vec<RequestId>>,
     /// Follow-up events scheduled but not yet fired (their request records
@@ -166,6 +166,24 @@ pub struct Simulator {
     rates: RateMeter,
     last_scale_t: Time,
 }
+
+/// Event-coverage list for the invariant checker: every [`Event`] variant
+/// [`Simulator::run`] dispatches must be named here, so adding an event
+/// forces a decision about which invariants it preserves. Checked at
+/// runtime under `validate_state` and statically by `star analyze` R5
+/// (which also requires each variant to be matched in `run`).
+pub const VALIDATED_EVENTS: &[&str] = &[
+    "Arrival",
+    "PrefillDone",
+    "DecodeStep",
+    "MigrationDone",
+    "SchedulerTick",
+    "SessionFollowUp",
+    "ScaleTick",
+    "InstanceReady",
+    "DrainComplete",
+    "PrefixTransferDone",
+];
 
 impl Simulator {
     /// Build with the builtin policy set. Panics on unknown policy names;
@@ -286,7 +304,7 @@ impl Simulator {
         // no-op), so frozen-pool trajectories are untouched
         queue.push(exp.elastic.scale_interval_s, Event::ScaleTick);
 
-        let mut session_cursor = HashMap::new();
+        let mut session_cursor = BTreeMap::new();
         let mut session_chains = vec![Vec::new(); trace.sessions.scripts.len()];
         for &(rid, s) in &trace.sessions.first_turns {
             session_cursor.insert(rid, (s, 0u32));
@@ -369,6 +387,17 @@ impl Simulator {
             self.now = at.max(self.now);
             if self.now > self.params.max_sim_time {
                 break;
+            }
+            if self.params.validate_state {
+                // coverage list first: a new Event variant must be added
+                // to VALIDATED_EVENTS (and its invariants to
+                // assert_state_consistent) before it may fire. `star
+                // analyze` R5 enforces the same list statically.
+                assert!(
+                    VALIDATED_EVENTS.contains(&ev.name()),
+                    "event `{}` missing from the VALIDATED_EVENTS coverage list",
+                    ev.name()
+                );
             }
             match ev {
                 Event::Arrival { request } => self.on_arrival(request),
@@ -2042,7 +2071,8 @@ mod tests {
         };
         let report = Simulator::new(params, &trace).run();
         assert_eq!(report.completed.len(), 4);
-        let by_id: HashMap<_, _> = report.completed.iter().map(|l| (l.id, l)).collect();
+        let by_id: std::collections::HashMap<_, _> =
+            report.completed.iter().map(|l| (l.id, l)).collect();
         let big_done = by_id[&0].prefill_done.unwrap();
         for i in 1..=3u64 {
             let short_done = by_id[&i].prefill_done.unwrap();

@@ -57,6 +57,26 @@ pub enum Event {
     },
 }
 
+impl Event {
+    /// Variant name, as listed in the engine's `VALIDATED_EVENTS`
+    /// coverage const (the invariant checker asserts membership before
+    /// dispatching each event).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::Arrival { .. } => "Arrival",
+            Event::PrefillDone { .. } => "PrefillDone",
+            Event::DecodeStep { .. } => "DecodeStep",
+            Event::MigrationDone { .. } => "MigrationDone",
+            Event::SchedulerTick => "SchedulerTick",
+            Event::SessionFollowUp { .. } => "SessionFollowUp",
+            Event::ScaleTick => "ScaleTick",
+            Event::InstanceReady { .. } => "InstanceReady",
+            Event::DrainComplete { .. } => "DrainComplete",
+            Event::PrefixTransferDone { .. } => "PrefixTransferDone",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 struct Scheduled {
     at: Time,

@@ -24,7 +24,7 @@ mod engine;
 mod events;
 mod report;
 
-pub use engine::{SimParams, Simulator, StateMode};
+pub use engine::{SimParams, Simulator, StateMode, VALIDATED_EVENTS};
 pub use report::{ClassReport, SimReport};
 
 use crate::metrics::RequestLatency;

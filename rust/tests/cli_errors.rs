@@ -108,6 +108,58 @@ fn validate_bench_accepts_good_and_rejects_bad_json() {
 }
 
 #[test]
+fn analyze_unknown_rule_lists_valid_ids() {
+    let (ok, _, err) = run(&["analyze", "--rules", "R9"]);
+    assert!(!ok);
+    assert!(err.contains("unknown analyze rule `R9`"), "{err}");
+    assert!(err.contains("R1|R2|R3|R4|R5"), "must list candidates: {err}");
+}
+
+#[test]
+fn analyze_reports_fixture_findings_and_exits_nonzero() {
+    let fixtures = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/analyze");
+    let (ok, out, err) = run(&["analyze", fixtures]);
+    assert!(!ok, "known-bad corpus must fail the pass");
+    assert!(err.contains("violation"), "{err}");
+    // machine-readable one-liners: path:line: Rn rule-name: message | snippet
+    assert!(out.contains("sim/engine.rs:8: R1 no-hash-collections:"), "{out}");
+    assert!(out.contains("| use std::collections::HashMap;"), "{out}");
+    assert!(out.contains("coordinator/state.rs:7: R2 no-wall-clock:"), "{out}");
+    assert!(out.contains("kvcache/unsafe_bad.rs:5: R3 unsafe-allowlist:"), "{out}");
+    assert!(out.contains("sim/engine.rs:14: R4 no-bare-unwrap:"), "{out}");
+    assert!(out.contains("R5 event-coverage:"), "{out}");
+}
+
+#[test]
+fn analyze_rule_subset_and_clean_tree_exit_zero() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let (ok, out, err) = run(&["analyze", src]);
+    assert!(ok, "rust/src must be analyze-clean: {out}{err}");
+    assert!(out.contains("0 finding(s)"), "{out}");
+    // a subset selection runs only the named rules
+    let fixtures = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/analyze");
+    let (ok, out, _) = run(&["analyze", "--rules", "R4", fixtures]);
+    assert!(!ok);
+    assert!(out.contains("R4 no-bare-unwrap"), "{out}");
+    assert!(!out.contains("R1 no-hash-collections"), "subset must skip R1: {out}");
+}
+
+#[test]
+fn analyze_list_rules_prints_the_catalog() {
+    let (ok, out, err) = run(&["analyze", "--list-rules"]);
+    assert!(ok, "{err}");
+    for needle in [
+        "R1 no-hash-collections",
+        "R2 no-wall-clock",
+        "R3 unsafe-allowlist",
+        "R4 no-bare-unwrap",
+        "R5 event-coverage",
+    ] {
+        assert!(out.contains(needle), "missing `{needle}`: {out}");
+    }
+}
+
+#[test]
 fn unknown_predictor_lists_valid_names() {
     let (ok, _, err) = run(&["simulate", "--predictor", "bogus", "--requests", "1"]);
     assert!(!ok);

@@ -1,0 +1,23 @@
+//! Fixture: wall-clock leaks in the simulated core. Expected findings:
+//!   R2 at the `SystemTime` use (line 7) and the call (line 10)
+//!   R2 at the `Instant::now` call (line 16); line 15's un-called
+//!     `Instant` type mention must NOT fire
+//! The waived HashSet (line 21) must NOT fire.
+
+use std::time::SystemTime;
+
+pub fn wall_seed() -> u64 {
+    match SystemTime::now().elapsed() {
+        _ => 0,
+    }
+}
+
+pub fn measure(at: std::time::Instant) -> std::time::Duration {
+    at.elapsed() + std::time::Instant::now().elapsed()
+}
+
+pub fn waived_set() -> usize {
+    // ANALYZE-OK: R1 fixture waiver — built and drained, never iterated
+    let s: std::collections::HashSet<u32> = Default::default();
+    s.len()
+}

@@ -1,0 +1,6 @@
+//! Fixture: `unsafe` outside the R3 allowlist (expected finding: line 5).
+
+pub fn peek(p: *const u8) -> u8 {
+    // SAFETY: a comment alone does not move a file onto the allowlist
+    unsafe { *p }
+}

@@ -1,0 +1,12 @@
+//! Fixture: the allowlisted path. The first block is missing its
+//! `// SAFETY:` comment (expected R3 finding: line 6); the second is
+//! properly commented and must NOT fire.
+
+pub fn no_comment(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub fn with_comment(p: *const u8) -> u8 {
+    // SAFETY: fixture — caller guarantees p is valid and aligned
+    unsafe { *p }
+}

@@ -1,0 +1,16 @@
+//! Fixture: a clean serve-layer file — zero findings expected. Wall
+//! clock is legal here (R2 exempts serve/), `expect` satisfies R4, and
+//! identifier substrings / string contents must not trip R1 or R3.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+pub fn memory_unsafe_name_is_not_a_keyword() -> &'static str {
+    "unsafe HashMap in a string literal is invisible to the lexer"
+}
+
+pub fn serve_tick(m: &mut BTreeMap<u64, Instant>) -> Instant {
+    let now = Instant::now();
+    m.insert(0, now);
+    *m.get(&0).expect("inserted above")
+}

@@ -1,0 +1,33 @@
+//! Fixture: known-bad engine. Expected findings (tests/analyze.rs pins
+//! the exact lines):
+//!   R1 at the `use` (line 8) and the signature (line 13)
+//!   R4 at the bare unwrap (line 14)
+//!   R5 at the VALIDATED_EVENTS const (line 11): `Finish` not listed
+//! The test module at the bottom must produce NO findings.
+
+use std::collections::HashMap;
+
+// the fixture coverage list omits `Finish`
+pub const VALIDATED_EVENTS: &[&str] = &["Tick", "Arrive"];
+
+pub fn step(m: &mut HashMap<u64, u64>, ev: Event) -> u64 {
+    let v = *m.get(&0).unwrap();
+    match ev {
+        Event::Tick => v,
+        Event::Arrive { id } => id,
+        _ => 0, // `Event::Finish` is never matched -> R5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap; // test code: R1 must NOT fire
+
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let m: HashMap<u64, u64> = HashMap::new();
+        assert!(m.get(&0).copied().unwrap_or(0) == 0);
+        let x: Option<u32> = Some(1);
+        x.unwrap(); // test code: R4 must NOT fire
+    }
+}

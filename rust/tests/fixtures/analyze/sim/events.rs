@@ -1,0 +1,9 @@
+//! Fixture: a mini event enum. `Finish` is deliberately neither matched
+//! in the fixture engine nor listed in its VALIDATED_EVENTS — R5 must
+//! flag it twice (once per missing surface).
+
+pub enum Event {
+    Tick,
+    Arrive { id: u64 },
+    Finish(u64),
+}
