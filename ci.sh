@@ -10,6 +10,11 @@
 #   ./ci.sh --bench NAME  build + run ONE bench (benches/NAME.rs) at smoke
 #                       scale and validate its BENCH_*.json — the quick
 #                       inner loop while iterating on a single bench
+#   ./ci.sh --soak      build + reliability soak: several seeds of the
+#                       fault-injection / heterogeneous-fleet scenarios
+#                       (degraded_fleet, mixed_gen) with --fail-on-lost,
+#                       then the reliability bench + JSON validation —
+#                       the scheduled CI soak job's entry point
 #   ./ci.sh --no-lint   skip fmt/clippy (CI runs them as a separate job
 #                       so lint failures report independently of tests)
 #   ./ci.sh --no-analyze  skip the `star analyze` determinism/safety lint
@@ -23,12 +28,14 @@ set -uo pipefail
 cd "$(dirname "$0")/rust" || exit 1
 
 SMOKE=0
+SOAK=0
 LINT=1
 ANALYZE=1
 BENCH_ONLY=""
 while [ $# -gt 0 ]; do
   case "$1" in
     --smoke) SMOKE=1 ;;
+    --soak) SOAK=1 ;;
     --no-lint) LINT=0 ;;
     --no-analyze) ANALYZE=0 ;;
     --bench)
@@ -40,7 +47,7 @@ while [ $# -gt 0 ]; do
       BENCH_ONLY="$1"
       ;;
     *)
-      echo "ci.sh: unknown argument \`$1\` (supported: --smoke, --bench NAME, --no-lint, --no-analyze)" >&2
+      echo "ci.sh: unknown argument \`$1\` (supported: --smoke, --soak, --bench NAME, --no-lint, --no-analyze)" >&2
       exit 2
       ;;
   esac
@@ -86,11 +93,24 @@ run_step() {
   STEP_NAMES+=("$name"); STEP_TIMES+=("$dt")
 }
 
+# Expected bench outputs: the first argument of each BenchJson::new call
+# in benches/*.rs. --smoke hands this list to `validate-bench --require`,
+# so a bench that is deleted, renamed, or silently stops emitting its
+# JSON fails the gate instead of quietly shrinking it. Keep in sync when
+# adding a bench (check: grep -A1 'BenchJson::new' benches/*.rs).
+EXPECTED_BENCHES="fig2_workload,fig3_imbalance,fig7_continuous,predictor,fig8_costmodel,fig10_end2end,fig11_variance,fig12_traces,fig13_scaling,elastic,prefix_cache,reliability,sim_core,table1_predictor,table3_bins,table4_interval"
+
+# Per-bench smoke logs land here (inside the cargo target dir, so CI can
+# upload them as an artifact on failure and `cargo clean` sweeps them).
+SMOKE_LOG_DIR="target/smoke-logs"
+
 # Every benches/*.rs at reduced scale; all BENCH_*.json must parse and
 # carry schema_version (enforced through the shared writer in
-# src/bench/output.rs + `star validate-bench`).
+# src/bench/output.rs + `star validate-bench`), and every name in
+# EXPECTED_BENCHES must be present.
 smoke_gate() {
   rm -f BENCH_*.json
+  mkdir -p "$SMOKE_LOG_DIR"
   # derive the list from benches/*.rs so a newly added bench cannot
   # silently escape the gate (an unregistered .rs fails `cargo bench`)
   local benches=()
@@ -105,9 +125,9 @@ smoke_gate() {
   local b
   for b in "${benches[@]}"; do
     echo "==> [smoke] cargo bench --bench $b"
-    if ! STAR_BENCH_SMOKE=1 cargo bench --bench "$b" > "/tmp/star_smoke_$b.log" 2>&1; then
-      echo "smoke: bench $b failed; last 40 log lines:" >&2
-      tail -n 40 "/tmp/star_smoke_$b.log" >&2
+    if ! STAR_BENCH_SMOKE=1 cargo bench --bench "$b" > "$SMOKE_LOG_DIR/$b.log" 2>&1; then
+      echo "smoke: bench $b failed; last 40 log lines (full log: rust/$SMOKE_LOG_DIR/$b.log):" >&2
+      tail -n 40 "$SMOKE_LOG_DIR/$b.log" >&2
       return 1
     fi
   done
@@ -116,7 +136,7 @@ smoke_gate() {
     echo "smoke: no BENCH_*.json emitted" >&2
     return 1
   fi
-  ./target/release/star validate-bench "${files[@]}"
+  ./target/release/star validate-bench --require "$EXPECTED_BENCHES" "${files[@]}"
 }
 
 # single-bench fast path: build, run it at smoke scale, validate its JSON
@@ -133,11 +153,55 @@ single_bench() {
   ./target/release/star validate-bench "${files[@]}"
 }
 
+# Reliability soak (the scheduled CI job): several seeds of the fault-
+# injection and heterogeneous-fleet scenarios must complete with ZERO
+# lost requests (`--fail-on-lost` turns any loss into a nonzero exit),
+# then the reliability bench runs at smoke scale and its JSON must
+# validate. Catches rare-seed crash-path bugs the fixed-seed tier-1
+# tests cannot.
+soak_gate() {
+  local seeds=(11 17 23)
+  local scen s
+  for scen in degraded_fleet mixed_gen; do
+    for s in "${seeds[@]}"; do
+      echo "==> [soak] star simulate --scenario $scen --seed $s --requests 600 --fail-on-lost"
+      if ! ./target/release/star simulate --scenario "$scen" --seed "$s" \
+            --requests 600 --fail-on-lost; then
+        echo "soak: scenario \`$scen\` seed $s failed (lost requests or error)" >&2
+        return 1
+      fi
+    done
+  done
+  rm -f BENCH_*.json
+  mkdir -p "$SMOKE_LOG_DIR"
+  echo "==> [soak] cargo bench --bench fig_reliability"
+  if ! STAR_BENCH_SMOKE=1 cargo bench --bench fig_reliability \
+        > "$SMOKE_LOG_DIR/fig_reliability.log" 2>&1; then
+    echo "soak: fig_reliability failed; last 40 log lines:" >&2
+    tail -n 40 "$SMOKE_LOG_DIR/fig_reliability.log" >&2
+    return 1
+  fi
+  local files=(BENCH_*.json)
+  if [ ! -e "${files[0]}" ]; then
+    echo "soak: no BENCH_*.json emitted" >&2
+    return 1
+  fi
+  ./target/release/star validate-bench --require reliability "${files[@]}"
+}
+
 if [ -n "$BENCH_ONLY" ]; then
   run_step build cargo build --release
   run_step bench single_bench
   print_summary
   echo "ci.sh: bench \`$BENCH_ONLY\` passed"
+  exit 0
+fi
+
+if [ "$SOAK" = "1" ]; then
+  run_step build cargo build --release
+  run_step soak soak_gate
+  print_summary
+  echo "ci.sh: soak gate passed"
   exit 0
 fi
 

@@ -11,8 +11,8 @@ use crate::coordinator::PolicyRegistry;
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::sim::{SimParams, SimReport, Simulator};
 use crate::workload::{
-    ArrivalProcess, ClassMix, ClassSpec, Dataset, Request, ScenarioSpec, ScenarioTrace,
-    SessionProfile, TraceGen,
+    ArrivalProcess, ClassMix, ClassSpec, Dataset, FaultConfig, FleetSpec, Request, ScenarioSpec,
+    ScenarioTrace, SessionProfile, TraceGen,
 };
 use crate::{Error, Result};
 
@@ -202,6 +202,8 @@ impl ScenarioRegistry {
         r.register("bursty_mixed", build_bursty_mixed);
         r.register("diurnal_chat", build_diurnal_chat);
         r.register("multi_round", build_multi_round);
+        r.register("degraded_fleet", build_degraded_fleet);
+        r.register("mixed_gen", build_mixed_gen);
         r
     }
 
@@ -267,6 +269,8 @@ fn build_bursty_mixed(exp: &ExperimentConfig) -> ScenarioSpec {
         classes: ClassMix::mixed_default(),
         sessions: None,
         pico_scale: None,
+        faults: None,
+        fleet: None,
     }
 }
 
@@ -287,6 +291,8 @@ fn build_diurnal_chat(exp: &ExperimentConfig) -> ScenarioSpec {
         classes: ClassMix::new(vec![chat, summ]).expect("builtin mix"),
         sessions: None,
         pico_scale: None,
+        faults: None,
+        fleet: None,
     }
 }
 
@@ -308,5 +314,48 @@ fn build_multi_round(exp: &ExperimentConfig) -> ScenarioSpec {
             max_context_tokens: 32_768,
         }),
         pico_scale: None,
+        faults: None,
+        fleet: None,
+    }
+}
+
+/// Reliability scenario: a heterogeneous fleet (one slow, one
+/// small-memory class mixed into the baseline) under stochastic fault
+/// injection — instances crash with a 10-minute MTBF and come back
+/// ~45 s later. The soak gate runs this across seeds and asserts zero
+/// lost requests.
+fn build_degraded_fleet(exp: &ExperimentConfig) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "degraded_fleet".to_string(),
+        arrival: ArrivalProcess::Poisson {
+            rps: exp.cluster.rps,
+        },
+        classes: ClassMix::mixed_default(),
+        sessions: None,
+        pico_scale: None,
+        faults: Some(FaultConfig {
+            mtbf_s: 600.0,
+            mttr_s: 45.0,
+            max_failures: 4,
+            script: vec![],
+        }),
+        fleet: Some(FleetSpec::from_mults(&[1.0, 0.7, 1.0], &[1.0, 0.8, 1.2])),
+    }
+}
+
+/// Two hardware generations side by side (last-gen at half speed but
+/// double memory), no faults: exercises hardware-aware dispatch and
+/// speed-normalized EWMAs in isolation.
+fn build_mixed_gen(exp: &ExperimentConfig) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "mixed_gen".to_string(),
+        arrival: ArrivalProcess::Poisson {
+            rps: exp.cluster.rps,
+        },
+        classes: ClassMix::mixed_default(),
+        sessions: None,
+        pico_scale: None,
+        faults: None,
+        fleet: Some(FleetSpec::from_mults(&[1.0, 0.5], &[1.0, 2.0])),
     }
 }

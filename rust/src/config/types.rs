@@ -4,7 +4,8 @@ use std::collections::BTreeMap;
 
 use super::{Config, Value};
 use crate::workload::{
-    ArrivalProcess, ClassMix, ClassSpec, Dataset, ScenarioSpec, SessionProfile,
+    ArrivalProcess, ClassMix, ClassSpec, Dataset, FaultConfig, FaultEvent, FleetSpec,
+    ScenarioSpec, SessionProfile,
 };
 use crate::{Error, Result};
 
@@ -332,6 +333,12 @@ pub struct ExperimentConfig {
     /// legacy stationary single-class synthesis from `cluster.dataset` /
     /// `cluster.rps`.
     pub scenario: Option<ScenarioSpec>,
+    /// Failure-injection plan (`[faults]` table). Takes precedence over a
+    /// plan carried by a named scenario's trace.
+    pub faults: Option<FaultConfig>,
+    /// Heterogeneous decode-fleet shape (`[fleet]` table). Takes
+    /// precedence over a fleet carried by a named scenario's trace.
+    pub fleet: Option<FleetSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -352,6 +359,8 @@ impl Default for ExperimentConfig {
             policy_params: BTreeMap::new(),
             scenario_name: None,
             scenario: None,
+            faults: None,
+            fleet: None,
         }
     }
 }
@@ -465,6 +474,8 @@ impl ExperimentConfig {
             budget_tokens: budget as u64,
             ttl_s: cfg.f64_or("kvcache.ttl_s", kd.ttl_s),
         };
+        let faults = faults_from_config(cfg)?;
+        let fleet = fleet_from_config(cfg)?;
         Ok(ExperimentConfig {
             cluster,
             rescheduler,
@@ -484,6 +495,8 @@ impl ExperimentConfig {
             policy_params,
             scenario_name,
             scenario,
+            faults,
+            fleet,
         })
     }
 
@@ -528,6 +541,12 @@ impl ExperimentConfig {
         }
         if let Some(spec) = &self.scenario {
             spec.validate()?;
+        }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+        }
+        if let Some(f) = &self.fleet {
+            f.validate()?;
         }
         for (key, q) in [
             ("predictor.conservative_q", self.predictor_conservative_q),
@@ -742,9 +761,114 @@ fn scenario_from_config(cfg: &Config, cluster: &ClusterConfig) -> Result<Option<
         classes,
         sessions,
         pico_scale: None,
+        // faults / fleet live at the experiment level (`[faults]` /
+        // `[fleet]` tables, see `faults_from_config`), not inside the
+        // custom workload tables
+        faults: None,
+        fleet: None,
     };
     spec.validate()?;
     Ok(Some(spec))
+}
+
+/// Assemble a [`FaultConfig`] from the `[faults]` table, or `None` when
+/// absent. `faults.script` is a comma-separated list of scripted
+/// failures, each an `at:instance:down_s` triple (e.g.
+/// `"30:0:15, 90:2:0"` — instance 2's crash is permanent).
+fn faults_from_config(cfg: &Config) -> Result<Option<FaultConfig>> {
+    if !cfg.keys().any(|k| k.starts_with("faults.")) {
+        return Ok(None);
+    }
+    let fd = FaultConfig::default();
+    // range-checked as i64 BEFORE the usize cast, same rationale as the
+    // elastic counts above
+    let max_failures = cfg.i64_or("faults.max_failures", fd.max_failures as i64);
+    if max_failures < 0 {
+        return Err(Error::config("faults.max_failures must be >= 0"));
+    }
+    let mut script = Vec::new();
+    match cfg.get("faults.script") {
+        None => {}
+        Some(Value::Str(s)) => {
+            for part in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+                let fields: Vec<&str> = part.split(':').map(str::trim).collect();
+                let parsed = if fields.len() == 3 {
+                    match (
+                        fields[0].parse::<f64>(),
+                        fields[1].parse::<usize>(),
+                        fields[2].parse::<f64>(),
+                    ) {
+                        (Ok(at), Ok(instance), Ok(down_s)) => Some(FaultEvent {
+                            at,
+                            instance,
+                            down_s,
+                        }),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                match parsed {
+                    Some(ev) => script.push(ev),
+                    None => {
+                        return Err(Error::config(format!(
+                            "faults.script entry `{part}` must be an \
+                             `at:instance:down_s` triple (e.g. \"30:0:15\")"
+                        )))
+                    }
+                }
+            }
+        }
+        Some(_) => {
+            return Err(Error::config(
+                "faults.script must be a string of `at:instance:down_s` triples",
+            ))
+        }
+    }
+    let faults = FaultConfig {
+        mtbf_s: cfg.f64_or("faults.mtbf_s", fd.mtbf_s),
+        mttr_s: cfg.f64_or("faults.mttr_s", fd.mttr_s),
+        max_failures: max_failures as usize,
+        script,
+    };
+    faults.validate()?;
+    Ok(Some(faults))
+}
+
+/// Assemble a [`FleetSpec`] from the `[fleet]` table, or `None` when
+/// absent. `speed_mults` / `mem_mults` are comma-separated float lists
+/// cycled over decode instance ids; the shorter list repeats.
+fn fleet_from_config(cfg: &Config) -> Result<Option<FleetSpec>> {
+    if !cfg.keys().any(|k| k.starts_with("fleet.")) {
+        return Ok(None);
+    }
+    let list = |key: &str| -> Result<Vec<f64>> {
+        match cfg.get(key) {
+            None => Ok(Vec::new()),
+            Some(Value::Str(s)) => s
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.parse::<f64>()
+                        .map_err(|_| Error::config(format!("{key}: `{t}` is not a number")))
+                })
+                .collect(),
+            Some(_) => Err(Error::config(format!(
+                "{key} must be a comma-separated string of floats (e.g. \"1.0, 0.5\")"
+            ))),
+        }
+    };
+    let speed = list("fleet.speed_mults")?;
+    let mem = list("fleet.mem_mults")?;
+    if speed.is_empty() && mem.is_empty() {
+        return Err(Error::config(
+            "a [fleet] table needs fleet.speed_mults and/or fleet.mem_mults",
+        ));
+    }
+    let fleet = FleetSpec::from_mults(&speed, &mem);
+    fleet.validate()?;
+    Ok(Some(fleet))
 }
 
 #[cfg(test)]
@@ -1085,6 +1209,53 @@ mod tests {
         exp.kvcache.policy = "lru".to_string();
         exp.kvcache.budget_tokens = 0;
         assert!(exp.validate().is_err());
+    }
+
+    #[test]
+    fn faults_and_fleet_tables_parse_and_validate() {
+        let cfg = Config::from_str(
+            "[faults]\nmtbf_s = 300\nmttr_s = 20\nmax_failures = 3\n\
+             script = \"30:0:15, 90:2:0\"\n\
+             [fleet]\nspeed_mults = \"1.0, 0.5\"\nmem_mults = \"1.0, 2.0\"\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        let f = exp.faults.as_ref().expect("[faults] table present");
+        assert!((f.mtbf_s - 300.0).abs() < 1e-12);
+        assert!((f.mttr_s - 20.0).abs() < 1e-12);
+        assert_eq!(f.max_failures, 3);
+        assert_eq!(
+            f.script,
+            vec![
+                FaultEvent { at: 30.0, instance: 0, down_s: 15.0 },
+                FaultEvent { at: 90.0, instance: 2, down_s: 0.0 },
+            ]
+        );
+        assert!(f.enabled());
+        let fl = exp.fleet.as_ref().expect("[fleet] table present");
+        assert_eq!(fl.profiles.len(), 2);
+        assert!((fl.profile(1).speed_mult - 0.5).abs() < 1e-12);
+        assert!((fl.profile(1).mem_mult - 2.0).abs() < 1e-12);
+        exp.validate().unwrap();
+        // absent tables stay None
+        let exp = ExperimentConfig::from_config(&Config::from_str("").unwrap()).unwrap();
+        assert!(exp.faults.is_none() && exp.fleet.is_none());
+        // malformed script entries / degenerate values are rejected
+        for bad in [
+            "[faults]\nscript = \"30:0\"\n",
+            "[faults]\nscript = \"x:0:5\"\n",
+            "[faults]\nmax_failures = -1\n",
+            "[faults]\nmtbf_s = 60\nmttr_s = 0\n",
+            "[fleet]\nspeed_mults = \"1.0, nope\"\n",
+            "[fleet]\nspeed_mults = \"0.0\"\n",
+            "[fleet]\nmem_mults = \"\"\n",
+        ] {
+            let cfg = Config::from_str(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_config(&cfg).is_err(),
+                "`{bad}` must be rejected"
+            );
+        }
     }
 
     #[test]

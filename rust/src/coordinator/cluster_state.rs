@@ -24,6 +24,33 @@ use super::{ClusterSnapshot, InstanceView, RequestView};
 use crate::predictor::{normal_quantile, Prediction};
 use crate::{InstanceId, RequestId};
 
+/// Per-instance hardware class for heterogeneous fleets. A profile scales
+/// the *modeled* execution substrate, not the policy code: `speed_mult`
+/// divides the simulated decode iteration time (2.0 = twice as fast) and
+/// `mem_mult` scales the instance's KV capacity at construction. The
+/// default `{1.0, 1.0}` is a uniform fleet — every pre-existing scenario
+/// is unchanged. Policies read the profile through [`InstanceRef`] (the
+/// `hardware_aware` dispatch places long-prediction requests on
+/// big-memory instances and normalizes load by speed class).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HardwareProfile {
+    /// Relative decode speed (>0): modeled iteration time is divided by
+    /// this, so 0.5 is a half-speed (degraded / older-generation) card.
+    pub speed_mult: f64,
+    /// Relative KV memory (>0): capacity is scaled by this at
+    /// construction (then rounded to whole blocks by the allocator).
+    pub mem_mult: f64,
+}
+
+impl Default for HardwareProfile {
+    fn default() -> Self {
+        HardwareProfile {
+            speed_mult: 1.0,
+            mem_mult: 1.0,
+        }
+    }
+}
+
 /// KV-token admission watermark (vLLM-style 10% growth headroom): an
 /// instance admits a request only while `used + need` stays below this
 /// fraction of capacity. Shared by the drivers' admission control and by
@@ -64,6 +91,8 @@ pub struct InstanceStats {
     /// Elastic-pool lifecycle; only `Active` instances accept dispatches
     /// or migration arrivals (see `coordinator::elastic`).
     lifecycle: Lifecycle,
+    /// Hardware class (heterogeneous fleets); default = uniform.
+    hardware: HardwareProfile,
 }
 
 impl InstanceStats {
@@ -80,6 +109,7 @@ impl InstanceStats {
             ewma_iter_ms: 0.0,
             iters: 0,
             lifecycle: Lifecycle::Active,
+            hardware: HardwareProfile::default(),
         }
     }
 
@@ -154,6 +184,11 @@ impl InstanceStats {
     #[inline]
     pub fn lifecycle(&self) -> Lifecycle {
         self.lifecycle
+    }
+
+    #[inline]
+    pub fn hardware(&self) -> HardwareProfile {
+        self.hardware
     }
 
     /// May this instance receive dispatches / migration arrivals?
@@ -391,6 +426,13 @@ impl ClusterState {
         self.instances[di].lifecycle = lifecycle;
     }
 
+    /// Set an instance's hardware class (heterogeneous fleets). The
+    /// profile is descriptive state for policies; capacity/iteration
+    /// scaling is applied by the drivers at construction.
+    pub fn set_profile(&mut self, di: usize, hardware: HardwareProfile) {
+        self.instances[di].hardware = hardware;
+    }
+
     #[inline]
     pub fn lifecycle(&self, di: usize) -> Lifecycle {
         self.instances[di].lifecycle
@@ -500,6 +542,7 @@ impl ClusterState {
                     inbound_reserved_tokens: s.inbound_reserved_tokens,
                     cached_tokens: s.cached_tokens,
                     lifecycle: s.lifecycle,
+                    hardware: s.hardware,
                 })
                 .collect(),
             tokens_per_interval: self.tokens_per_interval(),
@@ -545,6 +588,12 @@ impl ClusterState {
                 return Some(format!(
                     "instance {}: lifecycle {:?} vs {:?}",
                     s.id, s.lifecycle, r.lifecycle
+                ));
+            }
+            if s.hardware != r.hardware {
+                return Some(format!(
+                    "instance {}: hardware {:?} vs {:?}",
+                    s.id, s.hardware, r.hardware
                 ));
             }
             if s.requests.len() != r.requests.len() {
@@ -814,6 +863,15 @@ impl<'a> InstanceRef<'a> {
         }
     }
 
+    /// Hardware class (hand-built snapshots default to the uniform
+    /// profile, so homogeneous-fleet policies never notice the field).
+    pub fn hardware(&self) -> HardwareProfile {
+        match self.0 {
+            RefSrc::State(s) => s.hardware,
+            RefSrc::Snap(s) => s.hardware,
+        }
+    }
+
     /// May this instance receive dispatches / migration arrivals? Every
     /// placement decision (dispatch, migration destination) must respect
     /// this — a `Draining` instance finishes its residents and nothing
@@ -1005,6 +1063,27 @@ mod tests {
         // lifecycle drift is caught by the differential check
         let mut bad = st.snapshot();
         bad.instances[1].lifecycle = Lifecycle::Active;
+        assert!(st.consistency_diff(&bad).is_some());
+    }
+
+    #[test]
+    fn hardware_profile_flows_through_views_and_snapshots() {
+        let mut st = state();
+        assert_eq!(st.stats(0).hardware(), HardwareProfile::default());
+        let degraded = HardwareProfile {
+            speed_mult: 0.5,
+            mem_mult: 0.75,
+        };
+        st.set_profile(0, degraded);
+        assert_eq!(st.view().instance(0).hardware(), degraded);
+        assert_eq!(st.view().instance(1).hardware(), HardwareProfile::default());
+        let snap = st.snapshot();
+        assert_eq!(snap.instances[0].hardware, degraded);
+        assert_eq!(snap.view().instance(0).hardware(), degraded);
+        assert!(st.consistency_diff(&snap).is_none());
+        // profile drift is caught by the differential check
+        let mut bad = st.snapshot();
+        bad.instances[0].hardware = HardwareProfile::default();
         assert!(st.consistency_diff(&bad).is_some());
     }
 

@@ -55,6 +55,11 @@ pub enum Lifecycle {
     Draining,
     /// Out of the pool (slot kept so instance ids stay stable).
     Retired,
+    /// Crashed (fault injection): unschedulable, out of every pool count
+    /// until an `InstanceRecovered` event flips it back to `Active`. A
+    /// failed slot frees headroom under `max_total`, which is what lets
+    /// the elastic guard provision replacement capacity.
+    Failed,
 }
 
 /// Which pool an action targets.

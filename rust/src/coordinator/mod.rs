@@ -24,7 +24,7 @@ pub mod policy;
 pub mod rescheduler;
 
 pub use cluster_state::{
-    admission_watermark, ClusterState, ClusterView, InstanceRef, InstanceStats,
+    admission_watermark, ClusterState, ClusterView, HardwareProfile, InstanceRef, InstanceStats,
 };
 pub use control_loop::ControlLoop;
 pub use elastic::{
@@ -89,6 +89,9 @@ pub struct InstanceView {
     /// (a frozen pool is all-Active). Non-Active instances accept no
     /// dispatches and no migration arrivals.
     pub lifecycle: Lifecycle,
+    /// Hardware class for heterogeneous fleets; hand-built snapshots
+    /// default to the uniform profile `{speed_mult: 1, mem_mult: 1}`.
+    pub hardware: HardwareProfile,
 }
 
 impl InstanceView {
@@ -159,6 +162,7 @@ pub(crate) mod testutil {
             inbound_reserved_tokens: 0,
             cached_tokens: 0,
             lifecycle: Lifecycle::default(),
+            hardware: HardwareProfile::default(),
         }
     }
 }

@@ -2,7 +2,7 @@
 //! prediction-aware hand-off), ported onto the [`DispatchPolicy`] trait,
 //! plus the no-op rescheduler used as the "vLLM" baseline.
 
-use super::{DispatchPolicy, IncomingRequest, ReschedulePolicy};
+use super::{DispatchPolicy, IncomingRequest, PolicyConfig, ReschedulePolicy};
 use crate::coordinator::cluster_state::{admission_watermark, ClusterView, InstanceRef};
 use crate::coordinator::rescheduler::{MigrationDecision, ReschedulerStats};
 use crate::InstanceId;
@@ -163,6 +163,53 @@ impl DispatchPolicy for SessionAffinityDispatch {
             }
         }
         argmin_with_fallback(view, incoming.tokens, |iv| iv.effective_used() as f64)
+    }
+}
+
+/// Heterogeneous-fleet placement over the per-instance
+/// [`HardwareProfile`]: requests predicted to run long (mean remaining ≥
+/// `hardware_aware.long_tokens`, default 1024) chase *memory* — they go
+/// to the instance with the most free KV tokens, which on a mixed fleet
+/// is the big-`mem_mult` class — while everything else balances
+/// *speed-normalized* load (`effective_used / speed_mult`), so a
+/// half-speed instance is treated as twice as full. On a uniform fleet
+/// the short-request rule degrades to `current_load` exactly and the
+/// long-request rule to most-free-first, both reasonable defaults.
+///
+/// [`HardwareProfile`]: crate::coordinator::HardwareProfile
+#[derive(Clone, Debug)]
+pub struct HardwareAwareDispatch {
+    /// Predicted-remaining threshold (tokens) above which a request is
+    /// placed for memory instead of speed.
+    long_tokens: f64,
+}
+
+impl HardwareAwareDispatch {
+    pub fn from_config(cfg: &PolicyConfig) -> Self {
+        HardwareAwareDispatch {
+            long_tokens: cfg.param_or("hardware_aware.long_tokens", 1024.0),
+        }
+    }
+}
+
+impl DispatchPolicy for HardwareAwareDispatch {
+    fn name(&self) -> &str {
+        "hardware_aware"
+    }
+
+    fn choose(&mut self, view: &ClusterView<'_>, incoming: &IncomingRequest) -> InstanceId {
+        let pred = incoming.predicted_remaining.map_or(0.0, |p| p.mean);
+        if pred >= self.long_tokens {
+            // long generation: room to grow beats raw speed — the KV
+            // footprint, not the iteration time, is what kills it
+            argmin_with_fallback(view, incoming.tokens, |iv| -(iv.free_tokens() as f64))
+        } else {
+            // short request: speed-normalized load (a 0.5× instance
+            // counts as twice as loaded; speed_mult is validated > 0)
+            argmin_with_fallback(view, incoming.tokens, |iv| {
+                iv.effective_used() as f64 / iv.hardware().speed_mult
+            })
+        }
     }
 }
 
@@ -384,6 +431,45 @@ mod tests {
         snap.instances[2].cached_tokens = 8_700;
         let mut d = SessionAffinityDispatch;
         assert_eq!(d.choose(&snap.view(), &incoming_at(50, 2)), 1);
+    }
+
+    #[test]
+    fn hardware_aware_routes_long_to_memory_and_short_to_speed() {
+        use crate::coordinator::HardwareProfile;
+        let mut d = HardwareAwareDispatch::from_config(&PolicyConfig::default());
+        // fleet: instance 0 fast but small, instance 1 slow but roomy
+        let mut snap = ClusterSnapshot {
+            instances: vec![
+                inst(0, vec![req(1, 1_000, None)], 10_000),
+                inst(1, vec![req(2, 1_000, None)], 40_000),
+            ],
+            tokens_per_interval: 10.0,
+        };
+        snap.instances[0].hardware = HardwareProfile {
+            speed_mult: 2.0,
+            mem_mult: 0.25,
+        };
+        snap.instances[1].hardware = HardwareProfile {
+            speed_mult: 0.5,
+            mem_mult: 1.0,
+        };
+        // long prediction chases free memory: instance 1
+        assert_eq!(d.choose(&snap.view(), &incoming(10, Some(5_000.0))), 1);
+        // short prediction balances speed-normalized load: 1000/2 = 500
+        // on the fast instance vs 1000/0.5 = 2000 on the slow one
+        assert_eq!(d.choose(&snap.view(), &incoming(10, Some(50.0))), 0);
+        // no prediction counts as short (degrades toward current_load)
+        assert_eq!(d.choose(&snap.view(), &incoming(10, None)), 0);
+        // the threshold is a policy param
+        let mut cfg = PolicyConfig::default();
+        cfg.params
+            .insert("hardware_aware.long_tokens".to_string(), 40.0);
+        let mut d = HardwareAwareDispatch::from_config(&cfg);
+        assert_eq!(
+            d.choose(&snap.view(), &incoming(10, Some(50.0))),
+            1,
+            "a 50-token prediction is long once the threshold drops to 40"
+        );
     }
 
     #[test]

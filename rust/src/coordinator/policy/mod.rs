@@ -26,8 +26,8 @@ mod registry;
 mod slo;
 
 pub use builtin::{
-    CurrentLoadDispatch, NoopReschedule, PredictedLoadDispatch, RoundRobinDispatch,
-    SessionAffinityDispatch,
+    CurrentLoadDispatch, HardwareAwareDispatch, NoopReschedule, PredictedLoadDispatch,
+    RoundRobinDispatch, SessionAffinityDispatch,
 };
 pub use mem_pressure::MemoryPressureRescheduler;
 pub use registry::PolicyRegistry;

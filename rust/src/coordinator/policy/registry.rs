@@ -9,8 +9,8 @@
 use std::collections::BTreeMap;
 
 use super::{
-    CurrentLoadDispatch, DispatchPolicy, MemoryPressureRescheduler, NoopReschedule,
-    PolicyConfig, PredictedLoadDispatch, ReschedulePolicy, RoundRobinDispatch,
+    CurrentLoadDispatch, DispatchPolicy, HardwareAwareDispatch, MemoryPressureRescheduler,
+    NoopReschedule, PolicyConfig, PredictedLoadDispatch, ReschedulePolicy, RoundRobinDispatch,
     SessionAffinityDispatch, SloAwareDispatch,
 };
 use crate::coordinator::elastic::{
@@ -49,7 +49,7 @@ impl PolicyRegistry {
     ///
     /// dispatch — `round_robin` (`rr`), `current_load` (`load`),
     /// `predicted_load` (`predicted`), `slo_aware` (`slo`),
-    /// `session_affinity` (`affinity`);
+    /// `session_affinity` (`affinity`), `hardware_aware` (`hw`);
     /// reschedule — `star`, `memory_pressure` (`mem_pressure`),
     /// `none` (`noop`, `off`);
     /// scaling — `static` (`fixed`), `queue_pressure` (`qp`),
@@ -63,6 +63,9 @@ impl PolicyRegistry {
             Ok(Box::new(SloAwareDispatch::from_config(cfg)))
         });
         r.register_dispatch("session_affinity", |_| Ok(Box::new(SessionAffinityDispatch)));
+        r.register_dispatch("hardware_aware", |cfg| {
+            Ok(Box::new(HardwareAwareDispatch::from_config(cfg)))
+        });
         r.register_reschedule("star", |cfg| Ok(Box::new(Rescheduler::from_config(cfg))));
         r.register_reschedule("memory_pressure", |cfg| {
             Ok(Box::new(MemoryPressureRescheduler::from_config(cfg)))
@@ -82,6 +85,7 @@ impl PolicyRegistry {
         r.alias("predicted", "predicted_load");
         r.alias("slo", "slo_aware");
         r.alias("affinity", "session_affinity");
+        r.alias("hw", "hardware_aware");
         r.alias("mem_pressure", "memory_pressure");
         r.alias("noop", "none");
         r.alias("off", "none");
@@ -216,7 +220,7 @@ mod tests {
         let cfg = PolicyConfig::default();
         for name in ["round_robin", "rr", "Round-Robin", "current_load", "load",
                      "predicted_load", "predicted", "slo_aware", "slo",
-                     "session_affinity", "affinity"] {
+                     "session_affinity", "affinity", "hardware_aware", "hw"] {
             let mut p = reg.build_dispatch(name, &cfg).unwrap();
             let id = p.choose(&snap().view(), &IncomingRequest {
                 id: 0,

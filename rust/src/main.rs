@@ -97,7 +97,8 @@ fn spec() -> Spec {
             (
                 "scenario",
                 "name",
-                "workload scenario: stationary | bursty_mixed | diurnal_chat | multi_round",
+                "workload scenario: stationary | bursty_mixed | diurnal_chat | multi_round \
+                 | degraded_fleet | mixed_gen",
             ),
             ("predictor", "name", "none|oracle|llm_native|2bin|4bin|6bin"),
             (
@@ -114,11 +115,21 @@ fn spec() -> Spec {
                 "ids",
                 "analyze: comma-separated rule subset (R1..R5 or slugs)",
             ),
+            (
+                "require",
+                "names",
+                "validate-bench: comma-separated bench names that must all be \
+                 present among the given files (a deleted bench fails the gate)",
+            ),
         ],
         flags: vec![
             ("verbose", "chatty progress"),
             ("traces", "record runtime traces"),
             ("list-rules", "analyze: print the rule catalog and exit"),
+            (
+                "fail-on-lost",
+                "simulate: exit nonzero if failure injection lost any request",
+            ),
         ],
     }
 }
@@ -301,6 +312,7 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
             exp.predictor
         );
     }
+    let faults_on = exp.faults.is_some() || strace.faults.is_some();
     let params = SimParams {
         exp,
         ..Default::default()
@@ -309,6 +321,9 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
     println!("{}", report.summary(Slo::default()));
     if report.cache.enabled {
         println!("{}", report.cache.summary());
+    }
+    if faults_on || !report.reliability.is_empty() {
+        println!("{}", report.reliability.summary());
     }
     if let Some(spec) = &scenario {
         // per-class TTFT/TPOT percentiles + goodput against each class's
@@ -346,6 +361,14 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
         report.recorder.write_tsv(std::path::Path::new(path))?;
         println!("trace written to {path}");
     }
+    // soak-gate contract: lost requests (crash-displaced work that could
+    // not be re-queued under the admission watermark) fail the run
+    if args.flag("fail-on-lost") && report.reliability.lost > 0 {
+        return Err(star::Error::Cli(format!(
+            "--fail-on-lost: {} request(s) lost to instance failures",
+            report.reliability.lost
+        )));
+    }
     Ok(())
 }
 
@@ -367,9 +390,12 @@ fn run_list() -> Result<(), star::Error> {
     Ok(())
 }
 
-/// `star validate-bench BENCH_a.json [BENCH_b.json ...]` — the smoke-gate
-/// assertion that every emitted bench JSON parses and carries the shared
-/// writer's `schema_version`.
+/// `star validate-bench [--require a,b] BENCH_a.json [BENCH_b.json ...]`
+/// — the smoke-gate assertion that every emitted bench JSON parses and
+/// carries the shared writer's `schema_version`. `--require` names bench
+/// outputs that must all be present among the given files (matched as
+/// `BENCH_<name>.json` basenames), so a bench that was deleted, renamed,
+/// or silently stopped emitting fails the gate instead of shrinking it.
 fn run_validate_bench(args: &Args) -> Result<(), star::Error> {
     if args.positionals.is_empty() {
         return Err(star::Error::Cli(
@@ -382,6 +408,35 @@ fn run_validate_bench(args: &Args) -> Result<(), star::Error> {
         star::bench::json::validate_bench_json(&text)
             .map_err(|e| star::Error::Cli(format!("{path}: {e}")))?;
         println!("OK {path}");
+    }
+    if let Some(req) = args.opt("require") {
+        let basenames: Vec<String> = args
+            .positionals
+            .iter()
+            .filter_map(|p| std::path::Path::new(p).file_name().and_then(|f| f.to_str()))
+            .map(|f| f.to_string())
+            .collect();
+        let required: Vec<&str> = req
+            .split(',')
+            .map(str::trim)
+            .filter(|n| !n.is_empty())
+            .collect();
+        let missing: Vec<&str> = required
+            .iter()
+            .copied()
+            .filter(|n| !basenames.iter().any(|b| b == &format!("BENCH_{n}.json")))
+            .collect();
+        if !missing.is_empty() {
+            return Err(star::Error::Cli(format!(
+                "validate-bench --require: missing expected bench output(s): {} \
+                 (a bench was deleted, renamed, or did not emit its JSON)",
+                missing.join(", ")
+            )));
+        }
+        println!(
+            "validate-bench: all {} required bench(es) present",
+            required.len()
+        );
     }
     println!("validate-bench: {} file(s) OK", args.positionals.len());
     Ok(())

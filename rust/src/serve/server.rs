@@ -12,8 +12,9 @@ use super::instance::{AdmitPayload, DecodeCommand, DecodeEvent, DecodeInstance};
 use super::LiveRequest;
 use crate::config::{ExperimentConfig, PredictorKind};
 use crate::coordinator::{
-    admission_watermark, ClusterState, ControlLoop, IncomingRequest, Lifecycle, PolicyRegistry,
-    PoolRole, PoolStats, RateMeter, RequestView, ReschedulerStats, ScaleRecord, ScalingAction,
+    admission_watermark, ClusterState, ControlLoop, HardwareProfile, IncomingRequest, Lifecycle,
+    PolicyRegistry, PoolRole, PoolStats, RateMeter, RequestView, ReschedulerStats, ScaleRecord,
+    ScalingAction,
 };
 use crate::costmodel::MigrationCostModel;
 use crate::kvcache::{CacheContext, CachePolicyRegistry, CacheReport, PrefixCache};
@@ -23,6 +24,7 @@ use crate::metrics::{
 };
 use crate::predictor::{PredSample, Prediction, Scorecard};
 use crate::runtime::StarRuntime;
+use crate::sim::ReliabilityReport;
 use crate::workload::SessionPlan;
 use crate::{InstanceId, RequestId, Result, Time};
 
@@ -81,6 +83,11 @@ pub struct ServeOutcome {
     /// headroom like the simulator's, but the instance-side prefill still
     /// computes the full prompt.
     pub cache: CacheReport,
+    /// Fault/reliability accounting, mirroring the simulator's report so
+    /// both drivers expose the same outcome shape. The live driver does
+    /// not inject faults (instance threads either run or the whole
+    /// process aborts), so this is always the default (empty) report.
+    pub reliability: ReliabilityReport,
 }
 
 struct ReqTracker {
@@ -203,9 +210,23 @@ impl Server {
         }
     }
 
+    /// Hardware profile for decode slot `id`: the experiment's fleet mix
+    /// cycled over slot ids (same rule the simulator applies), or the
+    /// homogeneous default when no `[fleet]` is configured.
+    fn decode_profile(&self, id: InstanceId) -> HardwareProfile {
+        self.params
+            .exp
+            .fleet
+            .as_ref()
+            .map_or(HardwareProfile::default(), |f| f.profile(id))
+    }
+
     /// Spawn one decode-instance thread (initial pool and elastic joins).
     /// `pred_kind` is the live execution path derived once from the
-    /// experiment's predictor registry name.
+    /// experiment's predictor registry name. The slot's KV capacity is the
+    /// cluster baseline scaled by its hardware profile's `mem_mult`
+    /// (speed_mult is a modeled-time knob and has no live analogue — the
+    /// thread runs as fast as the substrate allows).
     fn spawn_decode_thread(
         &self,
         id: InstanceId,
@@ -213,11 +234,14 @@ impl Server {
         ev_tx: &Sender<DecodeEvent>,
     ) -> (InstanceState, std::thread::JoinHandle<()>) {
         let exp = &self.params.exp;
+        let profile = self.decode_profile(id);
+        let kv_capacity =
+            (exp.cluster.kv_capacity_tokens as f64 * profile.mem_mult).round() as u64;
         let (cmd_tx, cmd_rx) = channel();
         let inst = DecodeInstance {
             id,
             runtime: Arc::clone(&self.runtime),
-            kv_capacity_tokens: exp.cluster.kv_capacity_tokens,
+            kv_capacity_tokens: kv_capacity,
             block_tokens: exp.cluster.block_tokens,
             max_batch: exp.cluster.max_batch,
             predictor: pred_kind,
@@ -231,7 +255,7 @@ impl Server {
             InstanceState {
                 cmd: cmd_tx,
                 kv_used: 0,
-                kv_capacity: exp.cluster.kv_capacity_tokens,
+                kv_capacity,
                 lifecycle: Lifecycle::Active,
                 flip_to_prefill: false,
             },
@@ -462,11 +486,13 @@ impl Server {
         // the paged allocator rounds capacity down to whole blocks; the
         // scheduler-side watermark guard must see the same number the
         // instances enforce (an idle instance never sends the Report that
-        // would otherwise reconcile it)
-        let rounded_cap = exp.cluster.kv_capacity_tokens / exp.cluster.block_tokens as u64
-            * exp.cluster.block_tokens as u64;
+        // would otherwise reconcile it). Capacities are per-instance under
+        // a heterogeneous fleet (mem_mult-scaled at spawn).
+        let round_cap =
+            |cap: u64| cap / exp.cluster.block_tokens as u64 * exp.cluster.block_tokens as u64;
         for i in 0..exp.cluster.n_decode {
-            state.set_capacity(i, rounded_cap);
+            state.set_capacity(i, round_cap(instances[i].kv_capacity));
+            state.set_profile(i, self.decode_profile(i));
         }
 
         // --- main loop ---
@@ -522,9 +548,15 @@ impl Server {
                     PoolRole::Decode => {
                         decode_provisioning -= 1;
                         let id = instances.len();
-                        let added = state.add_instance(exp.cluster.kv_capacity_tokens);
+                        // elastic joins keep cycling the fleet mix, same
+                        // rule as the simulator's on_instance_ready
+                        let profile = self.decode_profile(id);
+                        let raw_cap = (exp.cluster.kv_capacity_tokens as f64 * profile.mem_mult)
+                            .round() as u64;
+                        let added = state.add_instance(raw_cap);
                         debug_assert_eq!(added, id, "state and thread pools must align");
-                        state.set_capacity(id, rounded_cap);
+                        state.set_capacity(id, round_cap(raw_cap));
+                        state.set_profile(id, profile);
                         let (st, handle) = self.spawn_decode_thread(id, pred_kind, &ev_tx);
                         handles.push(handle);
                         instances.push(st);
@@ -1034,6 +1066,7 @@ impl Server {
             scale_actions: scale_log,
             scorecard,
             cache: prefix_cache.report(),
+            reliability: ReliabilityReport::default(),
         })
     }
 

@@ -13,13 +13,13 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use super::events::{Event, EventQueue};
-use super::report::SimReport;
+use super::report::{ReliabilityReport, SimReport};
 use super::{ReqState, SimRequest};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
-    admission_watermark, ClusterSnapshot, ClusterState, ControlLoop, IncomingRequest,
-    InstanceView, Lifecycle, PolicyRegistry, PoolRole, PoolStats, RateMeter, RequestView,
-    ScaleRecord, ScalingAction,
+    admission_watermark, ClusterSnapshot, ClusterState, ControlLoop, HardwareProfile,
+    IncomingRequest, InstanceView, Lifecycle, PolicyRegistry, PoolRole, PoolStats, RateMeter,
+    RequestView, ScaleRecord, ScalingAction,
 };
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::{CacheContext, CachePolicyRegistry, KvCacheManager, PrefixCache};
@@ -28,8 +28,14 @@ use crate::predictor::{
     LengthPredictor, PredSample, PredictInput, Prediction, PredictorContext, PredictorRegistry,
     Repredictor, Scorecard,
 };
-use crate::workload::{Request, ScenarioTrace, SessionPlan};
+use crate::prng::Pcg64;
+use crate::workload::{FleetSpec, Request, ScenarioTrace, SessionPlan};
 use crate::{InstanceId, RequestId, Result, Time};
+
+/// PRNG stream id for stochastic fault injection ("FAUL") — its own
+/// stream off the run seed, so enabling faults never perturbs the
+/// workload, predictor, or scenario draws.
+const FAULT_STREAM: u64 = 0x4641_554c;
 
 /// How scheduling decisions read cluster state.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -93,6 +99,10 @@ struct PrefillSim {
 struct DecodeSim {
     id: InstanceId,
     kv: KvCacheManager,
+    /// Hardware class (heterogeneous fleets): `speed_mult` divides the
+    /// modeled iteration time, `mem_mult` already scaled `kv`'s capacity
+    /// at construction. Mirrored into [`ClusterState`] for policies.
+    profile: HardwareProfile,
     /// Dispatched but not yet admitted into the running batch. The batch
     /// itself (and every aggregate over it) lives in [`ClusterState`].
     pending: VecDeque<RequestId>,
@@ -165,6 +175,15 @@ pub struct Simulator {
     /// policies' measured inputs; same definition as the live driver).
     rates: RateMeter,
     last_scale_t: Time,
+    // -- fault injection -----------------------------------------------
+    /// Fleet shape for heterogeneous runs: profiles cycled over decode
+    /// instance ids, including elastic joins. `None` = uniform hardware.
+    fleet: Option<FleetSpec>,
+    /// Fault-injection accounting, folded into the report.
+    reliability: ReliabilityReport,
+    /// Crash time of every request re-queued by a failure, resolved into
+    /// `reliability.requeue_delays` at its next successful admission.
+    fault_requeue: BTreeMap<RequestId, Time>,
 }
 
 /// Event-coverage list for the invariant checker: every [`Event`] variant
@@ -183,6 +202,8 @@ pub const VALIDATED_EVENTS: &[&str] = &[
     "InstanceReady",
     "DrainComplete",
     "PrefixTransferDone",
+    "InstanceFailure",
+    "InstanceRecovered",
 ];
 
 impl Simulator {
@@ -304,6 +325,55 @@ impl Simulator {
         // no-op), so frozen-pool trajectories are untouched
         queue.push(exp.elastic.scale_interval_s, Event::ScaleTick);
 
+        // fault plan: experiment-level `[faults]` wins over a plan carried
+        // by the scenario trace. Scripted failures are pushed verbatim;
+        // the stochastic process draws per-instance exponential
+        // inter-failure gaps and downtimes from its own PRNG stream, so
+        // the schedule is a pure function of (seed, faults config) —
+        // same seed ⇒ identical failure times.
+        let faults = exp.faults.clone().or_else(|| trace.faults.clone());
+        let fleet = exp.fleet.clone().or_else(|| trace.fleet.clone());
+        if let Some(fc) = &faults {
+            for ev in &fc.script {
+                queue.push(
+                    ev.at,
+                    Event::InstanceFailure {
+                        instance: ev.instance,
+                        down_s: ev.down_s,
+                    },
+                );
+            }
+            if fc.mtbf_s > 0.0 {
+                let mut rng = Pcg64::new(exp.cluster.seed, FAULT_STREAM);
+                let mut planned: Vec<(Time, usize, f64)> = Vec::new();
+                for di in 0..n_dec {
+                    let mut t = rng.exponential(1.0 / fc.mtbf_s);
+                    while t <= params.max_sim_time {
+                        let down = rng.exponential(1.0 / fc.mttr_s);
+                        planned.push((t, di, down));
+                        t += down + rng.exponential(1.0 / fc.mtbf_s);
+                    }
+                }
+                // global time order (instance id breaks ties) before the
+                // cap, so max_failures keeps the EARLIEST failures
+                planned.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .expect("fault times are finite")
+                        .then(a.1.cmp(&b.1))
+                });
+                planned.truncate(fc.max_failures);
+                for (t, di, down) in planned {
+                    queue.push(
+                        t,
+                        Event::InstanceFailure {
+                            instance: di,
+                            down_s: down,
+                        },
+                    );
+                }
+            }
+        }
+
         let mut session_cursor = BTreeMap::new();
         let mut session_chains = vec![Vec::new(); trace.sessions.scripts.len()];
         for &(rid, s) in &trace.sessions.first_turns {
@@ -312,16 +382,26 @@ impl Simulator {
         }
 
         let decode: Vec<DecodeSim> = (0..n_dec)
-            .map(|id| DecodeSim {
-                id,
-                kv: KvCacheManager::new(exp.cluster.kv_capacity_tokens, exp.cluster.block_tokens),
-                pending: VecDeque::new(),
-                stepping: false,
-                epoch: 0,
-                tokens_decoded: 0,
-                lifecycle: Lifecycle::Active,
-                flip_to_prefill: false,
-                drain_event_queued: false,
+            .map(|id| {
+                // heterogeneous fleets cycle hardware profiles over ids;
+                // mem_mult scales the KV capacity at construction
+                let profile = fleet
+                    .as_ref()
+                    .map_or(HardwareProfile::default(), |f| f.profile(id));
+                let cap =
+                    (exp.cluster.kv_capacity_tokens as f64 * profile.mem_mult).round() as u64;
+                DecodeSim {
+                    id,
+                    kv: KvCacheManager::new(cap, exp.cluster.block_tokens),
+                    profile,
+                    pending: VecDeque::new(),
+                    stepping: false,
+                    epoch: 0,
+                    tokens_decoded: 0,
+                    lifecycle: Lifecycle::Active,
+                    flip_to_prefill: false,
+                    drain_event_queued: false,
+                }
             })
             .collect();
         let mut state = ClusterState::new(
@@ -335,6 +415,7 @@ impl Simulator {
             // the paged allocator rounds capacity down to whole blocks;
             // the scheduler must see the same number
             state.set_capacity(d.id, d.kv.capacity_tokens());
+            state.set_profile(d.id, d.profile);
         }
 
         Ok(Simulator {
@@ -376,6 +457,9 @@ impl Simulator {
             scale_log: Vec::new(),
             rates: RateMeter::default(),
             last_scale_t: 0.0,
+            fleet,
+            reliability: ReliabilityReport::default(),
+            fault_requeue: BTreeMap::new(),
             params,
         })
     }
@@ -422,6 +506,10 @@ impl Simulator {
                     to,
                     tokens,
                 } => self.on_prefix_transfer_done(request, from, to, tokens),
+                Event::InstanceFailure { instance, down_s } => {
+                    self.on_instance_failure(instance, down_s)
+                }
+                Event::InstanceRecovered { instance } => self.on_instance_recovered(instance),
             }
             if self.params.validate_state {
                 self.assert_state_consistent();
@@ -543,6 +631,9 @@ impl Simulator {
             self.release_hold(id);
             self.requests[id as usize].state = ReqState::Done;
             self.failed += 1;
+            if self.fault_requeue.remove(&id).is_some() {
+                self.reliability.lost += 1;
+            }
         } else if hold.is_some() && hold != Some(di) {
             // dispatched away from the prefix holder: move the cached KV
             // over the fabric or recompute it at the destination,
@@ -688,6 +779,12 @@ impl Simulator {
     /// that can never pass the watermark fail terminally here — leaving
     /// them queued would strand them (no future event ever drains them).
     fn kick(&mut self, di: usize) {
+        if self.decode[di].lifecycle == Lifecycle::Failed {
+            // a crashed instance admits nothing until it recovers; its
+            // pending queue (only reachable when no active instance
+            // existed at dispatch time) waits for InstanceRecovered
+            return;
+        }
         let cap = self.decode[di].kv.capacity_tokens();
         let watermark = admission_watermark(cap);
         let max_batch = self.params.exp.cluster.max_batch;
@@ -703,6 +800,9 @@ impl Simulator {
                 self.release_hold(id);
                 self.requests[id as usize].state = ReqState::Done;
                 self.failed += 1;
+                if self.fault_requeue.remove(&id).is_some() {
+                    self.reliability.lost += 1;
+                }
                 continue;
             }
             // a request admitted on the instance holding its prefix
@@ -748,6 +848,11 @@ impl Simulator {
                 r.cached_prefix = 0; // merged into the admitted footprint
                 r.state = ReqState::Decoding(di);
                 self.state.admit(di, id, need, r.predicted_remaining);
+                // crash-requeued request back in a batch: the outage is
+                // over for it — log crash→re-admission latency
+                if let Some(t0) = self.fault_requeue.remove(&id) {
+                    self.reliability.requeue_delays.push(self.now - t0);
+                }
             } else {
                 still.push_back(id);
             }
@@ -779,6 +884,12 @@ impl Simulator {
             .params
             .decode_cost
             .iter_time(stats.token_load(), stats.batch_size());
+        // heterogeneous fleets: faster hardware divides the modeled
+        // compute time; the EWMA below sees the scaled value, so the
+        // speed class is visible to variance metrics and policies
+        dt /= self.decode[di].profile.speed_mult;
+        // predictor overhead is host-side and does not scale with the
+        // accelerator's speed class
         dt += self.repredictor.batch_cost_s(&*self.predictor, n_pred);
         let at = self.now + dt;
         // EWMA of iteration latency for the exec-variance metric
@@ -967,6 +1078,9 @@ impl Simulator {
                 // failure (vLLM would abort the request too)
                 r.state = ReqState::Done;
                 self.failed += 1;
+                if self.fault_requeue.remove(&v).is_some() {
+                    self.reliability.lost += 1;
+                }
             } else {
                 r.state = ReqState::Recomputing;
                 // recompute = re-run prefill over prompt+generated
@@ -1144,6 +1258,7 @@ impl Simulator {
                 inbound_reserved_tokens: self.inbound_reserved_scan(self.decode[di].id),
                 cached_tokens: self.prefix_cache.cached_on(di) + self.hold_tokens[di],
                 lifecycle: self.decode[di].lifecycle,
+                hardware: self.decode[di].profile,
             })
             .collect();
         ClusterSnapshot {
@@ -1176,6 +1291,7 @@ impl Simulator {
                 inbound_reserved_tokens: 0,
                 cached_tokens: 0,
                 lifecycle: d.lifecycle,
+                hardware: d.profile,
             })
             .collect();
         for r in &self.requests {
@@ -1262,10 +1378,15 @@ impl Simulator {
         }
 
         // metrics snapshots (taken whether or not rescheduling is on);
-        // retired slots are out of the pool and must not deflate the
-        // cross-instance variance
+        // retired and crashed slots are out of the pool and must not
+        // deflate the cross-instance variance
         let iters: Vec<f64> = (0..self.decode.len())
-            .filter(|&di| self.decode[di].lifecycle != Lifecycle::Retired)
+            .filter(|&di| {
+                !matches!(
+                    self.decode[di].lifecycle,
+                    Lifecycle::Retired | Lifecycle::Failed
+                )
+            })
             .map(|di| {
                 let s = self.state.stats(di);
                 if s.batch_size() == 0 {
@@ -1279,12 +1400,12 @@ impl Simulator {
         let loads: Vec<f64> = self
             .decode
             .iter()
-            .filter(|d| d.lifecycle != Lifecycle::Retired)
+            .filter(|d| !matches!(d.lifecycle, Lifecycle::Retired | Lifecycle::Failed))
             .map(|d| d.kv.used_tokens() as f64)
             .collect();
         self.load_var.snapshot(self.now, &loads);
         for d in &self.decode {
-            if d.lifecycle == Lifecycle::Retired {
+            if matches!(d.lifecycle, Lifecycle::Retired | Lifecycle::Failed) {
                 continue;
             }
             self.recorder.record(
@@ -1678,15 +1799,24 @@ impl Simulator {
             }
             PoolRole::Decode => {
                 self.decode_provisioning -= 1;
+                // elastic joins keep cycling the fleet's profile pattern
+                // over the (stable, never-reused) id space
+                let profile = self
+                    .fleet
+                    .as_ref()
+                    .map_or(HardwareProfile::default(), |f| f.profile(self.decode.len()));
                 let exp = &self.params.exp;
-                let kv =
-                    KvCacheManager::new(exp.cluster.kv_capacity_tokens, exp.cluster.block_tokens);
-                let id = self.state.add_instance(exp.cluster.kv_capacity_tokens);
+                let raw_cap =
+                    (exp.cluster.kv_capacity_tokens as f64 * profile.mem_mult).round() as u64;
+                let kv = KvCacheManager::new(raw_cap, exp.cluster.block_tokens);
+                let id = self.state.add_instance(raw_cap);
                 debug_assert_eq!(id, self.decode.len(), "state and sim pools must align");
                 self.state.set_capacity(id, kv.capacity_tokens());
+                self.state.set_profile(id, profile);
                 self.decode.push(DecodeSim {
                     id,
                     kv,
+                    profile,
                     pending: VecDeque::new(),
                     stepping: false,
                     epoch: 0,
@@ -1698,6 +1828,145 @@ impl Simulator {
                 self.hold_tokens.push(0);
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // fault injection
+
+    /// Decode instance `di` crashes. Its KV cache — batch residents,
+    /// retained prefixes, in-flight holds — is gone. Pending (never
+    /// admitted) requests lose nothing and re-dispatch to the active
+    /// pool; batch residents go back through the prefill recompute path
+    /// (the same machinery OOM eviction uses, minus the `hit_oom` mark —
+    /// a crash is not memory pressure), or fail terminally when no
+    /// instance of this size could ever re-admit them. Requests
+    /// mid-migration are owned by the migration and ride it out: the
+    /// source copy survives in the model, and `on_migration_done`
+    /// re-routes around the failed destination like any non-active slot.
+    /// The elastic layer provisions one replacement when `max_total`
+    /// leaves headroom; `down_s > 0` schedules recovery.
+    fn on_instance_failure(&mut self, di: usize, down_s: f64) {
+        // a scripted plan may name an instance that was never
+        // provisioned in this run; a stochastic plan may hit a slot
+        // that already failed or retired — both are no-ops
+        if di >= self.decode.len()
+            || !matches!(
+                self.decode[di].lifecycle,
+                Lifecycle::Active | Lifecycle::Draining
+            )
+        {
+            return;
+        }
+        self.reliability.failures += 1;
+        self.reliability.failure_log.push((self.now, di));
+        self.decode[di].lifecycle = Lifecycle::Failed;
+        self.state.set_lifecycle(di, Lifecycle::Failed);
+        // a crash interrupts any drain-then-flip in progress
+        self.decode[di].flip_to_prefill = false;
+        self.decode[di].drain_event_queued = false;
+        // any DecodeStep in flight is stale now
+        self.decode[di].stepping = false;
+        self.decode[di].epoch += 1;
+
+        // flush the instance's prefix-cache entries and abandon holds
+        // still targeting it (same flush drain_decode performs)
+        if self.prefix_cache.enabled() {
+            let flushed = self.prefix_cache.cached_on(di) + self.hold_tokens[di];
+            self.reliability.kv_tokens_dropped += flushed;
+            self.prefix_cache.evict_instance(di);
+            let holders: Vec<RequestId> = self
+                .requests
+                .iter()
+                .filter(|r| r.prefix_hold == Some(di))
+                .map(|r| r.id)
+                .collect();
+            for id in holders {
+                self.release_hold(id);
+                self.prefix_cache.note_evicted();
+            }
+            self.sync_cached_mirror();
+        }
+
+        // pending requests re-dispatch (their KV was never admitted)
+        let pending: Vec<RequestId> = self.decode[di].pending.drain(..).collect();
+        for id in pending {
+            self.reliability.requeued += 1;
+            self.fault_requeue.insert(id, self.now);
+            let incoming = {
+                let r = &self.requests[id as usize];
+                IncomingRequest {
+                    id,
+                    tokens: r.kv_tokens(),
+                    predicted_remaining: r.predicted_remaining,
+                    preferred_instance: None,
+                }
+            };
+            let dst = self.dispatch_decode(&incoming);
+            self.requests[id as usize].state = ReqState::Pending(dst);
+            self.decode[dst].pending.push_back(id);
+            self.kick(dst);
+        }
+
+        // batch residents lose their decoded KV and recompute it
+        let residents: Vec<RequestId> = self
+            .state
+            .active(di)
+            .iter()
+            .map(|r| r.id)
+            .filter(|&id| {
+                matches!(self.requests[id as usize].state,
+                         ReqState::Decoding(d) if d == di)
+            })
+            .collect();
+        let watermark = admission_watermark(self.decode[di].kv.capacity_tokens());
+        let block = self.params.exp.cluster.block_tokens as u64;
+        for id in residents {
+            self.reliability.kv_tokens_dropped += self.requests[id as usize].kv_tokens();
+            self.decode[di].kv.release(id);
+            self.state.release(id);
+            let r = &mut self.requests[id as usize];
+            r.last_token_at = None; // the recompute stall is a crash gap
+            if r.kv_tokens() + block > watermark {
+                r.state = ReqState::Done;
+                self.failed += 1;
+                self.reliability.lost += 1;
+            } else {
+                r.state = ReqState::Recomputing;
+                self.reliability.requeued += 1;
+                self.fault_requeue.insert(id, self.now);
+                self.queue.push(self.now, Event::Arrival { request: id });
+            }
+        }
+
+        // emergency capacity: one replacement when the fleet cap leaves
+        // headroom (static configs have max_total == 0 and ride out the
+        // crash on the surviving instances)
+        let max_total = self.control.elastic_config().max_total;
+        if max_total > 0 && self.pool_stats().total_instances() < max_total {
+            let action = ScalingAction::Provision {
+                role: PoolRole::Decode,
+            };
+            self.scale_log.push(ScaleRecord { t: self.now, action });
+            self.execute_action(action);
+        }
+
+        if down_s > 0.0 {
+            self.queue
+                .push(self.now + down_s, Event::InstanceRecovered { instance: di });
+        }
+    }
+
+    /// A failed decode instance comes back, empty, as `Active`. Anything
+    /// parked in its pending queue (only possible when no active
+    /// instance existed at dispatch time) is kicked immediately.
+    fn on_instance_recovered(&mut self, di: usize) {
+        if di >= self.decode.len() || self.decode[di].lifecycle != Lifecycle::Failed {
+            return;
+        }
+        self.reliability.recoveries += 1;
+        self.decode[di].lifecycle = Lifecycle::Active;
+        self.state.set_lifecycle(di, Lifecycle::Active);
+        self.kick(di);
     }
 
     // ------------------------------------------------------------------
@@ -1720,6 +1989,7 @@ impl Simulator {
             pool_timeline: self.pool_timeline,
             scale_actions: self.scale_log,
             cache: self.prefix_cache.report(),
+            reliability: self.reliability,
         };
         for r in self.requests {
             if matches!(r.state, ReqState::Done) && r.latency.finished.is_some() {
@@ -1927,6 +2197,8 @@ mod tests {
                 max_context_tokens: 16_384,
             }),
             pico_scale: None,
+            faults: None,
+            fleet: None,
         };
         let strace = spec.generate(30, 8);
         assert!(strace.sessions.total_follow_ups() > 0, "need sessions");
@@ -1982,6 +2254,8 @@ mod tests {
                 max_context_tokens: 16_384,
             }),
             pico_scale: None,
+            faults: None,
+            fleet: None,
         };
         let strace = spec.generate(30, 11);
         assert!(strace.sessions.total_follow_ups() > 0, "need sessions");

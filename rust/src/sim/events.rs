@@ -55,6 +55,14 @@ pub enum Event {
         to: InstanceId,
         tokens: u64,
     },
+    /// Fault injection: decode instance `instance` crashes. Its KV cache
+    /// (batch residents, prefix cache) is lost; in-flight and pending
+    /// requests re-queue through the recompute path. `down_s <= 0` means
+    /// the crash is permanent (no recovery is scheduled).
+    InstanceFailure { instance: InstanceId, down_s: f64 },
+    /// A previously failed decode instance comes back, empty, as
+    /// `Active` — the fault-injection counterpart of `InstanceReady`.
+    InstanceRecovered { instance: InstanceId },
 }
 
 impl Event {
@@ -73,6 +81,8 @@ impl Event {
             Event::InstanceReady { .. } => "InstanceReady",
             Event::DrainComplete { .. } => "DrainComplete",
             Event::PrefixTransferDone { .. } => "PrefixTransferDone",
+            Event::InstanceFailure { .. } => "InstanceFailure",
+            Event::InstanceRecovered { .. } => "InstanceRecovered",
         }
     }
 }

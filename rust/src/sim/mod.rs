@@ -25,7 +25,7 @@ mod events;
 mod report;
 
 pub use engine::{SimParams, Simulator, StateMode, VALIDATED_EVENTS};
-pub use report::{ClassReport, SimReport};
+pub use report::{ClassReport, ReliabilityReport, SimReport};
 
 use crate::metrics::RequestLatency;
 use crate::predictor::{PredSample, Prediction};

@@ -8,7 +8,71 @@ use crate::kvcache::CacheReport;
 use crate::metrics::{PoolSample, RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
 use crate::predictor::Scorecard;
 use crate::workload::{RequestClass, SloByClass};
-use crate::{RequestId, Time};
+use crate::{InstanceId, RequestId, Time};
+
+/// Fault-injection accounting for one run: what failed, what the system
+/// recovered, and what it paid. All zeros (and `is_empty()`) for runs
+/// without faults.
+///
+/// Accounting invariant: `lost` counts requests terminally failed *by a
+/// crash* (their KV could not be recomputed within the admission
+/// watermark) and is a subset of the report's `n_failed` — so
+/// `completed + n_failed == n_requests` still accounts for every arrival.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReliabilityReport {
+    /// Instance crashes executed (scripted + stochastic).
+    pub failures: u64,
+    /// Crashed instances that came back (`InstanceRecovered`).
+    pub recoveries: u64,
+    /// Requests re-queued by crashes (pending re-dispatches + batch
+    /// residents sent through the recompute path).
+    pub requeued: u64,
+    /// Requests terminally failed by a crash (subset of `n_failed`).
+    pub lost: u64,
+    /// KV tokens discarded by crashes: batch-resident KV plus flushed
+    /// prefix-cache entries.
+    pub kv_tokens_dropped: u64,
+    /// `(time, instance)` of every executed failure, in order — the
+    /// trace the same-seed determinism tests compare verbatim.
+    pub failure_log: Vec<(Time, InstanceId)>,
+    /// Per-requeued-request delay from crash to successful re-admission
+    /// into a decode batch (seconds), in admission order.
+    pub requeue_delays: Vec<f64>,
+}
+
+impl ReliabilityReport {
+    /// No faults were injected and nothing was lost?
+    pub fn is_empty(&self) -> bool {
+        self.failures == 0 && self.recoveries == 0 && self.lost == 0
+    }
+
+    /// Quantile of the crash→re-admission delay distribution (seconds);
+    /// 0.0 when nothing was re-queued.
+    pub fn quantile_requeue_s(&self, q: f64) -> f64 {
+        if self.requeue_delays.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.requeue_delays.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("requeue delays are finite"));
+        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[idx]
+    }
+
+    /// One greppable line, printed by `star simulate` for fault runs.
+    pub fn summary(&self) -> String {
+        format!(
+            "reliability: failures={} recoveries={} requeued={} lost={} \
+             kv_dropped={} | requeue p50={:.3}s p99={:.3}s",
+            self.failures,
+            self.recoveries,
+            self.requeued,
+            self.lost,
+            self.kv_tokens_dropped,
+            self.quantile_requeue_s(0.50),
+            self.quantile_requeue_s(0.99),
+        )
+    }
+}
 
 /// Result of one simulation run.
 #[derive(Debug)]
@@ -42,6 +106,10 @@ pub struct SimReport {
     /// under the `none` policy). `star simulate` prints
     /// [`CacheReport::summary`] for cache-enabled runs.
     pub cache: CacheReport,
+    /// Fault-injection accounting (all zeros without faults).
+    /// `star simulate` prints [`ReliabilityReport::summary`] for fault
+    /// runs.
+    pub reliability: ReliabilityReport,
 }
 
 /// Per-class slice of a run: TTFT/TPOT percentiles and goodput against

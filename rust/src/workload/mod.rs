@@ -18,7 +18,10 @@ mod stats;
 
 pub use arrival::{ArrivalProcess, ArrivalSampler};
 pub use classes::{ClassMix, ClassSpec, RequestClass, SloByClass};
-pub use scenario::{ScenarioSpec, ScenarioTrace, SessionPlan, SessionProfile, SessionTurn};
+pub use scenario::{
+    FaultConfig, FaultEvent, FleetSpec, ScenarioSpec, ScenarioTrace, SessionPlan, SessionProfile,
+    SessionTurn,
+};
 pub use stats::{LenStats, TraceStats};
 
 use crate::prng::Pcg64;

@@ -15,11 +15,135 @@
 use super::arrival::ArrivalProcess;
 use super::classes::{ClassMix, ClassSpec, RequestClass, SloByClass};
 use super::Request;
+use crate::coordinator::HardwareProfile;
 use crate::prng::Pcg64;
 use crate::{RequestId, Result, Time};
 
 /// PRNG stream id for scenario generation ("SCEN").
 const SCENARIO_STREAM: u64 = 0x5343_454e;
+
+/// One scripted instance failure: decode instance `instance` goes down at
+/// simulation time `at` and recovers `down_s` later (`down_s <= 0` =
+/// permanent — the instance never comes back).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: Time,
+    pub instance: usize,
+    pub down_s: f64,
+}
+
+/// Failure-injection plan for a scenario: a deterministic script plus an
+/// optional stochastic process (per-decode-instance exponential
+/// inter-failure times with mean `mtbf_s`, downtimes with mean `mttr_s`,
+/// drawn from a dedicated PRNG stream off the run seed — same seed ⇒
+/// identical failure times). Faults target decode instances only; the
+/// prefill side is modeled as a shared stateless worker pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time between failures per decode instance (s); `<= 0`
+    /// disables the stochastic process (scripted faults still fire).
+    pub mtbf_s: f64,
+    /// Mean downtime per stochastic failure (s); must be > 0 while the
+    /// stochastic process is on.
+    pub mttr_s: f64,
+    /// Cap on the number of stochastic failures over the run (keeps a
+    /// short-MTBF smoke run from thrashing forever).
+    pub max_failures: usize,
+    /// Scripted failures, executed verbatim on top of the stochastic plan.
+    pub script: Vec<FaultEvent>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            mtbf_s: 0.0,
+            mttr_s: 30.0,
+            max_failures: 8,
+            script: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does this plan inject any faults at all?
+    pub fn enabled(&self) -> bool {
+        self.mtbf_s > 0.0 || !self.script.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.mtbf_s > 0.0 && self.mttr_s <= 0.0 {
+            return Err(crate::Error::config(
+                "faults.mttr_s must be > 0 while faults.mtbf_s enables the stochastic process",
+            ));
+        }
+        for (i, f) in self.script.iter().enumerate() {
+            if !f.at.is_finite() || f.at < 0.0 {
+                return Err(crate::Error::config(format!(
+                    "faults.script[{i}].at must be a finite time >= 0"
+                )));
+            }
+            if !f.down_s.is_finite() {
+                return Err(crate::Error::config(format!(
+                    "faults.script[{i}].down_s must be finite"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Heterogeneous decode-fleet shape: hardware profiles cycled over decode
+/// instance ids (`profiles[id % len]`), including instances the elastic
+/// pool provisions mid-run — a replacement joins with the profile of the
+/// slot position it lands on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    pub profiles: Vec<HardwareProfile>,
+}
+
+impl FleetSpec {
+    /// Build from parallel multiplier lists (shorter list is cycled).
+    pub fn from_mults(speed_mults: &[f64], mem_mults: &[f64]) -> FleetSpec {
+        let n = speed_mults.len().max(mem_mults.len()).max(1);
+        let pick = |v: &[f64], i: usize| if v.is_empty() { 1.0 } else { v[i % v.len()] };
+        FleetSpec {
+            profiles: (0..n)
+                .map(|i| HardwareProfile {
+                    speed_mult: pick(speed_mults, i),
+                    mem_mult: pick(mem_mults, i),
+                })
+                .collect(),
+        }
+    }
+
+    /// Profile of decode instance `id` (cycled).
+    pub fn profile(&self, id: usize) -> HardwareProfile {
+        if self.profiles.is_empty() {
+            HardwareProfile::default()
+        } else {
+            self.profiles[id % self.profiles.len()]
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.profiles.is_empty() {
+            return Err(crate::Error::config("fleet.profiles must be non-empty"));
+        }
+        for (i, p) in self.profiles.iter().enumerate() {
+            if !(p.speed_mult.is_finite() && p.speed_mult > 0.0) {
+                return Err(crate::Error::config(format!(
+                    "fleet profile {i}: speed_mult must be finite and > 0"
+                )));
+            }
+            if !(p.mem_mult.is_finite() && p.mem_mult > 0.0) {
+                return Err(crate::Error::config(format!(
+                    "fleet profile {i}: mem_mult must be finite and > 0"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Multi-round session shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -113,13 +237,21 @@ pub struct ScenarioSpec {
     /// If set, rescale lengths to the pico (real-execution) domain
     /// `(max_prompt, max_output)` — mirrors `TraceGen::pico`.
     pub pico_scale: Option<(u32, u32)>,
+    /// Failure-injection plan carried alongside the workload (the
+    /// simulator realizes it as `InstanceFailure` events).
+    pub faults: Option<FaultConfig>,
+    /// Heterogeneous decode-fleet shape; `None` = uniform hardware.
+    pub fleet: Option<FleetSpec>,
 }
 
-/// A generated scenario workload: initial arrivals + session plan.
+/// A generated scenario workload: initial arrivals + session plan, plus
+/// the environment shape (faults, fleet) the spec carried.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScenarioTrace {
     pub requests: Vec<Request>,
     pub sessions: SessionPlan,
+    pub faults: Option<FaultConfig>,
+    pub fleet: Option<FleetSpec>,
 }
 
 impl ScenarioTrace {
@@ -129,6 +261,8 @@ impl ScenarioTrace {
         ScenarioTrace {
             requests,
             sessions: SessionPlan::default(),
+            faults: None,
+            fleet: None,
         }
     }
 
@@ -148,6 +282,8 @@ impl ScenarioSpec {
             classes: ClassMix::single(ClassSpec::dataset(dataset)),
             sessions: None,
             pico_scale: None,
+            faults: None,
+            fleet: None,
         }
     }
 
@@ -164,6 +300,12 @@ impl ScenarioSpec {
         }
         if let Some(s) = &self.sessions {
             s.validate()?;
+        }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+        }
+        if let Some(f) = &self.fleet {
+            f.validate()?;
         }
         Ok(())
     }
@@ -223,6 +365,8 @@ impl ScenarioSpec {
         ScenarioTrace {
             requests,
             sessions: plan,
+            faults: self.faults.clone(),
+            fleet: self.fleet.clone(),
         }
     }
 
@@ -280,6 +424,8 @@ mod tests {
                 max_context_tokens: 60_000,
             }),
             pico_scale: None,
+            faults: None,
+            fleet: None,
         }
     }
 
@@ -354,6 +500,52 @@ mod tests {
                 assert!((1..=512).contains(&turn.output_len));
             }
         }
+    }
+
+    #[test]
+    fn fault_and_fleet_validation() {
+        let mut f = FaultConfig::default();
+        assert!(!f.enabled());
+        assert!(f.validate().is_ok());
+        f.mtbf_s = 60.0;
+        f.mttr_s = 0.0;
+        assert!(f.enabled());
+        assert!(f.validate().is_err());
+        f.mttr_s = 10.0;
+        assert!(f.validate().is_ok());
+        f.script.push(FaultEvent {
+            at: -1.0,
+            instance: 0,
+            down_s: 5.0,
+        });
+        assert!(f.validate().is_err());
+
+        let fleet = FleetSpec::from_mults(&[1.0, 2.0], &[1.5]);
+        assert!(fleet.validate().is_ok());
+        assert_eq!(fleet.profiles.len(), 2);
+        assert_eq!(fleet.profile(1).speed_mult, 2.0);
+        assert_eq!(fleet.profile(2), fleet.profile(0));
+        assert!(FleetSpec { profiles: vec![] }.validate().is_err());
+        let bad = FleetSpec::from_mults(&[0.0], &[1.0]);
+        assert!(bad.validate().is_err());
+
+        let mut spec = session_spec();
+        spec.fleet = Some(FleetSpec { profiles: vec![] });
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn trace_carries_faults_and_fleet() {
+        let mut spec = session_spec();
+        spec.faults = Some(FaultConfig {
+            mtbf_s: 120.0,
+            ..Default::default()
+        });
+        spec.fleet = Some(FleetSpec::from_mults(&[1.0, 0.5], &[1.0, 2.0]));
+        let trace = spec.generate(50, 7);
+        assert_eq!(trace.faults, spec.faults);
+        assert_eq!(trace.fleet, spec.fleet);
+        assert!(ScenarioTrace::from_requests(vec![]).faults.is_none());
     }
 
     #[test]

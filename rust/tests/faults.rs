@@ -1,0 +1,214 @@
+//! Failure-injection and heterogeneous-fleet integration tests: the
+//! crash path must re-queue displaced work without losing requests
+//! (roomy capacity), the stochastic fault schedule must be a pure
+//! function of the seed, and the fleet scenarios must be registered and
+//! buildable.
+
+use star::bench::scenarios::{small_cluster, ScenarioRegistry};
+use star::sim::{SimParams, Simulator};
+use star::workload::{Dataset, FaultConfig, FaultEvent, FleetSpec, TraceGen};
+
+/// Drain-vs-crash differential: a scripted mid-run crash discards
+/// in-flight decode KV (recomputed via the re-queue path) but never a
+/// whole request — with capacity to spare, both the faultless baseline
+/// and the crash run complete every request with exact token totals.
+#[test]
+fn scripted_crash_loses_tokens_never_requests() {
+    let mut exp = small_cluster(Dataset::ShareGpt, 1.0, 42);
+    exp.cluster.kv_capacity_tokens = 300_000; // roomy: watermark never terminal
+    let trace = TraceGen::new(Dataset::ShareGpt, 1.0).generate(100, 42);
+    let want: u64 = trace.iter().map(|r| r.output_len as u64).sum();
+
+    let baseline = Simulator::new(
+        SimParams {
+            exp: exp.clone(),
+            validate_state: true,
+            ..Default::default()
+        },
+        &trace,
+    )
+    .run();
+    assert_eq!(baseline.n_failed, 0);
+    assert!(baseline.reliability.is_empty());
+    let base_done: u64 = baseline
+        .completed
+        .iter()
+        .map(|l| l.output_tokens as u64)
+        .sum();
+    assert_eq!(base_done, want);
+
+    // same workload, but decode instance 0 crashes at t=60s (well into
+    // steady state) and recovers 40s later
+    exp.faults = Some(FaultConfig {
+        mtbf_s: 0.0,
+        mttr_s: 0.0,
+        max_failures: 0,
+        script: vec![FaultEvent {
+            at: 60.0,
+            instance: 0,
+            down_s: 40.0,
+        }],
+    });
+    let crashed = Simulator::new(
+        SimParams {
+            exp,
+            validate_state: true,
+            ..Default::default()
+        },
+        &trace,
+    )
+    .run();
+    let rel = &crashed.reliability;
+    assert_eq!(rel.failures, 1, "the scripted crash must execute");
+    assert_eq!(rel.recoveries, 1, "the instance must come back after 40s");
+    assert!(
+        rel.requeued >= 1,
+        "a crash 60s into a 1 rps run must displace in-flight work"
+    );
+    assert!(
+        rel.kv_tokens_dropped > 0,
+        "displaced residents must surrender their KV"
+    );
+    assert_eq!(rel.lost, 0, "roomy capacity: nothing may fail terminally");
+    assert_eq!(crashed.n_failed, 0);
+    assert_eq!(
+        crashed.completed.len() + crashed.n_failed,
+        crashed.n_requests,
+        "accounting must close"
+    );
+    let done: u64 = crashed
+        .completed
+        .iter()
+        .map(|l| l.output_tokens as u64)
+        .sum();
+    assert_eq!(
+        done, want,
+        "recomputed requests must regenerate their exact outputs"
+    );
+    assert_eq!(
+        rel.requeue_delays.len() as u64,
+        rel.requeued,
+        "every re-queued request must re-admit (none stranded)"
+    );
+}
+
+/// The stochastic failure schedule is drawn from a dedicated PRNG stream
+/// off the run seed: same seed ⇒ identical failure times, identical
+/// re-queue traces, identical reliability report.
+#[test]
+fn stochastic_faults_are_deterministic_per_seed() {
+    let run = || {
+        let mut exp = small_cluster(Dataset::ShareGpt, 0.5, 7);
+        exp.cluster.kv_capacity_tokens = 300_000;
+        exp.faults = Some(FaultConfig {
+            mtbf_s: 60.0,
+            mttr_s: 10.0,
+            max_failures: 5,
+            script: Vec::new(),
+        });
+        let trace = TraceGen::new(Dataset::ShareGpt, 0.5).generate(80, 7);
+        Simulator::new(
+            SimParams {
+                exp,
+                validate_state: true,
+                ..Default::default()
+            },
+            &trace,
+        )
+        .run()
+    };
+    let a = run();
+    let b = run();
+    assert!(
+        a.reliability.failures > 0,
+        "mtbf 60s over this run must produce failures"
+    );
+    assert_eq!(
+        a.reliability, b.reliability,
+        "same seed must reproduce the failure schedule, re-queue trace, \
+         and counters exactly"
+    );
+    assert_eq!(a.completed.len(), b.completed.len());
+    assert_eq!(a.n_failed, b.n_failed);
+}
+
+/// Changing only the seed must change the stochastic failure schedule
+/// (the stream is seeded off the run seed, not a constant).
+#[test]
+fn stochastic_fault_schedule_varies_with_seed() {
+    let run = |seed: u64| {
+        let mut exp = small_cluster(Dataset::ShareGpt, 0.5, seed);
+        exp.cluster.kv_capacity_tokens = 300_000;
+        exp.faults = Some(FaultConfig {
+            mtbf_s: 60.0,
+            mttr_s: 10.0,
+            max_failures: 5,
+            script: Vec::new(),
+        });
+        let trace = TraceGen::new(Dataset::ShareGpt, 0.5).generate(60, seed);
+        Simulator::new(
+            SimParams {
+                exp,
+                ..Default::default()
+            },
+            &trace,
+        )
+        .run()
+    };
+    let a = run(7);
+    let b = run(8);
+    assert_ne!(
+        a.reliability.failure_log, b.reliability.failure_log,
+        "different seeds must draw different failure times"
+    );
+}
+
+/// A heterogeneous fleet with hardware-aware dispatch completes every
+/// request with exact token totals — mem_mult scales real capacity and
+/// speed_mult only bends modeled time, so conservation is untouched.
+#[test]
+fn heterogeneous_fleet_conserves_tokens() {
+    let mut exp = small_cluster(Dataset::ShareGpt, 0.4, 13);
+    exp.cluster.kv_capacity_tokens = 300_000;
+    exp.fleet = Some(FleetSpec::from_mults(&[1.0, 0.5], &[1.0, 2.0]));
+    exp.dispatch_policy = "hardware_aware".to_string();
+    exp.predictor = "oracle".to_string();
+    let trace = TraceGen::new(Dataset::ShareGpt, 0.4).generate(80, 13);
+    let report = Simulator::new(
+        SimParams {
+            exp,
+            validate_state: true,
+            ..Default::default()
+        },
+        &trace,
+    )
+    .run();
+    assert_eq!(report.n_failed, 0);
+    let done: u64 = report.completed.iter().map(|l| l.output_tokens as u64).sum();
+    let want: u64 = trace.iter().map(|r| r.output_len as u64).sum();
+    assert_eq!(done, want);
+}
+
+/// The fleet scenarios ship in the registry and build valid specs with
+/// faults/fleet attached where the scenario calls for them.
+#[test]
+fn fleet_scenarios_are_registered_and_build() {
+    let reg = ScenarioRegistry::with_builtins();
+    let names = reg.names();
+    for required in ["degraded_fleet", "mixed_gen"] {
+        assert!(
+            names.iter().any(|n| n.as_str() == required),
+            "scenario `{required}` must be registered (have: {names:?})"
+        );
+    }
+    let exp = small_cluster(Dataset::ShareGpt, 0.3, 5);
+    let degraded = reg.build("degraded_fleet", &exp).expect("degraded_fleet builds");
+    assert!(degraded.faults.is_some(), "degraded_fleet injects faults");
+    assert!(degraded.fleet.is_some(), "degraded_fleet mixes hardware");
+    let mixed = reg.build("mixed_gen", &exp).expect("mixed_gen builds");
+    assert!(mixed.faults.is_none(), "mixed_gen is fault-free");
+    assert!(mixed.fleet.is_some(), "mixed_gen mixes hardware");
+    // the specs generate usable traces
+    let t = degraded.generate(20, 5);
+    assert_eq!(t.requests.len(), 20);
+}

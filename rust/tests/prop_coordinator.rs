@@ -38,6 +38,7 @@ fn random_snapshot(g: &mut Gen) -> ClusterSnapshot {
                 inbound_reserved_tokens: g.u64(0, 5_000),
                 cached_tokens: g.u64(0, 5_000),
                 lifecycle: Default::default(),
+                hardware: Default::default(),
             }
         })
         .collect();
@@ -161,6 +162,7 @@ fn balanced_clusters_are_left_alone() {
                 inbound_reserved_tokens: 0,
                 cached_tokens: 0,
                 lifecycle: Default::default(),
+                hardware: Default::default(),
             })
             .collect();
         let snap = ClusterSnapshot {
@@ -221,6 +223,7 @@ fn round_robin_is_fair_on_uniform_clusters() {
                     inbound_reserved_tokens: 0,
                     cached_tokens: 0,
                     lifecycle: Default::default(),
+                    hardware: Default::default(),
                 })
                 .collect(),
             tokens_per_interval: 10.0,
