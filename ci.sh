@@ -5,8 +5,10 @@
 # Usage:
 #   ./ci.sh             build, test, fmt, clippy
 #   ./ci.sh --smoke     ... plus run every bench at smoke scale
-#                       (STAR_BENCH_SMOKE=1: ≤2k requests, ≤8 instances)
-#                       and validate every emitted BENCH_*.json
+#                       (STAR_BENCH_SMOKE=1: ≤2k requests, ≤8 instances),
+#                       validate every emitted BENCH_*.json, and smoke the
+#                       `star trace` observability surface (export both
+#                       formats + slo-violations)
 #   ./ci.sh --bench NAME  build + run ONE bench (benches/NAME.rs) at smoke
 #                       scale and validate its BENCH_*.json — the quick
 #                       inner loop while iterating on a single bench
@@ -139,6 +141,43 @@ smoke_gate() {
   ./target/release/star validate-bench --require "$EXPECTED_BENCHES" "${files[@]}"
 }
 
+# Observability smoke: a small run through every `star trace` surface.
+# Chrome export re-parses through the binary's own JSON parser before it
+# prints (self-validating), jsonl must be non-empty, and slo-violations
+# must exit 0 whether or not the run violated anything.
+obs_gate() {
+  local common=(--scenario bursty_mixed --requests 40 --rps 0.5 \
+                --kv-capacity 400000 --seed 13)
+  echo "==> [obs] star trace export --format chrome"
+  if ! ./target/release/star trace export --format chrome "${common[@]}" \
+        > "$SMOKE_LOG_DIR/trace_chrome.json"; then
+    echo "obs: chrome export failed" >&2
+    return 1
+  fi
+  if [ ! -s "$SMOKE_LOG_DIR/trace_chrome.json" ]; then
+    echo "obs: chrome export emitted an empty payload" >&2
+    return 1
+  fi
+  echo "==> [obs] star trace export --format jsonl"
+  if ! ./target/release/star trace export --format jsonl "${common[@]}" \
+        > "$SMOKE_LOG_DIR/trace.jsonl"; then
+    echo "obs: jsonl export failed" >&2
+    return 1
+  fi
+  if [ ! -s "$SMOKE_LOG_DIR/trace.jsonl" ]; then
+    echo "obs: jsonl export emitted an empty payload" >&2
+    return 1
+  fi
+  echo "==> [obs] star trace slo-violations"
+  if ! ./target/release/star trace slo-violations "${common[@]}" \
+        > "$SMOKE_LOG_DIR/trace_slo.txt"; then
+    echo "obs: slo-violations failed" >&2
+    return 1
+  fi
+  echo "==> [obs] star trace summarize"
+  ./target/release/star trace summarize "${common[@]}"
+}
+
 # single-bench fast path: build, run it at smoke scale, validate its JSON
 single_bench() {
   rm -f BENCH_*.json
@@ -210,7 +249,8 @@ run_step test cargo test -q
 
 # `star analyze`: the dependency-free determinism/safety lint over src/
 # (R1 hash-collections, R2 wall-clock, R3 unsafe, R4 unwrap, R5 event
-# coverage). Exits nonzero on any finding, so the tree stays clean.
+# coverage, R6 trace-event coverage). Exits nonzero on any finding, so
+# the tree stays clean.
 if [ "$ANALYZE" = "1" ]; then
   run_step analyze ./target/release/star analyze src
 fi
@@ -231,6 +271,8 @@ fi
 
 if [ "$SMOKE" = "1" ]; then
   run_step smoke smoke_gate
+  mkdir -p "$SMOKE_LOG_DIR"
+  run_step obs obs_gate
 fi
 
 print_summary

@@ -7,12 +7,14 @@
 //!
 //! * **R1** `no-hash-collections` — no `HashMap`/`HashSet` in the
 //!   determinism-critical dirs (`sim/`, `coordinator/`, `serve/`,
-//!   `kvcache/`): iteration order is per-instance random and can fabricate
-//!   goodput deltas the size of the ones being measured. Use `BTreeMap`.
+//!   `kvcache/`, `obs/`): iteration order is per-instance random and can
+//!   fabricate goodput deltas the size of the ones being measured. Use
+//!   `BTreeMap`.
 //! * **R2** `no-wall-clock` — no `Instant::now`/`SystemTime`/`thread_rng`
 //!   in the simulated core (`sim/`, `coordinator/`, `kvcache/`,
-//!   `workload/`): time and randomness must flow through the event clock
-//!   and [`crate::prng`]. The live `serve/` layer is real time and exempt.
+//!   `workload/`, `obs/`): time and randomness must flow through the event
+//!   clock and [`crate::prng`]. The live `serve/` layer is real time and
+//!   exempt.
 //! * **R3** `unsafe-allowlist` — `unsafe` only in allowlisted files, and
 //!   every occurrence preceded by a `// SAFETY:` comment.
 //! * **R4** `no-bare-unwrap` — no `.unwrap()` in `sim/` + `serve/`
@@ -20,6 +22,10 @@
 //! * **R5** `event-coverage` — every [`crate::sim::Event`] variant must be
 //!   matched in `sim/engine.rs` AND listed in its `VALIDATED_EVENTS`
 //!   coverage const, so a new event cannot dodge the invariant checker.
+//! * **R6** `trace-event-coverage` — every
+//!   [`crate::metrics::TraceEvent`] variant must be handled by the span
+//!   assembler in `obs/spans.rs`, so a newly recorded trace event cannot
+//!   silently vanish from `star trace` timelines.
 //!
 //! Findings are one line each (`path:line: Rn rule-name: message | snippet`),
 //! and the CLI exits nonzero when any exist. Intentional exceptions carry a
@@ -74,14 +80,14 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "R1",
         name: "no-hash-collections",
-        summary: "no HashMap/HashSet in sim/, coordinator/, serve/, kvcache/ \
+        summary: "no HashMap/HashSet in sim/, coordinator/, serve/, kvcache/, obs/ \
                   (iteration-order nondeterminism); use BTreeMap or waive",
     },
     RuleInfo {
         id: "R2",
         name: "no-wall-clock",
         summary: "no Instant::now/SystemTime/thread_rng in sim/, coordinator/, \
-                  kvcache/, workload/ (time flows through the event clock and prng)",
+                  kvcache/, workload/, obs/ (time flows through the event clock and prng)",
     },
     RuleInfo {
         id: "R3",
@@ -100,6 +106,12 @@ pub const RULES: &[RuleInfo] = &[
         name: "event-coverage",
         summary: "every sim Event variant is matched in sim/engine.rs and named \
                   in its VALIDATED_EVENTS coverage list",
+    },
+    RuleInfo {
+        id: "R6",
+        name: "trace-event-coverage",
+        summary: "every TraceEvent variant recorded by metrics/recorder.rs is \
+                  handled by the obs/spans.rs span assembler",
     },
 ];
 
@@ -366,6 +378,7 @@ pub fn analyze_tree(root: &Path, rule_ids: &[&str]) -> Result<Vec<Finding>> {
             "R3" => rules::check_unsafe(&files, &mut findings),
             "R4" => rules::check_bare_unwrap(&files, &mut findings),
             "R5" => rules::check_event_coverage(&files, &mut findings),
+            "R6" => rules::check_trace_event_coverage(&files, &mut findings),
             other => {
                 let known: Vec<&str> = RULES.iter().map(|r| r.id).collect();
                 return Err(Error::Cli(format!(

@@ -2,7 +2,8 @@
 //! [`super::RULES`], rationale in DESIGN.md §14). Each rule is a pure
 //! function over lexed [`SourceFile`]s: R1–R4 scan token streams
 //! file-by-file; R5 is a cross-file rule relating `sim/events.rs` to
-//! `sim/engine.rs`.
+//! `sim/engine.rs`, and R6 relates `metrics/recorder.rs` to
+//! `obs/spans.rs` with the same variant-extraction technique.
 
 use super::{Finding, RuleInfo, SourceFile, RULES};
 use crate::analyze::lexer::TokKind;
@@ -26,7 +27,7 @@ fn in_dirs(file: &SourceFile, dirs: &[&str]) -> bool {
 pub fn check_hash_collections(files: &[SourceFile], out: &mut Vec<Finding>) {
     let r = rule("R1");
     for f in files {
-        if !in_dirs(f, &["sim/", "coordinator/", "serve/", "kvcache/"]) {
+        if !in_dirs(f, &["sim/", "coordinator/", "serve/", "kvcache/", "obs/"]) {
             continue;
         }
         for (t, &in_test) in f.toks.iter().zip(&f.in_test) {
@@ -56,7 +57,7 @@ pub fn check_hash_collections(files: &[SourceFile], out: &mut Vec<Finding>) {
 pub fn check_wall_clock(files: &[SourceFile], out: &mut Vec<Finding>) {
     let r = rule("R2");
     for f in files {
-        if !in_dirs(f, &["sim/", "coordinator/", "kvcache/", "workload/"]) {
+        if !in_dirs(f, &["sim/", "coordinator/", "kvcache/", "workload/", "obs/"]) {
             continue;
         }
         let toks = &f.toks;
@@ -248,6 +249,51 @@ pub fn check_event_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
     }
 }
 
+/// R6: cross-file trace-event-coverage rule. Parses the `TraceEvent`
+/// variants out of `metrics/recorder.rs` and requires each to appear as a
+/// `TraceEvent::<Variant>` match in the span assembler (`obs/spans.rs`) —
+/// the flight recorder is assembled from trace rows, so an event kind the
+/// assembler never handles silently vanishes from every `star trace`
+/// timeline. Same lexer technique as R5.
+pub fn check_trace_event_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R6");
+    let Some(recorder) = files.iter().find(|f| f.rel == "metrics/recorder.rs") else {
+        return; // not a tree with the trace-recorder layer; nothing to enforce
+    };
+    let Some(spans) = files.iter().find(|f| f.rel == "obs/spans.rs") else {
+        return;
+    };
+    let variants = enum_variants(recorder, "TraceEvent");
+    if variants.is_empty() {
+        return;
+    }
+    // `TraceEvent :: Variant` token sequences anywhere in the assembler
+    let toks = &spans.toks;
+    let mut handled: Vec<&str> = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].is_ident("TraceEvent")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        {
+            if let Some(v) = toks.get(i + 3) {
+                if v.kind == TokKind::Ident {
+                    handled.push(&v.text);
+                }
+            }
+        }
+    }
+    for (name, line) in &variants {
+        if !handled.iter().any(|h| h == name) {
+            recorder.push_finding(
+                out,
+                r,
+                *line,
+                format!("TraceEvent::{name} is never handled by the obs/spans.rs span assembler"),
+            );
+        }
+    }
+}
+
 /// Extract `(variant, line)` pairs from `enum <name> { … }`. Variants are
 /// the identifiers at brace depth 1 that open a field list or end the arm
 /// (`Name {…}`, `Name(…)`, `Name,`, `Name }`); identifiers inside variant
@@ -430,6 +476,52 @@ mod tests {
         assert!(out.iter().any(|f| f.message.contains("VALIDATED_EVENTS")
             && f.message.contains("Finish")
             && f.file == "sim/engine.rs"));
+    }
+
+    #[test]
+    fn r6_flags_unhandled_trace_event_variants() {
+        let recorder = file(
+            "metrics/recorder.rs",
+            "pub enum TraceEvent {\n\
+                 Arrived { request: u64 },\n\
+                 Finished { request: u64, instance: usize },\n\
+                 KvSample { instance: usize },\n\
+             }\n",
+        );
+        let spans = file(
+            "obs/spans.rs",
+            "fn absorb(ev: &TraceEvent) {\n\
+                 match ev {\n\
+                     TraceEvent::Arrived { request } => drop(request),\n\
+                     TraceEvent::Finished { .. } => {}\n\
+                     _ => {}\n\
+                 }\n\
+             }\n",
+        );
+        let mut out = Vec::new();
+        check_trace_event_coverage(&[recorder, spans], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "R6");
+        assert_eq!(out[0].file, "metrics/recorder.rs");
+        assert_eq!(out[0].line, 4);
+        assert!(out[0].message.contains("KvSample"), "{out:?}");
+    }
+
+    #[test]
+    fn r6_is_silent_when_every_variant_is_handled_or_layer_is_absent() {
+        let recorder = file("metrics/recorder.rs", "pub enum TraceEvent { Tick }\n");
+        let spans = file(
+            "obs/spans.rs",
+            "fn absorb(ev: &TraceEvent) { match ev { TraceEvent::Tick => {} } }\n",
+        );
+        let mut out = Vec::new();
+        check_trace_event_coverage(&[recorder, spans], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // a tree without the obs layer (e.g. the R1-R5 fixture dirs alone)
+        // is not a violation
+        let lone = file("metrics/recorder.rs", "pub enum TraceEvent { Tick }\n");
+        check_trace_event_coverage(&[lone], &mut out);
+        assert!(out.is_empty(), "{out:?}");
     }
 
     #[test]

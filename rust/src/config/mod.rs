@@ -9,7 +9,7 @@ mod types;
 
 pub use parser::{parse_toml, Value};
 pub use types::{
-    ClusterConfig, ElasticConfig, ExperimentConfig, KvCacheConfig, PredictorKind,
+    ClusterConfig, ElasticConfig, ExperimentConfig, KvCacheConfig, ObsConfig, PredictorKind,
     ReschedulerConfig,
 };
 

@@ -254,6 +254,52 @@ impl KvCacheConfig {
     }
 }
 
+/// Observability parameters (`[obs]` table; `crate::obs`, `star trace`).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Master switch. Off (the default) the subsystem is a strict
+    /// no-op: drivers record nothing and their outputs are bit-for-bit
+    /// identical to a build without it.
+    pub enabled: bool,
+    /// Seconds between registry time-series samples in both drivers
+    /// (sim event clock / serve wall timer). Replaces the old
+    /// hardcoded sampling cadence; must be > 0.
+    pub sample_every_s: f64,
+    /// Flight-recorder bound: retained spans beyond this are dropped
+    /// oldest-first (and counted).
+    pub ring_capacity: usize,
+    /// Head-based span sampling probability in [0, 1]; the decision is
+    /// a pure function of (seed, request id) on a dedicated PRNG
+    /// stream, so same seed ⇒ identical retained set.
+    pub sample_rate: f64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            sample_every_s: 1.0,
+            ring_capacity: 4096,
+            sample_rate: 1.0,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.sample_every_s > 0.0) {
+            return Err(Error::config("obs.sample_every_s must be > 0"));
+        }
+        if self.ring_capacity == 0 {
+            return Err(Error::config("obs.ring_capacity must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.sample_rate) {
+            return Err(Error::config("obs.sample_rate must be in [0, 1]"));
+        }
+        Ok(())
+    }
+}
+
 /// Cluster + workload shape for one experiment run.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -319,6 +365,8 @@ pub struct ExperimentConfig {
     pub elastic: ElasticConfig,
     /// Prefix-cache subsystem (`[kvcache]` table, CLI `--cache`).
     pub kvcache: KvCacheConfig,
+    /// Observability subsystem (`[obs]` table, `star trace`).
+    pub obs: ObsConfig,
     /// Policy-specific numeric knobs: every numeric `policy.*` config key
     /// except the two names above, with the `policy.` prefix stripped
     /// (e.g. `policy.slo_aware.mem_weight = 2.0`).
@@ -356,6 +404,7 @@ impl Default for ExperimentConfig {
             scaling_policy: "static".to_string(),
             elastic: ElasticConfig::default(),
             kvcache: KvCacheConfig::default(),
+            obs: ObsConfig::default(),
             policy_params: BTreeMap::new(),
             scenario_name: None,
             scenario: None,
@@ -474,6 +523,19 @@ impl ExperimentConfig {
             budget_tokens: budget as u64,
             ttl_s: cfg.f64_or("kvcache.ttl_s", kd.ttl_s),
         };
+        // ring_capacity is range-checked as i64 BEFORE the usize cast —
+        // same rationale as the elastic counts and the cache budget
+        let od = ObsConfig::default();
+        let ring_capacity = cfg.i64_or("obs.ring_capacity", od.ring_capacity as i64);
+        if ring_capacity < 1 {
+            return Err(Error::config("obs.ring_capacity must be >= 1"));
+        }
+        let obs = ObsConfig {
+            enabled: cfg.bool_or("obs.enabled", od.enabled),
+            sample_every_s: cfg.f64_or("obs.sample_every_s", od.sample_every_s),
+            ring_capacity: ring_capacity as usize,
+            sample_rate: cfg.f64_or("obs.sample_rate", od.sample_rate),
+        };
         let faults = faults_from_config(cfg)?;
         let fleet = fleet_from_config(cfg)?;
         Ok(ExperimentConfig {
@@ -492,6 +554,7 @@ impl ExperimentConfig {
             scaling_policy: cfg.str_or("policy.scaling", &ed.scaling_policy).to_string(),
             elastic,
             kvcache,
+            obs,
             policy_params,
             scenario_name,
             scenario,
@@ -604,6 +667,7 @@ impl ExperimentConfig {
         }
         self.elastic.validate()?;
         self.kvcache.validate(self.rescheduler.interval_s)?;
+        self.obs.validate()?;
         // knob keys are `<policy>.<knob>`; a typoed or aliased policy
         // prefix would otherwise be silently ignored and the default knob
         // value used — in a reproduction codebase the knob values ARE the
@@ -1209,6 +1273,52 @@ mod tests {
         exp.kvcache.policy = "lru".to_string();
         exp.kvcache.budget_tokens = 0;
         assert!(exp.validate().is_err());
+    }
+
+    #[test]
+    fn obs_table_parses_and_validates() {
+        let cfg = Config::from_str(
+            "[obs]\nenabled = true\nsample_every_s = 0.5\nring_capacity = 128\n\
+             sample_rate = 0.25\n",
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!(exp.obs.enabled);
+        assert!((exp.obs.sample_every_s - 0.5).abs() < 1e-12);
+        assert_eq!(exp.obs.ring_capacity, 128);
+        assert!((exp.obs.sample_rate - 0.25).abs() < 1e-12);
+        exp.validate().unwrap();
+        // defaults: off, 1 s cadence, sane ring
+        let exp = ExperimentConfig::from_config(&Config::from_str("").unwrap()).unwrap();
+        assert!(!exp.obs.enabled);
+        assert!((exp.obs.sample_every_s - 1.0).abs() < 1e-12);
+        assert_eq!(exp.obs.ring_capacity, 4096);
+        exp.validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_obs_configs_are_rejected() {
+        // non-positive ring capacities fail at parse time, before the
+        // usize cast could wrap them
+        for bad in ["[obs]\nring_capacity = 0\n", "[obs]\nring_capacity = -4\n"] {
+            let cfg = Config::from_str(bad).unwrap();
+            let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains("obs.ring_capacity"), "`{bad}`: {err}");
+        }
+        // degenerate cadence / rate fail validation
+        let mut exp = ExperimentConfig::default();
+        exp.obs.sample_every_s = 0.0;
+        let err = exp.validate().unwrap_err().to_string();
+        assert!(err.contains("obs.sample_every_s"), "{err}");
+        let mut exp = ExperimentConfig::default();
+        exp.obs.sample_every_s = -1.0;
+        assert!(exp.validate().is_err());
+        for bad in [-0.1, 1.1] {
+            let mut exp = ExperimentConfig::default();
+            exp.obs.sample_rate = bad;
+            let err = exp.validate().unwrap_err().to_string();
+            assert!(err.contains("obs.sample_rate"), "rate {bad}: {err}");
+        }
     }
 
     #[test]

@@ -16,7 +16,8 @@ use super::policy::{DispatchPolicy, IncomingRequest, PolicyConfig, PolicyRegistr
 use super::rescheduler::{MigrationDecision, ReschedulerStats};
 use crate::config::{ElasticConfig, ExperimentConfig};
 use crate::costmodel::MigrationCostModel;
-use crate::{InstanceId, Result};
+use crate::obs::AttributionLog;
+use crate::{InstanceId, Result, Time};
 
 /// One dispatch policy + one reschedule policy + one scaling policy,
 /// driven identically by the live runtime and the simulator.
@@ -30,6 +31,11 @@ pub struct ControlLoop {
     /// guaranteed no-op, preserving frozen-pool behaviour exactly.
     scaling: Box<dyn ScalingPolicy>,
     guard: ElasticGuard,
+    /// Decision-attribution log (`[obs] enabled`): every dispatch /
+    /// reschedule / scale / cache decision is recorded here with its
+    /// policy name and work proxy. Disabled (the default) every record
+    /// call is a no-op, so the hot path pays one branch.
+    obs: AttributionLog,
 }
 
 impl ControlLoop {
@@ -62,6 +68,7 @@ impl ControlLoop {
             rescheduling_enabled,
             scaling,
             guard: ElasticGuard::new(elastic),
+            obs: AttributionLog::default(),
         }
     }
 
@@ -76,13 +83,15 @@ impl ControlLoop {
         let dispatch = registry.build_dispatch(&exp.dispatch_policy, &cfg)?;
         let reschedule = registry.build_reschedule(&exp.reschedule_policy, &cfg)?;
         let scaling = registry.build_scaling(&exp.scaling_policy, &cfg)?;
-        Ok(ControlLoop::with_scaling(
+        let mut loop_ = ControlLoop::with_scaling(
             dispatch,
             reschedule,
             exp.rescheduler.enabled,
             scaling,
             exp.elastic.clone(),
-        ))
+        );
+        loop_.obs = AttributionLog::new(exp.obs.enabled);
+        Ok(loop_)
     }
 
     /// Place a request arriving from prefill (or re-dispatched after OOM
@@ -96,7 +105,14 @@ impl ControlLoop {
         view: &ClusterView<'_>,
         incoming: &IncomingRequest,
     ) -> InstanceId {
-        self.dispatch.choose(view, incoming)
+        let chosen = self.dispatch.choose(view, incoming);
+        self.obs.record_dispatch(
+            self.dispatch.name(),
+            incoming.id,
+            view.n_instances() as u64,
+            chosen,
+        );
+        chosen
     }
 
     /// Run one scheduling interval; empty when rescheduling is disabled.
@@ -106,7 +122,24 @@ impl ControlLoop {
         if !self.rescheduling_enabled {
             return Vec::new();
         }
-        self.reschedule.decide(view)
+        let scanned_before = self.reschedule.stats().candidates_evaluated;
+        let decisions = self.reschedule.decide(view);
+        if self.obs.enabled() {
+            let scanned = self
+                .reschedule
+                .stats()
+                .candidates_evaluated
+                .saturating_sub(scanned_before);
+            self.obs.record_reschedule_tick(
+                self.reschedule.name(),
+                scanned,
+                decisions.len() as u64,
+            );
+            for d in &decisions {
+                self.obs.record_migration(self.reschedule.name(), d.request, d.dst);
+            }
+        }
+        decisions
     }
 
     /// Feed the measured average decode iteration time to the reschedule
@@ -132,10 +165,17 @@ impl ControlLoop {
     /// events, the live server on its threads).
     pub fn scale(&mut self, view: &ClusterView<'_>, pool: &PoolStats) -> Vec<ScalingAction> {
         let proposed = self.scaling.decide(view, pool);
-        if proposed.is_empty() {
-            return proposed;
-        }
-        self.guard.admit(proposed, view, pool)
+        let admitted = if proposed.is_empty() {
+            proposed
+        } else {
+            self.guard.admit(proposed, view, pool)
+        };
+        self.obs.record_scale(
+            self.scaling.name(),
+            view.n_instances() as u64,
+            admitted.len() as u64,
+        );
+        admitted
     }
 
     /// Best-effort indicator that the pool may change shape (the builtin
@@ -170,6 +210,29 @@ impl ControlLoop {
     /// Reschedule-policy counters for reports.
     pub fn stats(&self) -> ReschedulerStats {
         self.reschedule.stats()
+    }
+
+    /// Stamp the decision clock: every attribution record until the
+    /// next call carries this time. Drivers call it once per event /
+    /// loop iteration; a no-op-cheap f64 store when obs is off.
+    #[inline]
+    pub fn set_decision_time(&mut self, t: Time) {
+        self.obs.set_now(t);
+    }
+
+    /// The attribution log (e.g. for prefix-cache consult records and
+    /// the live server's measured-µs cost notes).
+    pub fn attribution_mut(&mut self) -> &mut AttributionLog {
+        &mut self.obs
+    }
+
+    pub fn attribution(&self) -> &AttributionLog {
+        &self.obs
+    }
+
+    /// Move the log out for the run report (leaves a disabled default).
+    pub fn take_attribution(&mut self) -> AttributionLog {
+        std::mem::take(&mut self.obs)
     }
 }
 
@@ -271,6 +334,63 @@ mod tests {
         assert_eq!(acts, vec![ScalingAction::FlipToDecode]);
         // guard cooldown: immediately after, nothing more
         assert!(c.scale(&hot.view(), &pool).is_empty());
+    }
+
+    #[test]
+    fn attribution_records_decisions_when_enabled() {
+        use crate::obs::DecisionKind;
+        let reg = PolicyRegistry::with_builtins();
+        let mut e = exp();
+        e.obs.enabled = true;
+        let mut c =
+            ControlLoop::from_experiment(&e, MigrationCostModel::new_25gbps(1), &reg).unwrap();
+        c.set_decision_time(1.5);
+        let incoming = IncomingRequest {
+            id: 9,
+            tokens: 10,
+            predicted_remaining: None,
+            preferred_instance: None,
+        };
+        let _ = c.dispatch(&skewed().view(), &incoming);
+        let _ = c.reschedule(&skewed().view());
+        let pool = PoolStats {
+            prefill_active: 1,
+            decode_active: 2,
+            ..Default::default()
+        };
+        let _ = c.scale(&skewed().view(), &pool);
+        let log = c.attribution();
+        assert!(log.len() >= 3, "dispatch + reschedule tick + scale");
+        let d = &log.records()[0];
+        assert_eq!(d.kind, DecisionKind::Dispatch);
+        assert_eq!(d.policy, "current_load");
+        assert_eq!(d.request, Some(9));
+        assert_eq!(d.candidates, 2);
+        assert!((d.t - 1.5).abs() < 1e-12, "decision time stamped");
+        assert!(log
+            .records()
+            .iter()
+            .any(|r| r.kind == DecisionKind::Scale && r.policy == "static"));
+        // take_attribution moves the log out for the report
+        let taken = c.take_attribution();
+        assert!(!taken.is_empty());
+        assert!(c.attribution().is_empty());
+    }
+
+    #[test]
+    fn attribution_is_off_by_default() {
+        let reg = PolicyRegistry::with_builtins();
+        let mut c =
+            ControlLoop::from_experiment(&exp(), MigrationCostModel::new_25gbps(1), &reg).unwrap();
+        let incoming = IncomingRequest {
+            id: 1,
+            tokens: 10,
+            predicted_remaining: None,
+            preferred_instance: None,
+        };
+        let _ = c.dispatch(&skewed().view(), &incoming);
+        let _ = c.reschedule(&skewed().view());
+        assert!(c.attribution().is_empty(), "default-off path records nothing");
     }
 
     #[test]

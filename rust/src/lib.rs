@@ -33,6 +33,7 @@ pub mod costmodel;
 pub mod error;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod predictor;
 pub mod prng;
 pub mod prop;

@@ -10,8 +10,11 @@
 //!   validate-bench  assert BENCH_*.json files parse and carry
 //!                   schema_version (the ci.sh --smoke gate)
 //!   analyze         dependency-free determinism/safety lint over
-//!                   rust/src (rules R1-R5, DESIGN.md §14); nonzero
+//!                   rust/src (rules R1-R6, DESIGN.md §14); nonzero
 //!                   exit on findings
+//!   trace           run the simulator with observability forced on and
+//!                   inspect the result: summarize | slo-violations |
+//!                   export (--format chrome|jsonl)
 //!
 //! Most options can also be set from a TOML config (`--config path`) with
 //! CLI flags winning.
@@ -47,6 +50,7 @@ fn main() {
         "list" => run_list(),
         "validate-bench" => run_validate_bench(&args),
         "analyze" => run_analyze(&args),
+        "trace" => run_trace(&args),
         "" | "help" => {
             println!("{}", spec.render_help());
             Ok(())
@@ -113,7 +117,12 @@ fn spec() -> Spec {
             (
                 "rules",
                 "ids",
-                "analyze: comma-separated rule subset (R1..R5 or slugs)",
+                "analyze: comma-separated rule subset (R1..R6 or slugs)",
+            ),
+            (
+                "format",
+                "fmt",
+                "trace export format: chrome | jsonl (default chrome)",
             ),
             (
                 "require",
@@ -487,6 +496,141 @@ fn run_analyze(args: &Args) -> Result<(), star::Error> {
             findings.len()
         )))
     }
+}
+
+/// `star trace <summarize|slo-violations|export> [--format chrome|jsonl]`
+/// — the observability surface (DESIGN.md §16). Runs the simulator with
+/// `[obs] enabled = true` forced on, then inspects the resulting
+/// `SimReport.obs`:
+///
+///   summarize       flight-recorder occupancy, metric counters and
+///                   latency histograms, per-policy decision attribution
+///   slo-violations  for every completed request that missed the SLO and
+///                   was span-sampled: its full span timeline plus every
+///                   scheduler decision that touched it
+///   export          Chrome-trace JSON (load in Perfetto / chrome://tracing)
+///                   or JSONL to stdout; status lines go to stderr so the
+///                   payload stays byte-clean
+///
+/// Action and format are validated *before* the run so a typo fails fast.
+fn run_trace(args: &Args) -> Result<(), star::Error> {
+    let action = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("summarize");
+    if !matches!(action, "summarize" | "slo-violations" | "export") {
+        return Err(star::Error::Cli(format!(
+            "unknown trace action `{action}` (known: summarize|slo-violations|export)"
+        )));
+    }
+    let format = args.opt_or("format", "chrome");
+    if !matches!(format, "chrome" | "jsonl") {
+        return Err(star::Error::Cli(format!(
+            "unknown trace export format `{format}` (known: chrome|jsonl)"
+        )));
+    }
+    let mut exp = experiment_of(args)?;
+    // `star trace` IS the observability surface: force the [obs] table on
+    // (sampling knobs still honor the config / --set overrides)
+    exp.obs.enabled = true;
+    let scenario = resolve_scenario(&exp)?;
+    let strace = match &scenario {
+        Some(spec) => match args.opt("duration") {
+            Some(_) => spec.generate_for(args.opt_f64("duration", 2000.0)?, exp.cluster.seed),
+            None => spec.generate(exp.cluster.n_requests, exp.cluster.seed),
+        },
+        None => {
+            let gen = TraceGen::new(exp.cluster.dataset, exp.cluster.rps);
+            let trace = match args.opt("duration") {
+                Some(_) => gen.generate_for(args.opt_f64("duration", 2000.0)?, exp.cluster.seed),
+                None => gen.generate(exp.cluster.n_requests, exp.cluster.seed),
+            };
+            ScenarioTrace::from_requests(trace)
+        }
+    };
+    let params = SimParams {
+        exp,
+        ..Default::default()
+    };
+    let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())?.run();
+    match action {
+        "summarize" => {
+            // ObsReport::summary() already renders spans / counters /
+            // histograms / per-policy decision aggregates
+            println!("{}", report.obs.summary());
+        }
+        "slo-violations" => {
+            let slo = Slo::default();
+            let violating: Vec<_> = report
+                .completed
+                .iter()
+                .filter(|r| !r.meets_slo(slo))
+                .collect();
+            println!(
+                "slo-violations: {} of {} completed request(s) miss the SLO \
+                 (TTFT {:.2} s / TPOT {:.3} s)",
+                violating.len(),
+                report.completed.len(),
+                slo.ttft_s,
+                slo.tpot_s,
+            );
+            let mut shown = 0usize;
+            for r in &violating {
+                // only span-sampled requests carry a timeline; the header
+                // count above still reflects every violation
+                let Some(span) = report.obs.spans.span_of(r.id) else {
+                    continue;
+                };
+                shown += 1;
+                println!(
+                    "\nrequest {}  ttft={}  mean_tpot={}  migrations={}  oom={}",
+                    r.id,
+                    r.ttft().map_or("-".to_string(), |t| format!("{t:.3}s")),
+                    r.mean_tpot.map_or("-".to_string(), |t| format!("{t:.4}s")),
+                    r.migrations,
+                    r.hit_oom,
+                );
+                println!("  spans: {}", span.timeline());
+                for d in report.obs.decisions.for_request(r.id) {
+                    println!(
+                        "  decision t={:.3} {:<10} policy={} candidates={} actions={} \
+                         chosen={} cost_us={}",
+                        d.t,
+                        d.kind.name(),
+                        d.policy,
+                        d.candidates,
+                        d.actions,
+                        d.chosen.map_or("-".to_string(), |i| i.to_string()),
+                        d.cost_us,
+                    );
+                }
+            }
+            println!(
+                "\n{} of {} violating request(s) were span-sampled \
+                 (raise [obs] sample_rate / ring_capacity to see more)",
+                shown,
+                violating.len(),
+            );
+        }
+        _ => {
+            let text = match format {
+                "chrome" => {
+                    let t = star::obs::chrome_trace(&report.obs);
+                    // self-check: the export must be valid JSON before we
+                    // hand it to Perfetto / chrome://tracing
+                    star::bench::json::parse(&t).map_err(|e| {
+                        star::Error::Cli(format!("chrome export failed self-validation: {e}"))
+                    })?;
+                    t
+                }
+                _ => star::obs::jsonl(&report.obs),
+            };
+            print!("{text}");
+            eprintln!("trace export: {} byte(s) of {format} written to stdout", text.len());
+        }
+    }
+    Ok(())
 }
 
 fn run_serve(args: &Args) -> Result<(), star::Error> {

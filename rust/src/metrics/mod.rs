@@ -1,6 +1,7 @@
 //! Serving metrics: latency percentiles, goodput, load-variance tracking,
 //! and the runtime trace recorder behind the paper's Figs. 3/11/12/13.
 
+pub mod percentiles;
 mod recorder;
 mod variance;
 
@@ -45,17 +46,14 @@ impl Percentiles {
         }
     }
 
-    /// Exact quantile (nearest-rank with linear interpolation).
+    /// Exact quantile (linear interpolation, the crate-wide shared
+    /// definition in [`percentiles::quantile_sorted`]).
     pub fn quantile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
         self.ensure_sorted();
-        let pos = q.clamp(0.0, 1.0) * (self.samples.len() - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
-        let frac = pos - lo as f64;
-        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+        percentiles::quantile_sorted(&self.samples, q)
     }
 
     pub fn p50(&mut self) -> f64 {

@@ -1,0 +1,78 @@
+//! The one shared quantile implementation.
+//!
+//! Three copies used to exist — `Percentiles::quantile` (linear
+//! interpolation), the per-class percentiles reached through
+//! `RunMetrics`, and `ReliabilityReport::quantile_requeue_s`
+//! (nearest-rank, `.round()`) — with subtly different interpolation.
+//! Every quantile in the crate now goes through [`quantile_sorted`]:
+//! linear interpolation between the two straddling order statistics
+//! (type-7 / numpy default), exact at q = 0 and q = 1.
+
+/// Quantile of an ascending-sorted slice; `NaN` on empty input.
+/// `q` is clamped to `[0, 1]`.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Quantile of an unsorted slice (sorts a copy); `NaN` on empty input.
+pub fn quantile_unsorted(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+    quantile_sorted(&v, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_values_on_known_data() {
+        let data: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((quantile_sorted(&data, 0.50) - 50.5).abs() < 1e-9);
+        assert!((quantile_sorted(&data, 0.0) - 1.0).abs() < 1e-9);
+        assert!((quantile_sorted(&data, 1.0) - 100.0).abs() < 1e-9);
+        assert!((quantile_sorted(&data, 0.99) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn empty_is_nan_and_singleton_is_constant() {
+        assert!(quantile_sorted(&[], 0.5).is_nan());
+        assert!(quantile_unsorted(&[], 0.5).is_nan());
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert!((quantile_sorted(&[7.0], q) - 7.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unsorted_matches_sorted_and_is_monotone_in_q() {
+        let unsorted = [5.0, 1.0, 9.0, 3.0, 7.0];
+        let mut sorted = unsorted;
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = quantile_unsorted(&unsorted, q);
+            assert!((v - quantile_sorted(&sorted, q)).abs() < 1e-12);
+            assert!(v >= prev, "quantile must be monotone in q");
+            assert!((1.0..=9.0).contains(&v), "within [min, max]");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn out_of_range_q_clamps() {
+        let data = [1.0, 2.0, 3.0];
+        assert!((quantile_sorted(&data, -0.5) - 1.0).abs() < 1e-12);
+        assert!((quantile_sorted(&data, 1.5) - 3.0).abs() < 1e-12);
+    }
+}

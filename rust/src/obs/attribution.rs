@@ -1,0 +1,295 @@
+//! Decision attribution: which policy decided what, when, at what cost.
+//!
+//! The [`crate::coordinator::ControlLoop`] records one
+//! [`DecisionRecord`] per dispatch call, per reschedule interval (plus
+//! one per decided migration, carrying the request id so per-request
+//! joins work), per scale interval, and per prefix-cache consult. Cost
+//! is a deterministic work proxy in the simulator (candidates scanned,
+//! decisions per tick); the live server layers wall-clock µs on top via
+//! [`AttributionLog::note_last_cost_us`] — serve is the R2-exempt layer,
+//! this module itself never reads a clock.
+
+use std::collections::BTreeMap;
+
+use crate::{InstanceId, RequestId, Time};
+
+/// Which control-loop surface produced a record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DecisionKind {
+    Dispatch,
+    Reschedule,
+    Scale,
+    Cache,
+}
+
+impl DecisionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionKind::Dispatch => "dispatch",
+            DecisionKind::Reschedule => "reschedule",
+            DecisionKind::Scale => "scale",
+            DecisionKind::Cache => "cache",
+        }
+    }
+}
+
+/// One attributed decision.
+#[derive(Clone, Debug)]
+pub struct DecisionRecord {
+    /// Driver time of the decision (sim clock or serve run clock).
+    pub t: Time,
+    pub kind: DecisionKind,
+    /// Registry name of the policy that decided.
+    pub policy: String,
+    /// The request the decision touched, when one is attributable
+    /// (dispatch, per-migration reschedule, cache consults).
+    pub request: Option<RequestId>,
+    /// Work proxy: candidates scanned to reach the decision.
+    pub candidates: u64,
+    /// Actions taken (migrations decided, scale actions admitted,
+    /// cache hit = 1 / miss = 0; dispatch always 1).
+    pub actions: u64,
+    /// Chosen instance, when the decision places work somewhere.
+    pub chosen: Option<InstanceId>,
+    /// Measured decision cost in µs; 0 in the simulator (the work proxy
+    /// above is the deterministic stand-in).
+    pub cost_us: u64,
+}
+
+/// Append-only log of attributed decisions. All record methods are
+/// no-ops while disabled, so the default-off path allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct AttributionLog {
+    enabled: bool,
+    now: Time,
+    records: Vec<DecisionRecord>,
+}
+
+impl AttributionLog {
+    pub fn new(enabled: bool) -> Self {
+        AttributionLog {
+            enabled,
+            ..Default::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Drivers stamp the decision clock before invoking the control
+    /// loop; every record until the next call carries this time.
+    #[inline]
+    pub fn set_now(&mut self, t: Time) {
+        self.now = t;
+    }
+
+    fn push(&mut self, mut rec: DecisionRecord) {
+        rec.t = self.now;
+        self.records.push(rec);
+    }
+
+    pub fn record_dispatch(
+        &mut self,
+        policy: &str,
+        request: RequestId,
+        candidates: u64,
+        chosen: InstanceId,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(DecisionRecord {
+            t: 0.0,
+            kind: DecisionKind::Dispatch,
+            policy: policy.to_string(),
+            request: Some(request),
+            candidates,
+            actions: 1,
+            chosen: Some(chosen),
+            cost_us: 0,
+        });
+    }
+
+    /// One record per reschedule interval: candidates scanned and
+    /// migrations decided this tick.
+    pub fn record_reschedule_tick(&mut self, policy: &str, candidates: u64, actions: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.push(DecisionRecord {
+            t: 0.0,
+            kind: DecisionKind::Reschedule,
+            policy: policy.to_string(),
+            request: None,
+            candidates,
+            actions,
+            chosen: None,
+            cost_us: 0,
+        });
+    }
+
+    /// One record per decided migration, carrying the request id.
+    pub fn record_migration(&mut self, policy: &str, request: RequestId, dst: InstanceId) {
+        if !self.enabled {
+            return;
+        }
+        self.push(DecisionRecord {
+            t: 0.0,
+            kind: DecisionKind::Reschedule,
+            policy: policy.to_string(),
+            request: Some(request),
+            candidates: 0,
+            actions: 1,
+            chosen: Some(dst),
+            cost_us: 0,
+        });
+    }
+
+    pub fn record_scale(&mut self, policy: &str, candidates: u64, actions: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.push(DecisionRecord {
+            t: 0.0,
+            kind: DecisionKind::Scale,
+            policy: policy.to_string(),
+            request: None,
+            candidates,
+            actions,
+            chosen: None,
+            cost_us: 0,
+        });
+    }
+
+    pub fn record_cache(&mut self, policy: &str, request: RequestId, hit: bool) {
+        if !self.enabled {
+            return;
+        }
+        self.push(DecisionRecord {
+            t: 0.0,
+            kind: DecisionKind::Cache,
+            policy: policy.to_string(),
+            request: Some(request),
+            candidates: 0,
+            actions: hit as u64,
+            chosen: None,
+            cost_us: 0,
+        });
+    }
+
+    /// Attach a measured cost to the most recent record — the live
+    /// server calls this right after timing a control-loop call.
+    pub fn note_last_cost_us(&mut self, us: u64) {
+        if let Some(last) = self.records.last_mut() {
+            last.cost_us += us;
+        }
+    }
+
+    pub fn records(&self) -> &[DecisionRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Every decision that touched `request`, in decision order.
+    pub fn for_request(&self, request: RequestId) -> Vec<&DecisionRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.request == Some(request))
+            .collect()
+    }
+
+    /// Per (kind, policy) aggregate: decisions, candidates scanned,
+    /// actions taken, total measured µs — one line each, sorted.
+    pub fn summary(&self) -> String {
+        let mut agg: BTreeMap<(DecisionKind, &str), (u64, u64, u64, u64)> = BTreeMap::new();
+        for r in &self.records {
+            let e = agg.entry((r.kind, r.policy.as_str())).or_insert((0, 0, 0, 0));
+            e.0 += 1;
+            e.1 += r.candidates;
+            e.2 += r.actions;
+            e.3 += r.cost_us;
+        }
+        let mut out = String::new();
+        for ((kind, policy), (n, cand, act, us)) in agg {
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            out.push_str(&format!(
+                "{:<10} {:<16} decisions {:>7} | candidates {:>9} | actions {:>6} | cost {} us",
+                kind.name(),
+                policy,
+                n,
+                cand,
+                act,
+                us
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        let mut log = AttributionLog::new(false);
+        log.set_now(1.0);
+        log.record_dispatch("current_load", 7, 4, 2);
+        log.record_reschedule_tick("star", 12, 1);
+        log.record_scale("static", 4, 0);
+        log.record_cache("lru", 7, true);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn records_carry_time_and_join_by_request() {
+        let mut log = AttributionLog::new(true);
+        log.set_now(2.5);
+        log.record_dispatch("current_load", 7, 4, 2);
+        log.set_now(3.0);
+        log.record_reschedule_tick("star", 12, 1);
+        log.record_migration("star", 7, 1);
+        log.record_cache("lru", 9, false);
+        assert_eq!(log.len(), 4);
+        assert!((log.records()[0].t - 2.5).abs() < 1e-12);
+        assert!((log.records()[1].t - 3.0).abs() < 1e-12);
+        let touched = log.for_request(7);
+        assert_eq!(touched.len(), 2);
+        assert_eq!(touched[0].kind, DecisionKind::Dispatch);
+        assert_eq!(touched[1].kind, DecisionKind::Reschedule);
+        assert_eq!(touched[1].chosen, Some(1));
+        assert_eq!(log.for_request(9)[0].actions, 0, "cache miss");
+    }
+
+    #[test]
+    fn cost_notes_attach_to_the_last_record() {
+        let mut log = AttributionLog::new(true);
+        log.record_dispatch("slo_aware", 1, 8, 0);
+        log.note_last_cost_us(42);
+        log.note_last_cost_us(8);
+        assert_eq!(log.records()[0].cost_us, 50);
+    }
+
+    #[test]
+    fn summary_aggregates_per_kind_and_policy() {
+        let mut log = AttributionLog::new(true);
+        log.record_dispatch("current_load", 1, 4, 0);
+        log.record_dispatch("current_load", 2, 4, 1);
+        log.record_reschedule_tick("star", 20, 2);
+        let s = log.summary();
+        assert!(s.contains("dispatch"), "{s}");
+        assert!(s.contains("current_load"), "{s}");
+        assert!(s.contains("decisions       2"), "{s}");
+        assert!(s.contains("star"), "{s}");
+    }
+}

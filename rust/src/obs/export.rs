@@ -1,0 +1,323 @@
+//! Trace exporters: Chrome-trace-format JSON (loadable in Perfetto /
+//! `chrome://tracing`) and a line-per-record JSONL dump.
+//!
+//! Both are hand-built deterministic string assemblies — fixed key
+//! order, integer-µs timestamps, inputs iterated in their stored
+//! (deterministic) order — so same-seed runs export byte-identical
+//! bytes, which `tests/obs_trace.rs` pins.
+
+use super::spans::{RequestSpan, SpanEvent, SpanKind};
+use super::ObsReport;
+use crate::Time;
+
+/// Seconds → integer microseconds (Chrome trace `ts`/`dur` unit).
+fn us(t: Time) -> i64 {
+    (t * 1e6).round() as i64
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `{"t":…,"kind":"…",…}` for one span event — shared by both formats.
+fn span_event_json(e: &SpanEvent) -> String {
+    let mut s = format!("{{\"t\":{:.6},\"kind\":\"{}\"", e.t, e.kind.label());
+    match &e.kind {
+        SpanKind::Dispatched { instance } | SpanKind::PrefillDone { instance } => {
+            s.push_str(&format!(",\"instance\":{instance}"));
+        }
+        SpanKind::Migrated { src, dst, kv_tokens } => {
+            s.push_str(&format!(",\"src\":{src},\"dst\":{dst},\"kv_tokens\":{kv_tokens}"));
+        }
+        SpanKind::RecomputeQueued => {}
+        SpanKind::CacheConsult { hit } => {
+            s.push_str(&format!(",\"hit\":{hit}"));
+        }
+        SpanKind::Finished { instance } => {
+            s.push_str(&format!(",\"instance\":{instance}"));
+        }
+    }
+    s.push('}');
+    s
+}
+
+fn push_event(out: &mut Vec<String>, ev: String) {
+    out.push(ev);
+}
+
+fn span_slices(out: &mut Vec<String>, s: &RequestSpan) {
+    if let Some((pd, inst)) = s.prefill_done {
+        push_event(
+            out,
+            format!(
+                "{{\"name\":\"prefill\",\"cat\":\"request\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":0,\"tid\":{},\"args\":{{\"instance\":{}}}}}",
+                us(s.arrived),
+                us(pd) - us(s.arrived),
+                s.request,
+                inst
+            ),
+        );
+        if let Some((fin, dinst)) = s.finished {
+            push_event(
+                out,
+                format!(
+                    "{{\"name\":\"decode\",\"cat\":\"request\",\"ph\":\"X\",\"ts\":{},\
+                     \"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"instance\":{}}}}}",
+                    us(pd),
+                    us(fin) - us(pd),
+                    s.request,
+                    dinst
+                ),
+            );
+        }
+    } else if let Some((fin, dinst)) = s.finished {
+        // no prefill marker survived (e.g. trace started mid-flight):
+        // still show the request's full extent
+        push_event(
+            out,
+            format!(
+                "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"X\",\"ts\":{},\
+                 \"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"instance\":{}}}}}",
+                us(s.arrived),
+                us(fin) - us(s.arrived),
+                s.request,
+                dinst
+            ),
+        );
+    }
+    for e in &s.events {
+        if matches!(e.kind, SpanKind::PrefillDone { .. } | SpanKind::Finished { .. }) {
+            continue; // already the slice boundaries above
+        }
+        push_event(
+            out,
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"request\",\"ph\":\"i\",\"ts\":{},\"pid\":0,\
+                 \"tid\":{},\"s\":\"t\",\"args\":{}}}",
+                e.kind.label(),
+                us(e.t),
+                s.request,
+                span_event_json(e)
+            ),
+        );
+    }
+}
+
+/// Chrome trace JSON for one run's observability report.
+pub fn chrome_trace(obs: &ObsReport) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for (pid, name) in [(0, "requests"), (1, "scheduler"), (2, "metrics")] {
+        push_event(
+            &mut events,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ),
+        );
+    }
+    for s in obs.spans.spans() {
+        span_slices(&mut events, s);
+    }
+    for rec in obs.decisions.records() {
+        let mut args = format!(
+            "{{\"candidates\":{},\"actions\":{},\"cost_us\":{}",
+            rec.candidates, rec.actions, rec.cost_us
+        );
+        if let Some(req) = rec.request {
+            args.push_str(&format!(",\"request\":{req}"));
+        }
+        if let Some(inst) = rec.chosen {
+            args.push_str(&format!(",\"chosen\":{inst}"));
+        }
+        args.push('}');
+        push_event(
+            &mut events,
+            format!(
+                "{{\"name\":\"{}:{}\",\"cat\":\"decision\",\"ph\":\"i\",\"ts\":{},\"pid\":1,\
+                 \"tid\":{},\"s\":\"t\",\"args\":{args}}}",
+                rec.kind.name(),
+                esc(&rec.policy),
+                us(rec.t),
+                rec.kind as usize,
+            ),
+        );
+    }
+    for point in obs.registry.series() {
+        for (k, v) in &point.values {
+            push_event(
+                &mut events,
+                format!(
+                    "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{},\"pid\":2,\"tid\":0,\
+                     \"args\":{{\"value\":{v}}}}}",
+                    esc(k),
+                    us(point.t),
+                ),
+            );
+        }
+    }
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+/// JSONL export: one header line, then one line per span, decision,
+/// and time-series point.
+pub fn jsonl(obs: &ObsReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"type\":\"obs\",\"enabled\":{},\"seen\":{},\"sampled\":{},\"dropped\":{}}}\n",
+        obs.enabled, obs.spans.seen, obs.spans.sampled, obs.spans.dropped
+    ));
+    for s in obs.spans.spans() {
+        let mut line = format!(
+            "{{\"type\":\"span\",\"request\":{},\"arrived\":{:.6}",
+            s.request, s.arrived
+        );
+        if let Some((t, inst)) = s.prefill_done {
+            line.push_str(&format!(",\"prefill_done\":{t:.6},\"prefill_instance\":{inst}"));
+        }
+        if let Some((t, inst)) = s.finished {
+            line.push_str(&format!(",\"finished\":{t:.6},\"finish_instance\":{inst}"));
+        }
+        let evs: Vec<String> = s.events.iter().map(span_event_json).collect();
+        line.push_str(&format!(",\"events\":[{}]}}\n", evs.join(",")));
+        out.push_str(&line);
+    }
+    for rec in obs.decisions.records() {
+        let mut line = format!(
+            "{{\"type\":\"decision\",\"t\":{:.6},\"kind\":\"{}\",\"policy\":\"{}\",\
+             \"candidates\":{},\"actions\":{},\"cost_us\":{}",
+            rec.t,
+            rec.kind.name(),
+            esc(&rec.policy),
+            rec.candidates,
+            rec.actions,
+            rec.cost_us
+        );
+        if let Some(req) = rec.request {
+            line.push_str(&format!(",\"request\":{req}"));
+        }
+        if let Some(inst) = rec.chosen {
+            line.push_str(&format!(",\"chosen\":{inst}"));
+        }
+        line.push_str("}\n");
+        out.push_str(&line);
+    }
+    for point in obs.registry.series() {
+        let vals: Vec<String> = point
+            .values
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{v}", esc(k)))
+            .collect();
+        out.push_str(&format!(
+            "{{\"type\":\"series\",\"t\":{:.6},\"values\":{{{}}}}}\n",
+            point.t,
+            vals.join(",")
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::json::{parse, Json};
+    use crate::metrics::{TraceEvent, TraceRow};
+    use crate::obs::{assemble_report, AttributionLog, MetricsRegistry};
+
+    fn sample_report() -> ObsReport {
+        let rows = vec![
+            TraceRow { t: 0.0, event: TraceEvent::Arrived { request: 1 } },
+            TraceRow { t: 0.5, event: TraceEvent::PrefillDone { request: 1, instance: 0 } },
+            TraceRow {
+                t: 1.5,
+                event: TraceEvent::Migration { request: 1, src: 0, dst: 1, kv_tokens: 32 },
+            },
+            TraceRow { t: 3.0, event: TraceEvent::Finished { request: 1, instance: 1 } },
+        ];
+        let mut log = AttributionLog::new(true);
+        log.set_now(0.5);
+        log.record_dispatch("current_load", 1, 2, 0);
+        let mut reg = MetricsRegistry::new(true);
+        reg.inc("requests.arrived", 1);
+        reg.set_gauge("cluster.kv_frac_max", 0.5);
+        reg.sample(1.0);
+        assemble_report(true, 42, 1.0, 1024, &rows, reg, log)
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_expected_shape() {
+        let obs = sample_report();
+        let text = chrome_trace(&obs);
+        let v = parse(&text).expect("chrome trace must parse");
+        assert_eq!(
+            v.get("displayTimeUnit"),
+            Some(&Json::Str("ms".to_string()))
+        );
+        let Some(Json::Arr(evs)) = v.get("traceEvents") else {
+            panic!("traceEvents must be an array");
+        };
+        assert!(evs.len() >= 5, "metadata + slices + instants: {}", evs.len());
+        let prefill = evs
+            .iter()
+            .find(|e| e.get("name") == Some(&Json::Str("prefill".to_string())))
+            .expect("prefill slice present");
+        assert_eq!(prefill.get("ph"), Some(&Json::Str("X".to_string())));
+        assert_eq!(prefill.get("ts"), Some(&Json::Num(0.0)));
+        assert_eq!(prefill.get("dur"), Some(&Json::Num(500000.0)));
+        let decode = evs
+            .iter()
+            .find(|e| e.get("name") == Some(&Json::Str("decode".to_string())))
+            .expect("decode slice present");
+        assert_eq!(decode.get("dur"), Some(&Json::Num(2500000.0)));
+        assert!(evs
+            .iter()
+            .any(|e| e.get("name") == Some(&Json::Str("dispatch:current_load".to_string()))));
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph") == Some(&Json::Str("C".to_string()))));
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let obs = sample_report();
+        let text = jsonl(&obs);
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 4, "header + span + decision + series");
+        for line in &lines {
+            parse(line).expect("every jsonl line parses");
+        }
+        assert!(lines[0].contains("\"type\":\"obs\""));
+        assert!(text.contains("\"type\":\"span\""));
+        assert!(text.contains("\"type\":\"decision\""));
+        assert!(text.contains("\"type\":\"series\""));
+    }
+
+    #[test]
+    fn exports_are_deterministic_in_their_inputs() {
+        let a = sample_report();
+        let b = sample_report();
+        assert_eq!(chrome_trace(&a), chrome_trace(&b));
+        assert_eq!(jsonl(&a), jsonl(&b));
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

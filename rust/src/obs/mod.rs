@@ -1,0 +1,180 @@
+//! Observability subsystem (`star trace`, DESIGN.md §16): request
+//! lifecycle spans, a string-keyed metrics registry, and per-policy
+//! decision attribution, wired identically through both drivers.
+//!
+//! Everything here is passive: the subsystem observes the run and never
+//! feeds back into scheduling. Disabled (`[obs] enabled = false`, the
+//! default) it is a strict no-op — the drivers' outputs are bit-for-bit
+//! identical to a build without it, which `tests/obs_trace.rs` pins.
+//! The sampling decision uses a dedicated PRNG stream off the run seed
+//! ([`OBS_STREAM`]) so the retained span set is a pure function of
+//! `(seed, request id, sample_rate)` — no wall clock, no iteration
+//! order dependence (`star analyze` R1/R2 cover `obs/`).
+
+pub mod attribution;
+pub mod export;
+pub mod registry;
+pub mod spans;
+
+pub use attribution::{AttributionLog, DecisionKind, DecisionRecord};
+pub use export::{chrome_trace, jsonl};
+pub use registry::{Histogram, MetricsRegistry, SeriesPoint};
+pub use spans::{assemble, FlightRecorder, RequestSpan, SpanEvent, SpanKind};
+
+use crate::metrics::TraceRow;
+use crate::prng::Pcg64;
+
+/// Dedicated PRNG stream id for span sampling ("OBSV"), following the
+/// per-subsystem stream idiom (`sim::engine`'s FAULT_STREAM): obs draws
+/// never perturb workload or fault streams, so enabling observability
+/// cannot change a run's trajectory.
+pub const OBS_STREAM: u64 = 0x4f42_5356;
+
+/// Head-based sampling decision for one request: a pure function of
+/// `(seed, request, rate)`, independent of when or how often it is
+/// asked — the same request always gets the same verdict.
+pub fn sample_request(seed: u64, request: crate::RequestId, rate: f64) -> bool {
+    if rate >= 1.0 {
+        return true;
+    }
+    if rate <= 0.0 {
+        return false;
+    }
+    Pcg64::new(seed, OBS_STREAM).split(request).next_f64() < rate
+}
+
+/// One run's observability output, carried in `SimReport` /
+/// `ServeOutcome`. Default (all-empty, `enabled == false`) for
+/// obs-disabled runs.
+#[derive(Clone, Debug, Default)]
+pub struct ObsReport {
+    pub enabled: bool,
+    /// Sampled request-lifecycle spans (the flight recorder).
+    pub spans: FlightRecorder,
+    /// Counters / gauges / histograms + the per-tick time series.
+    pub registry: MetricsRegistry,
+    /// Per-policy decision attribution log.
+    pub decisions: AttributionLog,
+}
+
+impl ObsReport {
+    /// Multi-line human summary (the `star trace summarize` view).
+    pub fn summary(&self) -> String {
+        if !self.enabled {
+            return "obs: disabled ([obs] enabled = false)".to_string();
+        }
+        let mut out = format!(
+            "obs: spans {} retained ({} sampled of {} seen, {} dropped by ring)",
+            self.spans.len(),
+            self.spans.sampled,
+            self.spans.seen,
+            self.spans.dropped
+        );
+        out.push_str(&format!(
+            "\nobs: registry {} counters, {} gauges, {} histograms, {} series points",
+            self.registry.counters().count(),
+            self.registry.gauges().count(),
+            self.registry.histograms().count(),
+            self.registry.series().len()
+        ));
+        for (k, v) in self.registry.counters() {
+            out.push_str(&format!("\n  counter {k:<28} {v}"));
+        }
+        for (k, h) in self.registry.histograms() {
+            out.push_str(&format!(
+                "\n  hist    {k:<28} n {} mean {:.4} min {:.4} max {:.4}",
+                h.count,
+                h.mean(),
+                h.min,
+                h.max
+            ));
+        }
+        if self.decisions.is_empty() {
+            out.push_str("\nobs: no decisions recorded");
+        } else {
+            out.push_str(&format!(
+                "\nobs: {} decision records\n{}",
+                self.decisions.len(),
+                self.decisions.summary()
+            ));
+        }
+        out
+    }
+}
+
+/// Assemble the final report from the raw run artifacts. Pure
+/// post-processing at report time; with `enabled == false` the inputs
+/// are empty and the output is `ObsReport::default()`-shaped.
+pub fn assemble_report(
+    enabled: bool,
+    seed: u64,
+    sample_rate: f64,
+    ring_capacity: usize,
+    rows: &[TraceRow],
+    registry: MetricsRegistry,
+    decisions: AttributionLog,
+) -> ObsReport {
+    if !enabled {
+        return ObsReport::default();
+    }
+    let spans = spans::assemble(rows, &decisions, seed, sample_rate, ring_capacity);
+    ObsReport {
+        enabled,
+        spans,
+        registry,
+        decisions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TraceEvent;
+
+    #[test]
+    fn sample_request_is_pure_and_rate_bounded() {
+        for id in 0..50u64 {
+            assert_eq!(sample_request(3, id, 0.5), sample_request(3, id, 0.5));
+            assert!(sample_request(3, id, 1.0));
+            assert!(!sample_request(3, id, 0.0));
+        }
+        let kept = (0..1000u64).filter(|&id| sample_request(11, id, 0.3)).count();
+        assert!((200..400).contains(&kept), "rate 0.3 kept {kept}/1000");
+    }
+
+    #[test]
+    fn disabled_assembly_is_default_shaped() {
+        let rows = vec![TraceRow { t: 0.0, event: TraceEvent::Arrived { request: 1 } }];
+        let obs = assemble_report(
+            false,
+            0,
+            1.0,
+            16,
+            &rows,
+            MetricsRegistry::new(false),
+            AttributionLog::new(false),
+        );
+        assert!(!obs.enabled);
+        assert!(obs.spans.is_empty());
+        assert_eq!(obs.spans.seen, 0);
+        assert!(obs.decisions.is_empty());
+        assert!(obs.summary().contains("disabled"));
+    }
+
+    #[test]
+    fn enabled_summary_lists_spans_and_decisions() {
+        let rows = vec![
+            TraceRow { t: 0.0, event: TraceEvent::Arrived { request: 1 } },
+            TraceRow { t: 1.0, event: TraceEvent::Finished { request: 1, instance: 0 } },
+        ];
+        let mut log = AttributionLog::new(true);
+        log.record_dispatch("current_load", 1, 2, 0);
+        let mut reg = MetricsRegistry::new(true);
+        reg.inc("requests.arrived", 1);
+        let obs = assemble_report(true, 5, 1.0, 16, &rows, reg, log);
+        let s = obs.summary();
+        assert!(s.contains("spans 1 retained"), "{s}");
+        assert!(s.contains("requests.arrived"), "{s}");
+        assert!(s.contains("current_load"), "{s}");
+    }
+}

@@ -1,0 +1,269 @@
+//! String-keyed metrics registry: counters, gauges, and log-bucketed
+//! histograms, plus a per-tick time series the drivers sample on the
+//! `[obs] sample_every_s` cadence.
+//!
+//! Dependency-free in the same spirit as `bench::json`; every container
+//! is a `BTreeMap` or `Vec`, so iteration order — and therefore every
+//! exporter's output — is deterministic (`star analyze` R1 applies to
+//! this module). All mutators are no-ops while disabled, which is what
+//! the `[obs] enabled = false` bit-for-bit guarantee rests on.
+
+use std::collections::BTreeMap;
+
+use crate::Time;
+
+/// Number of log2 buckets: powers of two from 2^-20 (~1 µs when the unit
+/// is seconds) through 2^23 (~8.4 M), one underflow bucket at index 0.
+const N_BUCKETS: usize = 44;
+/// `log2(value)` offset of bucket index 1.
+const BUCKET_OFFSET: i64 = 20;
+
+/// A log2-bucketed histogram with exact count/sum/min/max sidecars.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: vec![0; N_BUCKETS],
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for a value: 0 holds non-positive values and
+    /// underflow; the last bucket absorbs overflow.
+    pub fn bucket_of(v: f64) -> usize {
+        if !(v > 0.0) {
+            return 0;
+        }
+        let idx = v.log2().floor() as i64 + BUCKET_OFFSET + 1;
+        idx.clamp(0, N_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Inclusive upper bound of bucket `i` (`+inf` for the last).
+    pub fn bucket_upper(i: usize) -> f64 {
+        if i + 1 >= N_BUCKETS {
+            f64::INFINITY
+        } else {
+            2f64.powi((i as i64 - BUCKET_OFFSET) as i32)
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[Self::bucket_of(v)] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+}
+
+/// One time-series point: the full counter + gauge snapshot at `t`.
+/// Counters are widened to `f64` (exact below 2^53 — far beyond any
+/// counter this registry sees in one run).
+#[derive(Clone, Debug)]
+pub struct SeriesPoint {
+    pub t: Time,
+    pub values: Vec<(String, f64)>,
+}
+
+/// The registry itself. Cheap when disabled: every mutator returns
+/// immediately and the report carries empty maps.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    series: Vec<SeriesPoint>,
+}
+
+impl MetricsRegistry {
+    pub fn new(enabled: bool) -> Self {
+        MetricsRegistry {
+            enabled,
+            ..Default::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn inc(&mut self, name: &str, by: u64) {
+        if !self.enabled {
+            return;
+        }
+        match self.counters.get_mut(name) {
+            Some(c) => *c += by,
+            None => {
+                self.counters.insert(name.to_string(), by);
+            }
+        }
+    }
+
+    #[inline]
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        match self.gauges.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, name: &str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        match self.histograms.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                self.histograms.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Push one time-series point: the current counters + gauges, in
+    /// deterministic (sorted-key) order.
+    pub fn sample(&mut self, t: Time) {
+        if !self.enabled {
+            return;
+        }
+        let mut values: Vec<(String, f64)> = Vec::new();
+        for (k, v) in &self.counters {
+            values.push((k.clone(), *v as f64));
+        }
+        for (k, v) in &self.gauges {
+            values.push((k.clone(), *v));
+        }
+        self.series.push(SeriesPoint { t, values });
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn series(&self) -> &[SeriesPoint] {
+        &self.series
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let mut r = MetricsRegistry::new(false);
+        r.inc("a", 3);
+        r.set_gauge("g", 1.0);
+        r.observe("h", 0.5);
+        r.sample(1.0);
+        assert_eq!(r.counter("a"), 0);
+        assert!(r.gauge("g").is_none());
+        assert!(r.histogram("h").is_none());
+        assert!(r.series().is_empty());
+    }
+
+    #[test]
+    fn counters_gauges_histograms_accumulate() {
+        let mut r = MetricsRegistry::new(true);
+        r.inc("req", 1);
+        r.inc("req", 2);
+        r.set_gauge("kv", 0.25);
+        r.set_gauge("kv", 0.75);
+        r.observe("ttft", 0.5);
+        r.observe("ttft", 2.0);
+        assert_eq!(r.counter("req"), 3);
+        assert_eq!(r.gauge("kv"), Some(0.75));
+        let h = r.histogram("ttft").expect("recorded");
+        assert_eq!(h.count, 2);
+        assert!((h.sum - 2.5).abs() < 1e-12);
+        assert!((h.mean() - 1.25).abs() < 1e-12);
+        assert!((h.min - 0.5).abs() < 1e-12);
+        assert!((h.max - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_and_total() {
+        // bucket bounds: index i covers (2^(i-21), 2^(i-20)]
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(-1.0), 0);
+        assert!(Histogram::bucket_of(1.0) < Histogram::bucket_of(2.0));
+        assert!(Histogram::bucket_of(2.0) < Histogram::bucket_of(5.0));
+        assert_eq!(Histogram::bucket_of(f64::MAX), N_BUCKETS - 1);
+        let mut h = Histogram::default();
+        for v in [0.001, 0.01, 0.1, 1.0, 10.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.buckets().iter().sum::<u64>(), h.count);
+        assert!(Histogram::bucket_upper(N_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn series_snapshots_in_sorted_key_order() {
+        let mut r = MetricsRegistry::new(true);
+        r.inc("z", 1);
+        r.inc("a", 2);
+        r.set_gauge("m", 0.5);
+        r.sample(1.0);
+        r.inc("a", 1);
+        r.sample(2.0);
+        let s = r.series();
+        assert_eq!(s.len(), 2);
+        let keys: Vec<&str> = s[0].values.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a", "z", "m"], "counters then gauges, sorted");
+        assert!((s[1].values[0].1 - 3.0).abs() < 1e-12);
+        assert!((s[1].t - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,360 @@
+//! Request-lifecycle span assembly: reconstructs a per-request timeline
+//! (arrived → dispatched@instance → prefill → decode → finished, with
+//! migrations, OOM recomputes and cache consults as span events) from
+//! the flat [`crate::metrics::TraceRecorder`] rows plus the decision
+//! log, into a bounded flight-recorder ring.
+//!
+//! Sampling is head-based and deterministic: whether a request is
+//! retained is decided at its `Arrived` row from a dedicated PRNG
+//! stream off the run seed ([`super::OBS_STREAM`]) — same seed ⇒
+//! identical retained set, independent of event interleaving. No wall
+//! clock, no hash-ordered collections (`star analyze` R1/R2 cover this
+//! module).
+//!
+//! Analyze rule R6 (`trace-event-coverage`) checks this file: every
+//! [`TraceEvent`] variant must appear in the assembler's match below,
+//! so a newly added trace event cannot silently vanish from spans.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::attribution::{AttributionLog, DecisionKind};
+use super::sample_request;
+use crate::metrics::{TraceEvent, TraceRow};
+use crate::{InstanceId, RequestId, Time};
+
+/// One event on a request's timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub t: Time,
+    pub kind: SpanKind,
+}
+
+/// What happened to the request at that instant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpanKind {
+    /// Placed onto a decode instance by the dispatch policy.
+    Dispatched { instance: InstanceId },
+    /// Prefill completed (KV ready for transfer to decode).
+    PrefillDone { instance: InstanceId },
+    /// Migrated between decode instances by the rescheduler.
+    Migrated {
+        src: InstanceId,
+        dst: InstanceId,
+        kv_tokens: u64,
+    },
+    /// Evicted by an OOM and re-queued for KV recompute.
+    RecomputeQueued,
+    /// Prefix-cache consult on a session follow-up turn.
+    CacheConsult { hit: bool },
+    /// Decode finished.
+    Finished { instance: InstanceId },
+}
+
+impl SpanKind {
+    /// Short label for summaries and exporters.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Dispatched { .. } => "dispatched",
+            SpanKind::PrefillDone { .. } => "prefill_done",
+            SpanKind::Migrated { .. } => "migrated",
+            SpanKind::RecomputeQueued => "recompute_queued",
+            SpanKind::CacheConsult { .. } => "cache_consult",
+            SpanKind::Finished { .. } => "finished",
+        }
+    }
+}
+
+/// The reconstructed lifecycle of one sampled request.
+#[derive(Clone, Debug)]
+pub struct RequestSpan {
+    pub request: RequestId,
+    pub arrived: Time,
+    /// `(t, instance)` of prefill completion, if reached.
+    pub prefill_done: Option<(Time, InstanceId)>,
+    /// `(t, instance)` of decode completion, if reached.
+    pub finished: Option<(Time, InstanceId)>,
+    /// Everything that happened in between, in time order.
+    pub events: Vec<SpanEvent>,
+}
+
+impl RequestSpan {
+    fn new(request: RequestId, arrived: Time) -> Self {
+        RequestSpan {
+            request,
+            arrived,
+            prefill_done: None,
+            finished: None,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn migrations(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, SpanKind::Migrated { .. }))
+            .count()
+    }
+
+    /// Multi-line human-readable timeline (the `star trace
+    /// slo-violations` view).
+    pub fn timeline(&self) -> String {
+        let mut out = format!("  {:>10.3}s  arrived", self.arrived);
+        for e in &self.events {
+            out.push('\n');
+            let detail = match &e.kind {
+                SpanKind::Dispatched { instance } => format!("dispatched -> instance {instance}"),
+                SpanKind::PrefillDone { instance } => {
+                    format!("prefill done @ instance {instance}")
+                }
+                SpanKind::Migrated { src, dst, kv_tokens } => {
+                    format!("migrated {src} -> {dst} ({kv_tokens} KV tokens)")
+                }
+                SpanKind::RecomputeQueued => "OOM victim: re-queued for recompute".to_string(),
+                SpanKind::CacheConsult { hit } => {
+                    format!("prefix-cache consult: {}", if *hit { "hit" } else { "miss" })
+                }
+                SpanKind::Finished { instance } => format!("finished @ instance {instance}"),
+            };
+            out.push_str(&format!("  {:>10.3}s  {detail}", e.t));
+        }
+        out
+    }
+}
+
+/// Bounded ring of sampled request spans — the flight recorder. Spans
+/// are kept in first-arrival order; once `capacity` is exceeded the
+/// oldest are dropped (and counted), like any flight recorder.
+#[derive(Clone, Debug, Default)]
+pub struct FlightRecorder {
+    spans: Vec<RequestSpan>,
+    /// Requests the sampler retained (before the ring bound).
+    pub sampled: u64,
+    /// Retained spans evicted by the ring bound.
+    pub dropped: u64,
+    /// Distinct requests observed arriving (sampled or not).
+    pub seen: u64,
+}
+
+impl FlightRecorder {
+    pub fn spans(&self) -> &[RequestSpan] {
+        &self.spans
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn span_of(&self, request: RequestId) -> Option<&RequestSpan> {
+        self.spans.iter().find(|s| s.request == request)
+    }
+}
+
+/// Assemble the flight recorder from the flat trace plus the decision
+/// log. Pure post-processing: runs once at report time, reads nothing
+/// but its arguments, and is deterministic in them.
+pub fn assemble(
+    rows: &[TraceRow],
+    decisions: &AttributionLog,
+    seed: u64,
+    sample_rate: f64,
+    capacity: usize,
+) -> FlightRecorder {
+    let mut spans: Vec<RequestSpan> = Vec::new();
+    let mut index: BTreeMap<RequestId, usize> = BTreeMap::new();
+    let mut seen: BTreeSet<RequestId> = BTreeSet::new();
+    for row in rows {
+        match &row.event {
+            TraceEvent::Arrived { request } => {
+                seen.insert(*request);
+                if !index.contains_key(request) && sample_request(seed, *request, sample_rate) {
+                    index.insert(*request, spans.len());
+                    spans.push(RequestSpan::new(*request, row.t));
+                }
+            }
+            TraceEvent::PrefillDone { request, instance } => {
+                if let Some(&i) = index.get(request) {
+                    spans[i].prefill_done = Some((row.t, *instance));
+                    spans[i].events.push(SpanEvent {
+                        t: row.t,
+                        kind: SpanKind::PrefillDone { instance: *instance },
+                    });
+                }
+            }
+            TraceEvent::Finished { request, instance } => {
+                if let Some(&i) = index.get(request) {
+                    spans[i].finished = Some((row.t, *instance));
+                    spans[i].events.push(SpanEvent {
+                        t: row.t,
+                        kind: SpanKind::Finished { instance: *instance },
+                    });
+                }
+            }
+            TraceEvent::Migration { request, src, dst, kv_tokens } => {
+                if let Some(&i) = index.get(request) {
+                    spans[i].events.push(SpanEvent {
+                        t: row.t,
+                        kind: SpanKind::Migrated {
+                            src: *src,
+                            dst: *dst,
+                            kv_tokens: *kv_tokens,
+                        },
+                    });
+                }
+            }
+            TraceEvent::RecomputeQueued { request } => {
+                if let Some(&i) = index.get(request) {
+                    spans[i].events.push(SpanEvent {
+                        t: row.t,
+                        kind: SpanKind::RecomputeQueued,
+                    });
+                }
+            }
+            TraceEvent::Oom { .. } => {
+                // instance-level: each victim announces itself through
+                // its own RecomputeQueued row, so there is nothing to
+                // attach to a single request here
+            }
+            TraceEvent::KvSample { .. } => {
+                // instance-level utilization sample; the registry's
+                // time series carries this signal, not request spans
+            }
+        }
+    }
+    // The queued→dispatched edge lives in the decision log (the trace
+    // has no dispatch row): merge dispatch + cache decisions in.
+    for rec in decisions.records() {
+        let Some(request) = rec.request else {
+            continue;
+        };
+        let Some(&i) = index.get(&request) else {
+            continue;
+        };
+        match rec.kind {
+            DecisionKind::Dispatch => {
+                if let Some(instance) = rec.chosen {
+                    spans[i].events.push(SpanEvent {
+                        t: rec.t,
+                        kind: SpanKind::Dispatched { instance },
+                    });
+                }
+            }
+            DecisionKind::Cache => {
+                spans[i].events.push(SpanEvent {
+                    t: rec.t,
+                    kind: SpanKind::CacheConsult {
+                        hit: rec.actions > 0,
+                    },
+                });
+            }
+            DecisionKind::Reschedule | DecisionKind::Scale => {}
+        }
+    }
+    for s in &mut spans {
+        s.events
+            .sort_by(|a, b| a.t.partial_cmp(&b.t).expect("finite span times"));
+    }
+    let sampled = spans.len() as u64;
+    let mut dropped = 0u64;
+    if spans.len() > capacity {
+        dropped = (spans.len() - capacity) as u64;
+        let overflow = spans.len() - capacity;
+        spans.drain(..overflow);
+    }
+    FlightRecorder {
+        spans,
+        sampled,
+        dropped,
+        seen: seen.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<TraceRow> {
+        vec![
+            TraceRow { t: 0.0, event: TraceEvent::Arrived { request: 1 } },
+            TraceRow { t: 0.1, event: TraceEvent::Arrived { request: 2 } },
+            TraceRow { t: 0.5, event: TraceEvent::PrefillDone { request: 1, instance: 0 } },
+            TraceRow {
+                t: 1.0,
+                event: TraceEvent::KvSample { instance: 0, kv_frac: 0.5, tokens: 10, batch: 1 },
+            },
+            TraceRow {
+                t: 1.5,
+                event: TraceEvent::Migration { request: 1, src: 0, dst: 2, kv_tokens: 64 },
+            },
+            TraceRow { t: 2.0, event: TraceEvent::Oom { instance: 2, victims: 1 } },
+            TraceRow { t: 2.0, event: TraceEvent::RecomputeQueued { request: 1 } },
+            TraceRow { t: 3.0, event: TraceEvent::Finished { request: 1, instance: 2 } },
+        ]
+    }
+
+    #[test]
+    fn assembles_full_lifecycle_in_time_order() {
+        let mut log = AttributionLog::new(true);
+        log.set_now(0.5);
+        log.record_dispatch("current_load", 1, 3, 0);
+        let fr = assemble(&rows(), &log, 42, 1.0, 1024);
+        assert_eq!(fr.seen, 2);
+        assert_eq!(fr.sampled, 2);
+        assert_eq!(fr.dropped, 0);
+        let s = fr.span_of(1).expect("request 1 sampled at rate 1.0");
+        assert!((s.arrived - 0.0).abs() < 1e-12);
+        assert_eq!(s.prefill_done, Some((0.5, 0)));
+        assert_eq!(s.finished, Some((3.0, 2)));
+        assert_eq!(s.migrations(), 1);
+        let labels: Vec<&str> = s.events.iter().map(|e| e.kind.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["prefill_done", "dispatched", "migrated", "recompute_queued", "finished"]
+        );
+        let tl = s.timeline();
+        assert!(tl.contains("arrived"), "{tl}");
+        assert!(tl.contains("migrated 0 -> 2"), "{tl}");
+        assert!(tl.contains("re-queued for recompute"), "{tl}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_head_based() {
+        let log = AttributionLog::new(false);
+        let mut many = Vec::new();
+        for id in 0..200u64 {
+            many.push(TraceRow {
+                t: id as f64,
+                event: TraceEvent::Arrived { request: id },
+            });
+        }
+        let a = assemble(&many, &log, 7, 0.5, 4096);
+        let b = assemble(&many, &log, 7, 0.5, 4096);
+        let ids = |fr: &FlightRecorder| -> Vec<RequestId> {
+            fr.spans().iter().map(|s| s.request).collect()
+        };
+        assert_eq!(ids(&a), ids(&b), "same seed, same retained set");
+        assert!(a.sampled > 20 && a.sampled < 180, "rate 0.5 keeps some, drops some");
+        let c = assemble(&many, &log, 8, 0.5, 4096);
+        assert_ne!(ids(&a), ids(&c), "different seed, different retained set");
+    }
+
+    #[test]
+    fn ring_bound_drops_oldest_and_counts() {
+        let log = AttributionLog::new(false);
+        let mut many = Vec::new();
+        for id in 0..50u64 {
+            many.push(TraceRow {
+                t: id as f64,
+                event: TraceEvent::Arrived { request: id },
+            });
+        }
+        let fr = assemble(&many, &log, 3, 1.0, 8);
+        assert_eq!(fr.len(), 8);
+        assert_eq!(fr.sampled, 50);
+        assert_eq!(fr.dropped, 42);
+        assert_eq!(fr.spans()[0].request, 42, "oldest dropped, newest kept");
+    }
+}

@@ -22,6 +22,7 @@ use crate::metrics::{
     PoolSample, RequestLatency, RunMetrics, RunningVariance, TraceEvent, TraceRecorder,
     VarianceOverTime,
 };
+use crate::obs::{MetricsRegistry, ObsReport};
 use crate::predictor::{PredSample, Prediction, Scorecard};
 use crate::runtime::StarRuntime;
 use crate::sim::ReliabilityReport;
@@ -88,6 +89,12 @@ pub struct ServeOutcome {
     /// not inject faults (instance threads either run or the whole
     /// process aborts), so this is always the default (empty) report.
     pub reliability: ReliabilityReport,
+    /// Observability output (`[obs]` table, `star trace`): sampled
+    /// request spans, the metrics registry, and the decision log —
+    /// the same shape the simulator's `SimReport` carries. Decision
+    /// records here additionally carry measured `cost_us` (serve is
+    /// the wall-clock layer). Default-shaped for obs-disabled runs.
+    pub obs: ObsReport,
 }
 
 struct ReqTracker {
@@ -424,7 +431,13 @@ impl Server {
         )?;
         let mut prefix_cache =
             PrefixCache::new(cache_policy, exp.kvcache.budget_tokens, exp.kvcache.ttl_s);
-        let mut recorder = TraceRecorder::new(exp.record_traces);
+        // spans need the event rows even when plain trace recording is
+        // off: obs force-enables the recorder (recording is passive)
+        let mut recorder = TraceRecorder::new(exp.record_traces || exp.obs.enabled);
+        // `[obs]` registry + series clock (run-clock seconds); every
+        // mutator is a no-op while disabled
+        let mut obs_registry = MetricsRegistry::new(exp.obs.enabled);
+        let mut next_obs_sample = 0.0f64;
         let mut exec_var = VarianceOverTime::new();
         let mut load_var = VarianceOverTime::new();
         let mut completed = 0usize;
@@ -504,9 +517,33 @@ impl Server {
 
             // inject arrivals whose time has come (trace times are wall s)
             let now_s = start.elapsed().as_secs_f64();
+
+            // `[obs]` series sampling on its own cadence (run-clock s)
+            if obs_registry.enabled() && now_s >= next_obs_sample {
+                let active = instances
+                    .iter()
+                    .filter(|i| i.lifecycle == Lifecycle::Active)
+                    .count();
+                let kv_used: u64 = instances
+                    .iter()
+                    .filter(|i| i.lifecycle != Lifecycle::Retired)
+                    .map(|i| i.kv_used)
+                    .sum();
+                let batch: usize = (0..state.n_instances())
+                    .map(|i| state.stats(i).batch_size())
+                    .sum();
+                obs_registry.set_gauge("decode.active_instances", active as f64);
+                obs_registry.set_gauge("kv.used_tokens", kv_used as f64);
+                obs_registry.set_gauge("batch.running", batch as f64);
+                obs_registry.set_gauge("prefill.queued_reqs", prefill_inflight_reqs as f64);
+                obs_registry.sample(now_s);
+                next_obs_sample = now_s + exp.obs.sample_every_s;
+            }
+
             while next_arrival < requests.len() && requests[next_arrival].arrival <= now_s {
                 let r = requests[next_arrival].clone();
                 recorder.record(now_s, TraceEvent::Arrived { request: r.id });
+                obs_registry.inc("requests.arrived", 1);
                 prefill_inflight_reqs += 1;
                 prefill_inflight_tokens += r.prompt.len() as u64;
                 rates.on_arrival(r.prompt.len() as u64);
@@ -524,6 +561,7 @@ impl Server {
                 if session.queue[i].0 <= now_s {
                     let (_, lr) = session.queue.swap_remove(i);
                     recorder.record(now_s, TraceEvent::Arrived { request: lr.id });
+                    obs_registry.inc("requests.arrived", 1);
                     prefill_inflight_reqs += 1;
                     prefill_inflight_tokens += lr.prompt.len() as u64;
                     rates.on_arrival(lr.prompt.len() as u64);
@@ -607,6 +645,7 @@ impl Server {
                             Some(t) if !t.done => {
                                 t.done = true;
                                 failed += 1;
+                                obs_registry.inc("requests.failed", 1);
                             }
                             _ => {}
                         }
@@ -617,7 +656,9 @@ impl Server {
                         );
                         continue;
                     }
-                    control.dispatch(
+                    control.set_decision_time(now_s);
+                    let t0 = Instant::now();
+                    let di = control.dispatch(
                         &state.view(),
                         &IncomingRequest {
                             id: payload.id,
@@ -625,7 +666,11 @@ impl Server {
                             predicted_remaining: payload.predicted_remaining,
                             preferred_instance: None,
                         },
-                    )
+                    );
+                    control
+                        .attribution_mut()
+                        .note_last_cost_us(t0.elapsed().as_micros() as u64);
+                    di
                 };
                 let _ = instances[di].cmd.send(DecodeCommand::Admit(payload));
             }
@@ -640,6 +685,7 @@ impl Server {
                     } => {
                         eprintln!("[serve] prefill failed for {id}: {msg}");
                         failed += 1;
+                        obs_registry.inc("requests.failed", 1);
                         trackers
                             .get_mut(&id)
                             .expect("prefill error for untracked request")
@@ -700,9 +746,11 @@ impl Server {
                         // follow-up; index 0 is a session's first turn).
                         let mut preferred = None;
                         let mut cache_hit: Option<(InstanceId, u64)> = None;
+                        let mut cache_consulted = false;
                         if prefix_cache.enabled() {
                             if let Some(&(s, k)) = session.cursor.get(&req.id) {
                                 if k >= 1 {
+                                    cache_consulted = true;
                                     match prefix_cache.take(s, since(at)) {
                                         Some(e)
                                             if instances
@@ -727,6 +775,8 @@ impl Server {
                                 }
                             }
                         }
+                        control.set_decision_time(now_s);
+                        let t0 = Instant::now();
                         let di = control.dispatch(
                             &state.view(),
                             &IncomingRequest {
@@ -736,6 +786,15 @@ impl Server {
                                 preferred_instance: preferred,
                             },
                         );
+                        control
+                            .attribution_mut()
+                            .note_last_cost_us(t0.elapsed().as_micros() as u64);
+                        if cache_consulted {
+                            let hit = cache_hit.map_or(false, |(h, _)| di == h);
+                            control
+                                .attribution_mut()
+                                .record_cache(&exp.kvcache.policy, req.id, hit);
+                        }
                         if let Some((holder, cached)) = cache_hit {
                             let prompt = req.prompt.len() as u64;
                             if di == holder {
@@ -792,6 +851,7 @@ impl Server {
                             &mut scorecard,
                             &mut session,
                             &mut prefix_cache,
+                            &mut obs_registry,
                         );
                         pending = ev_rx.try_recv().ok();
                     }
@@ -847,9 +907,15 @@ impl Server {
                     if output_mean.count() > 10 {
                         control.observe_default_remaining(output_mean.mean() / 2.0);
                     }
+                    control.set_decision_time(now_s);
+                    let t0 = Instant::now();
                     let decisions = control.reschedule(&state.view());
+                    control
+                        .attribution_mut()
+                        .note_last_cost_us(t0.elapsed().as_micros() as u64);
                     for d in decisions {
                         migrations += 1;
+                        obs_registry.inc("migrations", 1);
                         migrating.push(d.request);
                         state.set_migrating(d.request, true);
                         state.reserve_inbound(d.dst, d.kv_tokens);
@@ -899,6 +965,7 @@ impl Server {
                         );
                         if let Some(dst) = dst {
                             migrations += 1;
+                            obs_registry.inc("migrations", 1);
                             migrating.push(r.id);
                             state.set_migrating(r.id, true);
                             state.reserve_inbound(dst, r.tokens);
@@ -965,7 +1032,13 @@ impl Server {
                     draining: pool.prefill_draining + pool.decode_draining,
                     provisioning: pool.prefill_provisioning + pool.decode_provisioning,
                 });
-                for action in control.scale(&state.view(), &pool) {
+                control.set_decision_time(now_s);
+                let t0 = Instant::now();
+                let actions = control.scale(&state.view(), &pool);
+                control
+                    .attribution_mut()
+                    .note_last_cost_us(t0.elapsed().as_micros() as u64);
+                for action in actions {
                     scale_log.push(ScaleRecord { t: now_s, action });
                     match action {
                         ScalingAction::FlipToDecode
@@ -1042,6 +1115,25 @@ impl Server {
         }
 
         let wall = start.elapsed().as_secs_f64();
+        // final end-state series point, then assemble the obs report
+        // (spans need the recorder rows before it moves into the outcome)
+        if obs_registry.enabled() {
+            let active = instances
+                .iter()
+                .filter(|i| i.lifecycle == Lifecycle::Active)
+                .count();
+            obs_registry.set_gauge("decode.active_instances", active as f64);
+            obs_registry.sample(wall);
+        }
+        let obs = crate::obs::assemble_report(
+            exp.obs.enabled,
+            exp.cluster.seed,
+            exp.obs.sample_rate,
+            exp.obs.ring_capacity,
+            recorder.rows(),
+            obs_registry,
+            control.take_attribution(),
+        );
         let mut metrics = RunMetrics {
             completed: Vec::new(),
             duration: wall,
@@ -1067,6 +1159,7 @@ impl Server {
             scorecard,
             cache: prefix_cache.report(),
             reliability: ReliabilityReport::default(),
+            obs,
         })
     }
 
@@ -1088,6 +1181,7 @@ impl Server {
         scorecard: &mut Scorecard,
         session: &mut SessionRt,
         prefix_cache: &mut PrefixCache,
+        obs: &mut MetricsRegistry,
     ) {
         match ev {
             DecodeEvent::Token { id, at, .. } => {
@@ -1134,6 +1228,13 @@ impl Server {
                         // ground truth: fold into the calibration scorecard
                         let log = std::mem::take(&mut t.pred_log);
                         scorecard.observe_completion(generated, &log);
+                        obs.inc("requests.finished", 1);
+                        if let Some(ft) = t.latency.first_token {
+                            obs.observe("ttft_s", ft - t.latency.arrival);
+                        }
+                        if t.generated > 1 {
+                            obs.observe("tpot_s", t.tpot_sum / (t.generated - 1) as f64);
+                        }
                         recorder.record(
                             since(at),
                             TraceEvent::Finished {
@@ -1188,6 +1289,7 @@ impl Server {
                             session.cursor.insert(nid, (s, k + 1));
                             session.queue.push((arrival, lr));
                             session.spawned += 1;
+                            obs.inc("session.follow_ups", 1);
                             // retain the completed turn's KV for the
                             // follow-up we just scheduled. Hard cap is the
                             // instance's physical headroom for idle bytes:
@@ -1240,6 +1342,9 @@ impl Server {
             }
             DecodeEvent::Oom { instance, victims, at } => {
                 *oom_events += 1;
+                obs.inc("oom.events", 1);
+                obs.inc("oom.victims", victims.len() as u64);
+                obs.inc("recompute.queued", victims.len() as u64);
                 recorder.record(
                     since(at),
                     TraceEvent::Oom {

@@ -24,6 +24,7 @@ use crate::coordinator::{
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::{CacheContext, CachePolicyRegistry, KvCacheManager, PrefixCache};
 use crate::metrics::{PoolSample, RunningVariance, TraceEvent, TraceRecorder, VarianceOverTime};
+use crate::obs::MetricsRegistry;
 use crate::predictor::{
     LengthPredictor, PredSample, PredictInput, Prediction, PredictorContext, PredictorRegistry,
     Repredictor, Scorecard,
@@ -184,6 +185,13 @@ pub struct Simulator {
     /// Crash time of every request re-queued by a failure, resolved into
     /// `reliability.requeue_delays` at its next successful admission.
     fault_requeue: BTreeMap<RequestId, Time>,
+    // -- observability -------------------------------------------------
+    /// `[obs]` metrics registry: counters/gauges/histograms plus the
+    /// sampled time series. Every mutator is a no-op while disabled, so
+    /// the default-off path stays bit-for-bit identical.
+    registry: MetricsRegistry,
+    /// Next due time of the `[obs] sample_every_s` series clock.
+    next_obs_sample: Time,
 }
 
 /// Event-coverage list for the invariant checker: every [`Event`] variant
@@ -423,7 +431,10 @@ impl Simulator {
             predictor,
             repredictor: Repredictor::new(exp.rescheduler.predict_every_iters),
             scorecard: Scorecard::new(),
-            recorder: TraceRecorder::new(exp.record_traces),
+            // spans need the event rows even when plain trace recording
+            // is off: obs force-enables the recorder (recording is
+            // passive, so the trajectory is unchanged either way)
+            recorder: TraceRecorder::new(exp.record_traces || exp.obs.enabled),
             exec_var: VarianceOverTime::new(),
             load_var: VarianceOverTime::new(),
             now: 0.0,
@@ -460,6 +471,8 @@ impl Simulator {
             fleet,
             reliability: ReliabilityReport::default(),
             fault_requeue: BTreeMap::new(),
+            registry: MetricsRegistry::new(exp.obs.enabled),
+            next_obs_sample: 0.0,
             params,
         })
     }
@@ -472,6 +485,11 @@ impl Simulator {
             if self.now > self.params.max_sim_time {
                 break;
             }
+            // obs housekeeping rides the event clock: drain the series
+            // sample timer and stamp the decision-attribution clock (both
+            // no-ops while `[obs] enabled = false`)
+            self.drain_obs_samples();
+            self.control.set_decision_time(self.now);
             if self.params.validate_state {
                 // coverage list first: a new Event variant must be added
                 // to VALIDATED_EVENTS (and its invariants to
@@ -534,8 +552,10 @@ impl Simulator {
         // twice (consumers assert arrival uniqueness).
         if matches!(self.requests[id as usize].state, ReqState::Recomputing) {
             self.recorder.record(self.now, TraceEvent::RecomputeQueued { request: id });
+            self.registry.inc("recompute.queued", 1);
         } else {
             self.recorder.record(self.now, TraceEvent::Arrived { request: id });
+            self.registry.inc("requests.arrived", 1);
         }
         self.rates.on_arrival(self.requests[id as usize].prefill_tokens());
         self.enqueue_prefill(id);
@@ -631,6 +651,7 @@ impl Simulator {
             self.release_hold(id);
             self.requests[id as usize].state = ReqState::Done;
             self.failed += 1;
+            self.registry.inc("requests.failed", 1);
             if self.fault_requeue.remove(&id).is_some() {
                 self.reliability.lost += 1;
             }
@@ -800,6 +821,7 @@ impl Simulator {
                 self.release_hold(id);
                 self.requests[id as usize].state = ReqState::Done;
                 self.failed += 1;
+                self.registry.inc("requests.failed", 1);
                 if self.fault_requeue.remove(&id).is_some() {
                     self.reliability.lost += 1;
                 }
@@ -1025,6 +1047,7 @@ impl Simulator {
     /// Returns the victim list.
     fn handle_oom(&mut self, di: usize, _for_id: RequestId) -> Vec<RequestId> {
         self.oom_events += 1;
+        self.registry.inc("oom.events", 1);
         // free a breathing-room chunk (~4% of capacity), not just one
         // block: per-block eviction re-OOMs on the very next append
         let chunk = (self.decode[di].kv.capacity_tokens()
@@ -1049,6 +1072,7 @@ impl Simulator {
                 Some(v)
             })
             .collect();
+        self.registry.inc("oom.victims", victims.len() as u64);
         self.recorder.record(
             self.now,
             TraceEvent::Oom {
@@ -1078,6 +1102,7 @@ impl Simulator {
                 // failure (vLLM would abort the request too)
                 r.state = ReqState::Done;
                 self.failed += 1;
+                self.registry.inc("requests.failed", 1);
                 if self.fault_requeue.remove(&v).is_some() {
                     self.reliability.lost += 1;
                 }
@@ -1100,6 +1125,8 @@ impl Simulator {
         // mean gap between consecutive tokens, including migration stalls
         r.latency.finalize_tpot(r.generated, r.tpot_sum, r.tpot_max);
         let generated = r.generated;
+        let ttft = r.latency.first_token.map(|ft| ft - r.latency.arrival);
+        let mean_tpot = (generated > 1).then(|| r.tpot_sum / (generated - 1) as f64);
         // completion is the first moment every logged estimate has a known
         // ground truth: fold the log into the calibration scorecard and
         // feed it back to the predictor (the `debiased` builtin learns
@@ -1107,6 +1134,13 @@ impl Simulator {
         let log = std::mem::take(&mut r.pred_log);
         self.output_mean.push(generated as f64);
         self.completed += 1;
+        self.registry.inc("requests.finished", 1);
+        if let Some(t) = ttft {
+            self.registry.observe("ttft_s", t);
+        }
+        if let Some(t) = mean_tpot {
+            self.registry.observe("tpot_s", t);
+        }
         if !log.is_empty() {
             self.scorecard.observe_completion(generated, &log);
             self.predictor.observe_completion(generated, &log);
@@ -1179,6 +1213,7 @@ impl Simulator {
     /// prompt carries the accumulated history) and route it to prefill.
     fn on_session_follow_up(&mut self, session: u32, turn_idx: u32) {
         self.pending_follow_ups -= 1;
+        self.registry.inc("session.follow_ups", 1);
         let turn = self.sessions.scripts[session as usize][turn_idx as usize].clone();
         let id = self.requests.len() as RequestId;
         self.requests.push(SimRequest {
@@ -1211,6 +1246,7 @@ impl Simulator {
         // consult the prefix cache before the turn enters prefill: a hit
         // prefills only the new suffix and prefers the holding instance
         if self.prefix_cache.enabled() {
+            let mut cache_hit = false;
             match self.prefix_cache.take(session, self.now) {
                 Some(e) if self.decode[e.instance].lifecycle == Lifecycle::Active => {
                     let r = &mut self.requests[id as usize];
@@ -1222,6 +1258,7 @@ impl Simulator {
                         r.latency.suffix_tokens = r.prompt_len - reused as u32;
                         self.hold_tokens[e.instance] += reused;
                         self.prefix_cache.note_hit(reused);
+                        cache_hit = true;
                     } else {
                         self.prefix_cache.note_miss();
                     }
@@ -1237,6 +1274,9 @@ impl Simulator {
             }
             // take removes expired entries even when it returns None
             self.sync_cached_mirror();
+            self.control
+                .attribution_mut()
+                .record_cache(&self.params.exp.kvcache.policy, id, cache_hit);
         }
         self.on_arrival(id);
     }
@@ -1449,6 +1489,7 @@ impl Simulator {
         r.state = ReqState::Migrating { from, to };
         r.latency.migrations += 1;
         self.migrations_started += 1;
+        self.registry.inc("migrations", 1);
         // pause: out of the running batch immediately (overlap: the rest
         // of the batch keeps decoding, §5.4); its KV footprint is promised
         // to the destination until the transfer completes
@@ -1858,6 +1899,7 @@ impl Simulator {
             return;
         }
         self.reliability.failures += 1;
+        self.registry.inc("faults.failures", 1);
         self.reliability.failure_log.push((self.now, di));
         self.decode[di].lifecycle = Lifecycle::Failed;
         self.state.set_lifecycle(di, Lifecycle::Failed);
@@ -1920,6 +1962,7 @@ impl Simulator {
             .collect();
         let watermark = admission_watermark(self.decode[di].kv.capacity_tokens());
         let block = self.params.exp.cluster.block_tokens as u64;
+        let lost_before = self.reliability.lost;
         for id in residents {
             self.reliability.kv_tokens_dropped += self.requests[id as usize].kv_tokens();
             self.decode[di].kv.release(id);
@@ -1936,6 +1979,10 @@ impl Simulator {
                 self.fault_requeue.insert(id, self.now);
                 self.queue.push(self.now, Event::Arrival { request: id });
             }
+        }
+        if self.reliability.lost > lost_before {
+            self.registry
+                .inc("requests.failed", self.reliability.lost - lost_before);
         }
 
         // emergency capacity: one replacement when the fleet cap leaves
@@ -1964,14 +2011,74 @@ impl Simulator {
             return;
         }
         self.reliability.recoveries += 1;
+        self.registry.inc("faults.recoveries", 1);
         self.decode[di].lifecycle = Lifecycle::Active;
         self.state.set_lifecycle(di, Lifecycle::Active);
         self.kick(di);
     }
 
     // ------------------------------------------------------------------
+    // observability (`[obs]` table, star trace)
 
-    fn into_report(self) -> SimReport {
+    /// Drain the `[obs] sample_every_s` series clock up to the current
+    /// event time: refresh the cluster gauges and snapshot one series
+    /// point per due tick. A pure function of the event trajectory, so
+    /// the series is identical across same-seed runs.
+    fn drain_obs_samples(&mut self) {
+        if !self.registry.enabled() {
+            return;
+        }
+        while self.next_obs_sample <= self.now {
+            let t = self.next_obs_sample;
+            self.refresh_obs_gauges();
+            self.registry.sample(t);
+            self.next_obs_sample += self.params.exp.obs.sample_every_s;
+        }
+    }
+
+    /// Point-in-time cluster gauges (sample-and-hold at event times).
+    fn refresh_obs_gauges(&mut self) {
+        let mut kv_used = 0u64;
+        let mut batch = 0usize;
+        let mut active = 0usize;
+        for d in &self.decode {
+            if matches!(d.lifecycle, Lifecycle::Retired | Lifecycle::Failed) {
+                continue;
+            }
+            active += 1;
+            kv_used += d.kv.used_tokens();
+            batch += self.state.stats(d.id).batch_size();
+        }
+        let queued: usize = self
+            .prefill
+            .iter()
+            .filter(|p| p.lifecycle == Lifecycle::Active)
+            .map(|p| p.queue.len() + p.busy.is_some() as usize)
+            .sum();
+        self.registry.set_gauge("decode.active_instances", active as f64);
+        self.registry.set_gauge("kv.used_tokens", kv_used as f64);
+        self.registry.set_gauge("batch.running", batch as f64);
+        self.registry.set_gauge("prefill.queued_reqs", queued as f64);
+    }
+
+    // ------------------------------------------------------------------
+
+    fn into_report(mut self) -> SimReport {
+        // one final series point at the run's end, so even short runs
+        // carry the end-state snapshot
+        if self.registry.enabled() {
+            self.refresh_obs_gauges();
+            self.registry.sample(self.now);
+        }
+        let obs = crate::obs::assemble_report(
+            self.params.exp.obs.enabled,
+            self.params.exp.cluster.seed,
+            self.params.exp.obs.sample_rate,
+            self.params.exp.obs.ring_capacity,
+            self.recorder.rows(),
+            std::mem::take(&mut self.registry),
+            self.control.take_attribution(),
+        );
         let mut report = SimReport {
             duration: self.now,
             completed: Vec::new(),
@@ -1990,6 +2097,7 @@ impl Simulator {
             scale_actions: self.scale_log,
             cache: self.prefix_cache.report(),
             reliability: self.reliability,
+            obs,
         };
         for r in self.requests {
             if matches!(r.state, ReqState::Done) && r.latency.finished.is_some() {

@@ -6,6 +6,7 @@
 use crate::coordinator::{ReschedulerStats, ScaleRecord};
 use crate::kvcache::CacheReport;
 use crate::metrics::{PoolSample, RequestLatency, RunMetrics, Slo, TraceRecorder, VarianceOverTime};
+use crate::obs::ObsReport;
 use crate::predictor::Scorecard;
 use crate::workload::{RequestClass, SloByClass};
 use crate::{InstanceId, RequestId, Time};
@@ -47,15 +48,14 @@ impl ReliabilityReport {
     }
 
     /// Quantile of the crash→re-admission delay distribution (seconds);
-    /// 0.0 when nothing was re-queued.
+    /// 0.0 when nothing was re-queued. Uses the crate-wide shared
+    /// linear-interpolation quantile (this used to be nearest-rank,
+    /// inconsistent with every other percentile in the crate).
     pub fn quantile_requeue_s(&self, q: f64) -> f64 {
         if self.requeue_delays.is_empty() {
             return 0.0;
         }
-        let mut v = self.requeue_delays.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).expect("requeue delays are finite"));
-        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        v[idx]
+        crate::metrics::percentiles::quantile_unsorted(&self.requeue_delays, q)
     }
 
     /// One greppable line, printed by `star simulate` for fault runs.
@@ -110,6 +110,10 @@ pub struct SimReport {
     /// `star simulate` prints [`ReliabilityReport::summary`] for fault
     /// runs.
     pub reliability: ReliabilityReport,
+    /// Observability output (`[obs]` table, `star trace`): sampled
+    /// request spans, the metrics registry, and the decision log.
+    /// Default-shaped (`enabled == false`) for obs-disabled runs.
+    pub obs: ObsReport,
 }
 
 /// Per-class slice of a run: TTFT/TPOT percentiles and goodput against

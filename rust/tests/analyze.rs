@@ -1,4 +1,4 @@
-//! `star analyze` acceptance tests: each rule R1–R5 fires on the fixture
+//! `star analyze` acceptance tests: each rule R1–R6 fires on the fixture
 //! corpus exactly where the fixtures promise (one negative test per rule,
 //! so CI fails if a rule is silently disabled), and the real `rust/src`
 //! tree is clean. Runs the library API directly; the process-level CLI
@@ -106,6 +106,21 @@ fn r5_fires_on_unmatched_and_unlisted_event_variants() {
         "{findings:#?}"
     );
     assert!(findings.iter().all(|f| f.message.contains("Finish")));
+}
+
+#[test]
+fn r6_fires_on_the_unhandled_trace_event_variant() {
+    let findings = run(&["R6"]);
+    assert_eq!(
+        locations(&findings),
+        vec![("metrics/recorder.rs".to_string(), 7)],
+        "{findings:#?}"
+    );
+    assert!(findings[0].message.contains("KvSample"), "{findings:#?}");
+    assert!(
+        findings[0].message.contains("span assembler"),
+        "{findings:#?}"
+    );
 }
 
 #[test]

@@ -154,9 +154,31 @@ fn analyze_list_rules_prints_the_catalog() {
         "R3 unsafe-allowlist",
         "R4 no-bare-unwrap",
         "R5 event-coverage",
+        "R6 trace-event-coverage",
     ] {
         assert!(out.contains(needle), "missing `{needle}`: {out}");
     }
+}
+
+#[test]
+fn trace_unknown_action_lists_valid_actions() {
+    let (ok, _, err) = run(&["trace", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown trace action `bogus`"), "{err}");
+    assert!(
+        err.contains("summarize|slo-violations|export"),
+        "must list candidates: {err}"
+    );
+}
+
+#[test]
+fn trace_unknown_export_format_lists_valid_formats() {
+    // validated before the run: a typo must fail fast, not after a
+    // full simulation
+    let (ok, _, err) = run(&["trace", "export", "--format", "bogus", "--requests", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown trace export format `bogus`"), "{err}");
+    assert!(err.contains("chrome|jsonl"), "must list candidates: {err}");
 }
 
 #[test]

@@ -1,0 +1,9 @@
+// R6 fixture: the trace-event catalog. `KvSample` (line 7) is never
+// handled by the fixture span assembler in obs/spans.rs, so R6 must
+// report it here, on the variant's own line.
+pub enum TraceEvent {
+    Arrived { request: u64 },
+    PrefillDone { request: u64, instance: usize },
+    KvSample { instance: usize, kv_frac: f64 },
+    Finished { request: u64, instance: usize },
+}

@@ -1,0 +1,12 @@
+// R6 fixture: a span assembler that handles only three of the four
+// TraceEvent variants — `KvSample` is missing on purpose (the `_` arm
+// does not count: R6 wants the variant named, so a new event cannot
+// silently fall through a catch-all).
+pub fn absorb(ev: &TraceEvent) {
+    match ev {
+        TraceEvent::Arrived { request } => drop(request),
+        TraceEvent::PrefillDone { .. } => {}
+        TraceEvent::Finished { .. } => {}
+        _ => {}
+    }
+}

@@ -1,0 +1,379 @@
+//! Observability subsystem integration tests (ISSUE 9): `[obs] enabled =
+//! false` must be bit-for-bit inert, obs-ON runs must be *passive* (the
+//! scheduling trajectory is identical to baseline) and same-seed
+//! deterministic, the flight-recorder sampling/ring bounds must hold
+//! end-to-end, the SLO-violation join (spans × decision log) must cover
+//! every violating request, and the `star trace` CLI must export
+//! byte-identical Chrome-trace / JSONL payloads across same-seed runs.
+
+use std::process::Command;
+
+use star::bench::json::{parse, Json};
+use star::bench::scenarios::ScenarioRegistry;
+use star::config::ExperimentConfig;
+use star::coordinator::PolicyRegistry;
+use star::metrics::Slo;
+use star::obs::DecisionKind;
+use star::sim::{SimParams, SimReport, Simulator};
+
+fn base_exp(seed: u64) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.cluster.n_decode = 3;
+    exp.cluster.n_prefill = 2;
+    exp.cluster.rps = 0.5;
+    exp.cluster.seed = seed;
+    exp.cluster.kv_capacity_tokens = 400_000; // roomy: nothing fails
+    exp.predictor = "oracle".to_string();
+    exp.scenario_name = Some("bursty_mixed".to_string());
+    exp.record_traces = true;
+    exp
+}
+
+fn run(exp: ExperimentConfig, n: usize) -> SimReport {
+    let spec = ScenarioRegistry::with_builtins()
+        .build(exp.scenario_name.as_deref().unwrap(), &exp)
+        .expect("builtin scenario");
+    let trace = spec.generate(n, exp.cluster.seed);
+    let params = SimParams {
+        exp,
+        ..Default::default()
+    };
+    Simulator::with_scenario(params, trace, &PolicyRegistry::with_builtins())
+        .expect("builtin policies")
+        .run()
+}
+
+/// Every recorded trace row, rendered exactly — the bit-for-bit currency
+/// of the differential tests.
+fn trace_rows(r: &SimReport) -> Vec<String> {
+    r.recorder
+        .rows()
+        .iter()
+        .map(|row| format!("{:.12}|{:?}", row.t, row.event))
+        .collect()
+}
+
+/// Per-request completion fingerprint (sorted by id).
+fn completion_rows(r: &SimReport) -> Vec<String> {
+    let mut rows: Vec<String> = r
+        .completed
+        .iter()
+        .map(|l| {
+            format!(
+                "{}|{:?}|{:?}|{}|{}",
+                l.id, l.first_token, l.finished, l.output_tokens, l.prompt_tokens
+            )
+        })
+        .collect();
+    rows.sort();
+    rows
+}
+
+#[test]
+fn obs_off_is_bit_for_bit_inert() {
+    // baseline: the defaults (obs off) — then obs still off but with every
+    // [obs] knob set to an odd value. Both must produce identical traces,
+    // and the report's obs section must be the inert default.
+    let base = run(base_exp(42), 60);
+    assert!(!base.obs.enabled);
+    assert!(base.obs.spans.is_empty());
+    assert_eq!(base.obs.spans.seen, 0);
+    assert_eq!(base.obs.registry.counter("requests.arrived"), 0);
+    assert!(base.obs.registry.series().is_empty());
+    assert!(base.obs.decisions.is_empty());
+    assert!(base.obs.summary().contains("disabled"), "{}", base.obs.summary());
+
+    let mut odd = base_exp(42);
+    odd.obs.enabled = false;
+    odd.obs.sample_every_s = 0.25;
+    odd.obs.ring_capacity = 7;
+    odd.obs.sample_rate = 0.5;
+    let b = run(odd, 60);
+    assert_eq!(
+        trace_rows(&base),
+        trace_rows(&b),
+        "[obs] enabled = false must be bit-for-bit identical to baseline"
+    );
+    assert_eq!(completion_rows(&base), completion_rows(&b));
+    assert!((base.duration - b.duration).abs() < 1e-12);
+    assert_eq!(base.migrations, b.migrations);
+    assert_eq!(base.oom_events, b.oom_events);
+    assert!(!b.obs.enabled);
+}
+
+#[test]
+fn obs_on_is_passive_and_same_seed_deterministic() {
+    let base = run(base_exp(42), 60);
+    let mk = || {
+        let mut exp = base_exp(42);
+        exp.obs.enabled = true;
+        run(exp, 60)
+    };
+    let a = mk();
+    // passivity: observability reads the run, it never steers it — the
+    // trajectory with obs ON equals the baseline with obs OFF
+    assert_eq!(
+        trace_rows(&base),
+        trace_rows(&a),
+        "obs must be passive: enabling it cannot change the trajectory"
+    );
+    assert_eq!(completion_rows(&base), completion_rows(&a));
+
+    // determinism: two obs-on runs agree on every observable
+    let b = mk();
+    assert_eq!(a.obs.summary(), b.obs.summary());
+    assert_eq!(a.obs.spans.len(), b.obs.spans.len());
+    assert_eq!(a.obs.decisions.len(), b.obs.decisions.len());
+    let counters = |r: &SimReport| -> Vec<(String, u64)> {
+        r.obs
+            .registry
+            .counters()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect()
+    };
+    assert_eq!(counters(&a), counters(&b));
+
+    // and the content is real
+    assert!(a.obs.enabled);
+    assert!(a.obs.spans.seen > 0);
+    assert!(a.obs.registry.counter("requests.arrived") > 0);
+    assert_eq!(
+        a.obs.registry.counter("requests.finished"),
+        a.completed.len() as u64,
+        "the finished counter is the completion count"
+    );
+    let ttft = a.obs.registry.histogram("ttft_s").expect("ttft histogram");
+    assert_eq!(ttft.count as usize, a.completed.len());
+    let series = a.obs.registry.series();
+    assert!(!series.is_empty(), "per-tick series must be sampled");
+    assert!(
+        series.windows(2).all(|w| w[0].t <= w[1].t),
+        "series timestamps are nondecreasing"
+    );
+    assert!(!a.obs.decisions.is_empty());
+    assert!(
+        a.obs.decisions.records().iter().all(|d| d.cost_us == 0),
+        "sim decisions carry the deterministic work proxy, never wall time"
+    );
+    assert!(a
+        .obs
+        .decisions
+        .records()
+        .iter()
+        .any(|d| d.kind == DecisionKind::Dispatch && d.request.is_some() && d.chosen.is_some()));
+    // rate 1.0 + roomy ring: the first completed request has a span
+    let first = a.completed.first().expect("requests completed");
+    let span = a.obs.spans.span_of(first.id).expect("span retained");
+    assert!(span.finished.is_some(), "completed request's span finished");
+}
+
+#[test]
+fn sampling_rate_and_ring_capacity_bound_the_flight_recorder() {
+    let mk = |rate: f64, cap: usize| {
+        let mut exp = base_exp(7);
+        exp.obs.enabled = true;
+        exp.obs.sample_rate = rate;
+        exp.obs.ring_capacity = cap;
+        // spans must assemble even with plain trace recording off (the
+        // obs switch force-enables the recorder, passively)
+        exp.record_traces = false;
+        run(exp, 60)
+    };
+    let none = mk(0.0, 4096);
+    assert_eq!(none.obs.spans.len(), 0, "rate 0.0 retains nothing");
+    assert_eq!(none.obs.spans.sampled, 0);
+    assert!(none.obs.spans.seen > 0, "seen still counts every arrival");
+
+    let all = mk(1.0, 4096);
+    assert_eq!(all.obs.spans.sampled, all.obs.spans.seen, "rate 1.0 keeps all");
+    assert_eq!(all.obs.spans.dropped, 0);
+    assert_eq!(all.obs.spans.len() as u64, all.obs.spans.sampled);
+
+    let ringed = mk(1.0, 5);
+    assert_eq!(ringed.obs.spans.len(), 5, "ring bound holds");
+    assert!(ringed.obs.spans.dropped > 0, "evictions are counted");
+    assert_eq!(
+        ringed.obs.spans.sampled, all.obs.spans.sampled,
+        "sampling is independent of the ring bound"
+    );
+
+    let half = mk(0.5, 4096);
+    assert!(half.obs.spans.sampled > 0, "{:?}", half.obs.spans.sampled);
+    assert!(
+        half.obs.spans.sampled < half.obs.spans.seen,
+        "rate 0.5 keeps some, drops some ({} of {})",
+        half.obs.spans.sampled,
+        half.obs.spans.seen
+    );
+    // head-based sampling off the run seed: same seed, same retained set
+    let half2 = mk(0.5, 4096);
+    let ids = |r: &SimReport| -> Vec<u64> {
+        r.obs.spans.spans().iter().map(|s| s.request).collect()
+    };
+    assert_eq!(ids(&half), ids(&half2));
+}
+
+#[test]
+fn slo_violation_join_covers_every_violating_request() {
+    // overload the cluster (one prefill instance, 3 rps bursty traffic) so
+    // queueing pushes TTFT past the 1 s default SLO for a healthy fraction
+    // of requests — the population `star trace slo-violations` lists
+    let mut exp = base_exp(11);
+    exp.obs.enabled = true;
+    exp.cluster.rps = 3.0;
+    exp.cluster.n_prefill = 1;
+    let r = run(exp, 80);
+    let slo = Slo::default();
+    let violating: Vec<_> = r.completed.iter().filter(|l| !l.meets_slo(slo)).collect();
+    assert!(
+        !violating.is_empty(),
+        "overloaded bursty run must produce SLO violations"
+    );
+    for l in &violating {
+        let span = r
+            .obs
+            .spans
+            .span_of(l.id)
+            .expect("rate-1.0 sampling retains every violating request");
+        assert!(
+            (span.arrived - l.arrival).abs() < 1e-9,
+            "span and latency record agree on arrival"
+        );
+        let tl = span.timeline();
+        assert!(tl.contains("arrived"), "{tl}");
+        let decisions = r.obs.decisions.for_request(l.id);
+        assert!(
+            decisions.iter().any(|d| d.kind == DecisionKind::Dispatch),
+            "request {} has no dispatch decision in the attribution log",
+            l.id
+        );
+        assert!(
+            decisions.iter().all(|d| d.request == Some(l.id)),
+            "for_request must only return the request's own decisions"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- CLI --
+
+fn star() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_star"))
+}
+
+fn run_cli(args: &[&str]) -> (bool, Vec<u8>, String) {
+    let out = star().args(args).output().expect("spawn star binary");
+    (
+        out.status.success(),
+        out.stdout,
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+const TRACE_ARGS: &[&str] = &[
+    "--scenario",
+    "bursty_mixed",
+    "--requests",
+    "40",
+    "--rps",
+    "0.5",
+    "--kv-capacity",
+    "400000",
+    "--seed",
+    "13",
+];
+
+#[test]
+fn trace_export_chrome_is_byte_identical_and_valid_json() {
+    let mut args = vec!["trace", "export", "--format", "chrome"];
+    args.extend_from_slice(TRACE_ARGS);
+    let (ok, out_a, err) = run_cli(&args);
+    assert!(ok, "star trace export --format chrome failed: {err}");
+    let (ok, out_b, err) = run_cli(&args);
+    assert!(ok, "{err}");
+    assert_eq!(
+        out_a, out_b,
+        "same seed must export byte-identical chrome JSON"
+    );
+    let text = String::from_utf8(out_a).expect("utf8 payload");
+    let v = parse(&text).expect("chrome export must be valid JSON");
+    assert_eq!(v.get("displayTimeUnit"), Some(&Json::Str("ms".to_string())));
+    let Some(Json::Arr(evs)) = v.get("traceEvents") else {
+        panic!("traceEvents must be an array");
+    };
+    assert!(evs.len() > 10, "expected a populated trace: {}", evs.len());
+    // duration slices (request lifecycles), counter samples (metrics),
+    // and instants (decisions) are all present
+    for ph in ["X", "C", "i"] {
+        assert!(
+            evs.iter()
+                .any(|e| e.get("ph") == Some(&Json::Str(ph.to_string()))),
+            "no `{ph}` events in the export"
+        );
+    }
+}
+
+#[test]
+fn trace_export_jsonl_is_byte_identical_and_line_parseable() {
+    let mut args = vec!["trace", "export", "--format", "jsonl"];
+    args.extend_from_slice(TRACE_ARGS);
+    let (ok, out_a, err) = run_cli(&args);
+    assert!(ok, "star trace export --format jsonl failed: {err}");
+    let (ok, out_b, err) = run_cli(&args);
+    assert!(ok, "{err}");
+    assert_eq!(out_a, out_b, "same seed must export byte-identical JSONL");
+    let text = String::from_utf8(out_a).expect("utf8 payload");
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() > 10, "expected a populated dump: {}", lines.len());
+    for line in &lines {
+        parse(line).expect("every jsonl line parses");
+    }
+    assert!(lines[0].contains("\"type\":\"obs\""), "{}", lines[0]);
+    for needle in ["\"type\":\"span\"", "\"type\":\"decision\"", "\"type\":\"series\""] {
+        assert!(text.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn trace_summarize_and_slo_violations_run_end_to_end() {
+    let mut args = vec!["trace", "summarize"];
+    args.extend_from_slice(TRACE_ARGS);
+    let (ok, out, err) = run_cli(&args);
+    assert!(ok, "star trace summarize failed: {err}");
+    let out = String::from_utf8_lossy(&out);
+    assert!(out.contains("obs:"), "{out}");
+    assert!(out.contains("counter"), "{out}");
+    assert!(out.contains("decisions"), "{out}");
+
+    // overloaded run (one prefill instance, 3 rps): violations exist, and
+    // each sampled one prints its span timeline plus its decisions
+    let (ok, out, err) = run_cli(&[
+        "trace",
+        "slo-violations",
+        "--scenario",
+        "bursty_mixed",
+        "--requests",
+        "60",
+        "--rps",
+        "3.0",
+        "--prefill",
+        "1",
+        "--decode",
+        "3",
+        "--kv-capacity",
+        "400000",
+        "--seed",
+        "11",
+    ]);
+    assert!(ok, "slo-violations must exit 0: {err}");
+    let out = String::from_utf8_lossy(&out);
+    assert!(out.contains("slo-violations:"), "{out}");
+    let n: usize = out
+        .split("slo-violations: ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .expect("header violation count");
+    assert!(n > 0, "overloaded run must report violations: {out}");
+    assert!(out.contains("spans:"), "violating request timeline: {out}");
+    assert!(out.contains("decision t="), "attributed decisions: {out}");
+}
