@@ -6,9 +6,10 @@
 #   ./ci.sh             build, test, fmt, clippy
 #   ./ci.sh --smoke     ... plus run every bench at smoke scale
 #                       (STAR_BENCH_SMOKE=1: ≤2k requests, ≤8 instances),
-#                       validate every emitted BENCH_*.json, and smoke the
+#                       validate every emitted BENCH_*.json, smoke the
 #                       `star trace` observability surface (export both
-#                       formats + slo-violations)
+#                       formats + slo-violations), and check the sharded
+#                       event core (--shards 2 output must match serial)
 #   ./ci.sh --bench NAME  build + run ONE bench (benches/NAME.rs) at smoke
 #                       scale and validate its BENCH_*.json — the quick
 #                       inner loop while iterating on a single bench
@@ -178,6 +179,31 @@ obs_gate() {
   ./target/release/star trace summarize "${common[@]}"
 }
 
+# Sharded-core smoke: one scenario at --shards 2 with the state/rollup
+# validator on must print byte-identical output to the serial engine
+# (--shards 1, validator off) — the determinism contract of DESIGN.md
+# §17 enforced at the CLI surface, not just in unit tests.
+shard_gate() {
+  local common=(simulate --scenario bursty_mixed --requests 40 --rps 0.5 \
+                --kv-capacity 400000 --seed 13)
+  echo "==> [shard] star simulate --shards 1 (serial baseline)"
+  if ! ./target/release/star "${common[@]}" --shards 1 \
+        > "$SMOKE_LOG_DIR/shard_serial.txt"; then
+    echo "shard: serial baseline run failed" >&2
+    return 1
+  fi
+  echo "==> [shard] star simulate --shards 2 --validate-state"
+  if ! ./target/release/star "${common[@]}" --shards 2 --validate-state \
+        > "$SMOKE_LOG_DIR/shard_sharded.txt"; then
+    echo "shard: sharded run failed (rollup/state validation?)" >&2
+    return 1
+  fi
+  if ! diff -u "$SMOKE_LOG_DIR/shard_serial.txt" "$SMOKE_LOG_DIR/shard_sharded.txt"; then
+    echo "shard: --shards 2 output diverged from the serial engine" >&2
+    return 1
+  fi
+}
+
 # single-bench fast path: build, run it at smoke scale, validate its JSON
 single_bench() {
   rm -f BENCH_*.json
@@ -249,8 +275,8 @@ run_step test cargo test -q
 
 # `star analyze`: the dependency-free determinism/safety lint over src/
 # (R1 hash-collections, R2 wall-clock, R3 unsafe, R4 unwrap, R5 event
-# coverage, R6 trace-event coverage). Exits nonzero on any finding, so
-# the tree stays clean.
+# coverage, R6 trace-event coverage, R7 shared-mutable statics). Exits
+# nonzero on any finding, so the tree stays clean.
 if [ "$ANALYZE" = "1" ]; then
   run_step analyze ./target/release/star analyze src
 fi
@@ -273,6 +299,7 @@ if [ "$SMOKE" = "1" ]; then
   run_step smoke smoke_gate
   mkdir -p "$SMOKE_LOG_DIR"
   run_step obs obs_gate
+  run_step shard shard_gate
 fi
 
 print_summary

@@ -12,6 +12,11 @@
 //!   ([`StateMode::RebuildPerDecision`]), reproducing the
 //!   pre-incremental cost: O(instances × requests) per decision.
 //!
+//! A second sweep drives the sharded event core (`[sim] shards`) at
+//! 1/2/4/8 shards on the largest fleet (1M requests / 1024 instances at
+//! full scale) and reports serial-vs-sharded µs/request; completions must
+//! agree across shard counts, so the sweep doubles as a determinism check.
+//!
 //! Emits `BENCH_sim_core.json` (path override: `STAR_BENCH_OUT`) with
 //! wall-clock per simulated request and the speedup per cluster size.
 //! `STAR_BENCH_FAST=1` shrinks the run for smoke testing;
@@ -60,6 +65,10 @@ impl Measure {
 }
 
 fn run_one(size: usize, n_requests: usize, mode: StateMode) -> Measure {
+    run_sharded(size, n_requests, mode, 1)
+}
+
+fn run_sharded(size: usize, n_requests: usize, mode: StateMode, shards: usize) -> Measure {
     // fig13 shape: KV memory is the binding resource on the calibrated
     // profile; 0.5 rps per 8 instances reaches the near-capacity dynamic
     // equilibrium (see benches/fig13_scaling.rs)
@@ -74,6 +83,7 @@ fn run_one(size: usize, n_requests: usize, mode: StateMode) -> Measure {
     exp.cluster.max_batch = 64;
     exp.predictor = "oracle".to_string();
     exp.rescheduler.enabled = true;
+    exp.shards = shards;
     let trace = TraceGen::new(Dataset::ShareGpt, rps).generate(n_requests, 53);
     let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
     let params = SimParams {
@@ -137,6 +147,47 @@ fn main() {
         rows.push((size, inc, base, speedup));
     }
 
+    // shard sweep: the sharded event core at 1/2/4/8 shards on the largest
+    // fleet, serial (shards=1) as the baseline. Completions must agree
+    // across shard counts — the sweep doubles as a determinism check.
+    let (sweep_size, sweep_requests, shard_counts): (usize, usize, &[usize]) = if smoke() {
+        (8, 2_000, &[1, 2])
+    } else if fast {
+        (64, 20_000, &[1, 2, 4, 8])
+    } else {
+        (1024, 1_000_000, &[1, 2, 4, 8])
+    };
+    let mut sweep = Vec::new();
+    for &shards in shard_counts {
+        println!(
+            "[bench_sim_core] shard sweep: {sweep_size} instances, \
+             {sweep_requests} requests, {shards} shard(s)..."
+        );
+        let m = run_sharded(sweep_size, sweep_requests, StateMode::Incremental, shards);
+        println!(
+            "[bench_sim_core] shards {shards}: {:.3} us/req ({:.2}s wall, {} completed)",
+            m.us_per_request, m.wall_s, m.completed
+        );
+        sweep.push((shards, m));
+    }
+    let serial_us = sweep[0].1.us_per_request;
+    for (shards, m) in &sweep {
+        assert_eq!(
+            (m.completed, m.failed, m.migrations, m.oom_events),
+            (
+                sweep[0].1.completed,
+                sweep[0].1.failed,
+                sweep[0].1.migrations,
+                sweep[0].1.oom_events
+            ),
+            "shards={shards} must replay the serial trajectory"
+        );
+        println!(
+            "[bench_sim_core] shards {shards}: speedup vs serial {:.2}x",
+            serial_us / m.us_per_request.max(1e-9)
+        );
+    }
+
     let mut results = String::from("[\n");
     for (i, (size, inc, base, speedup)) in rows.iter().enumerate() {
         let _ = write!(
@@ -162,6 +213,21 @@ fn main() {
          \"dispatch\": \"current_load\", \"reschedule\": \"star\", \"seed\": 53}",
     );
     json.field_raw("results", &results);
+
+    let mut sweep_json = format!(
+        "{{\"instances\": {sweep_size}, \"requests\": {sweep_requests}, \"rows\": [\n"
+    );
+    for (i, (shards, m)) in sweep.iter().enumerate() {
+        let _ = write!(
+            sweep_json,
+            "    {{\"shards\": {shards}, \"measure\": {}, \"speedup_vs_serial\": {:.3}}}",
+            m.json(),
+            serial_us / m.us_per_request.max(1e-9)
+        );
+        sweep_json.push_str(if i + 1 < sweep.len() { ",\n" } else { "\n" });
+    }
+    sweep_json.push_str("  ]}");
+    json.field_raw("shard_sweep", &sweep_json);
     // back-compat: STAR_BENCH_OUT overrides the full output path
     match std::env::var("STAR_BENCH_OUT") {
         Ok(out) => {

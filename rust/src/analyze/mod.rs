@@ -26,6 +26,13 @@
 //!   [`crate::metrics::TraceEvent`] variant must be handled by the span
 //!   assembler in `obs/spans.rs`, so a newly recorded trace event cannot
 //!   silently vanish from `star trace` timelines.
+//! * **R7** `no-shared-mutable-static` — no `static mut`, no
+//!   `lazy_static!`/`thread_local!`, and no statics typed
+//!   `OnceLock`/`Mutex`/`RefCell`/`Atomic*`-style in `sim/` +
+//!   `coordinator/`: the sharded simulation core must keep all mutable
+//!   state inside the per-run `Simulator`, or a shard could observe
+//!   another run's (or another shard's) writes and break deterministic
+//!   replay.
 //!
 //! Findings are one line each (`path:line: Rn rule-name: message | snippet`),
 //! and the CLI exits nonzero when any exist. Intentional exceptions carry a
@@ -112,6 +119,14 @@ pub const RULES: &[RuleInfo] = &[
         name: "trace-event-coverage",
         summary: "every TraceEvent variant recorded by metrics/recorder.rs is \
                   handled by the obs/spans.rs span assembler",
+    },
+    RuleInfo {
+        id: "R7",
+        name: "no-shared-mutable-static",
+        summary: "no `static mut`, lazy_static!/thread_local!, or statics typed \
+                  OnceLock/Mutex/RefCell/Atomic* in sim/ + coordinator/ (all \
+                  mutable state lives in the per-run Simulator; shared globals \
+                  would leak across shards and runs)",
     },
 ];
 
@@ -379,6 +394,7 @@ pub fn analyze_tree(root: &Path, rule_ids: &[&str]) -> Result<Vec<Finding>> {
             "R4" => rules::check_bare_unwrap(&files, &mut findings),
             "R5" => rules::check_event_coverage(&files, &mut findings),
             "R6" => rules::check_trace_event_coverage(&files, &mut findings),
+            "R7" => rules::check_shared_mutable_static(&files, &mut findings),
             other => {
                 let known: Vec<&str> = RULES.iter().map(|r| r.id).collect();
                 return Err(Error::Cli(format!(

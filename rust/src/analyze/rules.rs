@@ -294,6 +294,93 @@ pub fn check_trace_event_coverage(files: &[SourceFile], out: &mut Vec<Finding>) 
     }
 }
 
+/// Interior-mutability wrappers that turn a `static` into a shared
+/// mutable global (the `Atomic*` family is matched by prefix).
+const SHARED_MUTABLE_TYPES: &[&str] = &[
+    "OnceLock", "OnceCell", "LazyLock", "LazyCell", "Mutex", "RwLock", "RefCell", "Cell",
+    "UnsafeCell",
+];
+
+/// R7: shared mutable globals in the sharded simulation core (`sim/` +
+/// `coordinator/`). Three shapes are banned in non-test code: `static
+/// mut` items, `lazy_static!`/`thread_local!` globals, and `static`
+/// items whose type names an interior-mutability wrapper
+/// (`OnceLock`, `Mutex`, `RefCell`, `Atomic*`, …). All mutable state
+/// must live inside the per-run `Simulator`/`ClusterState`, or one
+/// shard (or one run) could observe another's writes and break
+/// deterministic replay. `&'static str` and friends never match — the
+/// lexer emits lifetimes as their own token kind, so an `Ident` reading
+/// "static" is always the item keyword.
+pub fn check_shared_mutable_static(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let r = rule("R7");
+    for f in files {
+        if !in_dirs(f, &["sim/", "coordinator/"]) {
+            continue;
+        }
+        let toks = &f.toks;
+        for (i, (t, &in_test)) in toks.iter().zip(&f.in_test).enumerate() {
+            if in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            match t.text.as_str() {
+                "lazy_static" | "thread_local" => {
+                    f.push_finding(
+                        out,
+                        r,
+                        t.line,
+                        format!(
+                            "`{}!` global in the sharded core (keep mutable state \
+                             inside the per-run Simulator)",
+                            t.text
+                        ),
+                    );
+                }
+                "static" => {
+                    if toks.get(i + 1).is_some_and(|a| a.is_ident("mut")) {
+                        f.push_finding(
+                            out,
+                            r,
+                            t.line,
+                            "`static mut` in the sharded core (unsynchronized shared \
+                             mutable state breaks deterministic replay)"
+                                .into(),
+                        );
+                        continue;
+                    }
+                    // scan the item's type tokens, stopping at the
+                    // initializer (`=`), the terminator (`;`), or a body
+                    // brace — anything past those is not the static's type
+                    let mut j = i + 1;
+                    while let Some(a) = toks.get(j) {
+                        if a.is_punct('=') || a.is_punct(';') || a.is_punct('{') {
+                            break;
+                        }
+                        if a.kind == TokKind::Ident
+                            && (SHARED_MUTABLE_TYPES.contains(&a.text.as_str())
+                                || a.text.starts_with("Atomic"))
+                        {
+                            f.push_finding(
+                                out,
+                                r,
+                                t.line,
+                                format!(
+                                    "static of interior-mutable type `{}` (a shared \
+                                     mutable global; keep state inside the per-run \
+                                     Simulator)",
+                                    a.text
+                                ),
+                            );
+                            break;
+                        }
+                        j += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
 /// Extract `(variant, line)` pairs from `enum <name> { … }`. Variants are
 /// the identifiers at brace depth 1 that open a field list or end the arm
 /// (`Name {…}`, `Name(…)`, `Name,`, `Name }`); identifiers inside variant
@@ -521,6 +608,44 @@ mod tests {
         // is not a violation
         let lone = file("metrics/recorder.rs", "pub enum TraceEvent { Tick }\n");
         check_trace_event_coverage(&[lone], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn r7_flags_the_three_global_shapes_and_scopes_to_core_dirs() {
+        let bad = file(
+            "sim/shard_state.rs",
+            "static mut COUNTER: u64 = 0;\n\
+             static CACHE: OnceLock<Vec<u64>> = OnceLock::new();\n\
+             static HITS: std::sync::atomic::AtomicU64 = AtomicU64::new(0);\n\
+             lazy_static! { static ref TABLE: Vec<u64> = Vec::new(); }\n",
+        );
+        let elsewhere = file("runtime/meta.rs", "static mut COUNTER: u64 = 0;\n");
+        let mut out = Vec::new();
+        check_shared_mutable_static(&[bad, elsewhere], &mut out);
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert!(out.iter().all(|f| f.file == "sim/shard_state.rs"));
+        assert!(out.iter().any(|f| f.message.contains("static mut")));
+        assert!(out.iter().any(|f| f.message.contains("OnceLock")));
+        assert!(out
+            .iter()
+            .any(|f| f.message.contains("Atomic") || f.message.contains("AtomicU64")));
+        assert!(out.iter().any(|f| f.message.contains("lazy_static")));
+    }
+
+    #[test]
+    fn r7_ignores_immutable_statics_lifetimes_and_tests() {
+        let f = file(
+            "coordinator/ok.rs",
+            "static NAMES: &[&'static str] = &[\"a\"];\n\
+             fn f(s: &'static str) -> &'static str { s }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 static mut SCRATCH: u64 = 0;\n\
+             }\n",
+        );
+        let mut out = Vec::new();
+        check_shared_mutable_static(&[f], &mut out);
         assert!(out.is_empty(), "{out:?}");
     }
 

@@ -387,6 +387,13 @@ pub struct ExperimentConfig {
     /// Heterogeneous decode-fleet shape (`[fleet]` table). Takes
     /// precedence over a fleet carried by a named scenario's trace.
     pub fleet: Option<FleetSpec>,
+    /// Simulation event-loop shards (`[sim] shards`, CLI `--shards`):
+    /// the cluster is partitioned into `shards` instance groups, each
+    /// with its own event queue, merged deterministically at every pop
+    /// (see `sim::shard`). Any value yields the same trajectory as
+    /// `1` (the serial default) — the knob trades queue sizes for merge
+    /// width at scale.
+    pub shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -410,6 +417,7 @@ impl Default for ExperimentConfig {
             scenario: None,
             faults: None,
             fleet: None,
+            shards: 1,
         }
     }
 }
@@ -538,6 +546,13 @@ impl ExperimentConfig {
         };
         let faults = faults_from_config(cfg)?;
         let fleet = fleet_from_config(cfg)?;
+        // shard count is range-checked as i64 BEFORE the usize cast —
+        // same rationale as the elastic counts: a negative value would
+        // wrap to an absurd shard count instead of erroring
+        let shards = cfg.i64_or("sim.shards", ed.shards as i64);
+        if shards < 1 {
+            return Err(Error::config("sim.shards must be >= 1"));
+        }
         Ok(ExperimentConfig {
             cluster,
             rescheduler,
@@ -560,6 +575,7 @@ impl ExperimentConfig {
             scenario,
             faults,
             fleet,
+            shards: shards as usize,
         })
     }
 
@@ -601,6 +617,9 @@ impl ExperimentConfig {
         }
         if self.rescheduler.default_remaining <= 0.0 {
             return Err(Error::config("default_remaining must be > 0"));
+        }
+        if self.shards == 0 {
+            return Err(Error::config("sim.shards must be >= 1"));
         }
         if let Some(spec) = &self.scenario {
             spec.validate()?;

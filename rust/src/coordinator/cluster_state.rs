@@ -674,6 +674,97 @@ impl ClusterState {
         }
         None
     }
+
+    // -- shard-sliced views (sim::shard epoch merge) --------------------
+
+    /// Aggregate the instance group `{ i : i % n_shards == shard }` —
+    /// one shard's slice of the decode fleet, as the epoch barrier sees
+    /// it. Instances are visited in ascending id order, so the float
+    /// sums are deterministic.
+    pub fn shard_aggregate(&self, shard: usize, n_shards: usize) -> ShardAggregate {
+        debug_assert!(n_shards >= 1 && shard < n_shards);
+        let mut agg = ShardAggregate {
+            shard,
+            ..Default::default()
+        };
+        for s in self.instances.iter().skip(shard).step_by(n_shards) {
+            agg.instances += 1;
+            match s.lifecycle {
+                Lifecycle::Active => agg.active += 1,
+                Lifecycle::Draining => agg.draining += 1,
+                _ => {}
+            }
+            agg.batch += s.batch_size();
+            agg.token_load += s.token_load();
+            agg.free_tokens += s.free_tokens();
+            agg.cached_tokens += s.cached_tokens();
+            agg.predicted_work += s.predicted_work();
+        }
+        agg
+    }
+
+    /// Per-shard aggregates merged in fixed shard order (shard 0 first)
+    /// — the deterministic epoch merge the sharded simulator runs
+    /// before every `ControlLoop` decision. The same partition with the
+    /// same state always produces the same rollup, independent of event
+    /// arrival order inside the shards.
+    pub fn shard_rollup(&self, n_shards: usize) -> ShardRollup {
+        let shards: Vec<ShardAggregate> = (0..n_shards)
+            .map(|s| self.shard_aggregate(s, n_shards))
+            .collect();
+        let mut total = ShardAggregate {
+            shard: usize::MAX,
+            ..Default::default()
+        };
+        for a in &shards {
+            total.instances += a.instances;
+            total.active += a.active;
+            total.draining += a.draining;
+            total.batch += a.batch;
+            total.token_load += a.token_load;
+            total.free_tokens += a.free_tokens;
+            total.cached_tokens += a.cached_tokens;
+            total.predicted_work += a.predicted_work;
+        }
+        ShardRollup { shards, total }
+    }
+}
+
+/// One shard's aggregate of the decode fleet (the instance group
+/// `id % n_shards == shard`): the numbers the coordinator needs from a
+/// shard at an epoch barrier, without touching per-request state.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardAggregate {
+    /// Shard id (`usize::MAX` on the merged total, which has no single
+    /// home shard).
+    pub shard: usize,
+    /// Instances in this shard's slice (all lifecycles).
+    pub instances: usize,
+    /// `Active` instances.
+    pub active: usize,
+    /// `Draining` instances.
+    pub draining: usize,
+    /// Σ batch size over the slice.
+    pub batch: usize,
+    /// Σ active KV tokens over the slice.
+    pub token_load: u64,
+    /// Σ free tokens (capacity − effective use) over the slice.
+    pub free_tokens: u64,
+    /// Σ idle prefix-cache tokens over the slice.
+    pub cached_tokens: u64,
+    /// Σ predicted work (tokens + predicted remaining mean).
+    pub predicted_work: f64,
+}
+
+/// Deterministic merge of all shard aggregates: per-shard rows in fixed
+/// shard order plus their fold. Built by [`ClusterState::shard_rollup`]
+/// at every scheduling epoch of the sharded simulator.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardRollup {
+    /// One aggregate per shard, indexed by shard id.
+    pub shards: Vec<ShardAggregate>,
+    /// Fold of `shards` in ascending shard order.
+    pub total: ShardAggregate,
 }
 
 // ---------------------------------------------------------------------
@@ -1009,6 +1100,50 @@ mod tests {
         assert!(st.consistency_diff(&bad).is_some());
         st.sub_cached(0, 4_000);
         assert_eq!(st.stats(0).effective_used(), 100);
+    }
+
+    #[test]
+    fn shard_aggregates_partition_the_fleet() {
+        let mut st = ClusterState::new(7, 10_000, 1.0, 0.02, 1e-6);
+        for id in 0..7u64 {
+            st.admit(id as usize, id, 100 + id, pr(10.0 * (id + 1) as f64));
+        }
+        st.set_lifecycle(3, Lifecycle::Draining);
+        st.set_lifecycle(5, Lifecycle::Failed);
+        st.add_cached(2, 1_000);
+        for n in [1usize, 2, 3, 4, 7] {
+            let roll = st.shard_rollup(n);
+            assert_eq!(roll.shards.len(), n);
+            // every instance lands in exactly one shard slice
+            assert_eq!(roll.total.instances, 7, "n={n}");
+            assert_eq!(roll.total.active, 5, "n={n}");
+            assert_eq!(roll.total.draining, 1, "n={n}");
+            assert_eq!(roll.total.batch, 7, "n={n}");
+            let direct_load: u64 = (0..7).map(|i| st.stats(i).token_load()).sum();
+            let direct_free: u64 = (0..7).map(|i| st.stats(i).free_tokens()).sum();
+            let direct_work: f64 = (0..7).map(|i| st.stats(i).predicted_work()).sum();
+            assert_eq!(roll.total.token_load, direct_load, "n={n}");
+            assert_eq!(roll.total.free_tokens, direct_free, "n={n}");
+            assert_eq!(roll.total.cached_tokens, 1_000, "n={n}");
+            assert!((roll.total.predicted_work - direct_work).abs() < 1e-9, "n={n}");
+            for (s, a) in roll.shards.iter().enumerate() {
+                assert_eq!(a.shard, s);
+                let ids: Vec<usize> = (s..7).step_by(n).collect();
+                assert_eq!(a.instances, ids.len());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_rollup_is_reproducible() {
+        let mut st = state();
+        st.admit(0, 1, 100, pr(50.0));
+        st.admit(1, 2, 300, None);
+        let a = st.shard_rollup(2);
+        let b = st.shard_rollup(2);
+        assert_eq!(a, b, "same state + partition must merge identically");
+        assert_eq!(a.shards[0].shard, 0);
+        assert_eq!(a.total.shard, usize::MAX);
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct ControlLoop {
     /// policy name and work proxy. Disabled (the default) every record
     /// call is a no-op, so the hot path pays one branch.
     obs: AttributionLog,
+    /// Scheduling epochs observed: incremented by the driver at every
+    /// epoch barrier (scheduler / scale tick merge in the sharded
+    /// simulator) right before this loop decides. Diagnostic only — it
+    /// never feeds a decision, so counting epochs is trajectory-neutral.
+    epochs: u64,
 }
 
 impl ControlLoop {
@@ -69,7 +74,20 @@ impl ControlLoop {
             scaling,
             guard: ElasticGuard::new(elastic),
             obs: AttributionLog::default(),
+            epochs: 0,
         }
+    }
+
+    /// Mark one scheduling epoch: the driver calls this at every epoch
+    /// barrier, after shard aggregates are merged and before any
+    /// decision of this tick runs.
+    pub fn note_epoch(&mut self) {
+        self.epochs += 1;
+    }
+
+    /// Scheduling epochs observed so far (shard-merge barriers crossed).
+    pub fn epoch_merges(&self) -> u64 {
+        self.epochs
     }
 
     /// Build all three policies by name from the experiment config — the

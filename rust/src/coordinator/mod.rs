@@ -25,6 +25,7 @@ pub mod rescheduler;
 
 pub use cluster_state::{
     admission_watermark, ClusterState, ClusterView, HardwareProfile, InstanceRef, InstanceStats,
+    ShardAggregate, ShardRollup,
 };
 pub use control_loop::ControlLoop;
 pub use elastic::{

@@ -112,12 +112,17 @@ fn spec() -> Spec {
             ),
             ("interval", "s", "rescheduler interval seconds"),
             ("seed", "n", "PRNG seed"),
+            (
+                "shards",
+                "n",
+                "sim event-loop shards (default 1; any n is trajectory-identical)",
+            ),
             ("duration", "s", "trace duration (simulate)"),
             ("trace-out", "path", "write event trace TSV"),
             (
                 "rules",
                 "ids",
-                "analyze: comma-separated rule subset (R1..R6 or slugs)",
+                "analyze: comma-separated rule subset (R1..R7 or slugs)",
             ),
             (
                 "format",
@@ -138,6 +143,11 @@ fn spec() -> Spec {
             (
                 "fail-on-lost",
                 "simulate: exit nonzero if failure injection lost any request",
+            ),
+            (
+                "validate-state",
+                "simulate/trace: assert incremental state (and the shard \
+                 rollup) against a from-scratch rebuild after every event",
             ),
         ],
     }
@@ -178,6 +188,7 @@ fn experiment_of(args: &Args) -> Result<ExperimentConfig, star::Error> {
     exp.cluster.kv_capacity_tokens =
         args.opt_u64("kv-capacity", exp.cluster.kv_capacity_tokens)?;
     exp.cluster.seed = args.opt_u64("seed", exp.cluster.seed)?;
+    exp.shards = args.opt_usize("shards", exp.shards)?;
     exp.rescheduler.interval_s = args.opt_f64("interval", exp.rescheduler.interval_s)?;
     let (resched, pred) = policy_of(args)?;
     exp.rescheduler.enabled = resched;
@@ -324,6 +335,7 @@ fn run_simulate(args: &Args) -> Result<(), star::Error> {
     let faults_on = exp.faults.is_some() || strace.faults.is_some();
     let params = SimParams {
         exp,
+        validate_state: args.flag("validate-state"),
         ..Default::default()
     };
     let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())?.run();
@@ -551,6 +563,7 @@ fn run_trace(args: &Args) -> Result<(), star::Error> {
     };
     let params = SimParams {
         exp,
+        validate_state: args.flag("validate-state"),
         ..Default::default()
     };
     let report = Simulator::with_scenario(params, strace, &PolicyRegistry::with_builtins())?.run();

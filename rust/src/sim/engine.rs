@@ -12,14 +12,15 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
-use super::events::{Event, EventQueue};
+use super::events::Event;
 use super::report::{ReliabilityReport, SimReport};
+use super::shard::{ShardLayout, ShardedQueue};
 use super::{ReqState, SimRequest};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
     admission_watermark, ClusterSnapshot, ClusterState, ControlLoop, HardwareProfile,
     IncomingRequest, InstanceView, Lifecycle, PolicyRegistry, PoolRole, PoolStats, RateMeter,
-    RequestView, ScaleRecord, ScalingAction,
+    RequestView, ScaleRecord, ScalingAction, ShardRollup,
 };
 use crate::costmodel::{DecodeCostModel, MigrationCostModel, PrefillCostModel};
 use crate::kvcache::{CacheContext, CachePolicyRegistry, KvCacheManager, PrefixCache};
@@ -124,7 +125,11 @@ struct DecodeSim {
 pub struct Simulator {
     pub params: SimParams,
     now: Time,
-    queue: EventQueue,
+    /// Sharded event queue: per-shard heaps merged deterministically on
+    /// pop (DESIGN.md §17). With `[sim] shards = 1` this degenerates to
+    /// the classic single serial queue; for any shard count the pop
+    /// order — and hence the whole trajectory — is identical.
+    queue: ShardedQueue,
     requests: Vec<SimRequest>,
     prefill: Vec<PrefillSim>,
     decode: Vec<DecodeSim>,
@@ -296,7 +301,9 @@ impl Simulator {
         let prefix_cache =
             PrefixCache::new(cache_policy, exp.kvcache.budget_tokens, exp.kvcache.ttl_s);
 
-        let mut queue = EventQueue::new();
+        // `shards` is validated (>= 1) by ExperimentConfig::validate();
+        // clamp anyway so hand-built configs cannot panic the layout.
+        let mut queue = ShardedQueue::new(ShardLayout::new(exp.shards.max(1)));
         let mut requests = Vec::with_capacity(trace.requests.len());
         for r in &trace.requests {
             debug_assert_eq!(r.id as usize, requests.len(), "trace ids must be dense");
@@ -1400,7 +1407,54 @@ impl Simulator {
         }
     }
 
+    /// Epoch barrier (DESIGN.md §17): merge the per-shard
+    /// [`ClusterState`] aggregates in fixed shard order before this
+    /// tick's `ControlLoop` decisions, and stamp the loop's epoch
+    /// counter. Under `validate_state` the merged totals are asserted
+    /// equal to a direct global scan — the shard-sliced view may never
+    /// drift from the authoritative state.
+    fn epoch_barrier(&mut self) -> ShardRollup {
+        let roll = self.state.shard_rollup(self.queue.layout().n_shards());
+        if self.params.validate_state {
+            let (mut active, mut draining) = (0usize, 0usize);
+            for d in &self.decode {
+                match d.lifecycle {
+                    Lifecycle::Active => active += 1,
+                    Lifecycle::Draining => draining += 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(
+                roll.total.instances,
+                self.decode.len(),
+                "shard slices must partition the decode fleet at t={:.6}",
+                self.now
+            );
+            assert_eq!(
+                (roll.total.active, roll.total.draining),
+                (active, draining),
+                "shard-rollup lifecycle counts drifted from the engine at t={:.6}",
+                self.now
+            );
+            let load: u64 = (0..self.state.n_instances())
+                .map(|i| self.state.stats(i).token_load())
+                .sum();
+            assert_eq!(
+                roll.total.token_load, load,
+                "shard-rollup token load drifted from ClusterState at t={:.6}",
+                self.now
+            );
+        }
+        self.control.note_epoch();
+        roll
+    }
+
     fn on_scheduler_tick(&mut self) {
+        // epoch barrier first: the merged shard aggregates (and the
+        // validate_state cross-check inside) precede every decision of
+        // this tick
+        let _merged = self.epoch_barrier();
+
         // TTL housekeeping first, so this tick's decisions read cached
         // pressure net of anything that just lapsed
         if self.prefix_cache.enabled() {
@@ -1556,8 +1610,12 @@ impl Simulator {
     // ------------------------------------------------------------------
     // elastic pool (coordinator::elastic executed on sim events)
 
-    /// Pool composition + backlog + measured rates for the scaling policy.
-    fn pool_stats(&self) -> PoolStats {
+    /// Pool composition + backlog + measured rates for the scaling
+    /// policy. Decode-side counts come from the epoch barrier's merged
+    /// shard rollup (the `ClusterState` lifecycle mirror), not from a
+    /// direct fleet scan — the sharded coordinator decides from merged
+    /// aggregates, and `validate_state` proves the two agree.
+    fn pool_stats(&self, merged: &ShardRollup) -> PoolStats {
         let mut ps = PoolStats {
             now: self.now,
             prefill_provisioning: self.prefill_provisioning,
@@ -1577,13 +1635,8 @@ impl Simulator {
                 _ => {}
             }
         }
-        for d in &self.decode {
-            match d.lifecycle {
-                Lifecycle::Active => ps.decode_active += 1,
-                Lifecycle::Draining => ps.decode_draining += 1,
-                _ => {}
-            }
-        }
+        ps.decode_active = merged.total.active;
+        ps.decode_draining = merged.total.draining;
         ps
     }
 
@@ -1609,7 +1662,8 @@ impl Simulator {
             }
         }
 
-        let pool = self.pool_stats();
+        let merged = self.epoch_barrier();
+        let pool = self.pool_stats(&merged);
         self.pool_timeline.push(PoolSample {
             t: self.now,
             prefill_active: pool.prefill_active,
@@ -1989,12 +2043,16 @@ impl Simulator {
         // headroom (static configs have max_total == 0 and ride out the
         // crash on the surviving instances)
         let max_total = self.control.elastic_config().max_total;
-        if max_total > 0 && self.pool_stats().total_instances() < max_total {
-            let action = ScalingAction::Provision {
-                role: PoolRole::Decode,
-            };
-            self.scale_log.push(ScaleRecord { t: self.now, action });
-            self.execute_action(action);
+        if max_total > 0 {
+            // fleet-wide head count, so merge the shard aggregates first
+            let merged = self.epoch_barrier();
+            if self.pool_stats(&merged).total_instances() < max_total {
+                let action = ScalingAction::Provision {
+                    role: PoolRole::Decode,
+                };
+                self.scale_log.push(ScaleRecord { t: self.now, action });
+                self.execute_action(action);
+            }
         }
 
         if down_s > 0.0 {

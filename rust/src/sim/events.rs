@@ -65,6 +65,30 @@ pub enum Event {
     InstanceRecovered { instance: InstanceId },
 }
 
+/// Explicit total-order tie-break key for events scheduled at the same
+/// timestamp: `(class rank, primary id, secondary id)`. Before this key
+/// existed, same-time ties were broken only by push order — fine inside
+/// one queue, but nondeterministic the moment events are split across
+/// shard queues and merged back (the merge would depend on the
+/// partition). With the key, the pop order of any set of events is a
+/// pure function of `(timestamp, key, global seq)` and therefore
+/// invariant under sharding.
+///
+/// Class ranks follow the lifecycle: arrivals before prefill
+/// completions before decode steps before migrations before control
+/// ticks — so at a tied timestamp, work that *feeds* a decision is
+/// applied before the decision fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct OrderKey {
+    /// Event-class rank (variant order of the lifecycle, see
+    /// [`Event::order_key`]).
+    pub class: u8,
+    /// Primary discriminator: request / instance / session id.
+    pub a: u64,
+    /// Secondary discriminator: instance / epoch / turn.
+    pub b: u64,
+}
+
 impl Event {
     /// Variant name, as listed in the engine's `VALIDATED_EVENTS`
     /// coverage const (the invariant checker asserts membership before
@@ -85,30 +109,58 @@ impl Event {
             Event::InstanceRecovered { .. } => "InstanceRecovered",
         }
     }
+
+    /// Total-order tie-break key for same-timestamp scheduling (see
+    /// [`OrderKey`]). Every variant maps to a distinct class rank; the
+    /// id fields make the key unique for any two events the engine can
+    /// actually schedule at the same instant (two `DecodeStep`s for the
+    /// same `(instance, epoch)` never coexist, etc.).
+    pub fn order_key(&self) -> OrderKey {
+        let (class, a, b) = match *self {
+            Event::Arrival { request } => (0, request, 0),
+            Event::PrefillDone { prefill, request } => (1, request, prefill as u64),
+            Event::DecodeStep { instance, epoch } => (2, instance as u64, epoch),
+            Event::MigrationDone { request, .. } => (3, request, 0),
+            Event::SchedulerTick => (4, 0, 0),
+            Event::SessionFollowUp { session, turn } => (5, session as u64, turn as u64),
+            Event::ScaleTick => (6, 0, 0),
+            Event::InstanceReady { role } => (7, role as u64, 0),
+            Event::DrainComplete { instance } => (8, instance as u64, 0),
+            Event::PrefixTransferDone { request, .. } => (9, request, 0),
+            Event::InstanceFailure { instance, .. } => (10, instance as u64, 0),
+            Event::InstanceRecovered { instance } => (11, instance as u64, 0),
+        };
+        OrderKey { class, a, b }
+    }
 }
 
 #[derive(Clone, Debug)]
 struct Scheduled {
     at: Time,
+    key: OrderKey,
     seq: u64,
     event: Event,
 }
 
 impl PartialEq for Scheduled {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.at == other.at && self.key == other.key && self.seq == other.seq
     }
 }
 impl Eq for Scheduled {}
 
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first; ties broken
-        // by insertion order for determinism.
+        // BinaryHeap is a max-heap: invert for earliest-first. Ties are a
+        // total order on (time, event key, seq): the explicit key makes
+        // same-time ordering independent of which queue an event sits in
+        // (required by the sharded merge); seq is the final push-order
+        // tie-break for the pathological case of two identical keys.
         other
             .at
             .partial_cmp(&self.at)
             .unwrap_or(Ordering::Equal)
+            .then(other.key.cmp(&self.key))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -131,17 +183,35 @@ impl EventQueue {
     }
 
     pub fn push(&mut self, at: Time, event: Event) {
-        debug_assert!(at.is_finite(), "event at non-finite time");
         self.seq += 1;
+        let seq = self.seq;
+        self.push_seq(at, seq, event);
+    }
+
+    /// Push with a caller-assigned sequence number. The sharded queue
+    /// owns one *global* counter across all shard queues, so the final
+    /// `(at, key, seq)` tie-break is identical no matter how events are
+    /// partitioned; plain [`Self::push`] keeps a queue-local counter for
+    /// standalone use.
+    pub fn push_seq(&mut self, at: Time, seq: u64, event: Event) {
+        debug_assert!(at.is_finite(), "event at non-finite time");
         self.heap.push(Scheduled {
             at,
-            seq: self.seq,
+            key: event.order_key(),
+            seq,
             event,
         });
     }
 
     pub fn pop(&mut self) -> Option<(Time, Event)> {
         self.heap.pop().map(|s| (s.at, s.event))
+    }
+
+    /// Ordering triple of the head event without removing it — the
+    /// sharded queue's merge tournament compares heads across shard
+    /// queues with exactly the heap's own comparison key.
+    pub fn peek_order(&self) -> Option<(Time, OrderKey, u64)> {
+        self.heap.peek().map(|s| (s.at, s.key, s.seq))
     }
 
     #[allow(dead_code)]
@@ -184,5 +254,111 @@ mod tests {
             Event::Arrival { request } => assert_eq!(request, 20),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn same_time_ties_pop_by_key_not_push_order() {
+        // Push in reverse lifecycle order at one timestamp; the explicit
+        // key must still pop arrivals before prefill completions before
+        // decode steps before the tick.
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::SchedulerTick);
+        q.push(
+            2.0,
+            Event::DecodeStep {
+                instance: 3,
+                epoch: 9,
+            },
+        );
+        q.push(
+            2.0,
+            Event::PrefillDone {
+                prefill: 0,
+                request: 7,
+            },
+        );
+        q.push(2.0, Event::Arrival { request: 5 });
+        let names: Vec<&str> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| e.name())
+            .collect();
+        assert_eq!(
+            names,
+            vec!["Arrival", "PrefillDone", "DecodeStep", "SchedulerTick"]
+        );
+    }
+
+    #[test]
+    fn order_keys_are_distinct_per_variant_and_sorted_by_id() {
+        let a = Event::Arrival { request: 1 }.order_key();
+        let b = Event::Arrival { request: 2 }.order_key();
+        assert!(a < b);
+        // Every variant gets its own class rank (names() coverage keeps
+        // this list in sync with the enum).
+        let classes = [
+            Event::Arrival { request: 0 }.order_key().class,
+            Event::PrefillDone {
+                prefill: 0,
+                request: 0,
+            }
+            .order_key()
+            .class,
+            Event::DecodeStep {
+                instance: 0,
+                epoch: 0,
+            }
+            .order_key()
+            .class,
+            Event::MigrationDone {
+                request: 0,
+                from: 0,
+                to: 1,
+                kv_tokens: 0,
+            }
+            .order_key()
+            .class,
+            Event::SchedulerTick.order_key().class,
+            Event::SessionFollowUp {
+                session: 0,
+                turn: 0,
+            }
+            .order_key()
+            .class,
+            Event::ScaleTick.order_key().class,
+            Event::InstanceReady {
+                role: crate::coordinator::PoolRole::Decode,
+            }
+            .order_key()
+            .class,
+            Event::DrainComplete { instance: 0 }.order_key().class,
+            Event::PrefixTransferDone {
+                request: 0,
+                from: 0,
+                to: 1,
+                tokens: 0,
+            }
+            .order_key()
+            .class,
+            Event::InstanceFailure {
+                instance: 0,
+                down_s: 1.0,
+            }
+            .order_key()
+            .class,
+            Event::InstanceRecovered { instance: 0 }.order_key().class,
+        ];
+        for (i, c) in classes.iter().enumerate() {
+            assert_eq!(*c as usize, i, "class ranks must be dense and ordered");
+        }
+    }
+
+    #[test]
+    fn peek_order_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::SchedulerTick);
+        q.push(1.0, Event::Arrival { request: 4 });
+        let (at, key, _) = q.peek_order().unwrap();
+        assert_eq!(at, 1.0);
+        assert_eq!(key.class, 0);
+        assert_eq!(q.pop().unwrap().0, 1.0);
     }
 }

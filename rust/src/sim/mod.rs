@@ -23,9 +23,11 @@
 mod engine;
 mod events;
 mod report;
+mod shard;
 
 pub use engine::{SimParams, Simulator, StateMode, VALIDATED_EVENTS};
 pub use report::{ClassReport, ReliabilityReport, SimReport};
+pub use shard::{ShardLayout, SHARD_STREAM_BASE};
 
 use crate::metrics::RequestLatency;
 use crate::predictor::{PredSample, Prediction};

@@ -1,0 +1,380 @@
+//! Sharded simulation core: per-shard event queues with a deterministic
+//! merge (DESIGN.md §17).
+//!
+//! The cluster's instances are partitioned into `n_shards` groups by
+//! `instance % n_shards`; instance-local events (decode steps, drains,
+//! faults, recoveries) live in that shard's [`EventQueue`], while
+//! cluster-scoped events (arrivals, control ticks, migrations, prefix
+//! transfers, session follow-ups, readiness) live in a coordinator
+//! queue. [`ShardedQueue::pop`] runs a merge tournament over the queue
+//! heads using exactly the per-heap comparison key
+//! `(time, OrderKey, global seq)`.
+//!
+//! Determinism contract: sequence numbers are assigned by one *global*
+//! counter at push time, so the total order `(at, key, seq)` of any
+//! event set is a pure function of the push history — not of the
+//! partition. Pop order (hence the whole trajectory: trace rows,
+//! completions, final report) is therefore bit-for-bit identical for
+//! every shard count, and `shards = 1` is exactly the serial engine.
+//! Cross-shard interactions need no special casing: a migration or
+//! fault re-queue pushed from shard A and consumed by shard B is just
+//! an event routed to B's queue, globally ordered like every other.
+
+use std::cmp::Ordering;
+
+use super::events::{Event, EventQueue, OrderKey};
+use crate::prng::Pcg64;
+use crate::{InstanceId, Time};
+
+/// PRNG stream-id base for per-shard streams: each shard draws from
+/// `Pcg64::new(run_seed, SHARD_STREAM_BASE + shard)`, statistically
+/// independent of the engine's global streams and of every other shard.
+pub const SHARD_STREAM_BASE: u64 = 0x5AD0;
+
+/// Static partition of the cluster into instance groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    n_shards: usize,
+}
+
+impl ShardLayout {
+    /// A layout with `n_shards >= 1` groups (callers validate the
+    /// config; a zero here is a programming error).
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "shard count must be >= 1");
+        Self { n_shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Home shard of an instance: fixed modulo partition, so the
+    /// mapping is stable across scale-ups and independent of event
+    /// history.
+    pub fn shard_of_instance(&self, instance: InstanceId) -> usize {
+        instance % self.n_shards
+    }
+
+    /// Route an event: `Some(shard)` for instance-local events,
+    /// `None` for cluster-scoped events handled by the coordinator
+    /// queue (arrivals and control ticks have no home instance yet;
+    /// migrations, prefix transfers and readiness change the partition
+    /// a request or instance belongs to, so they synchronize through
+    /// the coordinator as explicit inter-shard messages).
+    pub(super) fn shard_of_event(&self, event: &Event) -> Option<usize> {
+        match *event {
+            Event::DecodeStep { instance, .. }
+            | Event::DrainComplete { instance }
+            | Event::InstanceFailure { instance, .. }
+            | Event::InstanceRecovered { instance } => {
+                Some(self.shard_of_instance(instance))
+            }
+            Event::Arrival { .. }
+            | Event::PrefillDone { .. }
+            | Event::MigrationDone { .. }
+            | Event::SchedulerTick
+            | Event::SessionFollowUp { .. }
+            | Event::ScaleTick
+            | Event::InstanceReady { .. }
+            | Event::PrefixTransferDone { .. } => None,
+        }
+    }
+
+    /// Per-shard PRNG stream split off the run seed. Same `(seed,
+    /// shard)` always yields the same stream; distinct shards get
+    /// statistically independent streams (PCG stream selection).
+    pub fn shard_rng(&self, seed: u64, shard: usize) -> Pcg64 {
+        debug_assert!(shard < self.n_shards);
+        Pcg64::new(seed, SHARD_STREAM_BASE + shard as u64)
+    }
+}
+
+/// Compare two `(time, key, seq)` ordering triples with the same total
+/// order the per-queue heaps use (earliest first; NaN-free times are an
+/// engine invariant, enforced at push).
+fn cmp_order(x: &(Time, OrderKey, u64), y: &(Time, OrderKey, u64)) -> Ordering {
+    x.0.partial_cmp(&y.0)
+        .unwrap_or(Ordering::Equal)
+        .then(x.1.cmp(&y.1))
+        .then(x.2.cmp(&y.2))
+}
+
+/// `n_shards` per-shard [`EventQueue`]s plus a coordinator queue,
+/// merged on pop. Drop-in replacement for a single `EventQueue` in the
+/// engine: same `push`/`pop` surface, identical pop order for every
+/// shard count (see module docs for why).
+#[derive(Debug)]
+pub struct ShardedQueue {
+    layout: ShardLayout,
+    /// Per-shard queues, indexed by shard id (fixed merge scan order).
+    shards: Vec<EventQueue>,
+    /// Cluster-scoped events: arrivals, ticks, cross-shard messages.
+    coordinator: EventQueue,
+    /// Global push counter shared by all queues — the keystone of the
+    /// partition-invariance argument.
+    seq: u64,
+    len: usize,
+}
+
+impl ShardedQueue {
+    pub fn new(layout: ShardLayout) -> Self {
+        let shards = (0..layout.n_shards()).map(|_| EventQueue::new()).collect();
+        Self {
+            layout,
+            shards,
+            coordinator: EventQueue::new(),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn layout(&self) -> ShardLayout {
+        self.layout
+    }
+
+    /// Schedule `event` at `at`: assign the next global sequence
+    /// number, then route to the home shard's queue (or the
+    /// coordinator's for cluster-scoped events).
+    pub fn push(&mut self, at: Time, event: Event) {
+        self.seq += 1;
+        let seq = self.seq;
+        match self.layout.shard_of_event(&event) {
+            Some(s) => self.shards[s].push_seq(at, seq, event),
+            None => self.coordinator.push_seq(at, seq, event),
+        }
+        self.len += 1;
+    }
+
+    /// Pop the globally-earliest event: a merge tournament over the
+    /// coordinator head and each shard head in fixed shard order. The
+    /// winner is unique (global seq never repeats), so scan order only
+    /// fixes the comparison sequence, not the result.
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        let mut best: Option<((Time, OrderKey, u64), usize)> =
+            self.coordinator.peek_order().map(|k| (k, 0));
+        for (i, q) in self.shards.iter().enumerate() {
+            if let Some(k) = q.peek_order() {
+                let wins = match &best {
+                    None => true,
+                    Some((bk, _)) => cmp_order(&k, bk) == Ordering::Less,
+                };
+                if wins {
+                    best = Some((k, i + 1));
+                }
+            }
+        }
+        let (_, which) = best?;
+        self.len -= 1;
+        if which == 0 {
+            self.coordinator.pop()
+        } else {
+            self.shards[which - 1].pop()
+        }
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Events currently resident in shard `s`'s queue (bench/diagnostic
+    /// visibility into partition balance).
+    #[allow(dead_code)]
+    pub fn shard_len(&self, s: usize) -> usize {
+        self.shards[s].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A workload of events with pairwise-distinct `(at, key)` — the
+    /// regime where pop order must not depend on push order or on the
+    /// partition.
+    fn mixed_events() -> Vec<(Time, Event)> {
+        let mut evs = Vec::new();
+        for r in 0..6u64 {
+            evs.push((1.0, Event::Arrival { request: r }));
+        }
+        for i in 0..5usize {
+            evs.push((
+                1.0,
+                Event::DecodeStep {
+                    instance: i,
+                    epoch: 1,
+                },
+            ));
+            evs.push((
+                2.5,
+                Event::DecodeStep {
+                    instance: i,
+                    epoch: 2,
+                },
+            ));
+            evs.push((2.5, Event::DrainComplete { instance: i }));
+        }
+        evs.push((1.0, Event::SchedulerTick));
+        evs.push((2.5, Event::ScaleTick));
+        evs.push((
+            2.5,
+            Event::InstanceFailure {
+                instance: 2,
+                down_s: 5.0,
+            },
+        ));
+        evs.push((3.0, Event::InstanceRecovered { instance: 2 }));
+        evs.push((
+            1.5,
+            Event::MigrationDone {
+                request: 3,
+                from: 0,
+                to: 1,
+                kv_tokens: 64,
+            },
+        ));
+        evs.push((
+            1.5,
+            Event::SessionFollowUp {
+                session: 1,
+                turn: 2,
+            },
+        ));
+        evs
+    }
+
+    fn drain(q: &mut ShardedQueue) -> Vec<String> {
+        std::iter::from_fn(|| q.pop())
+            .map(|(at, e)| format!("{at:.3} {e:?}"))
+            .collect()
+    }
+
+    #[test]
+    fn shard_of_instance_is_modulo() {
+        let l = ShardLayout::new(4);
+        assert_eq!(l.shard_of_instance(0), 0);
+        assert_eq!(l.shard_of_instance(5), 1);
+        assert_eq!(l.shard_of_instance(7), 3);
+        assert_eq!(ShardLayout::new(1).shard_of_instance(7), 0);
+    }
+
+    #[test]
+    fn instance_local_events_route_to_home_shard() {
+        let l = ShardLayout::new(2);
+        assert_eq!(
+            l.shard_of_event(&Event::DecodeStep {
+                instance: 3,
+                epoch: 0
+            }),
+            Some(1)
+        );
+        assert_eq!(
+            l.shard_of_event(&Event::InstanceFailure {
+                instance: 4,
+                down_s: 1.0
+            }),
+            Some(0)
+        );
+        assert_eq!(l.shard_of_event(&Event::SchedulerTick), None);
+        assert_eq!(l.shard_of_event(&Event::Arrival { request: 9 }), None);
+    }
+
+    #[test]
+    fn pop_order_is_invariant_under_shard_count() {
+        let evs = mixed_events();
+        let mut orders = Vec::new();
+        for n in [1usize, 2, 3, 4, 8] {
+            let mut q = ShardedQueue::new(ShardLayout::new(n));
+            for (at, e) in evs.clone() {
+                q.push(at, e);
+            }
+            orders.push(drain(&mut q));
+        }
+        for o in &orders[1..] {
+            assert_eq!(o, &orders[0], "pop order must not depend on shard count");
+        }
+    }
+
+    #[test]
+    fn shuffled_insertion_pops_identically() {
+        // The satellite regression: same-timestamp ties with distinct
+        // keys must pop in key order no matter the push order. Shuffle
+        // the push sequence with seed-derived permutations and require
+        // identical drains across shuffles AND shard counts.
+        let base = mixed_events();
+        let mut reference: Option<Vec<String>> = None;
+        let layout = ShardLayout::new(4);
+        for trial in 0..6u64 {
+            let mut evs = base.clone();
+            let mut rng = layout.shard_rng(99, (trial % 4) as usize);
+            rng.shuffle(&mut evs);
+            for n in [1usize, 2, 4] {
+                let mut q = ShardedQueue::new(ShardLayout::new(n));
+                for (at, e) in evs.clone() {
+                    q.push(at, e);
+                }
+                let got = drain(&mut q);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => assert_eq!(
+                        &got, want,
+                        "shuffle {trial} x shards {n} reordered ties"
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_pop_matches_plain_event_queue() {
+        let evs = mixed_events();
+        let mut plain = EventQueue::new();
+        let mut sharded = ShardedQueue::new(ShardLayout::new(4));
+        for (at, e) in evs {
+            plain.push(at, e.clone());
+            sharded.push(at, e);
+        }
+        let want: Vec<String> = std::iter::from_fn(|| plain.pop())
+            .map(|(at, e)| format!("{at:.3} {e:?}"))
+            .collect();
+        assert_eq!(drain(&mut sharded), want);
+    }
+
+    #[test]
+    fn len_tracks_push_and_pop() {
+        let mut q = ShardedQueue::new(ShardLayout::new(2));
+        assert!(q.is_empty());
+        q.push(1.0, Event::SchedulerTick);
+        q.push(
+            1.0,
+            Event::DecodeStep {
+                instance: 1,
+                epoch: 0,
+            },
+        );
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.shard_len(0), 0);
+        assert_eq!(q.shard_len(1), 1);
+        let _ = q.pop();
+        let _ = q.pop();
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn shard_rngs_are_reproducible_and_distinct() {
+        let l = ShardLayout::new(4);
+        let mut a = l.shard_rng(7, 0);
+        let mut a2 = l.shard_rng(7, 0);
+        let mut b = l.shard_rng(7, 1);
+        let x = a.next_u64();
+        assert_eq!(x, a2.next_u64(), "same (seed, shard) must reproduce");
+        assert_ne!(x, b.next_u64(), "distinct shards must get distinct streams");
+    }
+}

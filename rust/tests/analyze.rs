@@ -1,4 +1,4 @@
-//! `star analyze` acceptance tests: each rule R1–R6 fires on the fixture
+//! `star analyze` acceptance tests: each rule R1–R7 fires on the fixture
 //! corpus exactly where the fixtures promise (one negative test per rule,
 //! so CI fails if a rule is silently disabled), and the real `rust/src`
 //! tree is clean. Runs the library API directly; the process-level CLI
@@ -124,6 +124,26 @@ fn r6_fires_on_the_unhandled_trace_event_variant() {
 }
 
 #[test]
+fn r7_fires_on_shared_mutable_globals_but_not_tests_or_waivers() {
+    let findings = run(&["R7"]);
+    assert_eq!(
+        locations(&findings),
+        vec![
+            ("sim/globals.rs".to_string(), 8),
+            ("sim/globals.rs".to_string(), 10),
+            ("sim/globals.rs".to_string(), 12),
+        ],
+        "{findings:#?}"
+    );
+    // the ANALYZE-OK'd Mutex static (line 15) and the #[cfg(test)]
+    // static mut (line 19) must both be absent from the list above
+    assert!(findings.iter().all(|f| f.rule == "R7"));
+    assert!(findings[0].message.contains("static mut"), "{findings:#?}");
+    assert!(findings[1].message.contains("OnceLock"), "{findings:#?}");
+    assert!(findings[2].message.contains("Atomic"), "{findings:#?}");
+}
+
+#[test]
 fn every_cataloged_rule_fires_on_the_fixture_corpus() {
     // belt-and-braces for the per-rule pins above: a rule that exists in
     // the catalog but produces nothing on the known-bad corpus has been
@@ -174,8 +194,9 @@ fn findings_are_deterministically_ordered() {
 #[test]
 fn rule_selection_validates_names() {
     assert_eq!(resolve_rules(Some("r2")).unwrap(), vec!["R2"]);
-    let err = resolve_rules(Some("R7")).unwrap_err().to_string();
-    for id in ["R1", "R2", "R3", "R4", "R5"] {
+    assert_eq!(resolve_rules(Some("R7")).unwrap(), vec!["R7"]);
+    let err = resolve_rules(Some("R9")).unwrap_err().to_string();
+    for id in ["R1", "R2", "R3", "R4", "R5", "R6", "R7"] {
         assert!(err.contains(id), "candidate list must name {id}: {err}");
     }
 }

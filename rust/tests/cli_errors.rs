@@ -155,6 +155,7 @@ fn analyze_list_rules_prints_the_catalog() {
         "R4 no-bare-unwrap",
         "R5 event-coverage",
         "R6 trace-event-coverage",
+        "R7 no-shared-mutable-static",
     ] {
         assert!(out.contains(needle), "missing `{needle}`: {out}");
     }

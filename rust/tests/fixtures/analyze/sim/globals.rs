@@ -1,0 +1,20 @@
+//! Fixture: shared mutable globals in the sharded simulation core.
+//! Expected findings:
+//!   R7 at the `static mut` (line 8), the OnceLock static (line 10),
+//!   and the Atomic static (line 12); the waived Mutex static (line 15)
+//!   and the #[cfg(test)] static mut (line 19) must NOT fire.
+
+/// A per-process counter the sharded engine must never keep.
+pub static mut STEP_COUNTER: u64 = 0;
+
+pub static SHARD_TABLE: std::sync::OnceLock<Vec<u64>> = std::sync::OnceLock::new();
+
+pub static MERGES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+// ANALYZE-OK: R7 fixture waiver — exercises the waiver path
+pub static WAIVED: std::sync::Mutex<u64> = std::sync::Mutex::new(0);
+
+#[cfg(test)]
+mod tests {
+    pub static mut SCRATCH: u64 = 0;
+}

@@ -1,0 +1,199 @@
+//! Sharded simulation core differential tests (ISSUE 10): the event loop
+//! partitioned into per-shard queues with a deterministic epoch merge
+//! must be a pure refactor of the serial engine. `--shards 1` is the
+//! serial engine, and any shard count must replay the *identical*
+//! trajectory — trace rows, per-request completions, and the entire
+//! `SimReport` — because the total order `(time, order-key, global seq)`
+//! is independent of how instances are partitioned.
+//!
+//! Coverage: shards ∈ {2, 3, 4} vs shards = 1 across three seeds and
+//! three scenarios (including `multi_round` session chains and
+//! `degraded_fleet` fault injection, whose `InstanceFailure` /
+//! `DecodeStep` events route to instance-home shards), with
+//! `validate_state` cross-checking the shard rollup against the engine.
+
+use star::bench::scenarios::ScenarioRegistry;
+use star::config::ExperimentConfig;
+use star::coordinator::PolicyRegistry;
+use star::sim::{SimParams, SimReport, Simulator};
+
+const SCENARIOS: &[&str] = &["bursty_mixed", "multi_round", "degraded_fleet"];
+const SEEDS: &[u64] = &[11, 23, 47];
+
+fn exp_for(scenario: &str, seed: u64, shards: usize) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    // five decode instances: every shard count in the sweep divides the
+    // fleet *unevenly*, so slice/merge bugs can't hide behind symmetry
+    exp.cluster.n_decode = 5;
+    exp.cluster.n_prefill = 2;
+    exp.cluster.rps = 0.6;
+    exp.cluster.seed = seed;
+    exp.cluster.kv_capacity_tokens = 200_000;
+    exp.predictor = "oracle".to_string();
+    exp.rescheduler.enabled = true;
+    exp.record_traces = true;
+    exp.scenario_name = Some(scenario.to_string());
+    exp.shards = shards;
+    exp
+}
+
+fn run(exp: ExperimentConfig, n: usize, validate: bool) -> SimReport {
+    let spec = ScenarioRegistry::with_builtins()
+        .build(exp.scenario_name.as_deref().unwrap(), &exp)
+        .expect("builtin scenario");
+    let trace = spec.generate(n, exp.cluster.seed);
+    let params = SimParams {
+        exp,
+        validate_state: validate,
+        ..Default::default()
+    };
+    Simulator::with_scenario(params, trace, &PolicyRegistry::with_builtins())
+        .expect("builtin policies")
+        .run()
+}
+
+/// Every recorded trace row, rendered exactly.
+fn trace_rows(r: &SimReport) -> Vec<String> {
+    r.recorder
+        .rows()
+        .iter()
+        .map(|row| format!("{:.12}|{:?}", row.t, row.event))
+        .collect()
+}
+
+/// Per-request completion fingerprint (sorted by id). `{:?}` on the f64
+/// timestamps is exact, so equality here is bit-for-bit.
+fn completion_rows(r: &SimReport) -> Vec<String> {
+    let mut rows: Vec<String> = r
+        .completed
+        .iter()
+        .map(|l| format!("{}|{:?}", l.id, l))
+        .collect();
+    rows.sort();
+    rows
+}
+
+/// The whole report, rendered exactly — every field of [`SimReport`] is
+/// a pure function of the event trajectory, so two runs that replay the
+/// same trajectory must agree on all of it.
+fn report_fingerprint(r: &SimReport) -> String {
+    format!("{r:?}")
+}
+
+#[test]
+fn shards_one_is_the_serial_engine_bit_for_bit() {
+    // the serial-engine pin: the default config (shards = 1) and an
+    // explicit --shards 1 run must be the same code path producing the
+    // same bytes, replayable across repeated runs, and unperturbed by
+    // the epoch-barrier cross-checks under validate_state
+    for &scenario in SCENARIOS {
+        let base = run(exp_for(scenario, 11, 1), 60, false);
+        assert!(
+            !base.completed.is_empty(),
+            "{scenario}: fixture must complete requests"
+        );
+        assert!(
+            !trace_rows(&base).is_empty(),
+            "{scenario}: fixture must record trace rows"
+        );
+        let mut default_exp = exp_for(scenario, 11, 1);
+        default_exp.shards = ExperimentConfig::default().shards;
+        for (label, rerun) in [
+            ("replay", run(exp_for(scenario, 11, 1), 60, false)),
+            ("default-config", run(default_exp, 60, false)),
+            ("validate_state", run(exp_for(scenario, 11, 1), 60, true)),
+        ] {
+            assert_eq!(
+                trace_rows(&base),
+                trace_rows(&rerun),
+                "{scenario}/{label}: trace rows diverged from serial"
+            );
+            assert_eq!(completion_rows(&base), completion_rows(&rerun));
+            assert_eq!(
+                report_fingerprint(&base),
+                report_fingerprint(&rerun),
+                "{scenario}/{label}: report diverged from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_runs_replay_the_serial_trajectory() {
+    // the tentpole contract: (seed, scenario) fixed, the trajectory is
+    // invariant under shard count — trace rows, completions, and the
+    // full report compare equal for shards ∈ {2, 4} vs the serial run
+    for &scenario in SCENARIOS {
+        for &seed in SEEDS {
+            let base = run(exp_for(scenario, seed, 1), 60, false);
+            assert!(
+                !base.completed.is_empty(),
+                "{scenario}/seed {seed}: fixture must complete requests"
+            );
+            for shards in [2usize, 4] {
+                let sharded = run(exp_for(scenario, seed, shards), 60, false);
+                assert_eq!(
+                    trace_rows(&base),
+                    trace_rows(&sharded),
+                    "{scenario}/seed {seed}/shards {shards}: trace rows diverged"
+                );
+                assert_eq!(
+                    completion_rows(&base),
+                    completion_rows(&sharded),
+                    "{scenario}/seed {seed}/shards {shards}: completions diverged"
+                );
+                assert_eq!(
+                    report_fingerprint(&base),
+                    report_fingerprint(&sharded),
+                    "{scenario}/seed {seed}/shards {shards}: report diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn validate_state_cross_checks_the_shard_rollup() {
+    // validate_state asserts the merged shard aggregates against the
+    // engine's own books at every epoch barrier; an uneven shard count
+    // (5 instances over 3 shards) must pass and stay bit-for-bit
+    let base = run(exp_for("degraded_fleet", 23, 1), 60, false);
+    let checked = run(exp_for("degraded_fleet", 23, 3), 60, true);
+    assert_eq!(trace_rows(&base), trace_rows(&checked));
+    assert_eq!(report_fingerprint(&base), report_fingerprint(&checked));
+    assert!(
+        checked.reliability.failures > 0,
+        "degraded_fleet must inject failures for this test to mean anything"
+    );
+}
+
+#[test]
+fn session_chains_survive_sharding() {
+    // multi_round's follow-up turns are coordinator-routed events; the
+    // realized chains must be identical lists of request ids per shard
+    // count, and migrations (cross-shard hand-offs) must still happen
+    let base = run(exp_for("multi_round", 47, 1), 80, false);
+    assert!(
+        !base.session_chains.is_empty(),
+        "multi_round must realize session chains"
+    );
+    let sharded = run(exp_for("multi_round", 47, 4), 80, false);
+    assert_eq!(base.session_chains, sharded.session_chains);
+    assert_eq!(base.migrations, sharded.migrations);
+    assert_eq!(base.reliability, sharded.reliability);
+}
+
+#[test]
+fn obs_pipeline_is_invariant_under_shard_count() {
+    // the observability subsystem samples gauges off cluster state at
+    // simulated-time ticks; sharding must not move a single sample
+    let mut on1 = exp_for("bursty_mixed", 11, 1);
+    on1.obs.enabled = true;
+    let mut on4 = exp_for("bursty_mixed", 11, 4);
+    on4.obs.enabled = true;
+    let a = run(on1, 60, false);
+    let b = run(on4, 60, false);
+    assert!(a.obs.enabled && a.obs.spans.seen > 0, "obs must be live");
+    assert_eq!(format!("{:?}", a.obs), format!("{:?}", b.obs));
+    assert_eq!(trace_rows(&a), trace_rows(&b));
+}
